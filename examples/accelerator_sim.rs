@@ -1,0 +1,85 @@
+//! Accelerator co-design study: replay a trained model's real
+//! activation traces through the transaction-level accelerator model
+//! under every codec, and sweep the DRAM bandwidth to find where Zebra
+//! turns memory-bound layers into compute-bound ones.
+//!
+//! This is the experiment a hardware architect would run with this
+//! repo: "how much slower DRAM can I tolerate if activations are
+//! Zebra-compressed?"
+//!
+//! Run: `make artifacts && cargo run --release --example accelerator_sim`
+
+use zebra::accel::{simulate_trace, AccelConfig, LayerDesc};
+use zebra::bench::Table;
+use zebra::compress::{all_codecs, ZeroBlockCodec};
+use zebra::tensor::Tensor;
+use zebra::zebra::bandwidth::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let art = zebra::artifacts_dir();
+    let tr = zebra::trace::load(art.join("traces/rn18-c10-t0.2"))?;
+    println!(
+        "trace: {} on {} ({} images, T_obj = {})",
+        tr.model,
+        tr.dataset,
+        tr.batch(),
+        tr.t_obj
+    );
+    let plan = tr.plan();
+    let layers = LayerDesc::from_plan(&plan);
+    let tensors: Vec<Tensor> =
+        tr.spills.iter().map(|s| s.tensor.clone()).collect();
+    let block = plan.iter().map(|s| s.block).max().unwrap_or(4);
+
+    // 1. Codec comparison at the default configuration.
+    let cfg = AccelConfig::default();
+    let mut t = Table::new(&[
+        "codec", "act traffic/img", "bus eff", "cycles", "latency ms",
+        "energy uJ", "mem-bound layers",
+    ]);
+    for codec in all_codecs(block) {
+        let r = simulate_trace(&cfg, &layers, &tensors, codec.as_ref())?;
+        let membound =
+            r.layers.iter().filter(|l| l.memory_bound).count();
+        t.row(&[
+            r.codec.clone(),
+            fmt_bytes(r.activation_bytes() as f64 / tr.batch() as f64),
+            format!("{:.2}", r.dram.efficiency()),
+            r.total_cycles.to_string(),
+            format!("{:.3}", r.latency_ms(&cfg)),
+            format!("{:.1}", r.total_energy_pj / 1e6),
+            format!("{membound}/{}", r.layers.len()),
+        ]);
+    }
+    t.print("Codec comparison (default accel: 16x16 PEs @1GHz, 12.8 B/cyc DRAM)");
+
+    // 2. DRAM bandwidth sweep: dense vs zero-block end-to-end latency.
+    let zb = ZeroBlockCodec::new(block);
+    let dense = zebra::compress::DenseCodec;
+    let mut sweep = Table::new(&[
+        "DRAM B/cyc", "dense ms", "zebra ms", "speedup",
+    ]);
+    for bpc in [1.6, 3.2, 6.4, 12.8, 25.6, 51.2] {
+        let mut c = AccelConfig::default();
+        c.dram_bytes_per_cycle = bpc;
+        let rd = simulate_trace(&c, &layers, &tensors, &dense)?;
+        let rz = simulate_trace(&c, &layers, &tensors, &zb)?;
+        sweep.row(&[
+            format!("{bpc:.1}"),
+            format!("{:.3}", rd.latency_ms(&c)),
+            format!("{:.3}", rz.latency_ms(&c)),
+            format!(
+                "{:.2}x",
+                rd.total_cycles as f64 / rz.total_cycles.max(1) as f64
+            ),
+        ]);
+    }
+    sweep.print("DRAM bandwidth sweep — where activation compression buys latency");
+    println!(
+        "Reading: at low DRAM bandwidth every layer is memory-bound and \
+         Zebra's byte savings translate ~1:1 into speedup; at high \
+         bandwidth layers go compute-bound and the advantage tapers — \
+         the paper's motivation inverted into a provisioning rule."
+    );
+    Ok(())
+}

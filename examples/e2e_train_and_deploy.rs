@@ -1,0 +1,168 @@
+//! END-TO-END driver: the full system on a real small workload.
+//!
+//! Covers every layer of the stack in one run (EXPERIMENTS.md §E2E):
+//!
+//! 1. **Train** (build time, `make artifacts`): the Python pipeline
+//!    trained ResNet-18 with Zebra (T_obj = 0.1) on the synthetic
+//!    CIFAR-10 stand-in; this driver replays its loss curve and the
+//!    learned-threshold convergence (the paper's Fig. 3 claim) from
+//!    metrics.json.
+//! 2. **Deploy**: the AOT HLO artifacts (Pallas-lowered kernels inside)
+//!    are loaded by the PJRT runtime; the coordinator serves the whole
+//!    exported test set through the dynamic batcher.
+//! 3. **Measure**: top-1 accuracy, serving throughput, and the paper's
+//!    headline metric — % of activation DRAM traffic eliminated — both
+//!    from the serving masks and from the accelerator simulation of
+//!    the traced spills, vs the no-Zebra baseline model.
+//!
+//! Run: `make e2e` (or `cargo run --release --example e2e_train_and_deploy`)
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use zebra::accel::{simulate_trace, AccelConfig, LayerDesc};
+use zebra::bench::paper::PaperMetrics;
+use zebra::bench::Table;
+use zebra::compress::{DenseCodec, ZeroBlockCodec};
+use zebra::coordinator::{PjrtExecutor, Server, ServerConfig};
+use zebra::tensor::{read_zten, read_zten_i32, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    let art = zebra::artifacts_dir();
+    println!("=== Phase 1: training evidence (from `make artifacts`) ===");
+    let metrics = PaperMetrics::load(&art)?;
+    let run = metrics
+        .run("rn18-c10-t0.1")
+        .ok_or_else(|| anyhow::anyhow!("rn18-c10-t0.1 missing — run make artifacts"))?;
+    let loss = &run.loss_history;
+    anyhow::ensure!(loss.len() >= 4, "loss history too short");
+    let (first, last) = (loss[0], *loss.last().unwrap());
+    println!(
+        "loss curve ({} logged points): {:.3} -> {:.3} ({:.0}% drop)",
+        loss.len(),
+        first,
+        last,
+        100.0 * (1.0 - last / first)
+    );
+    sparkline("loss", loss);
+    anyhow::ensure!(last < 0.7 * first, "training must reduce the loss");
+    let ts = &run.mean_t_history;
+    if !ts.is_empty() {
+        sparkline("mean T_{l,c}", ts);
+        let final_t = *ts.last().unwrap();
+        println!(
+            "learned thresholds converged to {:.4} (T_obj = {:.2}) — the \
+             paper's Fig. 3 observation, enabling threshold-net removal at \
+             inference.",
+            final_t, run.t_obj
+        );
+        anyhow::ensure!(
+            (final_t - run.t_obj).abs() < 0.05,
+            "thresholds must converge to T_obj"
+        );
+    }
+
+    println!("\n=== Phase 2: deploy — serve the full test set ===");
+    let exec = Arc::new(PjrtExecutor::new(art.clone(), "rn18-c10-t0.1")?);
+    let server = Server::start(
+        exec,
+        ServerConfig {
+            max_wait: Duration::from_millis(3),
+            workers: 1,
+            max_queue: 1024,
+        },
+    );
+    let images = read_zten(art.join("testset_images.zten"))?;
+    let (_, labels) = read_zten_i32(art.join("testset_labels.zten"))?;
+    let hw = images.shape()[2];
+    let per = 3 * hw * hw;
+    let n = images.shape()[0];
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let x = Tensor::from_vec(
+                &[3, hw, hw],
+                images.data()[i * per..(i + 1) * per].to_vec(),
+            );
+            server.submit(x).unwrap()
+        })
+        .collect();
+    let mut correct = 0usize;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv()?;
+        if r.predicted as i32 == labels[i] {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let top1 = 100.0 * correct as f64 / n as f64;
+    println!(
+        "served {n} images in {wall:.2}s ({:.1} img/s) | top-1 {top1:.1}% \
+         (python eval: {:.1}%)",
+        n as f64 / wall,
+        run.top1
+    );
+    println!("coordinator: {}", server.metrics.summary());
+    let serving_reduction = server.metrics.reduction_pct();
+    server.shutdown();
+
+    println!("\n=== Phase 3: accelerator-level measurement ===");
+    let mut t = Table::new(&["model", "codec", "act bytes/img", "latency ms",
+                             "reduction %"]);
+    let cfg = AccelConfig::default();
+    let mut zebra_red = 0.0;
+    for (name, trace_dir) in
+        [("baseline (no Zebra)", "rn18-c10-off"), ("Zebra T=0.2", "rn18-c10-t0.2")]
+    {
+        let tr = zebra::trace::load(art.join("traces").join(trace_dir))?;
+        let plan = tr.plan();
+        let layers = LayerDesc::from_plan(&plan);
+        let tensors: Vec<Tensor> =
+            tr.spills.iter().map(|s| s.tensor.clone()).collect();
+        let block = plan.iter().map(|s| s.block).max().unwrap_or(4);
+        let dense = simulate_trace(&cfg, &layers, &tensors, &DenseCodec)?;
+        let zb =
+            simulate_trace(&cfg, &layers, &tensors, &ZeroBlockCodec::new(block))?;
+        let red = zb.reduction_vs(&dense);
+        for (codec, r) in [("dense", &dense), ("zero-block", &zb)] {
+            t.row(&[
+                name.into(),
+                codec.into(),
+                format!("{}", r.activation_bytes() / tr.batch() as u64),
+                format!("{:.3}", r.latency_ms(&cfg)),
+                format!("{:.1}", r.reduction_vs(&dense)),
+            ]);
+        }
+        if trace_dir == "rn18-c10-t0.2" {
+            zebra_red = red;
+        }
+    }
+    t.print("Accelerator simulation — traced spills through the DRAM model");
+
+    println!("=== Headline ===");
+    println!(
+        "Zebra eliminated {serving_reduction:.1}% of activation DRAM \
+         traffic at serving time (masks) and {zebra_red:.1}% in the \
+         accelerator simulation (real traced spills, burst-quantized), \
+         at top-1 {top1:.1}% — the paper's Table II/III trade-off, \
+         reproduced end to end: JAX+Pallas training -> HLO AOT -> Rust \
+         PJRT serving -> accelerator co-simulation."
+    );
+    anyhow::ensure!(serving_reduction > 10.0, "Zebra must save bandwidth");
+    Ok(())
+}
+
+fn sparkline(label: &str, v: &[f64]) {
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    let (lo, hi) = v.iter().fold((f64::MAX, f64::MIN), |(l, h), &x| {
+        (l.min(x), h.max(x))
+    });
+    let s: String = v
+        .iter()
+        .map(|&x| {
+            let t = if hi > lo { (x - lo) / (hi - lo) } else { 0.5 };
+            RAMP[(t * (RAMP.len() - 1) as f64).round() as usize] as char
+        })
+        .collect();
+    println!("  {label:>12}: [{s}]  ({lo:.3} .. {hi:.3})");
+}

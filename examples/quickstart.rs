@@ -1,0 +1,57 @@
+//! Quickstart: the whole stack in ~40 lines.
+//!
+//! Loads one AOT-compiled Zebra model (ResNet-18 trained with
+//! T_obj = 0.1), classifies one image from the exported test set, and
+//! prints the paper's headline quantity for that single inference: how
+//! many activation bytes the accelerator would NOT have to move.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use zebra::runtime::Runtime;
+use zebra::tensor::{read_zten, read_zten_i32, Tensor};
+use zebra::zebra::bandwidth::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let art = zebra::artifacts_dir();
+    let rt = Runtime::new(&art)?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // One normalized test image.
+    let images = read_zten(art.join("testset_images.zten"))?;
+    let (_, labels) = read_zten_i32(art.join("testset_labels.zten"))?;
+    let hw = images.shape()[2];
+    let per = 3 * hw * hw;
+    let x = Tensor::from_vec(&[1, 3, hw, hw], images.data()[..per].to_vec());
+
+    // The Zebra model, batch-1 artifact.
+    let model = rt.model_for_batch("rn18-c10-t0.1", 1)?;
+    let out = model.run(&x)?;
+    let pred = out
+        .logits
+        .data()
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    println!("predicted class {pred} (label {})", labels[0]);
+
+    // Eq. 2-3 accounting from the model's own mask outputs.
+    let (mut dense, mut stored, mut index) = (0f64, 0f64, 0f64);
+    for (m, be) in out.masks.iter().zip(&out.block_elems) {
+        let blocks = m.len() as f64;
+        let kept = m.data().iter().filter(|&&v| v != 0.0).count() as f64;
+        dense += blocks * (*be as f64) * 4.0;
+        stored += kept * (*be as f64) * 4.0;
+        index += blocks / 8.0;
+    }
+    println!(
+        "activation spills: dense {} -> stored {} + index {}  ({:.1}% \
+         bandwidth saved)",
+        fmt_bytes(dense),
+        fmt_bytes(stored),
+        fmt_bytes(index),
+        100.0 * (1.0 - (stored + index) / dense)
+    );
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Serving scenario: concurrent clients against the coordinator.
+//!
+//! Spawns several client threads firing classification requests at the
+//! server (dynamic batching over the {1,4,8} AOT artifacts), reports
+//! throughput, latency percentiles, batch occupancy and the aggregate
+//! activation-bandwidth saving Zebra delivered across all requests —
+//! i.e. the paper's metric measured on a *serving* workload rather
+//! than a benchmark loop.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_classify`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use zebra::coordinator::server::BatchExecutor;
+use zebra::coordinator::{PjrtExecutor, Server, ServerConfig};
+use zebra::tensor::{read_zten, read_zten_i32, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    let art = zebra::artifacts_dir();
+    let exec = Arc::new(PjrtExecutor::new(art.clone(), "rn18-c10-t0.1")?);
+    println!("artifact batches: {:?}", exec.batch_sizes());
+    let server = Arc::new(Server::start(
+        exec,
+        ServerConfig {
+            max_wait: Duration::from_millis(5),
+            workers: 1,
+            max_queue: 512,
+        },
+    ));
+
+    let images = Arc::new(read_zten(art.join("testset_images.zten"))?);
+    let (_, labels) = read_zten_i32(art.join("testset_labels.zten"))?;
+    let labels = Arc::new(labels);
+    let hw = images.shape()[2];
+    let per = 3 * hw * hw;
+    let n_avail = images.shape()[0];
+
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 24;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for client in 0..CLIENTS {
+        let srv = server.clone();
+        let imgs = images.clone();
+        let labs = labels.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut correct = 0usize;
+            for i in 0..PER_CLIENT {
+                let idx = (client * PER_CLIENT + i) % n_avail;
+                let x = Tensor::from_vec(
+                    &[3, hw, hw],
+                    imgs.data()[idx * per..(idx + 1) * per].to_vec(),
+                );
+                match srv.classify(x) {
+                    Ok(resp) => {
+                        if resp.predicted as i32 == labs[idx] {
+                            correct += 1;
+                        }
+                    }
+                    Err(e) => eprintln!("client {client}: {e}"),
+                }
+            }
+            correct
+        }));
+    }
+    let correct: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let wall = t0.elapsed().as_secs_f64();
+    let total = CLIENTS * PER_CLIENT;
+
+    println!(
+        "\n{total} requests from {CLIENTS} clients in {wall:.2}s \
+         ({:.1} req/s), top-1 {:.1}%",
+        total as f64 / wall,
+        100.0 * correct as f64 / total as f64
+    );
+    println!("coordinator: {}", server.metrics.summary());
+    println!(
+        "aggregate activation-bandwidth saving across the workload: {:.1}%",
+        server.metrics.reduction_pct()
+    );
+    assert!(
+        server.metrics.mean_batch() > 1.2,
+        "dynamic batching should engage under 4-way client load"
+    );
+    Ok(())
+}

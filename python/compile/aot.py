@@ -1,0 +1,146 @@
+"""AOT export: JAX inference graphs -> HLO text for the Rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 (behind the published ``xla`` 0.1.6 crate) rejects;
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py.
+
+Exports use the **pallas** backends (conv-as-GEMM through the L1 matmul
+kernel, the fused relu+zebra kernel): interpret-mode pallas lowers to
+plain HLO, so the artifact the Rust coordinator executes contains the
+Pallas lowering of the paper's op on its hot path.
+
+Each exported model returns ``(logits, mask_0, ..., mask_{K-1})`` — the
+per-Zebra-layer {0,1} block masks ride along so the coordinator can do
+per-request bandwidth accounting without re-deriving blocks.
+
+**Weights are parameters, not constants.** HLO *text* elides large
+constant tensors (``{ ... }``), so baking trained weights into the
+graph silently corrupts them across the text round-trip. Models are
+therefore lowered as ``fwd(w_0, ..., w_{P-1}, x)`` with every parameter
+leaf an explicit argument; the leaves are written (in
+``jax.tree_util.tree_flatten`` order) to ``weights_<key>/w*.zten`` and
+the Rust runtime uploads them once as device-resident PJRT buffers.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import models, trace
+from .kernels import zebra as zk
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_weights(params: dict, outdir: str) -> int:
+    """Write every parameter leaf (tree_flatten order) as w%05d.zten.
+
+    Returns the leaf count. The order is the exported HLO's argument
+    order, so the Rust runtime feeds buffers by index.
+    """
+    leaves, _ = jax.tree_util.tree_flatten(params)
+    os.makedirs(outdir, exist_ok=True)
+    import numpy as np
+
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf, np.float32)
+        if arr.ndim == 0:
+            arr = arr.reshape(1)
+        trace.write_zten(os.path.join(outdir, f"w{i:05d}.zten"), arr)
+    return len(leaves)
+
+
+def export_model(
+    params: dict,
+    spec: list[dict],
+    *,
+    batch: int,
+    hw: int,
+    t_obj: float,
+    default_block: int,
+    zebra: bool,
+    out_path: str,
+    weights_dir: str | None = None,
+    backend: str = "pallas",
+) -> dict:
+    """Lower one inference configuration to HLO text.
+
+    Returns manifest metadata: input shape, #outputs, spill plan of the
+    mask outputs, and the weights directory (see module docstring for
+    why weights travel out-of-band).
+    """
+    mode = "infer" if zebra else "off"
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+
+    def fwd(*args):
+        flat, x = list(args[:-1]), args[-1]
+        p = jax.tree_util.tree_unflatten(treedef, flat)
+        logits, _, aux = models.apply(
+            p, spec, x, train=False, zebra_mode=mode, t_obj=t_obj,
+            default_block=default_block, backend=backend,
+            zebra_backend=backend if backend == "pallas" else "jnp")
+        return (logits, *aux["masks"])
+
+    w_specs = [jax.ShapeDtypeStruct(l.shape, jnp.float32) for l in leaves]
+    x_spec = jax.ShapeDtypeStruct((batch, 3, hw, hw), jnp.float32)
+    # keep_unused: inference drops the threshold nets, but the
+    # weight files are indexed by flattened position — keep the
+    # argument list aligned.
+    lowered = jax.jit(fwd, keep_unused=True).lower(*w_specs, x_spec)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    n_weights = len(leaves)
+    if weights_dir is not None:
+        n_weights = export_weights(params, weights_dir)
+    plan = models.spill_plan(spec, hw, default_block)
+    return {
+        "path": out_path.split("/")[-1],
+        "batch": batch,
+        "input": [batch, 3, hw, hw],
+        "zebra": zebra,
+        "t_obj": t_obj,
+        "n_outputs": 1 + (len(plan) if zebra else 0),
+        "n_weights": n_weights,
+        "weights_dir": (weights_dir or "").split("/")[-1],
+        "masks": [
+            {"name": s.name, "c": s.c, "h": s.h // s.block,
+             "w": s.w // s.block, "block": s.block}
+            for s in plan
+        ] if zebra else [],
+    }
+
+
+def export_zebra_kernel(
+    out_path: str, shape=(1, 16, 32, 32), block: int = 4, t_obj: float = 0.1
+) -> dict:
+    """Standalone fused relu+zebra kernel HLO — the runtime microbench
+    target (perf_hotpath bench, EXPERIMENTS.md §Perf)."""
+
+    def fn(x):
+        pruned, mask = zk.relu_zebra(x, jnp.float32(t_obj), block)
+        return (pruned, mask)
+
+    x_spec = jax.ShapeDtypeStruct(shape, jnp.float32)
+    lowered = jax.jit(fn).lower(x_spec)
+    with open(out_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {
+        "path": out_path.split("/")[-1],
+        "input": list(shape),
+        "block": block,
+        "t_obj": t_obj,
+        "n_outputs": 2,
+    }

@@ -1,0 +1,147 @@
+"""Synthetic vision datasets standing in for CIFAR-10 / Tiny-ImageNet.
+
+This image has no network access and neither dataset on disk, so we
+substitute a procedural dataset that preserves the property Zebra
+exploits (DESIGN.md §7): images have an explicit foreground /
+background split — class-defining geometric foregrounds composited on
+low-information, weakly-textured backgrounds — so "learn that background
+blocks are prunable" is exactly the signal available, as in the paper's
+Fig. 4 visualizations.
+
+Classes are combinations of shape x texture:
+  shape   in {disk, square, triangle, ring, cross}
+  texture in {solid, stripes, checker, gradient}  (as many as needed)
+
+``synth_cifar``  : 32x32, 10 classes  (CIFAR-10 stand-in)
+``synth_tiny``   : 64x64, 20 classes  (Tiny-ImageNet stand-in; the real
+                   one has 200 classes — 20 keeps CPU training sane while
+                   preserving the higher-resolution / more-classes
+                   relationship to the 32x32 set)
+
+Everything is generated with numpy from an integer seed: deterministic,
+no files. Images are float32, channel-normalized roughly to zero mean /
+unit variance like the standard CIFAR pipeline.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+SHAPES = ("disk", "square", "triangle", "ring", "cross")
+TEXTURES = ("solid", "stripes", "checker", "gradient")
+
+
+def _shape_mask(shape: str, hw: int, cx, cy, r, rng) -> np.ndarray:
+    yy, xx = np.mgrid[0:hw, 0:hw].astype(np.float32)
+    dx, dy = xx - cx, yy - cy
+    if shape == "disk":
+        return (dx**2 + dy**2) <= r**2
+    if shape == "square":
+        return (np.abs(dx) <= r) & (np.abs(dy) <= r)
+    if shape == "triangle":
+        return (dy >= -r) & (dy + 2 * np.abs(dx) <= r)
+    if shape == "ring":
+        d2 = dx**2 + dy**2
+        return (d2 <= r**2) & (d2 >= (0.55 * r) ** 2)
+    if shape == "cross":
+        t = max(1.0, r * 0.45)
+        return ((np.abs(dx) <= t) & (np.abs(dy) <= r)) | (
+            (np.abs(dy) <= t) & (np.abs(dx) <= r)
+        )
+    raise ValueError(shape)
+
+
+def _texture(tex: str, hw: int, base: np.ndarray, rng) -> np.ndarray:
+    """Per-class foreground coloring, (3, H, W)."""
+    yy, xx = np.mgrid[0:hw, 0:hw].astype(np.float32)
+    if tex == "solid":
+        mod = np.ones((hw, hw), np.float32)
+    elif tex == "stripes":
+        mod = 0.55 + 0.45 * np.sign(np.sin(xx * np.pi / 2.5))
+    elif tex == "checker":
+        mod = 0.55 + 0.45 * np.sign(
+            np.sin(xx * np.pi / 3) * np.sin(yy * np.pi / 3)
+        )
+    elif tex == "gradient":
+        mod = 0.3 + 0.7 * (xx + yy) / (2 * hw)
+    else:
+        raise ValueError(tex)
+    return base[:, None, None] * mod[None]
+
+
+def _render(label: int, hw: int, rng: np.random.Generator) -> np.ndarray:
+    """One (3, hw, hw) float image in [0, 1]."""
+    shape = SHAPES[label % len(SHAPES)]
+    tex = TEXTURES[(label // len(SHAPES)) % len(TEXTURES)]
+    # Low-information background: dim solid color + faint noise.
+    bg = rng.uniform(0.05, 0.25, size=3).astype(np.float32)
+    img = np.broadcast_to(bg[:, None, None], (3, hw, hw)).copy()
+    img += rng.normal(0, 0.02, size=img.shape).astype(np.float32)
+    # Foreground: bright class shape, randomly placed/scaled/colored hue.
+    r = rng.uniform(0.16, 0.3) * hw
+    cx = rng.uniform(0.3 * hw, 0.7 * hw)
+    cy = rng.uniform(0.3 * hw, 0.7 * hw)
+    mask = _shape_mask(shape, hw, cx, cy, r, rng)
+    base = rng.uniform(0.6, 1.0, size=3).astype(np.float32)
+    fg = _texture(tex, hw, base, rng)
+    img = np.where(mask[None], fg, img)
+    # A couple of small distractors so background is not trivially flat.
+    for _ in range(rng.integers(0, 3)):
+        dr = rng.uniform(0.03, 0.07) * hw
+        dx = rng.uniform(0, hw)
+        dy = rng.uniform(0, hw)
+        dmask = _shape_mask("disk", hw, dx, dy, dr, rng)
+        img = np.where(
+            dmask[None],
+            rng.uniform(0.2, 0.45, size=3).astype(np.float32)[:, None, None],
+            img,
+        )
+    return np.clip(img, 0.0, 1.0)
+
+
+# Channel statistics of the generator (fixed constants so train/test and
+# python/rust all normalize identically).
+MEAN = np.array([0.32, 0.32, 0.32], np.float32)
+STD = np.array([0.27, 0.27, 0.27], np.float32)
+
+
+def normalize(img: np.ndarray) -> np.ndarray:
+    return (img - MEAN[:, None, None]) / STD[:, None, None]
+
+
+def make_split(
+    n: int, hw: int, num_classes: int, seed: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Generate a dataset split: (images (N,3,hw,hw) f32, labels (N,) i32).
+
+    Labels cycle deterministically so every class is equally represented.
+    """
+    rng = np.random.default_rng(seed)
+    xs = np.empty((n, 3, hw, hw), np.float32)
+    ys = np.empty((n,), np.int32)
+    for i in range(n):
+        label = i % num_classes
+        xs[i] = normalize(_render(label, hw, rng))
+        ys[i] = label
+    perm = rng.permutation(n)
+    return xs[perm], ys[perm]
+
+
+def synth_cifar(n_train: int = 2000, n_test: int = 512, seed: int = 7):
+    """32x32 / 10-class CIFAR-10 stand-in."""
+    tr = make_split(n_train, 32, 10, seed)
+    te = make_split(n_test, 32, 10, seed + 1)
+    return tr, te
+
+
+def synth_tiny(n_train: int = 2000, n_test: int = 512, seed: int = 17):
+    """64x64 / 20-class Tiny-ImageNet stand-in."""
+    tr = make_split(n_train, 64, 20, seed)
+    te = make_split(n_test, 64, 20, seed + 1)
+    return tr, te
+
+
+DATASETS = {
+    "cifar10": {"hw": 32, "classes": 10, "make": synth_cifar, "block": 4},
+    "tiny": {"hw": 64, "classes": 20, "make": synth_tiny, "block": 8},
+}

@@ -1,0 +1,99 @@
+"""MXU-tiled GEMM Pallas kernel — the CNN compute hot-spot.
+
+L2 lowers every convolution to im2col + this GEMM so the model's FLOPs
+run through one Pallas kernel. Tiles default to the MXU-native
+``128 x 128`` with f32 accumulation (`preferred_element_type`), the TPU
+analogue of the paper's PE-array matmul.
+
+The grid is (M/bm, N/bn); the full K panel of each operand is resident
+per step, which keeps the kernel scratch-free (interpret mode has no
+VMEM scratch) while still expressing the HBM->VMEM schedule via
+BlockSpec. DESIGN.md §11 records the VMEM footprint per tile choice.
+
+interpret=True throughout — see kernels/zebra.py for why.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pad_to(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    r, c = x.shape
+    if r == rows and c == cols:
+        return x
+    return jnp.pad(x, ((0, rows - r), (0, cols - c)))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def matmul(a: jnp.ndarray, b: jnp.ndarray, bm: int = 128, bn: int = 128):
+    """Tiled GEMM: (M, K) @ (K, N) -> (M, N) with f32 accumulation.
+
+    Operands are zero-padded up to tile multiples and the result cropped,
+    so arbitrary shapes are accepted (conv im2col rarely lands on 128s).
+
+    ``pallas_call`` has no reverse-mode rule, so this op carries a custom
+    VJP whose backward GEMMs also run through this kernel — the whole
+    training step's FLOPs stay on the MXU path.
+    """
+    return _matmul_impl(a, b, bm, bn)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def _matmul_impl(
+    a: jnp.ndarray, b: jnp.ndarray, bm: int = 128, bn: int = 128
+) -> jnp.ndarray:
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {k} vs {k2}")
+    bm_ = min(bm, _ceil_mult(m, 8))
+    bn_ = min(bn, _ceil_mult(n, 8))
+    mp, np_ = _ceil_to(m, bm_), _ceil_to(n, bn_)
+    ap = _pad_to(a, mp, k)
+    bp = _pad_to(b, k, np_)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm_, np_ // bn_),
+        in_specs=[
+            pl.BlockSpec((bm_, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn_), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def _matmul_fwd(a, b, bm, bn):
+    return _matmul_impl(a, b, bm, bn), (a, b)
+
+
+def _matmul_bwd(bm, bn, res, g):
+    a, b = res
+    ga = _matmul_impl(g, b.T, bm, bn).astype(a.dtype)
+    gb = _matmul_impl(a.T, g, bm, bn).astype(b.dtype)
+    return ga, gb
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    """Smallest multiple of m >= x (used to shrink tiles for tiny GEMMs)."""
+    return _ceil_to(max(x, 1), m)

@@ -1,0 +1,186 @@
+"""Pallas kernels for the Zebra zero-block pruning op (paper Sec. II).
+
+The op sits on the accelerator's activation write-back path: given an
+NCHW activation map and a per-channel threshold, zero every non-
+overlapping ``B x B`` spatial block whose maximum is below the threshold
+and emit a {0,1} block mask (the 1-bit-per-block DRAM index of Eq. 3).
+
+TPU mapping (DESIGN.md §8): the grid walks (flattened N*C maps,
+block-rows); each step holds one ``(B, W)`` stripe in VMEM, reduces it to
+``W/B`` block maxima with a VPU max over a reshaped view, applies the
+mask in-register, and writes the pruned stripe back — i.e. pruning
+happens *before* the HBM write, the TPU analogue of pruning before the
+paper's DRAM spill. No MXU involvement; the op is bandwidth-bound by
+construction (Eq. 5: one max per element).
+
+All ``pallas_call``s use ``interpret=True``: the CPU PJRT plugin cannot
+run Mosaic custom-calls, and correctness is what we validate here. Real-
+TPU performance is estimated from the VMEM footprint in DESIGN.md §11.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _zebra_kernel(x_ref, t_ref, o_ref, m_ref, *, block: int, relu: bool):
+    """One grid step: prune one (B, W) stripe of one (n, c) map.
+
+    x_ref: (1, B, W) activation stripe.
+    t_ref: (1, 1) this map's channel threshold.
+    o_ref: (1, B, W) pruned stripe.
+    m_ref: (1, 1, W // B) block mask for this stripe (f32 {0, 1}).
+    """
+    x = x_ref[...]  # (1, B, W)
+    if relu:
+        x = jnp.maximum(x, 0.0)
+    _, b, w = x.shape
+    nblk = w // block
+    # (1, B, W) -> (1, B, W/B, B) -> per-block max over the B x B window.
+    xb = x.reshape(1, b, nblk, block)
+    bmax = xb.max(axis=(1, 3))  # (1, W/B)
+    # Strict compare: a block dies iff max <= T, so T=0 flags the natural
+    # zero blocks ReLU produces (paper's T_obj=0 rows in Tables II/III).
+    keep = (bmax > t_ref[0, 0]).astype(x.dtype)  # (1, W/B)
+    m_ref[...] = keep[:, None, :].astype(jnp.float32)
+    # Upsample the mask across the stripe and apply while resident in VMEM.
+    up = jnp.repeat(keep, block, axis=1)  # (1, W)
+    o_ref[...] = x * up[:, None, :]
+
+
+def _call_zebra(
+    x: jnp.ndarray, thresholds: jnp.ndarray, block: int, relu: bool
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    n, c, h, w = x.shape
+    if h % block or w % block:
+        raise ValueError(f"H={h}, W={w} not divisible by block={block}")
+    nc = n * c
+    xf = x.reshape(nc, h, w)
+    t = jnp.broadcast_to(jnp.asarray(thresholds, x.dtype), (n, c))
+    tf = t.reshape(nc, 1)
+    hb, wb = h // block, w // block
+
+    kern = functools.partial(_zebra_kernel, block=block, relu=relu)
+    pruned, mask = pl.pallas_call(
+        kern,
+        grid=(nc, hb),
+        in_specs=[
+            pl.BlockSpec((1, block, w), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block, w), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, wb), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nc, h, w), x.dtype),
+            jax.ShapeDtypeStruct((nc, hb, wb), jnp.float32),
+        ],
+        interpret=True,
+    )(xf, tf)
+    return pruned.reshape(n, c, h, w), mask.reshape(n, c, hb, wb)
+
+
+def _upsample_mask(mask: jnp.ndarray, block: int, dtype) -> jnp.ndarray:
+    return jnp.repeat(
+        jnp.repeat(mask.astype(dtype), block, axis=2), block, axis=3
+    )
+
+
+# ``pallas_call`` has no reverse-mode rule, so the public ops carry a
+# custom VJP — the standard way production kernels (e.g. flash attention)
+# ship. The backward pass is the straight-through estimator the paper's
+# training needs: gradient flows unchanged through surviving blocks and
+# is zero elsewhere; the threshold receives NO gradient from the mask
+# (it is trained purely by the Eq. 1 regularizer, which is why it
+# converges to T_obj — paper Fig. 3).
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def zebra_prune(
+    x: jnp.ndarray, thresholds: jnp.ndarray, block: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Zero-block pruning of NCHW activations (inference rule, Fig. 3).
+
+    Args:
+      x: (N, C, H, W) activations; H, W divisible by ``block``.
+      thresholds: broadcastable to (N, C); typically the scalar ``T_obj``.
+      block: block side B (paper uses 2/4 on CIFAR, 8 on Tiny-ImageNet).
+
+    Returns:
+      (pruned, mask): pruned activations (same shape) and the
+      (N, C, H/B, W/B) f32 {0,1} keep-mask (Eq. 3's 1-bit index).
+    """
+    return _call_zebra(x, thresholds, block, relu=False)
+
+
+def _zebra_prune_fwd(x, thresholds, block):
+    pruned, mask = _call_zebra(x, thresholds, block, relu=False)
+    return (pruned, mask), (mask, jnp.zeros_like(thresholds))
+
+
+def _zebra_prune_bwd(block, res, cts):
+    mask, zero_t = res
+    g_pruned, _ = cts  # the {0,1} mask output is piecewise constant
+    gx = g_pruned * _upsample_mask(mask, block, g_pruned.dtype)
+    return gx, zero_t
+
+
+zebra_prune.defvjp(_zebra_prune_fwd, _zebra_prune_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def relu_zebra(
+    x: jnp.ndarray, thresholds: jnp.ndarray, block: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused ReLU + Zebra prune — the op as deployed after activations."""
+    return _call_zebra(x, thresholds, block, relu=True)
+
+
+def _relu_zebra_fwd(x, thresholds, block):
+    pruned, mask = _call_zebra(x, thresholds, block, relu=True)
+    return (pruned, mask), (mask, x > 0, jnp.zeros_like(thresholds))
+
+
+def _relu_zebra_bwd(block, res, cts):
+    mask, pos, zero_t = res
+    g_pruned, _ = cts
+    d = g_pruned.dtype
+    gx = g_pruned * _upsample_mask(mask, block, d) * pos.astype(d)
+    return gx, zero_t
+
+
+relu_zebra.defvjp(_relu_zebra_fwd, _relu_zebra_bwd)
+
+
+def _block_max_kernel(x_ref, o_ref, *, block: int):
+    x = x_ref[...]  # (1, B, W)
+    _, b, w = x.shape
+    xb = x.reshape(1, b, w // block, block)
+    o_ref[...] = xb.max(axis=(1, 3))[:, None, :]
+
+
+def block_max(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Per-block maxima, (N, C, H, W) -> (N, C, H/B, W/B).
+
+    The training-mode Zebra layer uses this (through L2) to compare block
+    importance against the learned threshold; it is also the entire
+    run-time computation overhead of Eq. 5.
+    """
+    n, c, h, w = x.shape
+    if h % block or w % block:
+        raise ValueError(f"H={h}, W={w} not divisible by block={block}")
+    nc = n * c
+    hb, wb = h // block, w // block
+    out = pl.pallas_call(
+        functools.partial(_block_max_kernel, block=block),
+        grid=(nc, hb),
+        in_specs=[pl.BlockSpec((1, block, w), lambda i, j: (i, j, 0))],
+        out_specs=pl.BlockSpec((1, 1, wb), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((nc, hb, wb), x.dtype),
+        interpret=True,
+    )(x.reshape(nc, h, w))
+    return out.reshape(n, c, hb, wb)

@@ -1,0 +1,211 @@
+"""Layer-2 building blocks: functional NN layers over the L1 kernels.
+
+Everything is NCHW and purely functional: ``init_*`` returns a parameter
+pytree, ``apply`` functions take (params, x) and return outputs plus any
+updated state (BN running statistics).
+
+Two compute backends exist for convolution:
+
+- ``"pallas"`` — im2col + the L1 MXU-tiled GEMM kernel
+  (`kernels/matmul.py`). This is the backend used by the AOT export path
+  (so the shipped HLO contains the Pallas lowering) and by the
+  equivalence tests.
+- ``"xla"`` — `jax.lax.conv_general_dilated`. Numerically equivalent
+  (tests assert allclose); used by the CPU-budget training grid because
+  XLA's native conv is several times faster on this host
+  (DESIGN.md §7). The paper's technique is agnostic to which one runs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as mm_kernel
+
+# Global default; the trainer overrides per-run.
+DEFAULT_BACKEND = "xla"
+
+
+# ------------------------------------------------------------------ init
+
+def _fan_in_init(key, shape, fan_in, dtype=jnp.float32):
+    """He-normal initialization (ReLU networks, as the paper's baselines)."""
+    std = (2.0 / fan_in) ** 0.5
+    return jax.random.normal(key, shape, dtype) * std
+
+
+def init_conv(key, cin: int, cout: int, ksize: int) -> dict:
+    """3x3/1x1 conv weights, (O, I, Kh, Kw), no bias (BN follows)."""
+    w = _fan_in_init(key, (cout, cin, ksize, ksize), cin * ksize * ksize)
+    return {"w": w}
+
+
+def init_dwconv(key, c: int, ksize: int) -> dict:
+    """Depthwise conv weights, (C, 1, Kh, Kw) (MobileNet)."""
+    w = _fan_in_init(key, (c, 1, ksize, ksize), ksize * ksize)
+    return {"w": w}
+
+
+def init_bn(c: int) -> dict:
+    """BatchNorm params + running stats. gamma is the Network-Slimming
+    channel-importance handle (paper Sec. I, ref [4])."""
+    return {
+        "gamma": jnp.ones((c,)),
+        "beta": jnp.zeros((c,)),
+        "mean": jnp.zeros((c,)),
+        "var": jnp.ones((c,)),
+    }
+
+
+def init_fc(key, cin: int, cout: int) -> dict:
+    w = _fan_in_init(key, (cin, cout), cin)
+    return {"w": w, "b": jnp.zeros((cout,))}
+
+
+# ------------------------------------------------------------------ conv
+
+def _im2col(x: jnp.ndarray, ksize: int, stride: int, pad: int):
+    """NCHW -> (N*Ho*Wo, C*K*K) patches for conv-as-GEMM."""
+    n, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    ho = (h + 2 * pad - ksize) // stride + 1
+    wo = (w + 2 * pad - ksize) // stride + 1
+    # Extract K*K shifted strided views; cheap under XLA (fused gathers).
+    cols = []
+    for i in range(ksize):
+        for j in range(ksize):
+            cols.append(
+                xp[
+                    :,
+                    :,
+                    i : i + stride * ho : stride,
+                    j : j + stride * wo : stride,
+                ]
+            )
+    # (K*K, N, C, Ho, Wo) -> (N, Ho, Wo, C, K*K) -> (N*Ho*Wo, C*K*K)
+    patches = jnp.stack(cols, axis=0)
+    patches = patches.transpose(1, 3, 4, 2, 0)
+    return patches.reshape(n * ho * wo, c * ksize * ksize), ho, wo
+
+
+def conv2d(
+    params: dict,
+    x: jnp.ndarray,
+    stride: int = 1,
+    pad: int | None = None,
+    backend: str | None = None,
+) -> jnp.ndarray:
+    """2-D convolution, NCHW x (O,I,Kh,Kw) -> NCHW."""
+    w = params["w"]
+    cout, cin, k, _ = w.shape
+    if pad is None:
+        pad = k // 2
+    backend = backend or DEFAULT_BACKEND
+    if backend == "xla":
+        return jax.lax.conv_general_dilated(
+            x,
+            w,
+            window_strides=(stride, stride),
+            padding=[(pad, pad), (pad, pad)],
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )
+    if backend != "pallas":
+        raise ValueError(f"unknown conv backend {backend!r}")
+    n = x.shape[0]
+    patches, ho, wo = _im2col(x, k, stride, pad)
+    out = mm_kernel.matmul(patches, w.reshape(cout, cin * k * k).T)
+    return out.reshape(n, ho, wo, cout).transpose(0, 3, 1, 2)
+
+
+def dwconv2d(
+    params: dict,
+    x: jnp.ndarray,
+    stride: int = 1,
+    backend: str | None = None,
+) -> jnp.ndarray:
+    """Depthwise 3x3 conv (MobileNet). Always lowered via XLA's grouped
+    conv — it is bandwidth-bound, not MXU-shaped, so there is nothing for
+    the GEMM kernel to win (DESIGN.md §8)."""
+    del backend
+    w = params["w"]  # (C, 1, K, K)
+    c, _, k, _ = w.shape
+    pad = k // 2
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=c,
+    )
+
+
+# -------------------------------------------------------------------- bn
+
+BN_MOMENTUM = 0.9
+BN_EPS = 1e-5
+
+
+def batchnorm(params: dict, x: jnp.ndarray, train: bool):
+    """BatchNorm2d. Returns (y, updated_params) — running stats advance
+    only in training mode."""
+    gamma = params["gamma"][None, :, None, None]
+    beta = params["beta"][None, :, None, None]
+    if train:
+        mean = x.mean(axis=(0, 2, 3))
+        var = x.var(axis=(0, 2, 3))
+        new = dict(params)
+        new["mean"] = BN_MOMENTUM * params["mean"] + (1 - BN_MOMENTUM) * mean
+        new["var"] = BN_MOMENTUM * params["var"] + (1 - BN_MOMENTUM) * var
+    else:
+        mean, var = params["mean"], params["var"]
+        new = params
+    xn = (x - mean[None, :, None, None]) * jax.lax.rsqrt(
+        var[None, :, None, None] + BN_EPS
+    )
+    return gamma * xn + beta, new
+
+
+# ------------------------------------------------------------------ misc
+
+def relu(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(x, 0.0)
+
+
+def gap(x: jnp.ndarray) -> jnp.ndarray:
+    """Global average pool, (N, C, H, W) -> (N, C)."""
+    return x.mean(axis=(2, 3))
+
+
+def maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2/2 max pool (VGG)."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 1, 2, 2),
+        window_strides=(1, 1, 2, 2),
+        padding="VALID",
+    )
+
+
+def avgpool2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2/2 average pool."""
+    s = jax.lax.reduce_window(
+        x,
+        0.0,
+        jax.lax.add,
+        window_dimensions=(1, 1, 2, 2),
+        window_strides=(1, 1, 2, 2),
+        padding="VALID",
+    )
+    return s / 4.0
+
+
+def fc(params: dict, x: jnp.ndarray, backend: str | None = None):
+    """Fully connected layer over the GEMM kernel (classifier head)."""
+    backend = backend or DEFAULT_BACKEND
+    if backend == "pallas":
+        return mm_kernel.matmul(x, params["w"]) + params["b"]
+    return x @ params["w"] + params["b"]

@@ -1,0 +1,313 @@
+"""Model zoo: VGG16, ResNet-18, ResNet-56, MobileNetV1 (paper Sec. III).
+
+Models are described by a small layer-spec IR (list of stage dicts) and
+executed by one generic ``apply``. The same IR is exported to JSON by
+``aot.py`` so the Rust side (bandwidth math, accelerator simulator,
+Table V) consumes exactly the architecture Python trained — no
+double-maintenance.
+
+Conventions:
+- NCHW, CIFAR-style stems (3x3/1) for both 32x32 and 64x64 inputs.
+- A "spill" is an activation tensor the paper's layer-by-layer
+  accelerator would write to DRAM: the output of every ReLU stage. Each
+  spill carries its Zebra block size, following the paper's rule
+  (block 4 on CIFAR, 2 once maps shrink to 2x2; block 8 on
+  Tiny-ImageNet).
+- ``width`` scales every channel count (CPU-budget knob, DESIGN.md §7);
+  width=1.0 is the paper's architecture.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, zebra_layer
+
+# --------------------------------------------------------------- spec IR
+
+
+def _ch(c: int, width: float) -> int:
+    """Scale a channel count, keeping it a multiple of 4 and >= 4."""
+    return max(4, int(round(c * width / 4)) * 4)
+
+
+def vgg16_spec(num_classes: int, width: float = 1.0) -> list[dict]:
+    cfg = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+           512, 512, 512, "M", 512, 512, 512, "M"]
+    spec: list[dict] = []
+    for v in cfg:
+        if v == "M":
+            spec.append({"kind": "pool", "op": "max"})
+        else:
+            spec.append({"kind": "conv", "cout": _ch(v, width), "k": 3,
+                         "stride": 1})
+    spec += [{"kind": "gap"}, {"kind": "fc", "cout": num_classes}]
+    return spec
+
+
+def resnet18_spec(num_classes: int, width: float = 1.0) -> list[dict]:
+    spec: list[dict] = [{"kind": "conv", "cout": _ch(64, width), "k": 3,
+                         "stride": 1}]
+    for cout, stride, blocks in [(64, 1, 2), (128, 2, 2), (256, 2, 2),
+                                 (512, 2, 2)]:
+        for i in range(blocks):
+            spec.append({"kind": "res", "cout": _ch(cout, width),
+                         "stride": stride if i == 0 else 1})
+    spec += [{"kind": "gap"}, {"kind": "fc", "cout": num_classes}]
+    return spec
+
+
+def resnet56_spec(num_classes: int, width: float = 1.0) -> list[dict]:
+    spec: list[dict] = [{"kind": "conv", "cout": _ch(16, width), "k": 3,
+                         "stride": 1}]
+    for cout, stride in [(16, 1), (32, 2), (64, 2)]:
+        for i in range(9):
+            spec.append({"kind": "res", "cout": _ch(cout, width),
+                         "stride": stride if i == 0 else 1})
+    spec += [{"kind": "gap"}, {"kind": "fc", "cout": num_classes}]
+    return spec
+
+
+def mobilenet_spec(num_classes: int, width: float = 1.0) -> list[dict]:
+    spec: list[dict] = [{"kind": "conv", "cout": _ch(32, width), "k": 3,
+                         "stride": 1}]
+    chain = [(64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2)]
+    chain += [(512, 1)] * 5
+    chain += [(1024, 2), (1024, 1)]
+    for cout, stride in chain:
+        spec.append({"kind": "dwsep", "cout": _ch(cout, width),
+                     "stride": stride})
+    spec += [{"kind": "gap"}, {"kind": "fc", "cout": num_classes}]
+    return spec
+
+
+SPECS = {
+    "vgg16": vgg16_spec,
+    "resnet18": resnet18_spec,
+    "resnet56": resnet56_spec,
+    "mobilenet": mobilenet_spec,
+}
+
+
+def make_spec(arch: str, num_classes: int, width: float = 1.0) -> list[dict]:
+    return SPECS[arch](num_classes, width)
+
+
+def zebra_block_for(hw: int, default_block: int) -> int:
+    """The paper's block-size rule: the configured block, shrunk when the
+    map itself gets smaller ("we set block size as 2 when the size of
+    activation maps in deeper layers goes to 2x2")."""
+    return max(1, min(default_block, hw))
+
+
+# ----------------------------------------------------------------- shapes
+
+
+@dataclasses.dataclass
+class SpillInfo:
+    """Static description of one DRAM activation spill (for Rust)."""
+
+    name: str
+    c: int
+    h: int
+    w: int
+    block: int
+
+
+def spill_plan(
+    spec: list[dict], in_hw: int, default_block: int, in_ch: int = 3
+) -> list[SpillInfo]:
+    """Walk the spec symbolically, listing every DRAM spill with its
+    shape and Zebra block size. Mirrors ``apply`` exactly (tested)."""
+    spills: list[SpillInfo] = []
+    c, hw = in_ch, in_hw
+    for i, st in enumerate(spec):
+        k = st["kind"]
+        if k == "conv":
+            hw = hw // st["stride"]
+            c = st["cout"]
+            spills.append(SpillInfo(f"s{i}.conv", c, hw, hw,
+                                    zebra_block_for(hw, default_block)))
+        elif k == "res":
+            hw = hw // st["stride"]
+            c = st["cout"]
+            b = zebra_block_for(hw, default_block)
+            spills.append(SpillInfo(f"s{i}.res.a", c, hw, hw, b))
+            spills.append(SpillInfo(f"s{i}.res.out", c, hw, hw, b))
+        elif k == "dwsep":
+            hwd = hw // st["stride"]
+            b = zebra_block_for(hwd, default_block)
+            spills.append(SpillInfo(f"s{i}.dw", c, hwd, hwd, b))
+            c = st["cout"]
+            spills.append(SpillInfo(f"s{i}.pw", c, hwd, hwd, b))
+            hw = hwd
+        elif k == "pool":
+            hw //= 2
+        elif k in ("gap", "fc"):
+            pass
+        else:
+            raise ValueError(f"unknown stage kind {k!r}")
+    return spills
+
+
+# ------------------------------------------------------------------ init
+
+
+def init(key, spec: list[dict], in_hw: int, default_block: int,
+         t_obj: float, in_ch: int = 3) -> dict:
+    """Initialize all parameters for a spec, including per-Zebra-layer
+    threshold nets (training mode)."""
+    params: dict = {}
+    c, hw = in_ch, in_hw
+    for i, st in enumerate(spec):
+        k = st["kind"]
+        key, *sub = jax.random.split(key, 4)
+        name = f"s{i}"
+        if k == "conv":
+            hw = hw // st["stride"]
+            params[name] = {
+                "conv": layers.init_conv(sub[0], c, st["cout"], st["k"]),
+                "bn": layers.init_bn(st["cout"]),
+                "tnet": zebra_layer.init_threshold_net(sub[1], st["cout"],
+                                                       t_obj),
+            }
+            c = st["cout"]
+        elif k == "res":
+            cout = st["cout"]
+            hw = hw // st["stride"]
+            p = {
+                "conv1": layers.init_conv(sub[0], c, cout, 3),
+                "bn1": layers.init_bn(cout),
+                "conv2": layers.init_conv(sub[1], cout, cout, 3),
+                "bn2": layers.init_bn(cout),
+                "tnet1": zebra_layer.init_threshold_net(
+                    jax.random.fold_in(sub[2], 1), cout, t_obj),
+                "tnet2": zebra_layer.init_threshold_net(
+                    jax.random.fold_in(sub[2], 2), cout, t_obj),
+            }
+            if st["stride"] != 1 or c != cout:
+                p["proj"] = layers.init_conv(
+                    jax.random.fold_in(sub[2], 3), c, cout, 1)
+                p["bnp"] = layers.init_bn(cout)
+            params[name] = p
+            c = cout
+        elif k == "dwsep":
+            cout = st["cout"]
+            params[name] = {
+                "dw": layers.init_dwconv(sub[0], c, 3),
+                "bnd": layers.init_bn(c),
+                "tnetd": zebra_layer.init_threshold_net(
+                    jax.random.fold_in(sub[2], 1), c, t_obj),
+                "pw": layers.init_conv(sub[1], c, cout, 1),
+                "bnp": layers.init_bn(cout),
+                "tnetp": zebra_layer.init_threshold_net(
+                    jax.random.fold_in(sub[2], 2), cout, t_obj),
+            }
+            c = cout
+            hw = hw // st["stride"]
+        elif k == "pool":
+            hw //= 2
+        elif k == "fc":
+            params[name] = {"fc": layers.init_fc(sub[0], c, st["cout"])}
+    return params
+
+
+# ----------------------------------------------------------------- apply
+
+
+def _zebra_stage(x, stage_params, tnet_key, zebra_mode, t_obj, block, aux,
+                 zb):
+    """Shared ReLU(+Zebra) tail of every conv stage. Appends the spill,
+    mask and threshold records to ``aux`` and returns the spilled
+    tensor."""
+    if zebra_mode == "train":
+        out, mask, t = zebra_layer.apply_train(
+            stage_params[tnet_key], x, block, backend=zb)
+        aux["ts"].append(t)
+        aux["masks"].append(mask)
+    elif zebra_mode == "infer":
+        out, mask = zebra_layer.apply_infer(x, t_obj, block, backend=zb)
+        aux["masks"].append(mask)
+    elif zebra_mode == "off":
+        out = layers.relu(x)
+    else:
+        raise ValueError(f"unknown zebra mode {zebra_mode!r}")
+    aux["spills"].append(out)
+    return out
+
+
+def apply(
+    params: dict,
+    spec: list[dict],
+    x: jnp.ndarray,
+    *,
+    train: bool,
+    zebra_mode: str,
+    t_obj: float,
+    default_block: int,
+    backend: str | None = None,
+    zebra_backend: str = "jnp",
+    keep_spills: bool = False,
+):
+    """Run a spec. Returns (logits, new_params, aux).
+
+    aux: "masks" — per-Zebra-layer {0,1} block masks; "ts" — per-layer
+    learned thresholds (train mode); "spills" — the DRAM activation
+    tensors (cleared unless ``keep_spills`` to save memory).
+    """
+    aux = {"masks": [], "ts": [], "spills": []}
+    new_params = dict(params)
+    hw = x.shape[2]
+    for i, st in enumerate(spec):
+        k = st["kind"]
+        name = f"s{i}"
+        if k == "conv":
+            p = dict(params[name])
+            hw = hw // st["stride"]
+            block = zebra_block_for(hw, default_block)
+            y = layers.conv2d(p["conv"], x, st["stride"], backend=backend)
+            y, p["bn"] = layers.batchnorm(p["bn"], y, train)
+            x = _zebra_stage(y, p, "tnet", zebra_mode, t_obj, block, aux, zebra_backend)
+            new_params[name] = p
+        elif k == "res":
+            p = dict(params[name])
+            hw = hw // st["stride"]
+            block = zebra_block_for(hw, default_block)
+            y = layers.conv2d(p["conv1"], x, st["stride"], backend=backend)
+            y, p["bn1"] = layers.batchnorm(p["bn1"], y, train)
+            y = _zebra_stage(y, p, "tnet1", zebra_mode, t_obj, block, aux, zebra_backend)
+            y2 = layers.conv2d(p["conv2"], y, 1, backend=backend)
+            y2, p["bn2"] = layers.batchnorm(p["bn2"], y2, train)
+            if "proj" in p:
+                sc = layers.conv2d(p["proj"], x, st["stride"], pad=0,
+                                   backend=backend)
+                sc, p["bnp"] = layers.batchnorm(p["bnp"], sc, train)
+            else:
+                sc = x
+            x = _zebra_stage(y2 + sc, p, "tnet2", zebra_mode, t_obj, block,
+                             aux, zebra_backend)
+            new_params[name] = p
+        elif k == "dwsep":
+            p = dict(params[name])
+            hw = hw // st["stride"]
+            block = zebra_block_for(hw, default_block)
+            y = layers.dwconv2d(p["dw"], x, st["stride"])
+            y, p["bnd"] = layers.batchnorm(p["bnd"], y, train)
+            y = _zebra_stage(y, p, "tnetd", zebra_mode, t_obj, block, aux, zebra_backend)
+            y = layers.conv2d(p["pw"], y, 1, pad=0, backend=backend)
+            y, p["bnp"] = layers.batchnorm(p["bnp"], y, train)
+            x = _zebra_stage(y, p, "tnetp", zebra_mode, t_obj, block, aux, zebra_backend)
+            new_params[name] = p
+        elif k == "pool":
+            x = layers.maxpool2(x)
+            hw //= 2
+        elif k == "gap":
+            x = layers.gap(x)
+        elif k == "fc":
+            x = layers.fc(params[name]["fc"], x, backend=backend)
+    if not keep_spills:
+        aux["spills"] = []
+    return x, new_params, aux

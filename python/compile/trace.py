@@ -1,0 +1,75 @@
+"""Activation trace + tensor interchange with the Rust side (.zten).
+
+Format (little-endian), shared with ``rust/src/tensor/io.rs``:
+
+    magic   b"ZTEN"
+    u32     version (1)
+    u32     dtype   (0 = f32, 1 = u8, 2 = i32)
+    u32     ndim
+    u32[nd] dims
+    payload row-major
+
+A *trace directory* holds one ``.zten`` per DRAM spill of one batch of
+images plus ``trace.json`` describing spill names, shapes and Zebra
+block sizes — the accelerator simulator replays these to measure real
+bytes-on-the-wire (DESIGN.md §9).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import struct
+
+import numpy as np
+
+MAGIC = b"ZTEN"
+DTYPES = {np.dtype(np.float32): 0, np.dtype(np.uint8): 1,
+          np.dtype(np.int32): 2}
+DTYPES_INV = {0: np.float32, 1: np.uint8, 2: np.int32}
+
+
+def write_zten(path: str, arr: np.ndarray) -> None:
+    arr = np.ascontiguousarray(arr)
+    code = DTYPES[arr.dtype]
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<III", 1, code, arr.ndim))
+        f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+        f.write(arr.tobytes())
+
+
+def read_zten(path: str) -> np.ndarray:
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        ver, code, nd = struct.unpack("<III", f.read(12))
+        if ver != 1:
+            raise ValueError(f"{path}: unsupported version {ver}")
+        dims = struct.unpack(f"<{nd}I", f.read(4 * nd))
+        return np.frombuffer(f.read(), DTYPES_INV[code]).reshape(dims).copy()
+
+
+def dump_trace(
+    outdir: str,
+    spill_names: list[str],
+    spills: list[np.ndarray],
+    blocks: list[int],
+    extra_meta: dict | None = None,
+) -> None:
+    """Write one batch's spills + metadata as a trace directory."""
+    os.makedirs(outdir, exist_ok=True)
+    entries = []
+    for name, arr, block in zip(spill_names, spills, blocks):
+        fname = name.replace(".", "_") + ".zten"
+        write_zten(os.path.join(outdir, fname), np.asarray(arr, np.float32))
+        entries.append({
+            "name": name,
+            "file": fname,
+            "shape": list(arr.shape),
+            "block": int(block),
+        })
+    meta = {"spills": entries}
+    meta.update(extra_meta or {})
+    with open(os.path.join(outdir, "trace.json"), "w") as f:
+        json.dump(meta, f, indent=1)

@@ -1,0 +1,442 @@
+"""Training: Eq. 1 loss, SGD + momentum, Network Slimming, Weight Pruning.
+
+Implements the paper's full training recipe:
+
+- ``L = lambda * CE + sum_{l,c} ||T_obj - T_{l,c}||^2`` (Eq. 1 verbatim;
+  the regularizer is the only gradient source for the threshold nets).
+- Standard SGD with momentum and step-decayed learning rate
+  ("0.1 -> 0.001" in the paper; scaled to our step budget).
+- **Weight Pruning** (ref [3]): global magnitude pruning of conv/FC
+  weights on a trained model, mask frozen, then retrain with Zebra.
+- **Network Slimming** (ref [4]): L1 sparsity on BN gamma, then the
+  smallest-|gamma| fraction of channels is *masked out*
+  (gamma = beta = 0 -> the channel's post-ReLU map is identically zero),
+  then retrain with Zebra. Masking rather than physically shrinking
+  tensors keeps one spec shared across all runs; the effect Zebra sees —
+  redundant activation maps become all-zero and block-prunable — is the
+  mechanism the paper credits for the NS+Zebra synergy (Table IV).
+
+Bandwidth accounting follows Eq. 2–3: a pruned block costs 0 bytes, a
+kept block ``B^2 * 4`` bytes, plus 1 index bit per block; reduction % is
+measured on the test set in inference mode (fixed T_obj, Fig. 3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import models, zebra_layer
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    arch: str = "resnet18"
+    dataset: str = "cifar10"
+    width: float = 0.25
+    t_obj: float = 0.1
+    lam: float = 1.0            # lambda on the CE term (Eq. 1)
+    zebra: bool = True          # False -> plain baseline model
+    steps: int = 400
+    batch: int = 64
+    lr: float = 0.1
+    momentum: float = 0.9
+    weight_decay: float = 5e-4
+    ns_ratio: float = 0.0       # Network-Slimming channel fraction
+    ns_l1: float = 1e-4         # L1 strength on BN gamma during NS pretrain
+    wp_ratio: float = 0.0       # Weight-Pruning fraction
+    pretrain_steps: int = 0     # steps before NS/WP act (0 -> steps // 2)
+    n_train: int = 2000
+    n_test: int = 512
+    seed: int = 0
+    backend: str = "xla"        # conv backend for the training grid
+
+
+# ------------------------------------------------------------- utilities
+
+
+def _lr_at(cfg: TrainConfig, step: int) -> float:
+    """Step decay 0.1 -> 0.01 -> 0.001 at 50% / 80% of the budget."""
+    frac = step / max(1, cfg.steps)
+    if frac < 0.5:
+        return cfg.lr
+    if frac < 0.8:
+        return cfg.lr * 0.1
+    return cfg.lr * 0.01
+
+
+def _is_weight(path: tuple) -> bool:
+    """True for conv/FC weight leaves (targets of decay + WP)."""
+    return any(seg in ("conv", "conv1", "conv2", "proj", "dw", "pw", "fc")
+               for seg in path) and path[-1] == "w"
+
+
+def _is_bn_gamma(path: tuple) -> bool:
+    return path[-1] == "gamma"
+
+
+def _is_bn_stat(path: tuple) -> bool:
+    return path[-1] in ("mean", "var")
+
+
+def _tree_paths(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _tree_paths(v, prefix + (k,))
+    else:
+        yield prefix, tree
+
+
+def tree_map_with_path(fn, tree, prefix=()):
+    if isinstance(tree, dict):
+        return {k: tree_map_with_path(fn, v, prefix + (k,))
+                for k, v in tree.items()}
+    return fn(prefix, tree)
+
+
+# --------------------------------------------------------------- pruning
+
+
+def weight_prune_masks(params: dict, ratio: float) -> dict:
+    """Global magnitude masks over all conv/FC weights (ref [3])."""
+    mags = [
+        np.abs(np.asarray(leaf)).ravel()
+        for path, leaf in _tree_paths(params)
+        if _is_weight(path)
+    ]
+    if not mags or ratio <= 0.0:
+        return tree_map_with_path(lambda p, v: jnp.ones_like(v)
+                                  if _is_weight(p) else None, params)
+    allm = np.concatenate(mags)
+    thresh = np.quantile(allm, ratio)
+
+    def mk(path, leaf):
+        if not _is_weight(path):
+            return None
+        return (jnp.abs(leaf) > thresh).astype(leaf.dtype)
+
+    return tree_map_with_path(mk, params)
+
+
+def apply_weight_masks(params: dict, masks: dict) -> dict:
+    def ap(path, leaf):
+        m = masks
+        for seg in path:
+            m = m[seg]
+        return leaf * m if m is not None else leaf
+
+    return tree_map_with_path(ap, params)
+
+
+def slim_masks(params: dict, ratio: float) -> dict:
+    """Network Slimming: globally mask the smallest-|gamma| channel
+    fraction (per ref [4]'s global threshold over all BN gammas)."""
+    gammas = [
+        np.abs(np.asarray(leaf)).ravel()
+        for path, leaf in _tree_paths(params)
+        if _is_bn_gamma(path)
+    ]
+    if not gammas or ratio <= 0.0:
+        return tree_map_with_path(lambda p, v: None, params)
+    thresh = np.quantile(np.concatenate(gammas), ratio)
+
+    def mk(path, leaf):
+        if _is_bn_gamma(path):
+            return (jnp.abs(leaf) > thresh).astype(leaf.dtype)
+        return None
+
+    return tree_map_with_path(mk, params)
+
+
+def apply_slim_masks(params: dict, masks: dict) -> dict:
+    """gamma *= m ; beta *= m  — masked channels emit exactly zero."""
+    def ap(path, leaf):
+        if path[-1] in ("gamma", "beta"):
+            m = masks
+            for seg in path[:-1]:
+                m = m[seg]
+            m = m.get("gamma") if isinstance(m, dict) else None
+            if m is not None:
+                return leaf * m
+        return leaf
+
+    return tree_map_with_path(ap, params)
+
+
+# ------------------------------------------------------------- bandwidth
+
+
+def bandwidth_stats(masks: list[jnp.ndarray], blocks: list[int]) -> dict:
+    """Eq. 2–3 accounting over one batch's Zebra masks.
+
+    Returns totals in *bytes per image* (f32 activations, 1 bit / block
+    of index) plus the reduction percentage net of index overhead.
+    """
+    total = 0.0
+    kept = 0.0
+    index_bits = 0.0
+    for mask, b in zip(masks, blocks):
+        n = mask.shape[0]
+        nblocks = float(np.prod(mask.shape)) / n
+        elems = nblocks * b * b
+        total += elems * 4.0
+        kept += float(np.asarray(mask).mean()) * elems * 4.0
+        index_bits += nblocks
+    overhead = index_bits / 8.0
+    reduced = 100.0 * (1.0 - (kept + overhead) / max(total, 1e-9))
+    return {
+        "required_bytes": total,
+        "kept_bytes": kept,
+        "overhead_bytes": overhead,
+        "reduced_pct": reduced,
+    }
+
+
+# ---------------------------------------------------------------- losses
+
+
+def _split_params(params):
+    """Separate BN running stats (non-trainable) from trainables."""
+    train = tree_map_with_path(
+        lambda p, v: None if _is_bn_stat(p) else v, params)
+    stats = tree_map_with_path(
+        lambda p, v: v if _is_bn_stat(p) else None, params)
+    return train, stats
+
+
+def _merge_params(train, stats):
+    def mg(a, b):
+        if isinstance(a, dict):
+            return {k: mg(a[k], b[k]) for k in a}
+        return a if a is not None else b
+
+    return mg(train, stats)
+
+
+# jit cache: one compiled step per (arch, width, classes, dataset-block,
+# zebra on/off, backend, batch) — the T_obj / lambda / NS-L1 sweep reuses
+# the same executable because those enter as traced scalars. On this
+# 1-CPU host, recompiling per grid point would dominate the whole
+# pipeline (DESIGN.md §7).
+_STEP_CACHE: dict[tuple, Any] = {}
+_EVAL_CACHE: dict[tuple, Any] = {}
+
+
+def make_train_step(cfg: TrainConfig, spec, default_block):
+    key = (cfg.arch, cfg.width, cfg.dataset, cfg.zebra, cfg.backend,
+           cfg.momentum, cfg.weight_decay)
+    if key in _STEP_CACHE:
+        return _STEP_CACHE[key]
+    zebra_mode = "train" if cfg.zebra else "off"
+    momentum, weight_decay = cfg.momentum, cfg.weight_decay
+
+    def loss_fn(trainable, stats, x, y, t_obj, lam, ns_l1):
+        params = _merge_params(trainable, stats)
+        logits, new_params, aux = models.apply(
+            params, spec, x, train=True, zebra_mode=zebra_mode,
+            t_obj=t_obj, default_block=default_block,
+            backend=cfg.backend)
+        onehot = jax.nn.one_hot(y, logits.shape[-1])
+        ce = -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), axis=1))
+        reg = zebra_layer.regularizer(aux["ts"], t_obj)
+        # L1 on BN gamma is active only for Network-Slimming pretraining
+        # (ns_l1 is passed as 0 otherwise).
+        l1 = sum(jnp.abs(leaf).sum()
+                 for path, leaf in _tree_paths(trainable)
+                 if leaf is not None and _is_bn_gamma(path))
+        loss = lam * ce + reg + ns_l1 * l1
+        acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+        _, new_stats = _split_params(new_params)
+        mean_t = (sum(jnp.mean(t) for t in aux["ts"]) / len(aux["ts"])
+                  if aux["ts"] else jnp.float32(0.0))
+        return loss, (ce, reg, acc, new_stats, mean_t)
+
+    @jax.jit
+    def step(trainable, stats, velocity, x, y, lr, t_obj, lam, ns_l1):
+        (loss, (ce, reg, acc, new_stats, mean_t)), grads = (
+            jax.value_and_grad(loss_fn, has_aux=True)(
+                trainable, stats, x, y, t_obj, lam, ns_l1))
+
+        def upd(path, v):
+            if v is None:
+                return None
+            g = grads
+            vel = velocity
+            for seg in path:
+                g, vel = g[seg], vel[seg]
+            if _is_weight(path):
+                g = g + weight_decay * v
+            newvel = momentum * vel - lr * g
+            return newvel
+
+        new_velocity = tree_map_with_path(upd, trainable)
+
+        def apply_v(path, v):
+            if v is None:
+                return None
+            nv = new_velocity
+            for seg in path:
+                nv = nv[seg]
+            return v + nv
+
+        new_trainable = tree_map_with_path(apply_v, trainable)
+        metrics = {"loss": loss, "ce": ce, "reg": reg, "acc": acc,
+                   "mean_t": mean_t}
+        return new_trainable, new_stats, new_velocity, metrics
+
+    _STEP_CACHE[key] = step
+    return step
+
+
+# ------------------------------------------------------------ evaluation
+
+
+def evaluate(params, spec, cfg: TrainConfig, xs, ys, default_block,
+             batch: int = 128) -> dict:
+    """Test accuracy + Eq. 2–3 bandwidth stats in inference mode.
+
+    Models trained without Zebra are still *evaluated* through the
+    inference op at T = 0: post-ReLU that is the identity on values, and
+    the masks then count the natural / NS-induced zero blocks — the
+    bandwidth the paper credits to its baselines (e.g. Table IV's
+    NS-only rows, Table II's T_obj = 0 rows).
+    """
+    zebra_mode = "infer"
+    eval_t = cfg.t_obj if cfg.zebra else 0.0
+    n = xs.shape[0]
+    correct = 0
+    top5 = 0
+    all_masks: list[list[np.ndarray]] = []
+    blocks: list[int] = []
+
+    ekey = (cfg.arch, cfg.width, cfg.dataset, cfg.zebra, cfg.backend, batch)
+    if ekey in _EVAL_CACHE:
+        fwd = _EVAL_CACHE[ekey]
+    else:
+        @jax.jit
+        def fwd(params, x, t_obj):
+            logits, _, aux = models.apply(
+                params, spec, x, train=False, zebra_mode=zebra_mode,
+                t_obj=t_obj, default_block=default_block,
+                backend=cfg.backend)
+            return logits, aux["masks"]
+
+        _EVAL_CACHE[ekey] = fwd
+
+    for i in range(0, n, batch):
+        x, y = xs[i:i + batch], ys[i:i + batch]
+        orig = x.shape[0]
+        if orig != batch:  # pad the ragged tail to keep one jit key
+            pad = np.zeros((batch - orig,) + x.shape[1:], x.dtype)
+            x = np.concatenate([x, pad])
+        logits, masks = fwd(params, jnp.asarray(x), jnp.float32(eval_t))
+        logits = logits[:orig]
+        masks = [m[:orig] for m in masks]
+        pred = np.asarray(jnp.argmax(logits, -1))
+        correct += int((pred == y).sum())
+        k = min(5, logits.shape[-1])
+        topk = np.asarray(jnp.argsort(logits, -1)[:, -k:])
+        top5 += int(sum(y[j] in topk[j] for j in range(len(y))))
+        if masks:
+            all_masks.append([np.asarray(m) for m in masks])
+
+    out = {"top1": 100.0 * correct / n, "top5": 100.0 * top5 / n}
+    if all_masks:
+        merged = [np.concatenate([bm[i] for bm in all_masks])
+                  for i in range(len(all_masks[0]))]
+        hw = data_mod.DATASETS[cfg.dataset]["hw"]
+        plan = models.spill_plan(spec, hw,
+                                 data_mod.DATASETS[cfg.dataset]["block"])
+        blocks = [s.block for s in plan]
+        out.update(bandwidth_stats([jnp.asarray(m) for m in merged], blocks))
+    else:
+        # Baseline model: only natural zero blocks reduce traffic. Measure
+        # them by running inference with T = 0 semantics (strict compare).
+        out.update({"reduced_pct": 0.0})
+    return out
+
+
+# -------------------------------------------------------------- training
+
+
+def train(cfg: TrainConfig, log: bool = True) -> dict[str, Any]:
+    """Full recipe: [NS/WP pretrain ->] train [+ Zebra] -> evaluate.
+
+    Returns a results dict (accuracies, bandwidth stats, histories,
+    final params) consumed by the pipeline and the AOT exporter.
+    """
+    t0 = time.time()
+    ds = data_mod.DATASETS[cfg.dataset]
+    (xtr, ytr), (xte, yte) = ds["make"](cfg.n_train, cfg.n_test,
+                                        seed=cfg.seed + 7)
+    spec = models.make_spec(cfg.arch, ds["classes"], cfg.width)
+    default_block = ds["block"]
+    key = jax.random.PRNGKey(cfg.seed)
+    params = models.init(key, spec, ds["hw"], default_block, cfg.t_obj)
+
+    trainable, stats = _split_params(params)
+    velocity = tree_map_with_path(
+        lambda p, v: None if v is None else jnp.zeros_like(v), trainable)
+    step_fn = make_train_step(cfg, spec, default_block)
+
+    wp_masks = None
+    ns_masks = None
+    pretrain = cfg.pretrain_steps or (
+        cfg.steps // 2 if (cfg.ns_ratio > 0 or cfg.wp_ratio > 0) else 0)
+
+    rng = np.random.default_rng(cfg.seed)
+    history = {"loss": [], "acc": [], "mean_t": [], "reg": []}
+    for it in range(cfg.steps):
+        idx = rng.integers(0, xtr.shape[0], cfg.batch)
+        x, y = jnp.asarray(xtr[idx]), jnp.asarray(ytr[idx])
+        lr = _lr_at(cfg, it)
+        ns_l1_eff = cfg.ns_l1 if (cfg.ns_ratio > 0 and it < pretrain) else 0.0
+        trainable, stats, velocity, m = step_fn(
+            trainable, stats, velocity, x, y,
+            jnp.float32(lr), jnp.float32(cfg.t_obj),
+            jnp.float32(cfg.lam), jnp.float32(ns_l1_eff))
+
+        # Static pruning acts once, mid-budget: prune, freeze mask,
+        # keep training (the paper's "prune then retrain with Zebra").
+        if it + 1 == pretrain:
+            merged = _merge_params(trainable, stats)
+            if cfg.wp_ratio > 0:
+                wp_masks = weight_prune_masks(merged, cfg.wp_ratio)
+            if cfg.ns_ratio > 0:
+                ns_masks = slim_masks(merged, cfg.ns_ratio)
+        if wp_masks is not None:
+            trainable = apply_weight_masks(trainable, wp_masks)
+        if ns_masks is not None:
+            trainable = apply_slim_masks(trainable, ns_masks)
+
+        for k in history:
+            if k in m:
+                history[k].append(float(m[k]))
+        if log and (it % max(1, cfg.steps // 10) == 0 or it == cfg.steps - 1):
+            print(f"  step {it:4d} loss={float(m['loss']):.4f} "
+                  f"acc={float(m['acc']):.3f} reg={float(m['reg']):.4f} "
+                  f"mean_T={float(m['mean_t']):.4f} lr={lr:.4f}",
+                  flush=True)
+
+    params = _merge_params(trainable, stats)
+    ev = evaluate(params, spec, cfg, xte, yte, default_block)
+    result = {
+        "config": dataclasses.asdict(cfg),
+        "spec": spec,
+        "params": params,
+        "history": history,
+        "eval": ev,
+        "train_seconds": time.time() - t0,
+    }
+    if log:
+        print(f"  -> top1={ev['top1']:.2f}% "
+              f"reduced_bw={ev.get('reduced_pct', 0.0):.1f}% "
+              f"({result['train_seconds']:.0f}s)", flush=True)
+    return result

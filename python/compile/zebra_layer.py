@@ -1,0 +1,94 @@
+"""The Zebra layer (paper Sec. II) in its two modes.
+
+Training mode (Fig. 2): a tiny threshold network — GAP over the incoming
+activation map followed by one FC layer and a sigmoid — produces a
+per-(sample, channel) threshold ``T_{l,c} in [0, 1]``. Blocks whose max
+is below the threshold are zeroed through the fused L1 ``relu_zebra``
+kernel. The hard mask uses a straight-through estimator on the
+activations; the threshold net receives gradient ONLY from the Eq. 1
+regularizer ``||T_obj - T_{l,c}||^2`` (the kernel's VJP returns zero
+cotangent for the threshold input), which is exactly why the learned
+thresholds converge to ``T_obj`` (Fig. 3).
+
+Inference mode (Fig. 3): the threshold net is deleted and the scalar
+``T_obj`` is used directly — zero parameters, one max per element of
+run-time overhead (Eq. 5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .kernels import ref as zref
+from .kernels import zebra as zk
+
+# Which implementation executes the block-prune op:
+#   "pallas" — the L1 kernel (AOT export + equivalence tests);
+#   "jnp"    — the vectorized oracle from kernels/ref.py. Identical math
+#              (tests assert it), including the straight-through gradient:
+#              comparisons have zero cotangent in JAX, so `x * mask(x)`
+#              backpropagates exactly the kept-block mask. The training
+#              grid uses this path because interpret-mode pallas inside
+#              jit lowers to a sequential XLA loop over the grid
+#              (DESIGN.md §7).
+def _prune(x, t, block, backend: str, relu: bool):
+    if backend == "pallas":
+        fn = zk.relu_zebra if relu else zk.zebra_prune
+        return fn(x, t, block)
+    if backend == "jnp":
+        fn = zref.relu_zebra_ref if relu else zref.zebra_prune_ref
+        return fn(x, t, block)
+    raise ValueError(f"unknown zebra backend {backend!r}")
+
+
+def init_threshold_net(key, c: int, t_obj: float) -> dict:
+    """Threshold net params: FC (C -> C) + bias.
+
+    The bias starts at ``logit(T_obj)`` and the weight at ~0 so the layer
+    begins with T ~= T_obj: training starts from the regularizer's fixed
+    point instead of fighting it.
+    """
+    t = min(max(t_obj, 1e-3), 1 - 1e-3)
+    logit = float(jnp.log(t / (1 - t)))
+    w = jax.random.normal(key, (c, c)) * 0.01
+    return {"w": w, "b": jnp.full((c,), logit)}
+
+
+def thresholds(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """(N, C, H, W) -> per-(sample, channel) thresholds in [0, 1]."""
+    pooled = layers.gap(x)  # (N, C)
+    return jax.nn.sigmoid(pooled @ params["w"] + params["b"])
+
+
+def apply_train(params: dict, x: jnp.ndarray, block: int,
+                backend: str = "pallas"):
+    """Training mode: fused ReLU+prune with learned thresholds.
+
+    Returns (pruned, mask, t) where ``t`` feeds the Eq. 1 regularizer.
+    """
+    t = thresholds(params, x)
+    # stop_gradient is belt-and-braces: the kernel VJP already returns a
+    # zero cotangent for the threshold operand.
+    pruned, mask = _prune(x, jax.lax.stop_gradient(t), block, backend,
+                          relu=True)
+    return pruned, mask, t
+
+
+def apply_infer(x: jnp.ndarray, t_obj: float, block: int,
+                backend: str = "pallas"):
+    """Inference mode: fixed scalar threshold, no parameters (Fig. 3)."""
+    pruned, mask = _prune(x, jnp.float32(t_obj), block, backend, relu=True)
+    return pruned, mask
+
+
+def regularizer(ts: list[jnp.ndarray], t_obj: float) -> jnp.ndarray:
+    """Eq. 1's second term: sum_{l,c} ||T_obj - T_{l,c}||^2.
+
+    ``ts`` carries one (N, C) array per Zebra layer; the sum over the
+    batch dimension is averaged so the term is batch-size invariant.
+    """
+    if not ts:
+        return jnp.float32(0.0)
+    return sum(jnp.mean(jnp.sum((t_obj - t) ** 2, axis=1)) for t in ts)

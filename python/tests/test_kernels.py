@@ -1,0 +1,211 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compile path: hypothesis
+sweeps shapes, dtypes, block sizes and threshold layouts, asserting
+allclose against ``kernels/ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, ref, zebra
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+
+def rand(key, shape, dtype=F32, scale=1.0):
+    return (jax.random.normal(key, shape, F32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- zebra
+
+nchw_cases = st.tuples(
+    st.integers(1, 3),                      # N
+    st.integers(1, 6),                      # C
+    st.sampled_from([2, 4, 8, 16, 32]),     # H
+    st.sampled_from([2, 4, 8, 16, 32]),     # W
+    st.sampled_from([2, 4, 8]),             # block
+    st.integers(0, 2**31 - 1),              # seed
+).filter(lambda t: t[2] % t[4] == 0 and t[3] % t[4] == 0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(nchw_cases)
+def test_zebra_prune_matches_ref(case):
+    n, c, h, w, b, seed = case
+    key = jax.random.PRNGKey(seed)
+    x = rand(key, (n, c, h, w))
+    t = jax.random.uniform(jax.random.fold_in(key, 1), (c,))
+    got_x, got_m = zebra.zebra_prune(x, t, b)
+    ref_x, ref_m = ref.zebra_prune_ref(x, t, b)
+    np.testing.assert_allclose(got_x, ref_x, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got_m), np.asarray(ref_m))
+
+
+@settings(max_examples=40, deadline=None)
+@given(nchw_cases)
+def test_relu_zebra_matches_ref(case):
+    n, c, h, w, b, seed = case
+    key = jax.random.PRNGKey(seed)
+    x = rand(key, (n, c, h, w))
+    t = jax.random.uniform(jax.random.fold_in(key, 1), (n, c))
+    got_x, got_m = zebra.relu_zebra(x, t, b)
+    ref_x, ref_m = ref.relu_zebra_ref(x, t, b)
+    np.testing.assert_allclose(got_x, ref_x, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got_m), np.asarray(ref_m))
+
+
+@settings(max_examples=30, deadline=None)
+@given(nchw_cases)
+def test_block_max_matches_ref(case):
+    n, c, h, w, b, seed = case
+    x = rand(jax.random.PRNGKey(seed), (n, c, h, w))
+    np.testing.assert_allclose(
+        zebra.block_max(x, b), ref.block_max_ref(x, b), rtol=1e-6
+    )
+
+
+def test_zebra_scalar_threshold_broadcasts():
+    x = rand(jax.random.PRNGKey(0), (2, 4, 8, 8))
+    got_x, got_m = zebra.zebra_prune(x, 0.25, 4)
+    ref_x, ref_m = ref.zebra_prune_ref(x, 0.25, 4)
+    np.testing.assert_allclose(got_x, ref_x, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got_m), np.asarray(ref_m))
+
+
+def test_zebra_zero_threshold_keeps_positive_blocks():
+    # T=0: after ReLU a block dies only if it is entirely <= 0.
+    x = jnp.full((1, 1, 4, 4), -1.0, F32).at[0, 0, 0, 0].set(2.0)
+    pruned, mask = zebra.relu_zebra(x, 0.0, 2)
+    m = np.asarray(mask)[0, 0]
+    assert m[0, 0] == 1.0 and m.sum() == 1.0
+    assert float(jnp.sum(pruned)) == 2.0
+
+
+def test_zebra_huge_threshold_prunes_everything():
+    x = rand(jax.random.PRNGKey(1), (1, 2, 8, 8), scale=0.1)
+    pruned, mask = zebra.relu_zebra(x, 1e9, 4)
+    assert float(jnp.abs(pruned).sum()) == 0.0
+    assert float(mask.sum()) == 0.0
+
+
+def test_zebra_idempotent():
+    x = rand(jax.random.PRNGKey(2), (1, 3, 16, 16))
+    p1, m1 = zebra.relu_zebra(x, 0.4, 4)
+    p2, m2 = zebra.zebra_prune(p1, 0.4, 4)
+    np.testing.assert_allclose(p1, p2, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+
+def test_zebra_mask_monotone_in_threshold():
+    x = rand(jax.random.PRNGKey(3), (2, 4, 16, 16))
+    masks = [
+        np.asarray(zebra.relu_zebra(x, t, 4)[1]) for t in (0.0, 0.2, 0.5, 1.0)
+    ]
+    for lo, hi in zip(masks[1:], masks[:-1]):
+        assert np.all(lo <= hi), "higher threshold must prune a superset"
+
+
+def test_zebra_rejects_indivisible_shapes():
+    x = jnp.zeros((1, 1, 6, 8), F32)
+    with pytest.raises(ValueError):
+        zebra.zebra_prune(x, 0.1, 4)
+
+
+def test_zebra_bfloat16():
+    x = rand(jax.random.PRNGKey(4), (1, 2, 8, 8), BF16)
+    got_x, got_m = zebra.zebra_prune(x, 0.3, 2)
+    ref_x, ref_m = ref.zebra_prune_ref(x, 0.3, 2)
+    np.testing.assert_allclose(
+        np.asarray(got_x, np.float32), np.asarray(ref_x, np.float32), rtol=1e-2
+    )
+    np.testing.assert_array_equal(np.asarray(got_m), np.asarray(ref_m))
+
+
+def test_zebra_grad_is_straight_through_on_kept_blocks():
+    # d/dx sum(prune(x)) == upsampled mask: 1 on kept blocks, 0 on pruned.
+    x = rand(jax.random.PRNGKey(5), (1, 2, 8, 8))
+    g = jax.grad(lambda v: zebra.zebra_prune(v, 0.5, 4)[0].sum())(x)
+    _, mask = zebra.zebra_prune(x, 0.5, 4)
+    up = np.repeat(np.repeat(np.asarray(mask), 4, axis=2), 4, axis=3)
+    np.testing.assert_allclose(np.asarray(g), up, rtol=1e-6)
+
+
+# --------------------------------------------------------------- matmul
+
+mm_cases = st.tuples(
+    st.integers(1, 200),        # M
+    st.integers(1, 64),         # K
+    st.integers(1, 200),        # N
+    st.integers(0, 2**31 - 1),  # seed
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(mm_cases)
+def test_matmul_matches_ref(case):
+    m, k, n, seed = case
+    key = jax.random.PRNGKey(seed)
+    a = rand(key, (m, k))
+    b = rand(jax.random.fold_in(key, 1), (k, n))
+    np.testing.assert_allclose(
+        matmul.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_mxu_aligned_tiles():
+    key = jax.random.PRNGKey(7)
+    a = rand(key, (256, 128))
+    b = rand(jax.random.fold_in(key, 1), (128, 256))
+    np.testing.assert_allclose(
+        matmul.matmul(a, b, bm=128, bn=128),
+        ref.matmul_ref(a, b),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_matmul_bf16_accumulates_in_f32():
+    key = jax.random.PRNGKey(8)
+    a = rand(key, (64, 512), BF16)
+    b = rand(jax.random.fold_in(key, 1), (512, 64), BF16)
+    got = np.asarray(matmul.matmul(a, b), np.float32)
+    want = np.asarray(ref.matmul_ref(a, b), np.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_matmul_rejects_mismatched_inner():
+    with pytest.raises(ValueError):
+        matmul.matmul(jnp.zeros((4, 5)), jnp.zeros((6, 4)))
+
+
+def test_matmul_is_differentiable():
+    key = jax.random.PRNGKey(9)
+    a = rand(key, (16, 8))
+    b = rand(jax.random.fold_in(key, 1), (8, 16))
+    ga = jax.grad(lambda u: matmul.matmul(u, b).sum())(a)
+    np.testing.assert_allclose(
+        np.asarray(ga), np.asarray(jnp.ones((16, 16)) @ b.T), rtol=1e-4
+    )
+
+
+# ----------------------------------------------------- table-I statistic
+
+def test_zero_block_fraction_orders_with_block_size():
+    # Smaller blocks always have >= the zero-block fraction of larger
+    # blocks on the same map (a zero 4x4 block is four zero 2x2 blocks,
+    # but not vice versa) — the ordering behind paper Table I.
+    x = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(11), (4, 8, 16, 16))
+    )
+    x = np.maximum(x, 0.0)  # ReLU sparsity
+    f2 = float(ref.zero_block_fraction_ref(jnp.asarray(x), 2))
+    f4 = float(ref.zero_block_fraction_ref(jnp.asarray(x), 4))
+    f8 = float(ref.zero_block_fraction_ref(jnp.asarray(x), 8))
+    assert f2 >= f4 >= f8

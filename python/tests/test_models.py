@@ -1,0 +1,143 @@
+"""L2 model zoo: shapes, spill plans, backend equivalence, zebra modes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, models
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCHS = ["vgg16", "resnet18", "resnet56", "mobilenet"]
+
+
+def tiny_setup(arch, hw=32, classes=4, width=0.1, block=4, t_obj=0.1):
+    spec = models.make_spec(arch, classes, width)
+    params = models.init(jax.random.PRNGKey(0), spec, hw, block, t_obj)
+    return spec, params
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes(arch):
+    spec, params = tiny_setup(arch)
+    x = jnp.zeros((2, 3, 32, 32))
+    logits, _, aux = models.apply(
+        params, spec, x, train=False, zebra_mode="infer", t_obj=0.1,
+        default_block=4)
+    assert logits.shape == (2, 4)
+    assert len(aux["masks"]) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_spill_plan_matches_apply(arch):
+    spec, params = tiny_setup(arch)
+    x = jnp.zeros((1, 3, 32, 32))
+    _, _, aux = models.apply(
+        params, spec, x, train=False, zebra_mode="infer", t_obj=0.1,
+        default_block=4, keep_spills=True)
+    plan = models.spill_plan(spec, 32, 4)
+    assert len(plan) == len(aux["spills"])
+    for info, spill in zip(plan, aux["spills"]):
+        assert spill.shape[1:] == (info.c, info.h, info.w), info.name
+    # Mask shapes match the plan's block grid.
+    for info, mask in zip(plan, aux["masks"]):
+        assert mask.shape[1:] == (
+            info.c, info.h // info.block, info.w // info.block), info.name
+
+
+def test_block_size_rule():
+    assert models.zebra_block_for(32, 4) == 4
+    assert models.zebra_block_for(2, 4) == 2  # paper: shrink on 2x2 maps
+    assert models.zebra_block_for(1, 8) == 1
+    assert models.zebra_block_for(64, 8) == 8
+
+
+def test_width_scaling():
+    wide = models.make_spec("resnet18", 10, 1.0)
+    thin = models.make_spec("resnet18", 10, 0.25)
+    w = [s["cout"] for s in wide if "cout" in s and s["kind"] != "fc"]
+    t = [s["cout"] for s in thin if "cout" in s and s["kind"] != "fc"]
+    assert all(a == 4 * b for a, b in zip(w, t))
+
+
+def test_backends_agree():
+    spec, params = tiny_setup("resnet18", width=0.1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 3, 32, 32))
+    lx, _, _ = models.apply(params, spec, x, train=False,
+                            zebra_mode="infer", t_obj=0.1, default_block=4,
+                            backend="xla")
+    lp, _, _ = models.apply(params, spec, x, train=False,
+                            zebra_mode="infer", t_obj=0.1, default_block=4,
+                            backend="pallas", zebra_backend="pallas")
+    np.testing.assert_allclose(np.asarray(lx), np.asarray(lp),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_zebra_modes_differ_only_by_pruning():
+    spec, params = tiny_setup("resnet18", width=0.1)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 3, 32, 32))
+    l_off, _, aux_off = models.apply(
+        params, spec, x, train=False, zebra_mode="off", t_obj=0.0,
+        default_block=4, keep_spills=True)
+    l_inf, _, aux_inf = models.apply(
+        params, spec, x, train=False, zebra_mode="infer", t_obj=1e9,
+        default_block=4, keep_spills=True)
+    # A huge threshold prunes everything -> all spills zero.
+    for sp in aux_inf["spills"]:
+        assert float(jnp.abs(sp).sum()) == 0.0
+    # T=0 equals plain ReLU output on every spill.
+    _, _, aux0 = models.apply(
+        params, spec, x, train=False, zebra_mode="infer", t_obj=0.0,
+        default_block=4, keep_spills=True)
+    for a, b in zip(aux_off["spills"], aux0["spills"]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    assert not np.allclose(np.asarray(l_off), np.asarray(l_inf))
+
+
+def test_train_mode_emits_thresholds():
+    spec, params = tiny_setup("resnet18", width=0.1)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 3, 32, 32))
+    _, _, aux = models.apply(
+        params, spec, x, train=True, zebra_mode="train", t_obj=0.1,
+        default_block=4)
+    assert len(aux["ts"]) == len(aux["masks"])
+    for t in aux["ts"]:
+        assert t.shape[0] == 2
+        assert float(t.min()) >= 0.0 and float(t.max()) <= 1.0
+        # Initialized near T_obj (threshold net starts at the fixed point).
+        np.testing.assert_allclose(np.asarray(t), 0.1, atol=0.05)
+
+
+def test_bn_stats_update_only_in_training():
+    spec, params = tiny_setup("resnet18", width=0.1)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 3, 32, 32))
+    _, p_train, _ = models.apply(params, spec, x, train=True,
+                                 zebra_mode="off", t_obj=0.0,
+                                 default_block=4)
+    _, p_eval, _ = models.apply(params, spec, x, train=False,
+                                zebra_mode="off", t_obj=0.0,
+                                default_block=4)
+    moved = np.abs(np.asarray(p_train["s0"]["bn"]["mean"])
+                   - np.asarray(params["s0"]["bn"]["mean"])).max()
+    frozen = np.abs(np.asarray(p_eval["s0"]["bn"]["mean"])
+                    - np.asarray(params["s0"]["bn"]["mean"])).max()
+    assert moved > 0.0
+    assert frozen == 0.0
+
+
+def test_dataset_generator_properties():
+    (xtr, ytr), (xte, yte) = data.synth_cifar(64, 32, seed=3)
+    assert xtr.shape == (64, 3, 32, 32)
+    assert set(np.unique(ytr)) <= set(range(10))
+    # Deterministic per seed.
+    (xtr2, ytr2), _ = data.synth_cifar(64, 32, seed=3)
+    np.testing.assert_array_equal(xtr, xtr2)
+    np.testing.assert_array_equal(ytr, ytr2)
+    # Different seeds differ.
+    (xtr3, _), _ = data.synth_cifar(64, 32, seed=4)
+    assert np.abs(xtr - xtr3).max() > 0.1
+    # Tiny variant: higher res, 20 classes.
+    (xt, yt), _ = data.synth_tiny(20, 10, seed=5)
+    assert xt.shape == (20, 3, 64, 64)
+    assert yt.max() < 20

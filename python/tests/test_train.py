@@ -1,0 +1,132 @@
+"""Trainer: Eq. 1 dynamics, NS/WP masking, bandwidth accounting, AOT."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, data, models, trace, zebra_layer
+from compile import train as T
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def tiny_cfg(**kw):
+    base = dict(arch="resnet18", dataset="cifar10", width=0.1, t_obj=0.1,
+                steps=8, batch=8, n_train=32, n_test=16, seed=1)
+    base.update(kw)
+    return T.TrainConfig(**base)
+
+
+def test_loss_decreases_and_thresholds_converge():
+    res = T.train(tiny_cfg(steps=30, n_train=64), log=False)
+    hist = res["history"]
+    assert hist["loss"][-1] < hist["loss"][0]
+    # Thresholds stay pinned to T_obj (Eq. 1 regularizer, Fig. 3).
+    assert abs(hist["mean_t"][-1] - 0.1) < 0.03
+    assert "reduced_pct" in res["eval"]
+
+
+def test_zebra_off_baseline_trains():
+    res = T.train(tiny_cfg(zebra=False), log=False)
+    assert res["eval"]["top1"] >= 0.0
+    # Baselines are evaluated at T=0: natural zero blocks only.
+    assert res["eval"]["reduced_pct"] >= 0.0
+
+
+def test_regularizer_pulls_threshold_to_tobj():
+    t1 = zebra_layer.regularizer([jnp.full((2, 3), 0.5)], 0.5)
+    t2 = zebra_layer.regularizer([jnp.full((2, 3), 0.9)], 0.5)
+    assert float(t1) == 0.0
+    assert float(t2) > 0.0
+    assert float(zebra_layer.regularizer([], 0.5)) == 0.0
+
+
+def test_weight_pruning_masks_are_global_magnitude():
+    spec = models.make_spec("resnet18", 4, 0.1)
+    params = models.init(jax.random.PRNGKey(0), spec, 32, 4, 0.1)
+    masks = T.weight_prune_masks(params, 0.5)
+    zeros = kept = 0
+    for path, leaf in T._tree_paths(masks):
+        if leaf is None:
+            continue
+        arr = np.asarray(leaf)
+        zeros += (arr == 0).sum()
+        kept += (arr == 1).sum()
+    frac = zeros / (zeros + kept)
+    assert 0.45 < frac < 0.55, f"pruned fraction {frac}"
+    pruned = T.apply_weight_masks(params, masks)
+    w0 = np.asarray(pruned["s0"]["conv"]["w"])
+    m0 = np.asarray(masks["s0"]["conv"]["w"])
+    assert np.all((w0 == 0) | (m0 == 1))
+
+
+def test_network_slimming_zeroes_channels():
+    spec = models.make_spec("resnet18", 4, 0.1)
+    params = models.init(jax.random.PRNGKey(0), spec, 32, 4, 0.1)
+    # Make one channel's gamma clearly the smallest everywhere.
+    params["s0"]["bn"]["gamma"] = params["s0"]["bn"]["gamma"].at[0].set(1e-6)
+    masks = T.slim_masks(params, 0.3)
+    slimmed = T.apply_slim_masks(params, masks)
+    assert float(slimmed["s0"]["bn"]["gamma"][0]) == 0.0
+    assert float(slimmed["s0"]["bn"]["beta"][0]) == 0.0
+    # A zeroed BN channel emits exactly zero post-ReLU -> prunable maps.
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 3, 32, 32))
+    _, _, aux = models.apply(slimmed, spec, x, train=False,
+                             zebra_mode="infer", t_obj=0.0,
+                             default_block=4, keep_spills=True)
+    ch0 = np.asarray(aux["spills"][0])[:, 0]
+    assert np.abs(ch0).max() == 0.0
+
+
+def test_bandwidth_stats_match_formula():
+    mask = jnp.ones((2, 4, 8, 8)).at[:, :2].set(0.0)  # half the blocks
+    stats = T.bandwidth_stats([mask], [4])
+    nblocks = 4 * 8 * 8
+    assert stats["required_bytes"] == nblocks * 16 * 4
+    assert stats["kept_bytes"] == stats["required_bytes"] / 2
+    assert stats["overhead_bytes"] == nblocks / 8
+    assert 0 < stats["reduced_pct"] < 50
+
+
+def test_aot_export_roundtrip(tmp_path):
+    spec = models.make_spec("resnet18", 4, 0.1)
+    params = models.init(jax.random.PRNGKey(0), spec, 32, 4, 0.1)
+    out = tmp_path / "m.hlo.txt"
+    wdir = tmp_path / "weights"
+    meta = aot.export_model(
+        params, spec, batch=1, hw=32, t_obj=0.1, default_block=4,
+        zebra=True, out_path=str(out), weights_dir=str(wdir))
+    text = out.read_text()
+    assert text.startswith("HloModule")
+    assert meta["n_outputs"] == 1 + len(meta["masks"])
+    # Weight files cover every leaf, in flatten order, with no elision.
+    leaves = jax.tree_util.tree_flatten(params)[0]
+    assert meta["n_weights"] == len(leaves)
+    files = sorted(os.listdir(wdir))
+    assert len(files) == len(leaves)
+    w0 = trace.read_zten(str(wdir / "w00000.zten"))
+    assert w0.size == np.asarray(leaves[0]).size
+
+
+def test_zten_roundtrip(tmp_path):
+    arr = np.random.default_rng(0).normal(size=(2, 3, 4, 4)).astype(np.float32)
+    p = str(tmp_path / "t.zten")
+    trace.write_zten(p, arr)
+    np.testing.assert_array_equal(trace.read_zten(p), arr)
+    u8 = (np.abs(arr[0]) * 50).astype(np.uint8)
+    trace.write_zten(p, u8)
+    np.testing.assert_array_equal(trace.read_zten(p), u8)
+
+
+def test_eval_pads_ragged_tail():
+    cfg = tiny_cfg(n_test=10)  # not a multiple of eval batch
+    ds = data.DATASETS["cifar10"]
+    spec = models.make_spec(cfg.arch, ds["classes"], cfg.width)
+    params = models.init(jax.random.PRNGKey(0), spec, 32, 4, cfg.t_obj)
+    _, (xte, yte) = ds["make"](16, 10, seed=9)
+    out = T.evaluate(params, spec, cfg, xte, yte, 4, batch=8)
+    assert 0.0 <= out["top1"] <= 100.0
+    assert out["required_bytes"] > 0

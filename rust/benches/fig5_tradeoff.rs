@@ -1,0 +1,87 @@
+//! Fig. 5 regenerator: the bandwidth-reduction / accuracy trade-off
+//! scatter for ResNet-18 on CIFAR-10 — Zebra alone and combined with
+//! Network Slimming and Weight Pruning — rendered as an ASCII scatter
+//! plus the underlying CSV (artifacts/fig5.csv) for plotting.
+
+use std::io::Write;
+
+use zebra::bench::paper::{banner, PaperMetrics};
+
+fn main() -> anyhow::Result<()> {
+    let art = zebra::artifacts_dir();
+    let metrics = PaperMetrics::load(&art)?;
+    banner();
+
+    // Every ResNet-18/CIFAR run is a point in the scatter.
+    let mut pts: Vec<(String, f64, f64)> = Vec::new(); // (tag, bw, acc)
+    for key in metrics.keys() {
+        let Some(r) = metrics.run(&key) else { continue };
+        if r.arch != "resnet18" || r.dataset != "cifar10" {
+            continue;
+        }
+        let tag = if r.ns > 0.0 && r.zebra {
+            "Z+NS"
+        } else if r.wp > 0.0 && r.zebra {
+            "Z+WP"
+        } else if r.ns > 0.0 {
+            "NS"
+        } else if r.zebra {
+            "Z"
+        } else {
+            "base"
+        };
+        pts.push((tag.to_string(), r.reduced_pct, r.top1));
+    }
+    anyhow::ensure!(!pts.is_empty(), "no resnet18/cifar runs in metrics.json");
+
+    // CSV for real plotting.
+    let csv = art.join("fig5.csv");
+    let mut f = std::fs::File::create(&csv)?;
+    writeln!(f, "method,reduced_bw_pct,top1")?;
+    for (tag, bw, acc) in &pts {
+        writeln!(f, "{tag},{bw:.2},{acc:.2}")?;
+    }
+
+    // ASCII scatter: x = bandwidth reduction, y = accuracy.
+    let (w, h) = (64usize, 18usize);
+    let (xmax, ymin, ymax) = (
+        pts.iter().map(|p| p.1).fold(10.0f64, f64::max) + 5.0,
+        pts.iter().map(|p| p.2).fold(100.0f64, f64::min) - 2.0,
+        pts.iter().map(|p| p.2).fold(0.0f64, f64::max) + 2.0,
+    );
+    let mut grid = vec![vec![' '; w]; h];
+    for (tag, bw, acc) in &pts {
+        let x = ((bw / xmax) * (w - 1) as f64) as usize;
+        let y = (h - 1)
+            - (((acc - ymin) / (ymax - ymin)) * (h - 1) as f64) as usize;
+        grid[y.min(h - 1)][x.min(w - 1)] = tag.chars().next().unwrap();
+    }
+    println!(
+        "\nFig. 5 — ResNet-18/CIFAR-10 trade-off  (Z=zebra, N=NS-combo, \
+         W=WP-combo, b=baseline; x: bw reduction 0..{xmax:.0}%, y: top-1 \
+         {ymin:.0}..{ymax:.0}%)\n"
+    );
+    for row in grid {
+        println!("  |{}", row.into_iter().collect::<String>());
+    }
+    println!("  +{}", "-".repeat(w));
+    println!("\nwrote {}", csv.display());
+
+    // Shape check (the paper's reading of Fig. 5): at comparable
+    // accuracy, Zebra+NS reaches further right than Zebra alone.
+    let best = |tag: &str| {
+        pts.iter()
+            .filter(|p| p.0 == tag)
+            .map(|p| p.1)
+            .fold(0.0f64, f64::max)
+    };
+    let (z, zns) = (best("Z"), best("Z+NS"));
+    assert!(
+        zns > z,
+        "Zebra+NS frontier ({zns:.1}%) must extend past Zebra alone ({z:.1}%)"
+    );
+    println!(
+        "shape check OK: Zebra+NS frontier {zns:.1}% > Zebra alone {z:.1}%."
+    );
+    Ok(())
+}

@@ -1,0 +1,161 @@
+//! §Perf harness: throughput of every Layer-3 hot path plus the
+//! PJRT-executed Pallas kernel and full model step. Run via
+//! `cargo bench --bench perf_hotpath`; numbers are recorded in
+//! EXPERIMENTS.md §Perf.
+//!
+//! Targets (DESIGN.md §11): the codec and pruner must sustain several
+//! GB/s — comfortably above the simulated accelerator's DRAM channel
+//! (12.8 GB/s of modeled traffic is generated at a few hundred MB/s of
+//! host work) and far above the CPU-PJRT model step, so Layer 3 is
+//! never the serving bottleneck.
+
+use zebra::bench::{bench, Table};
+use zebra::compress::{Codec, DenseCodec, RleZeroCodec, WholeMapCodec,
+                      ZeroBlockCodec};
+use zebra::runtime::Runtime;
+use zebra::tensor::Tensor;
+use zebra::util::prng::Rng;
+use zebra::zebra::prune::{relu_prune_inplace, Thresholds};
+
+fn spill_tensor(rng: &mut Rng, sparse: bool) -> Tensor {
+    // A realistic mid-network spill: 8 x 64 x 32 x 32 (2 MiB).
+    let shape = [8usize, 64, 32, 32];
+    let n: usize = shape.iter().product();
+    let mut data: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    if sparse {
+        // Pre-prune to ~60% zero blocks like a trained Zebra model.
+        let mut t = Tensor::from_vec(&shape, data);
+        relu_prune_inplace(&mut t, &Thresholds::Scalar(1.2), 4);
+        return t;
+    }
+    for v in &mut data {
+        *v = v.max(0.0);
+    }
+    Tensor::from_vec(&shape, data)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(2026);
+    let dense = spill_tensor(&mut rng, false);
+    let sparse = spill_tensor(&mut rng, true);
+    let mb = dense.nbytes() as f64;
+
+    let mut table = Table::new(&["hot path", "mean ms", "GB/s", "note"]);
+    let mut push = |name: &str, stats: zebra::bench::Stats, note: &str| {
+        table.row(&[
+            name.into(),
+            format!("{:.3}", stats.mean_ms()),
+            format!("{:.2}", stats.per_sec(mb) / 1e9),
+            note.into(),
+        ]);
+    };
+
+    // 1. The pruning op itself (fused relu + block max + zero).
+    let mut work = dense.clone();
+    let s = bench("relu_prune_inplace b4", 300, || {
+        work.data_mut().copy_from_slice(dense.data());
+        std::hint::black_box(relu_prune_inplace(
+            &mut work,
+            &Thresholds::Scalar(0.5),
+            4,
+        ));
+    });
+    push("prune (relu+blockmax+zero, B=4)", s, "includes input memcpy");
+
+    let s = bench("relu_prune_inplace b8", 300, || {
+        work.data_mut().copy_from_slice(dense.data());
+        std::hint::black_box(relu_prune_inplace(
+            &mut work,
+            &Thresholds::Scalar(0.5),
+            8,
+        ));
+    });
+    push("prune (B=8)", s, "");
+
+    // 2. Codecs, encode + decode on a ~60%-sparse spill.
+    for codec in [
+        Box::new(ZeroBlockCodec::new(4)) as Box<dyn Codec>,
+        Box::new(RleZeroCodec),
+        Box::new(WholeMapCodec),
+        Box::new(DenseCodec),
+    ] {
+        let enc = codec.encode(&sparse);
+        let ratio = enc.total_bytes() as f64 / sparse.nbytes() as f64;
+        let s = bench(&format!("{} encode", codec.name()), 200, || {
+            std::hint::black_box(codec.encode(&sparse));
+        });
+        push(
+            &format!("{} encode", codec.name()),
+            s,
+            &format!("{:.2}x size", ratio),
+        );
+        let s = bench(&format!("{} decode", codec.name()), 200, || {
+            std::hint::black_box(codec.decode(&enc));
+        });
+        push(&format!("{} decode", codec.name()), s, "");
+    }
+
+    // 3. Accelerator simulator over a full ResNet-18 trace.
+    let art = zebra::artifacts_dir();
+    if let Ok(tr) = zebra::trace::load(art.join("traces/rn18-c10-t0.2")) {
+        let cfg = zebra::accel::AccelConfig::default();
+        let plan = tr.plan();
+        let layers = zebra::accel::LayerDesc::from_plan(&plan);
+        let tensors: Vec<Tensor> =
+            tr.spills.iter().map(|s| s.tensor.clone()).collect();
+        let codec = ZeroBlockCodec::new(4);
+        let s = bench("simulate_trace rn18", 400, || {
+            std::hint::black_box(
+                zebra::accel::simulate_trace(&cfg, &layers, &tensors, &codec)
+                    .unwrap(),
+            );
+        });
+        let total_mb: f64 =
+            tensors.iter().map(|t| t.nbytes() as f64).sum::<f64>();
+        table.row(&[
+            "accel sim (17-layer trace)".into(),
+            format!("{:.3}", s.mean_ms()),
+            format!("{:.2}", s.per_sec(total_mb) / 1e9),
+            "full codec replay".into(),
+        ]);
+    }
+
+    // 4. PJRT: the Pallas zebra kernel and the end-to-end model step.
+    if let Ok(rt) = Runtime::new(&art) {
+        let exe = rt.compile_file(&art.join("kernel_zebra.hlo.txt"))?;
+        let kin = Tensor::from_vec(
+            &[1, 16, 32, 32],
+            (0..16 * 1024).map(|i| ((i % 97) as f32) / 97.0 - 0.3).collect(),
+        );
+        let s = bench("pjrt zebra kernel", 300, || {
+            std::hint::black_box(rt.run_kernel(&exe, &[&kin]).unwrap());
+        });
+        table.row(&[
+            "PJRT pallas zebra kernel (1x16x32x32)".into(),
+            format!("{:.3}", s.mean_ms()),
+            format!("{:.2}", s.per_sec(kin.nbytes() as f64) / 1e9),
+            "AOT HLO, CPU PJRT".into(),
+        ]);
+
+        if let Ok(h) = rt.model_for_batch("rn18-c10-t0.1", 8) {
+            let x = Tensor::zeros(&[8, 3, 32, 32]);
+            let s = bench("pjrt model step b8", 2_000, || {
+                std::hint::black_box(h.run(&x).unwrap());
+            });
+            table.row(&[
+                "PJRT model step (rn18, batch 8)".into(),
+                format!("{:.3}", s.mean_ms()),
+                format!(
+                    "{:.1} img/s",
+                    8.0 / (s.mean_ns / 1e9)
+                ),
+                "serving hot path".into(),
+            ]);
+        }
+    } else {
+        eprintln!("(artifacts missing — PJRT rows skipped)");
+    }
+
+    table.print("§Perf — Layer-3 hot paths");
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Table IV regenerator: ablation of Zebra vs Network Slimming vs
+//! Zebra+NS on VGG16 and ResNet-18 (CIFAR-10) — the paper's evidence
+//! that the two compose ("Network Slimming truly helps Zebra train
+//! better").
+
+use zebra::bench::paper::{banner, PaperMetrics};
+use zebra::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let art = zebra::artifacts_dir();
+    let metrics = PaperMetrics::load(&art)?;
+    banner();
+
+    let mut t = Table::new(&[
+        "row", "bw% paper", "bw% ours", "acc paper", "acc ours",
+    ]);
+    // label -> (measured bw, top1), grouped for the composition check.
+    let mut measured: std::collections::BTreeMap<String, (f64, f64)> =
+        Default::default();
+    for (label, key) in metrics.table_rows("table4") {
+        let Some(r) = metrics.run(&key) else {
+            eprintln!("  (skipping {key}: not in metrics.json yet)");
+            continue;
+        };
+        let (pbw, pacc) = metrics
+            .table4_paper(&label)
+            .map(|(b, a)| (format!("{b:.1}"), format!("{a:.2}")))
+            .unwrap_or(("-".into(), "-".into()));
+        t.row(&[
+            label.clone(),
+            pbw,
+            format!("{:.1}", r.reduced_pct),
+            pacc,
+            format!("{:.2}", r.top1),
+        ]);
+        measured.insert(label, (r.reduced_pct, r.top1));
+    }
+    t.print("Table IV — ablation: NS vs Zebra vs Zebra+NS (CIFAR-10)");
+
+    // Composition check per group: Zebra+NS >= max(Zebra, NS) - slack.
+    // Single-technique rows only compete when their accuracy is in the
+    // same regime as the combo's (within 10 points): a collapsed model
+    // can post a huge "reduction" that means nothing (the paper's
+    // comparisons are all at comparable accuracy).
+    let mut ok = true;
+    for (ns, zebra, combo) in [
+        ("vgg16 NS(20)", "vgg16 Zebra(0.05)", "vgg16 Zebra+NS(20)"),
+        ("vgg16 NS(50)", "vgg16 Zebra(0.1)", "vgg16 Zebra+NS(50)"),
+        ("rn18 NS(20)", "rn18 Zebra(0.1)", "rn18 Zebra+NS(20)"),
+        ("rn18 NS(40)", "rn18 Zebra(0.2)", "rn18 Zebra+NS(40)"),
+    ] {
+        let (Some(&a), Some(&b), Some(&c)) =
+            (measured.get(ns), measured.get(zebra), measured.get(combo))
+        else {
+            continue;
+        };
+        let comparable = |s: (f64, f64)| s.1 + 10.0 >= c.1;
+        let best_single = [a, b]
+            .into_iter()
+            .filter(|&s| comparable(s))
+            .map(|s| s.0)
+            .fold(0.0f64, f64::max);
+        println!(
+            "  {combo}: {:.1}% vs best comparable single {best_single:.1}% \
+             ({})",
+            c.0,
+            if c.0 + 1.0 >= best_single { "composes ✓" } else { "FAILS" }
+        );
+        ok &= c.0 + 1.0 >= best_single;
+    }
+    assert!(ok, "Zebra+NS must beat either technique alone (Table IV)");
+    println!("shape check OK: Zebra+NS >= max(Zebra, NS) in every group.");
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Table V regenerator: required activation bandwidth vs block-index
+//! overhead for full-width ResNet-18 on CIFAR-10 (block 4) and
+//! Tiny-ImageNet (block 8).
+//!
+//! This table is pure Eq. 2–3 arithmetic over the architecture, so it
+//! reproduces the paper essentially exactly (the small delta is the
+//! paper's rounding / stem-counting convention). Both the built-in
+//! width-1.0 plans and the manifest-exported ones are checked, plus the
+//! codec-level cross-validation: encoding an actual dense tensor with
+//! the zero-block codec must produce exactly the index bytes Eq. 3
+//! predicts.
+
+use zebra::bench::paper::banner;
+use zebra::bench::Table;
+use zebra::compress::{Codec, ZeroBlockCodec};
+use zebra::models::paper_plan;
+use zebra::runtime::Manifest;
+use zebra::tensor::Tensor;
+use zebra::zebra::bandwidth::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let art = zebra::artifacts_dir();
+    banner();
+
+    let mut t = Table::new(&[
+        "model", "dataset", "required (ours)", "overhead (ours)", "ovh %",
+        "paper",
+    ]);
+    let rows = [
+        ("resnet18", "CIFAR-10", 32usize, 4usize,
+         "2.06 MB / 4.13 KB (0.2%)"),
+        ("resnet18", "Tiny-ImageNet", 64, 8, "7.86 MB / 3.15 KB (0.04%)"),
+    ];
+    for (arch, ds, hw, block, paper) in rows {
+        let plan = paper_plan(arch, hw, block)?;
+        let req = plan.required_bytes();
+        let idx = plan.index_bytes();
+        t.row(&[
+            arch.into(),
+            ds.into(),
+            fmt_bytes(req),
+            fmt_bytes(idx),
+            format!("{:.2}%", 100.0 * idx / req),
+            paper.into(),
+        ]);
+    }
+    t.print("Table V — memory bandwidth overhead (Eq. 2-3, width 1.0)");
+
+    // Cross-check against the manifest's exported width-1.0 spec.
+    if let Ok(manifest) = Manifest::load(&art) {
+        if let Ok(spec) = manifest.spec("resnet18-cifar10-paper") {
+            let builtin = paper_plan("resnet18", 32, 4)?;
+            let d = (spec.required_bytes() - builtin.required_bytes()).abs();
+            println!(
+                "manifest cross-check: python-exported plan {} vs built-in \
+                 {} (delta {d:.0} B) {}",
+                fmt_bytes(spec.required_bytes()),
+                fmt_bytes(builtin.required_bytes()),
+                if d < 1.0 { "✓ identical" } else { "(differs!)" }
+            );
+            assert!(d < 1.0, "python and rust spill plans must agree");
+        }
+    }
+
+    // Codec-level check of Eq. 3 on one real-sized spill.
+    let spill = Tensor::from_vec(
+        &[1, 64, 32, 32],
+        (0..64 * 32 * 32).map(|i| (i % 7) as f32).collect(),
+    );
+    let enc = ZeroBlockCodec::new(4).encode(&spill);
+    let eq3_bits: f64 = 64.0 * 32.0 * 32.0 / (4.0 * 4.0);
+    assert_eq!(enc.index.len(), (eq3_bits / 8.0).ceil() as usize);
+    println!(
+        "codec check OK: 64x32x32 spill, block 4 -> index {} B (Eq. 3: \
+         C*H*W/B^2 bits = {} B).",
+        enc.index.len(),
+        eq3_bits / 8.0
+    );
+    Ok(())
+}

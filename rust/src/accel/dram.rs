@@ -1,0 +1,110 @@
+//! DRAM channel model: burst-quantized transfers at a fixed peak
+//! bandwidth, with simple page-hit efficiency derating.
+//!
+//! This is a transaction-level model, not cycle-accurate DRAM timing —
+//! the paper's bandwidth numbers are byte counts, and what we add on
+//! top is exactly the two effects that matter for small-block codecs:
+//! burst rounding (a 4-byte index read still moves a 64-byte burst) and
+//! sustained-vs-peak derating.
+
+use super::AccelConfig;
+
+/// Accumulates DRAM traffic and converts it to cycles/energy.
+#[derive(Debug, Clone, Default)]
+pub struct DramModel {
+    /// Logical payload bytes requested.
+    pub logical_bytes: u64,
+    /// Bytes actually moved after burst quantization.
+    pub bus_bytes: u64,
+    /// Number of discrete transfers (DMA descriptors).
+    pub transfers: u64,
+}
+
+impl DramModel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one transfer of `bytes` logical bytes.
+    pub fn transfer(&mut self, cfg: &AccelConfig, bytes: usize) {
+        if bytes == 0 {
+            return;
+        }
+        self.logical_bytes += bytes as u64;
+        self.bus_bytes += cfg.burst_quantize(bytes) as u64;
+        self.transfers += 1;
+    }
+
+    /// Cycles to move the accumulated traffic at sustained bandwidth.
+    /// Sustained = peak * 0.85 (page misses, refresh).
+    pub fn cycles(&self, cfg: &AccelConfig) -> u64 {
+        let sustained = cfg.dram_bytes_per_cycle * 0.85;
+        (self.bus_bytes as f64 / sustained).ceil() as u64
+    }
+
+    /// Energy in pJ for the accumulated traffic.
+    pub fn energy_pj(&self, cfg: &AccelConfig) -> f64 {
+        self.bus_bytes as f64 * cfg.pj_per_byte_dram
+    }
+
+    /// Bus efficiency: logical / moved (1.0 = no burst waste).
+    pub fn efficiency(&self) -> f64 {
+        if self.bus_bytes == 0 {
+            return 1.0;
+        }
+        self.logical_bytes as f64 / self.bus_bytes as f64
+    }
+
+    pub fn merge(&mut self, other: &DramModel) {
+        self.logical_bytes += other.logical_bytes;
+        self.bus_bytes += other.bus_bytes;
+        self.transfers += other.transfers;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_rounding_charges_full_bursts() {
+        let cfg = AccelConfig::default();
+        let mut d = DramModel::new();
+        d.transfer(&cfg, 4); // one tiny index read
+        assert_eq!(d.logical_bytes, 4);
+        assert_eq!(d.bus_bytes, 64);
+        assert!((d.efficiency() - 4.0 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_transfer_is_free() {
+        let cfg = AccelConfig::default();
+        let mut d = DramModel::new();
+        d.transfer(&cfg, 0);
+        assert_eq!(d.transfers, 0);
+        assert_eq!(d.cycles(&cfg), 0);
+        assert_eq!(d.efficiency(), 1.0);
+    }
+
+    #[test]
+    fn cycles_scale_with_bytes() {
+        let cfg = AccelConfig::default();
+        let mut d = DramModel::new();
+        d.transfer(&cfg, 1024 * 1024);
+        let one_mb = d.cycles(&cfg);
+        d.transfer(&cfg, 1024 * 1024);
+        assert!((d.cycles(&cfg) as f64 / one_mb as f64 - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let cfg = AccelConfig::default();
+        let mut a = DramModel::new();
+        let mut b = DramModel::new();
+        a.transfer(&cfg, 100);
+        b.transfer(&cfg, 200);
+        a.merge(&b);
+        assert_eq!(a.logical_bytes, 300);
+        assert_eq!(a.transfers, 2);
+    }
+}

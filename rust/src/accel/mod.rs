@@ -1,0 +1,87 @@
+//! Layer-by-layer CNN accelerator simulator (DESIGN.md §9).
+//!
+//! The paper's evaluation assumes "a layer-by-layer hardware processing
+//! that will store the activation maps to external DRAM for each
+//! convolutional layer" (Sec. III-B, Table V). This module is that
+//! substrate, made concrete: a weight-stationary PE array with
+//! double-buffered SRAM and a burst-quantized DRAM channel, where every
+//! activation spill goes through a pluggable [`Codec`] — so the Zebra
+//! codec's savings (and the baselines' lack thereof) become cycles,
+//! joules and GB/s instead of percentages.
+
+mod dram;
+mod pe;
+mod sim;
+
+pub use dram::DramModel;
+pub use pe::PeArray;
+pub use sim::{simulate_analytic, simulate_trace, LayerDesc, LayerStats,
+              SimReport};
+
+/// Accelerator configuration. Defaults model a small edge accelerator
+/// in the Eyeriss class (16x16 MACs @ 1 GHz, LPDDR4-ish single channel)
+/// — the setting where the paper's activation-bandwidth argument bites.
+#[derive(Debug, Clone)]
+pub struct AccelConfig {
+    /// PE array dimensions (MACs = rows * cols per cycle at 100% util).
+    pub pe_rows: usize,
+    pub pe_cols: usize,
+    /// Core clock in GHz.
+    pub freq_ghz: f64,
+    /// On-chip activation/weight buffer (bytes). Layers whose working
+    /// set fits are still spilled (the paper's layer-by-layer
+    /// assumption) but weights stream once.
+    pub sram_bytes: usize,
+    /// DRAM peak bandwidth in bytes/cycle (e.g. 12.8 GB/s @ 1 GHz
+    /// = 12.8 B/cycle).
+    pub dram_bytes_per_cycle: f64,
+    /// DRAM burst size in bytes; every transfer rounds up to bursts.
+    pub burst_bytes: usize,
+    /// Energy proxies.
+    pub pj_per_mac: f64,
+    pub pj_per_byte_dram: f64,
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        AccelConfig {
+            pe_rows: 16,
+            pe_cols: 16,
+            freq_ghz: 1.0,
+            sram_bytes: 512 * 1024,
+            dram_bytes_per_cycle: 12.8,
+            burst_bytes: 64,
+            pj_per_mac: 0.5,
+            // DRAM access energy dominates on-chip compute by ~2 orders
+            // of magnitude (Eyeriss, ref [9]) — the premise of the paper.
+            pj_per_byte_dram: 60.0,
+        }
+    }
+}
+
+impl AccelConfig {
+    /// Peak MACs per cycle.
+    pub fn peak_macs(&self) -> usize {
+        self.pe_rows * self.pe_cols
+    }
+
+    /// Round a byte count up to whole DRAM bursts.
+    pub fn burst_quantize(&self, bytes: usize) -> usize {
+        bytes.div_ceil(self.burst_bytes) * self.burst_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = AccelConfig::default();
+        assert_eq!(c.peak_macs(), 256);
+        assert_eq!(c.burst_quantize(0), 0);
+        assert_eq!(c.burst_quantize(1), 64);
+        assert_eq!(c.burst_quantize(64), 64);
+        assert_eq!(c.burst_quantize(65), 128);
+    }
+}

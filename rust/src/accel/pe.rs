@@ -1,0 +1,93 @@
+//! PE-array compute model: weight-stationary MAC grid with a geometric
+//! utilization estimate.
+//!
+//! Utilization follows the standard mapping argument: output channels
+//! tile one PE dimension, input channels the other; ragged edges leave
+//! PEs idle. This is deliberately simple — the paper's contribution is
+//! on the *memory* side, and the simulator only needs compute cycles
+//! good enough to decide whether a layer is compute- or memory-bound.
+
+use super::AccelConfig;
+
+/// Compute-side stats for one layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PeArray {
+    pub macs: u64,
+    pub utilization: f64,
+    pub cycles: u64,
+}
+
+impl PeArray {
+    /// Model a conv layer: `cin x k x k` reduction per output element,
+    /// `cout * h * w` outputs (already divided by stride via h/w).
+    pub fn conv(
+        cfg: &AccelConfig,
+        cin: usize,
+        cout: usize,
+        k: usize,
+        h: usize,
+        w: usize,
+    ) -> PeArray {
+        let macs = (cin * k * k * cout * h * w) as u64;
+        // Output channels map to rows, input channels to cols; the last
+        // partial tile idles the remainder.
+        let row_util = tile_util(cout, cfg.pe_rows);
+        let col_util = tile_util(cin * k * k, cfg.pe_cols);
+        let utilization = (row_util * col_util).max(1e-3);
+        let peak = cfg.peak_macs() as f64;
+        let cycles = (macs as f64 / (peak * utilization)).ceil() as u64;
+        PeArray { macs, utilization, cycles }
+    }
+
+    pub fn energy_pj(&self, cfg: &AccelConfig) -> f64 {
+        self.macs as f64 * cfg.pj_per_mac
+    }
+}
+
+/// Average occupancy when `n` work items tile a dimension of size `d`.
+fn tile_util(n: usize, d: usize) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    let tiles = n.div_ceil(d);
+    n as f64 / (tiles * d) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfectly_tiled_layer_hits_full_utilization() {
+        let cfg = AccelConfig::default(); // 16x16
+        let pe = PeArray::conv(&cfg, 16, 16, 1, 8, 8);
+        assert!((pe.utilization - 1.0).abs() < 1e-9);
+        // 16*16*64 MACs at 256/cycle = 64 cycles.
+        assert_eq!(pe.cycles, 64);
+    }
+
+    #[test]
+    fn ragged_channels_lose_utilization() {
+        let cfg = AccelConfig::default();
+        let full = PeArray::conv(&cfg, 16, 16, 3, 8, 8);
+        let ragged = PeArray::conv(&cfg, 16, 17, 3, 8, 8);
+        assert!(ragged.utilization < full.utilization);
+        assert!(ragged.cycles > full.cycles);
+    }
+
+    #[test]
+    fn macs_match_eq4() {
+        // Eq. 4: C*W*H*F*F*O / s — with h,w already post-stride.
+        let cfg = AccelConfig::default();
+        let pe = PeArray::conv(&cfg, 64, 128, 3, 16, 16);
+        assert_eq!(pe.macs, 64 * 128 * 9 * 256);
+    }
+
+    #[test]
+    fn tile_util_bounds() {
+        assert_eq!(tile_util(0, 16), 0.0);
+        assert_eq!(tile_util(16, 16), 1.0);
+        assert!((tile_util(8, 16) - 0.5).abs() < 1e-12);
+        assert!((tile_util(17, 16) - 17.0 / 32.0).abs() < 1e-12);
+    }
+}

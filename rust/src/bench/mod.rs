@@ -1,0 +1,156 @@
+//! In-repo benchmarking harness (criterion is not in the offline vendor
+//! set — DESIGN.md §7): warmup + timed iterations, robust stats, and
+//! the table printer every `benches/table*.rs` regenerator uses.
+
+pub mod paper;
+
+use std::time::Instant;
+
+/// Summary statistics over timed iterations (nanoseconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    /// Throughput in units/sec given work per iteration.
+    pub fn per_sec(&self, work_per_iter: f64) -> f64 {
+        work_per_iter / (self.mean_ns / 1e9)
+    }
+}
+
+/// Time `f` with warmup; picks an iteration count so the measured phase
+/// runs ~`budget_ms`.
+pub fn bench<F: FnMut()>(label: &str, budget_ms: u64, mut f: F) -> Stats {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as u64;
+    let target = budget_ms * 1_000_000;
+    let iters = (target / once).clamp(3, 10_000) as usize;
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let stats = Stats {
+        iters: n,
+        mean_ns: samples.iter().sum::<f64>() / n as f64,
+        p50_ns: samples[n / 2],
+        p95_ns: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+        min_ns: samples[0],
+        max_ns: samples[n - 1],
+    };
+    eprintln!(
+        "  [bench] {label}: mean {:.3} ms  p50 {:.3}  p95 {:.3}  ({} iters)",
+        stats.mean_ns / 1e6,
+        stats.p50_ns / 1e6,
+        stats.p95_ns / 1e6,
+        n
+    );
+    stats
+}
+
+/// Fixed-width table printer for paper-vs-measured comparisons.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let total: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        println!("\n{title}");
+        println!("{}", "=".repeat(total.min(100)));
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                line.push_str(&format!(" {c:>w$} |"));
+            }
+            line
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", "-".repeat(total.min(100)));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+        println!();
+    }
+}
+
+/// Format a measured-vs-paper pair like `"36.4 / 33.1"`.
+pub fn vs(paper: f64, measured: f64) -> String {
+    format!("{paper:>5.1} / {measured:>5.1}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let mut x = 0u64;
+        let s = bench("noop", 5, || {
+            x = x.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(s.min_ns <= s.p50_ns);
+        assert!(s.p50_ns <= s.p95_ns);
+        assert!(s.p95_ns <= s.max_ns);
+        assert!(s.iters >= 3);
+    }
+
+    #[test]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(&["only-one".to_string()]);
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = Stats {
+            iters: 1,
+            mean_ns: 1e6, // 1 ms
+            p50_ns: 1e6,
+            p95_ns: 1e6,
+            min_ns: 1e6,
+            max_ns: 1e6,
+        };
+        // 1 MB per 1 ms = 1 GB/s.
+        let gbps = s.per_sec(1e6) / 1e9;
+        assert!((gbps - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,198 @@
+//! Shared loader for the paper-reproduction benches: joins
+//! `artifacts/metrics.json` (the trained grid + paper reference
+//! numbers) with table layouts so each `benches/table*.rs` regenerator
+//! prints paper-vs-measured rows.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// One experiment's outcome + the paper's reference numbers.
+#[derive(Debug, Clone)]
+pub struct Run {
+    pub key: String,
+    pub arch: String,
+    pub dataset: String,
+    pub t_obj: f64,
+    pub ns: f64,
+    pub wp: f64,
+    pub zebra: bool,
+    pub top1: f64,
+    pub top5: f64,
+    pub reduced_pct: f64,
+    pub paper_bw: Option<f64>,
+    /// (top1, top5) — top5 only for Tiny-ImageNet rows.
+    pub paper_acc: Option<(f64, Option<f64>)>,
+    /// Mean learned threshold per logged step (Fig. 3 evidence).
+    pub mean_t_history: Vec<f64>,
+    pub loss_history: Vec<f64>,
+}
+
+/// Full metrics file.
+pub struct PaperMetrics {
+    pub raw: Value,
+}
+
+impl PaperMetrics {
+    pub fn load(artifacts: &Path) -> Result<PaperMetrics> {
+        let path = artifacts.join("metrics.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {path:?} — run `make artifacts` first")
+        })?;
+        Ok(PaperMetrics { raw: json::parse(&text)? })
+    }
+
+    pub fn run(&self, key: &str) -> Option<Run> {
+        let r = self.raw.get("runs").get(key);
+        if r.is_null() {
+            return None;
+        }
+        let cfg = r.get("config");
+        let ev = r.get("eval");
+        let paper = r.get("paper");
+        let paper_acc = match paper.get("acc") {
+            Value::Num(a) => Some((*a, None)),
+            Value::Array(v) if v.len() == 2 => {
+                Some((v[0].as_f64()?, Some(v[1].as_f64()?)))
+            }
+            _ => None,
+        };
+        let hist = |name: &str| -> Vec<f64> {
+            r.get("history")
+                .get(name)
+                .as_array()
+                .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+                .unwrap_or_default()
+        };
+        Some(Run {
+            key: key.to_string(),
+            arch: cfg.get("arch").as_str().unwrap_or("?").into(),
+            dataset: cfg.get("dataset").as_str().unwrap_or("?").into(),
+            t_obj: cfg.get("t_obj").as_f64().unwrap_or(0.0),
+            ns: cfg.get("ns_ratio").as_f64().unwrap_or(0.0),
+            wp: cfg.get("wp_ratio").as_f64().unwrap_or(0.0),
+            zebra: cfg.get("zebra").as_bool().unwrap_or(false),
+            top1: ev.get("top1").as_f64().unwrap_or(0.0),
+            top5: ev.get("top5").as_f64().unwrap_or(0.0),
+            reduced_pct: ev.get("reduced_pct").as_f64().unwrap_or(0.0),
+            paper_bw: paper.get("bw").as_f64(),
+            paper_acc,
+            mean_t_history: hist("mean_t"),
+            loss_history: hist("loss"),
+        })
+    }
+
+    /// All run keys present.
+    pub fn keys(&self) -> Vec<String> {
+        self.raw
+            .get("runs")
+            .as_object()
+            .map(|o| o.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// The `tables` layout written by the pipeline: (label, key) rows.
+    pub fn table_rows(&self, table: &str) -> Vec<(String, String)> {
+        self.raw
+            .get("tables")
+            .get(table)
+            .as_array()
+            .map(|rows| {
+                rows.iter()
+                    .filter_map(|r| {
+                        Some((
+                            r.get("label").as_str()?.to_string(),
+                            r.get("key").as_str()?.to_string(),
+                        ))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Paper reference (bw, acc) for a Table IV row label.
+    pub fn table4_paper(&self, label: &str) -> Option<(f64, f64)> {
+        let v = self.raw.get("table4_paper").get(label);
+        Some((v.idx(0).as_f64()?, v.idx(1).as_f64()?))
+    }
+
+    /// Table I block-size sweep: (measured, paper) per label.
+    pub fn table1(&self) -> Vec<(String, f64, f64)> {
+        let t = self.raw.get("table1");
+        ["2x2", "4x4", "whole"]
+            .iter()
+            .filter_map(|&label| {
+                Some((
+                    label.to_string(),
+                    t.get("measured").get(label).as_f64()?,
+                    t.get("paper").get(label).as_f64()?,
+                ))
+            })
+            .collect()
+    }
+}
+
+/// Shared "how to read these tables" banner.
+pub fn banner() {
+    println!(
+        "NOTE: measured numbers come from the CPU-budget reproduction \
+         (width-scaled models, synthetic dataset — DESIGN.md §7).\n\
+         Compare SHAPES (ordering, deltas, crossovers), not absolutes."
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake() -> PaperMetrics {
+        let text = r#"{
+          "runs": {"k1": {
+            "config": {"arch":"resnet18","dataset":"cifar10","t_obj":0.1,
+                       "ns_ratio":0.2,"wp_ratio":0.0,"zebra":true},
+            "eval": {"top1":80.5,"top5":99.0,"reduced_pct":30.25},
+            "paper": {"bw":33.5,"acc":90.41},
+            "history": {"mean_t":[0.09,0.1],"loss":[2.0,1.0]}
+          },
+          "k2": {
+            "config": {"arch":"resnet18","dataset":"tiny","t_obj":0.2,
+                       "ns_ratio":0,"wp_ratio":0,"zebra":true},
+            "eval": {"top1":30.0,"top5":90.0,"reduced_pct":28.0},
+            "paper": {"bw":47.2,"acc":[56.5,78.92]},
+            "history": {}
+          }},
+          "tables": {"table2": [{"label":"row1","key":"k1"}]},
+          "table4_paper": {"row1": [21.9, 92.84]},
+          "table1": {"measured":{"2x2":35.2,"4x4":21.9,"whole":1.1},
+                     "paper":{"2x2":24.7,"4x4":7.9,"whole":1.1}}
+        }"#;
+        PaperMetrics { raw: json::parse(text).unwrap() }
+    }
+
+    #[test]
+    fn parses_runs_and_paper_refs() {
+        let m = fake();
+        let r = m.run("k1").unwrap();
+        assert_eq!(r.arch, "resnet18");
+        assert_eq!(r.paper_bw, Some(33.5));
+        assert_eq!(r.paper_acc, Some((90.41, None)));
+        assert_eq!(r.mean_t_history, vec![0.09, 0.1]);
+        let r2 = m.run("k2").unwrap();
+        assert_eq!(r2.paper_acc, Some((56.5, Some(78.92))));
+        assert!(m.run("nope").is_none());
+    }
+
+    #[test]
+    fn table_layout_and_refs() {
+        let m = fake();
+        assert_eq!(
+            m.table_rows("table2"),
+            vec![("row1".to_string(), "k1".to_string())]
+        );
+        assert_eq!(m.table4_paper("row1"), Some((21.9, 92.84)));
+        assert_eq!(m.table1().len(), 3);
+        assert_eq!(m.keys().len(), 2);
+    }
+}

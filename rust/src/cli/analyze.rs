@@ -1,0 +1,120 @@
+//! `zebra analyze` — sparsity + bandwidth analysis of a trace, and
+//! `zebra table5` — the paper's static overhead arithmetic.
+
+use anyhow::Result;
+
+use super::Args;
+use crate::bench::Table;
+use crate::models;
+use crate::zebra::bandwidth::{self, fmt_bytes};
+use crate::zebra::prune::{block_mask, natural_zero_fraction, Thresholds};
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = args
+        .get("trace")
+        .ok_or_else(|| anyhow::anyhow!("analyze needs --trace DIR"))?;
+    let tr = crate::trace::load(dir)?;
+    println!(
+        "trace {} ({} images, dataset {}, zebra={}, T_obj={})",
+        tr.model,
+        tr.batch(),
+        tr.dataset,
+        tr.zebra,
+        tr.t_obj
+    );
+
+    let mut table = Table::new(&[
+        "layer", "shape", "block", "zero-elem %", "zero-blk %", "dense",
+        "stored", "index",
+    ]);
+    let mut report = bandwidth::BandwidthReport::default();
+    for sp in &tr.spills {
+        let t = &sp.tensor;
+        let mask = block_mask(t, &Thresholds::Scalar(0.0), sp.shape.block);
+        let kept = 1.0 - mask.zero_fraction();
+        let dense = sp.shape.dense_bytes() as f64;
+        let stored = sp.shape.stored_bytes(kept);
+        let index = sp.shape.index_bytes();
+        report.required_bytes += dense;
+        report.stored_bytes += stored;
+        report.overhead_bytes += index;
+        table.row(&[
+            sp.shape.name.clone(),
+            format!("{}x{}x{}", sp.shape.c, sp.shape.h, sp.shape.w),
+            sp.shape.block.to_string(),
+            format!("{:.1}", 100.0 * t.zero_fraction()),
+            format!("{:.1}", 100.0 * mask.zero_fraction()),
+            fmt_bytes(dense),
+            fmt_bytes(stored),
+            fmt_bytes(index),
+        ]);
+    }
+    table.print(&format!("Per-layer activation analysis — {}", tr.model));
+    println!(
+        "TOTAL per image: required {}  stored {}  index {}  -> reduced {:.1}%",
+        fmt_bytes(report.required_bytes / tr.batch() as f64),
+        fmt_bytes(report.stored_bytes / tr.batch() as f64),
+        fmt_bytes(report.overhead_bytes / tr.batch() as f64),
+        report.reduced_pct()
+    );
+
+    // Table-I style block-size sweep on this trace.
+    let mut t1 = Table::new(&["block size", "zero blocks %"]);
+    for label in ["2", "4", "8", "whole"] {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for sp in &tr.spills {
+            let s = &sp.shape;
+            let b = match label {
+                "whole" => s.h.min(s.w),
+                l => l.parse::<usize>().unwrap(),
+            };
+            if s.h % b != 0 || s.w % b != 0 {
+                continue;
+            }
+            let frac = natural_zero_fraction(&sp.tensor, b);
+            let blocks = (sp.tensor.len() / (b * b)) as f64;
+            num += frac * blocks;
+            den += blocks;
+        }
+        if den > 0.0 {
+            t1.row(&[label.to_string(), format!("{:.1}", 100.0 * num / den)]);
+        }
+    }
+    t1.print("Zero-block fraction vs block size (cf. paper Table I)");
+    Ok(())
+}
+
+/// `zebra table5`: Eq. 2–3 overhead arithmetic on the paper's
+/// full-width architectures — reproduces Table V exactly (it is pure
+/// arithmetic, no training involved).
+pub fn table5(args: &Args) -> Result<()> {
+    let ds = args.get_or("dataset", "both");
+    let mut table = Table::new(&[
+        "model", "dataset", "required bw", "bw overhead", "overhead %",
+        "paper",
+    ]);
+    let rows: Vec<(&str, usize, usize, &str)> = match ds.as_str() {
+        "cifar10" => vec![("resnet18", 32, 4, "2.06 MB / 4.13 KB (0.2%)")],
+        "tiny" => vec![("resnet18", 64, 8, "7.86 MB / 3.15 KB (0.04%)")],
+        _ => vec![
+            ("resnet18", 32, 4, "2.06 MB / 4.13 KB (0.2%)"),
+            ("resnet18", 64, 8, "7.86 MB / 3.15 KB (0.04%)"),
+        ],
+    };
+    for (arch, hw, block, paper) in rows {
+        let plan = models::paper_plan(arch, hw, block)?;
+        let req = plan.required_bytes();
+        let idx = plan.index_bytes();
+        table.row(&[
+            arch.to_string(),
+            if hw == 32 { "CIFAR-10" } else { "Tiny-ImageNet" }.to_string(),
+            fmt_bytes(req),
+            fmt_bytes(idx),
+            format!("{:.2}%", 100.0 * idx / req),
+            paper.to_string(),
+        ]);
+    }
+    table.print("Table V — memory bandwidth overhead (Eq. 2-3)");
+    Ok(())
+}

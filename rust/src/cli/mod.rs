@@ -1,0 +1,134 @@
+//! Hand-rolled CLI (clap is not in the offline vendor set).
+//!
+//! ```text
+//! zebra version
+//! zebra serve    --model rn18-c10-t0.1 --requests 64 [--wait-ms 2]
+//! zebra simulate --trace artifacts/traces/rn18-c10-t0.2 [--codec zero-block]
+//! zebra analyze  --trace artifacts/traces/rn18-c10-off
+//! zebra table5   [--dataset cifar10|tiny]
+//! ```
+
+mod analyze;
+mod serve;
+mod simulate;
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: subcommand + `--key value` flags (`--flag` with
+/// no value stores "true").
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: String,
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            args.command = cmd.clone();
+        }
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got {a:?}"))?;
+            let val = match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    it.next().unwrap().clone()
+                }
+                _ => "true".to_string(),
+            };
+            args.flags.insert(key.to_string(), val);
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} wants an integer, got {v}")),
+        }
+    }
+}
+
+const USAGE: &str = "zebra <command> [--flags]
+commands:
+  version                     print version
+  serve     --model KEY       run the serving pipeline over the test set
+            [--requests N] [--wait-ms MS] [--queue N]
+  simulate  --trace DIR       accelerator simulation of a trace
+            [--codec dense|whole-map|rle-zero|zero-block] [--all]
+  analyze   --trace DIR       sparsity + Eq.2-3 bandwidth analysis
+  table5    [--dataset cifar10|tiny]   static Table V arithmetic
+";
+
+/// CLI entry point (called by `main`).
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "" | "help" | "--help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        "version" => {
+            println!("zebra {}", crate::version());
+            Ok(())
+        }
+        "serve" => serve::run(&args),
+        "simulate" => simulate::run(&args),
+        "analyze" => analyze::run(&args),
+        "table5" => analyze::table5(&args),
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_bare_switches() {
+        let a =
+            Args::parse(&v(&["serve", "--model", "rn18", "--fast"])).unwrap();
+        assert_eq!(a.command, "serve");
+        assert_eq!(a.get("model"), Some("rn18"));
+        assert_eq!(a.get("fast"), Some("true"));
+        assert_eq!(a.get_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn rejects_positional_garbage() {
+        assert!(Args::parse(&v(&["serve", "oops"])).is_err());
+    }
+
+    #[test]
+    fn numeric_flags_validate() {
+        let a = Args::parse(&v(&["serve", "--requests", "12"])).unwrap();
+        assert_eq!(a.get_usize("requests", 1).unwrap(), 12);
+        let b = Args::parse(&v(&["serve", "--requests", "xy"])).unwrap();
+        assert!(b.get_usize("requests", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(&v(&["frobnicate"])).is_err());
+        assert!(run(&v(&["version"])).is_ok());
+    }
+}

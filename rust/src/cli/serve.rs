@@ -1,0 +1,82 @@
+//! `zebra serve` — run the full serving pipeline: load AOT artifacts,
+//! start the coordinator, replay the exported test set as requests, and
+//! print latency/throughput/bandwidth metrics.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::Args;
+use crate::coordinator::server::BatchExecutor;
+use crate::coordinator::{PjrtExecutor, Server, ServerConfig};
+use crate::tensor::{read_zten, read_zten_i32, Tensor};
+
+pub fn run(args: &Args) -> Result<()> {
+    let artifacts = crate::artifacts_dir();
+    let model = args.get_or("model", "rn18-c10-t0.1");
+    let n_requests = args.get_usize("requests", 64)?;
+    let wait_ms = args.get_usize("wait-ms", 2)? as u64;
+    let queue = args.get_usize("queue", 1024)?;
+
+    println!("loading runtime from {artifacts:?} ...");
+    let t0 = Instant::now();
+    let exec = Arc::new(PjrtExecutor::new(artifacts.clone(), &model)?);
+    println!(
+        "model {} | batches {:?} | compiled in {:.1}s",
+        model,
+        exec.batch_sizes(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    let (images, labels) = load_testset(&artifacts)?;
+    let hw = images.shape()[2];
+    let per = 3 * hw * hw;
+
+    let server = Server::start(
+        exec,
+        ServerConfig {
+            max_wait: Duration::from_millis(wait_ms),
+            workers: 1,
+            max_queue: queue,
+        },
+    );
+
+    let n_avail = images.shape()[0];
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..n_requests {
+        let idx = i % n_avail;
+        let img = Tensor::from_vec(
+            &[3, hw, hw],
+            images.data()[idx * per..(idx + 1) * per].to_vec(),
+        );
+        pending.push((idx, server.submit(img)?));
+    }
+    let mut correct = 0usize;
+    for (idx, rx) in pending {
+        let resp = rx.recv().context("request dropped")?;
+        if resp.predicted as i32 == labels[idx] {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    println!(
+        "\nserved {n_requests} requests in {:.2}s ({:.1} req/s), top-1 {:.1}%",
+        wall.as_secs_f64(),
+        n_requests as f64 / wall.as_secs_f64(),
+        100.0 * correct as f64 / n_requests as f64
+    );
+    println!("metrics: {}", server.metrics.summary());
+    server.shutdown();
+    Ok(())
+}
+
+pub fn load_testset(
+    artifacts: &std::path::Path,
+) -> Result<(Tensor, Vec<i32>)> {
+    let images = read_zten(artifacts.join("testset_images.zten"))
+        .context("testset images (run `make artifacts`)")?;
+    let (_, labels) = read_zten_i32(artifacts.join("testset_labels.zten"))?;
+    Ok((images, labels))
+}

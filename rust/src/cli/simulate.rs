@@ -1,0 +1,89 @@
+//! `zebra simulate` — run the accelerator model over a trace with one
+//! codec (or all of them) and print the per-layer timing/traffic table.
+
+use anyhow::Result;
+
+use super::Args;
+use crate::accel::{simulate_trace, AccelConfig, LayerDesc, SimReport};
+use crate::bench::Table;
+use crate::compress::{all_codecs, Codec, DenseCodec};
+use crate::tensor::Tensor;
+use crate::zebra::bandwidth::fmt_bytes;
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = args
+        .get("trace")
+        .ok_or_else(|| anyhow::anyhow!("simulate needs --trace DIR"))?;
+    let tr = crate::trace::load(dir)?;
+    let cfg = AccelConfig::default();
+    let plan = tr.plan();
+    let layers = LayerDesc::from_plan(&plan);
+    let tensors: Vec<Tensor> =
+        tr.spills.iter().map(|s| s.tensor.clone()).collect();
+    let block = plan.iter().map(|s| s.block).max().unwrap_or(4);
+
+    let dense = simulate_trace(&cfg, &layers, &tensors, &DenseCodec)?;
+    if args.get("all").is_some() {
+        let mut t = Table::new(&[
+            "codec", "act bytes/img", "cycles", "latency ms", "energy uJ",
+            "reduction %",
+        ]);
+        for codec in all_codecs(block) {
+            let r = simulate_trace(&cfg, &layers, &tensors, codec.as_ref())?;
+            push_summary(&mut t, &cfg, &r, &dense);
+        }
+        t.print(&format!("Accelerator simulation — {} (all codecs)", tr.model));
+    } else {
+        let name = args.get_or("codec", "zero-block");
+        let codec: Box<dyn Codec> = all_codecs(block)
+            .into_iter()
+            .find(|c| c.name() == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown codec {name}"))?;
+        let r = simulate_trace(&cfg, &layers, &tensors, codec.as_ref())?;
+        per_layer_table(&r).print(&format!(
+            "Accelerator simulation — {} with {}",
+            tr.model, name
+        ));
+        let mut t = Table::new(&[
+            "codec", "act bytes/img", "cycles", "latency ms", "energy uJ",
+            "reduction %",
+        ]);
+        push_summary(&mut t, &cfg, &dense, &dense);
+        push_summary(&mut t, &cfg, &r, &dense);
+        t.print("Summary vs dense");
+    }
+    Ok(())
+}
+
+fn push_summary(
+    t: &mut Table,
+    cfg: &AccelConfig,
+    r: &SimReport,
+    dense: &SimReport,
+) {
+    t.row(&[
+        r.codec.clone(),
+        fmt_bytes(r.activation_bytes() as f64),
+        r.total_cycles.to_string(),
+        format!("{:.3}", r.latency_ms(cfg)),
+        format!("{:.1}", r.total_energy_pj / 1e6),
+        format!("{:.1}", r.reduction_vs(dense)),
+    ]);
+}
+
+fn per_layer_table(r: &SimReport) -> Table {
+    let mut t = Table::new(&[
+        "layer", "compute cyc", "mem cyc", "bound", "act out", "util %",
+    ]);
+    for l in &r.layers {
+        t.row(&[
+            l.name.clone(),
+            l.compute_cycles.to_string(),
+            l.mem_cycles.to_string(),
+            if l.memory_bound { "MEM" } else { "PE" }.to_string(),
+            fmt_bytes(l.act_bytes_out as f64),
+            format!("{:.0}", 100.0 * l.utilization),
+        ]);
+    }
+    t
+}

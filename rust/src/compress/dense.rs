@@ -1,0 +1,52 @@
+//! Dense (identity) codec — raw f32 bytes, the "required bandwidth"
+//! baseline every reduction percentage is computed against.
+
+use super::{Codec, Encoded};
+use crate::tensor::Tensor;
+
+pub struct DenseCodec;
+
+impl Codec for DenseCodec {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn encode(&self, x: &Tensor) -> Encoded {
+        let mut payload = Vec::with_capacity(x.len() * 4);
+        for &v in x.data() {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        Encoded { payload, index: Vec::new(), shape: x.shape().to_vec() }
+    }
+
+    fn decode(&self, e: &Encoded) -> Tensor {
+        let data: Vec<f32> = e
+            .payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Tensor::from_vec(&e.shape, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_is_exactly_4_bytes_per_elem() {
+        let x = Tensor::zeros(&[2, 3, 4, 4]);
+        let e = DenseCodec.encode(&x);
+        assert_eq!(e.total_bytes(), 96 * 4);
+        assert!(e.index.is_empty());
+    }
+
+    #[test]
+    fn roundtrip_preserves_bits() {
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![0.0, -0.0, 1.5e-9, 7.25]);
+        let y = DenseCodec.decode(&DenseCodec.encode(&x));
+        for (a, b) in x.data().iter().zip(y.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

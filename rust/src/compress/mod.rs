@@ -1,0 +1,149 @@
+//! Activation-spill codecs: what actually crosses the DRAM bus.
+//!
+//! The accelerator simulator (DESIGN.md §9) and the serving coordinator
+//! compress every activation spill through one of these codecs; the
+//! difference in encoded size *is* the paper's "reduced memory
+//! bandwidth".
+//!
+//! Implemented codecs:
+//! - [`DenseCodec`] — raw f32 maps (no compression; the paper's
+//!   "required bandwidth" baseline).
+//! - [`WholeMapCodec`] — ref [11]'s dynamic run-time pruning: skip a map
+//!   only when the *entire* C-plane is zero (1 bit per channel index).
+//! - [`RleZeroCodec`] — fine-grained ReLU-sparsity baseline: zero-run
+//!   length encoding of individual elements (the "irregular zeros are
+//!   bad for compression" strawman from the paper's intro).
+//! - [`ZeroBlockCodec`] — Zebra: 1 index bit per `B x B` block, zero
+//!   blocks skipped, kept blocks stored verbatim (Eq. 2–3).
+//!
+//! Every codec is exact (lossless given the already-pruned input):
+//! `decode(encode(x)) == x` is property-tested for all of them.
+
+mod dense;
+mod rle;
+mod whole_map;
+mod zero_block;
+
+pub use dense::DenseCodec;
+pub use rle::RleZeroCodec;
+pub use whole_map::WholeMapCodec;
+pub use zero_block::ZeroBlockCodec;
+
+use crate::tensor::Tensor;
+
+/// One encoded spill: payload + the side-band index the hardware would
+/// keep (e.g. Zebra's block bitmap). Sizes are what the DRAM model
+/// charges for.
+#[derive(Debug, Clone)]
+pub struct Encoded {
+    /// Main payload bytes (activation data actually stored).
+    pub payload: Vec<u8>,
+    /// Side-band index bytes (block bitmap / channel bitmap / run table).
+    pub index: Vec<u8>,
+    /// Original tensor shape (carried out-of-band; shapes are static
+    /// per-layer in hardware and cost nothing per inference).
+    pub shape: Vec<usize>,
+}
+
+impl Encoded {
+    /// Total bytes a DRAM round-trip moves for this spill.
+    pub fn total_bytes(&self) -> usize {
+        self.payload.len() + self.index.len()
+    }
+}
+
+/// An activation codec. `block` geometry (where relevant) is fixed at
+/// construction; `encode`/`decode` must round-trip exactly.
+pub trait Codec: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn encode(&self, x: &Tensor) -> Encoded;
+    fn decode(&self, e: &Encoded) -> Tensor;
+}
+
+/// All codecs at a given Zebra block size (bench sweeps).
+pub fn all_codecs(block: usize) -> Vec<Box<dyn Codec>> {
+    vec![
+        Box::new(DenseCodec),
+        Box::new(WholeMapCodec),
+        Box::new(RleZeroCodec),
+        Box::new(ZeroBlockCodec::new(block)),
+    ]
+}
+
+#[cfg(test)]
+pub(crate) mod test_util {
+    use crate::tensor::Tensor;
+    use crate::util::prng::Rng;
+    use crate::zebra::prune::{relu_prune, Thresholds};
+
+    /// A realistic spill: random normal activations, ReLU'd and
+    /// block-pruned at a random threshold (plus some all-zero channels
+    /// like Network Slimming produces).
+    pub fn random_spill(rng: &mut Rng, block: usize) -> Tensor {
+        let n = rng.range(1, 2);
+        let c = rng.range(1, 6);
+        let h = block * rng.range(1, 4);
+        let w = block * rng.range(1, 4);
+        let mut data: Vec<f32> =
+            (0..n * c * h * w).map(|_| rng.normal()).collect();
+        // Zero some whole channels (NS effect).
+        for ch in 0..c {
+            if rng.chance(0.2) {
+                let per = h * w;
+                for nn in 0..n {
+                    let base = (nn * c + ch) * per;
+                    data[base..base + per].fill(-1.0);
+                }
+            }
+        }
+        let x = Tensor::from_vec(&[n, c, h, w], data);
+        let t = rng.f32_range(0.0, 0.6);
+        relu_prune(&x, &Thresholds::Scalar(t), block).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_util::random_spill;
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop::{forall, Config};
+
+    #[test]
+    fn all_codecs_roundtrip_exactly() {
+        forall(Config::cases(60), |rng| {
+            let block = [2usize, 4][rng.range(0, 1)];
+            let x = random_spill(rng, block);
+            for codec in all_codecs(block) {
+                let e = codec.encode(&x);
+                let y = codec.decode(&e);
+                assert_eq!(x, y, "codec {} failed roundtrip", codec.name());
+            }
+        });
+    }
+
+    #[test]
+    fn zero_block_beats_dense_on_sparse_input() {
+        let mut rng = Rng::new(42);
+        let mut wins = 0;
+        for _ in 0..20 {
+            let x = random_spill(&mut rng, 4);
+            let dense = DenseCodec.encode(&x).total_bytes();
+            let zb = ZeroBlockCodec::new(4).encode(&x).total_bytes();
+            if zb <= dense + 64 {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 18, "zero-block should rarely lose to dense");
+    }
+
+    #[test]
+    fn encoded_total_is_payload_plus_index() {
+        let mut rng = Rng::new(7);
+        let x = random_spill(&mut rng, 2);
+        for codec in all_codecs(2) {
+            let e = codec.encode(&x);
+            assert_eq!(e.total_bytes(), e.payload.len() + e.index.len());
+        }
+    }
+}

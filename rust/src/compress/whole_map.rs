@@ -1,0 +1,91 @@
+//! Whole-map skip codec — the paper's ref [11] baseline ("Dynamic
+//! runtime feature map pruning"): an activation *channel plane* is
+//! skipped only when every element in it is zero. Index: 1 bit per
+//! (n, c) map. The paper's Table I "whole map" row shows why this saves
+//! little — large maps are almost never entirely zero.
+
+use super::{Codec, Encoded};
+use crate::tensor::Tensor;
+
+pub struct WholeMapCodec;
+
+impl Codec for WholeMapCodec {
+    fn name(&self) -> &'static str {
+        "whole-map"
+    }
+
+    fn encode(&self, x: &Tensor) -> Encoded {
+        let s = x.shape();
+        assert_eq!(s.len(), 4, "whole-map codec wants NCHW");
+        let (n, c) = (s[0], s[1]);
+        let maps = n * c;
+        let mut index = vec![0u8; maps.div_ceil(8)];
+        let mut payload = Vec::new();
+        for nn in 0..n {
+            for cc in 0..c {
+                let plane = x.plane(nn, cc);
+                let live = plane.iter().any(|&v| v != 0.0);
+                let id = nn * c + cc;
+                if live {
+                    index[id / 8] |= 1 << (id % 8);
+                    for &v in plane {
+                        payload.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
+        }
+        Encoded { payload, index, shape: s.to_vec() }
+    }
+
+    fn decode(&self, e: &Encoded) -> Tensor {
+        let (n, c, h, w) = (e.shape[0], e.shape[1], e.shape[2], e.shape[3]);
+        let per = h * w;
+        let mut data = vec![0.0f32; n * c * per];
+        let mut off = 0;
+        for id in 0..n * c {
+            let live = (e.index[id / 8] >> (id % 8)) & 1 == 1;
+            if live {
+                for i in 0..per {
+                    let b = &e.payload[off + i * 4..off + i * 4 + 4];
+                    data[id * per + i] =
+                        f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+                }
+                off += per * 4;
+            }
+        }
+        Tensor::from_vec(&e.shape, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skips_all_zero_maps() {
+        let mut x = Tensor::zeros(&[1, 3, 4, 4]);
+        // Only channel 1 is live.
+        x.data_mut()[16 + 5] = 2.0;
+        let e = WholeMapCodec.encode(&x);
+        assert_eq!(e.payload.len(), 16 * 4);
+        assert_eq!(e.index.len(), 1);
+        assert_eq!(WholeMapCodec.decode(&e), x);
+    }
+
+    #[test]
+    fn dense_map_saves_nothing() {
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0; 4]);
+        let e = WholeMapCodec.encode(&x);
+        assert_eq!(e.payload.len(), 16);
+    }
+
+    #[test]
+    fn one_nonzero_element_keeps_whole_map() {
+        // The weakness the paper points out: a single live pixel forces
+        // the entire map to be stored.
+        let mut x = Tensor::zeros(&[1, 1, 8, 8]);
+        x.data_mut()[63] = 0.001;
+        let e = WholeMapCodec.encode(&x);
+        assert_eq!(e.payload.len(), 64 * 4);
+    }
+}

@@ -1,0 +1,269 @@
+//! Dynamic batcher: groups single-image requests into the fixed batch
+//! sizes the AOT artifacts were exported with.
+//!
+//! PJRT executables have static shapes, so the batcher's job is the
+//! vLLM-style one restricted to classification: pick, for the current
+//! queue depth, the exported batch size that maximizes occupancy within
+//! a latency budget. Policy:
+//!
+//! 1. Block until at least one request is pending.
+//! 2. If the queue already covers the largest exported batch, take it.
+//! 3. Otherwise wait up to `max_wait` for more arrivals, then choose
+//!    the smallest exported batch >= queue depth (padding the tail) —
+//!    padding wastes compute but never delays a request by more than
+//!    `max_wait`.
+//!
+//! Invariants (property-tested): no request is dropped or duplicated,
+//! arrival order is preserved, batches never exceed the largest
+//! exported size, and every emitted batch size is one of the exported
+//! sizes.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A batch of items plus how many padding slots the executor must add.
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub items: Vec<T>,
+    /// Artifact batch size to run (>= items.len()).
+    pub exec_size: usize,
+}
+
+impl<T> Batch<T> {
+    pub fn padding(&self) -> usize {
+        self.exec_size - self.items.len()
+    }
+}
+
+/// Thread-safe dynamic batcher over any payload type.
+pub struct Batcher<T> {
+    inner: Mutex<State<T>>,
+    cv: Condvar,
+    /// Exported batch sizes, ascending (e.g. [1, 4, 8]).
+    sizes: Vec<usize>,
+    max_wait: Duration,
+}
+
+struct State<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Batcher<T> {
+    /// `sizes` must be non-empty; they are sorted ascending internally.
+    pub fn new(mut sizes: Vec<usize>, max_wait: Duration) -> Self {
+        assert!(!sizes.is_empty(), "need at least one exported batch size");
+        sizes.sort_unstable();
+        sizes.dedup();
+        Batcher {
+            inner: Mutex::new(State { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            sizes,
+            max_wait,
+        }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    /// Enqueue one item. Returns false if the batcher is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.inner.lock().unwrap();
+        if st.closed {
+            return false;
+        }
+        st.queue.push_back(item);
+        drop(st);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Close the queue: pending items still drain, pushes are rejected,
+    /// and `next_batch` returns None once empty.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Current queue depth (for backpressure decisions).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Smallest exported size >= n, or the largest if n exceeds all.
+    fn size_for(&self, n: usize) -> usize {
+        for &s in &self.sizes {
+            if s >= n {
+                return s;
+            }
+        }
+        self.max_batch()
+    }
+
+    /// Blocking: assemble the next batch (None after close+drain).
+    pub fn next_batch(&self) -> Option<Batch<T>> {
+        let mut st = self.inner.lock().unwrap();
+        // Phase 1: wait for at least one item.
+        loop {
+            if !st.queue.is_empty() {
+                break;
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+        // Phase 2: give laggards `max_wait` to fill the largest batch.
+        let deadline = Instant::now() + self.max_wait;
+        while st.queue.len() < self.max_batch() && !st.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, timeout) =
+                self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = st.queue.len().min(self.max_batch());
+        let exec_size = self.size_for(take);
+        let items: Vec<T> = st.queue.drain(..take).collect();
+        Some(Batch { items, exec_size })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop::{forall, Config};
+    use std::sync::Arc;
+
+    #[test]
+    fn batches_respect_exported_sizes() {
+        let b = Batcher::new(vec![4, 1, 8], Duration::from_millis(0));
+        for i in 0..6 {
+            assert!(b.push(i));
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.items.len(), 6);
+        assert_eq!(batch.exec_size, 8);
+        assert_eq!(batch.padding(), 2);
+    }
+
+    #[test]
+    fn full_queue_takes_largest_batch_without_waiting() {
+        let b = Batcher::new(vec![1, 4], Duration::from_secs(60));
+        for i in 0..9 {
+            b.push(i);
+        }
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        assert_eq!(batch.items, vec![0, 1, 2, 3]);
+        assert_eq!(batch.exec_size, 4);
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let b = Batcher::new(vec![2], Duration::from_millis(1));
+        b.push(1);
+        b.close();
+        assert!(!b.push(2), "push after close must be rejected");
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.items, vec![1]);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn waits_for_laggards_up_to_deadline() {
+        let b = Arc::new(Batcher::new(vec![1, 2], Duration::from_millis(200)));
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            b2.push(2u32);
+        });
+        b.push(1u32);
+        let batch = b.next_batch().unwrap();
+        t.join().unwrap();
+        assert_eq!(batch.items, vec![1, 2], "laggard should join the batch");
+    }
+
+    #[test]
+    fn prop_no_drop_dup_or_reorder() {
+        forall(Config::cases(40), |rng| {
+            let mut sizes = vec![1usize];
+            if rng.chance(0.7) {
+                sizes.push(rng.range(2, 6));
+            }
+            if rng.chance(0.5) {
+                sizes.push(rng.range(7, 12));
+            }
+            let b = Batcher::new(sizes.clone(), Duration::from_millis(0));
+            let n = rng.range(1, 64);
+            for i in 0..n {
+                b.push(i);
+            }
+            b.close();
+            let mut got = Vec::new();
+            while let Some(batch) = b.next_batch() {
+                assert!(batch.items.len() <= *sizes.iter().max().unwrap());
+                assert!(
+                    sizes.contains(&batch.exec_size),
+                    "exec size {} not exported {:?}",
+                    batch.exec_size,
+                    sizes
+                );
+                assert!(batch.exec_size >= batch.items.len());
+                got.extend(batch.items);
+            }
+            assert_eq!(got, (0..n).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn prop_concurrent_producers_lose_nothing() {
+        forall(Config::cases(10), |rng| {
+            let b = Arc::new(Batcher::new(
+                vec![1, 4, 8],
+                Duration::from_micros(rng.range(0, 500) as u64),
+            ));
+            let producers = rng.range(1, 4);
+            let per = rng.range(1, 32);
+            let mut handles = Vec::new();
+            for p in 0..producers {
+                let b = b.clone();
+                handles.push(std::thread::spawn(move || {
+                    for i in 0..per {
+                        b.push(p * 1000 + i);
+                    }
+                }));
+            }
+            let consumer = {
+                let b = b.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(batch) = b.next_batch() {
+                        got.extend(batch.items);
+                    }
+                    got
+                })
+            };
+            for h in handles {
+                h.join().unwrap();
+            }
+            b.close();
+            let mut got = consumer.join().unwrap();
+            got.sort_unstable();
+            let mut want: Vec<usize> = (0..producers)
+                .flat_map(|p| (0..per).map(move |i| p * 1000 + i))
+                .collect();
+            want.sort_unstable();
+            assert_eq!(got, want);
+        });
+    }
+}

@@ -1,0 +1,125 @@
+//! Serving metrics: lock-free counters + a coarse latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Histogram buckets in microseconds (powers of two up to ~8 s).
+const BUCKETS: usize = 24;
+
+/// Shared serving metrics. All methods are thread-safe.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+    pub padded_slots: AtomicU64,
+    /// Eq. 2–3 accounting, summed over responses.
+    pub dense_bytes: AtomicU64,
+    pub stored_bytes: AtomicU64,
+    pub index_bytes: AtomicU64,
+    latency_us: [AtomicU64; BUCKETS],
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency_us(&self, us: u64) {
+        let b = (64 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1);
+        self.latency_us[b].fetch_add(1, Ordering::Relaxed);
+        self.responses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Approximate percentile from the histogram (bucket upper bound).
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let counts: Vec<u64> = self
+            .latency_us
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * p).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << i;
+            }
+        }
+        1u64 << (BUCKETS - 1)
+    }
+
+    /// Mean batch occupancy (items per executed batch).
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_items.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Measured bandwidth reduction % across all served requests.
+    pub fn reduction_pct(&self) -> f64 {
+        let d = self.dense_bytes.load(Ordering::Relaxed) as f64;
+        if d == 0.0 {
+            return 0.0;
+        }
+        let s = self.stored_bytes.load(Ordering::Relaxed) as f64;
+        let i = self.index_bytes.load(Ordering::Relaxed) as f64;
+        100.0 * (1.0 - (s + i) / d)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} responses={} batches={} mean_batch={:.2} \
+             padded={} p50={}us p99={}us bw_reduction={:.1}%",
+            self.requests.load(Ordering::Relaxed),
+            self.responses.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch(),
+            self.padded_slots.load(Ordering::Relaxed),
+            self.latency_percentile_us(0.5),
+            self.latency_percentile_us(0.99),
+            self.reduction_pct(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_track_recorded_values() {
+        let m = Metrics::new();
+        for _ in 0..90 {
+            m.record_latency_us(100); // bucket ~128
+        }
+        for _ in 0..10 {
+            m.record_latency_us(100_000); // bucket ~131072
+        }
+        assert!(m.latency_percentile_us(0.5) <= 256);
+        assert!(m.latency_percentile_us(0.99) >= 65_536);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_percentile_us(0.99), 0);
+        assert_eq!(m.mean_batch(), 0.0);
+        assert_eq!(m.reduction_pct(), 0.0);
+    }
+
+    #[test]
+    fn reduction_math() {
+        let m = Metrics::new();
+        m.dense_bytes.store(1000, Ordering::Relaxed);
+        m.stored_bytes.store(400, Ordering::Relaxed);
+        m.index_bytes.store(100, Ordering::Relaxed);
+        assert!((m.reduction_pct() - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,22 @@
+//! Layer-3 coordinator: the serving pipeline that runs the AOT Zebra
+//! models from Rust with Python entirely out of the request path.
+//!
+//! Request flow: [`Server::submit`] -> [`batcher::Batcher`] (dynamic
+//! batching to the exported artifact batch sizes) -> worker thread ->
+//! [`crate::runtime::ModelHandle::run`] (PJRT) -> per-request
+//! [`server::Response`] with logits and Eq. 2–3 bandwidth accounting
+//! derived from the model's own mask outputs.
+//!
+//! Built on std threads + channels (tokio is not in the offline vendor
+//! set — DESIGN.md §7); at CPU-PJRT speeds a worker thread per client
+//! plus one executor thread is far from the bottleneck.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{Batch, Batcher};
+pub use metrics::Metrics;
+pub use server::{
+    BatchExecutor, PjrtExecutor, Request, Response, Server, ServerConfig,
+};

@@ -1,0 +1,509 @@
+//! The serving pipeline: request intake -> dynamic batcher -> executor
+//! worker(s) -> per-request responses with bandwidth accounting.
+//!
+//! The executor is abstracted behind [`BatchExecutor`] so the pipeline
+//! is testable without PJRT (tests use a closure executor); production
+//! wires it to [`crate::runtime::Runtime`] via [`PjrtExecutor`].
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::batcher::Batcher;
+use super::metrics::Metrics;
+use crate::runtime::{ModelOutput, Runtime};
+use crate::tensor::Tensor;
+use crate::zebra::bandwidth::ELEM_BITS;
+
+/// One classification request: a normalized (3, H, W) image.
+pub struct Request {
+    pub id: u64,
+    pub image: Tensor,
+    pub enqueued: Instant,
+    pub reply: Sender<Response>,
+}
+
+/// The response: logits + the request's bandwidth accounting.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Class logits for this image.
+    pub logits: Vec<f32>,
+    pub predicted: usize,
+    /// Eq. 2–3 accounting for this image's activation spills.
+    pub dense_bytes: u64,
+    pub stored_bytes: u64,
+    pub index_bytes: u64,
+    pub latency: Duration,
+}
+
+impl Response {
+    pub fn reduction_pct(&self) -> f64 {
+        if self.dense_bytes == 0 {
+            return 0.0;
+        }
+        100.0 * (1.0
+            - (self.stored_bytes + self.index_bytes) as f64
+                / self.dense_bytes as f64)
+    }
+}
+
+/// Runs one padded batch tensor, returns logits + masks.
+pub trait BatchExecutor: Send + Sync {
+    /// `x` is `(exec_size, 3, H, W)`; returns outputs for all slots.
+    fn execute(&self, x: &Tensor) -> Result<ModelOutput>;
+    /// Batch sizes this executor supports, ascending.
+    fn batch_sizes(&self) -> Vec<usize>;
+    /// Image spatial size.
+    fn image_hw(&self) -> usize;
+}
+
+/// Production executor. The `xla` crate's PJRT handles are `!Send`
+/// (Rc + raw pointers), so all PJRT state lives on ONE dedicated
+/// executor thread; this handle talks to it over channels and is
+/// therefore freely shareable with the batcher workers.
+pub struct PjrtExecutor {
+    tx: std::sync::Mutex<Sender<ExecJob>>,
+    sizes: Vec<usize>,
+    hw: usize,
+}
+
+struct ExecJob {
+    x: Tensor,
+    reply: Sender<Result<ModelOutput>>,
+}
+
+impl PjrtExecutor {
+    /// Spawn the PJRT thread over `artifacts` and eagerly compile every
+    /// exported batch variant of `key` so serving never hits a compile
+    /// stall mid-request.
+    pub fn new(
+        artifacts: std::path::PathBuf,
+        key: &str,
+    ) -> Result<Self> {
+        // Metadata comes from the manifest (pure JSON — no PJRT needed
+        // on this thread).
+        let manifest = crate::runtime::Manifest::load(&artifacts)?;
+        let mut sizes: Vec<usize> = manifest
+            .variants(key)
+            .iter()
+            .map(|m| m.batch)
+            .collect();
+        sizes.sort_unstable();
+        anyhow::ensure!(!sizes.is_empty(), "no artifacts for model {key}");
+        let hw = *manifest.variants(key)[0]
+            .input
+            .last()
+            .context("bad input shape")?;
+
+        let (tx, rx) = channel::<ExecJob>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let key = key.to_string();
+        let szs = sizes.clone();
+        std::thread::spawn(move || {
+            pjrt_thread(artifacts, key, szs, rx, ready_tx)
+        });
+        ready_rx
+            .recv()
+            .context("PJRT thread died during startup")??;
+        Ok(PjrtExecutor { tx: std::sync::Mutex::new(tx), sizes, hw })
+    }
+}
+
+fn pjrt_thread(
+    artifacts: std::path::PathBuf,
+    key: String,
+    sizes: Vec<usize>,
+    rx: Receiver<ExecJob>,
+    ready: Sender<Result<()>>,
+) {
+    let init = (|| -> Result<Runtime> {
+        let rt = Runtime::new(&artifacts)?;
+        for b in &sizes {
+            rt.model_for_batch(&key, *b)?;
+        }
+        Ok(rt)
+    })();
+    let rt = match init {
+        Ok(rt) => {
+            let _ = ready.send(Ok(()));
+            rt
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(job) = rx.recv() {
+        let b = job.x.shape()[0];
+        let out = rt
+            .model_for_batch(&key, b)
+            .and_then(|handle| handle.run(&job.x));
+        let _ = job.reply.send(out);
+    }
+}
+
+impl BatchExecutor for PjrtExecutor {
+    fn execute(&self, x: &Tensor) -> Result<ModelOutput> {
+        let (reply, rx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(ExecJob { x: x.clone(), reply })
+            .map_err(|_| anyhow!("PJRT executor thread is gone"))?;
+        rx.recv().context("PJRT executor dropped the job")?
+    }
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.sizes.clone()
+    }
+    fn image_hw(&self) -> usize {
+        self.hw
+    }
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Batching window.
+    pub max_wait: Duration,
+    /// Executor worker threads (1 is right for the CPU PJRT client).
+    pub workers: usize,
+    /// Reject pushes beyond this queue depth (backpressure).
+    pub max_queue: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_wait: Duration::from_millis(2),
+            workers: 1,
+            max_queue: 1024,
+        }
+    }
+}
+
+/// The coordinator server.
+pub struct Server {
+    batcher: Arc<Batcher<Request>>,
+    pub metrics: Arc<Metrics>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    next_id: std::sync::atomic::AtomicU64,
+    max_queue: usize,
+}
+
+impl Server {
+    pub fn start(exec: Arc<dyn BatchExecutor>, cfg: ServerConfig) -> Server {
+        let batcher =
+            Arc::new(Batcher::new(exec.batch_sizes(), cfg.max_wait));
+        let metrics = Arc::new(Metrics::new());
+        let mut workers = Vec::new();
+        for _ in 0..cfg.workers.max(1) {
+            let b = batcher.clone();
+            let m = metrics.clone();
+            let e = exec.clone();
+            workers.push(std::thread::spawn(move || worker_loop(b, e, m)));
+        }
+        Server {
+            batcher,
+            metrics,
+            workers,
+            next_id: std::sync::atomic::AtomicU64::new(0),
+            max_queue: cfg.max_queue,
+        }
+    }
+
+    /// Submit an image; the response arrives on the returned channel.
+    /// Errors immediately under backpressure (queue full) or shutdown.
+    pub fn submit(&self, image: Tensor) -> Result<Receiver<Response>> {
+        if self.batcher.depth() >= self.max_queue {
+            return Err(anyhow!("queue full ({} pending)", self.max_queue));
+        }
+        let (tx, rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let ok = self.batcher.push(Request {
+            id,
+            image,
+            enqueued: Instant::now(),
+            reply: tx,
+        });
+        anyhow::ensure!(ok, "server is shut down");
+        Ok(rx)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn classify(&self, image: Tensor) -> Result<Response> {
+        let rx = self.submit(image)?;
+        rx.recv().context("server dropped the request")
+    }
+
+    /// Drain and stop all workers.
+    pub fn shutdown(mut self) {
+        self.batcher.close();
+        for w in self.workers.drain(..) {
+            w.join().ok();
+        }
+    }
+}
+
+fn worker_loop(
+    batcher: Arc<Batcher<Request>>,
+    exec: Arc<dyn BatchExecutor>,
+    metrics: Arc<Metrics>,
+) {
+    let hw = exec.image_hw();
+    while let Some(batch) = batcher.next_batch() {
+        let n = batch.items.len();
+        let exec_size = batch.exec_size;
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics.batched_items.fetch_add(n as u64, Ordering::Relaxed);
+        metrics
+            .padded_slots
+            .fetch_add(batch.padding() as u64, Ordering::Relaxed);
+        // Assemble the padded batch tensor.
+        let mut x = Tensor::zeros(&[exec_size, 3, hw, hw]);
+        let per = 3 * hw * hw;
+        for (i, req) in batch.items.iter().enumerate() {
+            let src = req.image.data();
+            x.data_mut()[i * per..(i + 1) * per].copy_from_slice(src);
+        }
+        match exec.execute(&x) {
+            Ok(out) => respond(batch.items, &out, &metrics),
+            Err(e) => {
+                // Failed batch: drop the reply channels; callers see a
+                // RecvError. Metrics still count the attempt.
+                eprintln!("[server] batch of {n} failed: {e:#}");
+            }
+        }
+    }
+}
+
+fn respond(items: Vec<Request>, out: &ModelOutput, metrics: &Metrics) {
+    let classes = out.logits.shape()[1];
+    for (i, req) in items.into_iter().enumerate() {
+        let logits =
+            out.logits.data()[i * classes..(i + 1) * classes].to_vec();
+        let predicted = argmax(&logits);
+        // Per-image bandwidth accounting from this request's mask rows
+        // (Eq. 2: kept blocks * B^2 * 4 bytes; Eq. 3: 1 bit per block).
+        let (mut dense, mut stored, mut index) = (0u64, 0u64, 0u64);
+        for (mi, m) in out.masks.iter().enumerate() {
+            let s = m.shape(); // (batch, C, H/b, W/b)
+            let blocks: usize = s[1] * s[2] * s[3];
+            let row = &m.data()[i * blocks..(i + 1) * blocks];
+            let kept: usize = row.iter().filter(|&&v| v != 0.0).count();
+            let elems_per_block =
+                out.block_elems.get(mi).copied().unwrap_or(16);
+            let bytes_per_block = elems_per_block * ELEM_BITS / 8;
+            dense += (blocks * bytes_per_block) as u64;
+            stored += (kept * bytes_per_block) as u64;
+            index += blocks.div_ceil(8) as u64;
+        }
+        metrics.dense_bytes.fetch_add(dense, Ordering::Relaxed);
+        metrics.stored_bytes.fetch_add(stored, Ordering::Relaxed);
+        metrics.index_bytes.fetch_add(index, Ordering::Relaxed);
+        let latency = req.enqueued.elapsed();
+        metrics.record_latency_us(latency.as_micros() as u64);
+        let _ = req.reply.send(Response {
+            id: req.id,
+            logits,
+            predicted,
+            dense_bytes: dense,
+            stored_bytes: stored,
+            index_bytes: index,
+            latency,
+        });
+    }
+}
+
+fn argmax(v: &[f32]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop::{forall, Config};
+
+    /// Mock model: "logits" = [mean, -mean]; one 2x2-blocked mask layer
+    /// where a block is kept iff the image mean > 0.5.
+    struct MockExec {
+        hw: usize,
+        sizes: Vec<usize>,
+        delay: Duration,
+    }
+
+    impl BatchExecutor for MockExec {
+        fn execute(&self, x: &Tensor) -> Result<ModelOutput> {
+            std::thread::sleep(self.delay);
+            let b = x.shape()[0];
+            let per = 3 * self.hw * self.hw;
+            let mut logits = Vec::with_capacity(b * 2);
+            let mut mask = Vec::new();
+            for i in 0..b {
+                let mean: f32 = x.data()[i * per..(i + 1) * per]
+                    .iter()
+                    .sum::<f32>()
+                    / per as f32;
+                logits.extend_from_slice(&[mean, -mean]);
+                let kept = if mean > 0.5 { 1.0 } else { 0.0 };
+                mask.extend(std::iter::repeat(kept).take(4)); // C=1, 2x2 grid
+            }
+            Ok(ModelOutput {
+                logits: Tensor::from_vec(&[b, 2], logits),
+                masks: vec![Tensor::from_vec(&[b, 1, 2, 2], mask)],
+                block_elems: vec![4],
+            })
+        }
+        fn batch_sizes(&self) -> Vec<usize> {
+            self.sizes.clone()
+        }
+        fn image_hw(&self) -> usize {
+            self.hw
+        }
+    }
+
+    fn image(hw: usize, fill: f32) -> Tensor {
+        Tensor::from_vec(&[3, hw, hw], vec![fill; 3 * hw * hw])
+    }
+
+    #[test]
+    fn classify_routes_logits_back() {
+        let exec = Arc::new(MockExec {
+            hw: 4,
+            sizes: vec![1, 4],
+            delay: Duration::ZERO,
+        });
+        let srv = Server::start(exec, ServerConfig::default());
+        let r = srv.classify(image(4, 0.9)).unwrap();
+        assert_eq!(r.predicted, 0, "positive mean -> class 0");
+        assert!((r.logits[0] - 0.9).abs() < 1e-5);
+        let r2 = srv.classify(image(4, -0.9)).unwrap();
+        assert_eq!(r2.predicted, 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn bandwidth_accounting_per_request() {
+        let exec = Arc::new(MockExec {
+            hw: 4,
+            sizes: vec![1],
+            delay: Duration::ZERO,
+        });
+        let srv = Server::start(exec, ServerConfig::default());
+        // Bright image: all 4 blocks kept -> stored == dense.
+        let r = srv.classify(image(4, 0.9)).unwrap();
+        assert_eq!(r.dense_bytes, 4 * 4 * 4); // 4 blocks * 4 elems * 4B
+        assert_eq!(r.stored_bytes, r.dense_bytes);
+        // Dark image: everything pruned -> only index bytes remain.
+        let r2 = srv.classify(image(4, 0.1)).unwrap();
+        assert_eq!(r2.stored_bytes, 0);
+        assert_eq!(r2.index_bytes, 1);
+        assert!(r2.reduction_pct() > 95.0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn batches_fill_under_concurrent_load() {
+        let exec = Arc::new(MockExec {
+            hw: 4,
+            sizes: vec![1, 4, 8],
+            delay: Duration::from_millis(3),
+        });
+        let srv = Arc::new(Server::start(
+            exec,
+            ServerConfig {
+                max_wait: Duration::from_millis(10),
+                workers: 1,
+                max_queue: 1024,
+            },
+        ));
+        let mut waiters = Vec::new();
+        for _ in 0..32 {
+            waiters.push(srv.submit(image(4, 0.7)).unwrap());
+        }
+        for rx in waiters {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.predicted, 0);
+        }
+        assert!(
+            srv.metrics.mean_batch() > 1.5,
+            "batching should engage under load: mean {}",
+            srv.metrics.mean_batch()
+        );
+        Arc::try_unwrap(srv).ok().map(|s| s.shutdown());
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let exec = Arc::new(MockExec {
+            hw: 4,
+            sizes: vec![1],
+            delay: Duration::from_millis(50),
+        });
+        let srv = Server::start(
+            exec,
+            ServerConfig {
+                max_wait: Duration::ZERO,
+                workers: 1,
+                max_queue: 2,
+            },
+        );
+        let _a = srv.submit(image(4, 0.5)).unwrap();
+        let _b = srv.submit(image(4, 0.5)).unwrap();
+        let _c = srv.submit(image(4, 0.5)).unwrap();
+        // Queue is at capacity (worker holds one, two waiting).
+        let mut rejected = false;
+        for _ in 0..4 {
+            if srv.submit(image(4, 0.5)).is_err() {
+                rejected = true;
+                break;
+            }
+        }
+        assert!(rejected, "expected backpressure rejection");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn prop_every_request_gets_its_own_answer() {
+        forall(Config::cases(8), |rng: &mut Rng| {
+            let exec = Arc::new(MockExec {
+                hw: 2,
+                sizes: vec![1, rng.range(2, 5)],
+                delay: Duration::from_micros(rng.range(0, 300) as u64),
+            });
+            let srv = Arc::new(Server::start(
+                exec,
+                ServerConfig {
+                    max_wait: Duration::from_micros(rng.range(0, 500) as u64),
+                    workers: 1,
+                    max_queue: 4096,
+                },
+            ));
+            let n = rng.range(1, 24);
+            let fills: Vec<f32> =
+                (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+            let rxs: Vec<_> = fills
+                .iter()
+                .map(|&f| srv.submit(image(2, f)).unwrap())
+                .collect();
+            for (f, rx) in fills.iter().zip(rxs) {
+                let r = rx.recv().unwrap();
+                assert!(
+                    (r.logits[0] - f).abs() < 1e-4,
+                    "answer mismatched request: want {f}, got {}",
+                    r.logits[0]
+                );
+            }
+            Arc::try_unwrap(srv).ok().map(|s| s.shutdown());
+        });
+    }
+}

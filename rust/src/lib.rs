@@ -1,0 +1,55 @@
+//! # Zebra — memory-bandwidth reduction for CNN accelerators
+//!
+//! Rust reproduction of *"Zebra: Memory Bandwidth Reduction for CNN
+//! Accelerators with Zero Block Regularization of Activation Maps"*
+//! (Shih & Chang, ISCAS 2020), built as a three-layer Rust + JAX +
+//! Pallas stack (see DESIGN.md):
+//!
+//! - **Layer 1** (`python/compile/kernels/`): the fused ReLU+Zebra
+//!   block-prune op and the MXU-tiled GEMM as Pallas kernels.
+//! - **Layer 2** (`python/compile/`): the model zoo (VGG16, ResNet-18/56,
+//!   MobileNet) with Zebra's learned-threshold training, AOT-lowered to
+//!   HLO text.
+//! - **Layer 3** (this crate): everything after `make artifacts` —
+//!   Python never runs on the request path.
+//!
+//! Crate layout:
+//! - [`tensor`] — NCHW tensors + `.zten` interchange with Python.
+//! - [`zebra`] — block geometry, the pruning hot path, Eq. 2–5 math.
+//! - [`compress`] — the zero-block codec and the paper's baselines.
+//! - [`models`] — static spill plans (incl. the paper's full-width
+//!   architectures for Table V).
+//! - [`trace`] — replaying Python-dumped activation traces.
+//! - [`accel`] — the layer-by-layer accelerator simulator (PE array,
+//!   SRAM, DRAM bursts) that turns zero blocks into bytes-on-the-wire.
+//! - [`runtime`] — PJRT loading/execution of the AOT HLO artifacts.
+//! - [`coordinator`] — the serving pipeline: dynamic batcher, worker
+//!   pool, per-request bandwidth metering.
+//! - [`bench`] — the in-repo benchmarking harness (criterion is not in
+//!   the offline vendor set) used by every table/figure regenerator.
+//! - [`cli`] — the `zebra` binary's subcommands.
+//! - [`util`] — JSON, PRNG and property-testing support.
+
+pub mod accel;
+pub mod bench;
+pub mod cli;
+pub mod compress;
+pub mod coordinator;
+pub mod models;
+pub mod runtime;
+pub mod tensor;
+pub mod trace;
+pub mod util;
+pub mod zebra;
+
+/// Crate version (used by the CLI).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Locate the artifacts directory: `$ZEBRA_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("ZEBRA_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| "artifacts".into())
+}

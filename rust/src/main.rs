@@ -1,0 +1,9 @@
+//! `zebra` binary — see `zebra help` (rust/src/cli/mod.rs).
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = zebra::cli::run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

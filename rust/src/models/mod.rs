@@ -1,0 +1,232 @@
+//! Static network descriptions: per-layer DRAM spill plans.
+//!
+//! The Python side exports each architecture's spill plan (layer name,
+//! C/H/W, Zebra block size) into `artifacts/manifest.json` — both at
+//! the trained width and at the paper's width=1.0 ("paper" tag, used by
+//! the Table V arithmetic). This module parses those plans and also
+//! provides built-in width-1.0 plans so Table V runs artifact-free.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+use crate::zebra::bandwidth::SpillShape;
+
+/// A named spill plan (one network on one dataset).
+#[derive(Debug, Clone)]
+pub struct SpillPlan {
+    pub name: String,
+    pub spills: Vec<SpillShape>,
+}
+
+impl SpillPlan {
+    /// Total dense activation bytes per image ("required bandwidth").
+    pub fn required_bytes(&self) -> f64 {
+        self.spills.iter().map(|s| s.dense_bytes() as f64).sum()
+    }
+
+    /// Total index bytes per image (Eq. 3 summed over layers).
+    pub fn index_bytes(&self) -> f64 {
+        self.spills.iter().map(|s| s.index_bytes()).sum()
+    }
+}
+
+/// Parse one spill-plan array from manifest JSON.
+pub fn plan_from_json(name: &str, v: &Value) -> Result<SpillPlan> {
+    let arr = v
+        .as_array()
+        .with_context(|| format!("spec {name} is not an array"))?;
+    let mut spills = Vec::with_capacity(arr.len());
+    for (i, e) in arr.iter().enumerate() {
+        let get = |k: &str| -> Result<usize> {
+            e.get(k)
+                .as_usize()
+                .with_context(|| format!("spec {name}[{i}] missing {k}"))
+        };
+        spills.push(SpillShape {
+            name: e
+                .get("name")
+                .as_str()
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("l{i}")),
+            c: get("c")?,
+            h: get("h")?,
+            w: get("w")?,
+            block: get("block")?,
+        });
+    }
+    if spills.is_empty() {
+        bail!("spec {name} has no spills");
+    }
+    Ok(SpillPlan { name: name.to_string(), spills })
+}
+
+/// The paper's block-size rule (mirrors `models.zebra_block_for`).
+fn block_for(hw: usize, default_block: usize) -> usize {
+    default_block.min(hw).max(1)
+}
+
+fn push(spills: &mut Vec<SpillShape>, name: String, c: usize, hw: usize,
+        blk: usize) {
+    spills.push(SpillShape {
+        name,
+        c,
+        h: hw,
+        w: hw,
+        block: block_for(hw, blk),
+    });
+}
+
+/// Built-in width-1.0 ResNet-18 spill plan (CIFAR-style stem).
+pub fn resnet18_paper(in_hw: usize, block: usize) -> SpillPlan {
+    let mut spills = Vec::new();
+    let mut hw = in_hw;
+    push(&mut spills, "stem".into(), 64, hw, block);
+    for (si, (c, stride, blocks)) in
+        [(64, 1, 2), (128, 2, 2), (256, 2, 2), (512, 2, 2)]
+            .into_iter()
+            .enumerate()
+    {
+        for b in 0..blocks {
+            if b == 0 {
+                hw /= stride;
+            }
+            push(&mut spills, format!("s{si}b{b}.a"), c, hw, block);
+            push(&mut spills, format!("s{si}b{b}.out"), c, hw, block);
+        }
+    }
+    SpillPlan { name: format!("resnet18-{in_hw}"), spills }
+}
+
+/// Built-in width-1.0 VGG16 spill plan.
+pub fn vgg16_paper(in_hw: usize, block: usize) -> SpillPlan {
+    let cfg: [&[usize]; 5] = [
+        &[64, 64],
+        &[128, 128],
+        &[256, 256, 256],
+        &[512, 512, 512],
+        &[512, 512, 512],
+    ];
+    let mut spills = Vec::new();
+    let mut hw = in_hw;
+    for (gi, group) in cfg.iter().enumerate() {
+        for (ci, &c) in group.iter().enumerate() {
+            push(&mut spills, format!("g{gi}c{ci}"), c, hw, block);
+        }
+        hw /= 2; // maxpool after each group
+    }
+    SpillPlan { name: format!("vgg16-{in_hw}"), spills }
+}
+
+/// Built-in width-1.0 ResNet-56 spill plan (16/32/64 channels).
+pub fn resnet56_paper(in_hw: usize, block: usize) -> SpillPlan {
+    let mut spills = Vec::new();
+    let mut hw = in_hw;
+    push(&mut spills, "stem".into(), 16, hw, block);
+    for (si, (c, stride)) in [(16, 1), (32, 2), (64, 2)].into_iter().enumerate()
+    {
+        for b in 0..9 {
+            if b == 0 {
+                hw /= stride;
+            }
+            push(&mut spills, format!("s{si}b{b}.a"), c, hw, block);
+            push(&mut spills, format!("s{si}b{b}.out"), c, hw, block);
+        }
+    }
+    SpillPlan { name: format!("resnet56-{in_hw}"), spills }
+}
+
+/// Built-in width-1.0 MobileNetV1 spill plan.
+pub fn mobilenet_paper(in_hw: usize, block: usize) -> SpillPlan {
+    let mut spills = Vec::new();
+    let mut hw = in_hw;
+    let mut c = 32;
+    push(&mut spills, "stem".into(), c, hw, block);
+    let chain: [(usize, usize); 13] = [
+        (64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2),
+        (512, 1), (512, 1), (512, 1), (512, 1), (512, 1), (1024, 2),
+        (1024, 1),
+    ];
+    for (i, (cout, stride)) in chain.into_iter().enumerate() {
+        hw /= stride;
+        push(&mut spills, format!("d{i}.dw"), c, hw, block);
+        push(&mut spills, format!("d{i}.pw"), cout, hw, block);
+        c = cout;
+    }
+    SpillPlan { name: format!("mobilenet-{in_hw}"), spills }
+}
+
+/// Built-in plan lookup: ("resnet18", 32, 4) etc.
+pub fn paper_plan(arch: &str, in_hw: usize, block: usize) -> Result<SpillPlan> {
+    Ok(match arch {
+        "resnet18" => resnet18_paper(in_hw, block),
+        "resnet56" => resnet56_paper(in_hw, block),
+        "vgg16" => vgg16_paper(in_hw, block),
+        "mobilenet" => mobilenet_paper(in_hw, block),
+        other => bail!("unknown arch {other}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn resnet18_cifar_matches_paper_table5() {
+        // Paper Table V: required ~2.06 MB, overhead ~4.13 KB (0.2%).
+        let p = resnet18_paper(32, 4);
+        assert_eq!(p.spills.len(), 17);
+        let mb = p.required_bytes() / (1024.0 * 1024.0);
+        assert!((mb - 2.13).abs() < 0.03, "required {mb:.3} MiB");
+        let kb = p.index_bytes() / 1024.0;
+        assert!((kb - 4.25).abs() < 0.06, "overhead {kb:.3} KiB");
+    }
+
+    #[test]
+    fn resnet18_tiny_is_4x_cifar() {
+        let c = resnet18_paper(32, 4);
+        let t = resnet18_paper(64, 8);
+        let ratio = t.required_bytes() / c.required_bytes();
+        assert!((ratio - 4.0).abs() < 1e-9, "ratio {ratio}");
+        // Block 8 vs 4: same block count per map (4x area / 4x block
+        // elems), so index overhead matches CIFAR in absolute bytes and
+        // is ~4x smaller relatively (paper: 0.2% -> 0.04%).
+        let rel_c = c.index_bytes() / c.required_bytes();
+        let rel_t = t.index_bytes() / t.required_bytes();
+        assert!((rel_c / rel_t - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vgg16_block_rule_shrinks_deep_layers() {
+        let p = vgg16_paper(32, 4);
+        // Deepest group is 2x2 maps -> block must shrink to 2.
+        let last = p.spills.last().unwrap();
+        assert_eq!(last.h, 2);
+        assert_eq!(last.block, 2);
+    }
+
+    #[test]
+    fn all_archs_have_plausible_sizes() {
+        for arch in ["resnet18", "resnet56", "vgg16", "mobilenet"] {
+            let p = paper_plan(arch, 32, 4).unwrap();
+            assert!(p.required_bytes() > 100_000.0, "{arch} too small");
+            assert!(p.index_bytes() / p.required_bytes() < 0.01);
+        }
+        assert!(paper_plan("alexnet", 32, 4).is_err());
+    }
+
+    #[test]
+    fn plan_from_json_parses_manifest_shape() {
+        let v = json::parse(
+            r#"[{"name":"s0","c":16,"h":32,"w":32,"block":4},
+                {"name":"s1","c":32,"h":16,"w":16,"block":4}]"#,
+        )
+        .unwrap();
+        let p = plan_from_json("t", &v).unwrap();
+        assert_eq!(p.spills.len(), 2);
+        assert_eq!(p.spills[0].c, 16);
+        assert_eq!(p.spills[1].block, 4);
+        assert!(plan_from_json("t", &json::parse("[]").unwrap()).is_err());
+        assert!(plan_from_json("t", &json::parse("{}").unwrap()).is_err());
+    }
+}

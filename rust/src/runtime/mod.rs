@@ -1,0 +1,361 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! The interchange is HLO *text* — `HloModuleProto::from_text_file`
+//! reassigns instruction ids, which sidesteps xla_extension 0.5.1's
+//! rejection of jax>=0.5's 64-bit-id serialized protos (see
+//! /opt/xla-example/README.md and DESIGN.md §2).
+//!
+//! [`Runtime`] owns one `PjRtClient` (CPU) and a cache of compiled
+//! executables keyed by artifact name, plus the manifest metadata the
+//! Python pipeline wrote. The coordinator's workers call
+//! [`ModelHandle::run`] with an NCHW input tensor and get back logits +
+//! the per-Zebra-layer block masks the model emits as extra outputs.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::{self, Value};
+
+/// Static description of one mask output (from the manifest).
+#[derive(Debug, Clone)]
+pub struct MaskInfo {
+    pub name: String,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub block: usize,
+}
+
+/// One AOT model variant (fixed batch size).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub key: String,
+    pub path: String,
+    pub batch: usize,
+    pub input: Vec<usize>,
+    pub zebra: bool,
+    pub t_obj: f64,
+    pub n_outputs: usize,
+    /// Weight-leaf count; the HLO's arguments are `w_0..w_{P-1}, x`.
+    pub n_weights: usize,
+    /// Directory (relative to artifacts/) holding `w%05d.zten` leaves.
+    pub weights_dir: String,
+    pub masks: Vec<MaskInfo>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: Vec<ModelMeta>,
+    pub raw: Value,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let raw = json::parse(&text).context("parsing manifest.json")?;
+        let mut models = Vec::new();
+        if let Some(arr) = raw.get("models").as_array() {
+            for m in arr {
+                models.push(parse_model(m)?);
+            }
+        }
+        Ok(Manifest { models, raw, dir })
+    }
+
+    /// Model variants for a key (e.g. "rn18-c10-t0.1"), all batches.
+    pub fn variants(&self, key: &str) -> Vec<&ModelMeta> {
+        self.models.iter().filter(|m| m.key == key).collect()
+    }
+
+    /// The spill plan exported under `specs` (e.g. "resnet18-cifar10-paper").
+    pub fn spec(&self, name: &str) -> Result<crate::models::SpillPlan> {
+        let v = self.raw.get("specs").get(name);
+        if v.is_null() {
+            bail!("manifest has no spec {name}");
+        }
+        crate::models::plan_from_json(name, v)
+    }
+}
+
+fn parse_model(m: &Value) -> Result<ModelMeta> {
+    let masks = m
+        .get("masks")
+        .as_array()
+        .map(|arr| {
+            arr.iter()
+                .map(|e| MaskInfo {
+                    name: e.get("name").as_str().unwrap_or("?").into(),
+                    c: e.get("c").as_usize().unwrap_or(0),
+                    h: e.get("h").as_usize().unwrap_or(0),
+                    w: e.get("w").as_usize().unwrap_or(0),
+                    block: e.get("block").as_usize().unwrap_or(1),
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    Ok(ModelMeta {
+        key: m.get("key").as_str().unwrap_or("").into(),
+        path: m
+            .get("path")
+            .as_str()
+            .context("model entry missing path")?
+            .into(),
+        batch: m.get("batch").as_usize().context("model missing batch")?,
+        input: m
+            .get("input")
+            .as_array()
+            .context("model missing input")?
+            .iter()
+            .filter_map(|v| v.as_usize())
+            .collect(),
+        zebra: m.get("zebra").as_bool().unwrap_or(false),
+        t_obj: m.get("t_obj").as_f64().unwrap_or(0.0),
+        n_outputs: m.get("n_outputs").as_usize().unwrap_or(1),
+        n_weights: m.get("n_weights").as_usize().unwrap_or(0),
+        weights_dir: m.get("weights_dir").as_str().unwrap_or("").into(),
+        masks,
+    })
+}
+
+/// One model's outputs for a batch.
+#[derive(Debug)]
+pub struct ModelOutput {
+    /// `(batch, classes)` logits.
+    pub logits: Tensor,
+    /// Per-Zebra-layer block masks, `(batch, C, H/B, W/B)` in {0,1}.
+    pub masks: Vec<Tensor>,
+    /// Elements per block (`B*B`) for each mask, from the manifest —
+    /// what converts mask counts into Eq. 2 bytes.
+    pub block_elems: Vec<usize>,
+}
+
+/// A compiled executable + its metadata + the device-resident weights
+/// (uploaded once at load; per-request executes only copy the input).
+pub struct ModelHandle {
+    pub meta: ModelMeta,
+    exe: xla::PjRtLoadedExecutable,
+    weights: Vec<xla::PjRtBuffer>,
+}
+
+impl ModelHandle {
+    /// Execute on a full batch. `x` must be `(batch, 3, H, W)` matching
+    /// the artifact's fixed batch.
+    pub fn run(&self, x: &Tensor) -> Result<ModelOutput> {
+        let want = &self.meta.input;
+        if x.shape() != &want[..] {
+            bail!("input shape {:?} != artifact shape {:?}", x.shape(), want);
+        }
+        let xbuf = self
+            .exe
+            .client()
+            .buffer_from_host_buffer::<f32>(x.data(), x.shape(), None)
+            .map_err(|e| anyhow!("uploading input: {e}"))?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        args.push(&xbuf);
+        let result = self.exe.execute_b(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        // AOT graphs are lowered with return_tuple=True.
+        let parts = out.to_tuple()?;
+        if parts.len() != self.meta.n_outputs {
+            bail!(
+                "artifact returned {} outputs, manifest says {}",
+                parts.len(),
+                self.meta.n_outputs
+            );
+        }
+        let mut it = parts.into_iter();
+        let logits = literal_to_tensor(&it.next().unwrap())?;
+        let mut masks = Vec::new();
+        for lit in it {
+            masks.push(literal_to_tensor(&lit)?);
+        }
+        let block_elems = self
+            .meta
+            .masks
+            .iter()
+            .map(|m| m.block * m.block)
+            .collect();
+        Ok(ModelOutput { logits, masks, block_elems })
+    }
+}
+
+fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+/// The PJRT runtime: client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<ModelHandle>>>,
+}
+
+impl Runtime {
+    /// CPU client over the artifacts directory.
+    pub fn new(artifacts: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&artifacts)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch cached) the model artifact `file` with metadata.
+    pub fn load_model(&self, meta: &ModelMeta) -> Result<std::sync::Arc<ModelHandle>> {
+        let key = meta.path.clone();
+        if let Some(h) = self.cache.lock().unwrap().get(&key) {
+            return Ok(h.clone());
+        }
+        let path = self.manifest.dir.join(&meta.path);
+        let handle = std::sync::Arc::new(ModelHandle {
+            meta: meta.clone(),
+            exe: self.compile_file(&path)?,
+            weights: self.upload_weights(meta)?,
+        });
+        self.cache.lock().unwrap().insert(key, handle.clone());
+        Ok(handle)
+    }
+
+    /// Upload the model's weight leaves (w%05d.zten, tree_flatten
+    /// order) as device buffers.
+    fn upload_weights(&self, meta: &ModelMeta) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut out = Vec::with_capacity(meta.n_weights);
+        let dir = self.manifest.dir.join(&meta.weights_dir);
+        for i in 0..meta.n_weights {
+            let path = dir.join(format!("w{i:05}.zten"));
+            let t = crate::tensor::read_zten(&path)
+                .with_context(|| format!("weight leaf {path:?}"))?;
+            let buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(t.data(), t.shape(), None)
+                .map_err(|e| anyhow!("uploading weight {i}: {e}"))?;
+            out.push(buf);
+        }
+        Ok(out)
+    }
+
+    /// Pick the variant of `key` with the given batch size.
+    pub fn model_for_batch(
+        &self,
+        key: &str,
+        batch: usize,
+    ) -> Result<std::sync::Arc<ModelHandle>> {
+        let meta = self
+            .manifest
+            .variants(key)
+            .into_iter()
+            .find(|m| m.batch == batch)
+            .with_context(|| format!("no artifact for {key} batch {batch}"))?
+            .clone();
+        self.load_model(&meta)
+    }
+
+    /// Metadata of any variant of `key` (they share everything except
+    /// batch size).
+    pub fn variants_meta(&self, key: &str) -> Result<ModelMeta> {
+        self.manifest
+            .variants(key)
+            .first()
+            .map(|m| (*m).clone())
+            .with_context(|| format!("no artifacts for model {key}"))
+    }
+
+    /// Batch sizes available for a model key, ascending.
+    pub fn batches_for(&self, key: &str) -> Vec<usize> {
+        let mut v: Vec<usize> =
+            self.manifest.variants(key).iter().map(|m| m.batch).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Compile a raw HLO text file (used for the kernel microbench too).
+    pub fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path:?}: {e}"))
+    }
+
+    /// Execute an arbitrary compiled kernel on f32 tensors, returning
+    /// all tuple outputs.
+    pub fn run_kernel(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[&Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> =
+                    t.shape().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(t.data())
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape: {e}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&lits)?;
+        let out = result[0][0].to_literal_sync()?;
+        out.to_tuple()?
+            .iter()
+            .map(literal_to_tensor)
+            .collect::<Result<Vec<_>>>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT-dependent paths are covered by `rust/tests/runtime_integration`
+    // (they need real artifacts); here we test the manifest parsing.
+
+    #[test]
+    fn parses_model_entry() {
+        let v = json::parse(
+            r#"{"path":"m.hlo.txt","batch":4,"input":[4,3,32,32],
+                "zebra":true,"t_obj":0.1,"n_outputs":3,
+                "masks":[{"name":"s0","c":16,"h":8,"w":8,"block":4},
+                         {"name":"s1","c":32,"h":4,"w":4,"block":4}],
+                "key":"rn18"}"#,
+        )
+        .unwrap();
+        let m = parse_model(&v).unwrap();
+        assert_eq!(m.batch, 4);
+        assert_eq!(m.input, vec![4, 3, 32, 32]);
+        assert_eq!(m.masks.len(), 2);
+        assert_eq!(m.masks[1].block, 4);
+        assert!(m.zebra);
+    }
+
+    #[test]
+    fn missing_fields_are_errors() {
+        let v = json::parse(r#"{"batch":1}"#).unwrap();
+        assert!(parse_model(&v).is_err());
+    }
+
+    #[test]
+    fn manifest_load_fails_cleanly_without_artifacts() {
+        let r = Manifest::load("/nonexistent/dir");
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

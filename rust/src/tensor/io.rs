@@ -1,0 +1,173 @@
+//! `.zten` binary IO — format shared with `python/compile/trace.py`:
+//!
+//! ```text
+//! magic  b"ZTEN"
+//! u32    version (1)
+//! u32    dtype   (0 = f32, 1 = u8, 2 = i32)
+//! u32    ndim
+//! u32[]  dims
+//! bytes  payload, row-major, little-endian
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Tensor;
+
+const MAGIC: &[u8; 4] = b"ZTEN";
+
+/// Element types the format carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32 = 0,
+    U8 = 1,
+    I32 = 2,
+}
+
+fn read_header(r: &mut impl Read, want: DType) -> Result<Vec<usize>> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("reading magic")?;
+    if &magic != MAGIC {
+        bail!("bad magic {magic:?} (not a .zten file)");
+    }
+    let mut word = [0u8; 4];
+    r.read_exact(&mut word)?;
+    let version = u32::from_le_bytes(word);
+    if version != 1 {
+        bail!("unsupported .zten version {version}");
+    }
+    r.read_exact(&mut word)?;
+    let dtype = u32::from_le_bytes(word);
+    if dtype != want as u32 {
+        bail!("dtype mismatch: file has {dtype}, wanted {:?}", want);
+    }
+    r.read_exact(&mut word)?;
+    let ndim = u32::from_le_bytes(word) as usize;
+    if ndim > 8 {
+        bail!("implausible ndim {ndim}");
+    }
+    let mut dims = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        r.read_exact(&mut word)?;
+        dims.push(u32::from_le_bytes(word) as usize);
+    }
+    Ok(dims)
+}
+
+/// Read an f32 `.zten` tensor.
+pub fn read_zten(path: impl AsRef<Path>) -> Result<Tensor> {
+    let path = path.as_ref();
+    let mut r = BufReader::new(
+        File::open(path).with_context(|| format!("opening {path:?}"))?,
+    );
+    let dims = read_header(&mut r, DType::F32)?;
+    let n: usize = dims.iter().product();
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf).context("reading payload")?;
+    let data = buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+/// Read a u8 `.zten` tensor (raw images), returning (shape, bytes).
+pub fn read_zten_u8(path: impl AsRef<Path>) -> Result<(Vec<usize>, Vec<u8>)> {
+    let path = path.as_ref();
+    let mut r = BufReader::new(
+        File::open(path).with_context(|| format!("opening {path:?}"))?,
+    );
+    let dims = read_header(&mut r, DType::U8)?;
+    let n: usize = dims.iter().product();
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf).context("reading payload")?;
+    Ok((dims, buf))
+}
+
+/// Read an i32 `.zten` tensor (labels), returning (shape, values).
+pub fn read_zten_i32(path: impl AsRef<Path>) -> Result<(Vec<usize>, Vec<i32>)> {
+    let path = path.as_ref();
+    let mut r = BufReader::new(
+        File::open(path).with_context(|| format!("opening {path:?}"))?,
+    );
+    let dims = read_header(&mut r, DType::I32)?;
+    let n: usize = dims.iter().product();
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf).context("reading payload")?;
+    let vals = buf
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok((dims, vals))
+}
+
+/// Write an f32 tensor as `.zten`.
+pub fn write_zten(path: impl AsRef<Path>, t: &Tensor) -> Result<()> {
+    let path = path.as_ref();
+    let mut w = BufWriter::new(
+        File::create(path).with_context(|| format!("creating {path:?}"))?,
+    );
+    w.write_all(MAGIC)?;
+    w.write_all(&1u32.to_le_bytes())?;
+    w.write_all(&(DType::F32 as u32).to_le_bytes())?;
+    w.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+    for &d in t.shape() {
+        w.write_all(&(d as u32).to_le_bytes())?;
+    }
+    for &v in t.data() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("zten_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::from_vec(&[2, 3], vec![1.5, -2.0, 0.0, 4.0, 5.0, -6.5]);
+        let p = tmp("rt");
+        write_zten(&p, &t).unwrap();
+        let back = read_zten(&p).unwrap();
+        assert_eq!(back, t);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmp("bad");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(read_zten(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_dtype_mismatch() {
+        let t = Tensor::from_vec(&[1], vec![1.0]);
+        let p = tmp("dtype");
+        write_zten(&p, &t).unwrap();
+        assert!(read_zten_u8(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let t = Tensor::from_vec(&[4], vec![1.0; 4]);
+        let p = tmp("trunc");
+        write_zten(&p, &t).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 4]).unwrap();
+        assert!(read_zten(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

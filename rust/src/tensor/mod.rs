@@ -1,0 +1,151 @@
+//! Dense NCHW tensors + the `.zten` interchange format.
+//!
+//! The Rust side needs exactly one tensor flavor: contiguous row-major
+//! f32 (activation maps, masks, images) with a handful of integer/byte
+//! variants for labels and raw images. This module provides that plus
+//! binary IO compatible with `python/compile/trace.py`.
+
+mod io;
+
+pub use io::{read_zten, read_zten_i32, read_zten_u8, write_zten, DType};
+
+/// A contiguous row-major f32 tensor with up to 4 logical dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Build from parts; `data.len()` must equal the shape's volume.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical volume.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {shape:?} incompatible with volume {}",
+            self.data.len()
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// NCHW accessor (only valid for 4-D tensors).
+    pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 4);
+        let (_, cc, hh, ww) =
+            (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((n * cc + c) * hh + h) * ww + w]
+    }
+
+    /// One (n, c) spatial plane of a 4-D tensor, as a slice.
+    pub fn plane(&self, n: usize, c: usize) -> &[f32] {
+        debug_assert_eq!(self.shape.len(), 4);
+        let (hh, ww) = (self.shape[2], self.shape[3]);
+        let base = (n * self.shape[1] + c) * hh * ww;
+        &self.data[base..base + hh * ww]
+    }
+
+    /// Fraction of exactly-zero elements (ReLU sparsity statistic).
+    pub fn zero_fraction(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let zeros = self.data.iter().filter(|&&v| v == 0.0).count();
+        zeros as f64 / self.data.len() as f64
+    }
+
+    /// Bytes this tensor occupies uncompressed (f32).
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_volume() {
+        let t = Tensor::zeros(&[2, 3, 4, 4]);
+        assert_eq!(t.len(), 96);
+        assert_eq!(t.nbytes(), 384);
+        assert_eq!(t.zero_fraction(), 1.0);
+    }
+
+    #[test]
+    fn from_vec_checks_volume() {
+        let r = std::panic::catch_unwind(|| {
+            Tensor::from_vec(&[2, 2], vec![1.0; 5])
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn at4_indexes_row_major() {
+        let mut t = Tensor::zeros(&[1, 2, 2, 2]);
+        t.data_mut()[5] = 7.0; // n0 c1 h0 w1
+        assert_eq!(t.at4(0, 1, 0, 1), 7.0);
+    }
+
+    #[test]
+    fn plane_slices_one_map() {
+        let data: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let t = Tensor::from_vec(&[2, 2, 2, 2], data);
+        assert_eq!(t.plane(1, 0), &[8.0, 9.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+        let t = t.reshape(&[2, 2]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.data(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn zero_fraction_counts() {
+        let t = Tensor::from_vec(&[4], vec![0.0, 1.0, 0.0, 2.0]);
+        assert_eq!(t.zero_fraction(), 0.5);
+    }
+}

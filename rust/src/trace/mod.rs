@@ -1,0 +1,162 @@
+//! Activation trace loading: replaying the Python model's real DRAM
+//! spills through the Rust codecs and the accelerator simulator.
+//!
+//! A trace directory (written by `python/compile/trace.py`) holds one
+//! `.zten` per spill plus `trace.json` metadata. See DESIGN.md §5.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::tensor::{read_zten, Tensor};
+use crate::util::json::{self, Value};
+use crate::zebra::bandwidth::SpillShape;
+
+/// One loaded spill: static shape info + the actual batch tensor.
+#[derive(Debug)]
+pub struct TraceSpill {
+    pub shape: SpillShape,
+    /// `(N, C, H, W)` activations for the traced batch.
+    pub tensor: Tensor,
+}
+
+/// A full model trace: every spill of one batch of images.
+#[derive(Debug)]
+pub struct Trace {
+    pub dir: PathBuf,
+    pub model: String,
+    pub dataset: String,
+    pub t_obj: f64,
+    pub zebra: bool,
+    pub labels: Vec<i64>,
+    pub spills: Vec<TraceSpill>,
+}
+
+impl Trace {
+    /// Batch size of the traced run.
+    pub fn batch(&self) -> usize {
+        self.spills.first().map(|s| s.tensor.shape()[0]).unwrap_or(0)
+    }
+
+    /// The static spill plan (shapes only).
+    pub fn plan(&self) -> Vec<SpillShape> {
+        self.spills.iter().map(|s| s.shape.clone()).collect()
+    }
+
+    /// Raw test images, if the trace carries them (Fig. 4 overlays).
+    pub fn raw_images(&self) -> Result<(Vec<usize>, Vec<u8>)> {
+        crate::tensor::read_zten_u8(self.dir.join("raw_images.zten"))
+    }
+}
+
+/// Load a trace directory.
+pub fn load(dir: impl AsRef<Path>) -> Result<Trace> {
+    let dir = dir.as_ref().to_path_buf();
+    let meta_path = dir.join("trace.json");
+    let text = std::fs::read_to_string(&meta_path)
+        .with_context(|| format!("reading {meta_path:?}"))?;
+    let meta = json::parse(&text).context("parsing trace.json")?;
+    let spills = load_spills(&dir, &meta)?;
+    Ok(Trace {
+        model: meta.get("model").as_str().unwrap_or("?").to_string(),
+        dataset: meta.get("dataset").as_str().unwrap_or("?").to_string(),
+        t_obj: meta.get("t_obj").as_f64().unwrap_or(0.0),
+        zebra: meta.get("zebra").as_bool().unwrap_or(false),
+        labels: meta
+            .get("labels")
+            .as_array()
+            .map(|a| {
+                a.iter().filter_map(|v| v.as_f64()).map(|f| f as i64).collect()
+            })
+            .unwrap_or_default(),
+        spills,
+        dir,
+    })
+}
+
+fn load_spills(dir: &Path, meta: &Value) -> Result<Vec<TraceSpill>> {
+    let entries = meta
+        .get("spills")
+        .as_array()
+        .context("trace.json: missing spills[]")?;
+    let mut out = Vec::with_capacity(entries.len());
+    for (i, e) in entries.iter().enumerate() {
+        let file = e
+            .get("file")
+            .as_str()
+            .with_context(|| format!("spill[{i}] missing file"))?;
+        let tensor = read_zten(dir.join(file))
+            .with_context(|| format!("loading spill {file}"))?;
+        let ts = tensor.shape();
+        anyhow::ensure!(ts.len() == 4, "spill {file} is not NCHW: {ts:?}");
+        let block = e
+            .get("block")
+            .as_usize()
+            .with_context(|| format!("spill[{i}] missing block"))?;
+        out.push(TraceSpill {
+            shape: SpillShape {
+                name: e.get("name").as_str().unwrap_or(file).to_string(),
+                c: ts[1],
+                h: ts[2],
+                w: ts[3],
+                block,
+            },
+            tensor,
+        });
+    }
+    anyhow::ensure!(!out.is_empty(), "trace has no spills");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::write_zten;
+
+    fn make_trace_dir(name: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("ztrace_{}_{name}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let t = Tensor::from_vec(&[2, 1, 4, 4], (0..32).map(|v| v as f32).collect());
+        write_zten(dir.join("s0_conv.zten"), &t).unwrap();
+        std::fs::write(
+            dir.join("trace.json"),
+            r#"{"model":"m","dataset":"cifar10","t_obj":0.1,"zebra":true,
+                "labels":[3,7],
+                "spills":[{"name":"s0.conv","file":"s0_conv.zten",
+                           "shape":[2,1,4,4],"block":2}]}"#,
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn loads_trace_directory() {
+        let dir = make_trace_dir("ok");
+        let tr = load(&dir).unwrap();
+        assert_eq!(tr.model, "m");
+        assert_eq!(tr.batch(), 2);
+        assert_eq!(tr.labels, vec![3, 7]);
+        assert_eq!(tr.spills[0].shape.block, 2);
+        assert_eq!(tr.spills[0].shape.c, 1);
+        assert_eq!(tr.plan().len(), 1);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_metadata_is_an_error() {
+        let dir = std::env::temp_dir()
+            .join(format!("ztrace_{}_none", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(load(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_spill_file_is_an_error() {
+        let dir = make_trace_dir("gone");
+        std::fs::remove_file(dir.join("s0_conv.zten")).unwrap();
+        assert!(load(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

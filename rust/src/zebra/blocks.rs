@@ -1,0 +1,202 @@
+//! Block geometry: the paper's Fig. 1 partitioning of activation maps
+//! into non-overlapping `B x B` spatial blocks, and the packed 1-bit
+//! block index (Eq. 3).
+
+/// Geometry of one NCHW tensor's block partitioning.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockGrid {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub block: usize,
+}
+
+impl BlockGrid {
+    /// Panics unless H and W divide evenly into blocks (the paper picks
+    /// block sizes that divide the map: 2/4 on CIFAR, 8 on Tiny-ImageNet).
+    pub fn new(n: usize, c: usize, h: usize, w: usize, block: usize) -> Self {
+        assert!(block > 0, "block size must be positive");
+        assert!(
+            h % block == 0 && w % block == 0,
+            "{h}x{w} map not divisible by block {block}"
+        );
+        BlockGrid { n, c, h, w, block }
+    }
+
+    /// Blocks per map row / column.
+    pub fn hb(&self) -> usize {
+        self.h / self.block
+    }
+    pub fn wb(&self) -> usize {
+        self.w / self.block
+    }
+
+    /// Total number of blocks across the whole tensor.
+    pub fn num_blocks(&self) -> usize {
+        self.n * self.c * self.hb() * self.wb()
+    }
+
+    /// Blocks in one (n, c) map.
+    pub fn blocks_per_map(&self) -> usize {
+        self.hb() * self.wb()
+    }
+
+    /// Elements per block.
+    pub fn block_elems(&self) -> usize {
+        self.block * self.block
+    }
+
+    /// Index-bitmap overhead in bytes (Eq. 3: 1 bit per block).
+    pub fn index_bytes(&self) -> usize {
+        self.num_blocks().div_ceil(8)
+    }
+
+    /// Flat block id for (n, c, by, bx).
+    pub fn block_id(&self, n: usize, c: usize, by: usize, bx: usize) -> usize {
+        ((n * self.c + c) * self.hb() + by) * self.wb() + bx
+    }
+}
+
+/// Packed {kept=1, zero=0} block mask — the DRAM index the accelerator
+/// stores alongside compressed activations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockMask {
+    pub grid: BlockGrid,
+    bits: Vec<u64>,
+}
+
+impl BlockMask {
+    pub fn new_zeroed(grid: BlockGrid) -> Self {
+        let words = grid.num_blocks().div_ceil(64);
+        BlockMask { grid, bits: vec![0; words] }
+    }
+
+    pub fn set(&mut self, id: usize, kept: bool) {
+        let (w, b) = (id / 64, id % 64);
+        if kept {
+            self.bits[w] |= 1 << b;
+        } else {
+            self.bits[w] &= !(1 << b);
+        }
+    }
+
+    pub fn get(&self, id: usize) -> bool {
+        (self.bits[id / 64] >> (id % 64)) & 1 == 1
+    }
+
+    /// Number of kept (non-zero) blocks.
+    pub fn kept(&self) -> usize {
+        self.bits.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Fraction of zero blocks — the Table I statistic.
+    pub fn zero_fraction(&self) -> f64 {
+        let total = self.grid.num_blocks();
+        if total == 0 {
+            return 0.0;
+        }
+        1.0 - self.kept() as f64 / total as f64
+    }
+
+    /// Raw words (for codec serialization).
+    pub fn words(&self) -> &[u64] {
+        &self.bits
+    }
+
+    /// Borrow as little-endian bytes, trimmed to `index_bytes()`.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let nbytes = self.grid.index_bytes();
+        let mut out = Vec::with_capacity(nbytes);
+        for w in &self.bits {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out.truncate(nbytes);
+        out
+    }
+
+    /// Rebuild from `to_bytes()` output.
+    pub fn from_bytes(grid: BlockGrid, bytes: &[u8]) -> Self {
+        assert_eq!(bytes.len(), grid.index_bytes(), "index size mismatch");
+        let words = grid.num_blocks().div_ceil(64);
+        let mut bits = vec![0u64; words];
+        for (i, &b) in bytes.iter().enumerate() {
+            bits[i / 8] |= (b as u64) << ((i % 8) * 8);
+        }
+        // Clear any padding bits above num_blocks.
+        let extra = words * 64 - grid.num_blocks();
+        if extra > 0 && words > 0 {
+            let keep = 64 - extra;
+            let mask = if keep == 0 { 0 } else { u64::MAX >> extra };
+            bits[words - 1] &= mask;
+        }
+        BlockMask { grid, bits }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_counts() {
+        let g = BlockGrid::new(2, 3, 8, 8, 4);
+        assert_eq!(g.hb(), 2);
+        assert_eq!(g.wb(), 2);
+        assert_eq!(g.num_blocks(), 24);
+        assert_eq!(g.block_elems(), 16);
+        assert_eq!(g.index_bytes(), 3);
+    }
+
+    #[test]
+    fn rejects_indivisible() {
+        let r = std::panic::catch_unwind(|| BlockGrid::new(1, 1, 6, 8, 4));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn block_ids_are_dense_and_unique() {
+        let g = BlockGrid::new(2, 2, 4, 4, 2);
+        let mut seen = vec![false; g.num_blocks()];
+        for n in 0..2 {
+            for c in 0..2 {
+                for by in 0..g.hb() {
+                    for bx in 0..g.wb() {
+                        let id = g.block_id(n, c, by, bx);
+                        assert!(!seen[id]);
+                        seen[id] = true;
+                    }
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn mask_set_get_count() {
+        let g = BlockGrid::new(1, 1, 8, 8, 2);
+        let mut m = BlockMask::new_zeroed(g);
+        assert_eq!(m.kept(), 0);
+        m.set(3, true);
+        m.set(7, true);
+        m.set(3, true);
+        assert!(m.get(3) && m.get(7) && !m.get(0));
+        assert_eq!(m.kept(), 2);
+        m.set(3, false);
+        assert_eq!(m.kept(), 1);
+        assert!((m.zero_fraction() - 15.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mask_bytes_roundtrip() {
+        let g = BlockGrid::new(1, 3, 4, 4, 2); // 12 blocks -> 2 bytes
+        let mut m = BlockMask::new_zeroed(g);
+        for id in [0, 5, 11] {
+            m.set(id, true);
+        }
+        let bytes = m.to_bytes();
+        assert_eq!(bytes.len(), g.index_bytes());
+        let back = BlockMask::from_bytes(g, &bytes);
+        assert_eq!(back, m);
+    }
+}

@@ -1,0 +1,11 @@
+//! The paper's core technique on the Rust side: block geometry
+//! (Fig. 1), the fused ReLU+prune hot path (Sec. II), and the
+//! bandwidth arithmetic (Eq. 2–5, Table V).
+
+pub mod bandwidth;
+pub mod blocks;
+pub mod prune;
+
+pub use bandwidth::{BandwidthReport, SpillShape};
+pub use blocks::{BlockGrid, BlockMask};
+pub use prune::{block_mask, relu_prune, relu_prune_inplace, Thresholds};

@@ -1,0 +1,268 @@
+//! The Zebra pruning op on the Rust hot path.
+//!
+//! This mirrors the L1 Pallas kernel's semantics exactly (strict
+//! compare: a block survives iff `max > T`), and is what the
+//! coordinator/simulator use when they need to (re)derive masks from
+//! dense activations — e.g. compressing a spill the model produced, or
+//! replaying traces through the accelerator model. The per-map inner
+//! loop walks each block row-wise so the compiler can keep the running
+//! max in registers; see `bench/perf_hotpath` for the roofline study.
+
+use super::blocks::{BlockGrid, BlockMask};
+use crate::tensor::Tensor;
+
+/// Per-channel thresholds, broadcast like the Python side.
+#[derive(Debug, Clone)]
+pub enum Thresholds<'a> {
+    /// One scalar for every channel (inference mode, T_obj).
+    Scalar(f32),
+    /// One threshold per channel `(C,)`.
+    PerChannel(&'a [f32]),
+}
+
+impl Thresholds<'_> {
+    fn for_channel(&self, c: usize) -> f32 {
+        match self {
+            Thresholds::Scalar(t) => *t,
+            Thresholds::PerChannel(ts) => ts[c],
+        }
+    }
+}
+
+/// Compute the block keep-mask of an NCHW tensor without modifying it.
+pub fn block_mask(x: &Tensor, thr: &Thresholds, block: usize) -> BlockMask {
+    let s = x.shape();
+    assert_eq!(s.len(), 4, "block_mask wants NCHW, got {s:?}");
+    let grid = BlockGrid::new(s[0], s[1], s[2], s[3], block);
+    let mut mask = BlockMask::new_zeroed(grid);
+    let (hb, wb) = (grid.hb(), grid.wb());
+    for n in 0..s[0] {
+        for c in 0..s[1] {
+            let t = thr.for_channel(c);
+            let plane = x.plane(n, c);
+            for by in 0..hb {
+                for bx in 0..wb {
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..block {
+                        let row = (by * block + dy) * s[3] + bx * block;
+                        for &v in &plane[row..row + block] {
+                            if v > m {
+                                m = v;
+                            }
+                        }
+                    }
+                    if m > t {
+                        mask.set(grid.block_id(n, c, by, bx), true);
+                    }
+                }
+            }
+        }
+    }
+    mask
+}
+
+/// Fused ReLU + Zebra prune, in place. Returns the keep-mask.
+///
+/// Exactly the paper's deployed op: clamp negatives (ReLU), zero every
+/// block whose post-ReLU max is <= T (strict, so T = 0 catches natural
+/// zero blocks), emit the 1-bit/block index.
+pub fn relu_prune_inplace(
+    x: &mut Tensor,
+    thr: &Thresholds,
+    block: usize,
+) -> BlockMask {
+    let s = x.shape().to_vec();
+    assert_eq!(s.len(), 4, "relu_prune wants NCHW, got {s:?}");
+    let grid = BlockGrid::new(s[0], s[1], s[2], s[3], block);
+    let mut mask = BlockMask::new_zeroed(grid);
+    let (hb, wb) = (grid.hb(), grid.wb());
+    let (hh, ww) = (s[2], s[3]);
+    let data = x.data_mut();
+    for n in 0..s[0] {
+        for c in 0..s[1] {
+            let t = thr.for_channel(c);
+            let base = (n * s[1] + c) * hh * ww;
+            let plane = &mut data[base..base + hh * ww];
+            // Pass 1: ReLU the whole plane (branch-free max).
+            for v in plane.iter_mut() {
+                *v = v.max(0.0);
+            }
+            // Pass 2: per-block max, then zero losing blocks.
+            for by in 0..hb {
+                for bx in 0..wb {
+                    let mut m = 0.0f32;
+                    for dy in 0..block {
+                        let row = (by * block + dy) * ww + bx * block;
+                        for &v in &plane[row..row + block] {
+                            if v > m {
+                                m = v;
+                            }
+                        }
+                    }
+                    if m > t {
+                        mask.set(grid.block_id(n, c, by, bx), true);
+                    } else {
+                        for dy in 0..block {
+                            let row = (by * block + dy) * ww + bx * block;
+                            plane[row..row + block].fill(0.0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    mask
+}
+
+/// Convenience: prune a copy (used in tests and non-hot paths).
+pub fn relu_prune(
+    x: &Tensor,
+    thr: &Thresholds,
+    block: usize,
+) -> (Tensor, BlockMask) {
+    let mut y = x.clone();
+    let m = relu_prune_inplace(&mut y, thr, block);
+    (y, m)
+}
+
+/// Natural zero-block fraction (Table I): blocks that are entirely zero,
+/// threshold-free.
+pub fn natural_zero_fraction(x: &Tensor, block: usize) -> f64 {
+    // |v| == 0 test on every element: equivalent to mask at T=0 on |x|.
+    let s = x.shape();
+    let grid = BlockGrid::new(s[0], s[1], s[2], s[3], block);
+    let (hb, wb) = (grid.hb(), grid.wb());
+    let mut zero_blocks = 0usize;
+    for n in 0..s[0] {
+        for c in 0..s[1] {
+            let plane = x.plane(n, c);
+            for by in 0..hb {
+                'blk: for bx in 0..wb {
+                    for dy in 0..block {
+                        let row = (by * block + dy) * s[3] + bx * block;
+                        for &v in &plane[row..row + block] {
+                            if v != 0.0 {
+                                continue 'blk;
+                            }
+                        }
+                    }
+                    zero_blocks += 1;
+                }
+            }
+        }
+    }
+    zero_blocks as f64 / grid.num_blocks() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop::{forall, Config};
+
+    fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal()).collect();
+        Tensor::from_vec(shape, data)
+    }
+
+    #[test]
+    fn prunes_low_blocks_keeps_high() {
+        // One 4x4 map, block 2: top-left block has a big value.
+        let mut data = vec![-1.0f32; 16];
+        data[0] = 5.0;
+        data[10] = 0.3; // bottom-right block, below T
+        let x = Tensor::from_vec(&[1, 1, 4, 4], data);
+        let (y, m) = relu_prune(&x, &Thresholds::Scalar(0.5), 2);
+        assert!(m.get(0) && !m.get(1) && !m.get(2) && !m.get(3));
+        assert_eq!(y.data()[0], 5.0);
+        assert_eq!(y.data().iter().filter(|&&v| v != 0.0).count(), 1);
+    }
+
+    #[test]
+    fn strict_compare_at_zero_threshold() {
+        // All-negative block -> post-ReLU all zero -> pruned at T=0.
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![-1.0, -2.0, -3.0, -0.5]);
+        let (_, m) = relu_prune(&x, &Thresholds::Scalar(0.0), 2);
+        assert_eq!(m.kept(), 0);
+    }
+
+    #[test]
+    fn per_channel_thresholds_apply() {
+        let x = Tensor::from_vec(&[1, 2, 2, 2], vec![0.4; 8]);
+        let thr = [0.3f32, 0.5f32];
+        let (_, m) = relu_prune(&x, &Thresholds::PerChannel(&thr), 2);
+        assert!(m.get(0), "channel 0: 0.4 > 0.3 kept");
+        assert!(!m.get(1), "channel 1: 0.4 <= 0.5 pruned");
+    }
+
+    #[test]
+    fn mask_matches_block_mask_of_pruned_output() {
+        forall(Config::cases(50), |rng| {
+            let b = [2usize, 4][rng.range(0, 1)];
+            let h = b * rng.range(1, 4);
+            let w = b * rng.range(1, 4);
+            let (n, c) = (rng.range(1, 2), rng.range(1, 3));
+            let x = rand_tensor(rng, &[n, c, h, w]);
+            let t = rng.f32_range(0.0, 1.0);
+            let (y, m) = relu_prune(&x, &Thresholds::Scalar(t), b);
+            // Idempotence: pruning the pruned tensor changes nothing.
+            let (y2, m2) = relu_prune(&y, &Thresholds::Scalar(t), b);
+            assert_eq!(y, y2);
+            assert_eq!(m, m2);
+        });
+    }
+
+    #[test]
+    fn sparsity_monotone_in_threshold() {
+        forall(Config::cases(30), |rng| {
+            let x = rand_tensor(rng, &[1, 4, 8, 8]);
+            let mut last_kept = usize::MAX;
+            for t in [0.0, 0.25, 0.5, 1.0] {
+                let (_, m) = relu_prune(&x, &Thresholds::Scalar(t), 4);
+                assert!(m.kept() <= last_kept);
+                last_kept = m.kept();
+            }
+        });
+    }
+
+    #[test]
+    fn natural_zero_fraction_matches_t0_mask() {
+        forall(Config::cases(30), |rng| {
+            let x = rand_tensor(rng, &[1, 3, 8, 8]);
+            let (y, m) = relu_prune(&x, &Thresholds::Scalar(0.0), 2);
+            let nat = natural_zero_fraction(&y, 2);
+            assert!((nat - m.zero_fraction()).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn pruned_elements_are_exactly_zero_and_kept_unchanged() {
+        forall(Config::cases(30), |rng| {
+            let x = rand_tensor(rng, &[2, 2, 4, 4]);
+            let (y, m) = relu_prune(&x, &Thresholds::Scalar(0.3), 2);
+            let g = m.grid;
+            for n in 0..2 {
+                for c in 0..2 {
+                    for by in 0..g.hb() {
+                        for bx in 0..g.wb() {
+                            let kept = m.get(g.block_id(n, c, by, bx));
+                            for dy in 0..2 {
+                                for dx in 0..2 {
+                                    let (h, w) = (by * 2 + dy, bx * 2 + dx);
+                                    let relu = x.at4(n, c, h, w).max(0.0);
+                                    let got = y.at4(n, c, h, w);
+                                    if kept {
+                                        assert_eq!(got, relu);
+                                    } else {
+                                        assert_eq!(got, 0.0);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,57 @@
+//! Integration: PJRT runtime over real AOT artifacts.
+//!
+//! Requires `make artifacts`. The standalone zebra-kernel HLO is
+//! cross-validated against the Rust pruner — the two implementations of
+//! the paper's op (Pallas-lowered HLO vs native Rust) must agree bit
+//! for bit.
+
+use zebra::runtime::Runtime;
+use zebra::tensor::Tensor;
+use zebra::util::prng::Rng;
+use zebra::zebra::prune::{relu_prune, Thresholds};
+
+fn artifacts() -> std::path::PathBuf {
+    let p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        p.join("manifest.json").exists(),
+        "run `make artifacts` before integration tests"
+    );
+    p
+}
+
+#[test]
+fn zebra_kernel_hlo_matches_rust_pruner() {
+    let art = artifacts();
+    let rt = Runtime::new(&art).unwrap();
+    let exe = rt.compile_file(&art.join("kernel_zebra.hlo.txt")).unwrap();
+    // Kernel was exported for (1, 16, 32, 32), block 4, T=0.1.
+    let mut rng = Rng::new(99);
+    let data: Vec<f32> = (0..16 * 32 * 32).map(|_| rng.normal()).collect();
+    let x = Tensor::from_vec(&[1, 16, 32, 32], data);
+    let out = rt.run_kernel(&exe, &[&x]).unwrap();
+    assert_eq!(out.len(), 2, "kernel returns (pruned, mask)");
+    let (pruned_hlo, mask_hlo) = (&out[0], &out[1]);
+    let (pruned_rs, mask_rs) = relu_prune(&x, &Thresholds::Scalar(0.1), 4);
+    assert_eq!(pruned_hlo.shape(), pruned_rs.shape());
+    let mut diffs = 0;
+    for (a, b) in pruned_hlo.data().iter().zip(pruned_rs.data()) {
+        if a != b {
+            diffs += 1;
+        }
+    }
+    assert_eq!(diffs, 0, "pruned tensors disagree in {diffs} elements");
+    // Mask: HLO emits f32 {0,1} (N, C, H/4, W/4).
+    assert_eq!(mask_hlo.shape(), &[1, 16, 8, 8]);
+    let g = mask_rs.grid;
+    for n in 0..1 {
+        for c in 0..16 {
+            for by in 0..8 {
+                for bx in 0..8 {
+                    let want = mask_rs.get(g.block_id(n, c, by, bx));
+                    let got = mask_hlo.at4(n, c, by, bx) != 0.0;
+                    assert_eq!(got, want, "mask mismatch at {n},{c},{by},{bx}");
+                }
+            }
+        }
+    }
+}
