@@ -1,0 +1,5 @@
+# Repo-level convenience targets.
+
+.PHONY: check
+check:
+	./rust/check.sh

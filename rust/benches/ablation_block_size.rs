@@ -10,7 +10,7 @@
 //! optimum that justifies the paper's B=4 (CIFAR) choice.
 
 use zebra::bench::Table;
-use zebra::compress::{Codec, ZeroBlockCodec};
+use zebra::compress::{Codec, SpillBuf, ZeroBlockCodec};
 use zebra::tensor::Tensor;
 use zebra::zebra::bandwidth::fmt_bytes;
 use zebra::zebra::blocks::BlockGrid;
@@ -63,6 +63,8 @@ fn main() -> anyhow::Result<()> {
     ]);
     let mut packed: Vec<(usize, f64)> = Vec::new();
     let mut nocomp: Vec<(usize, f64)> = Vec::new();
+    // One SpillBuf across the whole sweep (v2 streaming encode).
+    let mut buf = SpillBuf::new();
     for b in [1usize, 2, 4, 8] {
         let codec = ZeroBlockCodec::new(b);
         let (mut payload, mut index, mut bus) = (0.0, 0.0, 0.0);
@@ -72,11 +74,11 @@ fn main() -> anyhow::Result<()> {
             if s[2] % b != 0 || s[3] % b != 0 {
                 continue;
             }
-            let e = codec.encode(x);
-            payload += e.payload.len() as f64 / n;
-            index += e.index.len() as f64 / n;
+            codec.encode_into(x, &mut buf);
+            payload += buf.payload().len() as f64 / n;
+            index += buf.index().len() as f64 / n;
             bus += (no_compaction_bytes(x, b, BURST)
-                + e.index.len() as f64)
+                + buf.index().len() as f64)
                 / n;
             let blocks = (x.len() / (b * b)) as f64;
             zero_num += natural_zero_fraction(x, b) * blocks;

@@ -10,8 +10,7 @@
 //! never the serving bottleneck.
 
 use zebra::bench::{bench, Table};
-use zebra::compress::{Codec, DenseCodec, RleZeroCodec, WholeMapCodec,
-                      ZeroBlockCodec};
+use zebra::compress::{all_codecs, Codec, SpillBuf, ZeroBlockCodec};
 use zebra::runtime::Runtime;
 use zebra::tensor::Tensor;
 use zebra::util::prng::Rng;
@@ -72,17 +71,16 @@ fn main() -> anyhow::Result<()> {
     });
     push("prune (B=8)", s, "");
 
-    // 2. Codecs, encode + decode on a ~60%-sparse spill.
-    for codec in [
-        Box::new(ZeroBlockCodec::new(4)) as Box<dyn Codec>,
-        Box::new(RleZeroCodec),
-        Box::new(WholeMapCodec),
-        Box::new(DenseCodec),
-    ] {
+    // 2. Codecs (registry-driven), streaming encode + decode with a
+    // reused SpillBuf/Tensor on a ~60%-sparse spill — the v2 hot path.
+    let mut codec_buf = SpillBuf::new();
+    let mut codec_out = Tensor::zeros(&[0]);
+    for codec in all_codecs(4) {
         let enc = codec.encode(&sparse);
         let ratio = enc.total_bytes() as f64 / sparse.nbytes() as f64;
         let s = bench(&format!("{} encode", codec.name()), 200, || {
-            std::hint::black_box(codec.encode(&sparse));
+            codec.encode_into(&sparse, &mut codec_buf);
+            std::hint::black_box(codec_buf.total_bytes());
         });
         push(
             &format!("{} encode", codec.name()),
@@ -90,10 +88,83 @@ fn main() -> anyhow::Result<()> {
             &format!("{:.2}x size", ratio),
         );
         let s = bench(&format!("{} decode", codec.name()), 200, || {
-            std::hint::black_box(codec.decode(&enc));
+            codec.decode_into(enc.view(), &mut codec_out);
+            std::hint::black_box(codec_out.len());
         });
         push(&format!("{} decode", codec.name()), s, "");
     }
+
+    // 2b. API-redesign proof: the v1-style allocate-per-spill wrappers
+    // vs the v2 SpillBuf-reusing streaming path, over a
+    // ResNet-18-shaped spill sweep (every conv output of the CIFAR
+    // model at batch 8). Same codec code underneath — the delta is
+    // purely the per-spill allocation the redesign removed.
+    let rn18_shapes: &[[usize; 4]] = &[
+        [8, 64, 32, 32],
+        [8, 64, 32, 32],
+        [8, 64, 32, 32],
+        [8, 64, 32, 32],
+        [8, 128, 16, 16],
+        [8, 128, 16, 16],
+        [8, 128, 16, 16],
+        [8, 128, 16, 16],
+        [8, 256, 8, 8],
+        [8, 256, 8, 8],
+        [8, 256, 8, 8],
+        [8, 256, 8, 8],
+        [8, 512, 4, 4],
+        [8, 512, 4, 4],
+        [8, 512, 4, 4],
+        [8, 512, 4, 4],
+    ];
+    let spills: Vec<Tensor> = rn18_shapes
+        .iter()
+        .map(|s| {
+            let vol: usize = s.iter().product();
+            let mut t = Tensor::from_vec(
+                s,
+                (0..vol).map(|_| rng.normal()).collect(),
+            );
+            relu_prune_inplace(&mut t, &Thresholds::Scalar(1.2), 4);
+            t
+        })
+        .collect();
+    let sweep_bytes: f64 = spills.iter().map(|t| t.nbytes() as f64).sum();
+    let codec = ZeroBlockCodec::new(4);
+    let s_alloc = bench("rn18 sweep enc+dec, alloc per spill", 400, || {
+        for t in &spills {
+            let e = codec.encode(t);
+            std::hint::black_box(codec.decode(&e).len());
+        }
+    });
+    let mut buf = SpillBuf::new();
+    let mut scratch = Tensor::zeros(&[0]);
+    let s_reuse = bench("rn18 sweep enc+dec, SpillBuf reuse", 400, || {
+        for t in &spills {
+            codec.encode_into(t, &mut buf);
+            codec.decode_into(buf.view(), &mut scratch);
+            std::hint::black_box(scratch.len());
+        }
+    });
+    table.row(&[
+        "zero-block enc+dec sweep (alloc/spill)".into(),
+        format!("{:.3}", s_alloc.mean_ms()),
+        format!("{:.2}", s_alloc.gbps(sweep_bytes)),
+        "v1-style wrappers".into(),
+    ]);
+    table.row(&[
+        "zero-block enc+dec sweep (SpillBuf)".into(),
+        format!("{:.3}", s_reuse.mean_ms()),
+        format!("{:.2}", s_reuse.gbps(sweep_bytes)),
+        format!("{:.2}x vs alloc", s_reuse.speedup_over(&s_alloc)),
+    ]);
+    eprintln!(
+        "  [bench] SpillBuf reuse speedup over alloc-per-spill: {:.2}x \
+         ({:.2} -> {:.2} GB/s)",
+        s_reuse.speedup_over(&s_alloc),
+        s_alloc.gbps(sweep_bytes),
+        s_reuse.gbps(sweep_bytes),
+    );
 
     // 3. Accelerator simulator over a full ResNet-18 trace.
     let art = zebra::artifacts_dir();

@@ -76,5 +76,18 @@ fn main() -> anyhow::Result<()> {
         enc.index.len(),
         eq3_bits / 8.0
     );
+
+    // Wire-format check: the same spill must survive a `.zspill`
+    // persist/parse round-trip bit-exactly.
+    let frame = enc.to_bytes();
+    let back = zebra::compress::EncodedView::parse(&frame)?.to_encoded();
+    assert_eq!(back, enc, ".zspill round-trip must be exact");
+    assert_eq!(zebra::compress::decode_frame(&frame)?, spill);
+    println!(
+        "wire check OK: {} B .zspill frame round-trips (header+checksum \
+         overhead {} B).",
+        frame.len(),
+        frame.len() - enc.total_bytes()
+    );
     Ok(())
 }

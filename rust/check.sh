@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# rust/check.sh — the repo's full Rust gate: build, tests, formatting,
+# lints. `make check` at the repo root runs this.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+cargo build --release
+cargo test -q
+cargo fmt --check
+cargo clippy --all-targets -- -D warnings
+
+echo "check OK"

@@ -12,7 +12,7 @@
 use anyhow::Result;
 
 use super::{AccelConfig, DramModel, PeArray};
-use crate::compress::Codec;
+use crate::compress::{Codec, SpillBuf};
 use crate::tensor::Tensor;
 use crate::zebra::bandwidth::SpillShape;
 
@@ -110,12 +110,16 @@ pub fn simulate_trace(
         layers.len(),
         tensors.len()
     );
+    // One reused SpillBuf across the whole layer loop: arena capacity
+    // settles at the largest spill, so the per-layer encode is
+    // allocation-free (the v2 streaming hot path).
+    let mut buf = SpillBuf::new();
     let sizes: Vec<(usize, usize)> = tensors
         .iter()
         .map(|t| {
             let n = t.shape()[0].max(1);
-            let e = codec.encode(t);
-            (e.payload.len() / n, e.index.len() / n)
+            codec.encode_into(t, &mut buf);
+            (buf.payload().len() / n, buf.index().len() / n)
         })
         .collect();
     Ok(run(cfg, layers, &sizes, codec.name()))

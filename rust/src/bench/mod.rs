@@ -26,6 +26,17 @@ impl Stats {
     pub fn per_sec(&self, work_per_iter: f64) -> f64 {
         work_per_iter / (self.mean_ns / 1e9)
     }
+
+    /// Throughput in GB/s given bytes of work per iteration (the unit
+    /// every codec row reports).
+    pub fn gbps(&self, bytes_per_iter: f64) -> f64 {
+        self.per_sec(bytes_per_iter) / 1e9
+    }
+
+    /// Mean-time speedup of `self` over `baseline` (>1 means faster).
+    pub fn speedup_over(&self, baseline: &Stats) -> f64 {
+        baseline.mean_ns / self.mean_ns
+    }
 }
 
 /// Time `f` with warmup; picks an iteration count so the measured phase
@@ -152,5 +163,9 @@ mod tests {
         // 1 MB per 1 ms = 1 GB/s.
         let gbps = s.per_sec(1e6) / 1e9;
         assert!((gbps - 1.0).abs() < 1e-9);
+        assert!((s.gbps(1e6) - 1.0).abs() < 1e-9);
+        let slow = Stats { mean_ns: 2e6, ..s.clone() };
+        assert!((s.speedup_over(&slow) - 2.0).abs() < 1e-9);
+        assert!((slow.speedup_over(&s) - 0.5).abs() < 1e-9);
     }
 }

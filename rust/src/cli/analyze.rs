@@ -5,6 +5,7 @@ use anyhow::Result;
 
 use super::Args;
 use crate::bench::Table;
+use crate::compress::{registry, Codec as _, SpillBuf};
 use crate::models;
 use crate::zebra::bandwidth::{self, fmt_bytes};
 use crate::zebra::prune::{block_mask, natural_zero_fraction, Thresholds};
@@ -57,6 +58,39 @@ pub fn run(args: &Args) -> Result<()> {
         fmt_bytes(report.overhead_bytes / tr.batch() as f64),
         report.reduced_pct()
     );
+
+    // Measured encoded size per codec, from the registry, through the
+    // v2 streaming path (one reused SpillBuf for the whole sweep).
+    let mut rows: Vec<(&str, f64)> = Vec::new();
+    let mut buf = SpillBuf::new();
+    for spec in registry() {
+        let mut total = 0.0f64;
+        for sp in &tr.spills {
+            let codec = spec.build(sp.shape.block.max(1));
+            codec.encode_into(&sp.tensor, &mut buf);
+            total += buf.total_bytes() as f64;
+        }
+        rows.push((spec.name, total / tr.batch().max(1) as f64));
+    }
+    let dense = rows
+        .iter()
+        .find(|r| r.0 == "dense")
+        .map(|r| r.1)
+        .unwrap_or(0.0);
+    let mut tc = Table::new(&["codec", "encoded/img", "reduction %"]);
+    for (name, bytes) in rows {
+        let red = if dense > 0.0 {
+            100.0 * (1.0 - bytes / dense)
+        } else {
+            0.0
+        };
+        tc.row(&[
+            name.to_string(),
+            fmt_bytes(bytes),
+            format!("{red:.1}"),
+        ]);
+    }
+    tc.print("Encoded spill bytes by codec (payload + index)");
 
     // Table-I style block-size sweep on this trace.
     let mut t1 = Table::new(&["block size", "zero blocks %"]);

@@ -69,6 +69,7 @@ commands:
   version                     print version
   serve     --model KEY       run the serving pipeline over the test set
             [--requests N] [--wait-ms MS] [--queue N]
+            [--ship-codec NAME [--ship-block B]]  frame batches as .zspill
   simulate  --trace DIR       accelerator simulation of a trace
             [--codec dense|whole-map|rle-zero|zero-block] [--all]
   analyze   --trace DIR       sparsity + Eq.2-3 bandwidth analysis

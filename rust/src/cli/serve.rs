@@ -8,8 +8,9 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use super::Args;
+use crate::compress;
 use crate::coordinator::server::BatchExecutor;
-use crate::coordinator::{PjrtExecutor, Server, ServerConfig};
+use crate::coordinator::{PjrtExecutor, Server, ServerConfig, ShipSpills};
 use crate::tensor::{read_zten, read_zten_i32, Tensor};
 
 pub fn run(args: &Args) -> Result<()> {
@@ -18,6 +19,20 @@ pub fn run(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 64)?;
     let wait_ms = args.get_usize("wait-ms", 2)? as u64;
     let queue = args.get_usize("queue", 1024)?;
+    // Optional cross-node spill shipping: resolve the codec through the
+    // registry so an unknown name errors with the valid list.
+    let ship = match args.get("ship-codec") {
+        Some(name) => {
+            let spec = compress::spec_or_err(name)?;
+            let block = args.get_usize("ship-block", 4)?;
+            anyhow::ensure!(
+                block <= u16::MAX as usize,
+                "--ship-block {block} is out of range"
+            );
+            Some((spec, block as u16))
+        }
+        None => None,
+    };
 
     println!("loading runtime from {artifacts:?} ...");
     let t0 = Instant::now();
@@ -33,12 +48,32 @@ pub fn run(args: &Args) -> Result<()> {
     let hw = images.shape()[2];
     let per = 3 * hw * hw;
 
+    // Block geometry is only checkable once the image size is known;
+    // reject bad --ship-block values here with a CLI error instead of
+    // letting Server::start assert.
+    let ship_spills = match ship {
+        Some((spec, block)) => {
+            if spec.needs_block {
+                anyhow::ensure!(
+                    block > 0 && exec.image_hw() % block as usize == 0,
+                    "--ship-block {} must be positive and divide the \
+                     {}px image",
+                    block,
+                    exec.image_hw()
+                );
+            }
+            Some(ShipSpills { codec: spec.id, block })
+        }
+        None => None,
+    };
+
     let server = Server::start(
         exec,
         ServerConfig {
             max_wait: Duration::from_millis(wait_ms),
             workers: 1,
             max_queue: queue,
+            ship_spills,
         },
     );
 

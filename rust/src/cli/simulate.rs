@@ -6,7 +6,7 @@ use anyhow::Result;
 use super::Args;
 use crate::accel::{simulate_trace, AccelConfig, LayerDesc, SimReport};
 use crate::bench::Table;
-use crate::compress::{all_codecs, Codec, DenseCodec};
+use crate::compress::{all_codecs, from_name, DenseCodec};
 use crate::tensor::Tensor;
 use crate::zebra::bandwidth::fmt_bytes;
 
@@ -35,10 +35,9 @@ pub fn run(args: &Args) -> Result<()> {
         t.print(&format!("Accelerator simulation — {} (all codecs)", tr.model));
     } else {
         let name = args.get_or("codec", "zero-block");
-        let codec: Box<dyn Codec> = all_codecs(block)
-            .into_iter()
-            .find(|c| c.name() == name)
-            .ok_or_else(|| anyhow::anyhow!("unknown codec {name}"))?;
+        // Registry-backed parsing: an unknown name errors with the full
+        // list of valid codec names.
+        let codec = from_name(&name, block)?;
         let r = simulate_trace(&cfg, &layers, &tensors, codec.as_ref())?;
         per_layer_table(&r).print(&format!(
             "Accelerator simulation — {} with {}",

@@ -1,7 +1,7 @@
 //! Dense (identity) codec — raw f32 bytes, the "required bandwidth"
 //! baseline every reduction percentage is computed against.
 
-use super::{Codec, Encoded};
+use super::{pop_f32s, push_f32s, Codec, CodecId, EncodedView, SpillBuf};
 use crate::tensor::Tensor;
 
 pub struct DenseCodec;
@@ -11,21 +11,24 @@ impl Codec for DenseCodec {
         "dense"
     }
 
-    fn encode(&self, x: &Tensor) -> Encoded {
-        let mut payload = Vec::with_capacity(x.len() * 4);
-        for &v in x.data() {
-            payload.extend_from_slice(&v.to_le_bytes());
-        }
-        Encoded { payload, index: Vec::new(), shape: x.shape().to_vec() }
+    fn id(&self) -> CodecId {
+        CodecId::Dense
     }
 
-    fn decode(&self, e: &Encoded) -> Tensor {
-        let data: Vec<f32> = e
-            .payload
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        Tensor::from_vec(&e.shape, data)
+    fn encode_into(&self, x: &Tensor, out: &mut SpillBuf) {
+        let (payload, _index) = out.begin(CodecId::Dense, 0, x.shape());
+        payload.reserve(x.nbytes());
+        push_f32s(payload, x.data());
+    }
+
+    fn decode_into(&self, e: EncodedView<'_>, out: &mut Tensor) {
+        assert_eq!(
+            e.payload.len(),
+            e.volume() * 4,
+            "dense payload must be 4 bytes per element"
+        );
+        out.resize_zeroed(e.shape());
+        pop_f32s(e.payload, out.data_mut());
     }
 }
 
@@ -48,5 +51,20 @@ mod tests {
         for (a, b) in x.data().iter().zip(y.data()) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn streaming_reuse_shrinks_and_grows() {
+        let mut buf = super::super::SpillBuf::new();
+        let big = Tensor::zeros(&[1, 4, 8, 8]);
+        let small = Tensor::zeros(&[1, 1, 2, 2]);
+        DenseCodec.encode_into(&big, &mut buf);
+        assert_eq!(buf.payload().len(), big.nbytes());
+        DenseCodec.encode_into(&small, &mut buf);
+        assert_eq!(buf.payload().len(), small.nbytes());
+        assert_eq!(buf.shape(), small.shape());
+        let mut out = Tensor::zeros(&[0]);
+        DenseCodec.decode_into(buf.view(), &mut out);
+        assert_eq!(out, small);
     }
 }

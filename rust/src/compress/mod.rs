@@ -1,11 +1,31 @@
-//! Activation-spill codecs: what actually crosses the DRAM bus.
+//! Activation-spill codecs v2: what actually crosses the DRAM bus, as
+//! a streaming, buffer-reusing API plus a versioned wire format.
 //!
 //! The accelerator simulator (DESIGN.md §9) and the serving coordinator
 //! compress every activation spill through one of these codecs; the
 //! difference in encoded size *is* the paper's "reduced memory
-//! bandwidth".
+//! bandwidth". Because the codec sits on the hot path of every spill,
+//! the API is built around three pieces:
 //!
-//! Implemented codecs:
+//! 1. **Streaming encode/decode** — [`Codec::encode_into`] writes into a
+//!    caller-owned [`SpillBuf`] whose payload/index arenas are reused
+//!    across spills (no per-spill allocation), and
+//!    [`Codec::decode_into`] paints into a caller-owned [`Tensor`] that
+//!    is resized in place. The thin [`Codec::encode`]/[`Codec::decode`]
+//!    wrappers keep the one-shot convenience API (and the original
+//!    round-trip property tests) intact.
+//! 2. **A codec registry** — [`registry`], [`CodecId`], [`from_name`],
+//!    [`from_id`] — the single source of truth for [`all_codecs`], CLI
+//!    `--codec` parsing, and bench sweeps.
+//! 3. **The `.zspill` wire format** — [`Encoded::to_bytes`] /
+//!    [`EncodedView::parse`]: a self-describing frame (magic, version,
+//!    codec id + parameter, shape, section lengths, checksum) so spills
+//!    can be persisted and streamed between coordinator nodes. Parsing
+//!    is strictly bounds-checked and returns [`WireError`] — never
+//!    panics — on truncated or corrupt input. The field-by-field layout
+//!    is documented in `rust/docs/zspill.md`.
+//!
+//! Implemented codecs (see [`registry`]):
 //! - [`DenseCodec`] — raw f32 maps (no compression; the paper's
 //!   "required bandwidth" baseline).
 //! - [`WholeMapCodec`] — ref [11]'s dynamic run-time pruning: skip a map
@@ -17,7 +37,9 @@
 //!   blocks skipped, kept blocks stored verbatim (Eq. 2–3).
 //!
 //! Every codec is exact (lossless given the already-pruned input):
-//! `decode(encode(x)) == x` is property-tested for all of them.
+//! `decode(encode(x)) == x` is property-tested for all of them, through
+//! both the buffer-reusing and the allocating paths, and
+//! `parse(to_bytes(e)) == e` is property-tested for the wire format.
 
 mod dense;
 mod rle;
@@ -31,17 +53,113 @@ pub use zero_block::ZeroBlockCodec;
 
 use crate::tensor::Tensor;
 
-/// One encoded spill: payload + the side-band index the hardware would
-/// keep (e.g. Zebra's block bitmap). Sizes are what the DRAM model
-/// charges for.
-#[derive(Debug, Clone)]
+/// Maximum tensor rank a `.zspill` frame can describe.
+pub const MAX_DIMS: usize = 8;
+
+/// `.zspill` frame magic.
+pub const ZSPILL_MAGIC: [u8; 4] = *b"ZSPL";
+
+/// `.zspill` format version written by this crate.
+pub const ZSPILL_VERSION: u16 = 2;
+
+/// Fixed-size part of the frame header (before the shape dims).
+const HDR_FIXED: usize = 32;
+
+/// Byte offset of the checksum field inside the header.
+const CK_OFF: usize = 12;
+
+// ---------------------------------------------------------------------
+// Codec identity
+// ---------------------------------------------------------------------
+
+/// Stable on-wire codec identifier (`.zspill` header field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+#[repr(u16)]
+pub enum CodecId {
+    #[default]
+    Dense = 0,
+    WholeMap = 1,
+    RleZero = 2,
+    ZeroBlock = 3,
+}
+
+impl CodecId {
+    pub fn as_u16(self) -> u16 {
+        self as u16
+    }
+
+    pub fn from_u16(v: u16) -> Option<CodecId> {
+        match v {
+            0 => Some(CodecId::Dense),
+            1 => Some(CodecId::WholeMap),
+            2 => Some(CodecId::RleZero),
+            3 => Some(CodecId::ZeroBlock),
+            _ => None,
+        }
+    }
+
+    /// Registry name for this id.
+    pub fn name(self) -> &'static str {
+        registry()
+            .iter()
+            .find(|s| s.id == self)
+            .map(|s| s.name)
+            .unwrap_or("?")
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shapes (inline, so EncodedView stays Copy and zero-alloc)
+// ---------------------------------------------------------------------
+
+/// A small inline shape (up to [`MAX_DIMS`] dims) carried by encoded
+/// spills without heap allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Shape {
+    dims: [usize; MAX_DIMS],
+    ndim: usize,
+}
+
+impl Shape {
+    pub fn from_slice(dims: &[usize]) -> Shape {
+        assert!(
+            dims.len() <= MAX_DIMS,
+            "rank {} exceeds MAX_DIMS {MAX_DIMS}",
+            dims.len()
+        );
+        let mut d = [0usize; MAX_DIMS];
+        d[..dims.len()].copy_from_slice(dims);
+        Shape { dims: d, ndim: dims.len() }
+    }
+
+    pub fn as_slice(&self) -> &[usize] {
+        &self.dims[..self.ndim]
+    }
+
+    pub fn volume(&self) -> usize {
+        self.as_slice().iter().product()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Owned + borrowed encoded spills
+// ---------------------------------------------------------------------
+
+/// One encoded spill (owned): payload + the side-band index the
+/// hardware would keep (e.g. Zebra's block bitmap). Sizes are what the
+/// DRAM model charges for.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Encoded {
+    /// Which codec produced this spill.
+    pub codec: CodecId,
+    /// Codec parameter carried on the wire (zero-block: block size `B`;
+    /// 0 for parameterless codecs).
+    pub param: u16,
     /// Main payload bytes (activation data actually stored).
     pub payload: Vec<u8>,
     /// Side-band index bytes (block bitmap / channel bitmap / run table).
     pub index: Vec<u8>,
-    /// Original tensor shape (carried out-of-band; shapes are static
-    /// per-layer in hardware and cost nothing per inference).
+    /// Original tensor shape.
     pub shape: Vec<usize>,
 }
 
@@ -50,24 +168,649 @@ impl Encoded {
     pub fn total_bytes(&self) -> usize {
         self.payload.len() + self.index.len()
     }
+
+    /// Borrow as a zero-copy [`EncodedView`].
+    pub fn view(&self) -> EncodedView<'_> {
+        EncodedView {
+            codec: self.codec,
+            param: self.param,
+            shape: Shape::from_slice(&self.shape),
+            payload: &self.payload,
+            index: &self.index,
+        }
+    }
+
+    /// Serialize as a self-describing `.zspill` frame.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.view().to_bytes()
+    }
 }
+
+/// A borrowed, zero-copy view of one encoded spill — what
+/// [`Codec::decode_into`] consumes and what [`EncodedView::parse`]
+/// returns over a `.zspill` byte buffer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EncodedView<'a> {
+    pub codec: CodecId,
+    pub param: u16,
+    shape: Shape,
+    pub payload: &'a [u8],
+    pub index: &'a [u8],
+}
+
+impl<'a> EncodedView<'a> {
+    pub fn shape(&self) -> &[usize] {
+        self.shape.as_slice()
+    }
+
+    /// Element count of the decoded tensor.
+    pub fn volume(&self) -> usize {
+        self.shape.volume()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.payload.len() + self.index.len()
+    }
+
+    /// Copy into an owned [`Encoded`].
+    pub fn to_encoded(&self) -> Encoded {
+        Encoded {
+            codec: self.codec,
+            param: self.param,
+            payload: self.payload.to_vec(),
+            index: self.index.to_vec(),
+            shape: self.shape.as_slice().to_vec(),
+        }
+    }
+
+    /// Exact byte length [`EncodedView::to_bytes`] would produce,
+    /// without building the frame (shipping metrics use this on the
+    /// hot path).
+    pub fn frame_len(&self) -> usize {
+        HDR_FIXED + 8 * self.shape.ndim + self.payload.len() + self.index.len()
+    }
+
+    /// Serialize as a `.zspill` frame (layout in `rust/docs/zspill.md`):
+    /// magic, version, codec id, rank, codec param, FNV-1a checksum,
+    /// section lengths, shape dims, payload, index.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let ndim = self.shape.ndim;
+        let mut out = Vec::with_capacity(
+            HDR_FIXED + 8 * ndim + self.payload.len() + self.index.len(),
+        );
+        out.extend_from_slice(&ZSPILL_MAGIC);
+        out.extend_from_slice(&ZSPILL_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.codec.as_u16().to_le_bytes());
+        out.extend_from_slice(&(ndim as u16).to_le_bytes());
+        out.extend_from_slice(&self.param.to_le_bytes());
+        out.extend_from_slice(&0u32.to_le_bytes()); // checksum backfill
+        out.extend_from_slice(&(self.payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&(self.index.len() as u64).to_le_bytes());
+        for &d in self.shape.as_slice() {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        out.extend_from_slice(self.payload);
+        out.extend_from_slice(self.index);
+        let ck = frame_checksum(&out);
+        out[CK_OFF..CK_OFF + 4].copy_from_slice(&ck.to_le_bytes());
+        out
+    }
+
+    /// Parse a `.zspill` frame. Strictly bounds-checked: truncated,
+    /// oversized-section, unknown-codec, or bit-flipped input returns
+    /// an error — this function never panics and never allocates
+    /// proportionally to *declared* (unverified) lengths.
+    pub fn parse(bytes: &'a [u8]) -> Result<EncodedView<'a>, WireError> {
+        let have = bytes.len();
+        if have < HDR_FIXED {
+            return Err(WireError::Truncated { need: HDR_FIXED, have });
+        }
+        if bytes[0..4] != ZSPILL_MAGIC {
+            return Err(WireError::BadMagic([
+                bytes[0], bytes[1], bytes[2], bytes[3],
+            ]));
+        }
+        let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+        if version != ZSPILL_VERSION {
+            return Err(WireError::BadVersion(version));
+        }
+        let codec_raw = u16::from_le_bytes([bytes[6], bytes[7]]);
+        let codec = CodecId::from_u16(codec_raw)
+            .ok_or(WireError::UnknownCodec(codec_raw))?;
+        let ndim = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        if ndim > MAX_DIMS {
+            return Err(WireError::BadShape { ndim });
+        }
+        let param = u16::from_le_bytes([bytes[10], bytes[11]]);
+        let payload_len =
+            u64::from_le_bytes(bytes[16..24].try_into().expect("8 bytes"));
+        let index_len =
+            u64::from_le_bytes(bytes[24..32].try_into().expect("8 bytes"));
+        // Cap declared section lengths against the actual buffer before
+        // any of them is used for slicing or sizing.
+        let declared = (HDR_FIXED as u64 + 8 * ndim as u64)
+            .checked_add(payload_len)
+            .and_then(|v| v.checked_add(index_len))
+            .ok_or(WireError::Overflow)?;
+        if declared != have as u64 {
+            return Err(WireError::SectionMismatch {
+                declared,
+                have: have as u64,
+            });
+        }
+        let stored =
+            u32::from_le_bytes(bytes[CK_OFF..CK_OFF + 4].try_into().unwrap());
+        let computed = frame_checksum(bytes);
+        if stored != computed {
+            return Err(WireError::Checksum { stored, computed });
+        }
+        let mut shape = Shape::default();
+        for (dim, raw) in shape.dims[..ndim]
+            .iter_mut()
+            .zip(bytes[HDR_FIXED..].chunks_exact(8))
+        {
+            let d = u64::from_le_bytes(raw.try_into().expect("8 bytes"));
+            *dim = usize::try_from(d).map_err(|_| WireError::Overflow)?;
+        }
+        shape.ndim = ndim;
+        // A decoder allocates `volume` f32s; reject shapes whose volume
+        // does not even fit in usize.
+        shape
+            .as_slice()
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or(WireError::Overflow)?;
+        let p0 = HDR_FIXED + 8 * ndim;
+        let p1 = p0 + payload_len as usize;
+        let view = EncodedView {
+            codec,
+            param,
+            shape,
+            payload: &bytes[p0..p1],
+            index: &bytes[p1..],
+        };
+        // Per-codec structural validation: a frame that parses is
+        // guaranteed safe to decode (no panics, no out-of-bounds), even
+        // if an adversary re-checksummed inconsistent sections.
+        validate_sections(&view)?;
+        Ok(view)
+    }
+}
+
+/// Check that a frame's payload/index sections are internally
+/// consistent with its codec, parameter, and shape — the invariants
+/// each `decode_into` relies on. Rejecting here keeps
+/// [`Codec::decode_into`] panic-free for every parsed frame.
+fn validate_sections(v: &EncodedView<'_>) -> Result<(), WireError> {
+    let bad = |why: &'static str| Err(WireError::Inconsistent(why));
+    let volume = v.shape.volume();
+    match v.codec {
+        CodecId::Dense => {
+            if !v.index.is_empty() {
+                return bad("dense frames carry no index");
+            }
+            if Some(v.payload.len())
+                != volume.checked_mul(4)
+            {
+                return bad("dense payload must be 4 bytes per element");
+            }
+        }
+        CodecId::WholeMap => {
+            let s = v.shape.as_slice();
+            if s.len() != 4 {
+                return bad("whole-map frames must be NCHW");
+            }
+            let maps = match s[0].checked_mul(s[1]) {
+                Some(m) => m,
+                None => return bad("whole-map map count overflows"),
+            };
+            if v.index.len() != maps.div_ceil(8) {
+                return bad("whole-map index must be 1 bit per map");
+            }
+            let kept = count_set_bits(v.index, maps);
+            let per_map =
+                match s[2].checked_mul(s[3]).and_then(|p| p.checked_mul(4)) {
+                    Some(p) => p,
+                    None => return bad("whole-map plane size overflows"),
+                };
+            if Some(v.payload.len()) != kept.checked_mul(per_map) {
+                return bad("whole-map payload disagrees with index");
+            }
+        }
+        CodecId::RleZero => {
+            if !v.index.is_empty() {
+                return bad("rle-zero frames carry no index");
+            }
+            if v.payload.len() % 5 != 0 {
+                return bad("rle-zero stream must be 5-byte records");
+            }
+            let mut pos: usize = 0;
+            for rec in v.payload.chunks_exact(5) {
+                let run = rec[0] as usize;
+                let lit = f32::from_le_bytes([rec[1], rec[2], rec[3], rec[4]]);
+                pos = match pos.checked_add(run) {
+                    Some(p) => p,
+                    None => return bad("rle-zero run overflows"),
+                };
+                if lit != 0.0 {
+                    if pos >= volume {
+                        return bad("rle-zero literal past end of tensor");
+                    }
+                    pos += 1;
+                }
+            }
+        }
+        CodecId::ZeroBlock => {
+            let s = v.shape.as_slice();
+            if s.len() != 4 {
+                return bad("zero-block frames must be NCHW");
+            }
+            let b = v.param as usize;
+            if b == 0 || s[2] % b != 0 || s[3] % b != 0 {
+                return bad("zero-block param must divide the map");
+            }
+            let blocks = match s[0]
+                .checked_mul(s[1])
+                .and_then(|p| p.checked_mul(s[2] / b))
+                .and_then(|p| p.checked_mul(s[3] / b))
+            {
+                Some(p) => p,
+                None => return bad("zero-block block count overflows"),
+            };
+            if v.index.len() != blocks.div_ceil(8) {
+                return bad("zero-block index must be 1 bit per block");
+            }
+            let kept = count_set_bits(v.index, blocks);
+            if Some(v.payload.len())
+                != kept.checked_mul(b * b).and_then(|e| e.checked_mul(4))
+            {
+                return bad("zero-block payload disagrees with index");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Count set bits among the first `nbits` bits of `bytes` (padding bits
+/// in the final byte are ignored, matching the decoders).
+fn count_set_bits(bytes: &[u8], nbits: usize) -> usize {
+    let mut kept = 0usize;
+    for (i, &byte) in bytes.iter().enumerate() {
+        let valid = nbits.saturating_sub(i * 8).min(8);
+        let mask = if valid == 8 { 0xFF } else { (1u16 << valid) as u8 - 1 };
+        kept += (byte & mask).count_ones() as usize;
+    }
+    kept
+}
+
+/// `.zspill` parse failure. Every variant is a hard error: the frame
+/// must not be decoded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireError {
+    Truncated { need: usize, have: usize },
+    BadMagic([u8; 4]),
+    BadVersion(u16),
+    UnknownCodec(u16),
+    BadShape { ndim: usize },
+    /// Declared sizes overflow, or the shape volume overflows usize.
+    Overflow,
+    SectionMismatch { declared: u64, have: u64 },
+    Checksum { stored: u32, computed: u32 },
+    /// Sections are well-framed but internally inconsistent with the
+    /// codec/shape (e.g. a payload that disagrees with its index).
+    Inconsistent(&'static str),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { need, have } => {
+                write!(f, "zspill truncated: need {need} bytes, have {have}")
+            }
+            WireError::BadMagic(m) => {
+                write!(f, "zspill bad magic {m:02x?} (want \"ZSPL\")")
+            }
+            WireError::BadVersion(v) => {
+                write!(f, "zspill version {v} (this build reads {ZSPILL_VERSION})")
+            }
+            WireError::UnknownCodec(c) => {
+                write!(f, "zspill unknown codec id {c}")
+            }
+            WireError::BadShape { ndim } => {
+                write!(f, "zspill rank {ndim} exceeds MAX_DIMS {MAX_DIMS}")
+            }
+            WireError::Overflow => {
+                write!(f, "zspill declared sizes overflow")
+            }
+            WireError::SectionMismatch { declared, have } => write!(
+                f,
+                "zspill section lengths declare {declared} bytes, frame has {have}"
+            ),
+            WireError::Checksum { stored, computed } => write!(
+                f,
+                "zspill checksum mismatch: stored {stored:#010x}, computed {computed:#010x}"
+            ),
+            WireError::Inconsistent(why) => {
+                write!(f, "zspill sections inconsistent: {why}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// FNV-1a over `bytes`, continuing from `seed`.
+fn fnv1a(seed: u32, bytes: &[u8]) -> u32 {
+    let mut h = seed;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Frame checksum: FNV-1a over the whole frame with the checksum field
+/// itself treated as zero. FNV-1a's per-byte step is a bijection of the
+/// running state, so every single-bit corruption is detected.
+fn frame_checksum(frame: &[u8]) -> u32 {
+    let h = fnv1a(0x811c_9dc5, &frame[..CK_OFF]);
+    let h = fnv1a(h, &[0u8; 4]);
+    fnv1a(h, &frame[CK_OFF + 4..])
+}
+
+// ---------------------------------------------------------------------
+// SpillBuf: the reusable encode arena
+// ---------------------------------------------------------------------
+
+/// Caller-owned encode destination whose payload/index arenas survive
+/// across spills: the simulator's per-layer loop and each coordinator
+/// worker hold one `SpillBuf` and amortize all allocation away after
+/// the first (largest) spill.
+#[derive(Debug, Clone, Default)]
+pub struct SpillBuf {
+    payload: Vec<u8>,
+    index: Vec<u8>,
+    shape: Shape,
+    codec: CodecId,
+    param: u16,
+}
+
+impl SpillBuf {
+    pub fn new() -> SpillBuf {
+        SpillBuf::default()
+    }
+
+    /// Pre-size the arenas (e.g. to the largest spill in a plan).
+    pub fn with_capacity(payload: usize, index: usize) -> SpillBuf {
+        SpillBuf {
+            payload: Vec::with_capacity(payload),
+            index: Vec::with_capacity(index),
+            ..SpillBuf::default()
+        }
+    }
+
+    /// Start a new spill: clears both arenas (keeping capacity) and
+    /// records the codec identity + shape. Codecs call this first in
+    /// `encode_into` and then write into the returned arenas.
+    pub fn begin(
+        &mut self,
+        codec: CodecId,
+        param: u16,
+        shape: &[usize],
+    ) -> (&mut Vec<u8>, &mut Vec<u8>) {
+        self.payload.clear();
+        self.index.clear();
+        self.shape = Shape::from_slice(shape);
+        self.codec = codec;
+        self.param = param;
+        (&mut self.payload, &mut self.index)
+    }
+
+    pub fn payload(&self) -> &[u8] {
+        &self.payload
+    }
+
+    pub fn index(&self) -> &[u8] {
+        &self.index
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        self.shape.as_slice()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.payload.len() + self.index.len()
+    }
+
+    /// Borrow the current contents as a zero-copy [`EncodedView`].
+    pub fn view(&self) -> EncodedView<'_> {
+        EncodedView {
+            codec: self.codec,
+            param: self.param,
+            shape: self.shape,
+            payload: &self.payload,
+            index: &self.index,
+        }
+    }
+
+    /// Move the contents out as an owned [`Encoded`] (no copy).
+    pub fn into_encoded(self) -> Encoded {
+        Encoded {
+            codec: self.codec,
+            param: self.param,
+            shape: self.shape.as_slice().to_vec(),
+            payload: self.payload,
+            index: self.index,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The codec trait
+// ---------------------------------------------------------------------
 
 /// An activation codec. `block` geometry (where relevant) is fixed at
-/// construction; `encode`/`decode` must round-trip exactly.
+/// construction; encode/decode must round-trip exactly. The `_into`
+/// methods are the hot path (no allocation beyond arena growth); the
+/// `encode`/`decode` wrappers allocate per call and exist for
+/// convenience and for property tests.
 pub trait Codec: Send + Sync {
     fn name(&self) -> &'static str;
-    fn encode(&self, x: &Tensor) -> Encoded;
-    fn decode(&self, e: &Encoded) -> Tensor;
+
+    /// Stable wire identity.
+    fn id(&self) -> CodecId;
+
+    /// Codec parameter carried in the `.zspill` header (zero-block:
+    /// block size; 0 for parameterless codecs).
+    fn wire_param(&self) -> u16 {
+        0
+    }
+
+    /// Encode `x` into `out`, reusing its arenas.
+    fn encode_into(&self, x: &Tensor, out: &mut SpillBuf);
+
+    /// Decode `e` into `out`, resizing it in place. Panics on encoded
+    /// data that is internally inconsistent (in-memory spills are
+    /// trusted; wire input goes through [`EncodedView::parse`] first,
+    /// which rejects corrupt frames).
+    fn decode_into(&self, e: EncodedView<'_>, out: &mut Tensor);
+
+    /// Allocating convenience wrapper over [`Codec::encode_into`].
+    fn encode(&self, x: &Tensor) -> Encoded {
+        let mut buf = SpillBuf::new();
+        self.encode_into(x, &mut buf);
+        buf.into_encoded()
+    }
+
+    /// Allocating convenience wrapper over [`Codec::decode_into`].
+    fn decode(&self, e: &Encoded) -> Tensor {
+        let mut out = Tensor::zeros(&[0]);
+        self.decode_into(e.view(), &mut out);
+        out
+    }
 }
 
-/// All codecs at a given Zebra block size (bench sweeps).
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// One registry entry: identity, description, and a constructor.
+pub struct CodecSpec {
+    pub id: CodecId,
+    pub name: &'static str,
+    pub summary: &'static str,
+    /// Whether the constructor's `block` argument is meaningful (and
+    /// must be positive).
+    pub needs_block: bool,
+    make: fn(usize) -> Box<dyn Codec>,
+}
+
+impl CodecSpec {
+    /// Construct this codec. `block` is ignored unless `needs_block`.
+    pub fn build(&self, block: usize) -> Box<dyn Codec> {
+        (self.make)(block)
+    }
+}
+
+static REGISTRY: [CodecSpec; 4] = [
+    CodecSpec {
+        id: CodecId::Dense,
+        name: "dense",
+        summary: "raw f32 maps (required-bandwidth baseline)",
+        needs_block: false,
+        make: |_| Box::new(DenseCodec),
+    },
+    CodecSpec {
+        id: CodecId::WholeMap,
+        name: "whole-map",
+        summary: "skip all-zero channel planes (ref [11])",
+        needs_block: false,
+        make: |_| Box::new(WholeMapCodec),
+    },
+    CodecSpec {
+        id: CodecId::RleZero,
+        name: "rle-zero",
+        summary: "per-element zero-run-length encoding (Eyeriss RLC)",
+        needs_block: false,
+        make: |_| Box::new(RleZeroCodec),
+    },
+    CodecSpec {
+        id: CodecId::ZeroBlock,
+        name: "zero-block",
+        summary: "Zebra: 1 bit per BxB block, zero blocks skipped",
+        needs_block: true,
+        make: |b| Box::new(ZeroBlockCodec::new(b)),
+    },
+];
+
+/// The codec registry — single source of truth for codec names, wire
+/// ids, and constructors.
+pub fn registry() -> &'static [CodecSpec] {
+    &REGISTRY
+}
+
+/// Registry entry for `name`, if any.
+pub fn spec(name: &str) -> Option<&'static CodecSpec> {
+    registry().iter().find(|s| s.name == name)
+}
+
+/// Registry entry for `name`, or an error listing every valid name —
+/// the one message all CLI `--codec`-style flags share.
+pub fn spec_or_err(name: &str) -> anyhow::Result<&'static CodecSpec> {
+    spec(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown codec {name:?} (valid: {})",
+            codec_names().join(", ")
+        )
+    })
+}
+
+/// All registered codec names, in registry order.
+pub fn codec_names() -> Vec<&'static str> {
+    registry().iter().map(|s| s.name).collect()
+}
+
+/// Build a codec by registry name (CLI `--codec` parsing). The error
+/// for an unknown name lists every valid name.
+pub fn from_name(name: &str, block: usize) -> anyhow::Result<Box<dyn Codec>> {
+    let spec = spec_or_err(name)?;
+    anyhow::ensure!(
+        !spec.needs_block || block > 0,
+        "codec {name:?} needs a positive block size"
+    );
+    Ok(spec.build(block))
+}
+
+/// Build a codec from its wire identity (`.zspill` header fields).
+pub fn from_id(id: CodecId, param: u16) -> anyhow::Result<Box<dyn Codec>> {
+    let spec = registry()
+        .iter()
+        .find(|s| s.id == id)
+        .expect("every CodecId is registered");
+    anyhow::ensure!(
+        !spec.needs_block || param > 0,
+        "codec {:?} frame carries block size 0",
+        spec.name
+    );
+    Ok(spec.build(param as usize))
+}
+
+/// Parse a `.zspill` frame and decode it with the codec named in its
+/// own header (the coordinator's receive path for shipped spills).
+pub fn decode_frame(bytes: &[u8]) -> anyhow::Result<Tensor> {
+    let view = EncodedView::parse(bytes)?;
+    let codec = from_id(view.codec, view.param)?;
+    let mut out = Tensor::zeros(&[0]);
+    codec.decode_into(view, &mut out);
+    Ok(out)
+}
+
+/// All codecs at a given Zebra block size (bench sweeps), built from
+/// the registry.
 pub fn all_codecs(block: usize) -> Vec<Box<dyn Codec>> {
-    vec![
-        Box::new(DenseCodec),
-        Box::new(WholeMapCodec),
-        Box::new(RleZeroCodec),
-        Box::new(ZeroBlockCodec::new(block)),
-    ]
+    registry().iter().map(|s| s.build(block)).collect()
+}
+
+// ---------------------------------------------------------------------
+// Shared byte plumbing for codec impls
+// ---------------------------------------------------------------------
+
+/// Append a row of f32s to a byte arena. On little-endian targets this
+/// is one bulk memcpy (§Perf: the per-element `to_le_bytes` loop capped
+/// the encoder at ~1.9 GB/s; bulk rows more than doubled it).
+#[inline]
+pub(crate) fn push_f32s(payload: &mut Vec<u8>, row: &[f32]) {
+    #[cfg(target_endian = "little")]
+    {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(row.as_ptr() as *const u8, row.len() * 4)
+        };
+        payload.extend_from_slice(bytes);
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        for &v in row {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Copy a row of f32s out of an encoded byte stream.
+#[inline]
+pub(crate) fn pop_f32s(src: &[u8], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len() * 4);
+    #[cfg(target_endian = "little")]
+    unsafe {
+        std::ptr::copy_nonoverlapping(
+            src.as_ptr(),
+            dst.as_mut_ptr() as *mut u8,
+            dst.len() * 4,
+        );
+    }
+    #[cfg(not(target_endian = "little"))]
+    for (i, chunk) in src.chunks_exact(4).enumerate() {
+        dst[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+    }
 }
 
 #[cfg(test)]
@@ -123,6 +866,26 @@ mod tests {
     }
 
     #[test]
+    fn spillbuf_reuse_matches_fresh_encode() {
+        let mut rng = Rng::new(9);
+        let mut buf = SpillBuf::new();
+        let mut out = Tensor::zeros(&[0]);
+        for _ in 0..10 {
+            let x = random_spill(&mut rng, 4);
+            for codec in all_codecs(4) {
+                codec.encode_into(&x, &mut buf);
+                let fresh = codec.encode(&x);
+                assert_eq!(buf.payload(), &fresh.payload[..]);
+                assert_eq!(buf.index(), &fresh.index[..]);
+                assert_eq!(buf.view().to_encoded(), fresh);
+                assert_eq!(buf.shape(), x.shape());
+                codec.decode_into(buf.view(), &mut out);
+                assert_eq!(out, x, "codec {} reuse decode", codec.name());
+            }
+        }
+    }
+
+    #[test]
     fn zero_block_beats_dense_on_sparse_input() {
         let mut rng = Rng::new(42);
         let mut wins = 0;
@@ -144,6 +907,192 @@ mod tests {
         for codec in all_codecs(2) {
             let e = codec.encode(&x);
             assert_eq!(e.total_bytes(), e.payload.len() + e.index.len());
+            assert_eq!(e.view().total_bytes(), e.total_bytes());
         }
+    }
+
+    #[test]
+    fn registry_is_source_of_truth() {
+        assert_eq!(
+            codec_names(),
+            vec!["dense", "whole-map", "rle-zero", "zero-block"]
+        );
+        for spec in registry() {
+            let c = spec.build(4);
+            assert_eq!(c.name(), spec.name);
+            assert_eq!(c.id(), spec.id);
+            assert_eq!(CodecId::from_u16(spec.id.as_u16()), Some(spec.id));
+            assert_eq!(spec.id.name(), spec.name);
+        }
+        assert!(from_name("zero-block", 4).is_ok());
+        assert!(from_name("zero-block", 0).is_err(), "block 0 must be rejected");
+        let err = from_name("nope", 4).unwrap_err().to_string();
+        assert!(
+            err.contains("dense")
+                && err.contains("whole-map")
+                && err.contains("rle-zero")
+                && err.contains("zero-block"),
+            "unknown-codec error must list valid names, got: {err}"
+        );
+        assert!(from_id(CodecId::ZeroBlock, 0).is_err());
+        assert!(from_id(CodecId::Dense, 0).is_ok());
+    }
+
+    #[test]
+    fn zspill_roundtrip_all_codecs() {
+        forall(Config::cases(40), |rng| {
+            let block = [2usize, 4][rng.range(0, 1)];
+            let x = random_spill(rng, block);
+            for codec in all_codecs(block) {
+                let e = codec.encode(&x);
+                let bytes = e.to_bytes();
+                let v = EncodedView::parse(&bytes)
+                    .expect("valid frame must parse");
+                assert_eq!(v.to_encoded(), e, "codec {}", codec.name());
+                assert_eq!(v.param, codec.wire_param());
+                assert_eq!(
+                    e.view().frame_len(),
+                    bytes.len(),
+                    "frame_len must predict to_bytes exactly"
+                );
+                let y = decode_frame(&bytes).unwrap();
+                assert_eq!(y, x, "codec {} wire decode", codec.name());
+            }
+        });
+    }
+
+    #[test]
+    fn zspill_truncations_error_never_panic() {
+        // Exhaustive prefix sweep on one frame.
+        let x = Tensor::zeros(&[1, 1, 2, 2]);
+        let bytes = DenseCodec.encode(&x).to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(
+                EncodedView::parse(&bytes[..cut]).is_err(),
+                "prefix of {cut} bytes must not parse"
+            );
+        }
+        // Random truncations of random spills, all four codecs.
+        forall(Config::cases(40), |rng| {
+            let x = random_spill(rng, 2);
+            for codec in all_codecs(2) {
+                let bytes = codec.encode(&x).to_bytes();
+                let cut = rng.range(0, bytes.len() - 1);
+                assert!(
+                    EncodedView::parse(&bytes[..cut]).is_err(),
+                    "codec {}: truncation to {cut}/{} must error",
+                    codec.name(),
+                    bytes.len()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn zspill_bit_flips_error_never_panic() {
+        forall(Config::cases(80), |rng| {
+            let x = random_spill(rng, 2);
+            let codecs = all_codecs(2);
+            let codec = &codecs[rng.range(0, codecs.len() - 1)];
+            let mut bytes = codec.encode(&x).to_bytes();
+            let pos = rng.range(0, bytes.len() - 1);
+            let bit = rng.range(0, 7);
+            bytes[pos] ^= 1 << bit;
+            assert!(
+                EncodedView::parse(&bytes).is_err(),
+                "codec {}: single-bit flip at byte {pos} bit {bit} went \
+                 undetected",
+                codec.name()
+            );
+        });
+    }
+
+    #[test]
+    fn zspill_wrong_codec_id_errors() {
+        let x = Tensor::zeros(&[1, 2, 4, 4]);
+        // Unknown id.
+        let mut bytes = DenseCodec.encode(&x).to_bytes();
+        bytes[6] = 0xFF;
+        bytes[7] = 0xFF;
+        assert!(matches!(
+            EncodedView::parse(&bytes),
+            Err(WireError::UnknownCodec(0xFFFF))
+        ));
+        // A *valid but different* id is caught by the checksum.
+        let mut bytes = DenseCodec.encode(&x).to_bytes();
+        bytes[6] = CodecId::RleZero.as_u16() as u8;
+        assert!(EncodedView::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn zspill_lying_section_lengths_error() {
+        let x = Tensor::zeros(&[1, 1, 4, 4]);
+        // Claim a huge payload without providing the bytes: the
+        // declared length is capped against the actual buffer before
+        // any allocation or slicing happens.
+        let mut bytes = DenseCodec.encode(&x).to_bytes();
+        bytes[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(EncodedView::parse(&bytes).is_err());
+        // Shrinking one section without moving bytes is also an error.
+        let mut bytes = DenseCodec.encode(&x).to_bytes();
+        bytes[16..24].copy_from_slice(&0u64.to_le_bytes());
+        assert!(EncodedView::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn zspill_rechecksummed_inconsistent_sections_error() {
+        // An adversary can always fix the checksum; parse must still
+        // reject sections that disagree with the codec/shape, so
+        // decode_frame never panics on any byte string.
+        let x = Tensor::zeros(&[1, 1, 4, 4]);
+        let mut bad = DenseCodec.encode(&x);
+        bad.payload.truncate(8); // 2 elements instead of 16
+        let bytes = bad.to_bytes(); // well-framed, checksum recomputed
+        assert!(matches!(
+            EncodedView::parse(&bytes),
+            Err(WireError::Inconsistent(_))
+        ));
+        assert!(decode_frame(&bytes).is_err());
+
+        // Zero-block: claim a live block the payload doesn't carry.
+        let mut spill = Tensor::zeros(&[1, 1, 4, 4]);
+        spill.data_mut()[0] = 1.0;
+        let mut zb = ZeroBlockCodec::new(2).encode(&spill);
+        zb.index[0] |= 0b10;
+        assert!(matches!(
+            EncodedView::parse(&zb.to_bytes()),
+            Err(WireError::Inconsistent(_))
+        ));
+
+        // RLE: a literal landing past the end of the tensor.
+        let mut rle = RleZeroCodec.encode(&Tensor::zeros(&[4]));
+        rle.payload.push(200);
+        rle.payload.extend_from_slice(&1.0f32.to_le_bytes());
+        assert!(matches!(
+            EncodedView::parse(&rle.to_bytes()),
+            Err(WireError::Inconsistent(_))
+        ));
+    }
+
+    #[test]
+    fn zspill_rejects_foreign_and_stale_frames() {
+        let x = Tensor::zeros(&[1, 1, 2, 2]);
+        let good = DenseCodec.encode(&x).to_bytes();
+        // Wrong magic.
+        let mut b = good.clone();
+        b[0..4].copy_from_slice(b"NOPE");
+        assert!(matches!(
+            EncodedView::parse(&b),
+            Err(WireError::BadMagic(_))
+        ));
+        // Future version.
+        let mut b = good.clone();
+        b[4..6].copy_from_slice(&99u16.to_le_bytes());
+        assert!(matches!(
+            EncodedView::parse(&b),
+            Err(WireError::BadVersion(99))
+        ));
+        assert!(EncodedView::parse(&[]).is_err());
+        assert!(EncodedView::parse(b"ZSPL").is_err());
     }
 }

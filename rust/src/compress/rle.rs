@@ -9,13 +9,11 @@
 //!
 //! Stream layout: repeated records `[run_len: u8][value: f32 LE]`,
 //! where `run_len` zeros precede `value`. Runs longer than 255 emit
-//! `[255][0.0f32]` continuation records. A trailing zero-run is encoded
-//! as continuation records plus a final `[run][NaN sentinel]`? — no:
-//! the decoder knows the total element count from the shape, so a final
-//! partial record `[run_len][value]` is only emitted for a literal; any
-//! remaining elements after the stream are zeros by construction.
+//! `[255][0.0f32]` continuation records. The decoder knows the total
+//! element count from the shape, so any remaining elements after the
+//! stream are zeros by construction (trailing zero-runs are free).
 
-use super::{Codec, Encoded};
+use super::{Codec, CodecId, EncodedView, SpillBuf};
 use crate::tensor::Tensor;
 
 pub struct RleZeroCodec;
@@ -25,8 +23,12 @@ impl Codec for RleZeroCodec {
         "rle-zero"
     }
 
-    fn encode(&self, x: &Tensor) -> Encoded {
-        let mut payload = Vec::new();
+    fn id(&self) -> CodecId {
+        CodecId::RleZero
+    }
+
+    fn encode_into(&self, x: &Tensor, out: &mut SpillBuf) {
+        let (payload, _index) = out.begin(CodecId::RleZero, 0, x.shape());
         let mut run: usize = 0;
         for &v in x.data() {
             if v == 0.0 {
@@ -43,12 +45,11 @@ impl Codec for RleZeroCodec {
             run = 0;
         }
         // Trailing zeros are implicit (decoder zero-fills to volume).
-        Encoded { payload, index: Vec::new(), shape: x.shape().to_vec() }
     }
 
-    fn decode(&self, e: &Encoded) -> Tensor {
-        let volume: usize = e.shape.iter().product();
-        let mut data = vec![0.0f32; volume];
+    fn decode_into(&self, e: EncodedView<'_>, out: &mut Tensor) {
+        out.resize_zeroed(e.shape());
+        let data = out.data_mut();
         let mut pos = 0usize;
         let mut i = 0usize;
         while i + 5 <= e.payload.len() {
@@ -63,7 +64,6 @@ impl Codec for RleZeroCodec {
             // v == 0.0 records are run continuations (no literal).
             i += 5;
         }
-        Tensor::from_vec(&e.shape, data)
     }
 }
 

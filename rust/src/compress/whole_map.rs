@@ -4,7 +4,7 @@
 //! (n, c) map. The paper's Table I "whole map" row shows why this saves
 //! little — large maps are almost never entirely zero.
 
-use super::{Codec, Encoded};
+use super::{pop_f32s, push_f32s, Codec, CodecId, EncodedView, SpillBuf};
 use crate::tensor::Tensor;
 
 pub struct WholeMapCodec;
@@ -14,46 +14,46 @@ impl Codec for WholeMapCodec {
         "whole-map"
     }
 
-    fn encode(&self, x: &Tensor) -> Encoded {
+    fn id(&self) -> CodecId {
+        CodecId::WholeMap
+    }
+
+    fn encode_into(&self, x: &Tensor, out: &mut SpillBuf) {
         let s = x.shape();
         assert_eq!(s.len(), 4, "whole-map codec wants NCHW");
         let (n, c) = (s[0], s[1]);
-        let maps = n * c;
-        let mut index = vec![0u8; maps.div_ceil(8)];
-        let mut payload = Vec::new();
+        let (payload, index) = out.begin(CodecId::WholeMap, 0, s);
+        index.resize((n * c).div_ceil(8), 0);
         for nn in 0..n {
             for cc in 0..c {
                 let plane = x.plane(nn, cc);
-                let live = plane.iter().any(|&v| v != 0.0);
-                let id = nn * c + cc;
-                if live {
+                if plane.iter().any(|&v| v != 0.0) {
+                    let id = nn * c + cc;
                     index[id / 8] |= 1 << (id % 8);
-                    for &v in plane {
-                        payload.extend_from_slice(&v.to_le_bytes());
-                    }
+                    push_f32s(payload, plane);
                 }
             }
         }
-        Encoded { payload, index, shape: s.to_vec() }
     }
 
-    fn decode(&self, e: &Encoded) -> Tensor {
-        let (n, c, h, w) = (e.shape[0], e.shape[1], e.shape[2], e.shape[3]);
+    fn decode_into(&self, e: EncodedView<'_>, out: &mut Tensor) {
+        let s = e.shape();
+        assert_eq!(s.len(), 4, "whole-map codec wants NCHW");
+        let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
         let per = h * w;
-        let mut data = vec![0.0f32; n * c * per];
+        out.resize_zeroed(s);
+        let data = out.data_mut();
         let mut off = 0;
         for id in 0..n * c {
             let live = (e.index[id / 8] >> (id % 8)) & 1 == 1;
             if live {
-                for i in 0..per {
-                    let b = &e.payload[off + i * 4..off + i * 4 + 4];
-                    data[id * per + i] =
-                        f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
-                }
+                pop_f32s(
+                    &e.payload[off..off + per * 4],
+                    &mut data[id * per..(id + 1) * per],
+                );
                 off += per * 4;
             }
         }
-        Tensor::from_vec(&e.shape, data)
     }
 }
 

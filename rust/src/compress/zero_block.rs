@@ -8,47 +8,14 @@
 //! zeroed sub-threshold blocks, so the codec itself is lossless and
 //! threshold-free (it also captures *natural* zero blocks at T_obj = 0,
 //! the paper's baseline rows).
+//!
+//! The bitmap is written straight into the [`SpillBuf`] index arena in
+//! the same little-endian bit order `BlockMask::to_bytes` uses, so
+//! `.zspill` frames are byte-identical across both paths.
 
-use super::{Codec, Encoded};
+use super::{pop_f32s, push_f32s, Codec, CodecId, EncodedView, SpillBuf};
 use crate::tensor::Tensor;
-use crate::zebra::blocks::{BlockGrid, BlockMask};
-
-/// Append a row of f32s to a byte vector. On little-endian targets this
-/// is one bulk memcpy (§Perf: the per-element `to_le_bytes` loop capped
-/// the encoder at ~1.9 GB/s; bulk rows more than doubled it).
-#[inline]
-fn push_f32_row(payload: &mut Vec<u8>, row: &[f32]) {
-    #[cfg(target_endian = "little")]
-    {
-        let bytes = unsafe {
-            std::slice::from_raw_parts(row.as_ptr() as *const u8, row.len() * 4)
-        };
-        payload.extend_from_slice(bytes);
-    }
-    #[cfg(not(target_endian = "little"))]
-    {
-        for &v in row {
-            payload.extend_from_slice(&v.to_le_bytes());
-        }
-    }
-}
-
-/// Copy a row of f32s out of the encoded byte stream.
-#[inline]
-fn pop_f32_row(src: &[u8], dst: &mut [f32]) {
-    #[cfg(target_endian = "little")]
-    unsafe {
-        std::ptr::copy_nonoverlapping(
-            src.as_ptr(),
-            dst.as_mut_ptr() as *mut u8,
-            dst.len() * 4,
-        );
-    }
-    #[cfg(not(target_endian = "little"))]
-    for (i, chunk) in src.chunks_exact(4).enumerate() {
-        dst[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
-    }
-}
+use crate::zebra::blocks::BlockGrid;
 
 pub struct ZeroBlockCodec {
     block: usize,
@@ -57,6 +24,10 @@ pub struct ZeroBlockCodec {
 impl ZeroBlockCodec {
     pub fn new(block: usize) -> Self {
         assert!(block > 0);
+        assert!(
+            block <= u16::MAX as usize,
+            "block size must fit the .zspill u16 param field"
+        );
         ZeroBlockCodec { block }
     }
 
@@ -75,13 +46,24 @@ impl Codec for ZeroBlockCodec {
         "zero-block"
     }
 
-    fn encode(&self, x: &Tensor) -> Encoded {
+    fn id(&self) -> CodecId {
+        CodecId::ZeroBlock
+    }
+
+    fn wire_param(&self) -> u16 {
+        self.block as u16
+    }
+
+    fn encode_into(&self, x: &Tensor, out: &mut SpillBuf) {
         let grid = self.grid_for(x.shape());
         let b = self.block;
         let (hb, wb, w) = (grid.hb(), grid.wb(), grid.w);
-        let mut mask = BlockMask::new_zeroed(grid);
-        // Presize for the worst case (fully dense) to avoid regrowth.
-        let mut payload = Vec::with_capacity(x.nbytes());
+        let (payload, index) =
+            out.begin(CodecId::ZeroBlock, b as u16, x.shape());
+        // Presize for the worst case (fully dense) to avoid regrowth;
+        // after the first spill this is a no-op on a reused arena.
+        payload.reserve(x.nbytes());
+        index.resize(grid.index_bytes(), 0);
         for n in 0..grid.n {
             for c in 0..grid.c {
                 let plane = x.plane(n, c);
@@ -98,28 +80,32 @@ impl Codec for ZeroBlockCodec {
                             }
                         }
                         if live {
-                            mask.set(grid.block_id(n, c, by, bx), true);
+                            let id = grid.block_id(n, c, by, bx);
+                            index[id / 8] |= 1 << (id % 8);
                             for dy in 0..b {
                                 let row = (by * b + dy) * w + bx * b;
-                                push_f32_row(
-                                    &mut payload,
-                                    &plane[row..row + b],
-                                );
+                                push_f32s(payload, &plane[row..row + b]);
                             }
                         }
                     }
                 }
             }
         }
-        Encoded { payload, index: mask.to_bytes(), shape: x.shape().to_vec() }
     }
 
-    fn decode(&self, e: &Encoded) -> Tensor {
-        let grid = self.grid_for(&e.shape);
-        let mask = BlockMask::from_bytes(grid, &e.index);
+    fn decode_into(&self, e: EncodedView<'_>, out: &mut Tensor) {
+        let grid = self.grid_for(e.shape());
+        assert_eq!(
+            e.index.len(),
+            grid.index_bytes(),
+            "index size mismatch for {:?} at block {}",
+            e.shape(),
+            self.block
+        );
         let b = self.block;
         let (hb, wb, w) = (grid.hb(), grid.wb(), grid.w);
-        let mut t = Tensor::zeros(&e.shape);
+        out.resize_zeroed(e.shape());
+        let data = out.data_mut();
         let mut off = 0usize;
         for n in 0..grid.n {
             for c in 0..grid.c {
@@ -127,14 +113,15 @@ impl Codec for ZeroBlockCodec {
                 let base = (n * grid.c + c) * per;
                 for by in 0..hb {
                     for bx in 0..wb {
-                        if !mask.get(grid.block_id(n, c, by, bx)) {
+                        let id = grid.block_id(n, c, by, bx);
+                        if (e.index[id / 8] >> (id % 8)) & 1 == 0 {
                             continue;
                         }
                         for dy in 0..b {
                             let row = base + (by * b + dy) * w + bx * b;
-                            pop_f32_row(
+                            pop_f32s(
                                 &e.payload[off..off + 4 * b],
-                                &mut t.data_mut()[row..row + b],
+                                &mut data[row..row + b],
                             );
                             off += 4 * b;
                         }
@@ -142,7 +129,6 @@ impl Codec for ZeroBlockCodec {
                 }
             }
         }
-        t
     }
 }
 
@@ -151,6 +137,7 @@ mod tests {
     use super::*;
     use crate::util::prng::Rng;
     use crate::util::prop::{forall, Config};
+    use crate::zebra::blocks::BlockMask;
     use crate::zebra::prune::{relu_prune, Thresholds};
 
     #[test]
@@ -190,6 +177,24 @@ mod tests {
             // Eq. 3: index = ceil(num_blocks / 8) bytes.
             assert_eq!(e.index.len(), mask.grid.index_bytes());
             assert_eq!(ZeroBlockCodec::new(b).decode(&e), pruned);
+        });
+    }
+
+    #[test]
+    fn index_bit_order_matches_block_mask() {
+        // The streamed bitmap must stay byte-identical to
+        // BlockMask::to_bytes — the layout `.zspill` freezes.
+        forall(Config::cases(20), |rng| {
+            let x = crate::compress::test_util::random_spill(rng, 2);
+            let e = ZeroBlockCodec::new(2).encode(&x);
+            let mask =
+                crate::zebra::prune::block_mask(&x, &Thresholds::Scalar(0.0), 2);
+            assert_eq!(e.index, mask.to_bytes());
+            let s = x.shape();
+            let grid = crate::zebra::blocks::BlockGrid::new(
+                s[0], s[1], s[2], s[3], 2,
+            );
+            assert_eq!(BlockMask::from_bytes(grid, &e.index), mask);
         });
     }
 }

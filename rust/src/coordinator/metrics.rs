@@ -17,6 +17,9 @@ pub struct Metrics {
     pub dense_bytes: AtomicU64,
     pub stored_bytes: AtomicU64,
     pub index_bytes: AtomicU64,
+    /// `.zspill` frame bytes produced for cross-node spill shipping
+    /// (0 unless `ServerConfig::ship_spills` is set).
+    pub shipped_spill_bytes: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
 }
 
@@ -76,7 +79,7 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "requests={} responses={} batches={} mean_batch={:.2} \
-             padded={} p50={}us p99={}us bw_reduction={:.1}%",
+             padded={} p50={}us p99={}us bw_reduction={:.1}% shipped={}B",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -85,6 +88,7 @@ impl Metrics {
             self.latency_percentile_us(0.5),
             self.latency_percentile_us(0.99),
             self.reduction_pct(),
+            self.shipped_spill_bytes.load(Ordering::Relaxed),
         )
     }
 }

@@ -7,6 +7,13 @@
 //! [`server::Response`] with logits and Eq. 2–3 bandwidth accounting
 //! derived from the model's own mask outputs.
 //!
+//! With [`ServerConfig::ship_spills`](server::ServerConfig) set, each
+//! worker additionally frames its executed batch as a versioned
+//! `.zspill` (see `compress` and `rust/docs/zspill.md`) through one
+//! per-worker reused [`crate::compress::SpillBuf`] — the wire bytes a
+//! multi-node deployment ships between coordinator nodes — and meters
+//! them in [`Metrics::shipped_spill_bytes`].
+//!
 //! Built on std threads + channels (tokio is not in the offline vendor
 //! set — DESIGN.md §7); at CPU-PJRT speeds a worker thread per client
 //! plus one executor thread is far from the bottleneck.
@@ -19,4 +26,5 @@ pub use batcher::{Batch, Batcher};
 pub use metrics::Metrics;
 pub use server::{
     BatchExecutor, PjrtExecutor, Request, Response, Server, ServerConfig,
+    ShipSpills,
 };

@@ -14,6 +14,7 @@ use anyhow::{anyhow, Context, Result};
 
 use super::batcher::Batcher;
 use super::metrics::Metrics;
+use crate::compress::{self, Codec, CodecId, SpillBuf};
 use crate::runtime::{ModelOutput, Runtime};
 use crate::tensor::Tensor;
 use crate::zebra::bandwidth::ELEM_BITS;
@@ -37,6 +38,9 @@ pub struct Response {
     pub dense_bytes: u64,
     pub stored_bytes: u64,
     pub index_bytes: u64,
+    /// This request's share of the `.zspill` frame bytes produced for
+    /// cross-node spill shipping (0 unless the server ships spills).
+    pub spill_frame_bytes: u64,
     pub latency: Duration,
 }
 
@@ -164,6 +168,16 @@ impl BatchExecutor for PjrtExecutor {
     }
 }
 
+/// Spill-shipping configuration: which codec frames each executed
+/// batch as a `.zspill` for a peer coordinator node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShipSpills {
+    pub codec: CodecId,
+    /// Block size for block-structured codecs (must divide the image
+    /// H/W); ignored by parameterless codecs.
+    pub block: u16,
+}
+
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -173,6 +187,11 @@ pub struct ServerConfig {
     pub workers: usize,
     /// Reject pushes beyond this queue depth (backpressure).
     pub max_queue: usize,
+    /// When set, each executed batch tensor is also encoded and framed
+    /// as a versioned `.zspill` — the bytes a multi-node deployment
+    /// ships to a peer — metered per worker through one reused
+    /// [`SpillBuf`] (no per-spill allocation on the request path).
+    pub ship_spills: Option<ShipSpills>,
 }
 
 impl Default for ServerConfig {
@@ -181,6 +200,7 @@ impl Default for ServerConfig {
             max_wait: Duration::from_millis(2),
             workers: 1,
             max_queue: 1024,
+            ship_spills: None,
         }
     }
 }
@@ -199,12 +219,29 @@ impl Server {
         let batcher =
             Arc::new(Batcher::new(exec.batch_sizes(), cfg.max_wait));
         let metrics = Arc::new(Metrics::new());
+        // Resolve the shipping codec once, up front: a bad codec id /
+        // block combination must fail at startup, not in a worker.
+        let shipper: Option<Arc<dyn Codec>> = cfg.ship_spills.map(|s| {
+            let codec = compress::from_id(s.codec, s.block)
+                .expect("ship_spills names an invalid codec");
+            let needs_block = compress::registry()
+                .iter()
+                .any(|r| r.id == s.codec && r.needs_block);
+            assert!(
+                !needs_block || exec.image_hw() % s.block as usize == 0,
+                "ship_spills block {} does not divide image size {}",
+                s.block,
+                exec.image_hw()
+            );
+            Arc::from(codec)
+        });
         let mut workers = Vec::new();
         for _ in 0..cfg.workers.max(1) {
             let b = batcher.clone();
             let m = metrics.clone();
             let e = exec.clone();
-            workers.push(std::thread::spawn(move || worker_loop(b, e, m)));
+            let s = shipper.clone();
+            workers.push(std::thread::spawn(move || worker_loop(b, e, m, s)));
         }
         Server {
             batcher,
@@ -253,8 +290,12 @@ fn worker_loop(
     batcher: Arc<Batcher<Request>>,
     exec: Arc<dyn BatchExecutor>,
     metrics: Arc<Metrics>,
+    shipper: Option<Arc<dyn Codec>>,
 ) {
     let hw = exec.image_hw();
+    // One SpillBuf per worker: spill-shipping reuses its arenas across
+    // every batch this worker ever executes.
+    let mut spill_buf = SpillBuf::new();
     while let Some(batch) = batcher.next_batch() {
         let n = batch.items.len();
         let exec_size = batch.exec_size;
@@ -270,8 +311,24 @@ fn worker_loop(
             let src = req.image.data();
             x.data_mut()[i * per..(i + 1) * per].copy_from_slice(src);
         }
+        // Cross-node shipping: encode the batch into the worker's
+        // reused SpillBuf and meter the exact `.zspill` frame size a
+        // peer node would receive (frame_len avoids materializing the
+        // frame — `spill_buf.view().to_bytes()` is the send path once a
+        // peer transport lands).
+        let frame_share = match &shipper {
+            Some(codec) => {
+                codec.encode_into(&x, &mut spill_buf);
+                let len = spill_buf.view().frame_len() as u64;
+                metrics
+                    .shipped_spill_bytes
+                    .fetch_add(len, Ordering::Relaxed);
+                len / exec_size.max(1) as u64
+            }
+            None => 0,
+        };
         match exec.execute(&x) {
-            Ok(out) => respond(batch.items, &out, &metrics),
+            Ok(out) => respond(batch.items, &out, &metrics, frame_share),
             Err(e) => {
                 // Failed batch: drop the reply channels; callers see a
                 // RecvError. Metrics still count the attempt.
@@ -281,7 +338,12 @@ fn worker_loop(
     }
 }
 
-fn respond(items: Vec<Request>, out: &ModelOutput, metrics: &Metrics) {
+fn respond(
+    items: Vec<Request>,
+    out: &ModelOutput,
+    metrics: &Metrics,
+    spill_frame_bytes: u64,
+) {
     let classes = out.logits.shape()[1];
     for (i, req) in items.into_iter().enumerate() {
         let logits =
@@ -314,6 +376,7 @@ fn respond(items: Vec<Request>, out: &ModelOutput, metrics: &Metrics) {
             dense_bytes: dense,
             stored_bytes: stored,
             index_bytes: index,
+            spill_frame_bytes,
             latency,
         });
     }
@@ -412,6 +475,58 @@ mod tests {
     }
 
     #[test]
+    fn ships_spill_frames_when_configured() {
+        let exec = Arc::new(MockExec {
+            hw: 4,
+            sizes: vec![1],
+            delay: Duration::ZERO,
+        });
+        let srv = Server::start(
+            exec,
+            ServerConfig {
+                max_wait: Duration::ZERO,
+                workers: 1,
+                max_queue: 16,
+                ship_spills: Some(ShipSpills {
+                    codec: CodecId::ZeroBlock,
+                    block: 2,
+                }),
+            },
+        );
+        let r = srv.classify(image(4, 0.9)).unwrap();
+        assert!(r.spill_frame_bytes > 0, "shipping must meter frame bytes");
+        let shipped =
+            srv.metrics.shipped_spill_bytes.load(Ordering::Relaxed);
+        assert!(shipped >= r.spill_frame_bytes);
+        // A second request reuses the worker's SpillBuf and ships an
+        // identically-sized frame (same image geometry).
+        let r2 = srv.classify(image(4, 0.9)).unwrap();
+        assert_eq!(r2.spill_frame_bytes, r.spill_frame_bytes);
+        assert_eq!(
+            srv.metrics.shipped_spill_bytes.load(Ordering::Relaxed),
+            2 * shipped
+        );
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shipping_disabled_reports_zero_frame_bytes() {
+        let exec = Arc::new(MockExec {
+            hw: 4,
+            sizes: vec![1],
+            delay: Duration::ZERO,
+        });
+        let srv = Server::start(exec, ServerConfig::default());
+        let r = srv.classify(image(4, 0.5)).unwrap();
+        assert_eq!(r.spill_frame_bytes, 0);
+        assert_eq!(
+            srv.metrics.shipped_spill_bytes.load(Ordering::Relaxed),
+            0
+        );
+        srv.shutdown();
+    }
+
+    #[test]
     fn batches_fill_under_concurrent_load() {
         let exec = Arc::new(MockExec {
             hw: 4,
@@ -424,6 +539,7 @@ mod tests {
                 max_wait: Duration::from_millis(10),
                 workers: 1,
                 max_queue: 1024,
+                ship_spills: None,
             },
         ));
         let mut waiters = Vec::new();
@@ -455,6 +571,7 @@ mod tests {
                 max_wait: Duration::ZERO,
                 workers: 1,
                 max_queue: 2,
+                ship_spills: None,
             },
         );
         let _a = srv.submit(image(4, 0.5)).unwrap();
@@ -486,6 +603,7 @@ mod tests {
                     max_wait: Duration::from_micros(rng.range(0, 500) as u64),
                     workers: 1,
                     max_queue: 4096,
+                    ship_spills: None,
                 },
             ));
             let n = rng.range(1, 24);

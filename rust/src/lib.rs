@@ -16,7 +16,12 @@
 //! Crate layout:
 //! - [`tensor`] — NCHW tensors + `.zten` interchange with Python.
 //! - [`zebra`] — block geometry, the pruning hot path, Eq. 2–5 math.
-//! - [`compress`] — the zero-block codec and the paper's baselines.
+//! - [`compress`] — the streaming codec API v2: buffer-reusing
+//!   `encode_into`/`decode_into` over a `SpillBuf`, the codec registry
+//!   (single source of truth for names/ids), and the versioned
+//!   `.zspill` wire format (layout in `rust/docs/zspill.md`) with
+//!   strict never-panicking parsing. Hosts the zero-block codec and
+//!   the paper's baselines.
 //! - [`models`] — static spill plans (incl. the paper's full-width
 //!   architectures for Table V).
 //! - [`trace`] — replaying Python-dumped activation traces.

@@ -58,6 +58,19 @@ impl Tensor {
         self.data
     }
 
+    /// Reshape in place to `shape`, reusing the existing allocation,
+    /// with every element reset to zero. This is the decode-side twin
+    /// of `compress::SpillBuf`: codec `decode_into` paints live data
+    /// onto this zero background without allocating a fresh tensor per
+    /// spill.
+    pub fn resize_zeroed(&mut self, shape: &[usize]) {
+        let n: usize = shape.iter().product();
+        self.data.clear();
+        self.data.resize(n, 0.0);
+        self.shape.clear();
+        self.shape.extend_from_slice(shape);
+    }
+
     /// Reinterpret with a new shape of identical volume.
     pub fn reshape(mut self, shape: &[usize]) -> Self {
         assert_eq!(
@@ -133,6 +146,20 @@ mod tests {
         let data: Vec<f32> = (0..16).map(|v| v as f32).collect();
         let t = Tensor::from_vec(&[2, 2, 2, 2], data);
         assert_eq!(t.plane(1, 0), &[8.0, 9.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn resize_zeroed_reuses_and_clears() {
+        let mut t = Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+        t.resize_zeroed(&[1, 2, 3]);
+        assert_eq!(t.shape(), &[1, 2, 3]);
+        assert_eq!(t.len(), 6);
+        assert!(t.data().iter().all(|&v| v == 0.0));
+        // Shrinking keeps working too.
+        t.data_mut()[0] = 9.0;
+        t.resize_zeroed(&[2]);
+        assert_eq!(t.shape(), &[2]);
+        assert_eq!(t.data(), &[0.0, 0.0]);
     }
 
     #[test]
