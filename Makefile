@@ -1,5 +1,18 @@
 # Repo-level convenience targets.
 
-.PHONY: check
+.PHONY: check ci bench-smoke
+
+# Full gate: build + tests + fmt + clippy in both feature configs
+# (the pjrt config auto-skips when no XLA toolchain is present).
 check:
 	./rust/check.sh
+
+# Everything the CI workflow runs: the gate plus the bench smoke pass.
+ci: check bench-smoke
+
+# Run every table*/fig* bench regenerator in fast smoke mode:
+# ZEBRA_BENCH_SMOKE=1 caps measuring budgets at ~1 ms and lets
+# artifact-dependent benches skip cleanly, so the whole suite finishes
+# in seconds and CI catches bench bit-rot without trained artifacts.
+bench-smoke:
+	cd rust && ZEBRA_BENCH_SMOKE=1 cargo bench --no-default-features

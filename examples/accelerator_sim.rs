@@ -60,8 +60,7 @@ fn main() -> anyhow::Result<()> {
         "DRAM B/cyc", "dense ms", "zebra ms", "speedup",
     ]);
     for bpc in [1.6, 3.2, 6.4, 12.8, 25.6, 51.2] {
-        let mut c = AccelConfig::default();
-        c.dram_bytes_per_cycle = bpc;
+        let c = AccelConfig { dram_bytes_per_cycle: bpc, ..AccelConfig::default() };
         let rd = simulate_trace(&c, &layers, &tensors, &dense)?;
         let rz = simulate_trace(&c, &layers, &tensors, &zb)?;
         sweep.row(&[

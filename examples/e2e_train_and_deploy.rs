@@ -15,19 +15,35 @@
 //!    from the serving masks and from the accelerator simulation of
 //!    the traced spills, vs the no-Zebra baseline model.
 //!
-//! Run: `make e2e` (or `cargo run --release --example e2e_train_and_deploy`)
+//! Needs trained artifacts and the PJRT runtime: build with
+//! `--features pjrt` (a default build prints a pointer to
+//! `zebra serve --backend reference` instead).
+//!
+//! Run: `make e2e` (or
+//! `cargo run --release --features pjrt --example e2e_train_and_deploy`)
 
-use std::sync::Arc;
-use std::time::{Duration, Instant};
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!(
+        "e2e_train_and_deploy exercises the PJRT runtime over AOT \
+         artifacts; rebuild with `cargo run --release --features pjrt \
+         --example e2e_train_and_deploy`. For the zero-dependency path, \
+         try `zebra serve --backend reference` or the quickstart example."
+    );
+}
 
-use zebra::accel::{simulate_trace, AccelConfig, LayerDesc};
-use zebra::bench::paper::PaperMetrics;
-use zebra::bench::Table;
-use zebra::compress::{DenseCodec, ZeroBlockCodec};
-use zebra::coordinator::{PjrtExecutor, Server, ServerConfig};
-use zebra::tensor::{read_zten, read_zten_i32, Tensor};
-
+#[cfg(feature = "pjrt")]
 fn main() -> anyhow::Result<()> {
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    use zebra::accel::{simulate_trace, AccelConfig, LayerDesc};
+    use zebra::bench::paper::PaperMetrics;
+    use zebra::bench::Table;
+    use zebra::compress::{DenseCodec, ZeroBlockCodec};
+    use zebra::coordinator::{pjrt_executor, Server, ServerConfig};
+    use zebra::tensor::{read_zten, read_zten_i32, Tensor};
+
     let art = zebra::artifacts_dir();
     println!("=== Phase 1: training evidence (from `make artifacts`) ===");
     let metrics = PaperMetrics::load(&art)?;
@@ -63,13 +79,14 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!("\n=== Phase 2: deploy — serve the full test set ===");
-    let exec = Arc::new(PjrtExecutor::new(art.clone(), "rn18-c10-t0.1")?);
+    let exec = Arc::new(pjrt_executor(art.clone(), "rn18-c10-t0.1")?);
     let server = Server::start(
         exec,
         ServerConfig {
             max_wait: Duration::from_millis(3),
             workers: 1,
             max_queue: 1024,
+            ship_spills: None,
         },
     );
     let images = read_zten(art.join("testset_images.zten"))?;
@@ -128,7 +145,7 @@ fn main() -> anyhow::Result<()> {
             t.row(&[
                 name.into(),
                 codec.into(),
-                format!("{}", r.activation_bytes() / tr.batch() as u64),
+                (r.activation_bytes() / tr.batch() as u64).to_string(),
                 format!("{:.3}", r.latency_ms(&cfg)),
                 format!("{:.1}", r.reduction_vs(&dense)),
             ]);
@@ -152,6 +169,7 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn sparkline(label: &str, v: &[f64]) {
     const RAMP: &[u8] = b" .:-=+*#%@";
     let (lo, hi) = v.iter().fold((f64::MAX, f64::MIN), |(l, h), &x| {

@@ -1,31 +1,43 @@
-//! Quickstart: the whole stack in ~40 lines.
+//! Quickstart: the whole stack in ~40 lines, with zero external
+//! dependencies.
 //!
-//! Loads one AOT-compiled Zebra model (ResNet-18 trained with
-//! T_obj = 0.1), classifies one image from the exported test set, and
-//! prints the paper's headline quantity for that single inference: how
-//! many activation bytes the accelerator would NOT have to move.
+//! Classifies one image through the pure-Rust reference backend (a
+//! deterministic spill-plan-shaped CNN with the paper's fused
+//! ReLU + Zebra block-prune after every conv) and prints the paper's
+//! headline quantity for that single inference: how many activation
+//! bytes the accelerator would NOT have to move.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Uses the exported test set when `make artifacts` has run; falls
+//! back to a synthetic image otherwise. For the PJRT/XLA path over AOT
+//! HLO artifacts, build with `--features pjrt` and run
+//! `zebra serve --backend pjrt` (see rust/docs/backends.md).
+//!
+//! Run: `cargo run --release --example quickstart`
 
-use zebra::runtime::Runtime;
-use zebra::tensor::{read_zten, read_zten_i32, Tensor};
+use zebra::backend::reference::{RefSpec, ReferenceBackend};
+use zebra::backend::{synth_images, testset_matches, InferenceBackend};
+use zebra::tensor::{read_zten, Tensor};
 use zebra::zebra::bandwidth::fmt_bytes;
 
 fn main() -> anyhow::Result<()> {
-    let art = zebra::artifacts_dir();
-    let rt = Runtime::new(&art)?;
-    println!("PJRT platform: {}", rt.platform());
-
-    // One normalized test image.
-    let images = read_zten(art.join("testset_images.zten"))?;
-    let (_, labels) = read_zten_i32(art.join("testset_labels.zten"))?;
-    let hw = images.shape()[2];
+    let model = ReferenceBackend::new(RefSpec::from_key("rn18-c10-t0.1")?)?;
+    let hw = model.image_hw();
     let per = 3 * hw * hw;
-    let x = Tensor::from_vec(&[1, 3, hw, hw], images.data()[..per].to_vec());
 
-    // The Zebra model, batch-1 artifact.
-    let model = rt.model_for_batch("rn18-c10-t0.1", 1)?;
-    let out = model.run(&x)?;
+    // One normalized test image — exported if available (and the right
+    // resolution for this model), synthetic otherwise.
+    let art = zebra::artifacts_dir();
+    let x = match read_zten(art.join("testset_images.zten")) {
+        Ok(images) if testset_matches(&images, hw) => {
+            Tensor::from_vec(&[1, 3, hw, hw], images.data()[..per].to_vec())
+        }
+        _ => {
+            println!("(no {hw}px test set — classifying a synthetic image)");
+            synth_images(hw, 1, 7)
+        }
+    };
+
+    let out = model.execute(&x)?;
     let pred = out
         .logits
         .data()
@@ -34,7 +46,7 @@ fn main() -> anyhow::Result<()> {
         .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
         .map(|(i, _)| i)
         .unwrap();
-    println!("predicted class {pred} (label {})", labels[0]);
+    println!("backend {} predicted class {pred}", model.name());
 
     // Eq. 2-3 accounting from the model's own mask outputs.
     let (mut dense, mut stored, mut index) = (0f64, 0f64, 0f64);

@@ -1,38 +1,79 @@
 //! Serving scenario: concurrent clients against the coordinator.
 //!
 //! Spawns several client threads firing classification requests at the
-//! server (dynamic batching over the {1,4,8} AOT artifacts), reports
+//! server (dynamic batching over the backend's batch sizes), reports
 //! throughput, latency percentiles, batch occupancy and the aggregate
 //! activation-bandwidth saving Zebra delivered across all requests —
 //! i.e. the paper's metric measured on a *serving* workload rather
 //! than a benchmark loop.
 //!
-//! Run: `make artifacts && cargo run --release --example serve_classify`
+//! Backend selection mirrors `zebra serve`: PJRT over AOT artifacts
+//! when built with `--features pjrt` and `make artifacts` has run,
+//! the pure-Rust reference backend (synthetic test set) otherwise.
+//!
+//! Run: `cargo run --release --example serve_classify`
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use zebra::backend::reference::RefSpec;
+use zebra::backend::{synth_images, synth_labels, testset_matches};
 use zebra::coordinator::server::BatchExecutor;
-use zebra::coordinator::{PjrtExecutor, Server, ServerConfig};
+use zebra::coordinator::{reference_executor, Server, ServerConfig};
 use zebra::tensor::{read_zten, read_zten_i32, Tensor};
+
+const MODEL: &str = "rn18-c10-t0.1";
+
+fn make_executor(
+    art: &std::path::Path,
+) -> anyhow::Result<Arc<dyn BatchExecutor>> {
+    #[cfg(feature = "pjrt")]
+    if art.join("manifest.json").exists() {
+        println!("using the pjrt backend over {art:?}");
+        return Ok(Arc::new(zebra::coordinator::pjrt_executor(
+            art.to_path_buf(),
+            MODEL,
+        )?));
+    }
+    let _ = art;
+    println!("using the pure-Rust reference backend");
+    Ok(Arc::new(reference_executor(RefSpec::from_key(MODEL)?)?))
+}
 
 fn main() -> anyhow::Result<()> {
     let art = zebra::artifacts_dir();
-    let exec = Arc::new(PjrtExecutor::new(art.clone(), "rn18-c10-t0.1")?);
-    println!("artifact batches: {:?}", exec.batch_sizes());
+    let exec = make_executor(&art)?;
+    let hw = exec.image_hw();
+    println!("batch sizes: {:?}", exec.batch_sizes());
     let server = Arc::new(Server::start(
         exec,
         ServerConfig {
             max_wait: Duration::from_millis(5),
             workers: 1,
             max_queue: 512,
+            ship_spills: None,
         },
     ));
 
-    let images = Arc::new(read_zten(art.join("testset_images.zten"))?);
-    let (_, labels) = read_zten_i32(art.join("testset_labels.zten"))?;
+    // Exported test set when present (and matching this backend's
+    // resolution — a mismatched export would scramble the slicing
+    // below), deterministic noise otherwise.
+    let (images, labels) = match (
+        read_zten(art.join("testset_images.zten")),
+        read_zten_i32(art.join("testset_labels.zten")),
+    ) {
+        (Ok(im), Ok((_, lb)))
+            if testset_matches(&im, hw) && lb.len() >= im.shape()[0] =>
+        {
+            (im, lb)
+        }
+        _ => {
+            println!("(no {hw}px test set — synthetic one, accuracy is chance)");
+            (synth_images(hw, 32, 0xC1A5), synth_labels(32, 10, 0xC1A5))
+        }
+    };
+    let images = Arc::new(images);
     let labels = Arc::new(labels);
-    let hw = images.shape()[2];
     let per = 3 * hw * hw;
     let n_avail = images.shape()[0];
 

@@ -51,6 +51,9 @@ fn no_compaction_bytes(x: &Tensor, b: usize, burst: usize) -> f64 {
 
 fn main() -> anyhow::Result<()> {
     let art = zebra::artifacts_dir();
+    if zebra::bench::smoke_skip(&art.join("traces/rn18-c10-t0.2")) {
+        return Ok(());
+    }
     let tr = zebra::trace::load(art.join("traces/rn18-c10-t0.2"))?;
     let tensors: Vec<Tensor> =
         tr.spills.iter().map(|s| s.tensor.clone()).collect();

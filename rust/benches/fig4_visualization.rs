@@ -15,6 +15,9 @@ use zebra::zebra::Thresholds;
 
 fn main() -> anyhow::Result<()> {
     let art = zebra::artifacts_dir();
+    if zebra::bench::smoke_skip(&art.join("traces/rn18-tiny-t0.2")) {
+        return Ok(());
+    }
     let tr = zebra::trace::load(art.join("traces/rn18-tiny-t0.2"))?;
     let (rshape, raw) = tr.raw_images()?;
     let (n, hw) = (rshape[0], rshape[2]);

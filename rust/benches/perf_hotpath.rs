@@ -11,7 +11,6 @@
 
 use zebra::bench::{bench, Table};
 use zebra::compress::{all_codecs, Codec, SpillBuf, ZeroBlockCodec};
-use zebra::runtime::Runtime;
 use zebra::tensor::Tensor;
 use zebra::util::prng::Rng;
 use zebra::zebra::prune::{relu_prune_inplace, Thresholds};
@@ -191,8 +190,11 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
 
-    // 4. PJRT: the Pallas zebra kernel and the end-to-end model step.
-    if let Ok(rt) = Runtime::new(&art) {
+    // 4. PJRT: the Pallas zebra kernel and the end-to-end model step
+    // (only in `--features pjrt` builds; the reference backend's hot
+    // paths are the pruner/codec rows above).
+    #[cfg(feature = "pjrt")]
+    if let Ok(rt) = zebra::runtime::Runtime::new(&art) {
         let exe = rt.compile_file(&art.join("kernel_zebra.hlo.txt"))?;
         let kin = Tensor::from_vec(
             &[1, 16, 32, 32],
@@ -226,6 +228,8 @@ fn main() -> anyhow::Result<()> {
     } else {
         eprintln!("(artifacts missing — PJRT rows skipped)");
     }
+    #[cfg(not(feature = "pjrt"))]
+    eprintln!("(built without the pjrt feature — PJRT rows skipped)");
 
     table.print("§Perf — Layer-3 hot paths");
     Ok(())

@@ -13,6 +13,11 @@ use zebra::zebra::prune::natural_zero_fraction;
 
 fn main() -> anyhow::Result<()> {
     let art = zebra::artifacts_dir();
+    if zebra::bench::smoke_skip(&art.join("metrics.json"))
+        || zebra::bench::smoke_skip(&art.join("traces/rn18-c10-off"))
+    {
+        return Ok(());
+    }
     let metrics = PaperMetrics::load(&art)?;
     banner();
 

@@ -8,6 +8,9 @@ use zebra::bench::Table;
 
 fn main() -> anyhow::Result<()> {
     let art = zebra::artifacts_dir();
+    if zebra::bench::smoke_skip(&art.join("metrics.json")) {
+        return Ok(());
+    }
     let metrics = PaperMetrics::load(&art)?;
     banner();
 

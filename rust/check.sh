@@ -1,12 +1,37 @@
 #!/usr/bin/env bash
-# rust/check.sh — the repo's full Rust gate: build, tests, formatting,
-# lints. `make check` at the repo root runs this.
+# rust/check.sh — the repo's full Rust gate, run in BOTH feature
+# configurations:
+#
+#   1. default / --no-default-features: the pure-Rust reference backend
+#      (no XLA toolchain needed — this is what CI gates everywhere).
+#   2. --features pjrt: the PJRT/XLA runtime. Needs the XLA C++
+#      toolchain, so it runs only when one is advertised via
+#      $XLA_EXTENSION_DIR or forced with ZEBRA_PJRT=1; otherwise it is
+#      skipped with a note (not an error).
+#
+# `make check` at the repo root runs this; `make ci` adds the bench
+# smoke run.
 set -euo pipefail
 cd "$(dirname "$0")"
 
-cargo build --release
-cargo test -q
+run_gate() {
+  local label="$1"
+  shift
+  echo "== gate [$label]: cargo build/test/clippy $*"
+  cargo build --release "$@"
+  cargo test -q "$@"
+  cargo clippy --all-targets "$@" -- -D warnings
+}
+
 cargo fmt --check
-cargo clippy --all-targets -- -D warnings
+
+run_gate "reference" --no-default-features
+
+if [ -n "${XLA_EXTENSION_DIR:-}" ] || [ "${ZEBRA_PJRT:-0}" = "1" ]; then
+  run_gate "pjrt" --features pjrt
+else
+  echo "== gate [pjrt]: skipped — no XLA toolchain detected" \
+       "(set XLA_EXTENSION_DIR or ZEBRA_PJRT=1 to force)"
+fi
 
 echo "check OK"

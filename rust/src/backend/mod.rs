@@ -1,0 +1,154 @@
+//! Pluggable inference backends.
+//!
+//! Everything downstream of model execution — the dynamic batcher, the
+//! per-request Eq. 2–3 bandwidth accounting, the spill codecs, the
+//! accelerator simulator — only needs *logits plus the per-Zebra-layer
+//! block masks* for a padded batch. [`InferenceBackend`] captures
+//! exactly that contract, so the serving pipeline is generic over how
+//! the model actually runs:
+//!
+//! - [`reference::ReferenceBackend`] (always available): a pure-Rust
+//!   executor for spill-plan-shaped CNNs — direct 3x3 convolutions over
+//!   [`crate::tensor::Tensor`], fused ReLU + per-layer threshold block
+//!   pruning via [`crate::zebra::prune`], deterministic weights from
+//!   [`crate::util::prng`] (or `.zten` leaves when present). Zero
+//!   external dependencies; what CI gates.
+//! - `PjrtBackend` (behind the `pjrt` cargo feature, in
+//!   [`crate::runtime`]): the original PJRT/XLA runtime executing AOT
+//!   HLO artifacts produced by the Python pipeline.
+//!
+//! Backends are not required to be `Send` (PJRT handles are `Rc` +
+//! raw pointers); the coordinator bridges any backend onto its worker
+//! threads with [`crate::coordinator::server::BackendExecutor`], which
+//! owns one dedicated execution thread per backend instance.
+
+pub mod reference;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+/// One backend execution's outputs for a padded batch.
+#[derive(Debug)]
+pub struct ModelOutput {
+    /// `(batch, classes)` logits.
+    pub logits: Tensor,
+    /// Per-Zebra-layer block masks, `(batch, C, H/B, W/B)` in {0,1}.
+    pub masks: Vec<Tensor>,
+    /// Elements per block (`B*B`) for each mask — what converts mask
+    /// counts into Eq. 2 bytes.
+    pub block_elems: Vec<usize>,
+}
+
+/// A model-execution engine: load/own model variants for a key, execute
+/// a padded batch, and report which batch sizes it supports.
+///
+/// Implementations are constructed on (and may be pinned to) the
+/// thread that executes them — see
+/// [`crate::coordinator::server::BackendExecutor::spawn`].
+pub trait InferenceBackend {
+    /// Human-readable backend name ("reference", "pjrt", ...).
+    fn name(&self) -> &str;
+
+    /// Batch sizes this backend can execute, ascending and non-empty.
+    fn batch_sizes(&self) -> Vec<usize>;
+
+    /// Input image spatial size (H == W).
+    fn image_hw(&self) -> usize;
+
+    /// Execute one padded batch `(batch, 3, H, W)`; returns logits +
+    /// per-Zebra-layer block masks for every slot.
+    fn execute(&self, x: &Tensor) -> Result<ModelOutput>;
+}
+
+/// Deterministic normalized-noise images `(n, 3, hw, hw)` — the
+/// artifact-free stand-in test set the CLI, examples and tests share.
+pub fn synth_images(hw: usize, n: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let data = (0..n * 3 * hw * hw).map(|_| rng.normal()).collect();
+    Tensor::from_vec(&[n, 3, hw, hw], data)
+}
+
+/// Uniform labels to pair with [`synth_images`] (accuracy is chance).
+pub fn synth_labels(n: usize, classes: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.below(classes.max(1) as u64) as i32).collect()
+}
+
+/// True when an exported test set is usable for `hw`-sized RGB
+/// serving: 4-D `(N > 0, 3, hw, hw)`. The CLI and examples gate on
+/// this before slicing per-image rows out of the export (a degenerate
+/// or mismatched export must fall back to [`synth_images`], not panic
+/// mid-slice).
+pub fn testset_matches(images: &Tensor, hw: usize) -> bool {
+    let s = images.shape();
+    s.len() == 4 && s[0] > 0 && s[1] == 3 && s[2] == hw && s[3] == hw
+}
+
+/// Which backend a CLI invocation selects (`--backend`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust native execution (always available).
+    Reference,
+    /// PJRT/XLA over AOT HLO artifacts (needs `--features pjrt`).
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Parse a `--backend` value. Unknown names error with the list of
+    /// valid ones.
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "reference" | "ref" => Ok(BackendKind::Reference),
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            other => bail!("unknown backend {other:?} (valid: reference, pjrt)"),
+        }
+    }
+
+    /// The default `--backend` for this build: `pjrt` when compiled in
+    /// (preserving the pre-feature-gate behavior), `reference`
+    /// otherwise.
+    pub fn default_name() -> &'static str {
+        if cfg!(feature = "pjrt") {
+            "pjrt"
+        } else {
+            "reference"
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Reference => "reference",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_backend_names() {
+        assert_eq!(BackendKind::parse("reference").unwrap(), BackendKind::Reference);
+        assert_eq!(BackendKind::parse("ref").unwrap(), BackendKind::Reference);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Pjrt);
+        let err = BackendKind::parse("tpu").unwrap_err().to_string();
+        assert!(err.contains("reference"), "{err}");
+        assert!(err.contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn default_backend_matches_build() {
+        let d = BackendKind::default_name();
+        if cfg!(feature = "pjrt") {
+            assert_eq!(d, "pjrt");
+        } else {
+            assert_eq!(d, "reference");
+        }
+        // The default must always parse.
+        BackendKind::parse(d).unwrap();
+    }
+}

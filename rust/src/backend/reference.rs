@@ -1,0 +1,516 @@
+//! The pure-Rust reference backend: native execution of
+//! spill-plan-shaped CNNs with zero external dependencies.
+//!
+//! The model family is exactly what the spill plans in
+//! [`crate::models`] describe: a chain of 3x3 same-padding
+//! convolutions (stride folded into the plan's shrinking H/W), each
+//! followed by the paper's fused ReLU + Zebra block-prune op
+//! ([`crate::zebra::prune::relu_prune_inplace`]), closed by global
+//! average pooling and a linear classifier. Weights are deterministic
+//! (He-initialized from [`crate::util::prng::Rng`], keyed by the spec
+//! seed) so every run of the same spec is bit-reproducible; when a
+//! weights directory with `w%05d.zten` leaves is present the leaves
+//! override the generated tensors, which is how trained parameters
+//! flow in without PJRT.
+//!
+//! This is NOT a trained model unless leaves are supplied — its job is
+//! to exercise the full serving pipeline (batching, mask-derived
+//! Eq. 2–3 accounting, spill shipping, the accelerator simulator) with
+//! realistic activation sparsity, on any machine with a Rust
+//! toolchain. CPU cost scales with the plan, so [`RefSpec::from_key`]
+//! builds width-reduced (1/4 channels, floor 8) variants of the paper
+//! architectures.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use super::{InferenceBackend, ModelOutput};
+use crate::tensor::{read_zten, Tensor};
+use crate::util::prng::Rng;
+use crate::zebra::blocks::BlockMask;
+use crate::zebra::prune::{relu_prune_inplace, Thresholds};
+use crate::zebra::SpillShape;
+
+/// Static description of a reference model: everything needed to build
+/// deterministic weights and execute.
+#[derive(Debug, Clone)]
+pub struct RefSpec {
+    /// Model key this spec was built for (e.g. "rn18-c10-t0.1").
+    pub key: String,
+    /// Input spatial size (images are `(3, in_hw, in_hw)`).
+    pub in_hw: usize,
+    /// Classifier width.
+    pub classes: usize,
+    /// Zebra pruning threshold applied after every conv's ReLU.
+    pub t_obj: f32,
+    /// One conv layer per spill: C/H/W/block of that layer's output.
+    pub spills: Vec<SpillShape>,
+    /// Batch sizes advertised to the batcher, ascending.
+    pub batch_sizes: Vec<usize>,
+    /// Weight PRNG seed (same seed + spec => bit-identical weights).
+    pub seed: u64,
+    /// Optional directory of `w%05d.zten` leaves overriding generated
+    /// weights (conv layers in order, then the classifier matrix).
+    pub weights_dir: Option<PathBuf>,
+}
+
+impl RefSpec {
+    /// A deliberately tiny model for tests and smoke runs: 8x8 RGB in,
+    /// two conv layers (8 then 16 channels, block 2), 10 classes.
+    pub fn tiny() -> RefSpec {
+        RefSpec {
+            key: "ref-tiny".into(),
+            in_hw: 8,
+            classes: 10,
+            t_obj: 0.1,
+            spills: vec![
+                SpillShape { name: "l0".into(), c: 8, h: 8, w: 8, block: 2 },
+                SpillShape { name: "l1".into(), c: 16, h: 4, w: 4, block: 2 },
+            ],
+            batch_sizes: vec![1, 2, 4],
+            seed: 42,
+            weights_dir: None,
+        }
+    }
+
+    /// Build a spec from an artifact-style model key:
+    /// `"<arch>-<dataset>-t<T>"` with arch in {rn18, rn56, vgg16,
+    /// mbnet} and dataset in {c10 (32px, 10 classes), tiny (64px, 200
+    /// classes)} — e.g. `"rn18-c10-t0.1"` — or the literal
+    /// `"ref-tiny"`. Channel counts are the paper plans at 1/4 width
+    /// (floor 8) so native CPU execution stays fast.
+    pub fn from_key(key: &str) -> Result<RefSpec> {
+        if key == "ref-tiny" {
+            return Ok(RefSpec::tiny());
+        }
+        let parts: Vec<&str> = key.split('-').collect();
+        let usage = "reference model keys look like rn18-c10-t0.1 \
+                     (arch: rn18|rn56|vgg16|mbnet; dataset: c10|tiny) \
+                     or ref-tiny";
+        if parts.len() != 3 {
+            bail!("cannot parse model key {key:?}; {usage}");
+        }
+        let arch = match parts[0] {
+            "rn18" => "resnet18",
+            "rn56" => "resnet56",
+            "vgg16" => "vgg16",
+            "mbnet" => "mobilenet",
+            other => bail!("unknown arch {other:?} in {key:?}; {usage}"),
+        };
+        let (in_hw, block, classes) = match parts[1] {
+            "c10" => (32, 4, 10),
+            "tiny" => (64, 8, 200),
+            other => bail!("unknown dataset {other:?} in {key:?}; {usage}"),
+        };
+        let t_obj: f32 = parts[2]
+            .strip_prefix('t')
+            .and_then(|t| t.parse().ok())
+            .with_context(|| format!("bad threshold in {key:?}; {usage}"))?;
+        let plan = crate::models::paper_plan(arch, in_hw, block)?;
+        let spills = plan
+            .spills
+            .into_iter()
+            .map(|mut s| {
+                s.c = (s.c / 4).max(8); // 1/4 width, floor 8
+                s
+            })
+            .collect();
+        Ok(RefSpec {
+            key: key.to_string(),
+            in_hw,
+            classes,
+            t_obj,
+            spills,
+            batch_sizes: vec![1, 4, 8],
+            seed: 42,
+            weights_dir: None,
+        })
+    }
+}
+
+/// The reference backend: deterministic weights + native execution.
+pub struct ReferenceBackend {
+    spec: RefSpec,
+    /// Per-conv-layer `(cout, cin, 3, 3)` weights.
+    conv_w: Vec<Tensor>,
+    /// Per-conv-layer stride (1 or 2), derived from the plan.
+    strides: Vec<usize>,
+    /// `(classes, c_last)` classifier matrix.
+    fc_w: Tensor,
+}
+
+impl ReferenceBackend {
+    pub fn new(spec: RefSpec) -> Result<ReferenceBackend> {
+        if spec.spills.is_empty() {
+            bail!("reference spec {} has no layers", spec.key);
+        }
+        if spec.batch_sizes.is_empty() {
+            bail!("reference spec {} exports no batch sizes", spec.key);
+        }
+        // Derive strides: each spill's H/W must evenly divide the
+        // previous layer's (stride-2 convs fold the plan's pooling).
+        let mut strides = Vec::with_capacity(spec.spills.len());
+        let mut prev_hw = spec.in_hw;
+        for s in &spec.spills {
+            if s.h != s.w {
+                bail!("layer {} is not square ({}x{})", s.name, s.h, s.w);
+            }
+            if s.h == 0 || prev_hw % s.h != 0 {
+                bail!("layer {} shrinks {prev_hw} -> {}; not a whole stride", s.name, s.h);
+            }
+            if s.block == 0 || s.h % s.block != 0 {
+                bail!(
+                    "layer {}: block {} does not divide its {}px map",
+                    s.name,
+                    s.block,
+                    s.h
+                );
+            }
+            let stride = prev_hw / s.h;
+            if stride > 2 {
+                bail!("layer {} wants stride {stride} (max 2)", s.name);
+            }
+            strides.push(stride);
+            prev_hw = s.h;
+        }
+        // Deterministic He-initialized weights, overridable by leaves.
+        let mut conv_w = Vec::with_capacity(spec.spills.len());
+        let mut cin = 3usize;
+        for (i, s) in spec.spills.iter().enumerate() {
+            let shape = [s.c, cin, 3, 3];
+            let scale = (2.0 / (cin * 9) as f32).sqrt();
+            let t = load_leaf_or(&spec, i, &shape, scale)?;
+            conv_w.push(t);
+            cin = s.c;
+        }
+        let fc_shape = [spec.classes, cin];
+        let fc_scale = (1.0 / cin as f32).sqrt();
+        let fc_w = load_leaf_or(&spec, spec.spills.len(), &fc_shape, fc_scale)?;
+        Ok(ReferenceBackend { spec, conv_w, strides, fc_w })
+    }
+
+    pub fn spec(&self) -> &RefSpec {
+        &self.spec
+    }
+
+    /// Execute and also return the pruned activation tensor of every
+    /// layer (the spills an accelerator would write to DRAM) — used by
+    /// `zebra simulate --backend reference` and the parity tests.
+    pub fn run_capture(&self, x: &Tensor) -> Result<(ModelOutput, Vec<Tensor>)> {
+        self.run(x, true)
+    }
+
+    /// Forward pass; `capture` clones every layer's pruned activation
+    /// into the returned spill list (serving skips that copy).
+    fn run(&self, x: &Tensor, capture: bool) -> Result<(ModelOutput, Vec<Tensor>)> {
+        let s = x.shape();
+        let hw = self.spec.in_hw;
+        if s.len() != 4 || s[1] != 3 || s[2] != hw || s[3] != hw {
+            bail!("reference backend {} wants (N, 3, {hw}, {hw}), got {s:?}", self.spec.key);
+        }
+        let thr = Thresholds::Scalar(self.spec.t_obj);
+        let mut masks = Vec::with_capacity(self.spec.spills.len());
+        let mut block_elems = Vec::with_capacity(self.spec.spills.len());
+        let mut spills = Vec::new();
+        let mut act = x.clone();
+        for (i, sp) in self.spec.spills.iter().enumerate() {
+            let mut out = conv3x3(&act, &self.conv_w[i], self.strides[i]);
+            let mask = relu_prune_inplace(&mut out, &thr, sp.block);
+            masks.push(mask_to_tensor(&mask));
+            block_elems.push(sp.block * sp.block);
+            act = out;
+            if capture {
+                spills.push(act.clone());
+            }
+        }
+        let logits = self.head(&act);
+        Ok((ModelOutput { logits, masks, block_elems }, spills))
+    }
+
+    /// Global average pool + linear classifier.
+    fn head(&self, x: &Tensor) -> Tensor {
+        let (n, c) = (x.shape()[0], x.shape()[1]);
+        let area = (x.shape()[2] * x.shape()[3]) as f32;
+        let classes = self.spec.classes;
+        let mut logits = vec![0.0f32; n * classes];
+        for ni in 0..n {
+            let pooled: Vec<f32> = (0..c)
+                .map(|ci| x.plane(ni, ci).iter().sum::<f32>() / area)
+                .collect();
+            for (j, l) in logits[ni * classes..(ni + 1) * classes].iter_mut().enumerate() {
+                let row = &self.fc_w.data()[j * c..(j + 1) * c];
+                *l = row.iter().zip(&pooled).map(|(a, b)| a * b).sum();
+            }
+        }
+        Tensor::from_vec(&[n, classes], logits)
+    }
+}
+
+impl InferenceBackend for ReferenceBackend {
+    fn name(&self) -> &str {
+        "reference"
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.spec.batch_sizes.clone()
+    }
+
+    fn image_hw(&self) -> usize {
+        self.spec.in_hw
+    }
+
+    fn execute(&self, x: &Tensor) -> Result<ModelOutput> {
+        self.run(x, false).map(|(out, _)| out)
+    }
+}
+
+/// Load weight leaf `w{idx:05}.zten` from the spec's weights dir if it
+/// exists (shape-checked), else generate deterministically.
+fn load_leaf_or(
+    spec: &RefSpec,
+    idx: usize,
+    shape: &[usize],
+    scale: f32,
+) -> Result<Tensor> {
+    if let Some(dir) = &spec.weights_dir {
+        let path = dir.join(format!("w{idx:05}.zten"));
+        if path.exists() {
+            let t = read_zten(&path)
+                .with_context(|| format!("weight leaf {path:?}"))?;
+            if t.shape() != shape {
+                bail!(
+                    "weight leaf {path:?} has shape {:?}, spec wants {shape:?}",
+                    t.shape()
+                );
+            }
+            return Ok(t);
+        }
+    }
+    // Decorrelate layers without correlating nearby seeds.
+    let mut rng =
+        Rng::new(spec.seed ^ (idx as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+    let n: usize = shape.iter().product();
+    let data = (0..n).map(|_| rng.normal() * scale).collect();
+    Ok(Tensor::from_vec(shape, data))
+}
+
+/// Direct 3x3 same-padding convolution, stride 1 or 2, NCHW.
+fn conv3x3(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
+    let (n, cin, h, win) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let cout = w.shape()[0];
+    debug_assert_eq!(w.shape(), &[cout, cin, 3, 3]);
+    let (ho, wo) = (h / stride, win / stride);
+    let mut out = Tensor::zeros(&[n, cout, ho, wo]);
+    let od = out.data_mut();
+    for ni in 0..n {
+        for co in 0..cout {
+            let obase = (ni * cout + co) * ho * wo;
+            let acc = &mut od[obase..obase + ho * wo];
+            for ci in 0..cin {
+                let plane = x.plane(ni, ci);
+                let k = &w.data()[(co * cin + ci) * 9..(co * cin + ci) * 9 + 9];
+                for yo in 0..ho {
+                    let yc = yo * stride;
+                    for (ky, krow) in k.chunks_exact(3).enumerate() {
+                        // Input row = yc + ky - 1; skip padding rows.
+                        let yy = yc + ky;
+                        if yy == 0 || yy > h {
+                            continue;
+                        }
+                        let row = &plane[(yy - 1) * win..yy * win];
+                        for xo in 0..wo {
+                            let xc = xo * stride;
+                            let mut s = 0.0f32;
+                            for (kx, &wv) in krow.iter().enumerate() {
+                                let xx = xc + kx;
+                                if xx == 0 || xx > win {
+                                    continue;
+                                }
+                                s += row[xx - 1] * wv;
+                            }
+                            acc[yo * wo + xo] += s;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Unpack a [`BlockMask`] into the `(N, C, H/B, W/B)` f32 {0,1} tensor
+/// layout the PJRT models emit — so both backends feed the accounting
+/// path identically.
+fn mask_to_tensor(m: &BlockMask) -> Tensor {
+    let g = m.grid;
+    let mut v = vec![0.0f32; g.num_blocks()];
+    for (id, slot) in v.iter_mut().enumerate() {
+        if m.get(id) {
+            *slot = 1.0;
+        }
+    }
+    Tensor::from_vec(&[g.n, g.c, g.hb(), g.wb()], v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zebra::prune::block_mask;
+
+    fn image(hw: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let n = 3 * hw * hw;
+        Tensor::from_vec(&[1, 3, hw, hw], (0..n).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn tiny_spec_executes_and_shapes_line_up() {
+        let b = ReferenceBackend::new(RefSpec::tiny()).unwrap();
+        assert_eq!(b.batch_sizes(), vec![1, 2, 4]);
+        assert_eq!(b.image_hw(), 8);
+        let out = b.execute(&image(8, 1)).unwrap();
+        assert_eq!(out.logits.shape(), &[1, 10]);
+        assert_eq!(out.masks.len(), 2);
+        assert_eq!(out.masks[0].shape(), &[1, 8, 4, 4]);
+        assert_eq!(out.masks[1].shape(), &[1, 16, 2, 2]);
+        assert_eq!(out.block_elems, vec![4, 4]);
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let a = ReferenceBackend::new(RefSpec::tiny()).unwrap();
+        let b = ReferenceBackend::new(RefSpec::tiny()).unwrap();
+        let x = image(8, 7);
+        let (oa, ob) = (a.execute(&x).unwrap(), b.execute(&x).unwrap());
+        assert_eq!(oa.logits, ob.logits);
+        assert_eq!(oa.masks, ob.masks);
+        // A different seed gives different weights, hence logits.
+        let mut spec = RefSpec::tiny();
+        spec.seed = 43;
+        let c = ReferenceBackend::new(spec).unwrap();
+        assert_ne!(c.execute(&x).unwrap().logits, oa.logits);
+    }
+
+    #[test]
+    fn masks_match_reprune_of_captured_spills() {
+        // The emitted mask must be exactly the block mask of the
+        // pruned activation it describes (T=0 recount: pruning already
+        // zeroed losing blocks).
+        let b = ReferenceBackend::new(RefSpec::tiny()).unwrap();
+        let (out, spills) = b.run_capture(&image(8, 3)).unwrap();
+        for (i, sp) in spills.iter().enumerate() {
+            let m = block_mask(sp, &Thresholds::Scalar(0.0), b.spec.spills[i].block);
+            let mt = mask_to_tensor(&m);
+            assert_eq!(out.masks[i], mt, "layer {i} mask mismatch");
+        }
+    }
+
+    #[test]
+    fn padded_zero_slots_prune_everything() {
+        let b = ReferenceBackend::new(RefSpec::tiny()).unwrap();
+        // Batch of 2: one real image, one all-zero padding slot.
+        let mut x = Tensor::zeros(&[2, 2, 8, 8]);
+        assert!(b.execute(&x).is_err(), "wrong channel count must error");
+        x = Tensor::zeros(&[2, 3, 8, 8]);
+        let img = image(8, 5);
+        x.data_mut()[..img.len()].copy_from_slice(img.data());
+        let out = b.execute(&x).unwrap();
+        // Slot 1 (zeros) -> conv output 0 everywhere -> no block's max
+        // exceeds T=0.1 -> every mask row for slot 1 is zero.
+        for m in &out.masks {
+            let s = m.shape();
+            let per = s[1] * s[2] * s[3];
+            assert!(m.data()[per..].iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn from_key_parses_and_scales_width() {
+        let spec = RefSpec::from_key("rn18-c10-t0.1").unwrap();
+        assert_eq!(spec.in_hw, 32);
+        assert_eq!(spec.classes, 10);
+        assert!((spec.t_obj - 0.1).abs() < 1e-6);
+        assert_eq!(spec.spills.len(), 17);
+        assert_eq!(spec.spills[0].c, 16, "64 channels at 1/4 width");
+        assert_eq!(spec.spills.last().unwrap().c, 128);
+        let tiny = RefSpec::from_key("rn18-tiny-t0.2").unwrap();
+        assert_eq!(tiny.in_hw, 64);
+        assert_eq!(tiny.classes, 200);
+        assert!(RefSpec::from_key("alexnet-c10-t0.1").is_err());
+        assert!(RefSpec::from_key("rn18-imagenet-t0.1").is_err());
+        assert!(RefSpec::from_key("rn18-c10").is_err());
+        assert_eq!(RefSpec::from_key("ref-tiny").unwrap().in_hw, 8);
+    }
+
+    #[test]
+    fn zten_leaves_override_generated_weights() {
+        let spec = RefSpec::tiny();
+        let base = ReferenceBackend::new(spec.clone()).unwrap();
+        let dir = std::env::temp_dir()
+            .join(format!("zebra-ref-leaves-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // Override layer 0 with all-zero weights: its conv output is
+        // zero, so layer 0's masks must be all-pruned.
+        let zero = Tensor::zeros(&[8, 3, 3, 3]);
+        crate::tensor::write_zten(dir.join("w00000.zten"), &zero).unwrap();
+        let mut spec2 = spec;
+        spec2.weights_dir = Some(dir.clone());
+        let patched = ReferenceBackend::new(spec2.clone()).unwrap();
+        let x = image(8, 9);
+        let out = patched.execute(&x).unwrap();
+        assert!(out.masks[0].data().iter().all(|&v| v == 0.0));
+        assert_ne!(out.logits, base.execute(&x).unwrap().logits);
+        // A wrong-shaped leaf is a loud error, not a silent fallback.
+        crate::tensor::write_zten(dir.join("w00001.zten"), &Tensor::zeros(&[2, 2]))
+            .unwrap();
+        assert!(ReferenceBackend::new(spec2).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stride_derivation_rejects_bad_plans() {
+        let mut spec = RefSpec::tiny();
+        spec.spills[1].h = 3;
+        spec.spills[1].w = 3;
+        assert!(ReferenceBackend::new(spec).is_err());
+        let mut spec = RefSpec::tiny();
+        spec.spills[1].h = 2;
+        spec.spills[1].w = 2;
+        assert!(ReferenceBackend::new(spec).is_err(), "stride 4 must be rejected");
+        let mut spec = RefSpec::tiny();
+        spec.spills[0].block = 3;
+        assert!(
+            ReferenceBackend::new(spec).is_err(),
+            "non-dividing block must fail at construction, not execute"
+        );
+    }
+
+    #[test]
+    fn conv3x3_matches_hand_computation() {
+        // 1x1x3x3 input, identity-ish kernel: center tap only.
+        let x = Tensor::from_vec(
+            &[1, 1, 3, 3],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0],
+        );
+        let mut k = vec![0.0f32; 9];
+        k[4] = 1.0; // center
+        let w = Tensor::from_vec(&[1, 1, 3, 3], k);
+        let y = conv3x3(&x, &w, 1);
+        assert_eq!(y.data(), x.data(), "center tap is identity");
+        // All-ones kernel at the corner sums the 2x2 neighborhood.
+        let w = Tensor::from_vec(&[1, 1, 3, 3], vec![1.0; 9]);
+        let y = conv3x3(&x, &w, 1);
+        assert_eq!(y.at4(0, 0, 0, 0), 1.0 + 2.0 + 4.0 + 5.0);
+        assert_eq!(y.at4(0, 0, 2, 2), 5.0 + 6.0 + 8.0 + 9.0);
+        // Stride 2 halves the grid (4x4 -> 2x2) and samples centers at
+        // input rows/cols {0, 2}.
+        let x = Tensor::from_vec(&[1, 1, 4, 4], (1..=16).map(|v| v as f32).collect());
+        let mut k = vec![0.0f32; 9];
+        k[4] = 1.0;
+        let w = Tensor::from_vec(&[1, 1, 3, 3], k);
+        let y = conv3x3(&x, &w, 2);
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        assert_eq!(y.data(), &[1.0, 3.0, 9.0, 11.0]);
+    }
+}

@@ -9,7 +9,7 @@
 //! ```
 
 mod analyze;
-mod serve;
+pub mod serve;
 mod simulate;
 
 use std::collections::HashMap;
@@ -68,9 +68,14 @@ const USAGE: &str = "zebra <command> [--flags]
 commands:
   version                     print version
   serve     --model KEY       run the serving pipeline over the test set
+            [--backend reference|pjrt]  execution engine (default: pjrt
+                                        when built with --features pjrt,
+                                        else reference)
             [--requests N] [--wait-ms MS] [--queue N]
             [--ship-codec NAME [--ship-block B]]  frame batches as .zspill
   simulate  --trace DIR       accelerator simulation of a trace
+            | --backend reference [--model KEY] [--images N]
+                                  simulate natively-executed spills
             [--codec dense|whole-map|rle-zero|zero-block] [--all]
   analyze   --trace DIR       sparsity + Eq.2-3 bandwidth analysis
   table5    [--dataset cifar10|tiny]   static Table V arithmetic
@@ -131,5 +136,33 @@ mod tests {
     fn unknown_command_errors() {
         assert!(run(&v(&["frobnicate"])).is_err());
         assert!(run(&v(&["version"])).is_ok());
+    }
+
+    #[test]
+    fn backend_flag_parses_through_args() {
+        use crate::backend::BackendKind;
+        let a = Args::parse(&v(&["serve", "--backend", "reference"])).unwrap();
+        assert_eq!(
+            BackendKind::parse(a.get("backend").unwrap()).unwrap(),
+            BackendKind::Reference
+        );
+        let a = Args::parse(&v(&["serve", "--backend", "pjrt"])).unwrap();
+        assert_eq!(
+            BackendKind::parse(a.get("backend").unwrap()).unwrap(),
+            BackendKind::Pjrt
+        );
+        // Default (flag absent) resolves to this build's default.
+        let a = Args::parse(&v(&["serve"])).unwrap();
+        let d = a.get_or("backend", BackendKind::default_name());
+        assert!(BackendKind::parse(&d).is_ok());
+        // Bad values error with the valid list.
+        let a = Args::parse(&v(&["serve", "--backend", "tpu"])).unwrap();
+        assert!(BackendKind::parse(a.get("backend").unwrap()).is_err());
+    }
+
+    #[test]
+    fn simulate_without_inputs_is_an_error() {
+        let e = run(&v(&["simulate"])).unwrap_err().to_string();
+        assert!(e.contains("--trace") && e.contains("--backend"), "{e}");
     }
 }

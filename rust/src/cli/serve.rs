@@ -1,6 +1,7 @@
-//! `zebra serve` — run the full serving pipeline: load AOT artifacts,
-//! start the coordinator, replay the exported test set as requests, and
-//! print latency/throughput/bandwidth metrics.
+//! `zebra serve` — run the full serving pipeline: start the
+//! coordinator over the selected backend (`--backend reference|pjrt`),
+//! replay the exported test set (or a synthetic one when no artifacts
+//! exist) as requests, and print latency/throughput/bandwidth metrics.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -8,13 +9,23 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use super::Args;
+use crate::backend::reference::RefSpec;
+use crate::backend::{synth_images, synth_labels, testset_matches, BackendKind};
 use crate::compress;
 use crate::coordinator::server::BatchExecutor;
-use crate::coordinator::{PjrtExecutor, Server, ServerConfig, ShipSpills};
+use crate::coordinator::{reference_executor, Server, ServerConfig, ShipSpills};
 use crate::tensor::{read_zten, read_zten_i32, Tensor};
 
 pub fn run(args: &Args) -> Result<()> {
-    let artifacts = crate::artifacts_dir();
+    run_with(args, crate::artifacts_dir())
+}
+
+/// `serve` with an explicit artifacts directory (tests inject a temp
+/// dir here instead of mutating `ZEBRA_ARTIFACTS`).
+pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
+    let backend = BackendKind::parse(
+        &args.get_or("backend", BackendKind::default_name()),
+    )?;
     let model = args.get_or("model", "rn18-c10-t0.1");
     let n_requests = args.get_usize("requests", 64)?;
     let wait_ms = args.get_usize("wait-ms", 2)? as u64;
@@ -34,17 +45,75 @@ pub fn run(args: &Args) -> Result<()> {
         None => None,
     };
 
-    println!("loading runtime from {artifacts:?} ...");
     let t0 = Instant::now();
-    let exec = Arc::new(PjrtExecutor::new(artifacts.clone(), &model)?);
+    // `classes` is known statically only for the reference backend; it
+    // gates the synthetic-test-set fallback below.
+    let (exec, classes): (Arc<dyn BatchExecutor>, Option<usize>) = match backend {
+        BackendKind::Reference => {
+            let mut spec = RefSpec::from_key(&model)?;
+            // Trained `.zten` leaves override the deterministic
+            // weights when the pipeline exported them.
+            let wdir = artifacts.join("ref-weights").join(&model);
+            if wdir.is_dir() {
+                println!("loading reference weights from {wdir:?}");
+                spec.weights_dir = Some(wdir);
+            }
+            let classes = spec.classes;
+            (Arc::new(reference_executor(spec)?), Some(classes))
+        }
+        BackendKind::Pjrt => {
+            #[cfg(feature = "pjrt")]
+            {
+                println!("loading PJRT runtime from {artifacts:?} ...");
+                let e = crate::coordinator::pjrt_executor(
+                    artifacts.clone(),
+                    &model,
+                )?;
+                (Arc::new(e), None)
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                anyhow::bail!(
+                    "this zebra binary was built without the `pjrt` \
+                     feature; rebuild with `cargo build --features pjrt` \
+                     or use --backend reference"
+                );
+            }
+        }
+    };
     println!(
-        "model {} | batches {:?} | compiled in {:.1}s",
+        "backend {} | model {} | batches {:?} | ready in {:.1}s",
+        backend.name(),
         model,
         exec.batch_sizes(),
         t0.elapsed().as_secs_f64()
     );
 
-    let (images, labels) = load_testset(&artifacts)?;
+    // Test set: prefer the exported one when it matches this model's
+    // resolution; on the reference backend fall back to a synthetic
+    // one (missing artifacts OR a mismatched export — e.g. a 32px
+    // CIFAR export on disk while serving an 8px/64px model).
+    let hw_want = exec.image_hw();
+    let (images, labels, synthetic) = match (load_testset(&artifacts), classes) {
+        (Ok((im, lb)), _)
+            if testset_matches(&im, hw_want) && lb.len() >= im.shape()[0] =>
+        {
+            (im, lb, false)
+        }
+        (Ok(_), Some(classes)) => {
+            println!("(exported test set is not {hw_want}px; serving synthetic images)");
+            (synth_images(hw_want, 64, 0xB1A5), synth_labels(64, classes, 0xB1A5), true)
+        }
+        (Err(e), Some(classes)) => {
+            println!("no exported test set ({e:#}); serving synthetic images");
+            (synth_images(hw_want, 64, 0xB1A5), synth_labels(64, classes, 0xB1A5), true)
+        }
+        (Ok((im, _)), None) => anyhow::bail!(
+            "test set is {}px but model {model} wants {hw_want}px",
+            im.shape().get(2).copied().unwrap_or(0)
+        ),
+        (Err(e), None) => return Err(e),
+    };
     let hw = images.shape()[2];
     let per = 3 * hw * hw;
 
@@ -97,10 +166,11 @@ pub fn run(args: &Args) -> Result<()> {
     }
     let wall = t0.elapsed();
     println!(
-        "\nserved {n_requests} requests in {:.2}s ({:.1} req/s), top-1 {:.1}%",
+        "\nserved {n_requests} requests in {:.2}s ({:.1} req/s), top-1 {:.1}%{}",
         wall.as_secs_f64(),
         n_requests as f64 / wall.as_secs_f64(),
-        100.0 * correct as f64 / n_requests as f64
+        100.0 * correct as f64 / n_requests as f64,
+        if synthetic { " (synthetic labels — accuracy is chance)" } else { "" }
     );
     println!("metrics: {}", server.metrics.summary());
     server.shutdown();

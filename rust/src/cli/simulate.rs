@@ -1,26 +1,64 @@
-//! `zebra simulate` — run the accelerator model over a trace with one
-//! codec (or all of them) and print the per-layer timing/traffic table.
+//! `zebra simulate` — run the accelerator model over real activation
+//! spills with one codec (or all of them) and print the per-layer
+//! timing/traffic table.
+//!
+//! Spills come from either a Python-dumped trace (`--trace DIR`) or,
+//! artifact-free, from natively executing the reference backend on
+//! synthetic images (`--backend reference [--model KEY] [--images N]`).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::Args;
 use crate::accel::{simulate_trace, AccelConfig, LayerDesc, SimReport};
+use crate::backend::reference::{RefSpec, ReferenceBackend};
+use crate::backend::{synth_images, BackendKind, InferenceBackend};
 use crate::bench::Table;
 use crate::compress::{all_codecs, from_name, DenseCodec};
 use crate::tensor::Tensor;
 use crate::zebra::bandwidth::fmt_bytes;
 
 pub fn run(args: &Args) -> Result<()> {
-    let dir = args
-        .get("trace")
-        .ok_or_else(|| anyhow::anyhow!("simulate needs --trace DIR"))?;
-    let tr = crate::trace::load(dir)?;
+    let (label, layers, tensors) = if let Some(dir) = args.get("trace") {
+        let tr = crate::trace::load(dir)?;
+        let plan = tr.plan();
+        let layers = LayerDesc::from_plan(&plan);
+        let tensors: Vec<Tensor> =
+            tr.spills.iter().map(|s| s.tensor.clone()).collect();
+        (tr.model.clone(), layers, tensors)
+    } else if args.get("backend").is_some() {
+        let backend = BackendKind::parse(&args.get_or("backend", "reference"))?;
+        if backend != BackendKind::Reference {
+            bail!(
+                "only `--backend reference` can synthesize spills; the \
+                 pjrt backend simulates via `--trace DIR`"
+            );
+        }
+        let model = args.get_or("model", "rn18-c10-t0.1");
+        let n = args.get_usize("images", 8)?.max(1);
+        let be = ReferenceBackend::new(RefSpec::from_key(&model)?)?;
+        let x = synth_images(be.image_hw(), n, 0x5EED);
+        println!(
+            "executing {model} on the reference backend ({n} synthetic \
+             images) ..."
+        );
+        let (_, spills) = be.run_capture(&x)?;
+        let layers = LayerDesc::from_plan(&be.spec().spills);
+        (model, layers, spills)
+    } else {
+        bail!("simulate needs --trace DIR or --backend reference");
+    };
+
     let cfg = AccelConfig::default();
-    let plan = tr.plan();
-    let layers = LayerDesc::from_plan(&plan);
-    let tensors: Vec<Tensor> =
-        tr.spills.iter().map(|s| s.tensor.clone()).collect();
-    let block = plan.iter().map(|s| s.block).max().unwrap_or(4);
+    // One codec instance encodes every layer, so its block size must
+    // divide every map. Blocks are powers of two clamped to the map
+    // (models::block_for), so the plan's MINIMUM block divides all
+    // maps; the max would panic on plans whose deep layers shrink the
+    // block (vgg16/mbnet 2x2 tails).
+    let block = layers
+        .iter()
+        .map(|l| l.spill.block)
+        .min()
+        .unwrap_or(4);
 
     let dense = simulate_trace(&cfg, &layers, &tensors, &DenseCodec)?;
     if args.get("all").is_some() {
@@ -32,7 +70,7 @@ pub fn run(args: &Args) -> Result<()> {
             let r = simulate_trace(&cfg, &layers, &tensors, codec.as_ref())?;
             push_summary(&mut t, &cfg, &r, &dense);
         }
-        t.print(&format!("Accelerator simulation — {} (all codecs)", tr.model));
+        t.print(&format!("Accelerator simulation — {label} (all codecs)"));
     } else {
         let name = args.get_or("codec", "zero-block");
         // Registry-backed parsing: an unknown name errors with the full
@@ -40,8 +78,7 @@ pub fn run(args: &Args) -> Result<()> {
         let codec = from_name(&name, block)?;
         let r = simulate_trace(&cfg, &layers, &tensors, codec.as_ref())?;
         per_layer_table(&r).print(&format!(
-            "Accelerator simulation — {} with {}",
-            tr.model, name
+            "Accelerator simulation — {label} with {name}"
         ));
         let mut t = Table::new(&[
             "codec", "act bytes/img", "cycles", "latency ms", "energy uJ",

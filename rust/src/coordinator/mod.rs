@@ -1,9 +1,11 @@
-//! Layer-3 coordinator: the serving pipeline that runs the AOT Zebra
+//! Layer-3 coordinator: the serving pipeline that runs the Zebra
 //! models from Rust with Python entirely out of the request path.
 //!
 //! Request flow: [`Server::submit`] -> [`batcher::Batcher`] (dynamic
-//! batching to the exported artifact batch sizes) -> worker thread ->
-//! [`crate::runtime::ModelHandle::run`] (PJRT) -> per-request
+//! batching to the backend's supported batch sizes) -> worker thread
+//! -> [`crate::backend::InferenceBackend::execute`] (bridged by
+//! [`server::BackendExecutor`]; the pure-Rust reference backend in
+//! every build, PJRT under `--features pjrt`) -> per-request
 //! [`server::Response`] with logits and Eq. 2–3 bandwidth accounting
 //! derived from the model's own mask outputs.
 //!
@@ -24,7 +26,9 @@ pub mod server;
 
 pub use batcher::{Batch, Batcher};
 pub use metrics::Metrics;
+#[cfg(feature = "pjrt")]
+pub use server::pjrt_executor;
 pub use server::{
-    BatchExecutor, PjrtExecutor, Request, Response, Server, ServerConfig,
-    ShipSpills,
+    reference_executor, BackendExecutor, BatchExecutor, Request, Response,
+    Server, ServerConfig, ShipSpills,
 };

@@ -2,8 +2,10 @@
 //! worker(s) -> per-request responses with bandwidth accounting.
 //!
 //! The executor is abstracted behind [`BatchExecutor`] so the pipeline
-//! is testable without PJRT (tests use a closure executor); production
-//! wires it to [`crate::runtime::Runtime`] via [`PjrtExecutor`].
+//! is testable with a closure/mock; production wires it to any
+//! [`InferenceBackend`] via [`BackendExecutor`] — the pure-Rust
+//! [`crate::backend::reference::ReferenceBackend`] in every build,
+//! PJRT (`--features pjrt`) through [`pjrt_executor`].
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -14,8 +16,8 @@ use anyhow::{anyhow, Context, Result};
 
 use super::batcher::Batcher;
 use super::metrics::Metrics;
+use crate::backend::{InferenceBackend, ModelOutput};
 use crate::compress::{self, Codec, CodecId, SpillBuf};
-use crate::runtime::{ModelOutput, Runtime};
 use crate::tensor::Tensor;
 use crate::zebra::bandwidth::ELEM_BITS;
 
@@ -65,12 +67,15 @@ pub trait BatchExecutor: Send + Sync {
     fn image_hw(&self) -> usize;
 }
 
-/// Production executor. The `xla` crate's PJRT handles are `!Send`
-/// (Rc + raw pointers), so all PJRT state lives on ONE dedicated
-/// executor thread; this handle talks to it over channels and is
-/// therefore freely shareable with the batcher workers.
-pub struct PjrtExecutor {
+/// Production executor: bridges any [`InferenceBackend`] onto the
+/// batcher's worker threads. Backends need not be `Send` (the `xla`
+/// crate's PJRT handles are `Rc` + raw pointers), so the backend is
+/// constructed on — and never leaves — ONE dedicated execution thread;
+/// this handle talks to it over channels and is therefore freely
+/// shareable with the batcher workers.
+pub struct BackendExecutor {
     tx: std::sync::Mutex<Sender<ExecJob>>,
+    name: String,
     sizes: Vec<usize>,
     hw: usize,
 }
@@ -80,61 +85,46 @@ struct ExecJob {
     reply: Sender<Result<ModelOutput>>,
 }
 
-impl PjrtExecutor {
-    /// Spawn the PJRT thread over `artifacts` and eagerly compile every
-    /// exported batch variant of `key` so serving never hits a compile
-    /// stall mid-request.
-    pub fn new(
-        artifacts: std::path::PathBuf,
-        key: &str,
-    ) -> Result<Self> {
-        // Metadata comes from the manifest (pure JSON — no PJRT needed
-        // on this thread).
-        let manifest = crate::runtime::Manifest::load(&artifacts)?;
-        let mut sizes: Vec<usize> = manifest
-            .variants(key)
-            .iter()
-            .map(|m| m.batch)
-            .collect();
-        sizes.sort_unstable();
-        anyhow::ensure!(!sizes.is_empty(), "no artifacts for model {key}");
-        let hw = *manifest.variants(key)[0]
-            .input
-            .last()
-            .context("bad input shape")?;
-
+impl BackendExecutor {
+    /// Spawn the execution thread: `init` runs there, builds the
+    /// backend (loading/compiling every model variant up front so
+    /// serving never hits a load stall mid-request), and startup
+    /// errors propagate back to the caller.
+    pub fn spawn<B, F>(init: F) -> Result<BackendExecutor>
+    where
+        B: InferenceBackend + 'static,
+        F: FnOnce() -> Result<B> + Send + 'static,
+    {
         let (tx, rx) = channel::<ExecJob>();
-        let (ready_tx, ready_rx) = channel::<Result<()>>();
-        let key = key.to_string();
-        let szs = sizes.clone();
-        std::thread::spawn(move || {
-            pjrt_thread(artifacts, key, szs, rx, ready_tx)
-        });
-        ready_rx
+        let (ready_tx, ready_rx) = channel::<Result<(String, Vec<usize>, usize)>>();
+        std::thread::spawn(move || backend_thread(init, rx, ready_tx));
+        let (name, mut sizes, hw) = ready_rx
             .recv()
-            .context("PJRT thread died during startup")??;
-        Ok(PjrtExecutor { tx: std::sync::Mutex::new(tx), sizes, hw })
+            .context("backend thread died during startup")??;
+        sizes.sort_unstable();
+        anyhow::ensure!(!sizes.is_empty(), "backend {name} exports no batch sizes");
+        Ok(BackendExecutor { tx: std::sync::Mutex::new(tx), name, sizes, hw })
+    }
+
+    /// Which backend this executor runs ("reference", "pjrt", ...).
+    pub fn backend_name(&self) -> &str {
+        &self.name
     }
 }
 
-fn pjrt_thread(
-    artifacts: std::path::PathBuf,
-    key: String,
-    sizes: Vec<usize>,
+fn backend_thread<B, F>(
+    init: F,
     rx: Receiver<ExecJob>,
-    ready: Sender<Result<()>>,
-) {
-    let init = (|| -> Result<Runtime> {
-        let rt = Runtime::new(&artifacts)?;
-        for b in &sizes {
-            rt.model_for_batch(&key, *b)?;
-        }
-        Ok(rt)
-    })();
-    let rt = match init {
-        Ok(rt) => {
-            let _ = ready.send(Ok(()));
-            rt
+    ready: Sender<Result<(String, Vec<usize>, usize)>>,
+) where
+    B: InferenceBackend,
+    F: FnOnce() -> Result<B>,
+{
+    let backend = match init() {
+        Ok(b) => {
+            let meta = (b.name().to_string(), b.batch_sizes(), b.image_hw());
+            let _ = ready.send(Ok(meta));
+            b
         }
         Err(e) => {
             let _ = ready.send(Err(e));
@@ -142,23 +132,20 @@ fn pjrt_thread(
         }
     };
     while let Ok(job) = rx.recv() {
-        let b = job.x.shape()[0];
-        let out = rt
-            .model_for_batch(&key, b)
-            .and_then(|handle| handle.run(&job.x));
-        let _ = job.reply.send(out);
+        let _ = job.reply.send(backend.execute(&job.x));
     }
 }
 
-impl BatchExecutor for PjrtExecutor {
+impl BatchExecutor for BackendExecutor {
     fn execute(&self, x: &Tensor) -> Result<ModelOutput> {
         let (reply, rx) = channel();
         self.tx
             .lock()
             .unwrap()
             .send(ExecJob { x: x.clone(), reply })
-            .map_err(|_| anyhow!("PJRT executor thread is gone"))?;
-        rx.recv().context("PJRT executor dropped the job")?
+            .map_err(|_| anyhow!("{} executor thread is gone", self.name))?;
+        rx.recv()
+            .with_context(|| format!("{} executor dropped the job", self.name))?
     }
     fn batch_sizes(&self) -> Vec<usize> {
         self.sizes.clone()
@@ -166,6 +153,30 @@ impl BatchExecutor for PjrtExecutor {
     fn image_hw(&self) -> usize {
         self.hw
     }
+}
+
+/// [`BackendExecutor`] over the pure-Rust reference backend (always
+/// available — this is what the default build serves with).
+pub fn reference_executor(
+    spec: crate::backend::reference::RefSpec,
+) -> Result<BackendExecutor> {
+    BackendExecutor::spawn(move || {
+        crate::backend::reference::ReferenceBackend::new(spec)
+    })
+}
+
+/// [`BackendExecutor`] over the PJRT runtime: eagerly compiles every
+/// exported batch variant of `key` from `artifacts` on the execution
+/// thread (PJRT state is `!Send`).
+#[cfg(feature = "pjrt")]
+pub fn pjrt_executor(
+    artifacts: std::path::PathBuf,
+    key: &str,
+) -> Result<BackendExecutor> {
+    let key = key.to_string();
+    BackendExecutor::spawn(move || {
+        crate::runtime::PjrtBackend::new(&artifacts, &key)
+    })
 }
 
 /// Spill-shipping configuration: which codec frames each executed

@@ -27,7 +27,12 @@
 //! - [`trace`] — replaying Python-dumped activation traces.
 //! - [`accel`] — the layer-by-layer accelerator simulator (PE array,
 //!   SRAM, DRAM bursts) that turns zero blocks into bytes-on-the-wire.
-//! - [`runtime`] — PJRT loading/execution of the AOT HLO artifacts.
+//! - [`backend`] — pluggable inference backends behind the
+//!   `InferenceBackend` trait: the pure-Rust reference backend (always
+//!   available, zero external dependencies — what CI gates) and, under
+//!   `--features pjrt`, the PJRT runtime.
+//! - [`runtime`] — artifact manifest parsing (every build) + PJRT
+//!   loading/execution of the AOT HLO artifacts (`pjrt` feature).
 //! - [`coordinator`] — the serving pipeline: dynamic batcher, worker
 //!   pool, per-request bandwidth metering.
 //! - [`bench`] — the in-repo benchmarking harness (criterion is not in
@@ -36,6 +41,7 @@
 //! - [`util`] — JSON, PRNG and property-testing support.
 
 pub mod accel;
+pub mod backend;
 pub mod bench;
 pub mod cli;
 pub mod compress;

@@ -1,22 +1,35 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//! Artifact manifest parsing (always available) and the PJRT runtime
+//! (behind the `pjrt` cargo feature).
 //!
-//! The interchange is HLO *text* — `HloModuleProto::from_text_file`
+//! The manifest half — [`Manifest`], [`ModelMeta`], [`MaskInfo`] — is
+//! pure JSON over `artifacts/manifest.json` and has no native
+//! dependencies; the Table V cross-checks and the coordinator's
+//! metadata path use it in every build.
+//!
+//! The execution half — [`Runtime`], [`ModelHandle`], [`PjrtBackend`]
+//! — loads AOT HLO-text artifacts and executes them through PJRT. The
+//! interchange is HLO *text* — `HloModuleProto::from_text_file`
 //! reassigns instruction ids, which sidesteps xla_extension 0.5.1's
 //! rejection of jax>=0.5's 64-bit-id serialized protos (see
-//! /opt/xla-example/README.md and DESIGN.md §2).
-//!
-//! [`Runtime`] owns one `PjRtClient` (CPU) and a cache of compiled
-//! executables keyed by artifact name, plus the manifest metadata the
-//! Python pipeline wrote. The coordinator's workers call
-//! [`ModelHandle::run`] with an NCHW input tensor and get back logits +
-//! the per-Zebra-layer block masks the model emits as extra outputs.
+//! /opt/xla-example/README.md and DESIGN.md §2). It requires the XLA
+//! C++ toolchain, so it only exists under `--features pjrt`; the
+//! default build serves through
+//! [`crate::backend::reference::ReferenceBackend`] instead.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::anyhow;
+use anyhow::{bail, Context, Result};
 
+pub use crate::backend::ModelOutput;
+#[cfg(feature = "pjrt")]
+use crate::backend::InferenceBackend;
+#[cfg(feature = "pjrt")]
 use crate::tensor::Tensor;
 use crate::util::json::{self, Value};
 
@@ -126,26 +139,16 @@ fn parse_model(m: &Value) -> Result<ModelMeta> {
     })
 }
 
-/// One model's outputs for a batch.
-#[derive(Debug)]
-pub struct ModelOutput {
-    /// `(batch, classes)` logits.
-    pub logits: Tensor,
-    /// Per-Zebra-layer block masks, `(batch, C, H/B, W/B)` in {0,1}.
-    pub masks: Vec<Tensor>,
-    /// Elements per block (`B*B`) for each mask, from the manifest —
-    /// what converts mask counts into Eq. 2 bytes.
-    pub block_elems: Vec<usize>,
-}
-
 /// A compiled executable + its metadata + the device-resident weights
 /// (uploaded once at load; per-request executes only copy the input).
+#[cfg(feature = "pjrt")]
 pub struct ModelHandle {
     pub meta: ModelMeta,
     exe: xla::PjRtLoadedExecutable,
     weights: Vec<xla::PjRtBuffer>,
 }
 
+#[cfg(feature = "pjrt")]
 impl ModelHandle {
     /// Execute on a full batch. `x` must be `(batch, 3, H, W)` matching
     /// the artifact's fixed batch.
@@ -188,6 +191,7 @@ impl ModelHandle {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
     let shape = lit.array_shape()?;
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -196,12 +200,14 @@ fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
 }
 
 /// The PJRT runtime: client + executable cache.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
     cache: Mutex<HashMap<String, std::sync::Arc<ModelHandle>>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// CPU client over the artifacts directory.
     pub fn new(artifacts: impl AsRef<Path>) -> Result<Runtime> {
@@ -321,12 +327,70 @@ impl Runtime {
     }
 }
 
+/// [`InferenceBackend`] over the PJRT runtime: owns one [`Runtime`]
+/// and the model key, eagerly compiling every exported batch variant
+/// at construction so serving never hits a compile stall mid-request.
+///
+/// PJRT handles are `Rc` + raw pointers (`!Send`), so construct this
+/// on the thread that will execute it — which is exactly what
+/// [`crate::coordinator::server::BackendExecutor::spawn`] does.
+#[cfg(feature = "pjrt")]
+pub struct PjrtBackend {
+    rt: Runtime,
+    key: String,
+    sizes: Vec<usize>,
+    hw: usize,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtBackend {
+    pub fn new(artifacts: impl AsRef<Path>, key: &str) -> Result<PjrtBackend> {
+        let rt = Runtime::new(&artifacts)?;
+        let sizes = rt.batches_for(key);
+        anyhow::ensure!(!sizes.is_empty(), "no artifacts for model {key}");
+        for b in &sizes {
+            rt.model_for_batch(key, *b)?;
+        }
+        let hw = *rt
+            .variants_meta(key)?
+            .input
+            .last()
+            .context("bad input shape")?;
+        Ok(PjrtBackend { rt, key: key.to_string(), sizes, hw })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl InferenceBackend for PjrtBackend {
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.sizes.clone()
+    }
+
+    fn image_hw(&self) -> usize {
+        self.hw
+    }
+
+    fn execute(&self, x: &Tensor) -> Result<ModelOutput> {
+        let b = x.shape().first().copied().unwrap_or(0);
+        self.rt.model_for_batch(&self.key, b)?.run(x)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     // PJRT-dependent paths are covered by `rust/tests/runtime_integration`
-    // (they need real artifacts); here we test the manifest parsing.
+    // (they need real artifacts and `--features pjrt`); here we test the
+    // manifest parsing, which every build ships.
 
     #[test]
     fn parses_model_entry() {

@@ -1,0 +1,179 @@
+//! Integration: the pure-Rust reference backend through the real
+//! serving pipeline — no PJRT, no artifacts, no closure executor.
+//!
+//! This is the configuration CI gates: `BackendExecutor` bridges a
+//! `ReferenceBackend` onto the coordinator exactly the way production
+//! bridges PJRT, and the per-request Eq. 2–3 accounting is
+//! cross-checked against the accelerator model's analytic mode.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use zebra::accel::{simulate_analytic, AccelConfig, LayerDesc};
+use zebra::backend::reference::{RefSpec, ReferenceBackend};
+use zebra::backend::InferenceBackend;
+use zebra::coordinator::{BackendExecutor, Server, ServerConfig};
+use zebra::tensor::Tensor;
+use zebra::util::prng::Rng;
+
+fn noise_image(hw: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let n = 3 * hw * hw;
+    Tensor::from_vec(&[3, hw, hw], (0..n).map(|_| rng.normal()).collect())
+}
+
+fn argv(s: &[&str]) -> Vec<String> {
+    s.iter().map(|x| x.to_string()).collect()
+}
+
+#[test]
+fn coordinator_serves_end_to_end_on_the_reference_backend() {
+    let exec = BackendExecutor::spawn(|| ReferenceBackend::new(RefSpec::tiny()))
+        .unwrap();
+    assert_eq!(exec.backend_name(), "reference");
+    let srv = Server::start(
+        Arc::new(exec),
+        ServerConfig {
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+            max_queue: 256,
+            ship_spills: None,
+        },
+    );
+    let img = noise_image(8, 11);
+    let r = srv.classify(img.clone()).unwrap();
+    assert_eq!(r.logits.len(), 10, "tiny spec has 10 classes");
+    assert!(r.predicted < 10);
+    // Nonzero bandwidth accounting, derived from real masks.
+    assert!(r.dense_bytes > 0, "dense bytes must be nonzero");
+    assert!(r.stored_bytes <= r.dense_bytes);
+    assert!(r.index_bytes > 0, "Eq. 3 index is never free");
+    // Deterministic backend => identical answers for identical images.
+    let r2 = srv.classify(img).unwrap();
+    assert_eq!(r2.logits, r.logits);
+    assert_eq!(r2.stored_bytes, r.stored_bytes);
+    // A different image routes its own answer back.
+    let r3 = srv.classify(noise_image(8, 99)).unwrap();
+    assert_ne!(r3.logits, r.logits);
+    srv.shutdown();
+}
+
+#[test]
+fn batching_engages_over_the_reference_backend() {
+    let exec = BackendExecutor::spawn(|| ReferenceBackend::new(RefSpec::tiny()))
+        .unwrap();
+    let srv = Arc::new(Server::start(
+        Arc::new(exec),
+        ServerConfig {
+            max_wait: Duration::from_millis(20),
+            workers: 1,
+            max_queue: 1024,
+            ship_spills: None,
+        },
+    ));
+    let rxs: Vec<_> = (0..16)
+        .map(|i| srv.submit(noise_image(8, i as u64)).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    assert!(
+        srv.metrics.mean_batch() > 1.0,
+        "batcher should coalesce: mean {}",
+        srv.metrics.mean_batch()
+    );
+    let dense = srv
+        .metrics
+        .dense_bytes
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(dense > 0, "aggregate accounting must be nonzero");
+    Arc::try_unwrap(srv).ok().map(|s| s.shutdown());
+}
+
+#[test]
+fn backend_startup_errors_propagate_to_the_caller() {
+    let bad = BackendExecutor::spawn(|| {
+        let mut spec = RefSpec::tiny();
+        spec.spills.clear();
+        ReferenceBackend::new(spec)
+    });
+    let msg = format!("{:#}", bad.err().unwrap());
+    assert!(msg.contains("no layers"), "{msg}");
+}
+
+#[test]
+fn mask_accounting_matches_simulate_analytic() {
+    // Eq. 2 bytes derived from the backend's masks must agree with the
+    // accelerator model's analytic mode fed the same kept fractions —
+    // the two independent accountings of the paper's headline number.
+    let spec = RefSpec::tiny();
+    let be = ReferenceBackend::new(spec.clone()).unwrap();
+    let x = noise_image(8, 5).reshape(&[1, 3, 8, 8]);
+    let out = be.execute(&x).unwrap();
+    assert_eq!(out.masks.len(), spec.spills.len());
+
+    let mut kept = Vec::new();
+    let mut eq2_bytes = Vec::new();
+    for (m, sp) in out.masks.iter().zip(&spec.spills) {
+        let total = m.len();
+        let k = m.data().iter().filter(|&&v| v != 0.0).count();
+        kept.push(k as f64 / total as f64);
+        eq2_bytes.push((k * sp.block * sp.block * 4) as f64);
+    }
+    let layers = LayerDesc::from_plan(&spec.spills);
+    let sim = simulate_analytic(&AccelConfig::default(), &layers, &kept, "ref");
+    assert_eq!(sim.layers.len(), eq2_bytes.len());
+    for (l, want) in sim.layers.iter().zip(&eq2_bytes) {
+        let got = l.act_bytes_out as f64;
+        assert!(
+            (got - want).abs() <= 1.0,
+            "layer {}: analytic {got} B vs mask-derived Eq.2 {want} B",
+            l.name
+        );
+    }
+}
+
+#[test]
+fn serve_cli_runs_artifact_free_on_the_reference_backend() {
+    // The acceptance path: `zebra serve --backend reference` must
+    // classify end to end with zero artifacts on disk (synthetic test
+    // set kicks in).
+    let args = zebra::cli::Args::parse(&argv(&[
+        "serve",
+        "--backend",
+        "reference",
+        "--model",
+        "ref-tiny",
+        "--requests",
+        "5",
+        "--wait-ms",
+        "0",
+    ]))
+    .unwrap();
+    let empty = std::env::temp_dir()
+        .join(format!("zebra-no-artifacts-{}", std::process::id()));
+    zebra::cli::serve::run_with(&args, empty).unwrap();
+}
+
+#[test]
+fn serve_cli_ships_spills_on_the_reference_backend() {
+    // --ship-codec composes with --backend reference: batches are
+    // framed as `.zspill` on the way through.
+    let args = zebra::cli::Args::parse(&argv(&[
+        "serve",
+        "--backend",
+        "reference",
+        "--model",
+        "ref-tiny",
+        "--requests",
+        "3",
+        "--ship-codec",
+        "zero-block",
+        "--ship-block",
+        "2",
+    ]))
+    .unwrap();
+    let empty = std::env::temp_dir()
+        .join(format!("zebra-no-artifacts-ship-{}", std::process::id()));
+    zebra::cli::serve::run_with(&args, empty).unwrap();
+}

@@ -1,9 +1,11 @@
 //! Integration: PJRT runtime over real AOT artifacts.
 //!
-//! Requires `make artifacts`. The standalone zebra-kernel HLO is
-//! cross-validated against the Rust pruner — the two implementations of
-//! the paper's op (Pallas-lowered HLO vs native Rust) must agree bit
-//! for bit.
+//! Requires `make artifacts` AND `--features pjrt` (the whole file is
+//! compiled out otherwise — the default build has no XLA toolchain).
+//! The standalone zebra-kernel HLO is cross-validated against the Rust
+//! pruner — the two implementations of the paper's op (Pallas-lowered
+//! HLO vs native Rust) must agree bit for bit.
+#![cfg(feature = "pjrt")]
 
 use zebra::runtime::Runtime;
 use zebra::tensor::Tensor;
