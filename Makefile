@@ -1,13 +1,15 @@
 # Repo-level convenience targets.
 
-.PHONY: check ci bench-smoke
+.PHONY: check ci bench-smoke train-smoke
 
 # Full gate: build + tests + fmt + clippy in both feature configs
-# (the pjrt config auto-skips when no XLA toolchain is present).
+# (the pjrt config auto-skips when no XLA toolchain is present),
+# closed by the train smoke below.
 check:
 	./rust/check.sh
 
-# Everything the CI workflow runs: the gate plus the bench smoke pass.
+# Everything the CI workflow runs: the gate (train smoke included)
+# plus the bench smoke pass.
 ci: check bench-smoke
 
 # Run every table*/fig* bench regenerator in fast smoke mode:
@@ -16,3 +18,18 @@ ci: check bench-smoke
 # in seconds and CI catches bench bit-rot without trained artifacts.
 bench-smoke:
 	cd rust && ZEBRA_BENCH_SMOKE=1 cargo bench --no-default-features
+
+# Few-step synthetic `zebra train` + artifact reload on the reference
+# backend: proves the train -> .zten -> serve loop end to end in
+# seconds. ZEBRA_BENCH_SMOKE=1 caps the training budget the same way
+# it caps bench measuring time. This recipe is the single source of
+# truth — rust/check.sh invokes this target rather than duplicating it.
+train-smoke:
+	cd rust && tmp=$$(mktemp -d) && \
+	( ZEBRA_BENCH_SMOKE=1 cargo run --release --no-default-features -- \
+	    train --model ref-tiny --lambda 0.001 --steps 25 \
+	    --out "$$tmp/leaves" \
+	  && cargo run --release --no-default-features -- \
+	    serve --backend reference --model ref-tiny \
+	    --weights "$$tmp/leaves" --requests 8 --seed 7 ); \
+	rc=$$?; rm -rf "$$tmp"; exit $$rc

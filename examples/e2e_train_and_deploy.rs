@@ -1,105 +1,101 @@
-//! END-TO-END driver: the full system on a real small workload.
+//! END-TO-END driver: the full system on a real small workload, with
+//! zero Python, zero artifacts, zero native dependencies.
 //!
-//! Covers every layer of the stack in one run (EXPERIMENTS.md §E2E):
+//! Covers every layer of the stack in one run:
 //!
-//! 1. **Train** (build time, `make artifacts`): the Python pipeline
-//!    trained ResNet-18 with Zebra (T_obj = 0.1) on the synthetic
-//!    CIFAR-10 stand-in; this driver replays its loss curve and the
-//!    learned-threshold convergence (the paper's Fig. 3 claim) from
-//!    metrics.json.
-//! 2. **Deploy**: the AOT HLO artifacts (Pallas-lowered kernels inside)
-//!    are loaded by the PJRT runtime; the coordinator serves the whole
-//!    exported test set through the dynamic batcher.
-//! 3. **Measure**: top-1 accuracy, serving throughput, and the paper's
-//!    headline metric — % of activation DRAM traffic eliminated — both
-//!    from the serving masks and from the accelerator simulation of
-//!    the traced spills, vs the no-Zebra baseline model.
+//! 1. **Train** (`zebra::train`): two identical runs of the reference
+//!    tiny CNN on a synthetic labeled dataset — one with the Zebra
+//!    objective `CE + lambda * sum ||block||_2` (straight-through
+//!    estimator through the block gate), one control at lambda = 0.
+//! 2. **Deploy**: the Zebra run's weights are written as `w%05d.zten`
+//!    leaves and served through the coordinator (dynamic batcher,
+//!    per-request Eq. 2–3 accounting) on the reference backend — the
+//!    same artifact path `zebra serve --backend reference --weights`
+//!    uses.
+//! 3. **Measure**: held-out accuracy, zero-block ratio and bandwidth
+//!    reduction for both runs, plus the accelerator simulation
+//!    (burst-quantized DRAM traffic) of their captured spills — the
+//!    paper's headline: learned zero-block regularization cuts
+//!    activation memory traffic.
 //!
-//! Needs trained artifacts and the PJRT runtime: build with
-//! `--features pjrt` (a default build prints a pointer to
-//! `zebra serve --backend reference` instead).
-//!
-//! Run: `make e2e` (or
-//! `cargo run --release --features pjrt --example e2e_train_and_deploy`)
+//! Run: `cargo run --release --example e2e_train_and_deploy`
+//! (`ZEBRA_E2E_STEPS=N` overrides the training budget.)
 
-#[cfg(not(feature = "pjrt"))]
-fn main() {
-    eprintln!(
-        "e2e_train_and_deploy exercises the PJRT runtime over AOT \
-         artifacts; rebuild with `cargo run --release --features pjrt \
-         --example e2e_train_and_deploy`. For the zero-dependency path, \
-         try `zebra serve --backend reference` or the quickstart example."
-    );
-}
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-#[cfg(feature = "pjrt")]
+use zebra::accel::{simulate_trace, AccelConfig, LayerDesc};
+use zebra::backend::reference::ReferenceBackend;
+use zebra::bench::Table;
+use zebra::compress::{DenseCodec, ZeroBlockCodec};
+use zebra::coordinator::{reference_executor, Server, ServerConfig};
+use zebra::tensor::Tensor;
+use zebra::train::{train_on, Dataset, TrainConfig};
+
 fn main() -> anyhow::Result<()> {
-    use std::sync::Arc;
-    use std::time::{Duration, Instant};
+    let steps = std::env::var("ZEBRA_E2E_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300);
+    let base = TrainConfig {
+        model: "ref-tiny".into(),
+        lambda: 2e-3,
+        steps,
+        batch: 16,
+        seed: 7,
+        quiet: true,
+        ..TrainConfig::default()
+    };
 
-    use zebra::accel::{simulate_trace, AccelConfig, LayerDesc};
-    use zebra::bench::paper::PaperMetrics;
-    use zebra::bench::Table;
-    use zebra::compress::{DenseCodec, ZeroBlockCodec};
-    use zebra::coordinator::{pjrt_executor, Server, ServerConfig};
-    use zebra::tensor::{read_zten, read_zten_i32, Tensor};
-
-    let art = zebra::artifacts_dir();
-    println!("=== Phase 1: training evidence (from `make artifacts`) ===");
-    let metrics = PaperMetrics::load(&art)?;
-    let run = metrics
-        .run("rn18-c10-t0.1")
-        .ok_or_else(|| anyhow::anyhow!("rn18-c10-t0.1 missing — run make artifacts"))?;
-    let loss = &run.loss_history;
-    anyhow::ensure!(loss.len() >= 4, "loss history too short");
-    let (first, last) = (loss[0], *loss.last().unwrap());
+    println!("=== Phase 1: train (pure Rust, Zebra objective) ===");
+    let ds = Dataset::synthetic(8, 10, 320, base.seed);
+    let (train_ds, holdout) = ds.split(64);
+    let t0 = Instant::now();
+    let zebra_run = train_on(&base, &train_ds, &holdout)?;
+    let control = train_on(
+        &TrainConfig { lambda: 0.0, ..base.clone() },
+        &train_ds,
+        &holdout,
+    )?;
     println!(
-        "loss curve ({} logged points): {:.3} -> {:.3} ({:.0}% drop)",
-        loss.len(),
-        first,
-        last,
-        100.0 * (1.0 - last / first)
+        "two {steps}-step runs (lambda {} vs 0) in {:.1}s",
+        base.lambda,
+        t0.elapsed().as_secs_f64()
     );
-    sparkline("loss", loss);
-    anyhow::ensure!(last < 0.7 * first, "training must reduce the loss");
-    let ts = &run.mean_t_history;
-    if !ts.is_empty() {
-        sparkline("mean T_{l,c}", ts);
-        let final_t = *ts.last().unwrap();
-        println!(
-            "learned thresholds converged to {:.4} (T_obj = {:.2}) — the \
-             paper's Fig. 3 observation, enabling threshold-net removal at \
-             inference.",
-            final_t, run.t_obj
-        );
-        anyhow::ensure!(
-            (final_t - run.t_obj).abs() < 0.05,
-            "thresholds must converge to T_obj"
-        );
+    for (label, run) in [("zebra", &zebra_run), ("control", &control)] {
+        let hist: Vec<f64> =
+            run.loss_history.iter().map(|&v| v as f64).collect();
+        sparkline(&format!("{label} loss"), &hist);
+        let (first, last) = (hist[0], *hist.last().unwrap());
+        anyhow::ensure!(last < first, "{label}: training must reduce loss");
     }
 
-    println!("\n=== Phase 2: deploy — serve the full test set ===");
-    let exec = Arc::new(pjrt_executor(art.clone(), "rn18-c10-t0.1")?);
+    println!("\n=== Phase 2: deploy — .zten artifact into the coordinator ===");
+    let dir = std::env::temp_dir()
+        .join(format!("zebra-e2e-{}", std::process::id()));
+    zebra_run.write_leaves(&dir)?;
+    println!("checkpointed {} leaves to {dir:?}", zebra_run.params.conv_w.len() + 1);
+    let mut spec = zebra_run.spec.clone();
+    spec.weights_dir = Some(dir.clone());
+    let exec = Arc::new(reference_executor(spec)?);
     let server = Server::start(
         exec,
         ServerConfig {
-            max_wait: Duration::from_millis(3),
+            max_wait: Duration::from_millis(2),
             workers: 1,
             max_queue: 1024,
             ship_spills: None,
         },
     );
-    let images = read_zten(art.join("testset_images.zten"))?;
-    let (_, labels) = read_zten_i32(art.join("testset_labels.zten"))?;
-    let hw = images.shape()[2];
+    let hw = 8usize;
     let per = 3 * hw * hw;
-    let n = images.shape()[0];
+    let n = holdout.len();
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..n)
         .map(|i| {
             let x = Tensor::from_vec(
                 &[3, hw, hw],
-                images.data()[i * per..(i + 1) * per].to_vec(),
+                holdout.images.data()[i * per..(i + 1) * per].to_vec(),
             );
             server.submit(x).unwrap()
         })
@@ -107,77 +103,96 @@ fn main() -> anyhow::Result<()> {
     let mut correct = 0usize;
     for (i, rx) in rxs.into_iter().enumerate() {
         let r = rx.recv()?;
-        if r.predicted as i32 == labels[i] {
+        if r.predicted as i32 == holdout.labels[i] {
             correct += 1;
         }
     }
     let wall = t0.elapsed().as_secs_f64();
     let top1 = 100.0 * correct as f64 / n as f64;
     println!(
-        "served {n} images in {wall:.2}s ({:.1} img/s) | top-1 {top1:.1}% \
-         (python eval: {:.1}%)",
-        n as f64 / wall,
-        run.top1
+        "served {n} held-out images in {wall:.2}s ({:.0} img/s) | \
+         top-1 {top1:.1}% (chance would be 10%)",
+        n as f64 / wall
     );
     println!("coordinator: {}", server.metrics.summary());
     let serving_reduction = server.metrics.reduction_pct();
     server.shutdown();
+    // The artifact has served its purpose; clean up before the
+    // assertions below so a failing run does not leak temp dirs.
+    std::fs::remove_dir_all(&dir).ok();
 
-    println!("\n=== Phase 3: accelerator-level measurement ===");
-    let mut t = Table::new(&["model", "codec", "act bytes/img", "latency ms",
-                             "reduction %"]);
+    println!("\n=== Phase 3: accelerator-level measurement, lambda vs 0 ===");
+    let mut t = Table::new(&[
+        "run", "codec", "act bytes/img", "latency ms", "reduction %",
+    ]);
     let cfg = AccelConfig::default();
-    let mut zebra_red = 0.0;
-    for (name, trace_dir) in
-        [("baseline (no Zebra)", "rn18-c10-off"), ("Zebra T=0.2", "rn18-c10-t0.2")]
+    let probe = Tensor::from_vec(
+        &[8, 3, hw, hw],
+        holdout.images.data()[..8 * per].to_vec(),
+    );
+    for (name, run) in
+        [("Zebra lambda=2e-3", &zebra_run), ("control lambda=0", &control)]
     {
-        let tr = zebra::trace::load(art.join("traces").join(trace_dir))?;
-        let plan = tr.plan();
-        let layers = LayerDesc::from_plan(&plan);
-        let tensors: Vec<Tensor> =
-            tr.spills.iter().map(|s| s.tensor.clone()).collect();
-        let block = plan.iter().map(|s| s.block).max().unwrap_or(4);
-        let dense = simulate_trace(&cfg, &layers, &tensors, &DenseCodec)?;
-        let zb =
-            simulate_trace(&cfg, &layers, &tensors, &ZeroBlockCodec::new(block))?;
-        let red = zb.reduction_vs(&dense);
+        let be = ReferenceBackend::from_params(
+            run.spec.clone(),
+            run.params.clone(),
+        )?;
+        let (_, spills) = be.run_capture(&probe)?;
+        let layers = LayerDesc::from_plan(&be.spec().spills);
+        let block = be.spec().spills.iter().map(|s| s.block).min().unwrap();
+        let dense = simulate_trace(&cfg, &layers, &spills, &DenseCodec)?;
+        let zb = simulate_trace(
+            &cfg,
+            &layers,
+            &spills,
+            &ZeroBlockCodec::new(block),
+        )?;
         for (codec, r) in [("dense", &dense), ("zero-block", &zb)] {
             t.row(&[
                 name.into(),
                 codec.into(),
-                (r.activation_bytes() / tr.batch() as u64).to_string(),
+                (r.activation_bytes() / 8).to_string(),
                 format!("{:.3}", r.latency_ms(&cfg)),
                 format!("{:.1}", r.reduction_vs(&dense)),
             ]);
         }
-        if trace_dir == "rn18-c10-t0.2" {
-            zebra_red = red;
-        }
     }
-    t.print("Accelerator simulation — traced spills through the DRAM model");
+    t.print("Accelerator simulation — trained spills through the DRAM model");
 
+    let (z, c) = (zebra_run.final_stat(), control.final_stat());
     println!("=== Headline ===");
     println!(
-        "Zebra eliminated {serving_reduction:.1}% of activation DRAM \
-         traffic at serving time (masks) and {zebra_red:.1}% in the \
-         accelerator simulation (real traced spills, burst-quantized), \
-         at top-1 {top1:.1}% — the paper's Table II/III trade-off, \
-         reproduced end to end: JAX+Pallas training -> HLO AOT -> Rust \
-         PJRT serving -> accelerator co-simulation."
+        "Zero-block regularization raised the pruned-block ratio from \
+         {:.1}% (lambda=0) to {:.1}% and the Eq. 2-3 bandwidth reduction \
+         from {:.1}% to {:.1}%, at held-out top-1 {:.1}% vs {:.1}% — the \
+         paper's accuracy/bandwidth trade-off, reproduced with training, \
+         artifact export, serving and accelerator co-simulation all in \
+         one Rust binary.",
+        c.zero_block_pct,
+        z.zero_block_pct,
+        c.reduced_pct,
+        z.reduced_pct,
+        100.0 * z.holdout_acc,
+        100.0 * c.holdout_acc,
     );
-    anyhow::ensure!(serving_reduction > 10.0, "Zebra must save bandwidth");
+    anyhow::ensure!(
+        z.zero_block_pct > c.zero_block_pct,
+        "the regularizer must raise the zero-block ratio"
+    );
+    anyhow::ensure!(serving_reduction > 0.0, "Zebra must save bandwidth");
     Ok(())
 }
 
-#[cfg(feature = "pjrt")]
 fn sparkline(label: &str, v: &[f64]) {
     const RAMP: &[u8] = b" .:-=+*#%@";
-    let (lo, hi) = v.iter().fold((f64::MAX, f64::MIN), |(l, h), &x| {
-        (l.min(x), h.max(x))
-    });
-    let s: String = v
+    let (lo, hi) = v
         .iter()
-        .map(|&x| {
+        .fold((f64::MAX, f64::MIN), |(l, h), &x| (l.min(x), h.max(x)));
+    // Downsample to at most 64 columns so long runs stay readable.
+    let cols = v.len().min(64);
+    let s: String = (0..cols)
+        .map(|i| {
+            let x = v[i * v.len() / cols];
             let t = if hi > lo { (x - lo) / (hi - lo) } else { 0.5 };
             RAMP[(t * (RAMP.len() - 1) as f64).round() as usize] as char
         })

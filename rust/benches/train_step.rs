@@ -1,0 +1,79 @@
+//! Training-step microbenchmark: what one optimization step of the
+//! native train subsystem costs, split into its phases, against the
+//! fused serving forward as the baseline.
+//!
+//! Artifact-free (synthetic data, ref-tiny) and honors
+//! `ZEBRA_BENCH_SMOKE=1` through the shared harness, so it runs in CI
+//! like every other bench.
+//!
+//! Run: `cargo bench --bench train_step` (from rust/).
+
+use zebra::backend::reference::{RefSpec, ReferenceBackend};
+use zebra::backend::InferenceBackend;
+use zebra::bench::{bench, Table};
+use zebra::train::loss::softmax_cross_entropy;
+use zebra::train::{Dataset, Tape};
+
+fn main() -> anyhow::Result<()> {
+    let spec = RefSpec::tiny();
+    let backend = ReferenceBackend::new(spec.clone())?;
+    let batch = 8usize;
+    let ds = Dataset::synthetic(spec.in_hw, spec.classes, batch, 3);
+    let x = ds.images.clone();
+    let labels = ds.labels.clone();
+    let params = backend.params().clone();
+
+    let serve = bench("serve forward (fused)", 50, || {
+        backend.execute(&x).unwrap();
+    });
+
+    let tape_forward = || {
+        let mut tape = Tape::new();
+        let xv = tape.input(x.clone());
+        let wvars: Vec<_> = params
+            .conv_w
+            .iter()
+            .map(|w| tape.leaf(w.clone()))
+            .collect();
+        let fcv = tape.leaf(params.fc_w.clone());
+        let mut act = xv;
+        for (i, sp) in spec.spills.iter().enumerate() {
+            let z = tape.conv3x3(act, wvars[i], params.strides[i]);
+            let (a, _) = tape.relu_prune_ste(z, spec.t_obj, sp.block);
+            act = a;
+        }
+        let pooled = tape.avg_pool(act);
+        let logits = tape.linear(pooled, fcv);
+        (tape, logits)
+    };
+
+    let fwd = bench("train forward (tape)", 50, || {
+        let _ = tape_forward();
+    });
+
+    let full = bench("train fwd+bwd step", 50, || {
+        let (tape, logits) = tape_forward();
+        let (_, dlogits) = softmax_cross_entropy(tape.value(logits), &labels);
+        let grads = tape.backward(vec![(logits, dlogits)]);
+        std::hint::black_box(&grads);
+    });
+
+    let mut t = Table::new(&["phase", "mean ms", "steps/s", "vs serve fwd"]);
+    for (name, s) in [
+        ("serve forward", &serve),
+        ("tape forward", &fwd),
+        ("fwd+bwd step", &full),
+    ] {
+        t.row(&[
+            name.to_string(),
+            format!("{:.3}", s.mean_ms()),
+            format!("{:.0}", s.per_sec(1.0)),
+            format!("{:.2}x", s.mean_ns / serve.mean_ns),
+        ]);
+    }
+    t.print(&format!(
+        "Training step cost — ref-tiny, batch {batch} (backward \
+         overhead is the price of learning the masks natively)"
+    ));
+    Ok(())
+}

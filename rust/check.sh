@@ -34,4 +34,11 @@ else
        "(set XLA_EXTENSION_DIR or ZEBRA_PJRT=1 to force)"
 fi
 
+# Train smoke: few-step synthetic `zebra train`, then reload the
+# emitted .zten artifact through the serving CLI — the
+# train -> artifact -> serve loop, gated on every run. The recipe
+# lives in the repo Makefile (single source of truth).
+echo "== train smoke: zebra train -> .zten -> zebra serve --weights"
+make -C .. train-smoke
+
 echo "check OK"

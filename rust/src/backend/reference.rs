@@ -129,69 +129,200 @@ impl RefSpec {
     }
 }
 
+/// Derive per-layer strides from a spec: each spill's H/W must evenly
+/// divide the previous layer's (stride-2 convs fold the plan's
+/// pooling). Also validates block geometry, so both the backend and
+/// the trainer fail loudly at construction instead of mid-execution.
+fn derive_strides(spec: &RefSpec) -> Result<Vec<usize>> {
+    let mut strides = Vec::with_capacity(spec.spills.len());
+    let mut prev_hw = spec.in_hw;
+    for s in &spec.spills {
+        if s.h != s.w {
+            bail!("layer {} is not square ({}x{})", s.name, s.h, s.w);
+        }
+        if s.h == 0 || prev_hw % s.h != 0 {
+            bail!("layer {} shrinks {prev_hw} -> {}; not a whole stride", s.name, s.h);
+        }
+        if s.block == 0 || s.h % s.block != 0 {
+            bail!(
+                "layer {}: block {} does not divide its {}px map",
+                s.name,
+                s.block,
+                s.h
+            );
+        }
+        let stride = prev_hw / s.h;
+        if stride > 2 {
+            bail!("layer {} wants stride {stride} (max 2)", s.name);
+        }
+        strides.push(stride);
+        prev_hw = s.h;
+    }
+    Ok(strides)
+}
+
+/// The trainable/loadable parameters of a reference model, split out
+/// of the backend so the train subsystem (`crate::train`) can own and
+/// update them, then hand a snapshot to
+/// [`ReferenceBackend::from_params`] for evaluation or write them as
+/// the `w%05d.zten` leaf layout [`RefParams::build`] loads back.
+#[derive(Debug, Clone)]
+pub struct RefParams {
+    /// Per-conv-layer `(cout, cin, 3, 3)` weights.
+    pub conv_w: Vec<Tensor>,
+    /// Per-conv-layer stride (1 or 2), derived from the plan.
+    pub strides: Vec<usize>,
+    /// `(classes, c_last)` classifier matrix.
+    pub fc_w: Tensor,
+}
+
+impl RefParams {
+    /// Build parameters for a spec: deterministic He-initialized
+    /// weights keyed by the spec seed, overridden per leaf by
+    /// `w%05d.zten` files when a weights directory is present.
+    pub fn build(spec: &RefSpec) -> Result<RefParams> {
+        if spec.spills.is_empty() {
+            bail!("reference spec {} has no layers", spec.key);
+        }
+        let strides = derive_strides(spec)?;
+        let mut conv_w = Vec::with_capacity(spec.spills.len());
+        let mut cin = 3usize;
+        for (i, s) in spec.spills.iter().enumerate() {
+            let shape = [s.c, cin, 3, 3];
+            let scale = (2.0 / (cin * 9) as f32).sqrt();
+            let t = load_leaf_or(spec, i, &shape, scale)?;
+            conv_w.push(t);
+            cin = s.c;
+        }
+        let fc_shape = [spec.classes, cin];
+        let fc_scale = (1.0 / cin as f32).sqrt();
+        let fc_w = load_leaf_or(spec, spec.spills.len(), &fc_shape, fc_scale)?;
+        Ok(RefParams { conv_w, strides, fc_w })
+    }
+
+    /// Write the `w%05d.zten` leaf layout that [`RefParams::build`]
+    /// (and therefore `zebra serve --weights DIR`) loads back: conv
+    /// layers in order, then the classifier matrix.
+    pub fn write_leaves(&self, dir: &std::path::Path) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating weights dir {dir:?}"))?;
+        for (i, w) in self.conv_w.iter().enumerate() {
+            crate::tensor::write_zten(dir.join(format!("w{i:05}.zten")), w)?;
+        }
+        crate::tensor::write_zten(
+            dir.join(format!("w{:05}.zten", self.conv_w.len())),
+            &self.fc_w,
+        )
+    }
+}
+
+/// Verify `dir` holds the COMPLETE `w%05d.zten` leaf set for a spec
+/// (every conv layer plus the classifier). The explicit
+/// `--weights DIR` CLI paths go through this so a partially-copied or
+/// interrupted checkpoint errors loudly instead of silently mixing
+/// trained leaves with generated weights. (The artifacts-probe path
+/// and [`RefParams::build`] intentionally keep per-leaf override
+/// semantics — see `zten_leaves_override_generated_weights`.)
+pub fn check_complete_leaves(
+    spec: &RefSpec,
+    dir: &std::path::Path,
+) -> Result<()> {
+    for i in 0..=spec.spills.len() {
+        let path = dir.join(format!("w{i:05}.zten"));
+        if !path.exists() {
+            bail!(
+                "weights dir {dir:?} is missing leaf w{i:05}.zten \
+                 ({} expected: {} conv layers + classifier)",
+                spec.spills.len() + 1,
+                spec.spills.len()
+            );
+        }
+    }
+    Ok(())
+}
+
 /// The reference backend: deterministic weights + native execution.
 pub struct ReferenceBackend {
     spec: RefSpec,
-    /// Per-conv-layer `(cout, cin, 3, 3)` weights.
-    conv_w: Vec<Tensor>,
-    /// Per-conv-layer stride (1 or 2), derived from the plan.
-    strides: Vec<usize>,
-    /// `(classes, c_last)` classifier matrix.
-    fc_w: Tensor,
+    params: RefParams,
 }
 
 impl ReferenceBackend {
     pub fn new(spec: RefSpec) -> Result<ReferenceBackend> {
+        let params = RefParams::build(&spec)?;
+        ReferenceBackend::from_params(spec, params)
+    }
+
+    /// Wrap externally-owned parameters (the trainer's working set)
+    /// into a servable backend, shape-checking them against the spec.
+    pub fn from_params(
+        spec: RefSpec,
+        params: RefParams,
+    ) -> Result<ReferenceBackend> {
         if spec.spills.is_empty() {
             bail!("reference spec {} has no layers", spec.key);
         }
         if spec.batch_sizes.is_empty() {
             bail!("reference spec {} exports no batch sizes", spec.key);
         }
-        // Derive strides: each spill's H/W must evenly divide the
-        // previous layer's (stride-2 convs fold the plan's pooling).
-        let mut strides = Vec::with_capacity(spec.spills.len());
-        let mut prev_hw = spec.in_hw;
-        for s in &spec.spills {
-            if s.h != s.w {
-                bail!("layer {} is not square ({}x{})", s.name, s.h, s.w);
-            }
-            if s.h == 0 || prev_hw % s.h != 0 {
-                bail!("layer {} shrinks {prev_hw} -> {}; not a whole stride", s.name, s.h);
-            }
-            if s.block == 0 || s.h % s.block != 0 {
-                bail!(
-                    "layer {}: block {} does not divide its {}px map",
-                    s.name,
-                    s.block,
-                    s.h
-                );
-            }
-            let stride = prev_hw / s.h;
-            if stride > 2 {
-                bail!("layer {} wants stride {stride} (max 2)", s.name);
-            }
-            strides.push(stride);
-            prev_hw = s.h;
+        let strides = derive_strides(&spec)?;
+        if params.strides != strides {
+            bail!(
+                "params carry strides {:?}, spec {} derives {strides:?}",
+                params.strides,
+                spec.key
+            );
         }
-        // Deterministic He-initialized weights, overridable by leaves.
-        let mut conv_w = Vec::with_capacity(spec.spills.len());
+        if params.conv_w.len() != spec.spills.len() {
+            bail!(
+                "{} conv weight tensors for {} layers",
+                params.conv_w.len(),
+                spec.spills.len()
+            );
+        }
         let mut cin = 3usize;
         for (i, s) in spec.spills.iter().enumerate() {
-            let shape = [s.c, cin, 3, 3];
-            let scale = (2.0 / (cin * 9) as f32).sqrt();
-            let t = load_leaf_or(&spec, i, &shape, scale)?;
-            conv_w.push(t);
+            let want = [s.c, cin, 3, 3];
+            if params.conv_w[i].shape() != want {
+                bail!(
+                    "layer {} weights have shape {:?}, spec wants {want:?}",
+                    s.name,
+                    params.conv_w[i].shape()
+                );
+            }
             cin = s.c;
         }
-        let fc_shape = [spec.classes, cin];
-        let fc_scale = (1.0 / cin as f32).sqrt();
-        let fc_w = load_leaf_or(&spec, spec.spills.len(), &fc_shape, fc_scale)?;
-        Ok(ReferenceBackend { spec, conv_w, strides, fc_w })
+        let fc_want = [spec.classes, cin];
+        if params.fc_w.shape() != fc_want {
+            bail!(
+                "classifier has shape {:?}, spec wants {fc_want:?}",
+                params.fc_w.shape()
+            );
+        }
+        Ok(ReferenceBackend { spec, params })
     }
 
     pub fn spec(&self) -> &RefSpec {
         &self.spec
+    }
+
+    pub fn params(&self) -> &RefParams {
+        &self.params
+    }
+
+    /// One conv layer's fused forward: 3x3 conv at the derived stride,
+    /// then ReLU + Zebra block-prune at the spec threshold. Returns
+    /// the pruned activation (the spill an accelerator would write to
+    /// DRAM) and its keep mask. `run` chains these; the trainer's tape
+    /// re-uses the same underlying ops with gradients.
+    pub fn layer_forward(&self, i: usize, x: &Tensor) -> (Tensor, BlockMask) {
+        let mut out = conv3x3(x, &self.params.conv_w[i], self.params.strides[i]);
+        let mask = relu_prune_inplace(
+            &mut out,
+            &Thresholds::Scalar(self.spec.t_obj),
+            self.spec.spills[i].block,
+        );
+        (out, mask)
     }
 
     /// Execute and also return the pruned activation tensor of every
@@ -209,14 +340,12 @@ impl ReferenceBackend {
         if s.len() != 4 || s[1] != 3 || s[2] != hw || s[3] != hw {
             bail!("reference backend {} wants (N, 3, {hw}, {hw}), got {s:?}", self.spec.key);
         }
-        let thr = Thresholds::Scalar(self.spec.t_obj);
         let mut masks = Vec::with_capacity(self.spec.spills.len());
         let mut block_elems = Vec::with_capacity(self.spec.spills.len());
         let mut spills = Vec::new();
         let mut act = x.clone();
         for (i, sp) in self.spec.spills.iter().enumerate() {
-            let mut out = conv3x3(&act, &self.conv_w[i], self.strides[i]);
-            let mask = relu_prune_inplace(&mut out, &thr, sp.block);
+            let (out, mask) = self.layer_forward(i, &act);
             masks.push(mask_to_tensor(&mask));
             block_elems.push(sp.block * sp.block);
             act = out;
@@ -230,20 +359,7 @@ impl ReferenceBackend {
 
     /// Global average pool + linear classifier.
     fn head(&self, x: &Tensor) -> Tensor {
-        let (n, c) = (x.shape()[0], x.shape()[1]);
-        let area = (x.shape()[2] * x.shape()[3]) as f32;
-        let classes = self.spec.classes;
-        let mut logits = vec![0.0f32; n * classes];
-        for ni in 0..n {
-            let pooled: Vec<f32> = (0..c)
-                .map(|ci| x.plane(ni, ci).iter().sum::<f32>() / area)
-                .collect();
-            for (j, l) in logits[ni * classes..(ni + 1) * classes].iter_mut().enumerate() {
-                let row = &self.fc_w.data()[j * c..(j + 1) * c];
-                *l = row.iter().zip(&pooled).map(|(a, b)| a * b).sum();
-            }
-        }
-        Tensor::from_vec(&[n, classes], logits)
+        linear(&global_avg_pool(x), &self.params.fc_w)
     }
 }
 
@@ -296,7 +412,11 @@ fn load_leaf_or(
 }
 
 /// Direct 3x3 same-padding convolution, stride 1 or 2, NCHW.
-fn conv3x3(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
+///
+/// Public so the train subsystem's tape (`crate::train::tape`) runs
+/// the *same* forward op it differentiates — serving and training can
+/// never drift apart numerically.
+pub fn conv3x3(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
     let (n, cin, h, win) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
     let cout = w.shape()[0];
     debug_assert_eq!(w.shape(), &[cout, cin, 3, 3]);
@@ -337,6 +457,42 @@ fn conv3x3(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
         }
     }
     out
+}
+
+/// Global average pool: NCHW -> `(N, C)` channel means.
+pub fn global_avg_pool(x: &Tensor) -> Tensor {
+    let s = x.shape();
+    assert_eq!(s.len(), 4, "global_avg_pool wants NCHW, got {s:?}");
+    let (n, c) = (s[0], s[1]);
+    let area = (s[2] * s[3]) as f32;
+    let mut out = vec![0.0f32; n * c];
+    for ni in 0..n {
+        for ci in 0..c {
+            out[ni * c + ci] = x.plane(ni, ci).iter().sum::<f32>() / area;
+        }
+    }
+    Tensor::from_vec(&[n, c], out)
+}
+
+/// Linear classifier: `(N, D) x (K, D)^T -> (N, K)` logits.
+pub fn linear(x: &Tensor, w: &Tensor) -> Tensor {
+    let (n, d) = (x.shape()[0], x.shape()[1]);
+    let k = w.shape()[0];
+    assert_eq!(
+        w.shape()[1],
+        d,
+        "linear: input width {d} vs weight shape {:?}",
+        w.shape()
+    );
+    let mut out = vec![0.0f32; n * k];
+    for ni in 0..n {
+        let row = &x.data()[ni * d..(ni + 1) * d];
+        for (kj, slot) in out[ni * k..(ni + 1) * k].iter_mut().enumerate() {
+            let wrow = &w.data()[kj * d..(kj + 1) * d];
+            *slot = wrow.iter().zip(row).map(|(a, b)| a * b).sum();
+        }
+    }
+    Tensor::from_vec(&[n, k], out)
 }
 
 /// Unpack a [`BlockMask`] into the `(N, C, H/B, W/B)` f32 {0,1} tensor
@@ -484,6 +640,49 @@ mod tests {
             ReferenceBackend::new(spec).is_err(),
             "non-dividing block must fail at construction, not execute"
         );
+    }
+
+    #[test]
+    fn params_roundtrip_through_leaves_and_from_params() {
+        let spec = RefSpec::tiny();
+        let params = RefParams::build(&spec).unwrap();
+        let a = ReferenceBackend::new(spec.clone()).unwrap();
+        let b =
+            ReferenceBackend::from_params(spec.clone(), params.clone()).unwrap();
+        let x = image(8, 21);
+        assert_eq!(a.execute(&x).unwrap().logits, b.execute(&x).unwrap().logits);
+        // write_leaves -> weights_dir load is bit-exact (f32 .zten).
+        let dir = std::env::temp_dir()
+            .join(format!("zebra-ref-roundtrip-{}", std::process::id()));
+        params.write_leaves(&dir).unwrap();
+        let mut spec2 = spec.clone();
+        spec2.weights_dir = Some(dir.clone());
+        let c = ReferenceBackend::new(spec2).unwrap();
+        assert_eq!(c.execute(&x).unwrap().logits, b.execute(&x).unwrap().logits);
+        std::fs::remove_dir_all(&dir).ok();
+        // Shape-mismatched params are a loud error.
+        let mut bad = params.clone();
+        bad.fc_w = Tensor::zeros(&[2, 2]);
+        assert!(ReferenceBackend::from_params(spec, bad).is_err());
+    }
+
+    #[test]
+    fn pool_and_linear_match_hand_computation() {
+        // Two planes of constant value: GAP is those constants.
+        let mut x = Tensor::zeros(&[1, 2, 2, 2]);
+        x.data_mut()[..4].fill(3.0);
+        x.data_mut()[4..].fill(-1.0);
+        let p = global_avg_pool(&x);
+        assert_eq!(p.shape(), &[1, 2]);
+        assert_eq!(p.data(), &[3.0, -1.0]);
+        // (1,2) x (3,2)^T.
+        let w = Tensor::from_vec(
+            &[3, 2],
+            vec![1.0, 0.0, 0.0, 1.0, 2.0, 2.0],
+        );
+        let y = linear(&p, &w);
+        assert_eq!(y.shape(), &[1, 3]);
+        assert_eq!(y.data(), &[3.0, -1.0, 4.0]);
     }
 
     #[test]

@@ -11,6 +11,7 @@
 mod analyze;
 pub mod serve;
 mod simulate;
+mod train;
 
 use std::collections::HashMap;
 
@@ -62,19 +63,40 @@ impl Args {
                 .with_context(|| format!("--{key} wants an integer, got {v}")),
         }
     }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} wants a number, got {v}")),
+        }
+    }
 }
 
 const USAGE: &str = "zebra <command> [--flags]
 commands:
   version                     print version
+  train     --model KEY       native Zebra training (pure Rust): learn
+                              block-prunable activations with
+                              CE + lambda*sum||block|| and checkpoint
+                              .zten leaves the reference backend serves
+            [--lambda L] [--block B] [--t-obj T] [--steps N] [--batch N]
+            [--lr LR] [--momentum M] [--weight-decay WD] [--seed S]
+            [--train-n N] [--holdout N] [--eval-every N]
+            [--images F.zten --labels F.zten]  train on exported data
+            [--out DIR]                        write w%05d.zten leaves
   serve     --model KEY       run the serving pipeline over the test set
             [--backend reference|pjrt]  execution engine (default: pjrt
                                         when built with --features pjrt,
                                         else reference)
+            [--weights DIR]   reference weights dir (trained leaves)
+            [--seed S]        synthetic test-set seed
             [--requests N] [--wait-ms MS] [--queue N]
             [--ship-codec NAME [--ship-block B]]  frame batches as .zspill
   simulate  --trace DIR       accelerator simulation of a trace
             | --backend reference [--model KEY] [--images N]
+                                  [--weights DIR] [--seed S]
                                   simulate natively-executed spills
             [--codec dense|whole-map|rle-zero|zero-block] [--all]
   analyze   --trace DIR       sparsity + Eq.2-3 bandwidth analysis
@@ -93,6 +115,7 @@ pub fn run(argv: &[String]) -> Result<()> {
             println!("zebra {}", crate::version());
             Ok(())
         }
+        "train" => train::run(&args),
         "serve" => serve::run(&args),
         "simulate" => simulate::run(&args),
         "analyze" => analyze::run(&args),
@@ -136,6 +159,29 @@ mod tests {
     fn unknown_command_errors() {
         assert!(run(&v(&["frobnicate"])).is_err());
         assert!(run(&v(&["version"])).is_ok());
+    }
+
+    #[test]
+    fn float_flags_validate() {
+        let a = Args::parse(&v(&["train", "--lambda", "1e-4"])).unwrap();
+        assert!((a.get_f32("lambda", 0.0).unwrap() - 1e-4).abs() < 1e-10);
+        assert_eq!(a.get_f32("missing", 0.5).unwrap(), 0.5);
+        let b = Args::parse(&v(&["train", "--lambda", "much"])).unwrap();
+        assert!(b.get_f32("lambda", 0.0).is_err());
+    }
+
+    #[test]
+    fn train_rejects_half_specified_datasets_and_bad_models() {
+        let e = run(&v(&["train", "--images", "x.zten"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--labels"), "{e}");
+        assert!(run(&v(&["train", "--model", "nope-c10-t0.1"])).is_err());
+        // A non-dividing block override fails loudly before training.
+        assert!(run(&v(&[
+            "train", "--model", "ref-tiny", "--block", "3", "--steps", "1"
+        ]))
+        .is_err());
     }
 
     #[test]

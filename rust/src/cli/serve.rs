@@ -30,6 +30,13 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
     let n_requests = args.get_usize("requests", 64)?;
     let wait_ms = args.get_usize("wait-ms", 2)? as u64;
     let queue = args.get_usize("queue", 1024)?;
+    // Synthetic-test-set seed: reproducible by default, varied on
+    // demand (`--seed`).
+    let synth_seed = args.get_usize("seed", 0xB1A5)? as u64;
+    let weights = args.get("weights").map(std::path::PathBuf::from);
+    if weights.is_some() && backend != BackendKind::Reference {
+        anyhow::bail!("--weights only applies to --backend reference");
+    }
     // Optional cross-node spill shipping: resolve the codec through the
     // registry so an unknown name errors with the valid list.
     let ship = match args.get("ship-codec") {
@@ -52,11 +59,26 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
         BackendKind::Reference => {
             let mut spec = RefSpec::from_key(&model)?;
             // Trained `.zten` leaves override the deterministic
-            // weights when the pipeline exported them.
-            let wdir = artifacts.join("ref-weights").join(&model);
-            if wdir.is_dir() {
-                println!("loading reference weights from {wdir:?}");
-                spec.weights_dir = Some(wdir);
+            // weights: an explicit --weights DIR (e.g. fresh out of
+            // `zebra train --out DIR`) wins over the artifacts probe.
+            if let Some(dir) = weights {
+                anyhow::ensure!(
+                    dir.is_dir(),
+                    "--weights {dir:?} is not a directory"
+                );
+                // Explicit --weights must be a complete checkpoint —
+                // no silent per-leaf fallback to generated weights.
+                crate::backend::reference::check_complete_leaves(
+                    &spec, &dir,
+                )?;
+                println!("loading reference weights from {dir:?}");
+                spec.weights_dir = Some(dir);
+            } else {
+                let wdir = artifacts.join("ref-weights").join(&model);
+                if wdir.is_dir() {
+                    println!("loading reference weights from {wdir:?}");
+                    spec.weights_dir = Some(wdir);
+                }
             }
             let classes = spec.classes;
             (Arc::new(reference_executor(spec)?), Some(classes))
@@ -102,11 +124,11 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
         }
         (Ok(_), Some(classes)) => {
             println!("(exported test set is not {hw_want}px; serving synthetic images)");
-            (synth_images(hw_want, 64, 0xB1A5), synth_labels(64, classes, 0xB1A5), true)
+            (synth_images(hw_want, 64, synth_seed), synth_labels(64, classes, synth_seed), true)
         }
         (Err(e), Some(classes)) => {
             println!("no exported test set ({e:#}); serving synthetic images");
-            (synth_images(hw_want, 64, 0xB1A5), synth_labels(64, classes, 0xB1A5), true)
+            (synth_images(hw_want, 64, synth_seed), synth_labels(64, classes, synth_seed), true)
         }
         (Ok((im, _)), None) => anyhow::bail!(
             "test set is {}px but model {model} wants {hw_want}px",

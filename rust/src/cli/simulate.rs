@@ -19,6 +19,9 @@ use crate::zebra::bandwidth::fmt_bytes;
 
 pub fn run(args: &Args) -> Result<()> {
     let (label, layers, tensors) = if let Some(dir) = args.get("trace") {
+        if args.get("weights").is_some() {
+            bail!("--weights only applies to --backend reference");
+        }
         let tr = crate::trace::load(dir)?;
         let plan = tr.plan();
         let layers = LayerDesc::from_plan(&plan);
@@ -35,13 +38,30 @@ pub fn run(args: &Args) -> Result<()> {
         }
         let model = args.get_or("model", "rn18-c10-t0.1");
         let n = args.get_usize("images", 8)?.max(1);
-        let be = ReferenceBackend::new(RefSpec::from_key(&model)?)?;
-        let x = synth_images(be.image_hw(), n, 0x5EED);
+        let seed = args.get_usize("seed", 0x5EED)? as u64;
+        let mut spec = RefSpec::from_key(&model)?;
+        // Trained leaves (e.g. from `zebra train --out DIR`): the
+        // zero-block ratio below then measures the *learned* sparsity.
+        if let Some(dir) = args.get("weights") {
+            let dir = std::path::PathBuf::from(dir);
+            anyhow::ensure!(
+                dir.is_dir(),
+                "--weights {dir:?} is not a directory"
+            );
+            // Explicit --weights must be a complete checkpoint — no
+            // silent per-leaf fallback to generated weights.
+            crate::backend::reference::check_complete_leaves(&spec, &dir)?;
+            println!("loading reference weights from {dir:?}");
+            spec.weights_dir = Some(dir);
+        }
+        let be = ReferenceBackend::new(spec)?;
+        let x = synth_images(be.image_hw(), n, seed);
         println!(
             "executing {model} on the reference backend ({n} synthetic \
-             images) ..."
+             images, seed {seed:#x}) ..."
         );
         let (_, spills) = be.run_capture(&x)?;
+        print_zero_block_summary(be.spec(), &spills, n);
         let layers = LayerDesc::from_plan(&be.spec().spills);
         (model, layers, spills)
     } else {
@@ -89,6 +109,37 @@ pub fn run(args: &Args) -> Result<()> {
         t.print("Summary vs dense");
     }
     Ok(())
+}
+
+/// Eq. 2–3 accounting of the captured spills, through the same
+/// `zero_block_accounting` path `zebra train`'s per-epoch evaluation
+/// uses — the quantity training optimizes, printed here so
+/// trained-vs-untrained runs are directly comparable.
+fn print_zero_block_summary(
+    spec: &crate::backend::reference::RefSpec,
+    spills: &[Tensor],
+    images: usize,
+) {
+    let s = crate::zebra::bandwidth::zero_block_accounting(
+        &spec.spills,
+        spills,
+    );
+    // The report is already per image (kept fractions are
+    // batch-invariant; shapes are per-map).
+    println!(
+        "zero blocks: {:.1}% ({} of {} across {} layers, {} images) | \
+         Eq.2-3: required {}/img, stored {}/img, index {}/img -> \
+         reduction {:.1}%",
+        s.zero_pct,
+        s.zero_blocks,
+        s.total_blocks,
+        spec.spills.len(),
+        images,
+        fmt_bytes(s.report.required_bytes),
+        fmt_bytes(s.report.stored_bytes),
+        fmt_bytes(s.report.overhead_bytes),
+        s.report.reduced_pct()
+    );
 }
 
 fn push_summary(

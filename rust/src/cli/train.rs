@@ -1,0 +1,142 @@
+//! `zebra train` — native Zebra training on the reference-backend
+//! model family: learn block-prunable activations with the
+//! `CE + lambda * sum ||block||` objective and checkpoint `w%05d.zten`
+//! leaves that `zebra serve --backend reference --weights DIR` loads
+//! unchanged. No Python, no artifacts, no native deps anywhere in the
+//! path.
+//!
+//! ```text
+//! zebra train --model ref-tiny --lambda 1e-4 --steps 200 --out /tmp/zt
+//! zebra train --model rn18-c10-t0.1 --block 4 --steps 400 \
+//!             --images imgs.zten --labels lbls.zten --out weights/
+//! ```
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::Args;
+use crate::backend::reference::RefSpec;
+use crate::train::{train_on, Dataset, TrainConfig};
+
+pub fn run(args: &Args) -> Result<()> {
+    let mut cfg = TrainConfig {
+        model: args.get_or("model", "ref-tiny"),
+        lambda: args.get_f32("lambda", 1e-4)?,
+        block: args.get("block").map(|_| args.get_usize("block", 0)).transpose()?,
+        t_obj: match args.get("t-obj") {
+            Some(_) => Some(args.get_f32("t-obj", 0.0)?),
+            None => None,
+        },
+        steps: args.get_usize("steps", 200)?,
+        batch: args.get_usize("batch", 16)?,
+        lr: args.get_f32("lr", 0.05)?,
+        momentum: args.get_f32("momentum", 0.9)?,
+        weight_decay: args.get_f32("weight-decay", 1e-4)?,
+        seed: args.get_usize("seed", 42)? as u64,
+        n_train: args.get_usize("train-n", 256)?,
+        n_holdout: args.get_usize("holdout", 64)?,
+        eval_every: args.get_usize("eval-every", 0)?,
+        quiet: false,
+    };
+    if crate::bench::smoke() {
+        // ZEBRA_BENCH_SMOKE: the CI fast path every bench honors —
+        // cap the budget so the smoke job finishes in seconds.
+        cfg.steps = cfg.steps.min(25);
+        cfg.n_train = cfg.n_train.min(64);
+        cfg.n_holdout = cfg.n_holdout.min(32);
+        println!(
+            "(ZEBRA_BENCH_SMOKE: capped at {} steps / {} train images)",
+            cfg.steps, cfg.n_train
+        );
+    }
+
+    let spec = RefSpec::from_key(&cfg.model)?;
+    let (data, holdout) = match (args.get("images"), args.get("labels")) {
+        (Some(im), Some(lb)) => {
+            let ds = Dataset::from_zten(
+                std::path::Path::new(im),
+                std::path::Path::new(lb),
+                spec.in_hw,
+            )?;
+            anyhow::ensure!(
+                ds.len() > cfg.n_holdout,
+                "--holdout {} leaves no training images of the {} loaded",
+                cfg.n_holdout,
+                ds.len()
+            );
+            ds.split(cfg.n_holdout)
+        }
+        (None, None) => {
+            let ds = Dataset::synthetic(
+                spec.in_hw,
+                spec.classes,
+                cfg.n_train + cfg.n_holdout,
+                cfg.seed,
+            );
+            ds.split(cfg.n_holdout)
+        }
+        _ => bail!("--images and --labels must be given together"),
+    };
+
+    // Validate --out before burning the training budget: a typo'd or
+    // unwritable path must fail in milliseconds, not after the run.
+    let out_dir = match args.get("out") {
+        Some(dir) => {
+            let dir = PathBuf::from(dir);
+            std::fs::create_dir_all(&dir)
+                .with_context(|| format!("--out {dir:?} is not writable"))?;
+            Some(dir)
+        }
+        None => None,
+    };
+
+    println!(
+        "training {} | {} conv layers | lambda {} | {} steps x batch {} | \
+         {} train / {} held-out images",
+        cfg.model,
+        spec.spills.len(),
+        cfg.lambda,
+        cfg.steps,
+        cfg.batch,
+        data.len(),
+        holdout.len()
+    );
+    let t0 = Instant::now();
+    let outcome = train_on(&cfg, &data, &holdout)?;
+    let fin = outcome.final_stat();
+    println!(
+        "\ntrained in {:.1}s | final loss {:.4} | holdout top-1 {:.1}% | \
+         zero blocks {:.1}% | Eq.2-3 bandwidth reduction {:.1}%",
+        t0.elapsed().as_secs_f64(),
+        fin.loss,
+        100.0 * fin.holdout_acc,
+        fin.zero_block_pct,
+        fin.reduced_pct
+    );
+
+    if let Some(dir) = out_dir {
+        outcome
+            .write_leaves(&dir)
+            .with_context(|| format!("checkpointing to {dir:?}"))?;
+        println!(
+            "wrote {} weight leaves to {}",
+            outcome.params.conv_w.len() + 1,
+            dir.display()
+        );
+        println!(
+            "  serve:    zebra serve --backend reference --model {} --weights {}",
+            cfg.model,
+            dir.display()
+        );
+        println!(
+            "  simulate: zebra simulate --backend reference --model {} --weights {}",
+            cfg.model,
+            dir.display()
+        );
+    } else {
+        println!("(no --out DIR given; weights were not checkpointed)");
+    }
+    Ok(())
+}

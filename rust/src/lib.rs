@@ -35,6 +35,13 @@
 //!   loading/execution of the AOT HLO artifacts (`pjrt` feature).
 //! - [`coordinator`] — the serving pipeline: dynamic batcher, worker
 //!   pool, per-request bandwidth metering.
+//! - [`train`] — native Zebra training: a reverse-mode tape over the
+//!   reference backend's own ops, the `CE + lambda * sum ||block||`
+//!   objective with a straight-through estimator through the block
+//!   gate, SGD + momentum under threshold/lambda warmup schedules, and
+//!   a mini-batch loop that checkpoints `w%05d.zten` leaves the
+//!   reference backend serves unchanged — the train -> artifact ->
+//!   serve loop with no Python anywhere.
 //! - [`bench`] — the in-repo benchmarking harness (criterion is not in
 //!   the offline vendor set) used by every table/figure regenerator.
 //! - [`cli`] — the `zebra` binary's subcommands.
@@ -50,6 +57,7 @@ pub mod models;
 pub mod runtime;
 pub mod tensor;
 pub mod trace;
+pub mod train;
 pub mod util;
 pub mod zebra;
 

@@ -8,6 +8,15 @@
 //! u32[]  dims
 //! bytes  payload, row-major, little-endian
 //! ```
+//!
+//! Parsing is hardened the way `compress`'s `.zspill` reader is
+//! (rust/docs/zspill.md): the dims product is computed with overflow
+//! checks and bounds-checked against the file's actual size *before*
+//! any payload allocation, ndim is capped, and truncated, padded or
+//! bit-flipped inputs produce errors — never panics, never
+//! attacker-sized allocations. Weight leaves and datasets flow through
+//! this path from `zebra train` to `zebra serve`, so a corrupt
+//! artifact must fail loudly at load time.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -19,6 +28,10 @@ use super::Tensor;
 
 const MAGIC: &[u8; 4] = b"ZTEN";
 
+/// Dimensions cap: nothing in the pipeline (NCHW + a little slack)
+/// needs more.
+const MAX_NDIM: usize = 8;
+
 /// Element types the format carries.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
@@ -27,7 +40,29 @@ pub enum DType {
     I32 = 2,
 }
 
-fn read_header(r: &mut impl Read, want: DType) -> Result<Vec<usize>> {
+impl DType {
+    fn elem_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::U8 => 1,
+        }
+    }
+}
+
+/// Open + parse + validate a `.zten` header: returns the dims, the
+/// element count, and a reader positioned at the payload. The payload
+/// size is cross-checked against the file's real length before the
+/// caller allocates anything.
+fn open_checked(
+    path: &Path,
+    want: DType,
+) -> Result<(Vec<usize>, usize, BufReader<File>)> {
+    let file = File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let file_len = file
+        .metadata()
+        .with_context(|| format!("stat {path:?}"))?
+        .len();
+    let mut r = BufReader::new(file);
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic).context("reading magic")?;
     if &magic != MAGIC {
@@ -46,25 +81,49 @@ fn read_header(r: &mut impl Read, want: DType) -> Result<Vec<usize>> {
     }
     r.read_exact(&mut word)?;
     let ndim = u32::from_le_bytes(word) as usize;
-    if ndim > 8 {
-        bail!("implausible ndim {ndim}");
+    if ndim > MAX_NDIM {
+        bail!("implausible ndim {ndim} (max {MAX_NDIM})");
     }
     let mut dims = Vec::with_capacity(ndim);
     for _ in 0..ndim {
-        r.read_exact(&mut word)?;
+        r.read_exact(&mut word).context("reading dims")?;
         dims.push(u32::from_le_bytes(word) as usize);
     }
-    Ok(dims)
+    // Bounds-check dims against the payload actually present, with
+    // overflow-checked arithmetic, BEFORE any allocation.
+    let mut n = 1usize;
+    for &d in &dims {
+        n = n
+            .checked_mul(d)
+            .with_context(|| format!("dims {dims:?} overflow"))?;
+    }
+    let payload = n
+        .checked_mul(want.elem_bytes())
+        .with_context(|| format!("payload size for dims {dims:?} overflows"))?;
+    let header = (16 + 4 * dims.len()) as u64;
+    let expect = header
+        .checked_add(payload as u64)
+        .with_context(|| format!("implausible payload for dims {dims:?}"))?;
+    if file_len < expect {
+        bail!(
+            "{path:?} truncated: dims {dims:?} need {payload} payload \
+             bytes, file has {}",
+            file_len.saturating_sub(header)
+        );
+    }
+    if file_len > expect {
+        bail!(
+            "{path:?} has {} trailing bytes after the payload",
+            file_len - expect
+        );
+    }
+    Ok((dims, n, r))
 }
 
 /// Read an f32 `.zten` tensor.
 pub fn read_zten(path: impl AsRef<Path>) -> Result<Tensor> {
     let path = path.as_ref();
-    let mut r = BufReader::new(
-        File::open(path).with_context(|| format!("opening {path:?}"))?,
-    );
-    let dims = read_header(&mut r, DType::F32)?;
-    let n: usize = dims.iter().product();
+    let (dims, n, mut r) = open_checked(path, DType::F32)?;
     let mut buf = vec![0u8; n * 4];
     r.read_exact(&mut buf).context("reading payload")?;
     let data = buf
@@ -77,11 +136,7 @@ pub fn read_zten(path: impl AsRef<Path>) -> Result<Tensor> {
 /// Read a u8 `.zten` tensor (raw images), returning (shape, bytes).
 pub fn read_zten_u8(path: impl AsRef<Path>) -> Result<(Vec<usize>, Vec<u8>)> {
     let path = path.as_ref();
-    let mut r = BufReader::new(
-        File::open(path).with_context(|| format!("opening {path:?}"))?,
-    );
-    let dims = read_header(&mut r, DType::U8)?;
-    let n: usize = dims.iter().product();
+    let (dims, n, mut r) = open_checked(path, DType::U8)?;
     let mut buf = vec![0u8; n];
     r.read_exact(&mut buf).context("reading payload")?;
     Ok((dims, buf))
@@ -90,11 +145,7 @@ pub fn read_zten_u8(path: impl AsRef<Path>) -> Result<(Vec<usize>, Vec<u8>)> {
 /// Read an i32 `.zten` tensor (labels), returning (shape, values).
 pub fn read_zten_i32(path: impl AsRef<Path>) -> Result<(Vec<usize>, Vec<i32>)> {
     let path = path.as_ref();
-    let mut r = BufReader::new(
-        File::open(path).with_context(|| format!("opening {path:?}"))?,
-    );
-    let dims = read_header(&mut r, DType::I32)?;
-    let n: usize = dims.iter().product();
+    let (dims, n, mut r) = open_checked(path, DType::I32)?;
     let mut buf = vec![0u8; n * 4];
     r.read_exact(&mut buf).context("reading payload")?;
     let vals = buf
@@ -133,6 +184,20 @@ mod tests {
         p
     }
 
+    /// Hand-build a .zten byte stream from raw header fields.
+    fn raw(version: u32, dtype: u32, dims: &[u32], payload: &[u8]) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        b.extend_from_slice(&version.to_le_bytes());
+        b.extend_from_slice(&dtype.to_le_bytes());
+        b.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+        for &d in dims {
+            b.extend_from_slice(&d.to_le_bytes());
+        }
+        b.extend_from_slice(payload);
+        b
+    }
+
     #[test]
     fn roundtrip_f32() {
         let t = Tensor::from_vec(&[2, 3], vec![1.5, -2.0, 0.0, 4.0, 5.0, -6.5]);
@@ -166,8 +231,101 @@ mod tests {
         let p = tmp("trunc");
         write_zten(&p, &t).unwrap();
         let bytes = std::fs::read(&p).unwrap();
-        std::fs::write(&p, &bytes[..bytes.len() - 4]).unwrap();
-        assert!(read_zten(&p).is_err());
+        // Every truncation point must error, none may panic.
+        for cut in 0..bytes.len() {
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            assert!(read_zten(&p).is_err(), "truncated at {cut} parsed");
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let t = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let p = tmp("trail");
+        write_zten(&p, &t).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes.push(0xAB);
+        std::fs::write(&p, &bytes).unwrap();
+        let e = read_zten(&p).unwrap_err().to_string();
+        assert!(e.contains("trailing"), "{e}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn header_bit_flips_error_and_payload_flips_never_panic() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let p = tmp("flip");
+        write_zten(&p, &t).unwrap();
+        let clean = std::fs::read(&p).unwrap();
+        let header_len = 16 + 4 * 2;
+        for i in 0..clean.len() {
+            for bit in [0x01u8, 0x80u8] {
+                let mut bytes = clean.clone();
+                bytes[i] ^= bit;
+                std::fs::write(&p, &bytes).unwrap();
+                let r = read_zten(&p);
+                if i < header_len {
+                    // Any header corruption changes magic/version/
+                    // dtype/ndim/dims, and every dim change breaks the
+                    // dims-vs-payload bound: must error.
+                    assert!(r.is_err(), "header flip at byte {i} parsed");
+                } else {
+                    // Payload flips decode to different values — the
+                    // contract is only "no panic".
+                    let _ = r;
+                }
+            }
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_overflowing_dims_without_allocating() {
+        // 3 x u32::MAX dims: the element product overflows usize; the
+        // parse must error before trying to allocate a payload buffer.
+        let p = tmp("overflow");
+        let bytes =
+            raw(1, DType::F32 as u32, &[u32::MAX, u32::MAX, u32::MAX], &[]);
+        std::fs::write(&p, &bytes).unwrap();
+        let e = read_zten(&p).unwrap_err().to_string();
+        assert!(e.contains("overflow"), "{e}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_huge_single_dim_against_file_size() {
+        // One honest-looking 2^30 dim on a tiny file: the bounds check
+        // against the real file length must fire before allocation.
+        let p = tmp("hugedim");
+        let bytes = raw(1, DType::F32 as u32, &[1 << 30], &[0u8; 16]);
+        std::fs::write(&p, &bytes).unwrap();
+        let e = read_zten(&p).unwrap_err().to_string();
+        assert!(e.contains("truncated"), "{e}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_implausible_ndim() {
+        let p = tmp("ndim");
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&0u32.to_le_bytes());
+        b.extend_from_slice(&1000u32.to_le_bytes()); // ndim
+        std::fs::write(&p, &b).unwrap();
+        let e = read_zten(&p).unwrap_err().to_string();
+        assert!(e.contains("ndim"), "{e}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_unsupported_version() {
+        let p = tmp("ver");
+        let bytes = raw(2, DType::F32 as u32, &[1], &[0u8; 4]);
+        std::fs::write(&p, &bytes).unwrap();
+        let e = read_zten(&p).unwrap_err().to_string();
+        assert!(e.contains("version"), "{e}");
         std::fs::remove_file(p).ok();
     }
 }

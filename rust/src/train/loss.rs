@@ -1,0 +1,270 @@
+//! The Zebra training objective: `L = CE + lambda * sum_b ||block_b||`.
+//!
+//! - [`softmax_cross_entropy`] — numerically-stable mean softmax
+//!   cross-entropy with its gradient at the logits.
+//! - [`zero_block_penalty`] — the zero-block regularizer: a group
+//!   lasso over the paper's `B x B` spatial activation blocks,
+//!   `lambda / N * sum_blocks ||a_b||_2` (mean per image, matching the
+//!   CE term). Its gradient shrinks every element of a block toward
+//!   zero *proportionally to the block's direction*, which drives
+//!   whole blocks — not scattered elements — under the prune
+//!   threshold; that block-level structure is exactly what Eq. 2's
+//!   accounting (and the accelerator's burst-quantized DRAM traffic)
+//!   can cash in.
+//!
+//! Both return `(value, gradient)` pairs; the gradients become seeds
+//! for [`super::tape::Tape::backward`].
+
+use crate::tensor::Tensor;
+use crate::zebra::prune::block_l2_norms;
+
+/// Mean softmax cross-entropy over the batch; returns the scalar loss
+/// and `dL/dlogits` (already divided by the batch size).
+pub fn softmax_cross_entropy(logits: &Tensor, labels: &[i32]) -> (f32, Tensor) {
+    let s = logits.shape();
+    assert_eq!(s.len(), 2, "softmax_ce wants (N, K) logits, got {s:?}");
+    let (n, k) = (s[0], s[1]);
+    assert_eq!(labels.len(), n, "one label per batch row");
+    let mut dl = Tensor::zeros(&[n, k]);
+    let d = dl.data_mut();
+    let mut loss = 0.0f64;
+    for ni in 0..n {
+        let row = &logits.data()[ni * k..(ni + 1) * k];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = row.iter().map(|v| (v - m).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        let y = labels[ni];
+        assert!(
+            y >= 0 && (y as usize) < k,
+            "label {y} out of range for {k} classes"
+        );
+        let y = y as usize;
+        loss += (z.ln() - (row[y] - m)) as f64;
+        for (kj, &e) in exps.iter().enumerate() {
+            let one_hot = if kj == y { 1.0 } else { 0.0 };
+            d[ni * k + kj] = (e / z - one_hot) / n as f32;
+        }
+    }
+    ((loss / n as f64) as f32, dl)
+}
+
+/// Top-1 accuracy of logits against labels.
+pub fn accuracy(logits: &Tensor, labels: &[i32]) -> f64 {
+    let (n, k) = (logits.shape()[0], logits.shape()[1]);
+    if n == 0 {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    for ni in 0..n {
+        let row = &logits.data()[ni * k..(ni + 1) * k];
+        // total_cmp: a diverged run (NaN logits) must report garbage
+        // accuracy, not panic mid-training.
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap();
+        if pred as i32 == labels[ni] {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+/// The zero-block group lasso on an NCHW activation:
+/// `value = lambda / N * sum_blocks ||a_b||_2`, gradient
+/// `lambda / N * a_b / ||a_b||_2` per block (sub-gradient 0 for
+/// all-zero blocks). Normalized per image so `lambda` trades off
+/// against the *mean* cross-entropy, independent of batch size.
+pub fn zero_block_penalty(
+    a: &Tensor,
+    block: usize,
+    lambda: f32,
+) -> (f32, Tensor) {
+    let mut grad = Tensor::zeros(a.shape());
+    if lambda == 0.0 {
+        return (0.0, grad);
+    }
+    let s = a.shape();
+    let (grid, norms) = block_l2_norms(a, block);
+    let scale = lambda / s[0].max(1) as f32;
+    let value =
+        scale * (norms.iter().map(|&v| v as f64).sum::<f64>() as f32);
+    let gd = grad.data_mut();
+    let ad = a.data();
+    let (hb, wb) = (grid.hb(), grid.wb());
+    for n in 0..s[0] {
+        for c in 0..s[1] {
+            let base = (n * s[1] + c) * s[2] * s[3];
+            for by in 0..hb {
+                for bx in 0..wb {
+                    let nm = norms[grid.block_id(n, c, by, bx)];
+                    if nm <= 1e-8 {
+                        continue;
+                    }
+                    let k = scale / nm;
+                    for dy in 0..block {
+                        let row = base + (by * block + dy) * s[3] + bx * block;
+                        for i in row..row + block {
+                            gd[i] = k * ad[i];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (value, grad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn uniform_logits_cost_ln_k_and_perfect_prediction_near_zero() {
+        let logits = Tensor::zeros(&[2, 10]);
+        let (l, _) = softmax_cross_entropy(&logits, &[3, 7]);
+        assert!((l - (10.0f32).ln()).abs() < 1e-5, "uniform CE = ln(K)");
+        let mut hot = Tensor::zeros(&[1, 10]);
+        hot.data_mut()[4] = 30.0;
+        let (l, _) = softmax_cross_entropy(&hot, &[4]);
+        assert!(l < 1e-4, "confident correct prediction costs ~0, got {l}");
+    }
+
+    #[test]
+    fn softmax_ce_gradient_matches_finite_differences() {
+        let mut rng = Rng::new(21);
+        let logits = rand(&mut rng, &[3, 5]);
+        let labels = [0, 2, 4];
+        let (_, dl) = softmax_cross_entropy(&logits, &labels);
+        for i in 0..logits.len() {
+            let eps = 1e-2f32;
+            let mut plus = logits.clone();
+            plus.data_mut()[i] += eps;
+            let mut minus = logits.clone();
+            minus.data_mut()[i] -= eps;
+            let (lp, _) = softmax_cross_entropy(&plus, &labels);
+            let (lm, _) = softmax_cross_entropy(&minus, &labels);
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = dl.data()[i];
+            assert!(
+                (fd - an).abs() < 1e-3 * (1.0 + fd.abs().max(an.abs())),
+                "index {i}: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn softmax_ce_gradient_rows_sum_to_zero() {
+        // softmax - one_hot sums to 0 per row: a shift-invariance
+        // sanity check on the analytic gradient.
+        let mut rng = Rng::new(22);
+        let logits = rand(&mut rng, &[4, 6]);
+        let (_, dl) = softmax_cross_entropy(&logits, &[1, 0, 5, 3]);
+        for ni in 0..4 {
+            let s: f32 = dl.data()[ni * 6..(ni + 1) * 6].iter().sum();
+            assert!(s.abs() < 1e-6, "row {ni} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn accuracy_counts_argmax_hits() {
+        let logits = Tensor::from_vec(
+            &[2, 3],
+            vec![0.1, 0.9, 0.0, 0.5, 0.2, 0.3],
+        );
+        assert_eq!(accuracy(&logits, &[1, 0]), 1.0);
+        assert_eq!(accuracy(&logits, &[1, 2]), 0.5);
+        assert_eq!(accuracy(&Tensor::zeros(&[0, 3]), &[]), 0.0);
+        // NaN logits (diverged run) must not panic.
+        let nan = Tensor::from_vec(&[1, 2], vec![f32::NAN, 0.0]);
+        let _ = accuracy(&nan, &[0]);
+    }
+
+    #[test]
+    fn penalty_gradient_matches_finite_differences() {
+        // Inputs away from 0 so no block norm sits at the cusp.
+        let mut rng = Rng::new(23);
+        let n: usize = 2 * 2 * 4 * 4;
+        let data: Vec<f32> = (0..n)
+            .map(|_| {
+                let mag = rng.f32_range(0.2, 1.0);
+                if rng.chance(0.5) {
+                    mag
+                } else {
+                    -mag
+                }
+            })
+            .collect();
+        let a = Tensor::from_vec(&[2, 2, 4, 4], data);
+        let lam = 0.3f32;
+        let (_, grad) = zero_block_penalty(&a, 2, lam);
+        for i in 0..a.len() {
+            let eps = 1e-3f32;
+            let mut plus = a.clone();
+            plus.data_mut()[i] += eps;
+            let mut minus = a.clone();
+            minus.data_mut()[i] -= eps;
+            let (vp, _) = zero_block_penalty(&plus, 2, lam);
+            let (vm, _) = zero_block_penalty(&minus, 2, lam);
+            let fd = (vp - vm) / (2.0 * eps);
+            let an = grad.data()[i];
+            assert!(
+                (fd - an).abs() < 1e-2 * (1.0 + fd.abs().max(an.abs())),
+                "index {i}: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn penalty_is_zero_on_zero_blocks_and_scales_with_lambda() {
+        let zero = Tensor::zeros(&[1, 1, 4, 4]);
+        let (v, g) = zero_block_penalty(&zero, 2, 0.5);
+        assert_eq!(v, 0.0);
+        assert!(g.data().iter().all(|&x| x == 0.0), "subgradient 0 at 0");
+        // One 3-4-5 block: value = lambda * 5 / N (N = 1).
+        let mut a = Tensor::zeros(&[1, 1, 4, 4]);
+        a.data_mut()[0] = 3.0;
+        a.data_mut()[1] = 4.0;
+        let (v1, _) = zero_block_penalty(&a, 2, 1.0);
+        assert!((v1 - 5.0).abs() < 1e-6);
+        let (v2, _) = zero_block_penalty(&a, 2, 0.1);
+        assert!((v2 - 0.5).abs() < 1e-6, "linear in lambda");
+        let (v0, g0) = zero_block_penalty(&a, 2, 0.0);
+        assert_eq!(v0, 0.0);
+        assert!(g0.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn penalty_is_per_image_mean() {
+        // Duplicating the batch must not change the value.
+        let mut rng = Rng::new(24);
+        let one = rand(&mut rng, &[1, 2, 4, 4]);
+        let mut two_data = one.data().to_vec();
+        two_data.extend_from_slice(one.data());
+        let two = Tensor::from_vec(&[2, 2, 4, 4], two_data);
+        let (v1, _) = zero_block_penalty(&one, 2, 0.7);
+        let (v2, _) = zero_block_penalty(&two, 2, 0.7);
+        assert!((v1 - v2).abs() < 1e-5, "{v1} vs {v2}");
+    }
+
+    #[test]
+    fn gradient_step_decreases_the_penalty() {
+        let mut rng = Rng::new(25);
+        let a = rand(&mut rng, &[1, 2, 4, 4]);
+        let (v, g) = zero_block_penalty(&a, 2, 1.0);
+        let mut stepped = a.clone();
+        for (x, &gx) in stepped.data_mut().iter_mut().zip(g.data()) {
+            *x -= 0.05 * gx;
+        }
+        let (v2, _) = zero_block_penalty(&stepped, 2, 1.0);
+        assert!(v2 < v, "descent direction: {v2} !< {v}");
+    }
+}

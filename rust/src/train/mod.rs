@@ -1,0 +1,53 @@
+//! Native Zebra training — the paper's *training-time* half, in pure
+//! Rust with zero external dependencies.
+//!
+//! Zebra's bandwidth wins come from *learning* which activation blocks
+//! to prune (PAPER.md Eq. 1, Alg. 1); before this module existed the
+//! Rust side could only execute models, with all training stranded in
+//! `python/compile/train.py`. This subsystem closes the
+//! train -> artifact -> serve loop natively:
+//!
+//! - [`tape`] — a small reverse-mode tape over exactly the ops the
+//!   reference backend serves with (`backend::reference::conv3x3`,
+//!   fused ReLU + block-prune, global average pool, the linear head),
+//!   so the differentiated forward and the deployed forward can never
+//!   drift apart.
+//! - [`ste`] — the straight-through estimator through the hard Zebra
+//!   block gate: forward prunes like deployment, backward treats the
+//!   gate as identity so pruned blocks keep receiving gradient and can
+//!   come back.
+//! - [`loss`] — softmax cross-entropy and the zero-block group-lasso
+//!   regularizer `lambda * sum_blocks ||block||_2` (the Zebra
+//!   objective is `CE + lambda * sum ||block||`).
+//! - [`optim`] — SGD with momentum and classic L2 weight decay
+//!   (folded into the gradient, so it rides the momentum buffer and
+//!   the learning-rate schedule).
+//! - [`schedule`] — the step-decayed learning rate plus warmup ramps
+//!   for the prune threshold and `lambda` (pruning hard from step 0
+//!   with full regularization collapses the network).
+//! - [`data`] — synthetic (learnable prototype-noise) and
+//!   `.zten`-loaded datasets.
+//! - [`fit`] — the mini-batch loop (`loop` is a Rust keyword, hence
+//!   the module name): samples batches, runs the tape, applies the
+//!   schedule, evaluates on a held-out split in *deployment* mode
+//!   (full `T_obj`, via `ReferenceBackend::from_params`), and
+//!   checkpoints weights as the `w%05d.zten` leaves
+//!   `zebra serve --backend reference` loads unchanged.
+//!
+//! Entry points: [`fit::train`] (synthetic data sized from the model
+//! key) / [`fit::train_on`] (explicit datasets), and the `zebra train`
+//! CLI subcommand.
+
+pub mod data;
+pub mod fit;
+pub mod loss;
+pub mod optim;
+pub mod schedule;
+pub mod ste;
+pub mod tape;
+
+pub use data::Dataset;
+pub use fit::{train, train_on, EpochStat, TrainConfig, TrainOutcome};
+pub use optim::Sgd;
+pub use schedule::Schedule;
+pub use tape::{Grads, Tape, Var};

@@ -1,0 +1,117 @@
+//! Training schedules: step-decayed learning rate plus warmup ramps
+//! for the prune threshold and the regularization strength.
+//!
+//! - **Learning rate**: the paper's step decay ("0.1 -> 0.001"),
+//!   scaled to the step budget — full rate for the first half, x0.1 to
+//!   80%, x0.01 after.
+//! - **Threshold ramp**: pruning at the full deployment threshold
+//!   `T_obj` from step 0 would zero most of a freshly-initialized
+//!   network's activations and starve it of signal; `T` ramps linearly
+//!   from 0 to `T_obj` over the warmup fraction, after which training
+//!   sees exactly the deployment op.
+//! - **Lambda ramp**: same reasoning for the group lasso — CE gets a
+//!   head start before the sparsity pressure reaches full strength.
+
+/// All three schedules, derived from the run's budget and targets.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// Total optimization steps.
+    pub steps: usize,
+    /// Peak learning rate (before step decay).
+    pub base_lr: f32,
+    /// Deployment prune threshold the ramp ends at.
+    pub t_obj: f32,
+    /// Full regularization strength the ramp ends at.
+    pub lambda: f32,
+    /// Fraction of the budget over which `T` ramps 0 -> `t_obj`.
+    pub t_warmup: f32,
+    /// Fraction of the budget over which lambda ramps 0 -> `lambda`.
+    pub lambda_warmup: f32,
+}
+
+impl Schedule {
+    /// Default warmups: both ramps close at 30% of the budget.
+    pub fn new(steps: usize, base_lr: f32, t_obj: f32, lambda: f32) -> Schedule {
+        Schedule {
+            steps,
+            base_lr,
+            t_obj,
+            lambda,
+            t_warmup: 0.3,
+            lambda_warmup: 0.3,
+        }
+    }
+
+    /// Step decay: x1 below 50% of the budget, x0.1 to 80%, x0.01 after.
+    pub fn lr_at(&self, step: usize) -> f32 {
+        let frac = step as f32 / self.steps.max(1) as f32;
+        if frac < 0.5 {
+            self.base_lr
+        } else if frac < 0.8 {
+            self.base_lr * 0.1
+        } else {
+            self.base_lr * 0.01
+        }
+    }
+
+    /// Prune threshold at `step`: linear 0 -> `t_obj` over the warmup.
+    pub fn threshold_at(&self, step: usize) -> f32 {
+        self.t_obj * ramp(step, self.t_warmup, self.steps)
+    }
+
+    /// Regularization strength at `step`: linear 0 -> `lambda`.
+    pub fn lambda_at(&self, step: usize) -> f32 {
+        self.lambda * ramp(step, self.lambda_warmup, self.steps)
+    }
+}
+
+/// Linear 0 -> 1 over the first `frac` of `steps`, clamped at 1.
+fn ramp(step: usize, frac: f32, steps: usize) -> f32 {
+    let window = (steps as f32 * frac).max(1.0);
+    (step as f32 / window).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_decays_in_steps() {
+        let s = Schedule::new(100, 0.1, 0.1, 1e-4);
+        assert_eq!(s.lr_at(0), 0.1);
+        assert_eq!(s.lr_at(49), 0.1);
+        assert!((s.lr_at(50) - 0.01).abs() < 1e-8);
+        assert!((s.lr_at(79) - 0.01).abs() < 1e-8);
+        assert!((s.lr_at(80) - 0.001).abs() < 1e-9);
+        assert!((s.lr_at(99) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ramps_hit_their_targets_and_are_monotone() {
+        let s = Schedule::new(100, 0.1, 0.2, 0.01);
+        assert_eq!(s.threshold_at(0), 0.0);
+        assert_eq!(s.lambda_at(0), 0.0);
+        // Closed by the end of warmup (30 steps) and held after.
+        assert!((s.threshold_at(30) - 0.2).abs() < 1e-6);
+        assert!((s.threshold_at(99) - 0.2).abs() < 1e-6);
+        assert!((s.lambda_at(30) - 0.01).abs() < 1e-8);
+        let mut last_t = -1.0f32;
+        let mut last_l = -1.0f32;
+        for step in 0..100 {
+            let (t, l) = (s.threshold_at(step), s.lambda_at(step));
+            assert!(t >= last_t && l >= last_l, "monotone ramps");
+            last_t = t;
+            last_l = l;
+        }
+    }
+
+    #[test]
+    fn degenerate_budgets_do_not_divide_by_zero() {
+        let s = Schedule::new(0, 0.1, 0.1, 1e-4);
+        assert!(s.lr_at(0).is_finite());
+        assert!(s.threshold_at(0).is_finite());
+        // A 1-step run still ends at full strength by construction.
+        let s = Schedule::new(1, 0.1, 0.1, 1e-4);
+        assert!((s.threshold_at(1) - 0.1).abs() < 1e-7);
+    }
+}

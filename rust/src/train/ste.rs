@@ -1,0 +1,98 @@
+//! Straight-through estimator (STE) through the Zebra block gate.
+//!
+//! The deployed op `a = gate_B,T(relu(z))` (zero every block whose
+//! post-ReLU max is <= T) has gradient zero almost everywhere through
+//! the gate, so training with the true gradient would freeze every
+//! pruned block forever. The STE keeps the *forward* exactly equal to
+//! deployment but treats the hard gate as identity in the *backward*
+//! pass:
+//!
+//! ```text
+//! forward:   a  = block_prune(relu(z), T)      (zebra::prune, bit-exact
+//!                                               with serving)
+//! backward:  dz = da ⊙ 1[z > 0]                (plain ReLU gradient;
+//!                                               the gate is skipped)
+//! ```
+//!
+//! A pruned-but-positive element therefore still receives gradient:
+//! cross-entropy can pull an important block back above threshold, and
+//! the group-lasso regularizer (`train::loss`) can keep shrinking an
+//! unimportant one — exactly the dynamic-mask learning that
+//! distinguishes Zebra from post-hoc activation compression.
+
+use crate::tensor::Tensor;
+use crate::zebra::blocks::BlockMask;
+use crate::zebra::prune::{relu_prune, Thresholds};
+
+/// Forward pass: the deployed fused ReLU + block-prune op, on a copy.
+/// Returns the pruned activation and its keep mask.
+pub fn relu_prune_ste_forward(
+    z: &Tensor,
+    t: f32,
+    block: usize,
+) -> (Tensor, BlockMask) {
+    relu_prune(z, &Thresholds::Scalar(t), block)
+}
+
+/// Backward pass: `dz = da ⊙ 1[z > 0]` — the ReLU gradient with the
+/// block gate treated as identity (see module docs).
+pub fn ste_backward(z: &Tensor, da: &Tensor) -> Tensor {
+    assert_eq!(
+        z.shape(),
+        da.shape(),
+        "ste_backward: activation/gradient shape mismatch"
+    );
+    let data = z
+        .data()
+        .iter()
+        .zip(da.data())
+        .map(|(&zv, &g)| if zv > 0.0 { g } else { 0.0 })
+        .collect();
+    Tensor::from_vec(z.shape(), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_matches_deployed_prune() {
+        // 4x4, block 2, T = 0.5: only the big-valued block survives.
+        let mut data = vec![-1.0f32; 16];
+        data[0] = 5.0;
+        data[10] = 0.3; // bottom-right block: positive but below T
+        let z = Tensor::from_vec(&[1, 1, 4, 4], data);
+        let (a, m) = relu_prune_ste_forward(&z, 0.5, 2);
+        assert!(m.get(0) && !m.get(3));
+        assert_eq!(a.data()[0], 5.0);
+        assert_eq!(a.data()[10], 0.0, "pruned block is zeroed in forward");
+    }
+
+    #[test]
+    fn backward_gates_on_relu_not_on_the_block_mask() {
+        // Same tensor: element 10 sits in a *pruned* block but has
+        // z > 0 — the STE must pass its gradient straight through.
+        let mut data = vec![-1.0f32; 16];
+        data[0] = 5.0;
+        data[10] = 0.3;
+        let z = Tensor::from_vec(&[1, 1, 4, 4], data);
+        let da = Tensor::from_vec(&[1, 1, 4, 4], vec![1.0; 16]);
+        let dz = ste_backward(&z, &da);
+        assert_eq!(dz.data()[0], 1.0, "kept element passes gradient");
+        assert_eq!(
+            dz.data()[10],
+            1.0,
+            "pruned-but-positive element still gets gradient (STE)"
+        );
+        assert_eq!(dz.data()[1], 0.0, "negative pre-activation blocks it");
+        assert_eq!(dz.data().iter().filter(|&&v| v != 0.0).count(), 2);
+    }
+
+    #[test]
+    fn backward_scales_linearly_in_upstream_gradient() {
+        let z = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, -1.0, 2.0, 0.0]);
+        let da = Tensor::from_vec(&[1, 1, 2, 2], vec![3.0, 3.0, -2.0, 5.0]);
+        let dz = ste_backward(&z, &da);
+        assert_eq!(dz.data(), &[3.0, 0.0, -2.0, 0.0]);
+    }
+}

@@ -5,6 +5,8 @@
 //! on CIFAR-10: 2.06 MB required bandwidth, 4.13 KB index overhead).
 
 use super::blocks::BlockMask;
+use super::prune::{block_mask, Thresholds};
+use crate::tensor::Tensor;
 
 /// Bits per activation element (f32).
 pub const ELEM_BITS: usize = 32;
@@ -121,6 +123,43 @@ pub fn measured_report(
     r
 }
 
+/// Aggregate zero-block statistics of a set of already-pruned spills.
+#[derive(Debug, Clone)]
+pub struct ZeroBlockStats {
+    /// % of blocks that are entirely zero, across all layers.
+    pub zero_pct: f64,
+    pub total_blocks: usize,
+    pub zero_blocks: usize,
+    /// Per-image Eq. 2–3 report at the measured sparsity.
+    pub report: BandwidthReport,
+}
+
+/// T=0 recount of already-pruned spill tensors: aggregate zero-block
+/// ratio plus the measured Eq. 2–3 report. This is the ONE accounting
+/// path shared by `zebra train`'s per-epoch evaluation and
+/// `zebra simulate`'s spill summary, so the trainer's reported numbers
+/// and the serving-side tools can never diverge.
+pub fn zero_block_accounting(
+    shapes: &[SpillShape],
+    spills: &[Tensor],
+) -> ZeroBlockStats {
+    let masks: Vec<BlockMask> = spills
+        .iter()
+        .zip(shapes)
+        .map(|(sp, s)| block_mask(sp, &Thresholds::Scalar(0.0), s.block))
+        .collect();
+    let (total, kept) = masks.iter().fold((0usize, 0usize), |(t, k), m| {
+        (t + m.grid.num_blocks(), k + m.kept())
+    });
+    let report = measured_report(shapes, &masks);
+    ZeroBlockStats {
+        zero_pct: 100.0 * (1.0 - kept as f64 / total.max(1) as f64),
+        total_blocks: total,
+        zero_blocks: total - kept,
+        report,
+    }
+}
+
 /// Pretty byte formatting for tables ("2.06 MB", "4.13 KB").
 pub fn fmt_bytes(b: f64) -> String {
     if b >= 1024.0 * 1024.0 {
@@ -186,6 +225,29 @@ mod tests {
             let want = sp[0].dense_bytes() as f64 * kept_frac;
             assert!((rep.stored_bytes - want).abs() < 1e-6);
             assert!(rep.reduced_pct() <= 100.0);
+        });
+    }
+
+    #[test]
+    fn zero_block_accounting_matches_mask_fractions() {
+        forall(Config::cases(20), |rng| {
+            let (c, h, w, b) = (rng.range(1, 3), 8, 8, 2);
+            let data = (0..c * h * w).map(|_| rng.normal()).collect();
+            let x = Tensor::from_vec(&[1, c, h, w], data);
+            let (y, mask) = relu_prune(&x, &Thresholds::Scalar(0.2), b);
+            let shapes = vec![spill(c, h, w, b)];
+            let stats = zero_block_accounting(&shapes, &[y]);
+            assert_eq!(stats.total_blocks, mask.grid.num_blocks());
+            assert!(
+                (stats.zero_pct - 100.0 * mask.zero_fraction()).abs() < 1e-9
+            );
+            assert_eq!(
+                stats.zero_blocks,
+                mask.grid.num_blocks() - mask.kept()
+            );
+            // The embedded report agrees with measured_report directly.
+            let direct = measured_report(&shapes, &[mask]);
+            assert_eq!(stats.report, direct);
         });
     }
 

@@ -125,6 +125,38 @@ pub fn relu_prune(
     (y, m)
 }
 
+/// Per-block L2 norms in [`BlockGrid::block_id`] order.
+///
+/// The training subsystem's group-lasso regularizer (`CE +
+/// lambda * sum ||block||_2`, see `train::loss`) and its gradient both
+/// consume these; `zebra analyze`-style tooling can use them to rank
+/// blocks by importance.
+pub fn block_l2_norms(x: &Tensor, block: usize) -> (BlockGrid, Vec<f32>) {
+    let s = x.shape();
+    assert_eq!(s.len(), 4, "block_l2_norms wants NCHW, got {s:?}");
+    let grid = BlockGrid::new(s[0], s[1], s[2], s[3], block);
+    let (hb, wb) = (grid.hb(), grid.wb());
+    let mut norms = vec![0.0f32; grid.num_blocks()];
+    for n in 0..s[0] {
+        for c in 0..s[1] {
+            let plane = x.plane(n, c);
+            for by in 0..hb {
+                for bx in 0..wb {
+                    let mut ss = 0.0f32;
+                    for dy in 0..block {
+                        let row = (by * block + dy) * s[3] + bx * block;
+                        for &v in &plane[row..row + block] {
+                            ss += v * v;
+                        }
+                    }
+                    norms[grid.block_id(n, c, by, bx)] = ss.sqrt();
+                }
+            }
+        }
+    }
+    (grid, norms)
+}
+
 /// Natural zero-block fraction (Table I): blocks that are entirely zero,
 /// threshold-free.
 pub fn natural_zero_fraction(x: &Tensor, block: usize) -> f64 {
@@ -233,6 +265,41 @@ mod tests {
             let (y, m) = relu_prune(&x, &Thresholds::Scalar(0.0), 2);
             let nat = natural_zero_fraction(&y, 2);
             assert!((nat - m.zero_fraction()).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn block_norms_match_hand_computation() {
+        // 4x4 map, block 2: norms per block in block-id order.
+        let x = Tensor::from_vec(
+            &[1, 1, 4, 4],
+            vec![
+                3.0, 4.0, 0.0, 0.0, //
+                0.0, 0.0, 0.0, 0.0, //
+                1.0, 0.0, 2.0, 2.0, //
+                0.0, 0.0, 2.0, 2.0,
+            ],
+        );
+        let (grid, norms) = block_l2_norms(&x, 2);
+        assert_eq!(grid.num_blocks(), 4);
+        assert_eq!(norms[0], 5.0, "3-4-5 block");
+        assert_eq!(norms[1], 0.0, "all-zero block");
+        assert_eq!(norms[2], 1.0);
+        assert_eq!(norms[3], 4.0, "four 2s");
+    }
+
+    #[test]
+    fn block_norms_positive_iff_block_mask_keeps_at_t_below_zero() {
+        // A block has a positive L2 norm exactly when it contains a
+        // nonzero element, i.e. when |x|'s T=0 mask keeps it.
+        forall(Config::cases(30), |rng| {
+            let x = rand_tensor(rng, &[1, 2, 4, 4]);
+            let (y, _) = relu_prune(&x, &Thresholds::Scalar(0.3), 2);
+            let (grid, norms) = block_l2_norms(&y, 2);
+            let m = block_mask(&y, &Thresholds::Scalar(0.0), 2);
+            for id in 0..grid.num_blocks() {
+                assert_eq!(norms[id] > 0.0, m.get(id), "block {id}");
+            }
         });
     }
 

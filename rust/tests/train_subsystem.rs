@@ -1,0 +1,247 @@
+//! Integration: the native train subsystem end to end —
+//! train -> `.zten` artifact -> serve on the reference backend — plus
+//! the optimization-sanity gates (loss decrease, lambda's effect on
+//! the zero-block ratio) the CLI acceptance run relies on.
+
+use zebra::backend::reference::{RefSpec, ReferenceBackend};
+use zebra::backend::InferenceBackend;
+use zebra::train::{train, train_on, Dataset, TrainConfig};
+
+fn base_cfg() -> TrainConfig {
+    TrainConfig {
+        model: "ref-tiny".into(),
+        seed: 11,
+        quiet: true,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn loss_strictly_decreases_on_a_fixed_batch() {
+    // 20 steps of exact full-batch gradient descent: lambda 0 and
+    // T = 0 make the pruned forward identical to plain ReLU (pruning
+    // at T=0 only zeroes already-zero blocks) and the STE equal to the
+    // true ReLU subgradient, so each small step must strictly reduce
+    // the smooth CE loss. The dataset fits in one batch, which the
+    // loop runs in fixed index order.
+    let cfg = TrainConfig {
+        lambda: 0.0,
+        t_obj: Some(0.0),
+        steps: 20,
+        batch: 16,
+        lr: 0.01,
+        momentum: 0.0,
+        weight_decay: 0.0,
+        ..base_cfg()
+    };
+    let ds = Dataset::synthetic(8, 10, 20, 11);
+    let (train_ds, holdout) = ds.split(4);
+    assert_eq!(train_ds.len(), 16, "one fixed full batch");
+    let out = train_on(&cfg, &train_ds, &holdout).unwrap();
+    assert_eq!(out.loss_history.len(), 20);
+    for w in out.loss_history.windows(2) {
+        assert!(
+            w[1] < w[0],
+            "loss must strictly decrease on a fixed batch: {:?}",
+            out.loss_history
+        );
+    }
+}
+
+#[test]
+fn lambda_raises_the_zero_block_ratio() {
+    // Same data, same seeds, same budget — the only difference is the
+    // zero-block regularizer. The lambda run must prune strictly more
+    // blocks at the deployment threshold; that is the paper's core
+    // claim and the `zebra train` acceptance gate.
+    let mk = |lambda: f32| TrainConfig {
+        lambda,
+        steps: 40,
+        batch: 8,
+        n_train: 64,
+        n_holdout: 32,
+        ..base_cfg()
+    };
+    let baseline = train(&mk(0.0)).unwrap();
+    let zebra_run = train(&mk(0.02)).unwrap();
+    let (b, z) = (baseline.final_stat(), zebra_run.final_stat());
+    assert!(
+        z.zero_block_pct > b.zero_block_pct,
+        "lambda=0.02 must prune more blocks: {:.1}% vs {:.1}% at lambda=0",
+        z.zero_block_pct,
+        b.zero_block_pct
+    );
+    assert!(
+        z.reduced_pct > b.reduced_pct,
+        "Eq.2-3 reduction must improve: {:.1}% vs {:.1}%",
+        z.reduced_pct,
+        b.reduced_pct
+    );
+    // The regularizer actually contributed to the objective.
+    assert!(z.penalty > 0.0);
+    assert_eq!(b.penalty, 0.0);
+}
+
+#[test]
+fn trained_leaves_roundtrip_into_the_serving_backend() {
+    let cfg = TrainConfig {
+        lambda: 1e-3,
+        steps: 12,
+        batch: 8,
+        n_train: 32,
+        n_holdout: 8,
+        ..base_cfg()
+    };
+    let out = train(&cfg).unwrap();
+    let dir = std::env::temp_dir()
+        .join(format!("zebra-train-rt-{}", std::process::id()));
+    out.write_leaves(&dir).unwrap();
+
+    // The artifact loads through the exact weights_dir path `zebra
+    // serve --weights DIR` uses, and reproduces the trained model
+    // bit-for-bit (f32 .zten leaves are lossless).
+    let mut spec = RefSpec::from_key("ref-tiny").unwrap();
+    spec.seed = cfg.seed;
+    spec.weights_dir = Some(dir.clone());
+    let served = ReferenceBackend::new(spec.clone()).unwrap();
+    let trained =
+        ReferenceBackend::from_params(out.spec.clone(), out.params.clone())
+            .unwrap();
+    let probe = Dataset::synthetic(8, 10, 4, 99).images;
+    let a = served.execute(&probe).unwrap();
+    let b = trained.execute(&probe).unwrap();
+    assert_eq!(a.logits, b.logits);
+    assert_eq!(a.masks, b.masks);
+
+    // And it differs from the untrained deterministic weights.
+    let mut fresh_spec = spec;
+    fresh_spec.weights_dir = None;
+    let fresh = ReferenceBackend::new(fresh_spec).unwrap();
+    assert_ne!(fresh.execute(&probe).unwrap().logits, a.logits);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_train_checkpoints_servable_leaves() {
+    let dir = std::env::temp_dir()
+        .join(format!("zebra-train-cli-{}", std::process::id()));
+    let argv: Vec<String> = [
+        "train",
+        "--model",
+        "ref-tiny",
+        "--lambda",
+        "0.001",
+        "--steps",
+        "10",
+        "--batch",
+        "8",
+        "--train-n",
+        "24",
+        "--holdout",
+        "8",
+        "--out",
+        dir.to_str().unwrap(),
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    zebra::cli::run(&argv).unwrap();
+    // ref-tiny: 2 conv layers + classifier = 3 leaves.
+    for i in 0..3 {
+        assert!(
+            dir.join(format!("w{i:05}.zten")).exists(),
+            "missing leaf {i}"
+        );
+    }
+    let mut spec = RefSpec::from_key("ref-tiny").unwrap();
+    spec.weights_dir = Some(dir.clone());
+    let be = ReferenceBackend::new(spec).unwrap();
+    let out = be
+        .execute(&Dataset::synthetic(8, 10, 2, 1).images)
+        .unwrap();
+    assert_eq!(out.logits.shape(), &[2, 10]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_cli_loads_trained_weights_and_honors_seed() {
+    // The acceptance loop: train -> --out DIR -> serve --weights DIR,
+    // with --seed steering the synthetic test set.
+    let cfg = TrainConfig {
+        lambda: 1e-3,
+        steps: 8,
+        batch: 8,
+        n_train: 24,
+        n_holdout: 8,
+        ..base_cfg()
+    };
+    let out = train(&cfg).unwrap();
+    let dir = std::env::temp_dir()
+        .join(format!("zebra-train-serve-{}", std::process::id()));
+    out.write_leaves(&dir).unwrap();
+    let argv: Vec<String> = [
+        "serve",
+        "--backend",
+        "reference",
+        "--model",
+        "ref-tiny",
+        "--weights",
+        dir.to_str().unwrap(),
+        "--requests",
+        "3",
+        "--wait-ms",
+        "0",
+        "--seed",
+        "123",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let args = zebra::cli::Args::parse(&argv).unwrap();
+    let empty = std::env::temp_dir()
+        .join(format!("zebra-train-serve-art-{}", std::process::id()));
+    zebra::cli::serve::run_with(&args, empty.clone()).unwrap();
+    // A missing weights dir is a loud CLI error, not a fallback.
+    let mut bad = argv.clone();
+    let wpos = bad.iter().position(|a| a == "--weights").unwrap();
+    bad[wpos + 1] = "/nonexistent/zebra-weights".into();
+    let bad_args = zebra::cli::Args::parse(&bad).unwrap();
+    assert!(zebra::cli::serve::run_with(&bad_args, empty.clone()).is_err());
+    // So is a PARTIAL checkpoint: delete one leaf and the explicit
+    // --weights path must refuse to mix trained and generated weights.
+    std::fs::remove_file(dir.join("w00001.zten")).unwrap();
+    let args = zebra::cli::Args::parse(&argv).unwrap();
+    let err = zebra::cli::serve::run_with(&args, empty)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("w00001"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn block_override_flows_through_training_and_eval() {
+    // ref-tiny's layers are 8px and 4px; --block 4 is valid for both
+    // and must show up in the evaluation masks' geometry.
+    let cfg = TrainConfig {
+        block: Some(4),
+        steps: 6,
+        batch: 8,
+        n_train: 16,
+        n_holdout: 8,
+        ..base_cfg()
+    };
+    let out = train(&cfg).unwrap();
+    assert!(out.spec.spills.iter().all(|s| s.block == 4));
+    let be =
+        ReferenceBackend::from_params(out.spec.clone(), out.params.clone())
+            .unwrap();
+    let r = be
+        .execute(&Dataset::synthetic(8, 10, 1, 3).images)
+        .unwrap();
+    assert_eq!(r.masks[0].shape(), &[1, 8, 2, 2], "8px map / block 4");
+    assert_eq!(r.masks[1].shape(), &[1, 16, 1, 1], "4px map / block 4");
+    assert_eq!(r.block_elems, vec![16, 16]);
+    // A non-dividing block errors instead of training garbage.
+    let bad = TrainConfig { block: Some(3), ..cfg };
+    assert!(train(&bad).is_err());
+}
