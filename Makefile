@@ -1,6 +1,6 @@
 # Repo-level convenience targets.
 
-.PHONY: check ci bench-smoke train-smoke
+.PHONY: check ci bench-smoke train-smoke cluster-smoke
 
 # Full gate: build + tests + fmt + clippy in both feature configs
 # (the pjrt config auto-skips when no XLA toolchain is present),
@@ -24,6 +24,15 @@ bench-smoke:
 # seconds. ZEBRA_BENCH_SMOKE=1 caps the training budget the same way
 # it caps bench measuring time. This recipe is the single source of
 # truth — rust/check.sh invokes this target rather than duplicating it.
+# Loopback cluster smoke: 2 cluster-workers + a cluster-router (all
+# on ephemeral ports, addresses harvested from their "listening on"
+# lines) driven by `zebra loadgen --fail-on-error`. Proves the
+# multi-node serving path — sharding, wire protocol, metrics
+# aggregation — end to end in seconds. rust/check.sh invokes this
+# target rather than duplicating the recipe.
+cluster-smoke:
+	cd rust && ./cluster_smoke.sh
+
 train-smoke:
 	cd rust && tmp=$$(mktemp -d) && \
 	( ZEBRA_BENCH_SMOKE=1 cargo run --release --no-default-features -- \

@@ -85,6 +85,7 @@ fn main() -> anyhow::Result<()> {
             workers: 1,
             max_queue: 1024,
             ship_spills: None,
+            spill_sink: None,
         },
     );
     let hw = 8usize;

@@ -52,6 +52,7 @@ fn main() -> anyhow::Result<()> {
             workers: 1,
             max_queue: 512,
             ship_spills: None,
+            spill_sink: None,
         },
     ));
 

@@ -1,0 +1,98 @@
+//! §Perf: loopback cluster overhead — pipelined requests/sec through
+//! a router + N workers over 127.0.0.1 TCP versus the in-process
+//! coordinator on the same reference model. Run via
+//! `cargo bench --bench cluster_loopback`; honors ZEBRA_BENCH_SMOKE.
+//!
+//! What this measures: the wire protocol + router hop cost per
+//! request (frame encode/parse, checksums, thread handoffs). The
+//! model here (ref-tiny) is tiny on purpose — the overhead is the
+//! signal; a real model amortizes it further.
+
+use std::sync::Arc;
+
+use zebra::backend::reference::RefSpec;
+use zebra::bench::{bench, Table};
+use zebra::cluster::{ClusterClient, Router, RouterConfig, WorkerNode};
+use zebra::coordinator::{reference_executor, Server, ServerConfig};
+use zebra::tensor::Tensor;
+use zebra::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(77);
+    let img = Tensor::from_vec(
+        &[3, 8, 8],
+        (0..192).map(|_| rng.normal()).collect(),
+    );
+    // Pipelined window per timed iteration.
+    let window = 16usize;
+
+    let mut table = Table::new(&["path", "mean ms/window", "req/s", "note"]);
+
+    let direct = Server::start(
+        Arc::new(reference_executor(RefSpec::tiny())?),
+        ServerConfig::default(),
+    );
+    let s = bench("in-process x16", 300, || {
+        let rxs: Vec<_> = (0..window)
+            .map(|_| direct.submit(img.clone()).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+    });
+    table.row(&[
+        "in-process".into(),
+        format!("{:.3}", s.mean_ms()),
+        format!("{:.0}", s.per_sec(window as f64)),
+        "no TCP".into(),
+    ]);
+    let baseline = s.mean_ns;
+    direct.shutdown();
+
+    for n_workers in [1usize, 2] {
+        let workers: Vec<WorkerNode> = (0..n_workers)
+            .map(|_| {
+                WorkerNode::start(
+                    Arc::new(reference_executor(RefSpec::tiny()).unwrap()),
+                    "127.0.0.1:0",
+                    ServerConfig::default(),
+                    None,
+                )
+                .unwrap()
+            })
+            .collect();
+        let router = Router::start(
+            RouterConfig::new(
+                workers.iter().map(|w| w.local_addr().to_string()).collect(),
+            ),
+            "127.0.0.1:0",
+        )?;
+        let client =
+            ClusterClient::connect(&router.local_addr().to_string())?;
+        let s = bench(&format!("router+{n_workers}w x16"), 300, || {
+            let rxs: Vec<_> = (0..window)
+                .map(|_| client.submit(&img).unwrap())
+                .collect();
+            for rx in rxs {
+                rx.recv().unwrap().unwrap();
+            }
+        });
+        table.row(&[
+            format!("router + {n_workers} worker(s)"),
+            format!("{:.3}", s.mean_ms()),
+            format!("{:.0}", s.per_sec(window as f64)),
+            format!("{:.2}x in-process", s.mean_ns / baseline),
+        ]);
+        client.shutdown();
+        router.shutdown();
+        for w in workers {
+            w.shutdown();
+        }
+    }
+
+    table.print(
+        "Loopback cluster overhead — ref-tiny, 16-request pipelined \
+         windows (wire + router hop cost per request)",
+    );
+    Ok(())
+}

@@ -41,4 +41,10 @@ fi
 echo "== train smoke: zebra train -> .zten -> zebra serve --weights"
 make -C .. train-smoke
 
+# Cluster smoke: 2 workers + router + loadgen over loopback ephemeral
+# ports — the multi-node serving path, gated on every run. The recipe
+# lives in rust/cluster_smoke.sh via the repo Makefile.
+echo "== cluster smoke: 2x cluster-worker -> cluster-router -> loadgen"
+make -C .. cluster-smoke
+
 echo "check OK"

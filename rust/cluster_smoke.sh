@@ -1,0 +1,56 @@
+#!/usr/bin/env bash
+# rust/cluster_smoke.sh — loopback cluster smoke gate: two
+# cluster-workers + a cluster-router + loadgen, all on ephemeral
+# ports (every node prints "... listening on HOST:PORT"; nothing
+# races on fixed ports). `make cluster-smoke` runs this; rust/check.sh
+# and .github/workflows/ci.yml invoke that target.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+cargo build --release --no-default-features
+BIN=target/release/zebra
+
+tmp=$(mktemp -d)
+pids=()
+cleanup() {
+  for p in ${pids[@]+"${pids[@]}"}; do kill "$p" 2>/dev/null || true; done
+  rm -rf "$tmp"
+}
+trap cleanup EXIT
+
+# Harvest the "... listening on HOST:PORT" line a node prints.
+wait_addr() {
+  local log="$1" i addr
+  for i in $(seq 1 100); do
+    addr=$(sed -n 's/.*listening on \([0-9.]*:[0-9]*\).*/\1/p' "$log" | head -n1)
+    if [ -n "$addr" ]; then
+      echo "$addr"
+      return 0
+    fi
+    sleep 0.1
+  done
+  echo "timed out waiting for an address in $log" >&2
+  cat "$log" >&2
+  return 1
+}
+
+# --run-s bounds every node's lifetime so a wedged smoke run cannot
+# outlive CI even if the cleanup trap is skipped.
+"$BIN" cluster-worker --model ref-tiny --port 0 --run-s 120 \
+  >"$tmp/w1.log" 2>&1 &
+pids+=($!)
+"$BIN" cluster-worker --model ref-tiny --port 0 --run-s 120 \
+  >"$tmp/w2.log" 2>&1 &
+pids+=($!)
+W1=$(wait_addr "$tmp/w1.log")
+W2=$(wait_addr "$tmp/w2.log")
+
+"$BIN" cluster-router --workers "$W1,$W2" --port 0 --run-s 120 \
+  >"$tmp/r.log" 2>&1 &
+pids+=($!)
+R=$(wait_addr "$tmp/r.log")
+
+ZEBRA_BENCH_SMOKE=1 "$BIN" loadgen --addr "$R" --requests 64 --hw 8 \
+  --fail-on-error
+
+echo "cluster smoke OK (router $R, workers $W1 $W2)"

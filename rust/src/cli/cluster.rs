@@ -1,0 +1,130 @@
+//! `zebra cluster-worker` / `zebra cluster-router` — the multi-node
+//! serving topology (see `rust/docs/cluster.md`):
+//!
+//! ```text
+//! zebra cluster-worker --model ref-tiny --port 0          # x N
+//! zebra cluster-router --workers HOST:P1,HOST:P2 --port 0
+//! zebra loadgen --addr ROUTER_ADDR --requests 256
+//! ```
+//!
+//! Both node commands accept `--port 0` for an ephemeral port and
+//! print one `... listening on HOST:PORT` line so scripts harvest the
+//! bound address instead of racing on fixed ports. `--run-s N` exits
+//! after N seconds (0 = run until killed), which keeps smoke tests
+//! self-terminating.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::Args;
+use crate::cluster::{Router, RouterConfig, ShardMode, WorkerNode};
+use crate::coordinator::server::BatchExecutor;
+use crate::coordinator::ServerConfig;
+
+/// `zebra cluster-worker`: build the serving executor exactly like
+/// `zebra serve` and expose it as a cluster worker node.
+pub fn run_worker(args: &Args) -> Result<()> {
+    let (exec, _classes, backend) =
+        super::serve::build_executor(args, &crate::artifacts_dir())?;
+    println!(
+        "cluster-worker backend {} | batches {:?}",
+        backend.name(),
+        exec.batch_sizes()
+    );
+    expose_worker(args, exec)
+}
+
+/// Shared TCP front for `cluster-worker` and `serve --port`: wrap the
+/// executor in a coordinator server behind a listener, print the
+/// bound address, and hold until `--run-s` elapses (or forever).
+pub(crate) fn expose_worker(
+    args: &Args,
+    exec: Arc<dyn BatchExecutor>,
+) -> Result<()> {
+    let listen = listen_addr(args)?;
+    let wait_ms = args.get_usize("wait-ms", 2)? as u64;
+    let queue = args.get_usize("queue", 1024)?;
+    let ship_spills = super::serve::ship_config(args, exec.image_hw())?;
+    let ship_upstream = args.get("ship-upstream").map(String::from);
+    let node = WorkerNode::start(
+        exec,
+        &listen,
+        ServerConfig {
+            max_wait: Duration::from_millis(wait_ms),
+            workers: 1,
+            max_queue: queue,
+            ship_spills,
+            spill_sink: None, // WorkerNode wires the sink to upstream
+        },
+        ship_upstream,
+    )?;
+    println!("cluster-worker listening on {}", node.local_addr());
+    hold(args)?;
+    println!("cluster-worker metrics: {}", node.metrics().summary());
+    node.shutdown();
+    Ok(())
+}
+
+/// `zebra cluster-router`: shard requests across `--workers`.
+pub fn run_router(args: &Args) -> Result<()> {
+    let workers: Vec<String> = args
+        .get("workers")
+        .context(
+            "cluster-router needs --workers HOST:PORT[,HOST:PORT...]",
+        )?
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect();
+    anyhow::ensure!(
+        !workers.is_empty(),
+        "--workers lists no usable addresses"
+    );
+    let mut cfg = RouterConfig::new(workers);
+    cfg.mode = ShardMode::parse(&args.get_or("mode", "rr"))?;
+    cfg.max_outstanding = args.get_usize("max-outstanding", 256)?;
+    cfg.max_attempts =
+        args.get_usize("max-attempts", cfg.max_attempts)?;
+    cfg.heartbeat_every = Duration::from_millis(
+        args.get_usize("heartbeat-ms", 250)? as u64,
+    );
+    let listen = listen_addr(args)?;
+    let n_workers = cfg.workers.len();
+    let mode = cfg.mode;
+    let router = Router::start(cfg, &listen)?;
+    println!(
+        "cluster-router listening on {} ({} workers, mode {}, {} alive)",
+        router.local_addr(),
+        n_workers,
+        mode.name(),
+        router.workers_alive()
+    );
+    hold(args)?;
+    println!("cluster-router stats: {}", router.stats().summary());
+    router.shutdown();
+    Ok(())
+}
+
+/// `--host`/`--port` -> a bind address. `--port 0` asks the OS for an
+/// ephemeral port; the node prints what it got.
+fn listen_addr(args: &Args) -> Result<String> {
+    let host = args.get_or("host", "127.0.0.1");
+    let port = args.get_usize("port", 0)?;
+    anyhow::ensure!(port <= u16::MAX as usize, "--port {port} out of range");
+    Ok(format!("{host}:{port}"))
+}
+
+/// Block for `--run-s` seconds (0 = until the process is killed).
+fn hold(args: &Args) -> Result<()> {
+    let run_s = args.get_usize("run-s", 0)?;
+    if run_s == 0 {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(run_s as u64));
+    Ok(())
+}

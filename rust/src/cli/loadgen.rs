@@ -1,0 +1,149 @@
+//! `zebra loadgen` — drive a cluster router (or a bare worker / a
+//! `serve --port` node) at a target request rate and report latency
+//! percentiles plus the cluster's achieved zero-block bandwidth
+//! savings.
+//!
+//! Latency is measured client-side: the [`ClusterClient`]'s reader
+//! stamps each response the moment its frame arrives, and the samples
+//! land in the same fixed-bucket histogram
+//! ([`coordinator::Metrics`](crate::coordinator::Metrics)) the server
+//! and router use, so p50/p95/p99 mean the same thing at every tier.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::Args;
+use crate::backend::synth_images;
+use crate::cluster::ClusterClient;
+use crate::coordinator::Metrics;
+use crate::tensor::{read_zten, Tensor};
+
+pub fn run(args: &Args) -> Result<()> {
+    let addr = args
+        .get("addr")
+        .context("loadgen needs --addr HOST:PORT (a router or worker)")?;
+    let smoke = crate::bench::smoke();
+    let n = args.get_usize("requests", if smoke { 32 } else { 256 })?;
+    anyhow::ensure!(n > 0, "--requests must be positive");
+    let qps = args.get_f32("qps", 0.0)?;
+    anyhow::ensure!(qps >= 0.0, "--qps must be >= 0 (0 = closed loop)");
+    let hw = args.get_usize("hw", 8)?;
+    let seed = args.get_usize("seed", 0xC1A5)? as u64;
+    let strict = args.get("fail-on-error").is_some();
+
+    // Test set: a `.zten` export (--images F.zten) or deterministic
+    // synthetic noise at the cluster's image size.
+    let images = match args.get("images") {
+        Some(path) => {
+            let t = read_zten(path).with_context(|| {
+                format!("loadgen --images {path:?}")
+            })?;
+            let s = t.shape().to_vec();
+            anyhow::ensure!(
+                s.len() == 4 && s[0] > 0 && s[1] == 3 && s[2] == s[3],
+                "--images wants (N, 3, H, H) images, got {s:?}"
+            );
+            t
+        }
+        None => synth_images(hw, 16.min(n), seed),
+    };
+    let hw = images.shape()[2];
+    let pool = images.shape()[0];
+    let per = 3 * hw * hw;
+
+    let client = ClusterClient::connect(addr)?;
+    let hist = Metrics::new();
+    println!(
+        "loadgen: {n} requests of {hw}px images -> {addr} \
+         ({} target)",
+        if qps > 0.0 {
+            format!("{qps:.0} req/s")
+        } else {
+            "closed-loop".to_string()
+        }
+    );
+
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(n);
+    for i in 0..n {
+        if qps > 0.0 {
+            let due = t0 + Duration::from_secs_f64(i as f64 / qps as f64);
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+        }
+        let idx = i % pool;
+        let img = Tensor::from_vec(
+            &[3, hw, hw],
+            images.data()[idx * per..(idx + 1) * per].to_vec(),
+        );
+        rxs.push(client.submit(&img)?);
+    }
+    let mut ok = 0usize;
+    let mut errors = 0usize;
+    for rx in rxs {
+        match rx.recv() {
+            Ok(Ok(resp)) => {
+                ok += 1;
+                hist.record_latency_us(resp.wall.as_micros() as u64);
+            }
+            Ok(Err(msg)) => {
+                if errors < 3 {
+                    eprintln!("loadgen: request failed: {msg}");
+                }
+                errors += 1;
+            }
+            Err(_) => errors += 1,
+        }
+    }
+    let wall = t0.elapsed();
+    println!(
+        "loadgen: {ok}/{n} ok ({errors} errors) in {:.2}s — {:.1} req/s \
+         achieved",
+        wall.as_secs_f64(),
+        ok as f64 / wall.as_secs_f64().max(1e-9)
+    );
+    println!(
+        "latency (client-side): p50={}us p95={}us p99={}us",
+        hist.latency_percentile_us(0.5),
+        hist.latency_percentile_us(0.95),
+        hist.latency_percentile_us(0.99)
+    );
+
+    // Cluster-wide view: aggregated worker metrics + router counters.
+    // A bare worker answers with a plain snapshot, which fails the
+    // ClusterStats parse — report and move on.
+    match client.stats() {
+        Ok(stats) => {
+            println!("cluster: {}", stats.summary());
+            println!(
+                "zero-block bandwidth savings: {:.1}% (Eq. 2-3 across \
+                 {} responses)",
+                stats.aggregate.reduction_pct(),
+                stats.aggregate.responses
+            );
+            if stats.aggregate.shipped_spill_bytes > 0 {
+                let shipped = stats.aggregate.shipped_spill_bytes;
+                let received = stats.spill_bytes_in;
+                println!(
+                    "spill shipping: workers metered {shipped}B, router \
+                     received {received}B{}",
+                    if shipped == received {
+                        " (exact match)"
+                    } else {
+                        " (frames still in flight)"
+                    }
+                );
+            }
+        }
+        Err(e) => println!("(no cluster stats from {addr}: {e:#})"),
+    }
+    client.shutdown();
+    anyhow::ensure!(
+        !strict || errors == 0,
+        "loadgen --fail-on-error: {errors} of {n} requests failed"
+    );
+    Ok(())
+}

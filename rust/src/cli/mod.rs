@@ -9,6 +9,8 @@
 //! ```
 
 mod analyze;
+mod cluster;
+mod loadgen;
 pub mod serve;
 mod simulate;
 mod train;
@@ -94,6 +96,23 @@ commands:
             [--seed S]        synthetic test-set seed
             [--requests N] [--wait-ms MS] [--queue N]
             [--ship-codec NAME [--ship-block B]]  frame batches as .zspill
+            [--port P]        expose the server over TCP instead of
+                              replaying (0 = ephemeral; prints the
+                              bound address) [--host H] [--run-s N]
+  cluster-worker              serve as a cluster worker node (same
+                              backend/model/ship flags as serve)
+            [--port P] [--host H] [--run-s N]
+            [--ship-upstream HOST:PORT]  ship .zspill batch frames to
+                                         the router
+  cluster-router --workers HOST:P1,HOST:P2[,...]
+            [--mode rr|hash]  round-robin or consistent-hash-by-key
+            [--max-outstanding N] [--max-attempts N] [--heartbeat-ms MS]
+            [--port P] [--host H] [--run-s N]
+  loadgen   --addr HOST:PORT  drive a router at a target rate; prints
+                              p50/p95/p99 latency + cluster zero-block
+                              bandwidth savings
+            [--requests N] [--qps Q] [--hw H] [--seed S]
+            [--images F.zten] [--fail-on-error]
   simulate  --trace DIR       accelerator simulation of a trace
             | --backend reference [--model KEY] [--images N]
                                   [--weights DIR] [--seed S]
@@ -117,6 +136,9 @@ pub fn run(argv: &[String]) -> Result<()> {
         }
         "train" => train::run(&args),
         "serve" => serve::run(&args),
+        "cluster-worker" => cluster::run_worker(&args),
+        "cluster-router" => cluster::run_router(&args),
+        "loadgen" => loadgen::run(&args),
         "simulate" => simulate::run(&args),
         "analyze" => analyze::run(&args),
         "table5" => analyze::table5(&args),
@@ -210,5 +232,83 @@ mod tests {
     fn simulate_without_inputs_is_an_error() {
         let e = run(&v(&["simulate"])).unwrap_err().to_string();
         assert!(e.contains("--trace") && e.contains("--backend"), "{e}");
+    }
+
+    #[test]
+    fn cluster_router_validates_its_flags() {
+        // --workers is mandatory and must list addresses.
+        let e = run(&v(&["cluster-router"])).unwrap_err().to_string();
+        assert!(e.contains("--workers"), "{e}");
+        let e = run(&v(&["cluster-router", "--workers", " , "]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("no usable addresses"), "{e}");
+        // Bad shard modes error with the valid list before binding.
+        let e = run(&v(&[
+            "cluster-router",
+            "--workers",
+            "127.0.0.1:1",
+            "--mode",
+            "zigzag",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("rr") && e.contains("hash"), "{e}");
+    }
+
+    #[test]
+    fn cluster_worker_validates_its_flags() {
+        // Upstream shipping without a ship codec is a config error
+        // (run-s 1 would exit immediately even if it started).
+        let e = run(&v(&[
+            "cluster-worker",
+            "--backend",
+            "reference",
+            "--model",
+            "ref-tiny",
+            "--ship-upstream",
+            "127.0.0.1:1",
+            "--run-s",
+            "1",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("ship"), "{e}");
+        // A ship block that does not divide the image errors.
+        let e = run(&v(&[
+            "cluster-worker",
+            "--backend",
+            "reference",
+            "--model",
+            "ref-tiny",
+            "--ship-codec",
+            "zero-block",
+            "--ship-block",
+            "3",
+            "--run-s",
+            "1",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("divide"), "{e}");
+        // Bad model keys fail before any listener binds.
+        assert!(run(&v(&[
+            "cluster-worker",
+            "--backend",
+            "reference",
+            "--model",
+            "nope",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn loadgen_requires_an_address() {
+        let e = run(&v(&["loadgen"])).unwrap_err().to_string();
+        assert!(e.contains("--addr"), "{e}");
+        let e = run(&v(&["loadgen", "--addr", "x", "--requests", "0"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--requests"), "{e}");
     }
 }

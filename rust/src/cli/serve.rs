@@ -2,6 +2,11 @@
 //! coordinator over the selected backend (`--backend reference|pjrt`),
 //! replay the exported test set (or a synthetic one when no artifacts
 //! exist) as requests, and print latency/throughput/bandwidth metrics.
+//!
+//! With `--port` the same server is exposed over TCP instead of
+//! replayed against: `zebra serve --port 0` is a single-node network
+//! front (it prints the bound address), and `zebra cluster-worker` is
+//! this plus upstream spill shipping.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -20,42 +25,25 @@ pub fn run(args: &Args) -> Result<()> {
     run_with(args, crate::artifacts_dir())
 }
 
-/// `serve` with an explicit artifacts directory (tests inject a temp
-/// dir here instead of mutating `ZEBRA_ARTIFACTS`).
-pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
+/// Build the `--backend`/`--model`/`--weights` executor the way every
+/// serving entry point (serve, cluster-worker) does. Returns the
+/// executor, the class count when known statically (reference backend
+/// only — it gates the synthetic-test-set fallback), and the resolved
+/// backend kind.
+pub(crate) fn build_executor(
+    args: &Args,
+    artifacts: &std::path::Path,
+) -> Result<(Arc<dyn BatchExecutor>, Option<usize>, BackendKind)> {
     let backend = BackendKind::parse(
         &args.get_or("backend", BackendKind::default_name()),
     )?;
     let model = args.get_or("model", "rn18-c10-t0.1");
-    let n_requests = args.get_usize("requests", 64)?;
-    let wait_ms = args.get_usize("wait-ms", 2)? as u64;
-    let queue = args.get_usize("queue", 1024)?;
-    // Synthetic-test-set seed: reproducible by default, varied on
-    // demand (`--seed`).
-    let synth_seed = args.get_usize("seed", 0xB1A5)? as u64;
     let weights = args.get("weights").map(std::path::PathBuf::from);
     if weights.is_some() && backend != BackendKind::Reference {
         anyhow::bail!("--weights only applies to --backend reference");
     }
-    // Optional cross-node spill shipping: resolve the codec through the
-    // registry so an unknown name errors with the valid list.
-    let ship = match args.get("ship-codec") {
-        Some(name) => {
-            let spec = compress::spec_or_err(name)?;
-            let block = args.get_usize("ship-block", 4)?;
-            anyhow::ensure!(
-                block <= u16::MAX as usize,
-                "--ship-block {block} is out of range"
-            );
-            Some((spec, block as u16))
-        }
-        None => None,
-    };
-
-    let t0 = Instant::now();
-    // `classes` is known statically only for the reference backend; it
-    // gates the synthetic-test-set fallback below.
-    let (exec, classes): (Arc<dyn BatchExecutor>, Option<usize>) = match backend {
+    let (exec, classes): (Arc<dyn BatchExecutor>, Option<usize>) = match backend
+    {
         BackendKind::Reference => {
             let mut spec = RefSpec::from_key(&model)?;
             // Trained `.zten` leaves override the deterministic
@@ -88,7 +76,7 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
             {
                 println!("loading PJRT runtime from {artifacts:?} ...");
                 let e = crate::coordinator::pjrt_executor(
-                    artifacts.clone(),
+                    artifacts.to_path_buf(),
                     &model,
                 )?;
                 (Arc::new(e), None)
@@ -103,6 +91,47 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
             }
         }
     };
+    Ok((exec, classes, backend))
+}
+
+/// Resolve `--ship-codec`/`--ship-block` against the registry and the
+/// model's image geometry (shared by serve and the cluster worker).
+pub(crate) fn ship_config(
+    args: &Args,
+    image_hw: usize,
+) -> Result<Option<ShipSpills>> {
+    let Some(name) = args.get("ship-codec") else {
+        return Ok(None);
+    };
+    let spec = compress::spec_or_err(name)?;
+    let block = args.get_usize("ship-block", 4)?;
+    anyhow::ensure!(
+        block <= u16::MAX as usize,
+        "--ship-block {block} is out of range"
+    );
+    if spec.needs_block {
+        anyhow::ensure!(
+            block > 0 && image_hw % block == 0,
+            "--ship-block {block} must be positive and divide the \
+             {image_hw}px image"
+        );
+    }
+    Ok(Some(ShipSpills { codec: spec.id, block: block as u16 }))
+}
+
+/// `serve` with an explicit artifacts directory (tests inject a temp
+/// dir here instead of mutating `ZEBRA_ARTIFACTS`).
+pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
+    let model = args.get_or("model", "rn18-c10-t0.1");
+    let n_requests = args.get_usize("requests", 64)?;
+    let wait_ms = args.get_usize("wait-ms", 2)? as u64;
+    let queue = args.get_usize("queue", 1024)?;
+    // Synthetic-test-set seed: reproducible by default, varied on
+    // demand (`--seed`).
+    let synth_seed = args.get_usize("seed", 0xB1A5)? as u64;
+
+    let t0 = Instant::now();
+    let (exec, classes, backend) = build_executor(args, &artifacts)?;
     println!(
         "backend {} | model {} | batches {:?} | ready in {:.1}s",
         backend.name(),
@@ -110,6 +139,13 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
         exec.batch_sizes(),
         t0.elapsed().as_secs_f64()
     );
+
+    // --port: expose this server on TCP instead of replaying a test
+    // set against it (`--port 0` binds an ephemeral port and prints
+    // the bound address, so scripts never race on fixed ports).
+    if args.get("port").is_some() {
+        return super::cluster::expose_worker(args, exec);
+    }
 
     // Test set: prefer the exported one when it matches this model's
     // resolution; on the reference backend fall back to a synthetic
@@ -139,24 +175,9 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
     let hw = images.shape()[2];
     let per = 3 * hw * hw;
 
-    // Block geometry is only checkable once the image size is known;
-    // reject bad --ship-block values here with a CLI error instead of
-    // letting Server::start assert.
-    let ship_spills = match ship {
-        Some((spec, block)) => {
-            if spec.needs_block {
-                anyhow::ensure!(
-                    block > 0 && exec.image_hw() % block as usize == 0,
-                    "--ship-block {} must be positive and divide the \
-                     {}px image",
-                    block,
-                    exec.image_hw()
-                );
-            }
-            Some(ShipSpills { codec: spec.id, block })
-        }
-        None => None,
-    };
+    // Optional cross-node spill shipping (registry + block geometry
+    // validated with a CLI error instead of a Server::start assert).
+    let ship_spills = ship_config(args, exec.image_hw())?;
 
     let server = Server::start(
         exec,
@@ -165,6 +186,7 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
             workers: 1,
             max_queue: queue,
             ship_spills,
+            spill_sink: None,
         },
     );
 

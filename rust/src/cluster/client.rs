@@ -1,0 +1,227 @@
+//! Cluster client: one pipelined TCP connection to a router (or
+//! directly to a worker — the wire protocol is the same).
+//!
+//! Mirrors the in-process [`Server::submit`](crate::coordinator::Server)
+//! API: [`ClusterClient::submit`] returns a channel the response
+//! arrives on, so callers pipeline as many requests as they like over
+//! one connection. Wall-clock latency is stamped by the reader thread
+//! the moment each response frame arrives (not when the caller gets
+//! around to `recv()`), which is what `zebra loadgen`'s percentiles
+//! are built from.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::metrics::ClusterStats;
+use super::wire::{self, Frame, FrameType, WireResponse};
+use crate::tensor::Tensor;
+
+/// How long [`ClusterClient::stats`] waits for the router's answer.
+const STATS_WAIT: Duration = Duration::from_secs(5);
+
+/// One answered request: the worker's response plus the client-side
+/// wall latency (submit -> response frame arrival).
+#[derive(Debug, Clone)]
+pub struct ClusterResponse {
+    pub response: WireResponse,
+    pub wall: Duration,
+}
+
+/// What a submit's reply channel delivers: the response, or the
+/// terminal error message (worker/router `Error` frame, lost
+/// connection, unparseable payload).
+pub type Delivery = Result<ClusterResponse, String>;
+
+struct PendingEntry {
+    tx: Sender<Delivery>,
+    sent_at: Instant,
+}
+
+type Waiters = Arc<Mutex<HashMap<u64, PendingEntry>>>;
+type StatsWaiters =
+    Arc<Mutex<HashMap<u64, Sender<Result<ClusterStats, String>>>>>;
+
+/// A connected cluster client.
+pub struct ClusterClient {
+    write: Mutex<TcpStream>,
+    pending: Waiters,
+    pending_stats: StatsWaiters,
+    next_id: AtomicU64,
+    reader: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ClusterClient {
+    pub fn connect(addr: &str) -> Result<ClusterClient> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("cluster client cannot reach {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let rd = stream.try_clone().context("clone client stream")?;
+        let pending: Waiters = Arc::new(Mutex::new(HashMap::new()));
+        let pending_stats: StatsWaiters =
+            Arc::new(Mutex::new(HashMap::new()));
+        let reader = {
+            let pending = pending.clone();
+            let pending_stats = pending_stats.clone();
+            std::thread::spawn(move || {
+                reader_loop(rd, pending, pending_stats)
+            })
+        };
+        Ok(ClusterClient {
+            write: Mutex::new(stream),
+            pending,
+            pending_stats,
+            next_id: AtomicU64::new(0),
+            reader: Some(reader),
+        })
+    }
+
+    /// Submit one `(3, H, W)` image; the shard key defaults to the
+    /// request id (spreads keys uniformly in hash mode).
+    pub fn submit(&self, image: &Tensor) -> Result<Receiver<Delivery>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.submit_inner(image, id, id)
+    }
+
+    /// Submit with an explicit shard key (consistent-hash affinity:
+    /// equal keys land on the same live worker).
+    pub fn submit_keyed(
+        &self,
+        image: &Tensor,
+        key: u64,
+    ) -> Result<Receiver<Delivery>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.submit_inner(image, id, key)
+    }
+
+    fn submit_inner(
+        &self,
+        image: &Tensor,
+        id: u64,
+        key: u64,
+    ) -> Result<Receiver<Delivery>> {
+        let (tx, rx) = channel();
+        self.pending
+            .lock()
+            .unwrap()
+            .insert(id, PendingEntry { tx, sent_at: Instant::now() });
+        let bytes = Frame::new(
+            FrameType::Submit,
+            id,
+            wire::encode_submit(key, image),
+        )
+        .encode();
+        if let Err(e) = self.write.lock().unwrap().write_all(&bytes) {
+            self.pending.lock().unwrap().remove(&id);
+            return Err(anyhow!("cluster submit failed: {e}"));
+        }
+        Ok(rx)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn classify(&self, image: &Tensor) -> Result<ClusterResponse> {
+        let rx = self.submit(image)?;
+        rx.recv()
+            .context("cluster connection dropped the request")?
+            .map_err(|msg| anyhow!("cluster request failed: {msg}"))
+    }
+
+    /// Fetch cluster-wide stats from the router.
+    pub fn stats(&self) -> Result<ClusterStats> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        self.pending_stats.lock().unwrap().insert(id, tx);
+        let bytes =
+            Frame::new(FrameType::MetricsReq, id, Vec::new()).encode();
+        if let Err(e) = self.write.lock().unwrap().write_all(&bytes) {
+            self.pending_stats.lock().unwrap().remove(&id);
+            return Err(anyhow!("cluster stats request failed: {e}"));
+        }
+        rx.recv_timeout(STATS_WAIT)
+            .context("router did not answer the stats request")?
+            .map_err(|msg| anyhow!("cluster stats failed: {msg}"))
+    }
+
+    /// Close the connection; in-flight submits deliver an error.
+    pub fn shutdown(mut self) {
+        self.close();
+        if let Some(h) = self.reader.take() {
+            h.join().ok();
+        }
+    }
+
+    fn close(&self) {
+        let _ = self
+            .write
+            .lock()
+            .unwrap()
+            .shutdown(std::net::Shutdown::Both);
+    }
+}
+
+impl Drop for ClusterClient {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+fn reader_loop(
+    mut stream: TcpStream,
+    pending: Waiters,
+    pending_stats: StatsWaiters,
+) {
+    loop {
+        let frame = match Frame::read_from(&mut stream) {
+            Ok(f) => f,
+            Err(_) => break,
+        };
+        match frame.ty {
+            FrameType::Response => {
+                let entry = pending.lock().unwrap().remove(&frame.id);
+                if let Some(e) = entry {
+                    let wall = e.sent_at.elapsed();
+                    let delivery = WireResponse::parse(&frame.payload)
+                        .map(|response| ClusterResponse { response, wall })
+                        .map_err(|err| err.to_string());
+                    let _ = e.tx.send(delivery);
+                }
+            }
+            FrameType::Error => {
+                let msg = String::from_utf8_lossy(&frame.payload)
+                    .into_owned();
+                let entry = pending.lock().unwrap().remove(&frame.id);
+                if let Some(e) = entry {
+                    let _ = e.tx.send(Err(msg));
+                } else if let Some(tx) =
+                    pending_stats.lock().unwrap().remove(&frame.id)
+                {
+                    let _ = tx.send(Err(msg));
+                }
+            }
+            FrameType::MetricsResp => {
+                let waiter =
+                    pending_stats.lock().unwrap().remove(&frame.id);
+                if let Some(tx) = waiter {
+                    let _ = tx.send(
+                        ClusterStats::parse(&frame.payload)
+                            .map_err(|e| e.to_string()),
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+    // Connection is gone: everything still pending fails loudly.
+    for (_, e) in pending.lock().unwrap().drain() {
+        let _ = e.tx.send(Err("connection to the cluster lost".into()));
+    }
+    for (_, tx) in pending_stats.lock().unwrap().drain() {
+        let _ = tx.send(Err("connection to the cluster lost".into()));
+    }
+}

@@ -1,0 +1,431 @@
+//! Cluster-wide metrics: a wire-portable snapshot of one node's
+//! [`coordinator::Metrics`](crate::coordinator::Metrics) plus the
+//! router's aggregation over every worker.
+//!
+//! The snapshot carries the exact counters the single-node serving
+//! pipeline already maintains — requests/responses/batches, the
+//! Eq. 2–3 byte accounting, shipped `.zspill` bytes — and the full
+//! power-of-two latency histogram, so cluster-level percentiles are
+//! computed from *merged bucket counts*, not averaged per-node
+//! percentiles (averaging percentiles is statistically meaningless).
+//!
+//! Encoding is self-describing the same way `.zspill` is: counter and
+//! bucket counts are declared up front and validated strictly against
+//! the payload length, so a malformed `MetricsResp` errors instead of
+//! panicking.
+
+use std::sync::atomic::Ordering;
+
+use crate::cluster::wire::FrameError;
+use crate::coordinator::metrics::reduction_pct_of;
+use crate::coordinator::{percentile_from_buckets, Metrics};
+
+/// Counter order on the wire (stable; append-only by protocol rule).
+const COUNTERS: usize = 9;
+
+/// One node's serving metrics, frozen for transport and aggregation.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub batches: u64,
+    pub batched_items: u64,
+    pub padded_slots: u64,
+    pub dense_bytes: u64,
+    pub stored_bytes: u64,
+    pub index_bytes: u64,
+    pub shipped_spill_bytes: u64,
+    /// Latency histogram (bucket `i` covers up to `2^i` us).
+    pub latency_buckets: Vec<u64>,
+}
+
+impl MetricsSnapshot {
+    /// Freeze a live [`Metrics`].
+    pub fn from_metrics(m: &Metrics) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: m.requests.load(Ordering::Relaxed),
+            responses: m.responses.load(Ordering::Relaxed),
+            batches: m.batches.load(Ordering::Relaxed),
+            batched_items: m.batched_items.load(Ordering::Relaxed),
+            padded_slots: m.padded_slots.load(Ordering::Relaxed),
+            dense_bytes: m.dense_bytes.load(Ordering::Relaxed),
+            stored_bytes: m.stored_bytes.load(Ordering::Relaxed),
+            index_bytes: m.index_bytes.load(Ordering::Relaxed),
+            shipped_spill_bytes: m.shipped_spill_bytes.load(Ordering::Relaxed),
+            latency_buckets: m.latency_bucket_counts().to_vec(),
+        }
+    }
+
+    fn counters(&self) -> [u64; COUNTERS] {
+        [
+            self.requests,
+            self.responses,
+            self.batches,
+            self.batched_items,
+            self.padded_slots,
+            self.dense_bytes,
+            self.stored_bytes,
+            self.index_bytes,
+            self.shipped_spill_bytes,
+        ]
+    }
+
+    /// Add another node's snapshot into this one (counter sums +
+    /// bucket-wise histogram merge).
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        self.requests += other.requests;
+        self.responses += other.responses;
+        self.batches += other.batches;
+        self.batched_items += other.batched_items;
+        self.padded_slots += other.padded_slots;
+        self.dense_bytes += other.dense_bytes;
+        self.stored_bytes += other.stored_bytes;
+        self.index_bytes += other.index_bytes;
+        self.shipped_spill_bytes += other.shipped_spill_bytes;
+        if self.latency_buckets.len() < other.latency_buckets.len() {
+            self.latency_buckets.resize(other.latency_buckets.len(), 0);
+        }
+        for (a, b) in
+            self.latency_buckets.iter_mut().zip(&other.latency_buckets)
+        {
+            *a += *b;
+        }
+    }
+
+    /// Latency percentile over the (possibly merged) histogram, in us.
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        percentile_from_buckets(&self.latency_buckets, p)
+    }
+
+    /// Eq. 2–3 bandwidth reduction across everything this snapshot
+    /// covers.
+    pub fn reduction_pct(&self) -> f64 {
+        reduction_pct_of(self.dense_bytes, self.stored_bytes, self.index_bytes)
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.batched_items as f64 / self.batches as f64
+    }
+
+    /// Wire encoding: `[n_counters: u16][n_buckets: u16]` then the
+    /// values, all u64 LE.
+    pub fn encode(&self) -> Vec<u8> {
+        let counters = self.counters();
+        let mut out = Vec::with_capacity(
+            4 + 8 * (counters.len() + self.latency_buckets.len()),
+        );
+        out.extend_from_slice(&(counters.len() as u16).to_le_bytes());
+        out.extend_from_slice(
+            &(self.latency_buckets.len() as u16).to_le_bytes(),
+        );
+        for v in counters {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for &v in &self.latency_buckets {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Strict parse of [`MetricsSnapshot::encode`] output.
+    pub fn parse(payload: &[u8]) -> Result<MetricsSnapshot, FrameError> {
+        let (vals, rest) = parse_u64_block(payload)?;
+        if !rest.is_empty() {
+            return Err(FrameError::Malformed(
+                "metrics snapshot has trailing bytes",
+            ));
+        }
+        Self::from_block(&vals)
+    }
+
+    /// Rebuild from a decoded `[counters..][buckets..]` block.
+    fn from_block(vals: &U64Block) -> Result<MetricsSnapshot, FrameError> {
+        if vals.counters.len() != COUNTERS {
+            return Err(FrameError::Malformed(
+                "metrics snapshot counter count mismatch",
+            ));
+        }
+        let c = &vals.counters;
+        Ok(MetricsSnapshot {
+            requests: c[0],
+            responses: c[1],
+            batches: c[2],
+            batched_items: c[3],
+            padded_slots: c[4],
+            dense_bytes: c[5],
+            stored_bytes: c[6],
+            index_bytes: c[7],
+            shipped_spill_bytes: c[8],
+            latency_buckets: vals.buckets.clone(),
+        })
+    }
+}
+
+/// Decoded `[n_counters][n_buckets][values...]` block + what follows.
+struct U64Block {
+    counters: Vec<u64>,
+    buckets: Vec<u64>,
+}
+
+/// Parse one counted u64 block off the front of `payload`; returns the
+/// block and the remaining bytes. Declared counts are bounded (u16)
+/// and validated against the available bytes before any slicing.
+fn parse_u64_block(payload: &[u8]) -> Result<(U64Block, &[u8]), FrameError> {
+    if payload.len() < 4 {
+        return Err(FrameError::Malformed("metrics block too short"));
+    }
+    let n_counters =
+        u16::from_le_bytes([payload[0], payload[1]]) as usize;
+    let n_buckets = u16::from_le_bytes([payload[2], payload[3]]) as usize;
+    // Bucket index i maps to an upper bound of 2^i us; anything past
+    // 63 buckets cannot be a real histogram from any protocol version
+    // and would overflow the percentile shift downstream.
+    if n_counters > 64 || n_buckets > 64 {
+        return Err(FrameError::Malformed(
+            "metrics block declares an absurd counter/bucket count",
+        ));
+    }
+    let need = 4 + 8 * (n_counters + n_buckets);
+    if payload.len() < need {
+        return Err(FrameError::Malformed(
+            "metrics block shorter than its declared counts",
+        ));
+    }
+    let mut vals = payload[4..need].chunks_exact(8).map(|c| {
+        u64::from_le_bytes(c.try_into().expect("8 bytes"))
+    });
+    let counters: Vec<u64> = vals.by_ref().take(n_counters).collect();
+    let buckets: Vec<u64> = vals.collect();
+    Ok((U64Block { counters, buckets }, &payload[need..]))
+}
+
+/// Router-level counters + the cluster-wide aggregate — the
+/// `MetricsResp` payload a router returns to clients (`zebra loadgen`
+/// prints this).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ClusterStats {
+    /// Sum of every reachable worker's snapshot.
+    pub aggregate: MetricsSnapshot,
+    pub workers_total: u64,
+    pub workers_alive: u64,
+    /// Submits the router accepted and dispatched.
+    pub routed: u64,
+    /// Re-dispatches after a worker failure.
+    pub retries: u64,
+    /// Submits rejected (admission limits / no live workers).
+    pub rejected: u64,
+    /// `SpillShip` frames (and their `.zspill` payload bytes) received
+    /// from workers. `spill_bytes_in` matching the aggregate's
+    /// `shipped_spill_bytes` is the cluster-level Eq. 2 cross-check.
+    pub spill_frames_in: u64,
+    pub spill_bytes_in: u64,
+    /// Router-side latency histogram (dispatch -> response).
+    pub router_latency_buckets: Vec<u64>,
+}
+
+impl ClusterStats {
+    pub fn router_percentile_us(&self, p: f64) -> u64 {
+        percentile_from_buckets(&self.router_latency_buckets, p)
+    }
+
+    /// One-line summary for CLIs.
+    pub fn summary(&self) -> String {
+        format!(
+            "workers {}/{} alive | routed={} retries={} rejected={} | \
+             cluster: responses={} mean_batch={:.2} p50={}us p95={}us \
+             p99={}us bw_reduction={:.1}% | spills: shipped={}B \
+             received={}B ({} frames)",
+            self.workers_alive,
+            self.workers_total,
+            self.routed,
+            self.retries,
+            self.rejected,
+            self.aggregate.responses,
+            self.aggregate.mean_batch(),
+            self.aggregate.latency_percentile_us(0.5),
+            self.aggregate.latency_percentile_us(0.95),
+            self.aggregate.latency_percentile_us(0.99),
+            self.aggregate.reduction_pct(),
+            self.aggregate.shipped_spill_bytes,
+            self.spill_bytes_in,
+            self.spill_frames_in,
+        )
+    }
+
+    /// Wire encoding: the aggregate snapshot block, then a second
+    /// counted block of router counters + router latency buckets.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = self.aggregate.encode();
+        let counters = [
+            self.workers_total,
+            self.workers_alive,
+            self.routed,
+            self.retries,
+            self.rejected,
+            self.spill_frames_in,
+            self.spill_bytes_in,
+        ];
+        out.extend_from_slice(&(counters.len() as u16).to_le_bytes());
+        out.extend_from_slice(
+            &(self.router_latency_buckets.len() as u16).to_le_bytes(),
+        );
+        for v in counters {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for &v in &self.router_latency_buckets {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Strict parse of [`ClusterStats::encode`] output.
+    pub fn parse(payload: &[u8]) -> Result<ClusterStats, FrameError> {
+        let (agg, rest) = parse_u64_block(payload)?;
+        let aggregate = MetricsSnapshot::from_block(&agg)?;
+        let (router, tail) = parse_u64_block(rest)?;
+        if !tail.is_empty() {
+            return Err(FrameError::Malformed(
+                "cluster stats have trailing bytes",
+            ));
+        }
+        if router.counters.len() != 7 {
+            return Err(FrameError::Malformed(
+                "cluster stats router counter count mismatch",
+            ));
+        }
+        let c = &router.counters;
+        Ok(ClusterStats {
+            aggregate,
+            workers_total: c[0],
+            workers_alive: c[1],
+            routed: c[2],
+            retries: c[3],
+            rejected: c[4],
+            spill_frames_in: c[5],
+            spill_bytes_in: c[6],
+            router_latency_buckets: router.buckets.clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::LATENCY_BUCKETS;
+
+    fn snap(scale: u64) -> MetricsSnapshot {
+        let mut buckets = vec![0u64; LATENCY_BUCKETS];
+        buckets[7] = 10 * scale; // ~128 us
+        buckets[17] = scale; // ~131 ms
+        MetricsSnapshot {
+            requests: 100 * scale,
+            responses: 99 * scale,
+            batches: 25 * scale,
+            batched_items: 99 * scale,
+            padded_slots: scale,
+            dense_bytes: 1000 * scale,
+            stored_bytes: 400 * scale,
+            index_bytes: 100 * scale,
+            shipped_spill_bytes: 555 * scale,
+            latency_buckets: buckets,
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrips_on_the_wire() {
+        let s = snap(3);
+        let back = MetricsSnapshot::parse(&s.encode()).unwrap();
+        assert_eq!(back, s);
+        // Truncations and trailing garbage error.
+        let bytes = s.encode();
+        for cut in 0..bytes.len() {
+            assert!(MetricsSnapshot::parse(&bytes[..cut]).is_err());
+        }
+        let mut noisy = bytes.clone();
+        noisy.push(0);
+        assert!(MetricsSnapshot::parse(&noisy).is_err());
+    }
+
+    #[test]
+    fn absurd_bucket_counts_are_rejected() {
+        // A well-framed snapshot claiming 65 buckets would map bucket
+        // 64 to 2^64 us — reject it outright (shift-overflow guard).
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&9u16.to_le_bytes());
+        bytes.extend_from_slice(&65u16.to_le_bytes());
+        for _ in 0..(9 + 65) {
+            bytes.extend_from_slice(&1u64.to_le_bytes());
+        }
+        assert!(MetricsSnapshot::parse(&bytes).is_err());
+        // 64 buckets (the cap itself) still parses.
+        let mut ok = Vec::new();
+        ok.extend_from_slice(&9u16.to_le_bytes());
+        ok.extend_from_slice(&64u16.to_le_bytes());
+        for _ in 0..(9 + 64) {
+            ok.extend_from_slice(&1u64.to_le_bytes());
+        }
+        let s = MetricsSnapshot::parse(&ok).unwrap();
+        // And its percentiles stay shift-safe at the top bucket.
+        assert!(s.latency_percentile_us(0.99) > 0);
+    }
+
+    #[test]
+    fn snapshot_freezes_live_metrics() {
+        let m = Metrics::new();
+        m.requests.store(5, Ordering::Relaxed);
+        m.dense_bytes.store(800, Ordering::Relaxed);
+        m.stored_bytes.store(200, Ordering::Relaxed);
+        m.record_latency_us(100);
+        m.record_latency_us(100);
+        let s = MetricsSnapshot::from_metrics(&m);
+        assert_eq!(s.requests, 5);
+        assert_eq!(s.responses, 2);
+        assert_eq!(s.latency_buckets.iter().sum::<u64>(), 2);
+        assert_eq!(
+            s.latency_percentile_us(0.5),
+            m.latency_percentile_us(0.5)
+        );
+        assert!((s.reduction_pct() - m.reduction_pct()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_sums_counters_and_buckets() {
+        let mut a = snap(1);
+        a.merge(&snap(2));
+        assert_eq!(a.requests, 300);
+        assert_eq!(a.shipped_spill_bytes, 555 * 3);
+        assert_eq!(a.latency_buckets[7], 30);
+        assert_eq!(a.latency_buckets[17], 3);
+        // Merged percentiles come from merged buckets: the p99 must
+        // see the slow bucket.
+        assert!(a.latency_percentile_us(0.99) >= 1 << 17);
+        assert!(a.latency_percentile_us(0.5) <= 256);
+        assert!((a.mean_batch() - 99.0 / 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cluster_stats_roundtrip() {
+        let stats = ClusterStats {
+            aggregate: snap(2),
+            workers_total: 3,
+            workers_alive: 2,
+            routed: 123,
+            retries: 4,
+            rejected: 1,
+            spill_frames_in: 9,
+            spill_bytes_in: 555 * 2,
+            router_latency_buckets: vec![1; LATENCY_BUCKETS],
+        };
+        let back = ClusterStats::parse(&stats.encode()).unwrap();
+        assert_eq!(back, stats);
+        let bytes = stats.encode();
+        for cut in 0..bytes.len() {
+            assert!(ClusterStats::parse(&bytes[..cut]).is_err());
+        }
+        assert!(stats.summary().contains("2/3 alive"), "{}", stats.summary());
+        assert!(stats.summary().contains("p95="), "{}", stats.summary());
+    }
+}

@@ -1,0 +1,50 @@
+//! Multi-node Zebra serving over TCP: the coordinator, scaled out.
+//!
+//! The single-process [`coordinator`](crate::coordinator) already
+//! frames executed batches as versioned `.zspill` bytes — "the wire
+//! bytes a multi-node deployment ships between coordinator nodes".
+//! This module is that deployment:
+//!
+//! - [`wire`] — the length-prefixed, versioned, FNV-checksummed frame
+//!   protocol (magic `ZCLU`), carrying Submit / Response / Heartbeat /
+//!   SpillShip / Error / Metrics frames with the same strict
+//!   never-panicking parse guarantees as `.zspill` itself.
+//! - [`worker`] — a [`WorkerNode`]: the coordinator server behind a
+//!   TCP listener, executing on any
+//!   [`BatchExecutor`](crate::coordinator::server::BatchExecutor)
+//!   (reference backend in every build, PJRT under the feature gate),
+//!   optionally shipping its `.zspill` batch frames upstream.
+//! - [`router`] — a [`Router`]: shards client requests across workers
+//!   (round-robin or consistent-hash-by-key), enforces per-worker
+//!   admission limits, retries a failed worker's in-flight requests
+//!   on its peers, and tracks liveness via heartbeats.
+//! - [`client`] — a [`ClusterClient`]: one pipelined connection with
+//!   the same submit/response ergonomics as the in-process server.
+//! - [`metrics`] — wire-portable [`MetricsSnapshot`]s of each node's
+//!   [`coordinator::Metrics`](crate::coordinator::Metrics) and the
+//!   router's cluster-wide [`ClusterStats`] aggregation (histograms
+//!   merged bucket-wise; Eq. 2–3 byte totals summed).
+//!
+//! Zebra's thesis — prune zero blocks so fewer bytes cross the
+//! memory interface — applies one tier up unchanged: the bytes a
+//! worker ships per batch are exactly its `.zspill` frame sizes, so
+//! the cluster's inter-node bandwidth enjoys the same Eq. 2–3 savings
+//! the paper claims for DRAM, and both ends meter it identically.
+//!
+//! Topology, protocol tables, and failover semantics are documented
+//! in `rust/docs/cluster.md`; `zebra cluster-worker`,
+//! `zebra cluster-router`, and `zebra loadgen` are the CLI entry
+//! points. Everything is std threads + channels (tokio is not in the
+//! offline vendor set — DESIGN.md §7), matching the coordinator.
+
+pub mod client;
+pub mod metrics;
+pub mod router;
+pub mod wire;
+pub mod worker;
+
+pub use client::{ClusterClient, ClusterResponse, Delivery};
+pub use metrics::{ClusterStats, MetricsSnapshot};
+pub use router::{Router, RouterConfig, ShardMode};
+pub use wire::{Frame, FrameError, FrameType, WireResponse};
+pub use worker::WorkerNode;

@@ -1,0 +1,805 @@
+//! The router node: accepts client connections, shards `Submit`
+//! frames across N workers, and keeps the cluster serving through
+//! worker failures.
+//!
+//! Sharding modes:
+//! - **round-robin** — spread load evenly; any worker can serve any
+//!   request (the backends are replicas).
+//! - **consistent hash by request key** — a 64-point-per-worker hash
+//!   ring over the `Submit` payload's shard key, so a given key lands
+//!   on a stable worker (cache affinity) and only the keys of a dead
+//!   worker move.
+//!
+//! Reliability mechanics, all on std threads + channels like the
+//! coordinator itself:
+//! - **Admission limits**: at most `max_outstanding` in-flight
+//!   requests per worker; a `Submit` that fits nowhere is rejected
+//!   with an `Error` frame instead of queueing unboundedly.
+//! - **Failover**: every dispatched request is retained (payload +
+//!   reply route) until its response arrives. When a worker
+//!   connection drops — or a worker answers with an `Error` — the
+//!   orphaned requests are re-dispatched on the surviving peers, up
+//!   to `max_attempts` total tries, so killing a worker mid-stream
+//!   loses nothing. Inference is deterministic and side-effect-free,
+//!   so the rare duplicate execution during failover is harmless.
+//! - **Heartbeats**: a probe loop pings every worker, declares
+//!   silent ones dead (draining their in-flight work onto peers), and
+//!   keeps retrying dead workers' addresses so a restarted worker
+//!   rejoins automatically.
+//!
+//! The router also ingests `SpillShip` frames from workers (metering
+//! received `.zspill` bytes — the cluster-level side of the Eq. 2
+//! accounting) and answers `MetricsReq` with cluster-wide
+//! [`ClusterStats`]: every worker's snapshot fetched live, histograms
+//! merged bucket-wise.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::metrics::{ClusterStats, MetricsSnapshot};
+use super::wire::{self, Frame, FrameType};
+use crate::compress::EncodedView;
+use crate::coordinator::Metrics;
+
+/// How often the accept loop polls its shutdown flag.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+/// Virtual points per worker on the consistent-hash ring.
+const RING_POINTS: usize = 64;
+
+/// How long a metrics gather waits per worker.
+const METRICS_WAIT: Duration = Duration::from_secs(2);
+
+/// Request sharding policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardMode {
+    #[default]
+    RoundRobin,
+    /// Consistent hash of the `Submit` shard key.
+    HashKey,
+}
+
+impl ShardMode {
+    pub fn parse(s: &str) -> Result<ShardMode> {
+        match s {
+            "rr" | "round-robin" => Ok(ShardMode::RoundRobin),
+            "hash" | "key-hash" => Ok(ShardMode::HashKey),
+            other => bail!(
+                "unknown shard mode {other:?} (valid: rr, hash)"
+            ),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardMode::RoundRobin => "rr",
+            ShardMode::HashKey => "hash",
+        }
+    }
+}
+
+/// Router configuration.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Worker addresses (`host:port`), fixed for the router's life.
+    pub workers: Vec<String>,
+    pub mode: ShardMode,
+    /// Per-worker in-flight admission limit.
+    pub max_outstanding: usize,
+    /// Heartbeat probe interval (a worker silent for 4 intervals is
+    /// declared dead).
+    pub heartbeat_every: Duration,
+    /// Total dispatch attempts per request before it is rejected.
+    pub max_attempts: usize,
+}
+
+impl RouterConfig {
+    /// Defaults tuned for a small LAN cluster: round-robin, 256
+    /// in-flight per worker, 250 ms heartbeats, and enough attempts to
+    /// try every worker once.
+    pub fn new(workers: Vec<String>) -> RouterConfig {
+        let attempts = workers.len().max(2);
+        RouterConfig {
+            workers,
+            mode: ShardMode::RoundRobin,
+            max_outstanding: 256,
+            heartbeat_every: Duration::from_millis(250),
+            max_attempts: attempts,
+        }
+    }
+}
+
+/// A request the router has dispatched but not yet answered: enough
+/// to re-dispatch it on a peer if the worker dies.
+struct Pending {
+    payload: Vec<u8>,
+    key: u64,
+    /// Dispatches so far (this one included).
+    attempts: usize,
+    sent_at: Instant,
+    client: ClientReply,
+}
+
+/// Where a response (or terminal error) for a request goes: the
+/// originating client connection's writer + the client's own frame id.
+#[derive(Clone)]
+struct ClientReply {
+    tx: Sender<Vec<u8>>,
+    wire_id: u64,
+}
+
+/// Router-side state for one worker.
+struct Link {
+    addr: String,
+    alive: AtomicBool,
+    outstanding: AtomicUsize,
+    /// Writer channel of the current connection (None while dead).
+    out: Mutex<Option<Sender<Vec<u8>>>>,
+    /// A severing handle on the current connection, so fail/shutdown
+    /// unblocks the link reader instead of leaking it.
+    stream: Mutex<Option<TcpStream>>,
+    pending: Mutex<HashMap<u64, Pending>>,
+    pending_metrics: Mutex<HashMap<u64, Sender<MetricsSnapshot>>>,
+    last_seen: Mutex<Instant>,
+}
+
+impl Link {
+    /// Drop the writer channel and sever the TCP connection (if any).
+    fn sever(&self) {
+        *self.out.lock().unwrap() = None;
+        if let Some(s) = self.stream.lock().unwrap().take() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+struct Inner {
+    cfg: RouterConfig,
+    links: Vec<Link>,
+    /// Consistent-hash ring: (point, worker index), sorted by point.
+    ring: Vec<(u64, usize)>,
+    rr: AtomicUsize,
+    next_id: AtomicU64,
+    /// Router-side metrics: `requests` counts accepted client
+    /// submits; the latency histogram measures dispatch -> response.
+    metrics: Metrics,
+    routed: AtomicU64,
+    retries: AtomicU64,
+    rejected: AtomicU64,
+    spill_frames_in: AtomicU64,
+    spill_bytes_in: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+/// A running router node.
+pub struct Router {
+    inner: Arc<Inner>,
+    addr: SocketAddr,
+    accept: Option<std::thread::JoinHandle<()>>,
+    heartbeat: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Router {
+    /// Bind `listen` (e.g. `"127.0.0.1:0"`), connect to the workers
+    /// (failures are tolerated — the heartbeat loop keeps retrying),
+    /// and start serving.
+    pub fn start(cfg: RouterConfig, listen: &str) -> Result<Router> {
+        anyhow::ensure!(
+            !cfg.workers.is_empty(),
+            "router needs at least one worker address"
+        );
+        anyhow::ensure!(cfg.max_outstanding > 0, "max_outstanding must be > 0");
+        anyhow::ensure!(cfg.max_attempts > 0, "max_attempts must be > 0");
+        // A zero interval would busy-spin the probe loop and make the
+        // 4-interval staleness window declare every worker dead.
+        anyhow::ensure!(
+            cfg.heartbeat_every > Duration::ZERO,
+            "heartbeat interval must be positive (--heartbeat-ms >= 1)"
+        );
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("cluster router cannot bind {listen}"))?;
+        let addr = listener.local_addr()?;
+        listener
+            .set_nonblocking(true)
+            .context("router listener nonblocking")?;
+        let links = cfg
+            .workers
+            .iter()
+            .map(|addr| Link {
+                addr: addr.clone(),
+                alive: AtomicBool::new(false),
+                outstanding: AtomicUsize::new(0),
+                out: Mutex::new(None),
+                stream: Mutex::new(None),
+                pending: Mutex::new(HashMap::new()),
+                pending_metrics: Mutex::new(HashMap::new()),
+                last_seen: Mutex::new(Instant::now()),
+            })
+            .collect();
+        let inner = Arc::new(Inner {
+            ring: build_ring(&cfg.workers),
+            cfg,
+            links,
+            rr: AtomicUsize::new(0),
+            next_id: AtomicU64::new(0),
+            metrics: Metrics::new(),
+            routed: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            spill_frames_in: AtomicU64::new(0),
+            spill_bytes_in: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        });
+        for idx in 0..inner.links.len() {
+            if !connect_link(&inner, idx) {
+                eprintln!(
+                    "[cluster-router] worker {} unreachable at startup; \
+                     will keep retrying",
+                    inner.links[idx].addr
+                );
+            }
+        }
+        let accept = {
+            let inner = inner.clone();
+            std::thread::spawn(move || accept_loop(listener, inner))
+        };
+        let heartbeat = {
+            let inner = inner.clone();
+            std::thread::spawn(move || heartbeat_loop(inner))
+        };
+        Ok(Router {
+            inner,
+            addr,
+            accept: Some(accept),
+            heartbeat: Some(heartbeat),
+        })
+    }
+
+    /// The bound listen address (resolves `--port 0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// How many workers currently answer heartbeats.
+    pub fn workers_alive(&self) -> usize {
+        self.inner
+            .links
+            .iter()
+            .filter(|l| l.alive.load(Ordering::SeqCst))
+            .count()
+    }
+
+    /// Cluster-wide stats: every live worker's metrics fetched over
+    /// the wire and merged, plus the router's own counters.
+    pub fn stats(&self) -> ClusterStats {
+        gather_stats(&self.inner)
+    }
+
+    /// Stop serving: closes worker connections and joins the router's
+    /// own loops.
+    pub fn shutdown(mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        for link in &self.inner.links {
+            link.sever();
+        }
+        if let Some(h) = self.heartbeat.take() {
+            h.join().ok();
+        }
+        if let Some(h) = self.accept.take() {
+            h.join().ok();
+        }
+    }
+}
+
+/// 64-bit FNV-1a (the ring wants more than 32 bits of spread).
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn build_ring(workers: &[String]) -> Vec<(u64, usize)> {
+    let mut ring = Vec::with_capacity(workers.len() * RING_POINTS);
+    for (idx, addr) in workers.iter().enumerate() {
+        for v in 0..RING_POINTS {
+            let point = fnv64(format!("{addr}#{v}").as_bytes());
+            ring.push((point, idx));
+        }
+    }
+    ring.sort_unstable();
+    ring
+}
+
+/// Candidate worker order for a request: ring walk for hash mode,
+/// rotated linear scan for round-robin. Every worker appears once.
+fn candidate_order(inner: &Inner, key: u64) -> Vec<usize> {
+    let n = inner.links.len();
+    match inner.cfg.mode {
+        ShardMode::RoundRobin => {
+            let start = inner.rr.fetch_add(1, Ordering::Relaxed) % n;
+            (0..n).map(|i| (start + i) % n).collect()
+        }
+        ShardMode::HashKey => {
+            let h = fnv64(&key.to_le_bytes());
+            let start = inner.ring.partition_point(|&(p, _)| p < h);
+            let mut order = Vec::with_capacity(n);
+            for i in 0..inner.ring.len() {
+                let (_, w) = inner.ring[(start + i) % inner.ring.len()];
+                if !order.contains(&w) {
+                    order.push(w);
+                    if order.len() == n {
+                        break;
+                    }
+                }
+            }
+            order
+        }
+    }
+}
+
+/// Dispatch (or re-dispatch) one request. `attempts` counts prior
+/// dispatches; exceeding the budget — or finding no admissible live
+/// worker — rejects the request back to its client, quoting the last
+/// worker-reported error (if any) so a deterministically-bad request
+/// surfaces its real diagnostic, not just the retry exhaustion.
+fn dispatch(
+    inner: &Arc<Inner>,
+    mut payload: Vec<u8>,
+    key: u64,
+    attempts: usize,
+    client: ClientReply,
+    last_error: Option<String>,
+) {
+    if attempts >= inner.cfg.max_attempts {
+        let msg = match &last_error {
+            Some(e) => format!(
+                "request failed on every attempted worker; last worker \
+                 error: {e}"
+            ),
+            None => "request failed on every attempted worker".to_string(),
+        };
+        reject(inner, &client, &msg);
+        return;
+    }
+    for idx in candidate_order(inner, key) {
+        let link = &inner.links[idx];
+        if !link.alive.load(Ordering::SeqCst)
+            || link.outstanding.load(Ordering::SeqCst)
+                >= inner.cfg.max_outstanding
+        {
+            continue;
+        }
+        let id = inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let frame = Frame::new(FrameType::Submit, id, payload.clone());
+        link.pending.lock().unwrap().insert(
+            id,
+            Pending {
+                payload,
+                key,
+                attempts: attempts + 1,
+                sent_at: Instant::now(),
+                client: client.clone(),
+            },
+        );
+        link.outstanding.fetch_add(1, Ordering::SeqCst);
+        let sent = match &*link.out.lock().unwrap() {
+            Some(tx) => tx.send(frame.encode()).is_ok(),
+            None => false,
+        };
+        if sent {
+            inner.routed.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        // Writer already gone: reclaim the entry (unless a concurrent
+        // fail_link drained it — then the request is already being
+        // re-dispatched and is no longer ours) and probe the next peer.
+        match link.pending.lock().unwrap().remove(&id) {
+            Some(p) => {
+                link.outstanding.fetch_sub(1, Ordering::SeqCst);
+                payload = p.payload;
+            }
+            None => return,
+        }
+    }
+    let msg = match &last_error {
+        Some(e) => format!(
+            "no cluster workers available (dead or at admission limit); \
+             last worker error: {e}"
+        ),
+        None => {
+            "no cluster workers available (dead or at admission limit)"
+                .to_string()
+        }
+    };
+    reject(inner, &client, &msg);
+}
+
+fn reject(inner: &Arc<Inner>, client: &ClientReply, msg: &str) {
+    inner.rejected.fetch_add(1, Ordering::Relaxed);
+    let bytes = Frame::new(
+        FrameType::Error,
+        client.wire_id,
+        msg.as_bytes().to_vec(),
+    )
+    .encode();
+    let _ = client.tx.send(bytes);
+}
+
+/// Open (or reopen) the TCP connection to worker `idx`. Returns false
+/// if the worker is unreachable; the heartbeat loop retries later.
+fn connect_link(inner: &Arc<Inner>, idx: usize) -> bool {
+    let link = &inner.links[idx];
+    let stream = match TcpStream::connect(&link.addr) {
+        Ok(s) => s,
+        Err(_) => return false,
+    };
+    let _ = stream.set_nodelay(true);
+    let rd = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return false,
+    };
+    let (tx, rx) = channel::<Vec<u8>>();
+    *link.out.lock().unwrap() = Some(tx);
+    *link.stream.lock().unwrap() = stream.try_clone().ok();
+    *link.last_seen.lock().unwrap() = Instant::now();
+    link.alive.store(true, Ordering::SeqCst);
+    {
+        let inner = inner.clone();
+        std::thread::spawn(move || {
+            let mut stream = stream;
+            while let Ok(bytes) = rx.recv() {
+                if stream.write_all(&bytes).is_err() {
+                    fail_link(&inner, idx);
+                    break;
+                }
+            }
+        });
+    }
+    {
+        let inner = inner.clone();
+        std::thread::spawn(move || link_reader(inner, idx, rd));
+    }
+    true
+}
+
+/// Declare worker `idx` dead and move its in-flight requests to the
+/// surviving peers. Exactly one caller wins the `alive` swap, so the
+/// drain happens once per failure.
+fn fail_link(inner: &Arc<Inner>, idx: usize) {
+    let link = &inner.links[idx];
+    if !link.alive.swap(false, Ordering::SeqCst) {
+        return;
+    }
+    link.sever();
+    link.pending_metrics.lock().unwrap().clear();
+    let orphans: Vec<Pending> = {
+        let mut pending = link.pending.lock().unwrap();
+        pending.drain().map(|(_, p)| p).collect()
+    };
+    if !orphans.is_empty() {
+        eprintln!(
+            "[cluster-router] worker {} failed with {} in flight; \
+             retrying on peers",
+            link.addr,
+            orphans.len()
+        );
+    }
+    for p in orphans {
+        link.outstanding.fetch_sub(1, Ordering::SeqCst);
+        inner.retries.fetch_add(1, Ordering::Relaxed);
+        dispatch(inner, p.payload, p.key, p.attempts, p.client, None);
+    }
+}
+
+/// Reads worker `idx`'s connection: responses, error replies,
+/// heartbeat echoes, metrics answers. Any stream error fails the link.
+fn link_reader(inner: Arc<Inner>, idx: usize, mut stream: TcpStream) {
+    let link = &inner.links[idx];
+    loop {
+        let frame = match Frame::read_from(&mut stream) {
+            Ok(f) => f,
+            Err(_) => {
+                fail_link(&inner, idx);
+                return;
+            }
+        };
+        *link.last_seen.lock().unwrap() = Instant::now();
+        match frame.ty {
+            FrameType::Response => {
+                let entry = link.pending.lock().unwrap().remove(&frame.id);
+                if let Some(p) = entry {
+                    link.outstanding.fetch_sub(1, Ordering::SeqCst);
+                    inner.metrics.record_latency_us(
+                        p.sent_at.elapsed().as_micros() as u64,
+                    );
+                    let bytes = Frame::new(
+                        FrameType::Response,
+                        p.client.wire_id,
+                        frame.payload,
+                    )
+                    .encode();
+                    let _ = p.client.tx.send(bytes);
+                }
+            }
+            FrameType::Error => {
+                // The worker refused this request (bad image, queue
+                // full, shutting down): try a peer, up to the budget,
+                // carrying the worker's diagnostic along.
+                let entry = link.pending.lock().unwrap().remove(&frame.id);
+                if let Some(p) = entry {
+                    link.outstanding.fetch_sub(1, Ordering::SeqCst);
+                    inner.retries.fetch_add(1, Ordering::Relaxed);
+                    let why = String::from_utf8_lossy(&frame.payload)
+                        .into_owned();
+                    dispatch(
+                        &inner,
+                        p.payload,
+                        p.key,
+                        p.attempts,
+                        p.client,
+                        Some(why),
+                    );
+                }
+            }
+            FrameType::Heartbeat => {}
+            FrameType::MetricsResp => {
+                let waiter =
+                    link.pending_metrics.lock().unwrap().remove(&frame.id);
+                if let Some(tx) = waiter {
+                    if let Ok(snap) = MetricsSnapshot::parse(&frame.payload)
+                    {
+                        let _ = tx.send(snap);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+fn heartbeat_loop(inner: Arc<Inner>) {
+    // Heartbeat ids live outside the request id space entirely (they
+    // are never registered in `pending`).
+    let mut seq = 0u64;
+    while !inner.shutdown.load(Ordering::SeqCst) {
+        for idx in 0..inner.links.len() {
+            let link = &inner.links[idx];
+            if !link.alive.load(Ordering::SeqCst) {
+                connect_link(&inner, idx);
+                continue;
+            }
+            let stale = link.last_seen.lock().unwrap().elapsed()
+                > inner.cfg.heartbeat_every * 4;
+            if stale {
+                fail_link(&inner, idx);
+                continue;
+            }
+            seq += 1;
+            let hb = Frame::new(FrameType::Heartbeat, seq, Vec::new());
+            let ok = match &*link.out.lock().unwrap() {
+                Some(tx) => tx.send(hb.encode()).is_ok(),
+                None => false,
+            };
+            if !ok {
+                fail_link(&inner, idx);
+            }
+        }
+        std::thread::sleep(inner.cfg.heartbeat_every);
+    }
+}
+
+/// Fetch every live worker's metrics snapshot, merge, and attach the
+/// router's own counters.
+fn gather_stats(inner: &Arc<Inner>) -> ClusterStats {
+    let mut waiters = Vec::new();
+    for link in &inner.links {
+        if !link.alive.load(Ordering::SeqCst) {
+            continue;
+        }
+        let id = inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        link.pending_metrics.lock().unwrap().insert(id, tx);
+        let sent = match &*link.out.lock().unwrap() {
+            Some(out) => out
+                .send(Frame::new(FrameType::MetricsReq, id, Vec::new()).encode())
+                .is_ok(),
+            None => false,
+        };
+        if sent {
+            waiters.push(rx);
+        } else {
+            link.pending_metrics.lock().unwrap().remove(&id);
+        }
+    }
+    let mut aggregate = MetricsSnapshot::default();
+    let mut alive = 0u64;
+    for rx in waiters {
+        if let Ok(snap) = rx.recv_timeout(METRICS_WAIT) {
+            aggregate.merge(&snap);
+            alive += 1;
+        }
+    }
+    ClusterStats {
+        aggregate,
+        workers_total: inner.links.len() as u64,
+        workers_alive: alive,
+        routed: inner.routed.load(Ordering::Relaxed),
+        retries: inner.retries.load(Ordering::Relaxed),
+        rejected: inner.rejected.load(Ordering::Relaxed),
+        spill_frames_in: inner.spill_frames_in.load(Ordering::Relaxed),
+        spill_bytes_in: inner.spill_bytes_in.load(Ordering::Relaxed),
+        router_latency_buckets: inner
+            .metrics
+            .latency_bucket_counts()
+            .to_vec(),
+    }
+}
+
+fn accept_loop(listener: TcpListener, inner: Arc<Inner>) {
+    while !inner.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nodelay(true);
+                let inner = inner.clone();
+                std::thread::spawn(move || client_conn(inner, stream));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// One inbound connection: a client submitting requests, a worker
+/// shipping spills, or an operator asking for metrics — the frame
+/// types distinguish them, so one listener serves all three.
+fn client_conn(inner: Arc<Inner>, stream: TcpStream) {
+    let mut rd = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (out_tx, out_rx) = channel::<Vec<u8>>();
+    let writer = std::thread::spawn(move || {
+        let mut stream = stream;
+        while let Ok(bytes) = out_rx.recv() {
+            if stream.write_all(&bytes).is_err() {
+                break;
+            }
+        }
+    });
+    while !inner.shutdown.load(Ordering::SeqCst) {
+        let frame = match Frame::read_from(&mut rd) {
+            Ok(f) => f,
+            Err(e) => {
+                if !e.is_clean_eof() && !inner.shutdown.load(Ordering::SeqCst)
+                {
+                    eprintln!("[cluster-router] closing connection: {e}");
+                }
+                break;
+            }
+        };
+        match frame.ty {
+            FrameType::Submit => {
+                inner.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                let key = match wire::submit_key(&frame.payload) {
+                    Ok(k) => k,
+                    Err(e) => {
+                        let _ = out_tx.send(
+                            Frame::new(
+                                FrameType::Error,
+                                frame.id,
+                                e.to_string().into_bytes(),
+                            )
+                            .encode(),
+                        );
+                        continue;
+                    }
+                };
+                let client =
+                    ClientReply { tx: out_tx.clone(), wire_id: frame.id };
+                dispatch(&inner, frame.payload, key, 0, client, None);
+            }
+            FrameType::Heartbeat => {
+                if out_tx.send(frame.encode()).is_err() {
+                    break;
+                }
+            }
+            FrameType::MetricsReq => {
+                let stats = gather_stats(&inner);
+                let bytes = Frame::new(
+                    FrameType::MetricsResp,
+                    frame.id,
+                    stats.encode(),
+                )
+                .encode();
+                if out_tx.send(bytes).is_err() {
+                    break;
+                }
+            }
+            FrameType::SpillShip => {
+                // A worker shipping an executed batch's `.zspill`. The
+                // payload length is exactly what the worker metered as
+                // shipped_spill_bytes; validate the frame so corrupt
+                // spills are counted as errors, not savings.
+                match EncodedView::parse(&frame.payload) {
+                    Ok(_) => {
+                        inner
+                            .spill_frames_in
+                            .fetch_add(1, Ordering::Relaxed);
+                        inner.spill_bytes_in.fetch_add(
+                            frame.payload.len() as u64,
+                            Ordering::Relaxed,
+                        );
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "[cluster-router] dropping corrupt shipped \
+                             spill: {e}"
+                        );
+                    }
+                }
+            }
+            other => {
+                let msg =
+                    format!("router cannot serve frame type {other:?}");
+                let _ = out_tx.send(
+                    Frame::new(FrameType::Error, frame.id, msg.into_bytes())
+                        .encode(),
+                );
+            }
+        }
+    }
+    drop(out_tx);
+    let _ = writer.join();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_mode_parses() {
+        assert_eq!(ShardMode::parse("rr").unwrap(), ShardMode::RoundRobin);
+        assert_eq!(
+            ShardMode::parse("round-robin").unwrap(),
+            ShardMode::RoundRobin
+        );
+        assert_eq!(ShardMode::parse("hash").unwrap(), ShardMode::HashKey);
+        let err = ShardMode::parse("random").unwrap_err().to_string();
+        assert!(err.contains("rr") && err.contains("hash"), "{err}");
+    }
+
+    #[test]
+    fn ring_is_stable_and_covers_all_workers() {
+        let workers: Vec<String> =
+            (0..5).map(|i| format!("10.0.0.{i}:7000")).collect();
+        let ring = build_ring(&workers);
+        assert_eq!(ring.len(), 5 * RING_POINTS);
+        // Sorted, and every worker contributes points.
+        assert!(ring.windows(2).all(|w| w[0].0 <= w[1].0));
+        for idx in 0..5 {
+            assert!(ring.iter().any(|&(_, w)| w == idx));
+        }
+        // Same input -> same ring (stable placement across restarts).
+        assert_eq!(ring, build_ring(&workers));
+    }
+
+    #[test]
+    fn router_wont_start_without_workers() {
+        assert!(
+            Router::start(RouterConfig::new(Vec::new()), "127.0.0.1:0")
+                .is_err()
+        );
+    }
+}

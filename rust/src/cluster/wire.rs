@@ -1,0 +1,633 @@
+//! The cluster wire protocol: length-prefixed, versioned, checksummed
+//! frames over TCP — the `.zspill` header discipline (`compress`,
+//! `rust/docs/zspill.md`) applied one tier up, to the bytes cluster
+//! nodes exchange.
+//!
+//! Frame layout (all integers little-endian; table in
+//! `rust/docs/cluster.md`):
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  "ZCLU"
+//! 4       2     version (1)
+//! 6       2     frame type (FrameType)
+//! 8       8     request id (client-chosen; echoed on responses)
+//! 16      4     FNV-1a checksum of the whole frame, this field zeroed
+//! 20      8     payload length
+//! 28      ...   payload
+//! ```
+//!
+//! Parsing guarantees mirror `.zspill`: strictly bounds-checked, the
+//! declared payload length is capped at [`MAX_PAYLOAD`] *before* any
+//! allocation, the checksum (same FNV-1a bijection argument as the
+//! spill codec's) catches every single-bit corruption, and every
+//! malformed input returns a [`FrameError`] — [`Frame::parse`] and
+//! [`Frame::read_from`] never panic. Fuzz tests below drive
+//! truncation, bit flips, wrong frame types, and absurd length
+//! prefixes through both entry points.
+//!
+//! Payload conventions:
+//! - `Submit`: an 8-byte shard key followed by a dense `.zspill` frame
+//!   of the `(3, H, W)` image ([`encode_submit`] / [`parse_submit`]) —
+//!   image bytes cross the wire in the same self-describing format
+//!   spills do.
+//! - `Response`: a packed [`WireResponse`] ([`WireResponse::encode`]).
+//! - `Error`: UTF-8 message.
+//! - `Heartbeat`: empty; the receiver echoes the frame back verbatim.
+//! - `SpillShip`: a raw `.zspill` frame — a worker's executed batch,
+//!   shipped upstream. The payload length is exactly the
+//!   `shipped_spill_bytes` the worker metered for it.
+//! - `MetricsReq` / `MetricsResp`: empty request; the response payload
+//!   is a [`super::metrics::MetricsSnapshot`] (worker) or
+//!   [`super::metrics::ClusterStats`] (router).
+
+use std::io::{Read, Write};
+
+use crate::compress::{self, fnv1a, Codec, DenseCodec, FNV_SEED};
+use crate::tensor::Tensor;
+
+/// Cluster frame magic.
+pub const CLUSTER_MAGIC: [u8; 4] = *b"ZCLU";
+
+/// Wire protocol version spoken by this build.
+pub const CLUSTER_VERSION: u16 = 1;
+
+/// Fixed header length in bytes.
+pub const HDR_LEN: usize = 28;
+
+/// Byte offset of the checksum field inside the header.
+const CK_OFF: usize = 16;
+
+/// Hard cap on a frame's declared payload length: nothing a node ever
+/// legitimately ships (images, batch spills, metrics) approaches this,
+/// and capping *before* allocation means a hostile length prefix can
+/// never balloon memory.
+pub const MAX_PAYLOAD: usize = 1 << 26; // 64 MiB
+
+/// Frame kinds carried on cluster connections.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u16)]
+pub enum FrameType {
+    /// Client/router -> worker: classify one image.
+    Submit = 0,
+    /// Worker/router -> client: the answer for a `Submit`'s id.
+    Response = 1,
+    /// Liveness probe; echoed back verbatim by the receiver.
+    Heartbeat = 2,
+    /// Worker -> upstream: one executed batch's `.zspill` frame.
+    SpillShip = 3,
+    /// Terminal failure for the id (message in the payload).
+    Error = 4,
+    /// Ask a node for its metrics.
+    MetricsReq = 5,
+    /// Metrics answer (snapshot or cluster-wide stats).
+    MetricsResp = 6,
+}
+
+impl FrameType {
+    pub fn as_u16(self) -> u16 {
+        self as u16
+    }
+
+    pub fn from_u16(v: u16) -> Option<FrameType> {
+        match v {
+            0 => Some(FrameType::Submit),
+            1 => Some(FrameType::Response),
+            2 => Some(FrameType::Heartbeat),
+            3 => Some(FrameType::SpillShip),
+            4 => Some(FrameType::Error),
+            5 => Some(FrameType::MetricsReq),
+            6 => Some(FrameType::MetricsResp),
+            _ => None,
+        }
+    }
+}
+
+/// One wire frame: type + request id + payload bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    pub ty: FrameType,
+    pub id: u64,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn new(ty: FrameType, id: u64, payload: Vec<u8>) -> Frame {
+        Frame { ty, id, payload }
+    }
+
+    /// Serialize: header (checksum backfilled) + payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HDR_LEN + self.payload.len());
+        out.extend_from_slice(&CLUSTER_MAGIC);
+        out.extend_from_slice(&CLUSTER_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.ty.as_u16().to_le_bytes());
+        out.extend_from_slice(&self.id.to_le_bytes());
+        out.extend_from_slice(&0u32.to_le_bytes()); // checksum backfill
+        out.extend_from_slice(&(self.payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        let ck = frame_checksum(&out);
+        out[CK_OFF..CK_OFF + 4].copy_from_slice(&ck.to_le_bytes());
+        out
+    }
+
+    /// Parse exactly one frame from `bytes` (trailing bytes are an
+    /// error). Never panics; never allocates from unverified lengths.
+    pub fn parse(bytes: &[u8]) -> Result<Frame, FrameError> {
+        let have = bytes.len();
+        if have < HDR_LEN {
+            return Err(FrameError::Truncated { need: HDR_LEN, have });
+        }
+        let mut hdr = [0u8; HDR_LEN];
+        hdr.copy_from_slice(&bytes[..HDR_LEN]);
+        let (ty, id, payload_len) = validate_header(&hdr)?;
+        let declared = HDR_LEN as u64 + payload_len as u64;
+        if declared != have as u64 {
+            return Err(FrameError::SectionMismatch {
+                declared,
+                have: have as u64,
+            });
+        }
+        check_checksum(&hdr, &bytes[HDR_LEN..])?;
+        Ok(Frame { ty, id, payload: bytes[HDR_LEN..].to_vec() })
+    }
+
+    /// Read one frame off a stream. Truncated streams, bad headers,
+    /// oversized length prefixes, and checksum mismatches all return
+    /// errors — a peer can close or corrupt the connection at any byte
+    /// without ever panicking this side.
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Frame, FrameError> {
+        let mut hdr = [0u8; HDR_LEN];
+        r.read_exact(&mut hdr).map_err(FrameError::Io)?;
+        let (ty, id, payload_len) = validate_header(&hdr)?;
+        let mut payload = vec![0u8; payload_len];
+        r.read_exact(&mut payload).map_err(FrameError::Io)?;
+        check_checksum(&hdr, &payload)?;
+        Ok(Frame { ty, id, payload })
+    }
+
+    /// Write the encoded frame to a stream.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        w.write_all(&self.encode())
+    }
+}
+
+/// Validate the fixed header; returns (type, id, payload_len) with the
+/// payload length already capped at [`MAX_PAYLOAD`].
+fn validate_header(
+    hdr: &[u8; HDR_LEN],
+) -> Result<(FrameType, u64, usize), FrameError> {
+    if hdr[0..4] != CLUSTER_MAGIC {
+        return Err(FrameError::BadMagic([hdr[0], hdr[1], hdr[2], hdr[3]]));
+    }
+    let version = u16::from_le_bytes([hdr[4], hdr[5]]);
+    if version != CLUSTER_VERSION {
+        return Err(FrameError::BadVersion(version));
+    }
+    let ty_raw = u16::from_le_bytes([hdr[6], hdr[7]]);
+    let ty = FrameType::from_u16(ty_raw)
+        .ok_or(FrameError::BadFrameType(ty_raw))?;
+    let id = u64::from_le_bytes(hdr[8..16].try_into().expect("8 bytes"));
+    let payload_len =
+        u64::from_le_bytes(hdr[20..28].try_into().expect("8 bytes"));
+    if payload_len > MAX_PAYLOAD as u64 {
+        return Err(FrameError::Oversized { declared: payload_len });
+    }
+    Ok((ty, id, payload_len as usize))
+}
+
+/// Frame checksum: FNV-1a over header (checksum field zeroed) +
+/// payload — the same discipline `.zspill` uses, with the same
+/// single-bit-corruption detection argument.
+fn frame_checksum(frame: &[u8]) -> u32 {
+    let h = fnv1a(FNV_SEED, &frame[..CK_OFF]);
+    let h = fnv1a(h, &[0u8; 4]);
+    fnv1a(h, &frame[CK_OFF + 4..])
+}
+
+fn check_checksum(
+    hdr: &[u8; HDR_LEN],
+    payload: &[u8],
+) -> Result<(), FrameError> {
+    let stored =
+        u32::from_le_bytes(hdr[CK_OFF..CK_OFF + 4].try_into().unwrap());
+    let h = fnv1a(FNV_SEED, &hdr[..CK_OFF]);
+    let h = fnv1a(h, &[0u8; 4]);
+    let h = fnv1a(h, &hdr[CK_OFF + 4..]);
+    let computed = fnv1a(h, payload);
+    if stored != computed {
+        return Err(FrameError::Checksum { stored, computed });
+    }
+    Ok(())
+}
+
+/// Cluster frame failure. Every variant is terminal for the frame; IO
+/// variants are usually terminal for the connection.
+#[derive(Debug)]
+pub enum FrameError {
+    /// The underlying stream failed (includes EOF mid-frame).
+    Io(std::io::Error),
+    /// A whole-buffer parse was handed fewer bytes than a header.
+    Truncated { need: usize, have: usize },
+    BadMagic([u8; 4]),
+    BadVersion(u16),
+    BadFrameType(u16),
+    /// Declared payload length exceeds [`MAX_PAYLOAD`].
+    Oversized { declared: u64 },
+    /// Whole-buffer parse where declared length != buffer length.
+    SectionMismatch { declared: u64, have: u64 },
+    Checksum { stored: u32, computed: u32 },
+    /// The frame was well-formed but its payload wasn't (bad submit
+    /// image, short response, inconsistent metrics block).
+    Malformed(&'static str),
+}
+
+impl FrameError {
+    /// True when the error is a clean end-of-stream before any header
+    /// byte arrived — an orderly peer disconnect, not corruption.
+    pub fn is_clean_eof(&self) -> bool {
+        matches!(self, FrameError::Io(e)
+            if e.kind() == std::io::ErrorKind::UnexpectedEof)
+    }
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "cluster frame io: {e}"),
+            FrameError::Truncated { need, have } => write!(
+                f,
+                "cluster frame truncated: need {need} bytes, have {have}"
+            ),
+            FrameError::BadMagic(m) => {
+                write!(f, "cluster frame bad magic {m:02x?} (want \"ZCLU\")")
+            }
+            FrameError::BadVersion(v) => write!(
+                f,
+                "cluster frame version {v} (this build speaks \
+                 {CLUSTER_VERSION})"
+            ),
+            FrameError::BadFrameType(t) => {
+                write!(f, "cluster frame unknown type {t}")
+            }
+            FrameError::Oversized { declared } => write!(
+                f,
+                "cluster frame declares {declared} payload bytes (cap \
+                 {MAX_PAYLOAD})"
+            ),
+            FrameError::SectionMismatch { declared, have } => write!(
+                f,
+                "cluster frame declares {declared} bytes, buffer has {have}"
+            ),
+            FrameError::Checksum { stored, computed } => write!(
+                f,
+                "cluster frame checksum mismatch: stored {stored:#010x}, \
+                 computed {computed:#010x}"
+            ),
+            FrameError::Malformed(why) => {
+                write!(f, "cluster frame malformed payload: {why}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+// ---------------------------------------------------------------------
+// Submit payload: shard key + dense .zspill image
+// ---------------------------------------------------------------------
+
+/// Encode a `Submit` payload: the 8-byte shard key, then the image as
+/// a dense `.zspill` frame.
+pub fn encode_submit(key: u64, image: &Tensor) -> Vec<u8> {
+    let spill = DenseCodec.encode(image).to_bytes();
+    let mut out = Vec::with_capacity(8 + spill.len());
+    out.extend_from_slice(&key.to_le_bytes());
+    out.extend_from_slice(&spill);
+    out
+}
+
+/// Read just the shard key off a `Submit` payload — the router's
+/// fast path: sharding must not pay for an image decode.
+pub fn submit_key(payload: &[u8]) -> Result<u64, FrameError> {
+    if payload.len() < 8 {
+        return Err(FrameError::Malformed("submit payload shorter than key"));
+    }
+    Ok(u64::from_le_bytes(payload[..8].try_into().expect("8 bytes")))
+}
+
+/// Decode a `Submit` payload into (shard key, image). The embedded
+/// `.zspill` goes through the strict `compress` parser, so a corrupt
+/// or adversarial image section errors instead of panicking.
+pub fn parse_submit(payload: &[u8]) -> Result<(u64, Tensor), FrameError> {
+    if payload.len() < 8 {
+        return Err(FrameError::Malformed("submit payload shorter than key"));
+    }
+    let key = u64::from_le_bytes(payload[..8].try_into().expect("8 bytes"));
+    let image = compress::decode_frame(&payload[8..])
+        .map_err(|_| FrameError::Malformed("submit image is not a valid .zspill"))?;
+    Ok((key, image))
+}
+
+// ---------------------------------------------------------------------
+// Response payload
+// ---------------------------------------------------------------------
+
+/// The packed `Response` payload — everything
+/// [`crate::coordinator::server::Response`] carries, minus the id
+/// (frame header) and the reply channel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireResponse {
+    pub predicted: u32,
+    pub dense_bytes: u64,
+    pub stored_bytes: u64,
+    pub index_bytes: u64,
+    pub spill_frame_bytes: u64,
+    /// Worker-side latency (enqueue -> response) in microseconds.
+    pub latency_us: u64,
+    pub logits: Vec<f32>,
+}
+
+impl WireResponse {
+    /// Build from a coordinator response.
+    pub fn from_response(
+        r: &crate::coordinator::server::Response,
+    ) -> WireResponse {
+        WireResponse {
+            predicted: r.predicted as u32,
+            dense_bytes: r.dense_bytes,
+            stored_bytes: r.stored_bytes,
+            index_bytes: r.index_bytes,
+            spill_frame_bytes: r.spill_frame_bytes,
+            latency_us: r.latency.as_micros() as u64,
+            logits: r.logits.clone(),
+        }
+    }
+
+    /// Eq. 2–3 reduction for this response.
+    pub fn reduction_pct(&self) -> f64 {
+        crate::coordinator::metrics::reduction_pct_of(
+            self.dense_bytes,
+            self.stored_bytes,
+            self.index_bytes,
+        )
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(48 + 4 * self.logits.len());
+        out.extend_from_slice(&self.predicted.to_le_bytes());
+        out.extend_from_slice(&self.dense_bytes.to_le_bytes());
+        out.extend_from_slice(&self.stored_bytes.to_le_bytes());
+        out.extend_from_slice(&self.index_bytes.to_le_bytes());
+        out.extend_from_slice(&self.spill_frame_bytes.to_le_bytes());
+        out.extend_from_slice(&self.latency_us.to_le_bytes());
+        out.extend_from_slice(&(self.logits.len() as u32).to_le_bytes());
+        for &v in &self.logits {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Strict parse: the declared logit count must match the remaining
+    /// bytes exactly.
+    pub fn parse(payload: &[u8]) -> Result<WireResponse, FrameError> {
+        const FIXED: usize = 4 + 5 * 8 + 4;
+        if payload.len() < FIXED {
+            return Err(FrameError::Malformed("response payload too short"));
+        }
+        let u64_at = |off: usize| {
+            u64::from_le_bytes(payload[off..off + 8].try_into().expect("8"))
+        };
+        let predicted =
+            u32::from_le_bytes(payload[0..4].try_into().expect("4"));
+        let n_logits =
+            u32::from_le_bytes(payload[44..48].try_into().expect("4"))
+                as usize;
+        let rest = &payload[FIXED..];
+        if n_logits.checked_mul(4) != Some(rest.len()) {
+            return Err(FrameError::Malformed(
+                "response logit count disagrees with payload length",
+            ));
+        }
+        let logits = rest
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(WireResponse {
+            predicted,
+            dense_bytes: u64_at(4),
+            stored_bytes: u64_at(12),
+            index_bytes: u64_at(20),
+            spill_frame_bytes: u64_at(28),
+            latency_us: u64_at(36),
+            logits,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop::{forall, Config};
+
+    fn sample_frame(rng: &mut Rng) -> Frame {
+        let ty = [
+            FrameType::Submit,
+            FrameType::Response,
+            FrameType::Heartbeat,
+            FrameType::SpillShip,
+            FrameType::Error,
+            FrameType::MetricsReq,
+            FrameType::MetricsResp,
+        ][rng.range(0, 6)];
+        let n = rng.range(0, 96);
+        let payload = (0..n).map(|_| rng.below(256) as u8).collect();
+        Frame::new(ty, rng.next_u64(), payload)
+    }
+
+    #[test]
+    fn roundtrips_through_parse_and_read_from() {
+        forall(Config::cases(60), |rng| {
+            let f = sample_frame(rng);
+            let bytes = f.encode();
+            assert_eq!(Frame::parse(&bytes).unwrap(), f);
+            let mut cursor = std::io::Cursor::new(bytes.clone());
+            assert_eq!(Frame::read_from(&mut cursor).unwrap(), f);
+            // Two frames back to back stream cleanly.
+            let g = sample_frame(rng);
+            let mut two = f.encode();
+            two.extend_from_slice(&g.encode());
+            let mut cursor = std::io::Cursor::new(two);
+            assert_eq!(Frame::read_from(&mut cursor).unwrap(), f);
+            assert_eq!(Frame::read_from(&mut cursor).unwrap(), g);
+        });
+    }
+
+    #[test]
+    fn truncations_error_never_panic() {
+        // Exhaustive prefix sweep on one frame through both parsers.
+        let f = Frame::new(FrameType::Submit, 7, vec![1, 2, 3, 4, 5]);
+        let bytes = f.encode();
+        for cut in 0..bytes.len() {
+            assert!(
+                Frame::parse(&bytes[..cut]).is_err(),
+                "prefix of {cut} bytes must not parse"
+            );
+            let mut cursor = std::io::Cursor::new(bytes[..cut].to_vec());
+            assert!(
+                Frame::read_from(&mut cursor).is_err(),
+                "stream cut at {cut} bytes must error"
+            );
+        }
+        // Random truncations of random frames.
+        forall(Config::cases(40), |rng| {
+            let bytes = sample_frame(rng).encode();
+            let cut = rng.range(0, bytes.len() - 1);
+            assert!(Frame::parse(&bytes[..cut]).is_err());
+            let mut cursor = std::io::Cursor::new(bytes[..cut].to_vec());
+            assert!(Frame::read_from(&mut cursor).is_err());
+        });
+    }
+
+    #[test]
+    fn single_bit_flips_are_always_detected() {
+        forall(Config::cases(120), |rng| {
+            let mut bytes = sample_frame(rng).encode();
+            let pos = rng.range(0, bytes.len() - 1);
+            let bit = rng.range(0, 7);
+            bytes[pos] ^= 1 << bit;
+            assert!(
+                Frame::parse(&bytes).is_err(),
+                "bit flip at byte {pos} bit {bit} went undetected"
+            );
+            let mut cursor = std::io::Cursor::new(bytes);
+            assert!(Frame::read_from(&mut cursor).is_err());
+        });
+    }
+
+    #[test]
+    fn wrong_frame_type_errors() {
+        let mut bytes =
+            Frame::new(FrameType::Heartbeat, 1, Vec::new()).encode();
+        bytes[6..8].copy_from_slice(&99u16.to_le_bytes());
+        assert!(matches!(
+            Frame::parse(&bytes),
+            Err(FrameError::BadFrameType(99))
+        ));
+        // A valid-but-different type is caught by the checksum.
+        let mut bytes =
+            Frame::new(FrameType::Heartbeat, 1, Vec::new()).encode();
+        bytes[6] = FrameType::Submit.as_u16() as u8;
+        assert!(Frame::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn oversized_length_prefix_errors_before_allocating() {
+        let mut bytes = Frame::new(FrameType::Submit, 1, vec![0; 8]).encode();
+        bytes[20..28].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(
+            Frame::parse(&bytes),
+            Err(FrameError::Oversized { .. })
+        ));
+        // Through the streaming path too: the header alone declares an
+        // absurd payload; read_from must reject it without trying to
+        // read (or allocate) those bytes.
+        let mut cursor = std::io::Cursor::new(bytes[..HDR_LEN].to_vec());
+        assert!(matches!(
+            Frame::read_from(&mut cursor),
+            Err(FrameError::Oversized { .. })
+        ));
+        // Just over the cap is rejected; the cap itself is a length
+        // check, not a checksum failure.
+        let mut bytes = Frame::new(FrameType::Submit, 1, vec![0; 8]).encode();
+        bytes[20..28]
+            .copy_from_slice(&((MAX_PAYLOAD as u64) + 1).to_le_bytes());
+        let mut cursor = std::io::Cursor::new(bytes[..HDR_LEN].to_vec());
+        assert!(matches!(
+            Frame::read_from(&mut cursor),
+            Err(FrameError::Oversized { .. })
+        ));
+    }
+
+    #[test]
+    fn foreign_magic_and_versions_error() {
+        let good = Frame::new(FrameType::Submit, 3, vec![9; 4]).encode();
+        let mut b = good.clone();
+        b[0..4].copy_from_slice(b"ZSPL"); // a spill is not a cluster frame
+        assert!(matches!(Frame::parse(&b), Err(FrameError::BadMagic(_))));
+        let mut b = good.clone();
+        b[4..6].copy_from_slice(&9u16.to_le_bytes());
+        assert!(matches!(Frame::parse(&b), Err(FrameError::BadVersion(9))));
+        assert!(Frame::parse(&[]).is_err());
+        // Trailing bytes after a complete frame are an error for the
+        // whole-buffer parser.
+        let mut b = good.clone();
+        b.push(0);
+        assert!(matches!(
+            Frame::parse(&b),
+            Err(FrameError::SectionMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn clean_eof_is_distinguishable() {
+        let mut cursor = std::io::Cursor::new(Vec::<u8>::new());
+        let err = Frame::read_from(&mut cursor).unwrap_err();
+        assert!(err.is_clean_eof(), "{err}");
+        let err = Frame::parse(&[1, 2, 3]).unwrap_err();
+        assert!(!err.is_clean_eof());
+    }
+
+    #[test]
+    fn submit_payload_roundtrips_and_rejects_corruption() {
+        let mut rng = Rng::new(17);
+        let img = Tensor::from_vec(
+            &[3, 4, 4],
+            (0..48).map(|_| rng.normal()).collect(),
+        );
+        let payload = encode_submit(0xDEAD_BEEF, &img);
+        let (key, back) = parse_submit(&payload).unwrap();
+        assert_eq!(key, 0xDEAD_BEEF);
+        assert_eq!(back, img);
+        // Too short for the key.
+        assert!(parse_submit(&payload[..4]).is_err());
+        // Corrupt embedded spill.
+        let mut bad = payload.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x40;
+        assert!(parse_submit(&bad).is_err());
+        // Truncated embedded spill.
+        assert!(parse_submit(&payload[..payload.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn response_payload_roundtrips_strictly() {
+        let r = WireResponse {
+            predicted: 3,
+            dense_bytes: 1000,
+            stored_bytes: 400,
+            index_bytes: 50,
+            spill_frame_bytes: 777,
+            latency_us: 1234,
+            logits: vec![0.25, -1.5, 3.0, 0.0],
+        };
+        let payload = r.encode();
+        assert_eq!(WireResponse::parse(&payload).unwrap(), r);
+        assert!((r.reduction_pct() - 55.0).abs() < 1e-9);
+        // Every truncation errors.
+        for cut in 0..payload.len() {
+            assert!(
+                WireResponse::parse(&payload[..cut]).is_err(),
+                "cut {cut}"
+            );
+        }
+        // A lying logit count errors.
+        let mut bad = payload.clone();
+        bad[44..48].copy_from_slice(&999u32.to_le_bytes());
+        assert!(WireResponse::parse(&bad).is_err());
+        // Empty logits are legal (an error-shaped response).
+        let e = WireResponse { logits: Vec::new(), ..r };
+        assert_eq!(WireResponse::parse(&e.encode()).unwrap(), e);
+    }
+}

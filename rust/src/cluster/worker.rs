@@ -1,0 +1,374 @@
+//! A worker node: the single-process [`coordinator::Server`] wrapped
+//! behind a TCP listener speaking the [`super::wire`] protocol.
+//!
+//! One `WorkerNode` owns one coordinator server (dynamic batcher +
+//! executor threads over any [`BatchExecutor`]) and any number of
+//! inbound connections — a router, several routers, or bare clients.
+//! Each connection is two threads (reader + writer) plus one response
+//! pump that funnels every coordinator reply for that connection
+//! through [`Server::submit_routed`]'s multiplexed channel, so a
+//! connection's requests are pipelined without a thread per request.
+//!
+//! With spill shipping configured ([`ShipSpills`] + an upstream
+//! address), the coordinator's workers hand each executed batch's
+//! `.zspill` frame to an upstream pump that ships it as a `SpillShip`
+//! wire frame — the distributed analogue of the paper's DRAM-bandwidth
+//! accounting, metered identically on both ends.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::metrics::MetricsSnapshot;
+use super::wire::{self, Frame, FrameType, WireResponse};
+use crate::coordinator::server::{BatchExecutor, Response};
+use crate::coordinator::{Metrics, Server, ServerConfig};
+
+/// How often the accept loop polls its shutdown flag.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+/// Reconnect backoff for the upstream spill pump.
+const UPSTREAM_RETRY: Duration = Duration::from_millis(200);
+
+/// Live connection handles (clones keyed by a connection id), so
+/// `kill` can sever them; each entry is pruned when its connection's
+/// reader exits, so long-lived nodes don't accumulate dead fds.
+type ConnTable = Arc<Mutex<Vec<(u64, TcpStream)>>>;
+
+/// A running worker node.
+pub struct WorkerNode {
+    server: Arc<Server>,
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    conns: ConnTable,
+}
+
+impl WorkerNode {
+    /// Build the coordinator server from an executor and expose it on
+    /// `listen` (e.g. `"127.0.0.1:0"` for an ephemeral port — read the
+    /// bound address back with [`WorkerNode::local_addr`]).
+    ///
+    /// `ship_upstream` names a peer (normally the router) that receives
+    /// every executed batch's `.zspill` frame as a `SpillShip` wire
+    /// frame; it requires `server_cfg.ship_spills` to be set.
+    pub fn start(
+        exec: Arc<dyn BatchExecutor>,
+        listen: &str,
+        mut server_cfg: ServerConfig,
+        ship_upstream: Option<String>,
+    ) -> Result<WorkerNode> {
+        let upstream = match ship_upstream {
+            Some(addr) => {
+                anyhow::ensure!(
+                    server_cfg.ship_spills.is_some(),
+                    "--ship-upstream needs spill shipping configured \
+                     (ship_spills / --ship-codec)"
+                );
+                let (tx, rx) = channel::<Vec<u8>>();
+                server_cfg.spill_sink = Some(tx);
+                Some((addr, rx))
+            }
+            None => None,
+        };
+        let hw = exec.image_hw();
+        let server = Arc::new(Server::start(exec, server_cfg));
+        Self::attach(server, hw, listen, upstream)
+    }
+
+    /// Expose an already-started coordinator server over TCP (`zebra
+    /// serve --port` uses this: same server, network front optional).
+    /// `upstream` pairs a destination address with the receiving end
+    /// of the server's `spill_sink` channel.
+    pub fn attach(
+        server: Arc<Server>,
+        image_hw: usize,
+        listen: &str,
+        upstream: Option<(String, Receiver<Vec<u8>>)>,
+    ) -> Result<WorkerNode> {
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("cluster worker cannot bind {listen}"))?;
+        let addr = listener.local_addr()?;
+        listener
+            .set_nonblocking(true)
+            .context("worker listener nonblocking")?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Mutex::new(Vec::new()));
+        if let Some((peer, rx)) = upstream {
+            let sd = shutdown.clone();
+            std::thread::spawn(move || upstream_pump(peer, rx, sd));
+        }
+        let accept = {
+            let server = server.clone();
+            let sd = shutdown.clone();
+            let conns = conns.clone();
+            std::thread::spawn(move || {
+                accept_loop(listener, server, image_hw, sd, conns)
+            })
+        };
+        Ok(WorkerNode {
+            server,
+            addr,
+            shutdown,
+            accept: Some(accept),
+            conns,
+        })
+    }
+
+    /// The bound listen address (resolves `--port 0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// This node's live serving metrics.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.server.metrics.clone()
+    }
+
+    /// The wrapped coordinator server.
+    pub fn server(&self) -> &Server {
+        &self.server
+    }
+
+    /// Abrupt stop, usable from a shared reference: stop accepting,
+    /// close the coordinator intake, and sever every open connection
+    /// mid-stream. Peers observe an EOF/reset — this is what the
+    /// failover tests use to "kill" a worker.
+    pub fn kill(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.server.close();
+        for (_, c) in self.conns.lock().unwrap().drain(..) {
+            let _ = c.shutdown(std::net::Shutdown::Both);
+        }
+    }
+
+    /// Graceful stop: [`WorkerNode::kill`] + join the accept loop.
+    pub fn shutdown(mut self) {
+        self.kill();
+        if let Some(h) = self.accept.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for WorkerNode {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.server.close();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    server: Arc<Server>,
+    image_hw: usize,
+    shutdown: Arc<AtomicBool>,
+    conns: ConnTable,
+) {
+    let mut next_conn = 0u64;
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nodelay(true);
+                let conn_id = next_conn;
+                next_conn += 1;
+                if let Ok(clone) = stream.try_clone() {
+                    conns.lock().unwrap().push((conn_id, clone));
+                }
+                let server = server.clone();
+                let sd = shutdown.clone();
+                let conns = conns.clone();
+                std::thread::spawn(move || {
+                    serve_conn(server, image_hw, stream, sd);
+                    // The connection is over: drop our severing handle
+                    // so long-lived nodes don't accumulate dead fds.
+                    conns.lock().unwrap().retain(|(id, _)| *id != conn_id);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// One connection: reader (this thread) + writer thread + response
+/// pump thread. The pump owns the coordinator-id -> wire-id map shared
+/// with the reader; holding its lock across `submit_routed` closes the
+/// insert/response race for even the fastest executor.
+fn serve_conn(
+    server: Arc<Server>,
+    image_hw: usize,
+    stream: TcpStream,
+    shutdown: Arc<AtomicBool>,
+) {
+    let mut rd = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (out_tx, out_rx) = channel::<Vec<u8>>();
+    let writer = std::thread::spawn(move || writer_loop(stream, out_rx));
+    let idmap: Arc<Mutex<HashMap<u64, u64>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    let (resp_tx, resp_rx) = channel::<Response>();
+    let pump = {
+        let idmap = idmap.clone();
+        let out_tx = out_tx.clone();
+        std::thread::spawn(move || response_pump(resp_rx, idmap, out_tx))
+    };
+
+    while !shutdown.load(Ordering::SeqCst) {
+        let frame = match Frame::read_from(&mut rd) {
+            Ok(f) => f,
+            Err(e) => {
+                if !e.is_clean_eof() && !shutdown.load(Ordering::SeqCst) {
+                    eprintln!("[cluster-worker] closing connection: {e}");
+                }
+                break;
+            }
+        };
+        let reply = handle_frame(&server, image_hw, &idmap, &resp_tx, frame);
+        if let Some(bytes) = reply {
+            if out_tx.send(bytes).is_err() {
+                break;
+            }
+        }
+    }
+    // Reader is done: drop our senders so the pump (once the
+    // coordinator answers everything outstanding) and then the writer
+    // wind down on their own.
+    drop(out_tx);
+    drop(resp_tx);
+    let _ = pump.join();
+    let _ = writer.join();
+}
+
+/// Dispatch one inbound frame; returns an immediate reply frame's
+/// bytes if one is due (submit responses flow through the pump
+/// instead).
+fn handle_frame(
+    server: &Server,
+    image_hw: usize,
+    idmap: &Mutex<HashMap<u64, u64>>,
+    resp_tx: &Sender<Response>,
+    frame: Frame,
+) -> Option<Vec<u8>> {
+    match frame.ty {
+        FrameType::Submit => {
+            let (_key, image) = match wire::parse_submit(&frame.payload) {
+                Ok(x) => x,
+                Err(e) => return Some(error_frame(frame.id, &e.to_string())),
+            };
+            if image.shape() != [3, image_hw, image_hw] {
+                return Some(error_frame(
+                    frame.id,
+                    &format!(
+                        "image shape {:?} does not match this worker's \
+                         (3, {image_hw}, {image_hw})",
+                        image.shape()
+                    ),
+                ));
+            }
+            // Holding the map lock across submit_routed guarantees the
+            // wire id is registered before the pump can see the reply.
+            let mut map = idmap.lock().unwrap();
+            match server.submit_routed(image, resp_tx.clone()) {
+                Ok(coord_id) => {
+                    map.insert(coord_id, frame.id);
+                    None
+                }
+                Err(e) => {
+                    drop(map);
+                    Some(error_frame(frame.id, &format!("{e:#}")))
+                }
+            }
+        }
+        FrameType::Heartbeat => Some(frame.encode()),
+        FrameType::MetricsReq => {
+            let snap = MetricsSnapshot::from_metrics(&server.metrics);
+            Some(
+                Frame::new(FrameType::MetricsResp, frame.id, snap.encode())
+                    .encode(),
+            )
+        }
+        other => Some(error_frame(
+            frame.id,
+            &format!("worker cannot serve frame type {other:?}"),
+        )),
+    }
+}
+
+fn error_frame(id: u64, msg: &str) -> Vec<u8> {
+    Frame::new(FrameType::Error, id, msg.as_bytes().to_vec()).encode()
+}
+
+fn writer_loop(mut stream: TcpStream, rx: Receiver<Vec<u8>>) {
+    while let Ok(bytes) = rx.recv() {
+        if stream.write_all(&bytes).is_err() {
+            break;
+        }
+    }
+}
+
+fn response_pump(
+    rx: Receiver<Response>,
+    idmap: Arc<Mutex<HashMap<u64, u64>>>,
+    out_tx: Sender<Vec<u8>>,
+) {
+    while let Ok(resp) = rx.recv() {
+        let wire_id = idmap.lock().unwrap().remove(&resp.id);
+        let Some(wire_id) = wire_id else { continue };
+        let payload = WireResponse::from_response(&resp).encode();
+        let bytes =
+            Frame::new(FrameType::Response, wire_id, payload).encode();
+        if out_tx.send(bytes).is_err() {
+            break;
+        }
+    }
+}
+
+/// Ships `.zspill` frames (already metered by the coordinator worker
+/// that produced them) to `addr` as `SpillShip` wire frames. Holds on
+/// to frames across reconnects so a late-starting or briefly-absent
+/// upstream loses nothing; exits when the server side hangs up (all
+/// sink senders dropped) or the node shuts down.
+fn upstream_pump(
+    addr: String,
+    rx: Receiver<Vec<u8>>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let mut conn: Option<TcpStream> = None;
+    let mut seq = 0u64;
+    while let Ok(spill) = rx.recv() {
+        let bytes = Frame::new(FrameType::SpillShip, seq, spill).encode();
+        seq += 1;
+        loop {
+            if shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            if conn.is_none() {
+                match TcpStream::connect(&addr) {
+                    Ok(s) => {
+                        let _ = s.set_nodelay(true);
+                        conn = Some(s);
+                    }
+                    Err(_) => {
+                        std::thread::sleep(UPSTREAM_RETRY);
+                        continue;
+                    }
+                }
+            }
+            match conn.as_mut().unwrap().write_all(&bytes) {
+                Ok(()) => break,
+                Err(_) => conn = None,
+            }
+        }
+    }
+}

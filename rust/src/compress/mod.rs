@@ -499,8 +499,10 @@ impl std::fmt::Display for WireError {
 
 impl std::error::Error for WireError {}
 
-/// FNV-1a over `bytes`, continuing from `seed`.
-fn fnv1a(seed: u32, bytes: &[u8]) -> u32 {
+/// FNV-1a over `bytes`, continuing from `seed`. Shared with the
+/// cluster wire protocol (`cluster::wire`), which applies the same
+/// zeroed-field checksum discipline to its frame headers.
+pub(crate) fn fnv1a(seed: u32, bytes: &[u8]) -> u32 {
     let mut h = seed;
     for &b in bytes {
         h ^= b as u32;
@@ -509,11 +511,14 @@ fn fnv1a(seed: u32, bytes: &[u8]) -> u32 {
     h
 }
 
+/// FNV-1a offset basis (the standard 32-bit seed).
+pub(crate) const FNV_SEED: u32 = 0x811c_9dc5;
+
 /// Frame checksum: FNV-1a over the whole frame with the checksum field
 /// itself treated as zero. FNV-1a's per-byte step is a bijection of the
 /// running state, so every single-bit corruption is detected.
 fn frame_checksum(frame: &[u8]) -> u32 {
-    let h = fnv1a(0x811c_9dc5, &frame[..CK_OFF]);
+    let h = fnv1a(FNV_SEED, &frame[..CK_OFF]);
     let h = fnv1a(h, &[0u8; 4]);
     fnv1a(h, &frame[CK_OFF + 4..])
 }

@@ -2,8 +2,44 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Histogram buckets in microseconds (powers of two up to ~8 s).
-const BUCKETS: usize = 24;
+/// Latency histogram bucket count: bucket `i` holds samples whose
+/// upper bound is `2^i` microseconds (powers of two up to ~8 s). The
+/// bucket layout is shared verbatim by the cluster layer's metrics
+/// aggregation (`cluster::metrics`), so it is part of the crate API.
+pub const LATENCY_BUCKETS: usize = 24;
+const BUCKETS: usize = LATENCY_BUCKETS;
+
+/// Approximate percentile over fixed power-of-two latency buckets
+/// (returns the bucket's upper bound in microseconds, 0 when empty).
+/// Shared by [`Metrics::latency_percentile_us`], the cluster router's
+/// aggregated histograms, and `zebra loadgen`. Bucket indices are
+/// clamped to 63 so a wider-than-expected histogram (e.g. from a
+/// version-skewed cluster peer) can never shift-overflow.
+pub fn percentile_from_buckets(counts: &[u64], p: f64) -> u64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = (total as f64 * p).ceil() as u64;
+    let mut seen = 0;
+    for (i, c) in counts.iter().enumerate() {
+        seen += c;
+        if seen >= target {
+            return 1u64 << i.min(63);
+        }
+    }
+    1u64 << (counts.len().max(1) - 1).min(63)
+}
+
+/// The paper's Eq. 2–3 bandwidth reduction in percent — the one
+/// formula every tier reports (per-response, per-node metrics,
+/// cluster aggregate).
+pub fn reduction_pct_of(dense: u64, stored: u64, index: u64) -> f64 {
+    if dense == 0 {
+        return 0.0;
+    }
+    100.0 * (1.0 - (stored + index) as f64 / dense as f64)
+}
 
 /// Shared serving metrics. All methods are thread-safe.
 #[derive(Debug, Default)]
@@ -36,24 +72,18 @@ impl Metrics {
 
     /// Approximate percentile from the histogram (bucket upper bound).
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        let counts: Vec<u64> = self
-            .latency_us
-            .iter()
-            .map(|c| c.load(Ordering::Relaxed))
-            .collect();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0;
+        percentile_from_buckets(&self.latency_bucket_counts(), p)
+    }
+
+    /// Snapshot of the latency histogram's bucket counts (bucket `i`
+    /// covers latencies up to `2^i` us) — what the cluster layer ships
+    /// across nodes and merges into cluster-wide percentiles.
+    pub fn latency_bucket_counts(&self) -> [u64; LATENCY_BUCKETS] {
+        let mut out = [0u64; LATENCY_BUCKETS];
+        for (o, c) in out.iter_mut().zip(self.latency_us.iter()) {
+            *o = c.load(Ordering::Relaxed);
         }
-        let target = (total as f64 * p).ceil() as u64;
-        let mut seen = 0;
-        for (i, c) in counts.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return 1u64 << i;
-            }
-        }
-        1u64 << (BUCKETS - 1)
+        out
     }
 
     /// Mean batch occupancy (items per executed batch).
@@ -67,25 +97,25 @@ impl Metrics {
 
     /// Measured bandwidth reduction % across all served requests.
     pub fn reduction_pct(&self) -> f64 {
-        let d = self.dense_bytes.load(Ordering::Relaxed) as f64;
-        if d == 0.0 {
-            return 0.0;
-        }
-        let s = self.stored_bytes.load(Ordering::Relaxed) as f64;
-        let i = self.index_bytes.load(Ordering::Relaxed) as f64;
-        100.0 * (1.0 - (s + i) / d)
+        reduction_pct_of(
+            self.dense_bytes.load(Ordering::Relaxed),
+            self.stored_bytes.load(Ordering::Relaxed),
+            self.index_bytes.load(Ordering::Relaxed),
+        )
     }
 
     pub fn summary(&self) -> String {
         format!(
             "requests={} responses={} batches={} mean_batch={:.2} \
-             padded={} p50={}us p99={}us bw_reduction={:.1}% shipped={}B",
+             padded={} p50={}us p95={}us p99={}us bw_reduction={:.1}% \
+             shipped={}B",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch(),
             self.padded_slots.load(Ordering::Relaxed),
             self.latency_percentile_us(0.5),
+            self.latency_percentile_us(0.95),
             self.latency_percentile_us(0.99),
             self.reduction_pct(),
             self.shipped_spill_bytes.load(Ordering::Relaxed),
@@ -116,6 +146,40 @@ mod tests {
         assert_eq!(m.latency_percentile_us(0.99), 0);
         assert_eq!(m.mean_batch(), 0.0);
         assert_eq!(m.reduction_pct(), 0.0);
+    }
+
+    #[test]
+    fn bucket_counts_round_trip_through_free_percentile() {
+        let m = Metrics::new();
+        for _ in 0..80 {
+            m.record_latency_us(100);
+        }
+        for _ in 0..15 {
+            m.record_latency_us(10_000);
+        }
+        for _ in 0..5 {
+            m.record_latency_us(1_000_000);
+        }
+        let counts = m.latency_bucket_counts();
+        assert_eq!(counts.iter().sum::<u64>(), 100);
+        // The free function over the snapshot must agree with the
+        // method — this is the contract the cluster aggregation uses.
+        for p in [0.5, 0.95, 0.99] {
+            assert_eq!(
+                percentile_from_buckets(&counts, p),
+                m.latency_percentile_us(p)
+            );
+        }
+        assert!(m.latency_percentile_us(0.95) >= 8192);
+        assert!(m.latency_percentile_us(0.5) <= 256);
+        assert_eq!(percentile_from_buckets(&[], 0.5), 0);
+    }
+
+    #[test]
+    fn summary_surfaces_p95() {
+        let m = Metrics::new();
+        m.record_latency_us(1000);
+        assert!(m.summary().contains("p95="), "{}", m.summary());
     }
 
     #[test]

@@ -25,7 +25,7 @@ pub mod metrics;
 pub mod server;
 
 pub use batcher::{Batch, Batcher};
-pub use metrics::Metrics;
+pub use metrics::{percentile_from_buckets, Metrics, LATENCY_BUCKETS};
 #[cfg(feature = "pjrt")]
 pub use server::pjrt_executor;
 pub use server::{

@@ -48,12 +48,11 @@ pub struct Response {
 
 impl Response {
     pub fn reduction_pct(&self) -> f64 {
-        if self.dense_bytes == 0 {
-            return 0.0;
-        }
-        100.0 * (1.0
-            - (self.stored_bytes + self.index_bytes) as f64
-                / self.dense_bytes as f64)
+        super::metrics::reduction_pct_of(
+            self.dense_bytes,
+            self.stored_bytes,
+            self.index_bytes,
+        )
     }
 }
 
@@ -203,6 +202,12 @@ pub struct ServerConfig {
     /// ships to a peer — metered per worker through one reused
     /// [`SpillBuf`] (no per-spill allocation on the request path).
     pub ship_spills: Option<ShipSpills>,
+    /// Where the framed `.zspill` bytes actually go. With
+    /// `ship_spills` set and a sink present, every executed batch's
+    /// frame is sent here (the cluster worker forwards them upstream
+    /// as `SpillShip` wire frames); without a sink the frames are
+    /// metered but not materialized, preserving the PR 1 behavior.
+    pub spill_sink: Option<Sender<Vec<u8>>>,
 }
 
 impl Default for ServerConfig {
@@ -212,6 +217,7 @@ impl Default for ServerConfig {
             workers: 1,
             max_queue: 1024,
             ship_spills: None,
+            spill_sink: None,
         }
     }
 }
@@ -252,7 +258,10 @@ impl Server {
             let m = metrics.clone();
             let e = exec.clone();
             let s = shipper.clone();
-            workers.push(std::thread::spawn(move || worker_loop(b, e, m, s)));
+            let sink = cfg.spill_sink.clone();
+            workers.push(std::thread::spawn(move || {
+                worker_loop(b, e, m, s, sink)
+            }));
         }
         Server {
             batcher,
@@ -266,26 +275,48 @@ impl Server {
     /// Submit an image; the response arrives on the returned channel.
     /// Errors immediately under backpressure (queue full) or shutdown.
     pub fn submit(&self, image: Tensor) -> Result<Receiver<Response>> {
+        let (tx, rx) = channel();
+        self.submit_routed(image, tx)?;
+        Ok(rx)
+    }
+
+    /// Submit with a caller-owned reply channel, returning the
+    /// assigned request id. This is the multiplexed intake the cluster
+    /// worker uses: one TCP connection funnels every response through
+    /// a single `Sender` instead of one channel per request, and the
+    /// returned id lets the caller pair responses with wire frames.
+    pub fn submit_routed(
+        &self,
+        image: Tensor,
+        reply: Sender<Response>,
+    ) -> Result<u64> {
         if self.batcher.depth() >= self.max_queue {
             return Err(anyhow!("queue full ({} pending)", self.max_queue));
         }
-        let (tx, rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         let ok = self.batcher.push(Request {
             id,
             image,
             enqueued: Instant::now(),
-            reply: tx,
+            reply,
         });
         anyhow::ensure!(ok, "server is shut down");
-        Ok(rx)
+        Ok(id)
     }
 
     /// Blocking convenience: submit and wait.
     pub fn classify(&self, image: Tensor) -> Result<Response> {
         let rx = self.submit(image)?;
         rx.recv().context("server dropped the request")
+    }
+
+    /// Stop accepting work and let the workers drain, without waiting
+    /// for them (shared-handle shutdown — what `cluster::WorkerNode`
+    /// calls through its `Arc<Server>`). Pending requests still
+    /// complete; subsequent submits error.
+    pub fn close(&self) {
+        self.batcher.close();
     }
 
     /// Drain and stop all workers.
@@ -302,6 +333,7 @@ fn worker_loop(
     exec: Arc<dyn BatchExecutor>,
     metrics: Arc<Metrics>,
     shipper: Option<Arc<dyn Codec>>,
+    spill_sink: Option<Sender<Vec<u8>>>,
 ) {
     let hw = exec.image_hw();
     // One SpillBuf per worker: spill-shipping reuses its arenas across
@@ -324,9 +356,11 @@ fn worker_loop(
         }
         // Cross-node shipping: encode the batch into the worker's
         // reused SpillBuf and meter the exact `.zspill` frame size a
-        // peer node would receive (frame_len avoids materializing the
-        // frame — `spill_buf.view().to_bytes()` is the send path once a
-        // peer transport lands).
+        // peer node receives. Without a sink the frame is never
+        // materialized (frame_len predicts to_bytes exactly); with one
+        // — the cluster worker's upstream pump — the frame bytes are
+        // built once here and handed off, keeping the TCP write off
+        // the request path.
         let frame_share = match &shipper {
             Some(codec) => {
                 codec.encode_into(&x, &mut spill_buf);
@@ -334,6 +368,11 @@ fn worker_loop(
                 metrics
                     .shipped_spill_bytes
                     .fetch_add(len, Ordering::Relaxed);
+                if let Some(sink) = &spill_sink {
+                    // A gone sink (upstream pump shut down) is not a
+                    // serving error; the metering above still counts.
+                    let _ = sink.send(spill_buf.view().to_bytes());
+                }
                 len / exec_size.max(1) as u64
             }
             None => 0,
@@ -502,6 +541,7 @@ mod tests {
                     codec: CodecId::ZeroBlock,
                     block: 2,
                 }),
+                spill_sink: None,
             },
         );
         let r = srv.classify(image(4, 0.9)).unwrap();
@@ -551,6 +591,7 @@ mod tests {
                 workers: 1,
                 max_queue: 1024,
                 ship_spills: None,
+                spill_sink: None,
             },
         ));
         let mut waiters = Vec::new();
@@ -583,6 +624,7 @@ mod tests {
                 workers: 1,
                 max_queue: 2,
                 ship_spills: None,
+                spill_sink: None,
             },
         );
         let _a = srv.submit(image(4, 0.5)).unwrap();
@@ -601,6 +643,77 @@ mod tests {
     }
 
     #[test]
+    fn submit_routed_multiplexes_one_reply_channel() {
+        let exec = Arc::new(MockExec {
+            hw: 4,
+            sizes: vec![1],
+            delay: Duration::ZERO,
+        });
+        let srv = Server::start(exec, ServerConfig::default());
+        let (tx, rx) = channel();
+        let mut want = std::collections::HashMap::new();
+        for &fill in &[0.9f32, -0.9, 0.3] {
+            let id = srv.submit_routed(image(4, fill), tx.clone()).unwrap();
+            want.insert(id, fill);
+        }
+        for _ in 0..want.len() {
+            let r = rx.recv().unwrap();
+            let fill = want.remove(&r.id).expect("unknown or duplicate id");
+            assert!((r.logits[0] - fill).abs() < 1e-5);
+        }
+        assert!(want.is_empty(), "every id must be answered exactly once");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn spill_sink_receives_the_metered_frames() {
+        let exec = Arc::new(MockExec {
+            hw: 4,
+            sizes: vec![1],
+            delay: Duration::ZERO,
+        });
+        let (sink_tx, sink_rx) = channel();
+        let srv = Server::start(
+            exec,
+            ServerConfig {
+                max_wait: Duration::ZERO,
+                workers: 1,
+                max_queue: 16,
+                ship_spills: Some(ShipSpills {
+                    codec: CodecId::ZeroBlock,
+                    block: 2,
+                }),
+                spill_sink: Some(sink_tx),
+            },
+        );
+        let r = srv.classify(image(4, 0.9)).unwrap();
+        let frame = sink_rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("sink must receive the batch frame");
+        // The sink gets exactly the bytes the metric counted, and they
+        // parse as a valid `.zspill`.
+        assert_eq!(frame.len() as u64, r.spill_frame_bytes);
+        let view = compress::EncodedView::parse(&frame)
+            .expect("shipped frame must be a valid .zspill");
+        assert_eq!(view.codec, CodecId::ZeroBlock);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn close_on_shared_handle_rejects_new_work() {
+        let exec = Arc::new(MockExec {
+            hw: 4,
+            sizes: vec![1],
+            delay: Duration::ZERO,
+        });
+        let srv = Arc::new(Server::start(exec, ServerConfig::default()));
+        let r = srv.classify(image(4, 0.9)).unwrap();
+        assert_eq!(r.predicted, 0);
+        srv.close();
+        assert!(srv.submit(image(4, 0.9)).is_err());
+    }
+
+    #[test]
     fn prop_every_request_gets_its_own_answer() {
         forall(Config::cases(8), |rng: &mut Rng| {
             let exec = Arc::new(MockExec {
@@ -615,6 +728,7 @@ mod tests {
                     workers: 1,
                     max_queue: 4096,
                     ship_spills: None,
+                    spill_sink: None,
                 },
             ));
             let n = rng.range(1, 24);

@@ -35,6 +35,11 @@
 //!   loading/execution of the AOT HLO artifacts (`pjrt` feature).
 //! - [`coordinator`] — the serving pipeline: dynamic batcher, worker
 //!   pool, per-request bandwidth metering.
+//! - [`cluster`] — multi-node serving over TCP: a versioned,
+//!   checksummed frame protocol (`.zspill` discipline on the wire),
+//!   worker nodes wrapping the coordinator, a sharding/failover
+//!   router with cluster-wide metrics, and the client the load
+//!   generator drives.
 //! - [`train`] — native Zebra training: a reverse-mode tape over the
 //!   reference backend's own ops, the `CE + lambda * sum ||block||`
 //!   objective with a straight-through estimator through the block
@@ -51,6 +56,7 @@ pub mod accel;
 pub mod backend;
 pub mod bench;
 pub mod cli;
+pub mod cluster;
 pub mod compress;
 pub mod coordinator;
 pub mod models;

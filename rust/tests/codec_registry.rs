@@ -1,0 +1,134 @@
+//! Registry-wide codec coverage over degenerate shapes: every
+//! registered codec must round-trip empty maps, 1x1x1 maps, all-zero
+//! and fully-dense tensors through the streaming
+//! `encode_into`/`decode_into` paths and the `.zspill` wire format.
+//! The property/fuzz tests in `compress` drive *random realistic*
+//! spills; these pin the boundary shapes they rarely generate.
+
+use zebra::compress::{
+    all_codecs, Codec, DenseCodec, EncodedView, RleZeroCodec, SpillBuf,
+};
+use zebra::tensor::Tensor;
+
+/// Round-trip `x` through every registered codec at `block`, via the
+/// buffer-reusing streaming API and again through `.zspill` bytes.
+fn roundtrip_all(x: &Tensor, block: usize) {
+    let mut buf = SpillBuf::new();
+    let mut out = Tensor::zeros(&[0]);
+    for codec in all_codecs(block) {
+        codec.encode_into(x, &mut buf);
+        codec.decode_into(buf.view(), &mut out);
+        assert_eq!(
+            &out,
+            x,
+            "codec {} (block {block}) streaming roundtrip on {:?}",
+            codec.name(),
+            x.shape()
+        );
+        let bytes = buf.view().to_bytes();
+        let view = EncodedView::parse(&bytes).unwrap_or_else(|e| {
+            panic!(
+                "codec {} frame for {:?} must parse: {e}",
+                codec.name(),
+                x.shape()
+            )
+        });
+        let mut out2 = Tensor::zeros(&[0]);
+        codec.decode_into(view, &mut out2);
+        assert_eq!(
+            &out2,
+            x,
+            "codec {} (block {block}) wire roundtrip on {:?}",
+            codec.name(),
+            x.shape()
+        );
+    }
+}
+
+#[test]
+fn one_by_one_by_one_maps() {
+    // The smallest legal NCHW map, live and zero, at block 1.
+    roundtrip_all(&Tensor::from_vec(&[1, 1, 1, 1], vec![2.5]), 1);
+    roundtrip_all(&Tensor::zeros(&[1, 1, 1, 1]), 1);
+    // A single pixel per map across several channels.
+    let x = Tensor::from_vec(&[2, 3, 1, 1], vec![0.0, 1.0, 0.0, 3.5, 0.0, 0.0]);
+    roundtrip_all(&x, 1);
+}
+
+#[test]
+fn empty_maps() {
+    // Zero batch, zero channels, zero spatial extent: every section
+    // (payload, index, shape) degenerates without panicking.
+    roundtrip_all(&Tensor::zeros(&[0, 3, 4, 4]), 2);
+    roundtrip_all(&Tensor::zeros(&[1, 0, 4, 4]), 2);
+    roundtrip_all(&Tensor::zeros(&[2, 2, 0, 0]), 2);
+}
+
+#[test]
+fn all_zero_tensors() {
+    // Fully pruned activations: zero-block and whole-map must emit
+    // index-only frames; rle an empty stream.
+    let x = Tensor::zeros(&[2, 3, 8, 8]);
+    roundtrip_all(&x, 4);
+    roundtrip_all(&x, 2);
+    for codec in all_codecs(4) {
+        let e = codec.encode(&x);
+        if codec.name() != "dense" {
+            assert!(
+                e.payload.is_empty(),
+                "codec {} should store nothing for all-zero input",
+                codec.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn fully_dense_tensors() {
+    // No zeros anywhere: nothing to prune, nothing to lose.
+    let n = 2 * 4 * 4;
+    let x = Tensor::from_vec(
+        &[1, 2, 4, 4],
+        (0..n).map(|i| 0.5 + i as f32).collect(),
+    );
+    roundtrip_all(&x, 2);
+    roundtrip_all(&x, 4);
+    // Dense payload is the floor: no codec stores less than zero and
+    // zero-block stores exactly dense + 1 bit per block here.
+    let dense = DenseCodec.encode(&x).payload.len();
+    for codec in all_codecs(2) {
+        let e = codec.encode(&x);
+        assert!(
+            e.payload.len() >= dense || codec.name() == "rle-zero",
+            "codec {} payload {} vs dense {dense}",
+            codec.name(),
+            e.payload.len()
+        );
+    }
+}
+
+#[test]
+fn rankless_codecs_take_any_shape() {
+    // dense and rle-zero are shape-agnostic; the block codecs require
+    // NCHW and are exercised above. Empty and 1-D tensors included.
+    let shapes: Vec<Tensor> = vec![
+        Tensor::zeros(&[0]),
+        Tensor::from_vec(&[5], vec![0.0, 1.0, 0.0, 2.0, 0.0]),
+        Tensor::from_vec(&[1], vec![-7.25]),
+    ];
+    let mut buf = SpillBuf::new();
+    let mut out = Tensor::zeros(&[0]);
+    for x in &shapes {
+        for codec in [&DenseCodec as &dyn Codec, &RleZeroCodec as &dyn Codec]
+        {
+            codec.encode_into(x, &mut buf);
+            codec.decode_into(buf.view(), &mut out);
+            assert_eq!(&out, x, "codec {} on {:?}", codec.name(), x.shape());
+            let bytes = buf.view().to_bytes();
+            let view = EncodedView::parse(&bytes).unwrap();
+            let mut out2 = Tensor::zeros(&[0]);
+            codec.decode_into(view, &mut out2);
+            assert_eq!(&out2, x);
+        }
+    }
+}

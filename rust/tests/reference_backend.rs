@@ -38,6 +38,7 @@ fn coordinator_serves_end_to_end_on_the_reference_backend() {
             workers: 2,
             max_queue: 256,
             ship_spills: None,
+            spill_sink: None,
         },
     );
     let img = noise_image(8, 11);
@@ -69,6 +70,7 @@ fn batching_engages_over_the_reference_backend() {
             workers: 1,
             max_queue: 1024,
             ship_spills: None,
+            spill_sink: None,
         },
     ));
     let rxs: Vec<_> = (0..16)
