@@ -1,6 +1,6 @@
 # Repo-level convenience targets.
 
-.PHONY: check ci bench-smoke train-smoke cluster-smoke
+.PHONY: check ci bench-smoke train-smoke cluster-smoke perf-smoke
 
 # Full gate: build + tests + fmt + clippy in both feature configs
 # (the pjrt config auto-skips when no XLA toolchain is present),
@@ -32,6 +32,15 @@ bench-smoke:
 # target rather than duplicating the recipe.
 cluster-smoke:
 	cd rust && ./cluster_smoke.sh
+
+# Block-sparse kernel never-regress gate: run the perf_hotpath bench
+# in smoke mode with the guard armed — the masked conv must be faster
+# than the dense kernel at 70% zero blocks (coarse, smoke-sized
+# shapes; emits BENCH_PR5.json at the repo root). rust/check.sh and
+# ci.yml invoke this target rather than duplicating the recipe.
+perf-smoke:
+	cd rust && ZEBRA_BENCH_SMOKE=1 ZEBRA_PERF_GUARD=1 \
+		cargo bench --bench perf_hotpath --no-default-features
 
 train-smoke:
 	cd rust && tmp=$$(mktemp -d) && \

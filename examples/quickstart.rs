@@ -37,7 +37,13 @@ fn main() -> anyhow::Result<()> {
         }
     };
 
-    let out = model.execute(&x)?;
+    // The fused serving path: every layer's conv skips the previous
+    // layer's zero blocks, and each pruned spill streams straight into
+    // the zero-block codec (conv -> ReLU -> prune -> encode, no dense
+    // round-trip) — so the bytes below are the ACTUAL encoded spills,
+    // not a mask-derived estimate.
+    let mut spill_frames = Vec::new();
+    let out = model.run_capture_encoded(&x, &mut spill_frames)?;
     let pred = out
         .logits
         .data()
@@ -48,14 +54,13 @@ fn main() -> anyhow::Result<()> {
         .unwrap();
     println!("backend {} predicted class {pred}", model.name());
 
-    // Eq. 2-3 accounting from the model's own mask outputs.
+    // Eq. 2-3 accounting straight off the encoded spills.
     let (mut dense, mut stored, mut index) = (0f64, 0f64, 0f64);
-    for (m, be) in out.masks.iter().zip(&out.block_elems) {
-        let blocks = m.len() as f64;
-        let kept = m.data().iter().filter(|&&v| v != 0.0).count() as f64;
-        dense += blocks * (*be as f64) * 4.0;
-        stored += kept * (*be as f64) * 4.0;
-        index += blocks / 8.0;
+    for buf in &spill_frames {
+        let volume: usize = buf.shape().iter().product();
+        dense += volume as f64 * 4.0;
+        stored += buf.payload().len() as f64;
+        index += buf.index().len() as f64;
     }
     println!(
         "activation spills: dense {} -> stored {} + index {}  ({:.1}% \

@@ -9,11 +9,16 @@
 //! host work) and far above the CPU-PJRT model step, so Layer 3 is
 //! never the serving bottleneck.
 
-use zebra::bench::{bench, Table};
+use std::collections::BTreeMap;
+
+use zebra::backend::kernels::{conv3x3_fast, conv3x3_masked, relu_prune_encode};
+use zebra::backend::reference::conv3x3;
+use zebra::bench::{bench, Stats, Table};
 use zebra::compress::{all_codecs, Codec, SpillBuf, ZeroBlockCodec};
 use zebra::tensor::Tensor;
+use zebra::util::json::{self, Value};
 use zebra::util::prng::Rng;
-use zebra::zebra::prune::{relu_prune_inplace, Thresholds};
+use zebra::zebra::prune::{block_mask, relu_prune_inplace, Thresholds};
 
 fn spill_tensor(rng: &mut Rng, sparse: bool) -> Tensor {
     // A realistic mid-network spill: 8 x 64 x 32 x 32 (2 MiB).
@@ -30,6 +35,54 @@ fn spill_tensor(rng: &mut Rng, sparse: bool) -> Tensor {
         *v = v.max(0.0);
     }
     Tensor::from_vec(&shape, data)
+}
+
+/// A pre-activation map with an exact fraction of its blocks all-zero:
+/// live blocks carry raw normals (one element forced positive so the
+/// T=0 mask keeps them), zero blocks stay untouched. The returned
+/// tensor is exactly what `conv3x3_masked` consumes: zero wherever the
+/// mask says a block was pruned.
+fn sparse_preact(
+    rng: &mut Rng,
+    shape: &[usize; 4],
+    block: usize,
+    zero_frac: f32,
+) -> Tensor {
+    let (n, c, h, w) = (shape[0], shape[1], shape[2], shape[3]);
+    let mut t = Tensor::zeros(shape.as_slice());
+    let data = t.data_mut();
+    for ni in 0..n {
+        for ci in 0..c {
+            let base = (ni * c + ci) * h * w;
+            for by in 0..h / block {
+                for bx in 0..w / block {
+                    if rng.chance(zero_frac) {
+                        continue; // a learned zero block
+                    }
+                    for dy in 0..block {
+                        let row = base + (by * block + dy) * w + bx * block;
+                        for v in &mut data[row..row + block] {
+                            *v = rng.normal();
+                        }
+                    }
+                    // Guarantee the block registers as live at T = 0.
+                    data[base + by * block * w + bx * block] =
+                        rng.f32_range(0.5, 1.5);
+                }
+            }
+        }
+    }
+    t
+}
+
+fn num(v: f64) -> Value {
+    Value::Num(v)
+}
+
+fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Object(
+        pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>(),
+    )
 }
 
 fn main() -> anyhow::Result<()> {
@@ -231,6 +284,161 @@ fn main() -> anyhow::Result<()> {
     #[cfg(not(feature = "pjrt"))]
     eprintln!("(built without the pjrt feature — PJRT rows skipped)");
 
+    // 5. PR 5 — the block-sparse conv execution engine. GFLOP/s of the
+    // naive oracle vs the region-split dense kernel vs the masked
+    // (Zebra-skip) kernel vs the threaded kernel, and GB/s of the
+    // fused ReLU+prune+encode vs the separate prune-then-encode
+    // passes, at zero-block fractions {0, 0.3, 0.7}. Emits
+    // machine-readable BENCH_PR5.json at the repo root; under
+    // ZEBRA_PERF_GUARD=1 the run FAILS if the masked kernel is slower
+    // than dense at 70% zero blocks (the CI perf-smoke gate).
+    let smoke = zebra::bench::smoke();
+    let (bn, cin, cout, hw) =
+        if smoke { (2usize, 16usize, 16usize, 32usize) } else { (4, 32, 32, 32) };
+    let block = 4usize;
+    let kw = {
+        let vol = cout * cin * 9;
+        Tensor::from_vec(
+            &[cout, cin, 3, 3],
+            (0..vol).map(|_| rng.normal() * 0.1).collect(),
+        )
+    };
+    let threads = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(1);
+    let flops = (bn * cout * hw * hw * cin * 18) as f64;
+    let gflops = |s: &Stats| s.per_sec(flops) / 1e9;
+    let mut conv_rows = Vec::new();
+    let mut enc_rows = Vec::new();
+    let mut guard_ratio = 0.0f64;
+    for &zf in &[0.0f32, 0.3, 0.7] {
+        let x = sparse_preact(&mut rng, &[bn, cin, hw, hw], block, zf);
+        let mask = block_mask(&x, &Thresholds::Scalar(0.0), block);
+        let actual_zf = mask.zero_fraction();
+        let budget = if smoke { 1 } else { 200 };
+        let s_naive = bench(&format!("conv naive zf={zf}"), budget, || {
+            std::hint::black_box(conv3x3(&x, &kw, 1));
+        });
+        let s_dense = bench(&format!("conv dense zf={zf}"), budget, || {
+            std::hint::black_box(conv3x3_fast(&x, &kw, 1, 1));
+        });
+        let s_masked = bench(&format!("conv masked zf={zf}"), budget, || {
+            std::hint::black_box(conv3x3_masked(&x, &kw, 1, &mask, 1));
+        });
+        let s_thr = bench(&format!("conv threaded zf={zf}"), budget, || {
+            std::hint::black_box(conv3x3_fast(&x, &kw, 1, threads));
+        });
+        if zf > 0.5 {
+            // The never-regress gate compares best-case iterations so
+            // smoke-mode noise cannot flip it spuriously.
+            guard_ratio = s_dense.min_ns / s_masked.min_ns;
+        }
+        table.row(&[
+            format!("conv3x3 engine (zf={zf:.1})"),
+            format!("{:.3}", s_masked.mean_ms()),
+            format!("{:.2}", gflops(&s_masked)),
+            format!(
+                "GFLOP/s naive {:.2} dense {:.2} masked {:.2} thr({threads}) {:.2}",
+                gflops(&s_naive),
+                gflops(&s_dense),
+                gflops(&s_masked),
+                gflops(&s_thr),
+            ),
+        ]);
+        conv_rows.push(obj(vec![
+            ("zero_fraction", num(zf as f64)),
+            ("actual_zero_fraction", num(actual_zf)),
+            ("naive_gflops", num(gflops(&s_naive))),
+            ("dense_gflops", num(gflops(&s_dense))),
+            ("masked_gflops", num(gflops(&s_masked))),
+            ("threaded_gflops", num(gflops(&s_thr))),
+        ]));
+
+        // Fused conv-tail: ReLU + prune + zero-block encode in one
+        // sweep vs the separate prune-then-encode passes, same input.
+        let bytes = x.nbytes() as f64;
+        let codec = ZeroBlockCodec::new(block);
+        let mut work = x.clone();
+        let mut ebuf = SpillBuf::new();
+        let s_sep = bench(&format!("prune+encode zf={zf}"), budget, || {
+            work.data_mut().copy_from_slice(x.data());
+            relu_prune_inplace(&mut work, &Thresholds::Scalar(0.0), block);
+            codec.encode_into(&work, &mut ebuf);
+            std::hint::black_box(ebuf.total_bytes());
+        });
+        let s_fused = bench(&format!("fused encode zf={zf}"), budget, || {
+            work.data_mut().copy_from_slice(x.data());
+            let m = relu_prune_encode(
+                &mut work,
+                &Thresholds::Scalar(0.0),
+                block,
+                &mut ebuf,
+            );
+            std::hint::black_box(m.kept());
+        });
+        table.row(&[
+            format!("fused relu+prune+encode (zf={zf:.1})"),
+            format!("{:.3}", s_fused.mean_ms()),
+            format!("{:.2}", s_fused.gbps(bytes)),
+            format!(
+                "vs separate passes {:.2} GB/s ({:.2}x)",
+                s_sep.gbps(bytes),
+                s_fused.speedup_over(&s_sep),
+            ),
+        ]);
+        enc_rows.push(obj(vec![
+            ("zero_fraction", num(zf as f64)),
+            ("separate_gbps", num(s_sep.gbps(bytes))),
+            ("fused_gbps", num(s_fused.gbps(bytes))),
+            ("fused_speedup", num(s_fused.speedup_over(&s_sep))),
+        ]));
+    }
+    let guard_pass = guard_ratio > 1.0;
+    let root = obj(vec![
+        ("bench", Value::Str("perf_hotpath/pr5".into())),
+        ("smoke", Value::Bool(smoke)),
+        (
+            "shape",
+            Value::Array(
+                [bn, cin, hw, hw].iter().map(|&d| num(d as f64)).collect(),
+            ),
+        ),
+        ("cout", num(cout as f64)),
+        ("block", num(block as f64)),
+        ("stride", num(1.0)),
+        ("threads", num(threads as f64)),
+        ("conv_gflops", Value::Array(conv_rows)),
+        ("fused_encode_gbps", Value::Array(enc_rows)),
+        (
+            "guard",
+            obj(vec![
+                ("zero_fraction", num(0.7)),
+                ("masked_speedup_over_dense", num(guard_ratio)),
+                ("pass", Value::Bool(guard_pass)),
+            ]),
+        ),
+    ]);
+    let out_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_PR5.json");
+    std::fs::write(&out_path, json::to_string(&root) + "\n")?;
+    eprintln!(
+        "  [bench] wrote {} (masked vs dense at 70% zero blocks: \
+         {guard_ratio:.2}x, {})",
+        out_path.display(),
+        if guard_pass { "PASS" } else { "FAIL" }
+    );
+
     table.print("§Perf — Layer-3 hot paths");
+
+    if !guard_pass
+        && std::env::var_os("ZEBRA_PERF_GUARD")
+            .is_some_and(|v| v != "0" && !v.is_empty())
+    {
+        anyhow::bail!(
+            "perf guard: masked kernel is not faster than dense at 70% \
+             zero blocks ({guard_ratio:.2}x) — see BENCH_PR5.json"
+        );
+    }
     Ok(())
 }

@@ -47,4 +47,11 @@ make -C .. train-smoke
 echo "== cluster smoke: 2x cluster-worker -> cluster-router -> loadgen"
 make -C .. cluster-smoke
 
+# Perf smoke: the block-sparse kernel never-regress gate — the masked
+# conv must beat the dense kernel at 70% zero blocks (smoke-sized
+# shapes, BENCH_PR5.json emitted at the repo root). Recipe in the
+# Makefile (single source of truth).
+echo "== perf smoke: masked-vs-dense kernel guard (BENCH_PR5.json)"
+make -C .. perf-smoke
+
 echo "check OK"

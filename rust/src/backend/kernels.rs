@@ -1,0 +1,495 @@
+//! The block-sparse execution engine: the reference backend's compute
+//! hot path, rewritten so Zebra's learned zero blocks finally buy
+//! FLOPs, not just bandwidth.
+//!
+//! Three kernels, all bitwise-identical to the naive oracle
+//! [`crate::backend::reference::conv3x3`] (property-tested in
+//! `tests/kernels.rs` — the train tape keeps differentiating the
+//! oracle, so fast serving and training can never drift apart):
+//!
+//! - [`conv3x3_fast`] — region-split direct convolution. The naive
+//!   kernel re-checks padding on every tap; here the padding checks
+//!   are hoisted into explicit edge handling (first/last output
+//!   column, per-kernel-row bounds) so the interior loop is
+//!   branch-free and runs in register-blocked strips of four outputs
+//!   via `chunks_exact_mut`.
+//! - [`conv3x3_masked`] — the Zebra skip: consumes the *previous*
+//!   layer's [`BlockMask`] and skips whole zero input blocks. Zero
+//!   blocks are merged into per-row pixel runs
+//!   (keyed off [`BlockGrid`](crate::zebra::blocks::BlockGrid)
+//!   geometry), and every 3-tap window that lies entirely inside a
+//!   zero run is skipped; windows straddling a run edge are computed
+//!   normally, which is what keeps the result exact. All-zero planes
+//!   (and all-zero block rows) early-out before any inner loop runs.
+//! - [`relu_prune_encode`] — the fused tail of a layer: ReLU +
+//!   block-prune + zero-block encode in ONE sweep over the conv
+//!   output, writing surviving blocks straight into a
+//!   [`SpillBuf`] through
+//!   [`ZeroBlockCodec::begin_blocks`](crate::compress::ZeroBlockCodec)
+//!   — no dense intermediate round-trip, byte-identical frames.
+//!
+//! Both conv kernels parallelize over `(batch, c_out)` output planes
+//! with `std::thread::scope` (no new dependencies, matching the
+//! cluster layer's std-threads style). Every plane is computed by
+//! exactly one thread with the same per-plane arithmetic as the
+//! single-threaded path, so results are bitwise-independent of the
+//! thread count. See `rust/docs/perf.md` for the design notes and
+//! `benches/perf_hotpath.rs` (`BENCH_PR5.json`) for the numbers.
+
+use crate::compress::{SpillBuf, ZeroBlockCodec};
+use crate::tensor::Tensor;
+use crate::zebra::blocks::BlockMask;
+use crate::zebra::prune::Thresholds;
+
+/// Resolve the conv worker-thread count: an explicit setting wins
+/// (CLI `--threads N`), else the `ZEBRA_THREADS` environment variable,
+/// else 1 (single-threaded — threading is opt-in so default runs stay
+/// profile-stable).
+pub fn resolve_threads(explicit: usize) -> usize {
+    if explicit > 0 {
+        return explicit;
+    }
+    std::env::var("ZEBRA_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(1)
+}
+
+/// Per-plane work (output elements x fan-in) below which threading is
+/// never engaged: spawn overhead beats the win on smoke-sized maps.
+const MIN_WORK_PER_THREAD: usize = 1 << 14;
+
+/// Region-split, register-blocked direct 3x3 same-padding convolution
+/// (stride 1 or 2, NCHW). Bitwise-identical to the naive oracle
+/// [`crate::backend::reference::conv3x3`].
+pub fn conv3x3_fast(
+    x: &Tensor,
+    w: &Tensor,
+    stride: usize,
+    threads: usize,
+) -> Tensor {
+    conv_impl(x, w, stride, None, threads)
+}
+
+/// [`conv3x3_fast`] plus the Zebra skip: `mask` is the keep-mask of
+/// the *input* tensor (the previous layer's prune output), and whole
+/// zero input blocks are skipped in the compute. Exact — `x` must
+/// actually be zero wherever `mask` says a block was pruned, which is
+/// what [`crate::zebra::prune::relu_prune_inplace`] guarantees.
+pub fn conv3x3_masked(
+    x: &Tensor,
+    w: &Tensor,
+    stride: usize,
+    mask: &BlockMask,
+    threads: usize,
+) -> Tensor {
+    conv_impl(x, w, stride, Some(mask), threads)
+}
+
+/// Zero-run geometry of one input plane, precomputed from the block
+/// mask so the inner loops consult pixel ranges, not mask bits.
+struct PlaneSkips {
+    /// Every block of this (n, c) plane is zero: skip the whole
+    /// input-channel contribution.
+    all_zero: bool,
+    /// Mask block size (pixel rows per block row).
+    block: usize,
+    /// Per block-row skip info.
+    rows: Vec<RowSkips>,
+}
+
+struct RowSkips {
+    /// Every block in this block-row is zero: skip the row pass.
+    all_zero: bool,
+    /// Maximal zero runs as pixel-column ranges `[start, end)`.
+    runs: Vec<(usize, usize)>,
+}
+
+fn plane_skips(mask: &BlockMask) -> Vec<PlaneSkips> {
+    let g = mask.grid;
+    let (hb, wb, b) = (g.hb(), g.wb(), g.block);
+    let mut out = Vec::with_capacity(g.n * g.c);
+    for n in 0..g.n {
+        for c in 0..g.c {
+            let mut all_zero = true;
+            let mut rows = Vec::with_capacity(hb);
+            for by in 0..hb {
+                let mut runs = Vec::new();
+                let mut start: Option<usize> = None;
+                for bx in 0..wb {
+                    if mask.get(g.block_id(n, c, by, bx)) {
+                        if let Some(s) = start.take() {
+                            runs.push((s * b, bx * b));
+                        }
+                    } else if start.is_none() {
+                        start = Some(bx);
+                    }
+                }
+                if let Some(s) = start.take() {
+                    runs.push((s * b, wb * b));
+                }
+                let row_zero = runs.len() == 1 && runs[0] == (0, wb * b);
+                all_zero &= row_zero;
+                rows.push(RowSkips { all_zero: row_zero, runs });
+            }
+            out.push(PlaneSkips { all_zero, block: b, rows });
+        }
+    }
+    out
+}
+
+/// Everything the per-plane kernel needs, bundled so the scoped
+/// threads share one immutable context.
+struct ConvCtx<'a> {
+    x: &'a Tensor,
+    wdat: &'a [f32],
+    skips: Option<Vec<PlaneSkips>>,
+    cin: usize,
+    cout: usize,
+    h: usize,
+    w: usize,
+    ho: usize,
+    wo: usize,
+    stride: usize,
+}
+
+fn conv_impl(
+    x: &Tensor,
+    w: &Tensor,
+    stride: usize,
+    mask: Option<&BlockMask>,
+    threads: usize,
+) -> Tensor {
+    let s = x.shape();
+    let (n, cin, h, win) = (s[0], s[1], s[2], s[3]);
+    let cout = w.shape()[0];
+    debug_assert_eq!(w.shape(), &[cout, cin, 3, 3]);
+    if let Some(m) = mask {
+        assert_eq!(
+            (m.grid.n, m.grid.c, m.grid.h, m.grid.w),
+            (n, cin, h, win),
+            "input mask geometry must match the conv input"
+        );
+    }
+    let (ho, wo) = (h / stride, win / stride);
+    if win < 2 || ho == 0 || wo == 0 {
+        // Degenerate maps: the edge machinery below assumes at least
+        // two columns; the oracle handles these exactly (and cheaply).
+        return super::reference::conv3x3(x, w, stride);
+    }
+    let ctx = ConvCtx {
+        x,
+        wdat: w.data(),
+        skips: mask.map(plane_skips),
+        cin,
+        cout,
+        h,
+        w: win,
+        ho,
+        wo,
+        stride,
+    };
+    let mut out = Tensor::zeros(&[n, cout, ho, wo]);
+    let plane_sz = ho * wo;
+    let planes = n * cout;
+    let mut t = threads.max(1).min(planes);
+    if plane_sz * cin < MIN_WORK_PER_THREAD {
+        t = 1;
+    }
+    if t <= 1 {
+        for (p, acc) in out.data_mut().chunks_exact_mut(plane_sz).enumerate() {
+            conv_plane(&ctx, p, acc);
+        }
+    } else {
+        let chunk = planes.div_ceil(t);
+        let ctx = &ctx;
+        std::thread::scope(|scope| {
+            for (i, slab) in out.data_mut().chunks_mut(chunk * plane_sz).enumerate() {
+                scope.spawn(move || {
+                    for (pi, acc) in slab.chunks_exact_mut(plane_sz).enumerate() {
+                        conv_plane(ctx, i * chunk + pi, acc);
+                    }
+                });
+            }
+        });
+    }
+    out
+}
+
+/// Compute one `(ni, co)` output plane. The accumulation order per
+/// output element is exactly the oracle's: input channels ascending,
+/// then kernel rows ascending, each kernel row's 3-tap sum added as
+/// one `f32` — that ordering is what makes the result bitwise-equal.
+fn conv_plane(ctx: &ConvCtx<'_>, p: usize, acc: &mut [f32]) {
+    let (ni, co) = (p / ctx.cout, p % ctx.cout);
+    for ci in 0..ctx.cin {
+        let skips = ctx.skips.as_ref().map(|s| &s[ni * ctx.cin + ci]);
+        if skips.is_some_and(|s| s.all_zero) {
+            continue; // the Zebra skip: a fully-pruned input plane
+        }
+        let plane = ctx.x.plane(ni, ci);
+        let k = &ctx.wdat[(co * ctx.cin + ci) * 9..(co * ctx.cin + ci) * 9 + 9];
+        for yo in 0..ctx.ho {
+            let yc = yo * ctx.stride;
+            let arow = &mut acc[yo * ctx.wo..(yo + 1) * ctx.wo];
+            for (ky, krow) in k.chunks_exact(3).enumerate() {
+                // Input row = yc + ky - 1; padding rows contribute
+                // nothing (checked once per kernel row, not per tap).
+                let yy = yc + ky;
+                if yy == 0 || yy > ctx.h {
+                    continue;
+                }
+                let r = yy - 1;
+                let row = &plane[r * ctx.w..(r + 1) * ctx.w];
+                let k3: &[f32; 3] = krow.try_into().expect("3 taps");
+                match skips.map(|s| &s.rows[r / s.block]) {
+                    Some(rs) if rs.all_zero => continue,
+                    Some(rs) if !rs.runs.is_empty() => accum_row_skipping(arow, row, k3, ctx, rs),
+                    _ => accum_row(arow, row, k3, ctx.stride, ctx.w, 0, ctx.wo),
+                }
+            }
+        }
+    }
+}
+
+/// One kernel row's contribution with zero runs skipped: any 3-tap
+/// window lying entirely inside a zero run adds an exact zero, so the
+/// covered outputs are skipped; windows straddling a run edge are
+/// computed normally.
+fn accum_row_skipping(
+    acc: &mut [f32],
+    row: &[f32],
+    k: &[f32; 3],
+    ctx: &ConvCtx<'_>,
+    rs: &RowSkips,
+) {
+    let (stride, w, wo) = (ctx.stride, ctx.w, ctx.wo);
+    let mut a = 0usize;
+    for &(s, e) in &rs.runs {
+        // Output columns whose whole window sits inside [s, e): the
+        // leftmost tap is xc-1 (absent at xo = 0), the rightmost is
+        // xc+1 (absent past the map edge).
+        let lo = if s == 0 { 0 } else { (s + stride) / stride };
+        let hi = if e == w {
+            wo
+        } else if e >= 2 {
+            (e - 2) / stride + 1
+        } else {
+            0
+        };
+        let (lo, hi) = (lo.min(wo), hi.min(wo));
+        if hi > lo {
+            accum_row(acc, row, k, stride, w, a, lo);
+            a = hi;
+        }
+    }
+    accum_row(acc, row, k, stride, w, a, wo);
+}
+
+/// Accumulate one kernel row over output columns `[a, b)`:
+/// `acc[xo] += row[xc-1]*k0 + row[xc]*k1 + row[xc+1]*k2` with the
+/// oracle's tap order and edge handling. The interior runs in
+/// register-blocked strips of four outputs via `chunks_exact_mut`.
+fn accum_row(
+    acc: &mut [f32],
+    row: &[f32],
+    k: &[f32; 3],
+    stride: usize,
+    w: usize,
+    a: usize,
+    b: usize,
+) {
+    if a >= b {
+        return;
+    }
+    let (k0, k1, k2) = (k[0], k[1], k[2]);
+    let mut xo = a;
+    if xo == 0 {
+        // Left edge: no tap at column -1 (w >= 2 is guaranteed by the
+        // conv_impl fallback).
+        acc[0] += row[0] * k1 + row[1] * k2;
+        xo = 1;
+        if xo >= b {
+            return;
+        }
+    }
+    if stride == 1 {
+        // Interior: all three taps in bounds for xo in [1, w-1).
+        let end = b.min(w - 1);
+        if xo < end {
+            let mut base = xo - 1;
+            let dst = &mut acc[xo..end];
+            let mut strips = dst.chunks_exact_mut(4);
+            for d in &mut strips {
+                let s = &row[base..base + 6];
+                d[0] += s[0] * k0 + s[1] * k1 + s[2] * k2;
+                d[1] += s[1] * k0 + s[2] * k1 + s[3] * k2;
+                d[2] += s[2] * k0 + s[3] * k1 + s[4] * k2;
+                d[3] += s[3] * k0 + s[4] * k1 + s[5] * k2;
+                base += 4;
+            }
+            for d in strips.into_remainder() {
+                let s = &row[base..base + 3];
+                *d += s[0] * k0 + s[1] * k1 + s[2] * k2;
+                base += 1;
+            }
+        }
+        if b == w {
+            // Right edge (stride 1 only): no tap at column w.
+            acc[w - 1] += row[w - 2] * k0 + row[w - 1] * k1;
+        }
+    } else {
+        // Stride 2: xc = 2*xo keeps every tap in bounds for xo >= 1.
+        for (j, d) in acc[xo..b].iter_mut().enumerate() {
+            let c = (xo + j) * stride - 1;
+            let s = &row[c..c + 3];
+            *d += s[0] * k0 + s[1] * k1 + s[2] * k2;
+        }
+    }
+}
+
+/// Fused ReLU + Zebra block-prune + zero-block encode, in place: one
+/// sweep over `x`'s blocks clamps negatives, finds the block max,
+/// then either streams the surviving block into `out`'s payload (via
+/// [`ZeroBlockCodec::begin_blocks`]) or zeroes it. Bitwise-identical
+/// to [`crate::zebra::prune::relu_prune_inplace`] followed by
+/// `ZeroBlockCodec::encode_into` — without the dense re-scan the
+/// separate encode pass costs.
+pub fn relu_prune_encode(
+    x: &mut Tensor,
+    thr: &Thresholds,
+    block: usize,
+    out: &mut SpillBuf,
+) -> BlockMask {
+    let s = x.shape().to_vec();
+    assert_eq!(s.len(), 4, "relu_prune_encode wants NCHW, got {s:?}");
+    let codec = ZeroBlockCodec::new(block);
+    let mut enc = codec.begin_blocks(&s, out);
+    let grid = enc.grid();
+    let mut mask = BlockMask::new_zeroed(grid);
+    let (hb, wb) = (grid.hb(), grid.wb());
+    let (hh, ww) = (s[2], s[3]);
+    let data = x.data_mut();
+    for n in 0..s[0] {
+        for c in 0..s[1] {
+            let t = thr.for_channel(c);
+            let base = (n * s[1] + c) * hh * ww;
+            let plane = &mut data[base..base + hh * ww];
+            for by in 0..hb {
+                for bx in 0..wb {
+                    // ReLU the block while tracking its running max —
+                    // the same post-ReLU max the two-pass pruner sees.
+                    let mut m = 0.0f32;
+                    for dy in 0..block {
+                        let row = (by * block + dy) * ww + bx * block;
+                        for v in plane[row..row + block].iter_mut() {
+                            *v = v.max(0.0);
+                            if *v > m {
+                                m = *v;
+                            }
+                        }
+                    }
+                    if m > t {
+                        mask.set(grid.block_id(n, c, by, bx), true);
+                        // Stream the block only when it holds a nonzero
+                        // element: a negative threshold can "keep" an
+                        // all-zero block, and the codec's liveness scan
+                        // never stores those — byte-identity demands
+                        // the same rule here.
+                        if m > 0.0 {
+                            enc.push_block(n, c, by, bx, plane);
+                        }
+                    } else {
+                        for dy in 0..block {
+                            let row = (by * block + dy) * ww + bx * block;
+                            plane[row..row + block].fill(0.0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::reference::conv3x3;
+    use crate::util::prng::Rng;
+    use crate::zebra::prune::{relu_prune, relu_prune_inplace};
+
+    fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn fast_matches_oracle_on_hand_shapes() {
+        let mut rng = Rng::new(5);
+        for &(h, w) in &[(1usize, 2usize), (2, 2), (3, 3), (4, 4), (5, 7), (8, 8)] {
+            for stride in [1usize, 2] {
+                let x = rand_tensor(&mut rng, &[2, 3, h, w]);
+                let k = rand_tensor(&mut rng, &[4, 3, 3, 3]);
+                assert_eq!(
+                    conv3x3_fast(&x, &k, stride, 1),
+                    conv3x3(&x, &k, stride),
+                    "{h}x{w} stride {stride}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_single_column_falls_back_to_oracle() {
+        let mut rng = Rng::new(6);
+        let x = rand_tensor(&mut rng, &[1, 2, 4, 1]);
+        let k = rand_tensor(&mut rng, &[2, 2, 3, 3]);
+        assert_eq!(conv3x3_fast(&x, &k, 1, 1), conv3x3(&x, &k, 1));
+    }
+
+    #[test]
+    fn masked_skips_are_exact_on_a_hand_case() {
+        // One live block in a 4x4 map (block 2): the masked kernel must
+        // reproduce the oracle on the pruned input exactly.
+        let mut rng = Rng::new(7);
+        let x = rand_tensor(&mut rng, &[1, 2, 4, 4]);
+        let (pruned, mask) = relu_prune(&x, &Thresholds::Scalar(0.8), 2);
+        let k = rand_tensor(&mut rng, &[3, 2, 3, 3]);
+        for stride in [1usize, 2] {
+            assert_eq!(
+                conv3x3_masked(&pruned, &k, stride, &mask, 1),
+                conv3x3(&pruned, &k, stride),
+                "stride {stride}"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_prune_encode_matches_two_pass_pipeline() {
+        let mut rng = Rng::new(8);
+        let x = rand_tensor(&mut rng, &[2, 3, 8, 8]);
+        let codec = ZeroBlockCodec::new(4);
+        let mut a = x.clone();
+        let mask_a = relu_prune_inplace(&mut a, &Thresholds::Scalar(0.4), 4);
+        let mut buf_a = SpillBuf::new();
+        codec.encode_into(&a, &mut buf_a);
+        let mut b = x.clone();
+        let mut buf_b = SpillBuf::new();
+        let mask_b = relu_prune_encode(&mut b, &Thresholds::Scalar(0.4), 4, &mut buf_b);
+        assert_eq!(a, b, "pruned tensors must match bitwise");
+        assert_eq!(mask_a, mask_b);
+        assert_eq!(buf_a.payload(), buf_b.payload());
+        assert_eq!(buf_a.index(), buf_b.index());
+        assert_eq!(buf_a.view().to_bytes(), buf_b.view().to_bytes());
+    }
+
+    #[test]
+    fn resolve_threads_prefers_explicit() {
+        assert_eq!(resolve_threads(3), 3);
+        // With no explicit setting the result is env-driven but always
+        // positive.
+        assert!(resolve_threads(0) >= 1);
+    }
+}

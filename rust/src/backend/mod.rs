@@ -22,6 +22,7 @@
 //! threads with [`crate::coordinator::server::BackendExecutor`], which
 //! owns one dedicated execution thread per backend instance.
 
+pub mod kernels;
 pub mod reference;
 
 use anyhow::{bail, Result};
@@ -60,6 +61,14 @@ pub trait InferenceBackend {
     /// Execute one padded batch `(batch, 3, H, W)`; returns logits +
     /// per-Zebra-layer block masks for every slot.
     fn execute(&self, x: &Tensor) -> Result<ModelOutput>;
+
+    /// Worker threads this backend's compute hot path uses per
+    /// execution (see [`kernels::resolve_threads`]). Surfaced through
+    /// the serving metrics so cluster tooling can report per-node
+    /// parallelism; 1 for backends that do not thread internally.
+    fn exec_threads(&self) -> usize {
+        1
+    }
 }
 
 /// Deterministic normalized-noise images `(n, 3, hw, hw)` — the

@@ -25,7 +25,9 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
+use super::kernels;
 use super::{InferenceBackend, ModelOutput};
+use crate::compress::SpillBuf;
 use crate::tensor::{read_zten, Tensor};
 use crate::util::prng::Rng;
 use crate::zebra::blocks::BlockMask;
@@ -53,6 +55,10 @@ pub struct RefSpec {
     /// Optional directory of `w%05d.zten` leaves overriding generated
     /// weights (conv layers in order, then the classifier matrix).
     pub weights_dir: Option<PathBuf>,
+    /// Conv worker threads for the block-sparse execution engine
+    /// (0 = resolve from `ZEBRA_THREADS`, defaulting to 1). Results
+    /// are bitwise-independent of this setting.
+    pub threads: usize,
 }
 
 impl RefSpec {
@@ -71,6 +77,7 @@ impl RefSpec {
             batch_sizes: vec![1, 2, 4],
             seed: 42,
             weights_dir: None,
+            threads: 0,
         }
     }
 
@@ -125,6 +132,7 @@ impl RefSpec {
             batch_sizes: vec![1, 4, 8],
             seed: 42,
             weights_dir: None,
+            threads: 0,
         })
     }
 }
@@ -241,10 +249,13 @@ pub fn check_complete_leaves(
     Ok(())
 }
 
-/// The reference backend: deterministic weights + native execution.
+/// The reference backend: deterministic weights + native execution on
+/// the block-sparse engine (`backend::kernels`).
 pub struct ReferenceBackend {
     spec: RefSpec,
     params: RefParams,
+    /// Resolved conv worker-thread count (spec override / env / 1).
+    threads: usize,
 }
 
 impl ReferenceBackend {
@@ -299,7 +310,8 @@ impl ReferenceBackend {
                 params.fc_w.shape()
             );
         }
-        Ok(ReferenceBackend { spec, params })
+        let threads = kernels::resolve_threads(spec.threads);
+        Ok(ReferenceBackend { spec, params, threads })
     }
 
     pub fn spec(&self) -> &RefSpec {
@@ -310,13 +322,26 @@ impl ReferenceBackend {
         &self.params
     }
 
-    /// One conv layer's fused forward: 3x3 conv at the derived stride,
-    /// then ReLU + Zebra block-prune at the spec threshold. Returns
-    /// the pruned activation (the spill an accelerator would write to
-    /// DRAM) and its keep mask. `run` chains these; the trainer's tape
-    /// re-uses the same underlying ops with gradients.
+    /// One conv layer's fused forward: 3x3 conv at the derived stride
+    /// (on the block-sparse engine), then ReLU + Zebra block-prune at
+    /// the spec threshold. Returns the pruned activation (the spill an
+    /// accelerator would write to DRAM) and its keep mask. `forward`
+    /// chains the same ops, feeding each layer's mask into the next
+    /// conv as the Zebra skip; the trainer's tape re-uses the naive
+    /// oracle ops with gradients — bitwise-identical by construction.
     pub fn layer_forward(&self, i: usize, x: &Tensor) -> (Tensor, BlockMask) {
-        let mut out = conv3x3(x, &self.params.conv_w[i], self.params.strides[i]);
+        self.layer_forward_from(i, x, None)
+    }
+
+    /// [`ReferenceBackend::layer_forward`] with the previous layer's
+    /// keep-mask: zero input blocks are skipped in the conv.
+    pub fn layer_forward_from(
+        &self,
+        i: usize,
+        x: &Tensor,
+        prev_mask: Option<&BlockMask>,
+    ) -> (Tensor, BlockMask) {
+        let mut out = self.conv_layer(i, x, prev_mask);
         let mask = relu_prune_inplace(
             &mut out,
             &Thresholds::Scalar(self.spec.t_obj),
@@ -325,16 +350,53 @@ impl ReferenceBackend {
         (out, mask)
     }
 
+    /// Layer `i`'s conv dispatch on the block-sparse engine: the
+    /// masked kernel when the previous layer's keep-mask is known, the
+    /// fast dense kernel otherwise. The ONE place that choice lives —
+    /// `forward` and `layer_forward_from` both route through it.
+    fn conv_layer(
+        &self,
+        i: usize,
+        x: &Tensor,
+        prev_mask: Option<&BlockMask>,
+    ) -> Tensor {
+        let (w, stride) = (&self.params.conv_w[i], self.params.strides[i]);
+        match prev_mask {
+            Some(m) => kernels::conv3x3_masked(x, w, stride, m, self.threads),
+            None => kernels::conv3x3_fast(x, w, stride, self.threads),
+        }
+    }
+
     /// Execute and also return the pruned activation tensor of every
     /// layer (the spills an accelerator would write to DRAM) — used by
     /// `zebra simulate --backend reference` and the parity tests.
     pub fn run_capture(&self, x: &Tensor) -> Result<(ModelOutput, Vec<Tensor>)> {
-        self.run(x, true)
+        let mut spills = Vec::new();
+        let out = self.forward(x, Capture::Dense(&mut spills))?;
+        Ok((out, spills))
     }
 
-    /// Forward pass; `capture` clones every layer's pruned activation
-    /// into the returned spill list (serving skips that copy).
-    fn run(&self, x: &Tensor, capture: bool) -> Result<(ModelOutput, Vec<Tensor>)> {
+    /// Execute and stream every layer's pruned spill directly into the
+    /// zero-block codec through the fused conv -> ReLU -> prune ->
+    /// encode path: no dense capture clone, no separate encode scan.
+    /// `bufs` is grown to one reusable [`SpillBuf`] per layer and each
+    /// frame is byte-identical to encoding the corresponding
+    /// [`ReferenceBackend::run_capture`] spill with
+    /// `ZeroBlockCodec::new(layer.block)`.
+    pub fn run_capture_encoded(
+        &self,
+        x: &Tensor,
+        bufs: &mut Vec<SpillBuf>,
+    ) -> Result<ModelOutput> {
+        bufs.resize_with(self.spec.spills.len(), SpillBuf::new);
+        self.forward(x, Capture::Encoded(bufs))
+    }
+
+    /// Forward pass over the block-sparse engine: each layer's conv
+    /// skips the zero blocks its predecessor's mask recorded, and the
+    /// capture mode decides what happens to the pruned activation
+    /// (nothing, a dense clone, or a fused zero-block encode).
+    fn forward(&self, x: &Tensor, mut capture: Capture<'_>) -> Result<ModelOutput> {
         let s = x.shape();
         let hw = self.spec.in_hw;
         if s.len() != 4 || s[1] != 3 || s[2] != hw || s[3] != hw {
@@ -342,25 +404,47 @@ impl ReferenceBackend {
         }
         let mut masks = Vec::with_capacity(self.spec.spills.len());
         let mut block_elems = Vec::with_capacity(self.spec.spills.len());
-        let mut spills = Vec::new();
         let mut act = x.clone();
+        let mut prev_mask: Option<BlockMask> = None;
         for (i, sp) in self.spec.spills.iter().enumerate() {
-            let (out, mask) = self.layer_forward(i, &act);
+            let mut out = self.conv_layer(i, &act, prev_mask.as_ref());
+            let thr = Thresholds::Scalar(self.spec.t_obj);
+            let mask = match &mut capture {
+                Capture::Encoded(bufs) => kernels::relu_prune_encode(
+                    &mut out,
+                    &thr,
+                    sp.block,
+                    &mut bufs[i],
+                ),
+                _ => relu_prune_inplace(&mut out, &thr, sp.block),
+            };
+            if let Capture::Dense(spills) = &mut capture {
+                spills.push(out.clone());
+            }
             masks.push(mask_to_tensor(&mask));
             block_elems.push(sp.block * sp.block);
+            prev_mask = Some(mask);
             act = out;
-            if capture {
-                spills.push(act.clone());
-            }
         }
         let logits = self.head(&act);
-        Ok((ModelOutput { logits, masks, block_elems }, spills))
+        Ok(ModelOutput { logits, masks, block_elems })
     }
 
     /// Global average pool + linear classifier.
     fn head(&self, x: &Tensor) -> Tensor {
         linear(&global_avg_pool(x), &self.params.fc_w)
     }
+}
+
+/// What [`ReferenceBackend::forward`] does with each layer's pruned
+/// activation.
+enum Capture<'a> {
+    /// Serving: masks and logits only.
+    Discard,
+    /// Clone every pruned spill (simulate / parity tests).
+    Dense(&'a mut Vec<Tensor>),
+    /// Stream every spill through the fused zero-block encode.
+    Encoded(&'a mut Vec<SpillBuf>),
 }
 
 impl InferenceBackend for ReferenceBackend {
@@ -377,7 +461,11 @@ impl InferenceBackend for ReferenceBackend {
     }
 
     fn execute(&self, x: &Tensor) -> Result<ModelOutput> {
-        self.run(x, false).map(|(out, _)| out)
+        self.forward(x, Capture::Discard)
+    }
+
+    fn exec_threads(&self) -> usize {
+        self.threads
     }
 }
 
@@ -459,22 +547,27 @@ pub fn conv3x3(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
     out
 }
 
-/// Global average pool: NCHW -> `(N, C)` channel means.
+/// Global average pool: NCHW -> `(N, C)` channel means. Planes are
+/// contiguous, so this is one `chunks_exact` sweep over the data —
+/// no per-element index arithmetic.
 pub fn global_avg_pool(x: &Tensor) -> Tensor {
     let s = x.shape();
     assert_eq!(s.len(), 4, "global_avg_pool wants NCHW, got {s:?}");
     let (n, c) = (s[0], s[1]);
-    let area = (s[2] * s[3]) as f32;
-    let mut out = vec![0.0f32; n * c];
-    for ni in 0..n {
-        for ci in 0..c {
-            out[ni * c + ci] = x.plane(ni, ci).iter().sum::<f32>() / area;
-        }
-    }
+    let area = s[2] * s[3];
+    assert!(area > 0, "global_avg_pool over an empty {s:?} plane");
+    let out = x
+        .data()
+        .chunks_exact(area)
+        .map(|plane| plane.iter().sum::<f32>() / area as f32)
+        .collect();
     Tensor::from_vec(&[n, c], out)
 }
 
-/// Linear classifier: `(N, D) x (K, D)^T -> (N, K)` logits.
+/// Linear classifier: `(N, D) x (K, D)^T -> (N, K)` logits. Input
+/// rows, weight rows, and output rows all walk contiguous
+/// `chunks_exact` slices, so the dot-product loop carries no bounds
+/// checks or index math.
 pub fn linear(x: &Tensor, w: &Tensor) -> Tensor {
     let (n, d) = (x.shape()[0], x.shape()[1]);
     let k = w.shape()[0];
@@ -485,10 +578,13 @@ pub fn linear(x: &Tensor, w: &Tensor) -> Tensor {
         w.shape()
     );
     let mut out = vec![0.0f32; n * k];
-    for ni in 0..n {
-        let row = &x.data()[ni * d..(ni + 1) * d];
-        for (kj, slot) in out[ni * k..(ni + 1) * k].iter_mut().enumerate() {
-            let wrow = &w.data()[kj * d..(kj + 1) * d];
+    if d == 0 || k == 0 {
+        return Tensor::from_vec(&[n, k], out);
+    }
+    for (row, orow) in
+        x.data().chunks_exact(d).zip(out.chunks_exact_mut(k))
+    {
+        for (slot, wrow) in orow.iter_mut().zip(w.data().chunks_exact(d)) {
             *slot = wrow.iter().zip(row).map(|(a, b)| a * b).sum();
         }
     }
@@ -683,6 +779,68 @@ mod tests {
         let y = linear(&p, &w);
         assert_eq!(y.shape(), &[1, 3]);
         assert_eq!(y.data(), &[3.0, -1.0, 4.0]);
+    }
+
+    #[test]
+    fn engine_matches_naive_oracle_chain_bitwise() {
+        // The block-sparse engine (fast conv + masked conv + fused
+        // prune) must reproduce the naive oracle chain exactly —
+        // spill by spill, then the logits.
+        let b = ReferenceBackend::new(RefSpec::tiny()).unwrap();
+        let x = image(8, 31);
+        let (out, spills) = b.run_capture(&x).unwrap();
+        let mut act = x.clone();
+        for i in 0..b.spec.spills.len() {
+            let z = conv3x3(&act, &b.params.conv_w[i], b.params.strides[i]);
+            let (a, _) = crate::zebra::prune::relu_prune(
+                &z,
+                &Thresholds::Scalar(b.spec.t_obj),
+                b.spec.spills[i].block,
+            );
+            assert_eq!(a, spills[i], "layer {i} spill diverged from oracle");
+            act = a;
+        }
+        assert_eq!(out.logits, linear(&global_avg_pool(&act), &b.params.fc_w));
+    }
+
+    #[test]
+    fn encoded_capture_matches_dense_capture_frames() {
+        let b = ReferenceBackend::new(RefSpec::tiny()).unwrap();
+        let x = image(8, 13);
+        let (out_d, spills) = b.run_capture(&x).unwrap();
+        let mut bufs = Vec::new();
+        let out_e = b.run_capture_encoded(&x, &mut bufs).unwrap();
+        assert_eq!(out_d.logits, out_e.logits);
+        assert_eq!(out_d.masks, out_e.masks);
+        assert_eq!(bufs.len(), spills.len());
+        for (i, (sp, buf)) in spills.iter().zip(&bufs).enumerate() {
+            let codec =
+                crate::compress::ZeroBlockCodec::new(b.spec.spills[i].block);
+            let mut fresh = SpillBuf::new();
+            codec.encode_into(sp, &mut fresh);
+            assert_eq!(
+                buf.view().to_bytes(),
+                fresh.view().to_bytes(),
+                "layer {i}: fused frame must be byte-identical"
+            );
+            let mut dec = Tensor::zeros(&[0]);
+            codec.decode_into(buf.view(), &mut dec);
+            assert_eq!(&dec, sp, "layer {i}: fused frame must decode back");
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let mut s1 = RefSpec::tiny();
+        s1.threads = 1;
+        let mut s4 = RefSpec::tiny();
+        s4.threads = 4;
+        let a = ReferenceBackend::new(s1).unwrap();
+        let b = ReferenceBackend::new(s4).unwrap();
+        assert_eq!(a.exec_threads(), 1);
+        assert_eq!(b.exec_threads(), 4);
+        let x = image(8, 77);
+        assert_eq!(a.execute(&x).unwrap().logits, b.execute(&x).unwrap().logits);
     }
 
     #[test]

@@ -29,9 +29,10 @@ pub fn run_worker(args: &Args) -> Result<()> {
     let (exec, _classes, backend) =
         super::serve::build_executor(args, &crate::artifacts_dir())?;
     println!(
-        "cluster-worker backend {} | batches {:?}",
+        "cluster-worker backend {} | batches {:?} | threads {}",
         backend.name(),
-        exec.batch_sizes()
+        exec.batch_sizes(),
+        exec.exec_threads()
     );
     expose_worker(args, exec)
 }

@@ -119,6 +119,12 @@ pub fn run(args: &Args) -> Result<()> {
         Ok(stats) => {
             println!("cluster: {}", stats.summary());
             println!(
+                "worker compute threads: {} across {} alive workers \
+                 (per-worker --threads / ZEBRA_THREADS, summed from the \
+                 metrics snapshots)",
+                stats.aggregate.exec_threads, stats.workers_alive
+            );
+            println!(
                 "zero-block bandwidth savings: {:.1}% (Eq. 2-3 across \
                  {} responses)",
                 stats.aggregate.reduction_pct(),

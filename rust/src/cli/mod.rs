@@ -86,6 +86,7 @@ commands:
             [--lambda L] [--block B] [--t-obj T] [--steps N] [--batch N]
             [--lr LR] [--momentum M] [--weight-decay WD] [--seed S]
             [--train-n N] [--holdout N] [--eval-every N]
+            [--threads N]     eval-backend conv threads (ZEBRA_THREADS)
             [--images F.zten --labels F.zten]  train on exported data
             [--out DIR]                        write w%05d.zten leaves
   serve     --model KEY       run the serving pipeline over the test set
@@ -93,6 +94,9 @@ commands:
                                         when built with --features pjrt,
                                         else reference)
             [--weights DIR]   reference weights dir (trained leaves)
+            [--threads N]     conv worker threads for the block-sparse
+                              engine (default: ZEBRA_THREADS or 1;
+                              results are bitwise-identical)
             [--seed S]        synthetic test-set seed
             [--requests N] [--wait-ms MS] [--queue N]
             [--ship-codec NAME [--ship-block B]]  frame batches as .zspill
@@ -100,7 +104,9 @@ commands:
                               replaying (0 = ephemeral; prints the
                               bound address) [--host H] [--run-s N]
   cluster-worker              serve as a cluster worker node (same
-                              backend/model/ship flags as serve)
+                              backend/model/ship/--threads flags as
+                              serve; thread counts surface in the
+                              cluster metrics snapshot)
             [--port P] [--host H] [--run-s N]
             [--ship-upstream HOST:PORT]  ship .zspill batch frames to
                                          the router
@@ -116,6 +122,7 @@ commands:
   simulate  --trace DIR       accelerator simulation of a trace
             | --backend reference [--model KEY] [--images N]
                                   [--weights DIR] [--seed S]
+                                  [--threads N]
                                   simulate natively-executed spills
             [--codec dense|whole-map|rle-zero|zero-block] [--all]
   analyze   --trace DIR       sparsity + Eq.2-3 bandwidth analysis

@@ -42,10 +42,17 @@ pub(crate) fn build_executor(
     if weights.is_some() && backend != BackendKind::Reference {
         anyhow::bail!("--weights only applies to --backend reference");
     }
+    // Conv worker threads for the block-sparse engine (0 = leave it to
+    // ZEBRA_THREADS / single-threaded; results are identical either way).
+    let threads = args.get_usize("threads", 0)?;
+    if threads > 0 && backend != BackendKind::Reference {
+        anyhow::bail!("--threads only applies to --backend reference");
+    }
     let (exec, classes): (Arc<dyn BatchExecutor>, Option<usize>) = match backend
     {
         BackendKind::Reference => {
             let mut spec = RefSpec::from_key(&model)?;
+            spec.threads = threads;
             // Trained `.zten` leaves override the deterministic
             // weights: an explicit --weights DIR (e.g. fresh out of
             // `zebra train --out DIR`) wins over the artifacts probe.
@@ -133,10 +140,11 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
     let t0 = Instant::now();
     let (exec, classes, backend) = build_executor(args, &artifacts)?;
     println!(
-        "backend {} | model {} | batches {:?} | ready in {:.1}s",
+        "backend {} | model {} | batches {:?} | threads {} | ready in {:.1}s",
         backend.name(),
         model,
         exec.batch_sizes(),
+        exec.exec_threads(),
         t0.elapsed().as_secs_f64()
     );
 

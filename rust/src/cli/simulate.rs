@@ -40,6 +40,9 @@ pub fn run(args: &Args) -> Result<()> {
         let n = args.get_usize("images", 8)?.max(1);
         let seed = args.get_usize("seed", 0x5EED)? as u64;
         let mut spec = RefSpec::from_key(&model)?;
+        // Block-sparse engine worker threads (0 = ZEBRA_THREADS or 1;
+        // spills are bitwise-identical at any setting).
+        spec.threads = args.get_usize("threads", 0)?;
         // Trained leaves (e.g. from `zebra train --out DIR`): the
         // zero-block ratio below then measures the *learned* sparsity.
         if let Some(dir) = args.get("weights") {

@@ -38,6 +38,7 @@ pub fn run(args: &Args) -> Result<()> {
         n_train: args.get_usize("train-n", 256)?,
         n_holdout: args.get_usize("holdout", 64)?,
         eval_every: args.get_usize("eval-every", 0)?,
+        threads: args.get_usize("threads", 0)?,
         quiet: false,
     };
     if crate::bench::smoke() {

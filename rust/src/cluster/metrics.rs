@@ -20,8 +20,20 @@ use crate::cluster::wire::FrameError;
 use crate::coordinator::metrics::reduction_pct_of;
 use crate::coordinator::{percentile_from_buckets, Metrics};
 
-/// Counter order on the wire (stable; append-only by protocol rule).
-const COUNTERS: usize = 9;
+/// Counter order on the wire (stable; append-only by protocol rule —
+/// `exec_threads` was appended as counter 9 by the block-sparse
+/// execution-engine PR).
+const COUNTERS: usize = 10;
+
+/// Minimum counters a snapshot must carry (the original set). Parsing
+/// accepts anything in `COUNTERS_V1..`, defaulting absent appended
+/// counters to 0 and ignoring unknown future ones — so from this
+/// build on, appends are compatible in both directions. Peers built
+/// BEFORE this tolerance landed still parse strictly (exactly 9), so
+/// in a mixed cluster spanning that boundary, readers (routers /
+/// loadgen) must upgrade before emitters (workers); see
+/// rust/docs/cluster.md.
+const COUNTERS_V1: usize = 9;
 
 /// One node's serving metrics, frozen for transport and aggregation.
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
@@ -35,6 +47,9 @@ pub struct MetricsSnapshot {
     pub stored_bytes: u64,
     pub index_bytes: u64,
     pub shipped_spill_bytes: u64,
+    /// Compute worker threads per execution on this node (a gauge;
+    /// merged snapshots sum it, giving total cluster compute threads).
+    pub exec_threads: u64,
     /// Latency histogram (bucket `i` covers up to `2^i` us).
     pub latency_buckets: Vec<u64>,
 }
@@ -52,6 +67,7 @@ impl MetricsSnapshot {
             stored_bytes: m.stored_bytes.load(Ordering::Relaxed),
             index_bytes: m.index_bytes.load(Ordering::Relaxed),
             shipped_spill_bytes: m.shipped_spill_bytes.load(Ordering::Relaxed),
+            exec_threads: m.exec_threads.load(Ordering::Relaxed),
             latency_buckets: m.latency_bucket_counts().to_vec(),
         }
     }
@@ -67,6 +83,7 @@ impl MetricsSnapshot {
             self.stored_bytes,
             self.index_bytes,
             self.shipped_spill_bytes,
+            self.exec_threads,
         ]
     }
 
@@ -82,6 +99,7 @@ impl MetricsSnapshot {
         self.stored_bytes += other.stored_bytes;
         self.index_bytes += other.index_bytes;
         self.shipped_spill_bytes += other.shipped_spill_bytes;
+        self.exec_threads += other.exec_threads;
         if self.latency_buckets.len() < other.latency_buckets.len() {
             self.latency_buckets.resize(other.latency_buckets.len(), 0);
         }
@@ -142,23 +160,27 @@ impl MetricsSnapshot {
     }
 
     /// Rebuild from a decoded `[counters..][buckets..]` block.
+    /// Append-only tolerance: a pre-`exec_threads` peer sends
+    /// [`COUNTERS_V1`] counters (missing tail defaults to 0), a newer
+    /// one may send more than [`COUNTERS`] (extras ignored).
     fn from_block(vals: &U64Block) -> Result<MetricsSnapshot, FrameError> {
-        if vals.counters.len() != COUNTERS {
+        if vals.counters.len() < COUNTERS_V1 {
             return Err(FrameError::Malformed(
                 "metrics snapshot counter count mismatch",
             ));
         }
-        let c = &vals.counters;
+        let c = |i: usize| vals.counters.get(i).copied().unwrap_or(0);
         Ok(MetricsSnapshot {
-            requests: c[0],
-            responses: c[1],
-            batches: c[2],
-            batched_items: c[3],
-            padded_slots: c[4],
-            dense_bytes: c[5],
-            stored_bytes: c[6],
-            index_bytes: c[7],
-            shipped_spill_bytes: c[8],
+            requests: c(0),
+            responses: c(1),
+            batches: c(2),
+            batched_items: c(3),
+            padded_slots: c(4),
+            dense_bytes: c(5),
+            stored_bytes: c(6),
+            index_bytes: c(7),
+            shipped_spill_bytes: c(8),
+            exec_threads: c(9),
             latency_buckets: vals.buckets.clone(),
         })
     }
@@ -235,15 +257,16 @@ impl ClusterStats {
     pub fn summary(&self) -> String {
         format!(
             "workers {}/{} alive | routed={} retries={} rejected={} | \
-             cluster: responses={} mean_batch={:.2} p50={}us p95={}us \
-             p99={}us bw_reduction={:.1}% | spills: shipped={}B \
-             received={}B ({} frames)",
+             cluster: responses={} exec_threads={} mean_batch={:.2} \
+             p50={}us p95={}us p99={}us bw_reduction={:.1}% | spills: \
+             shipped={}B received={}B ({} frames)",
             self.workers_alive,
             self.workers_total,
             self.routed,
             self.retries,
             self.rejected,
             self.aggregate.responses,
+            self.aggregate.exec_threads,
             self.aggregate.mean_batch(),
             self.aggregate.latency_percentile_us(0.5),
             self.aggregate.latency_percentile_us(0.95),
@@ -330,6 +353,7 @@ mod tests {
             stored_bytes: 400 * scale,
             index_bytes: 100 * scale,
             shipped_spill_bytes: 555 * scale,
+            exec_threads: 2 * scale,
             latency_buckets: buckets,
         }
     }
@@ -350,21 +374,55 @@ mod tests {
     }
 
     #[test]
+    fn legacy_nine_counter_snapshots_still_parse() {
+        // A pre-exec_threads peer (9 counters): parses with the
+        // appended gauge defaulting to 0. Fewer than the original 9
+        // counters is malformed.
+        let mut legacy = Vec::new();
+        legacy.extend_from_slice(&9u16.to_le_bytes());
+        legacy.extend_from_slice(&0u16.to_le_bytes());
+        for v in 1u64..=9 {
+            legacy.extend_from_slice(&v.to_le_bytes());
+        }
+        let s = MetricsSnapshot::parse(&legacy).unwrap();
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.shipped_spill_bytes, 9);
+        assert_eq!(s.exec_threads, 0, "appended counter defaults to 0");
+        // A future peer with an extra appended counter also parses.
+        let mut future = Vec::new();
+        future.extend_from_slice(&11u16.to_le_bytes());
+        future.extend_from_slice(&0u16.to_le_bytes());
+        for v in 1u64..=11 {
+            future.extend_from_slice(&v.to_le_bytes());
+        }
+        let s = MetricsSnapshot::parse(&future).unwrap();
+        assert_eq!(s.exec_threads, 10);
+        // 8 counters is genuinely malformed.
+        let mut short = Vec::new();
+        short.extend_from_slice(&8u16.to_le_bytes());
+        short.extend_from_slice(&0u16.to_le_bytes());
+        for v in 1u64..=8 {
+            short.extend_from_slice(&v.to_le_bytes());
+        }
+        assert!(MetricsSnapshot::parse(&short).is_err());
+    }
+
+    #[test]
     fn absurd_bucket_counts_are_rejected() {
         // A well-framed snapshot claiming 65 buckets would map bucket
         // 64 to 2^64 us — reject it outright (shift-overflow guard).
         let mut bytes = Vec::new();
-        bytes.extend_from_slice(&9u16.to_le_bytes());
+        bytes.extend_from_slice(&10u16.to_le_bytes());
         bytes.extend_from_slice(&65u16.to_le_bytes());
-        for _ in 0..(9 + 65) {
+        for _ in 0..(10 + 65) {
             bytes.extend_from_slice(&1u64.to_le_bytes());
         }
         assert!(MetricsSnapshot::parse(&bytes).is_err());
         // 64 buckets (the cap itself) still parses.
         let mut ok = Vec::new();
-        ok.extend_from_slice(&9u16.to_le_bytes());
+        ok.extend_from_slice(&10u16.to_le_bytes());
         ok.extend_from_slice(&64u16.to_le_bytes());
-        for _ in 0..(9 + 64) {
+        for _ in 0..(10 + 64) {
             ok.extend_from_slice(&1u64.to_le_bytes());
         }
         let s = MetricsSnapshot::parse(&ok).unwrap();
@@ -397,6 +455,7 @@ mod tests {
         a.merge(&snap(2));
         assert_eq!(a.requests, 300);
         assert_eq!(a.shipped_spill_bytes, 555 * 3);
+        assert_eq!(a.exec_threads, 2 * 3, "thread gauges sum across nodes");
         assert_eq!(a.latency_buckets[7], 30);
         assert_eq!(a.latency_buckets[17], 3);
         // Merged percentiles come from merged buckets: the p99 must

@@ -49,7 +49,7 @@ mod zero_block;
 pub use dense::DenseCodec;
 pub use rle::RleZeroCodec;
 pub use whole_map::WholeMapCodec;
-pub use zero_block::ZeroBlockCodec;
+pub use zero_block::{ZeroBlockCodec, ZeroBlockEncoder};
 
 use crate::tensor::Tensor;
 

@@ -39,6 +39,73 @@ impl ZeroBlockCodec {
         assert_eq!(shape.len(), 4, "zero-block codec wants NCHW");
         BlockGrid::new(shape[0], shape[1], shape[2], shape[3], self.block)
     }
+
+    /// Start a block-streaming encode into `out`: the caller pushes
+    /// surviving blocks one at a time (in ascending block-id order)
+    /// through the returned [`ZeroBlockEncoder`]. This is the fused
+    /// serving path's entry point — prune and encode share one sweep,
+    /// and the resulting `SpillBuf` contents are byte-identical to
+    /// [`Codec::encode_into`] over the pruned tensor.
+    /// `encode_into` itself is implemented on top of this.
+    pub fn begin_blocks<'a>(
+        &self,
+        shape: &[usize],
+        out: &'a mut SpillBuf,
+    ) -> ZeroBlockEncoder<'a> {
+        let grid = self.grid_for(shape);
+        let (payload, index) =
+            out.begin(CodecId::ZeroBlock, self.block as u16, shape);
+        // Presize for the worst case (fully dense) to avoid regrowth;
+        // after the first spill this is a no-op on a reused arena.
+        payload.reserve(grid.num_blocks() * grid.block_elems() * 4);
+        index.resize(grid.index_bytes(), 0);
+        ZeroBlockEncoder { payload, index, grid, last_id: None }
+    }
+}
+
+/// Streaming block-granular zero-block encoder: records each pushed
+/// block in the Eq. 3 bitmap and appends its rows to the payload.
+/// Blocks MUST be pushed in ascending block-id order (the natural
+/// `(n, c, by, bx)` sweep) so frames stay byte-identical to the
+/// one-shot encoder; that invariant is debug-asserted.
+pub struct ZeroBlockEncoder<'a> {
+    payload: &'a mut Vec<u8>,
+    index: &'a mut Vec<u8>,
+    grid: BlockGrid,
+    last_id: Option<usize>,
+}
+
+impl ZeroBlockEncoder<'_> {
+    /// The block geometry this encoder was opened with.
+    pub fn grid(&self) -> BlockGrid {
+        self.grid
+    }
+
+    /// Record block `(n, c, by, bx)` as live and append its rows,
+    /// read from that `(n, c)` spatial plane slice.
+    pub fn push_block(
+        &mut self,
+        n: usize,
+        c: usize,
+        by: usize,
+        bx: usize,
+        plane: &[f32],
+    ) {
+        let id = self.grid.block_id(n, c, by, bx);
+        if let Some(last) = self.last_id {
+            debug_assert!(
+                last < id,
+                "blocks must be pushed in ascending id order ({last} -> {id})"
+            );
+        }
+        self.last_id = Some(id);
+        self.index[id / 8] |= 1 << (id % 8);
+        let (b, w) = (self.grid.block, self.grid.w);
+        for dy in 0..b {
+            let row = (by * b + dy) * w + bx * b;
+            push_f32s(self.payload, &plane[row..row + b]);
+        }
+    }
 }
 
 impl Codec for ZeroBlockCodec {
@@ -55,15 +122,10 @@ impl Codec for ZeroBlockCodec {
     }
 
     fn encode_into(&self, x: &Tensor, out: &mut SpillBuf) {
-        let grid = self.grid_for(x.shape());
+        let mut enc = self.begin_blocks(x.shape(), out);
+        let grid = enc.grid();
         let b = self.block;
         let (hb, wb, w) = (grid.hb(), grid.wb(), grid.w);
-        let (payload, index) =
-            out.begin(CodecId::ZeroBlock, b as u16, x.shape());
-        // Presize for the worst case (fully dense) to avoid regrowth;
-        // after the first spill this is a no-op on a reused arena.
-        payload.reserve(x.nbytes());
-        index.resize(grid.index_bytes(), 0);
         for n in 0..grid.n {
             for c in 0..grid.c {
                 let plane = x.plane(n, c);
@@ -80,12 +142,7 @@ impl Codec for ZeroBlockCodec {
                             }
                         }
                         if live {
-                            let id = grid.block_id(n, c, by, bx);
-                            index[id / 8] |= 1 << (id % 8);
-                            for dy in 0..b {
-                                let row = (by * b + dy) * w + bx * b;
-                                push_f32s(payload, &plane[row..row + b]);
-                            }
+                            enc.push_block(n, c, by, bx, plane);
                         }
                     }
                 }

@@ -56,6 +56,10 @@ pub struct Metrics {
     /// `.zspill` frame bytes produced for cross-node spill shipping
     /// (0 unless `ServerConfig::ship_spills` is set).
     pub shipped_spill_bytes: AtomicU64,
+    /// Compute worker threads the executor uses per batch (a gauge set
+    /// once at server start; summed across workers in cluster
+    /// aggregates to give total cluster compute parallelism).
+    pub exec_threads: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
 }
 
@@ -107,13 +111,14 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "requests={} responses={} batches={} mean_batch={:.2} \
-             padded={} p50={}us p95={}us p99={}us bw_reduction={:.1}% \
-             shipped={}B",
+             padded={} threads={} p50={}us p95={}us p99={}us \
+             bw_reduction={:.1}% shipped={}B",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch(),
             self.padded_slots.load(Ordering::Relaxed),
+            self.exec_threads.load(Ordering::Relaxed).max(1),
             self.latency_percentile_us(0.5),
             self.latency_percentile_us(0.95),
             self.latency_percentile_us(0.99),

@@ -64,6 +64,13 @@ pub trait BatchExecutor: Send + Sync {
     fn batch_sizes(&self) -> Vec<usize>;
     /// Image spatial size.
     fn image_hw(&self) -> usize;
+    /// Worker threads the underlying compute hot path uses per
+    /// execution (`--threads` / `ZEBRA_THREADS` on the reference
+    /// backend). Recorded in [`Metrics::exec_threads`] so every tier's
+    /// metrics can report node parallelism.
+    fn exec_threads(&self) -> usize {
+        1
+    }
 }
 
 /// Production executor: bridges any [`InferenceBackend`] onto the
@@ -77,6 +84,7 @@ pub struct BackendExecutor {
     name: String,
     sizes: Vec<usize>,
     hw: usize,
+    threads: usize,
 }
 
 struct ExecJob {
@@ -95,14 +103,20 @@ impl BackendExecutor {
         F: FnOnce() -> Result<B> + Send + 'static,
     {
         let (tx, rx) = channel::<ExecJob>();
-        let (ready_tx, ready_rx) = channel::<Result<(String, Vec<usize>, usize)>>();
+        let (ready_tx, ready_rx) = channel::<Result<BackendMeta>>();
         std::thread::spawn(move || backend_thread(init, rx, ready_tx));
-        let (name, mut sizes, hw) = ready_rx
+        let (name, mut sizes, hw, threads) = ready_rx
             .recv()
             .context("backend thread died during startup")??;
         sizes.sort_unstable();
         anyhow::ensure!(!sizes.is_empty(), "backend {name} exports no batch sizes");
-        Ok(BackendExecutor { tx: std::sync::Mutex::new(tx), name, sizes, hw })
+        Ok(BackendExecutor {
+            tx: std::sync::Mutex::new(tx),
+            name,
+            sizes,
+            hw,
+            threads,
+        })
     }
 
     /// Which backend this executor runs ("reference", "pjrt", ...).
@@ -111,17 +125,26 @@ impl BackendExecutor {
     }
 }
 
+/// Startup metadata the backend thread reports: name, batch sizes,
+/// image size, compute threads.
+type BackendMeta = (String, Vec<usize>, usize, usize);
+
 fn backend_thread<B, F>(
     init: F,
     rx: Receiver<ExecJob>,
-    ready: Sender<Result<(String, Vec<usize>, usize)>>,
+    ready: Sender<Result<BackendMeta>>,
 ) where
     B: InferenceBackend,
     F: FnOnce() -> Result<B>,
 {
     let backend = match init() {
         Ok(b) => {
-            let meta = (b.name().to_string(), b.batch_sizes(), b.image_hw());
+            let meta = (
+                b.name().to_string(),
+                b.batch_sizes(),
+                b.image_hw(),
+                b.exec_threads(),
+            );
             let _ = ready.send(Ok(meta));
             b
         }
@@ -151,6 +174,9 @@ impl BatchExecutor for BackendExecutor {
     }
     fn image_hw(&self) -> usize {
         self.hw
+    }
+    fn exec_threads(&self) -> usize {
+        self.threads
     }
 }
 
@@ -236,6 +262,12 @@ impl Server {
         let batcher =
             Arc::new(Batcher::new(exec.batch_sizes(), cfg.max_wait));
         let metrics = Arc::new(Metrics::new());
+        // Gauge, not counter: how parallel this node's compute is —
+        // surfaced through metrics snapshots so cluster tooling can
+        // report per-worker thread counts.
+        metrics
+            .exec_threads
+            .store(exec.exec_threads() as u64, Ordering::Relaxed);
         // Resolve the shipping codec once, up front: a bad codec id /
         // block combination must fail at startup, not in a worker.
         let shipper: Option<Arc<dyn Codec>> = cfg.ship_spills.map(|s| {

@@ -21,7 +21,10 @@ pub enum Thresholds<'a> {
 }
 
 impl Thresholds<'_> {
-    fn for_channel(&self, c: usize) -> f32 {
+    /// Threshold applied to channel `c` (scalar broadcast or per-channel
+    /// lookup) — public so the fused execution-engine ops in
+    /// `backend::kernels` apply exactly the same broadcast.
+    pub fn for_channel(&self, c: usize) -> f32 {
         match self {
             Thresholds::Scalar(t) => *t,
             Thresholds::PerChannel(ts) => ts[c],

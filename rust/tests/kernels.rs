@@ -1,0 +1,209 @@
+//! Bitwise-equivalence suite for the block-sparse execution engine
+//! (`backend::kernels`) against the naive oracle: the fast conv, the
+//! masked (Zebra-skip) conv, the fused conv-tail
+//! (ReLU + prune + zero-block encode), and thread-count determinism.
+//!
+//! These are the guarantees the engine rides on: the train tape keeps
+//! differentiating the naive `conv3x3`, so every fast path must agree
+//! with it bit for bit — across strides, block sizes, edge-heavy
+//! shapes, and degenerate all-zero / all-dense masks.
+
+use zebra::backend::kernels::{conv3x3_fast, conv3x3_masked, relu_prune_encode};
+use zebra::backend::reference::conv3x3;
+use zebra::compress::{Codec, SpillBuf, ZeroBlockCodec};
+use zebra::tensor::Tensor;
+use zebra::util::prng::Rng;
+use zebra::util::prop::{forall, Config};
+use zebra::zebra::prune::{block_mask, relu_prune, relu_prune_inplace, Thresholds};
+
+fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    let n = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal()).collect())
+}
+
+#[test]
+fn fast_conv_matches_oracle_on_arbitrary_shapes() {
+    // Edge-heavy coverage: tiny maps, odd H/W (not divisible by any
+    // block), strides 1 and 2 — every padding corner of the region
+    // split.
+    forall(Config::cases(60), |rng| {
+        let (n, cin, cout) = (rng.range(1, 2), rng.range(1, 4), rng.range(1, 4));
+        let (h, w) = (rng.range(1, 9), rng.range(1, 9));
+        let stride = rng.range(1, 2);
+        let x = rand_tensor(rng, &[n, cin, h, w]);
+        let k = rand_tensor(rng, &[cout, cin, 3, 3]);
+        let fast = conv3x3_fast(&x, &k, stride, 1);
+        let oracle = conv3x3(&x, &k, stride);
+        assert_eq!(
+            fast, oracle,
+            "fast != oracle at {n}x{cin}x{h}x{w} stride {stride}"
+        );
+    });
+}
+
+#[test]
+fn masked_conv_matches_oracle_across_blocks_and_strides() {
+    // The masked kernel consumes a real prune mask (so the input is
+    // genuinely zero inside masked-out blocks) over block sizes
+    // {2, 4, 8}, strides {1, 2}, and shapes where edge blocks dominate
+    // (hb/wb as small as 1).
+    forall(Config::cases(60), |rng| {
+        let b = [2usize, 4, 8][rng.range(0, 2)];
+        let h = b * rng.range(1, 3);
+        let w = b * rng.range(1, 3);
+        let (n, cin, cout) = (rng.range(1, 2), rng.range(1, 3), rng.range(1, 3));
+        let stride = rng.range(1, 2);
+        let x = rand_tensor(rng, &[n, cin, h, w]);
+        let t = rng.f32_range(0.0, 1.2);
+        let (pruned, mask) = relu_prune(&x, &Thresholds::Scalar(t), b);
+        let k = rand_tensor(rng, &[cout, cin, 3, 3]);
+        let fast = conv3x3_masked(&pruned, &k, stride, &mask, 1);
+        let oracle = conv3x3(&pruned, &k, stride);
+        assert_eq!(
+            fast, oracle,
+            "masked != oracle at {n}x{cin}x{h}x{w} b{b} stride {stride} \
+             (zero fraction {:.2})",
+            mask.zero_fraction()
+        );
+    });
+}
+
+#[test]
+fn masked_conv_handles_all_zero_and_all_dense_masks() {
+    let mut rng = Rng::new(17);
+    for b in [2usize, 4] {
+        for stride in [1usize, 2] {
+            let (h, w) = (2 * b, 3 * b);
+            let k = rand_tensor(&mut rng, &[3, 2, 3, 3]);
+            // All-zero: a fully-pruned input (every block skipped).
+            let zeros = Tensor::zeros(&[1, 2, h, w]);
+            let m0 = block_mask(&zeros, &Thresholds::Scalar(0.0), b);
+            assert_eq!(m0.kept(), 0);
+            assert_eq!(
+                conv3x3_masked(&zeros, &k, stride, &m0, 1),
+                conv3x3(&zeros, &k, stride)
+            );
+            // All-dense: every block live (the skip machinery must be
+            // a no-op, not a perturbation).
+            let mut x = rand_tensor(&mut rng, &[1, 2, h, w]);
+            for v in x.data_mut() {
+                *v = v.abs() + 0.1;
+            }
+            let m1 = block_mask(&x, &Thresholds::Scalar(0.0), b);
+            assert_eq!(m1.kept(), m1.grid.num_blocks());
+            assert_eq!(
+                conv3x3_masked(&x, &k, stride, &m1, 1),
+                conv3x3(&x, &k, stride)
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_encode_matches_separate_passes_bitwise() {
+    // conv -> ReLU -> prune -> encode fused must equal the oracle
+    // chain: naive conv3x3 + relu_prune + encode_into — pruned tensor,
+    // mask, payload, index, and the full `.zspill` frame.
+    forall(Config::cases(50), |rng| {
+        let b = [2usize, 4, 8][rng.range(0, 2)];
+        let stride = rng.range(1, 2);
+        // The prune runs on the conv OUTPUT (h/stride), so the input
+        // must be sized for the block to divide the strided map.
+        let h = b * stride * rng.range(1, 3);
+        let w = b * stride * rng.range(1, 3);
+        let (n, cin, cout) = (rng.range(1, 2), rng.range(1, 3), rng.range(1, 3));
+        let x = rand_tensor(rng, &[n, cin, h, w]);
+        let k = rand_tensor(rng, &[cout, cin, 3, 3]);
+        let t = rng.f32_range(0.0, 0.8);
+        // Oracle: naive conv, two-pass prune, separate encode scan.
+        let mut a = conv3x3(&x, &k, stride);
+        let mask_a = relu_prune_inplace(&mut a, &Thresholds::Scalar(t), b);
+        let codec = ZeroBlockCodec::new(b);
+        let mut buf_a = SpillBuf::new();
+        codec.encode_into(&a, &mut buf_a);
+        // Engine: fast conv, fused prune+encode.
+        let mut bt = conv3x3_fast(&x, &k, stride, 1);
+        let mut buf_b = SpillBuf::new();
+        let mask_b = relu_prune_encode(&mut bt, &Thresholds::Scalar(t), b, &mut buf_b);
+        assert_eq!(a, bt, "pruned activations must match bitwise");
+        assert_eq!(mask_a, mask_b);
+        assert_eq!(buf_a.payload(), buf_b.payload());
+        assert_eq!(buf_a.index(), buf_b.index());
+        assert_eq!(buf_a.view().to_bytes(), buf_b.view().to_bytes());
+        // And the fused frame round-trips to the pruned tensor.
+        let mut dec = Tensor::zeros(&[0]);
+        codec.decode_into(buf_b.view(), &mut dec);
+        assert_eq!(dec, a);
+    });
+}
+
+#[test]
+fn fused_encode_keeps_frame_identity_at_negative_thresholds() {
+    // A negative threshold "keeps" even all-zero blocks in the mask,
+    // but the codec's liveness scan never stores them — the fused
+    // path must agree byte-for-byte on that corner too.
+    let mut rng = Rng::new(31);
+    let mut x = rand_tensor(&mut rng, &[1, 2, 4, 4]);
+    for v in &mut x.data_mut()[..16] {
+        *v = -v.abs() - 0.1; // channel 0: all negative -> all-zero blocks
+    }
+    let thr = [-0.5f32, 0.2];
+    let mut a = x.clone();
+    let mask_a = relu_prune_inplace(&mut a, &Thresholds::PerChannel(&thr), 2);
+    let mut buf_a = SpillBuf::new();
+    ZeroBlockCodec::new(2).encode_into(&a, &mut buf_a);
+    let mut b = x.clone();
+    let mut buf_b = SpillBuf::new();
+    let mask_b = relu_prune_encode(&mut b, &Thresholds::PerChannel(&thr), 2, &mut buf_b);
+    assert_eq!(a, b);
+    assert_eq!(mask_a, mask_b);
+    assert!(mask_b.get(0), "all-zero block is kept at a negative threshold");
+    assert_eq!(buf_a.view().to_bytes(), buf_b.view().to_bytes());
+}
+
+#[test]
+fn fused_encode_respects_per_channel_thresholds() {
+    let mut rng = Rng::new(23);
+    let x = rand_tensor(&mut rng, &[2, 3, 8, 8]);
+    let thr = [0.1f32, 0.6, 1.4];
+    let mut a = x.clone();
+    let mask_a = relu_prune_inplace(&mut a, &Thresholds::PerChannel(&thr), 4);
+    let mut buf_a = SpillBuf::new();
+    ZeroBlockCodec::new(4).encode_into(&a, &mut buf_a);
+    let mut b = x.clone();
+    let mut buf_b = SpillBuf::new();
+    let mask_b = relu_prune_encode(&mut b, &Thresholds::PerChannel(&thr), 4, &mut buf_b);
+    assert_eq!(a, b);
+    assert_eq!(mask_a, mask_b);
+    assert_eq!(buf_a.view().to_bytes(), buf_b.view().to_bytes());
+}
+
+#[test]
+fn thread_count_never_changes_results() {
+    // Big enough that the engine actually engages its thread pool
+    // (small maps stay single-threaded by design), with a plane count
+    // that does NOT divide evenly into the thread count.
+    let mut rng = Rng::new(29);
+    // 64px maps keep even the stride-2 output planes above the
+    // engine's small-work threshold, so both strides really thread.
+    let x = rand_tensor(&mut rng, &[2, 16, 64, 64]);
+    let k = rand_tensor(&mut rng, &[5, 16, 3, 3]);
+    let (pruned, mask) = relu_prune(&x, &Thresholds::Scalar(0.5), 4);
+    for stride in [1usize, 2] {
+        let dense1 = conv3x3_fast(&pruned, &k, stride, 1);
+        let masked1 = conv3x3_masked(&pruned, &k, stride, &mask, 1);
+        assert_eq!(dense1, conv3x3(&pruned, &k, stride));
+        for threads in [2usize, 3, 8, 64] {
+            assert_eq!(
+                conv3x3_fast(&pruned, &k, stride, threads),
+                dense1,
+                "dense stride {stride} threads {threads}"
+            );
+            assert_eq!(
+                conv3x3_masked(&pruned, &k, stride, &mask, threads),
+                masked1,
+                "masked stride {stride} threads {threads}"
+            );
+        }
+    }
+}
