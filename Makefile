@@ -1,6 +1,7 @@
 # Repo-level convenience targets.
 
-.PHONY: check ci bench-smoke train-smoke cluster-smoke perf-smoke
+.PHONY: check ci bench-smoke train-smoke cluster-smoke perf-smoke \
+	simulate-smoke
 
 # Full gate: build + tests + fmt + clippy in both feature configs
 # (the pjrt config auto-skips when no XLA toolchain is present),
@@ -41,6 +42,20 @@ cluster-smoke:
 perf-smoke:
 	cd rust && ZEBRA_BENCH_SMOKE=1 ZEBRA_PERF_GUARD=1 \
 		cargo bench --bench perf_hotpath --no-default-features
+
+# Target-manifest smoke: resolve a committed .target file from disk
+# for one simulation, then sweep every builtin hardware profile with
+# `zebra targets` (--json exercises the machine-readable path).
+# ref-tiny + 2 synthetic images keeps it to seconds. rust/check.sh
+# and ci.yml invoke this target rather than duplicating the recipe.
+simulate-smoke:
+	cd rust && ZEBRA_BENCH_SMOKE=1 cargo run --release \
+		--no-default-features -- \
+		simulate --backend reference --model ref-tiny --images 2 \
+		--target targets/edge-npu.target \
+	&& ZEBRA_BENCH_SMOKE=1 cargo run --release \
+		--no-default-features -- \
+		targets --backend reference --model ref-tiny --images 2 --json
 
 train-smoke:
 	cd rust && tmp=$$(mktemp -d) && \

@@ -418,9 +418,14 @@ fn main() -> anyhow::Result<()> {
             ]),
         ),
     ]);
-    let out_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("..")
-        .join("BENCH_PR5.json");
+    // `ZEBRA_BENCH_OUT` overrides the report path (CI artifacts,
+    // side-by-side A/B runs); the default stays the committed location.
+    let out_path = match std::env::var_os("ZEBRA_BENCH_OUT") {
+        Some(p) if !p.is_empty() => std::path::PathBuf::from(p),
+        _ => std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("..")
+            .join("BENCH_PR5.json"),
+    };
     std::fs::write(&out_path, json::to_string(&root) + "\n")?;
     eprintln!(
         "  [bench] wrote {} (masked vs dense at 70% zero blocks: \

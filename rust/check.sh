@@ -54,4 +54,11 @@ make -C .. cluster-smoke
 echo "== perf smoke: masked-vs-dense kernel guard (BENCH_PR5.json)"
 make -C .. perf-smoke
 
+# Simulate smoke: load a committed .target manifest from disk and
+# sweep every builtin hardware profile through the accelerator model
+# (ref-tiny spills — seconds). Recipe in the Makefile (single source
+# of truth).
+echo "== simulate smoke: .target manifest + zebra targets sweep"
+make -C .. simulate-smoke
+
 echo "check OK"

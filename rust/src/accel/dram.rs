@@ -36,9 +36,10 @@ impl DramModel {
     }
 
     /// Cycles to move the accumulated traffic at sustained bandwidth.
-    /// Sustained = peak * 0.85 (page misses, refresh).
+    /// Sustained = peak * `cfg.sustained_frac` (page misses, refresh,
+    /// channel sharing — a per-target knob since the HAL landed).
     pub fn cycles(&self, cfg: &AccelConfig) -> u64 {
-        let sustained = cfg.dram_bytes_per_cycle * 0.85;
+        let sustained = cfg.dram_bytes_per_cycle * cfg.sustained_frac;
         (self.bus_bytes as f64 / sustained).ceil() as u64
     }
 
@@ -94,6 +95,21 @@ mod tests {
         let one_mb = d.cycles(&cfg);
         d.transfer(&cfg, 1024 * 1024);
         assert!((d.cycles(&cfg) as f64 / one_mb as f64 - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn sustained_fraction_derates_bandwidth() {
+        let mut d = DramModel::new();
+        let full = AccelConfig { sustained_frac: 1.0, ..Default::default() };
+        d.transfer(&full, 1024 * 1024);
+        let at_full = d.cycles(&full);
+        let shared = AccelConfig { sustained_frac: 0.5, ..Default::default() };
+        let at_half = d.cycles(&shared);
+        assert!(
+            (at_half as f64 / at_full as f64 - 2.0).abs() < 0.01,
+            "halving the sustained fraction must double cycles: {at_full} \
+             -> {at_half}"
+        );
     }
 
     #[test]

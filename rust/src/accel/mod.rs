@@ -15,13 +15,21 @@ mod sim;
 
 pub use dram::DramModel;
 pub use pe::PeArray;
-pub use sim::{simulate_analytic, simulate_trace, LayerDesc, LayerStats,
-              SimReport};
+pub use sim::{simulate_analytic, simulate_analytic_on, simulate_trace,
+              simulate_trace_on, simulate_trace_with, LayerDesc,
+              LayerStats, SimReport};
 
 /// Accelerator configuration. Defaults model a small edge accelerator
 /// in the Eyeriss class (16x16 MACs @ 1 GHz, LPDDR4-ish single channel)
 /// — the setting where the paper's activation-bandwidth argument bites.
-#[derive(Debug, Clone)]
+///
+/// Configs normally come from a [`hal::TargetManifest`](crate::hal)
+/// (`.target` file or builtin profile) via
+/// [`TargetManifest::accel_config`](crate::hal::TargetManifest::accel_config);
+/// the `default` profile lowers to exactly this `Default` (pinned by a
+/// parity test), so hand-constructed configs and manifest-driven ones
+/// agree.
+#[derive(Debug, Clone, PartialEq)]
 pub struct AccelConfig {
     /// PE array dimensions (MACs = rows * cols per cycle at 100% util).
     pub pe_rows: usize,
@@ -40,6 +48,10 @@ pub struct AccelConfig {
     /// Energy proxies.
     pub pj_per_mac: f64,
     pub pj_per_byte_dram: f64,
+    /// Sustained/peak DRAM bandwidth derate (page misses, refresh,
+    /// channel sharing), in (0, 1]. Was a constant 0.85 inside
+    /// [`DramModel`] before the HAL made it a per-target knob.
+    pub sustained_frac: f64,
 }
 
 impl Default for AccelConfig {
@@ -55,6 +67,7 @@ impl Default for AccelConfig {
             // DRAM access energy dominates on-chip compute by ~2 orders
             // of magnitude (Eyeriss, ref [9]) — the premise of the paper.
             pj_per_byte_dram: 60.0,
+            sustained_frac: 0.85,
         }
     }
 }

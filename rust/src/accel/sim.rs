@@ -13,6 +13,8 @@ use anyhow::Result;
 
 use super::{AccelConfig, DramModel, PeArray};
 use crate::compress::{Codec, SpillBuf};
+use crate::hal::TargetManifest;
+use crate::telemetry::Telemetry;
 use crate::tensor::Tensor;
 use crate::zebra::bandwidth::SpillShape;
 
@@ -65,6 +67,9 @@ pub struct LayerStats {
 #[derive(Debug, Clone, Default)]
 pub struct SimReport {
     pub codec: String,
+    /// Name of the [`TargetManifest`] simulated against (empty for
+    /// raw-`AccelConfig` runs).
+    pub target: String,
     pub layers: Vec<LayerStats>,
     pub total_cycles: u64,
     pub dram: DramModel,
@@ -104,12 +109,27 @@ pub fn simulate_trace(
     tensors: &[Tensor],
     codec: &dyn Codec,
 ) -> Result<SimReport> {
+    simulate_trace_with(cfg, layers, tensors, codec, &Telemetry::new())
+}
+
+/// [`simulate_trace`] with telemetry: per-layer encode wall time (and
+/// the encoded bytes that hit the simulated bus) land in `sim.encode`,
+/// the cycle model itself in `sim.model`.
+pub fn simulate_trace_with(
+    cfg: &AccelConfig,
+    layers: &[LayerDesc],
+    tensors: &[Tensor],
+    codec: &dyn Codec,
+    telemetry: &Telemetry,
+) -> Result<SimReport> {
     anyhow::ensure!(
         layers.len() == tensors.len(),
         "layer/tensor count mismatch: {} vs {}",
         layers.len(),
         tensors.len()
     );
+    let st_encode = telemetry.stage("sim.encode");
+    let st_model = telemetry.stage("sim.model");
     // One reused SpillBuf across the whole layer loop: arena capacity
     // settles at the largest spill, so the per-layer encode is
     // allocation-free (the v2 streaming hot path).
@@ -118,11 +138,30 @@ pub fn simulate_trace(
         .iter()
         .map(|t| {
             let n = t.shape()[0].max(1);
+            let _t = st_encode.time();
             codec.encode_into(t, &mut buf);
-            (buf.payload().len() / n, buf.index().len() / n)
+            let per = (buf.payload().len() / n, buf.index().len() / n);
+            st_encode.add_bytes((per.0 + per.1) as u64);
+            per
         })
         .collect();
+    let _t = st_model.time();
     Ok(run(cfg, layers, &sizes, codec.name()))
+}
+
+/// Trace-replay simulation against a named [`TargetManifest`] — the
+/// HAL entry point `zebra simulate --target` / `zebra targets` use.
+pub fn simulate_trace_on(
+    target: &TargetManifest,
+    layers: &[LayerDesc],
+    tensors: &[Tensor],
+    codec: &dyn Codec,
+    telemetry: &Telemetry,
+) -> Result<SimReport> {
+    let cfg = target.accel_config();
+    let mut r = simulate_trace_with(&cfg, layers, tensors, codec, telemetry)?;
+    r.target = target.name.clone();
+    Ok(r)
 }
 
 /// Simulate from per-layer kept-block fractions (analytic mode — used
@@ -142,6 +181,19 @@ pub fn simulate_analytic(
         })
         .collect();
     run(cfg, layers, &sizes, codec_name)
+}
+
+/// Analytic simulation against a named [`TargetManifest`].
+pub fn simulate_analytic_on(
+    target: &TargetManifest,
+    layers: &[LayerDesc],
+    kept_frac: &[f64],
+    codec_name: &str,
+) -> SimReport {
+    let mut r =
+        simulate_analytic(&target.accel_config(), layers, kept_frac, codec_name);
+    r.target = target.name.clone();
+    r
 }
 
 fn run(
@@ -285,5 +337,95 @@ mod tests {
         let layers = toy_layers();
         let r = simulate_trace(&cfg, &layers, &[], &DenseCodec);
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn default_manifest_parity_with_raw_config() {
+        // The acceptance contract for the HAL refactor: simulating on
+        // the `default` manifest produces byte-for-byte the numbers the
+        // pre-refactor hard-coded AccelConfig produced.
+        let m = TargetManifest::default();
+        let layers = toy_layers();
+        let kept = [0.6, 0.4];
+        let via_manifest = simulate_analytic_on(&m, &layers, &kept, "zb");
+        let direct =
+            simulate_analytic(&AccelConfig::default(), &layers, &kept, "zb");
+        assert_eq!(via_manifest.total_cycles, direct.total_cycles);
+        assert_eq!(
+            via_manifest.activation_bytes(),
+            direct.activation_bytes()
+        );
+        assert_eq!(via_manifest.total_energy_pj, direct.total_energy_pj);
+        assert_eq!(via_manifest.target, "default");
+        assert_eq!(direct.target, "");
+        // And the trace path agrees with itself across the two entry
+        // points.
+        let tensors = toy_tensors(false);
+        let t1 = simulate_trace_on(
+            &m,
+            &layers,
+            &tensors,
+            &DenseCodec,
+            &Telemetry::new(),
+        )
+        .unwrap();
+        let t2 = simulate_trace(
+            &AccelConfig::default(),
+            &layers,
+            &tensors,
+            &DenseCodec,
+        )
+        .unwrap();
+        assert_eq!(t1.total_cycles, t2.total_cycles);
+        assert_eq!(t1.activation_bytes(), t2.activation_bytes());
+    }
+
+    #[test]
+    fn starved_targets_run_slower_than_hbm() {
+        // Same trace, two envelopes: the bandwidth-starved profile
+        // must take more cycles AND more wall time than an HBM part.
+        let layers = toy_layers();
+        let kept = [1.0, 1.0];
+        let slow = TargetManifest {
+            name: "slow".into(),
+            dram_gbps: 1.0,
+            ..TargetManifest::default()
+        };
+        let fast = TargetManifest {
+            name: "fast".into(),
+            dram_gbps: 900.0,
+            pe_rows: 128,
+            pe_cols: 128,
+            ..TargetManifest::default()
+        };
+        let rs = simulate_analytic_on(&slow, &layers, &kept, "d");
+        let rf = simulate_analytic_on(&fast, &layers, &kept, "d");
+        assert!(rs.total_cycles > rf.total_cycles);
+        assert!(
+            rs.latency_ms(&slow.accel_config())
+                > rf.latency_ms(&fast.accel_config())
+        );
+    }
+
+    #[test]
+    fn trace_simulation_records_telemetry() {
+        let tel = Telemetry::new();
+        let layers = toy_layers();
+        let r = simulate_trace_with(
+            &AccelConfig::default(),
+            &layers,
+            &toy_tensors(false),
+            &DenseCodec,
+            &tel,
+        )
+        .unwrap();
+        let snap = tel.snapshot();
+        let enc = snap.get("sim.encode");
+        assert_eq!(enc.calls as usize, layers.len());
+        // Encoded bytes (each spill once) are bounded by the bus
+        // traffic (most spills cross twice: write, then read back).
+        assert!(enc.bytes > 0);
+        assert!(enc.bytes <= r.activation_bytes());
+        assert_eq!(snap.get("sim.model").calls, 1);
     }
 }

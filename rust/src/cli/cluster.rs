@@ -64,6 +64,10 @@ pub(crate) fn expose_worker(
     println!("cluster-worker listening on {}", node.local_addr());
     hold(args)?;
     println!("cluster-worker metrics: {}", node.metrics().summary());
+    print!(
+        "{}",
+        node.telemetry().snapshot().report(Some("serve.batch"))
+    );
     node.shutdown();
     Ok(())
 }
@@ -105,6 +109,7 @@ pub fn run_router(args: &Args) -> Result<()> {
     );
     hold(args)?;
     println!("cluster-router stats: {}", router.stats().summary());
+    print!("{}", router.telemetry().snapshot().report(None));
     router.shutdown();
     Ok(())
 }

@@ -17,6 +17,7 @@ use super::Args;
 use crate::backend::synth_images;
 use crate::cluster::ClusterClient;
 use crate::coordinator::Metrics;
+use crate::telemetry::Telemetry;
 use crate::tensor::{read_zten, Tensor};
 
 pub fn run(args: &Args) -> Result<()> {
@@ -64,6 +65,12 @@ pub fn run(args: &Args) -> Result<()> {
         }
     );
 
+    // Client-side telemetry: time spent building+submitting requests
+    // vs waiting on responses (pacing sleeps land in neither stage).
+    let telemetry = Telemetry::new();
+    let st_submit = telemetry.stage("loadgen.submit");
+    let st_wait = telemetry.stage("loadgen.wait");
+
     let t0 = Instant::now();
     let mut rxs = Vec::with_capacity(n);
     for i in 0..n {
@@ -74,16 +81,19 @@ pub fn run(args: &Args) -> Result<()> {
                 std::thread::sleep(due - now);
             }
         }
+        let _t = st_submit.time();
         let idx = i % pool;
         let img = Tensor::from_vec(
             &[3, hw, hw],
             images.data()[idx * per..(idx + 1) * per].to_vec(),
         );
+        st_submit.add_bytes((img.data().len() * 4) as u64);
         rxs.push(client.submit(&img)?);
     }
     let mut ok = 0usize;
     let mut errors = 0usize;
     for rx in rxs {
+        let _t = st_wait.time();
         match rx.recv() {
             Ok(Ok(resp)) => {
                 ok += 1;
@@ -146,6 +156,7 @@ pub fn run(args: &Args) -> Result<()> {
         }
         Err(e) => println!("(no cluster stats from {addr}: {e:#})"),
     }
+    print!("{}", telemetry.snapshot().report(None));
     client.shutdown();
     anyhow::ensure!(
         !strict || errors == 0,

@@ -125,6 +125,15 @@ commands:
                                   [--threads N]
                                   simulate natively-executed spills
             [--codec dense|whole-map|rle-zero|zero-block] [--all]
+            [--target FILE|NAME]  hardware profile (.target manifest or
+                                  a builtin name; default: default —
+                                  see rust/docs/targets.md)
+            [--json]          machine-readable report on stdout
+  targets                     sweep ONE model across every builtin
+                              hardware profile: per-target dense vs
+                              zero-block Eq.2-3 bandwidth/latency table
+                              (same input flags as simulate, plus
+                              [--json])
   analyze   --trace DIR       sparsity + Eq.2-3 bandwidth analysis
   table5    [--dataset cifar10|tiny]   static Table V arithmetic
 ";
@@ -147,6 +156,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "cluster-router" => cluster::run_router(&args),
         "loadgen" => loadgen::run(&args),
         "simulate" => simulate::run(&args),
+        "targets" => simulate::targets(&args),
         "analyze" => analyze::run(&args),
         "table5" => analyze::table5(&args),
         other => bail!("unknown command {other:?}\n{USAGE}"),
@@ -238,6 +248,30 @@ mod tests {
     #[test]
     fn simulate_without_inputs_is_an_error() {
         let e = run(&v(&["simulate"])).unwrap_err().to_string();
+        assert!(e.contains("--trace") && e.contains("--backend"), "{e}");
+    }
+
+    #[test]
+    fn simulate_rejects_unknown_targets_before_running_anything() {
+        // Fail-fast: a bad --target errors (listing the builtin names)
+        // even though the input flags are also missing — the target is
+        // resolved first, before any model execution.
+        let e = run(&v(&["simulate", "--target", "warp-core"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("warp-core"), "{e}");
+        assert!(e.contains("edge-npu") && e.contains("datacenter-hbm"), "{e}");
+    }
+
+    #[test]
+    fn targets_sweep_rejects_a_single_target_flag() {
+        let e = run(&v(&["targets", "--target", "edge-npu"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("simulate"), "{e}");
+        // And without inputs it reports the same missing-input error
+        // simulate does (profiles load fine; inputs are the gap).
+        let e = run(&v(&["targets"])).unwrap_err().to_string();
         assert!(e.contains("--trace") && e.contains("--backend"), "{e}");
     }
 

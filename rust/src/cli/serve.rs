@@ -225,6 +225,7 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
         if synthetic { " (synthetic labels — accuracy is chance)" } else { "" }
     );
     println!("metrics: {}", server.metrics.summary());
+    print!("{}", server.telemetry.snapshot().report(Some("serve.batch")));
     server.shutdown();
     Ok(())
 }

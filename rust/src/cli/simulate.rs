@@ -1,24 +1,53 @@
 //! `zebra simulate` — run the accelerator model over real activation
 //! spills with one codec (or all of them) and print the per-layer
-//! timing/traffic table.
+//! timing/traffic table, and `zebra targets` — sweep one model across
+//! every committed hardware profile in `rust/targets/`.
 //!
 //! Spills come from either a Python-dumped trace (`--trace DIR`) or,
 //! artifact-free, from natively executing the reference backend on
 //! synthetic images (`--backend reference [--model KEY] [--images N]`).
+//! The hardware envelope comes from a target manifest
+//! (`--target <file|name>`, default `default` — see
+//! `rust/docs/targets.md`); `--json` swaps the tables for one
+//! machine-readable document on stdout.
+
+use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
 use super::Args;
-use crate::accel::{simulate_trace, AccelConfig, LayerDesc, SimReport};
+use crate::accel::{
+    simulate_trace_on, AccelConfig, LayerDesc, SimReport,
+};
 use crate::backend::reference::{RefSpec, ReferenceBackend};
 use crate::backend::{synth_images, BackendKind, InferenceBackend};
 use crate::bench::Table;
-use crate::compress::{all_codecs, from_name, DenseCodec};
+use crate::compress::{all_codecs, from_name, DenseCodec, ZeroBlockCodec};
+use crate::hal::{builtin_targets, resolve_target, TargetManifest};
+use crate::telemetry::Telemetry;
 use crate::tensor::Tensor;
+use crate::util::json::{self, Value};
 use crate::zebra::bandwidth::fmt_bytes;
 
-pub fn run(args: &Args) -> Result<()> {
-    let (label, layers, tensors) = if let Some(dir) = args.get("trace") {
+/// The model + its captured spills, ready to simulate on any target.
+struct SimInputs {
+    label: String,
+    layers: Vec<LayerDesc>,
+    tensors: Vec<Tensor>,
+}
+
+/// Load simulation inputs the way `zebra simulate` always has. With
+/// `quiet` (JSON mode) the progress/summary lines go to stderr so
+/// stdout stays machine-readable.
+fn load_inputs(args: &Args, quiet: bool) -> Result<SimInputs> {
+    let say = |line: String| {
+        if quiet {
+            eprintln!("{line}");
+        } else {
+            println!("{line}");
+        }
+    };
+    if let Some(dir) = args.get("trace") {
         if args.get("weights").is_some() {
             bail!("--weights only applies to --backend reference");
         }
@@ -27,7 +56,7 @@ pub fn run(args: &Args) -> Result<()> {
         let layers = LayerDesc::from_plan(&plan);
         let tensors: Vec<Tensor> =
             tr.spills.iter().map(|s| s.tensor.clone()).collect();
-        (tr.model.clone(), layers, tensors)
+        Ok(SimInputs { label: tr.model.clone(), layers, tensors })
     } else if args.get("backend").is_some() {
         let backend = BackendKind::parse(&args.get_or("backend", "reference"))?;
         if backend != BackendKind::Reference {
@@ -54,82 +83,277 @@ pub fn run(args: &Args) -> Result<()> {
             // Explicit --weights must be a complete checkpoint — no
             // silent per-leaf fallback to generated weights.
             crate::backend::reference::check_complete_leaves(&spec, &dir)?;
-            println!("loading reference weights from {dir:?}");
+            say(format!("loading reference weights from {dir:?}"));
             spec.weights_dir = Some(dir);
         }
         let be = ReferenceBackend::new(spec)?;
         let x = synth_images(be.image_hw(), n, seed);
-        println!(
+        say(format!(
             "executing {model} on the reference backend ({n} synthetic \
              images, seed {seed:#x}) ..."
-        );
+        ));
         let (_, spills) = be.run_capture(&x)?;
-        print_zero_block_summary(be.spec(), &spills, n);
+        say(zero_block_summary(be.spec(), &spills, n));
         let layers = LayerDesc::from_plan(&be.spec().spills);
-        (model, layers, spills)
+        Ok(SimInputs { label: model, layers, tensors: spills })
     } else {
         bail!("simulate needs --trace DIR or --backend reference");
-    };
+    }
+}
 
-    let cfg = AccelConfig::default();
-    // One codec instance encodes every layer, so its block size must
-    // divide every map. Blocks are powers of two clamped to the map
-    // (models::block_for), so the plan's MINIMUM block divides all
-    // maps; the max would panic on plans whose deep layers shrink the
-    // block (vgg16/mbnet 2x2 tails).
-    let block = layers
-        .iter()
-        .map(|l| l.spill.block)
-        .min()
-        .unwrap_or(4);
+/// One codec instance encodes every layer, so its block size must
+/// divide every map. Blocks are powers of two clamped to the map
+/// (models::block_for), so the plan's MINIMUM block divides all maps;
+/// the max would panic on plans whose deep layers shrink the block
+/// (vgg16/mbnet 2x2 tails).
+fn common_block(layers: &[LayerDesc]) -> usize {
+    layers.iter().map(|l| l.spill.block).min().unwrap_or(4)
+}
 
-    let dense = simulate_trace(&cfg, &layers, &tensors, &DenseCodec)?;
+pub fn run(args: &Args) -> Result<()> {
+    // Resolve the hardware envelope before any heavy work: a bad
+    // --target must fail fast, not after a model execution.
+    let target = resolve_target(&args.get_or("target", "default"))?;
+    let json_mode = args.get("json").is_some();
+    let inputs = load_inputs(args, json_mode)?;
+    let SimInputs { label, layers, tensors } = &inputs;
+    let telemetry = Telemetry::new();
+    let block = common_block(layers);
+
+    let dense =
+        simulate_trace_on(&target, layers, tensors, &DenseCodec, &telemetry)?;
+    let cfg = target.accel_config();
+    let mut reports: Vec<SimReport> = Vec::new();
     if args.get("all").is_some() {
-        let mut t = Table::new(&[
-            "codec", "act bytes/img", "cycles", "latency ms", "energy uJ",
-            "reduction %",
-        ]);
         for codec in all_codecs(block) {
-            let r = simulate_trace(&cfg, &layers, &tensors, codec.as_ref())?;
-            push_summary(&mut t, &cfg, &r, &dense);
+            reports.push(simulate_trace_on(
+                &target,
+                layers,
+                tensors,
+                codec.as_ref(),
+                &telemetry,
+            )?);
         }
-        t.print(&format!("Accelerator simulation — {label} (all codecs)"));
     } else {
         let name = args.get_or("codec", "zero-block");
         // Registry-backed parsing: an unknown name errors with the full
         // list of valid codec names.
         let codec = from_name(&name, block)?;
-        let r = simulate_trace(&cfg, &layers, &tensors, codec.as_ref())?;
-        per_layer_table(&r).print(&format!(
-            "Accelerator simulation — {label} with {name}"
-        ));
-        let mut t = Table::new(&[
-            "codec", "act bytes/img", "cycles", "latency ms", "energy uJ",
-            "reduction %",
+        reports.push(dense.clone());
+        reports.push(simulate_trace_on(
+            &target,
+            layers,
+            tensors,
+            codec.as_ref(),
+            &telemetry,
+        )?);
+    }
+
+    if json_mode {
+        let doc = obj(vec![
+            ("model", Value::Str(label.clone())),
+            ("target", target_json(&target)),
+            (
+                "codecs",
+                Value::Array(
+                    reports
+                        .iter()
+                        .map(|r| report_json(r, &cfg, &dense))
+                        .collect(),
+                ),
+            ),
         ]);
-        push_summary(&mut t, &cfg, &dense, &dense);
-        push_summary(&mut t, &cfg, &r, &dense);
+        println!("{}", json::to_string(&doc));
+        return Ok(());
+    }
+
+    println!("target {}", target.describe());
+    if args.get("all").is_some() {
+        let mut t = summary_table();
+        for r in &reports {
+            push_summary(&mut t, &cfg, r, &dense);
+        }
+        t.print(&format!(
+            "Accelerator simulation — {label} on {} (all codecs)",
+            target.name
+        ));
+    } else {
+        let r = reports.last().expect("dense + one codec");
+        per_layer_table(r).print(&format!(
+            "Accelerator simulation — {label} with {} on {}",
+            r.codec, target.name
+        ));
+        let mut t = summary_table();
+        for r in &reports {
+            push_summary(&mut t, &cfg, r, &dense);
+        }
         t.print("Summary vs dense");
     }
+    print!("{}", telemetry.snapshot().report(Some("sim.model")));
     Ok(())
+}
+
+/// `zebra targets` — run one model's spills across every committed
+/// hardware profile and print the per-target dense-vs-Zebra Eq. 2–3
+/// bandwidth/latency table.
+pub fn targets(args: &Args) -> Result<()> {
+    let json_mode = args.get("json").is_some();
+    if args.get("target").is_some() {
+        bail!("`zebra targets` sweeps ALL profiles; use `zebra simulate \
+               --target` for one");
+    }
+    let profiles = builtin_targets()?;
+    let inputs = load_inputs(args, json_mode)?;
+    let SimInputs { label, layers, tensors } = &inputs;
+    let telemetry = Telemetry::new();
+    let block = common_block(layers);
+    let zb = ZeroBlockCodec::new(block);
+
+    let mut rows = Vec::new();
+    for target in &profiles {
+        let dense = simulate_trace_on(
+            target, layers, tensors, &DenseCodec, &telemetry,
+        )?;
+        let zebra =
+            simulate_trace_on(target, layers, tensors, &zb, &telemetry)?;
+        rows.push((target, dense, zebra));
+    }
+
+    if json_mode {
+        let doc = obj(vec![
+            ("model", Value::Str(label.clone())),
+            (
+                "targets",
+                Value::Array(
+                    rows.iter()
+                        .map(|(t, dense, zebra)| {
+                            let cfg = t.accel_config();
+                            obj(vec![
+                                ("target", target_json(t)),
+                                ("dense", report_json(dense, &cfg, dense)),
+                                ("zebra", report_json(zebra, &cfg, dense)),
+                                (
+                                    "speedup",
+                                    num(speedup(dense, zebra)),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        println!("{}", json::to_string(&doc));
+        return Ok(());
+    }
+
+    for t in &profiles {
+        println!("target {}", t.describe());
+    }
+    let mut table = Table::new(&[
+        "target",
+        "DRAM GB/s",
+        "dense ms",
+        "zebra ms",
+        "speedup",
+        "dense act",
+        "zebra act",
+        "reduction %",
+        "mem-bound",
+    ]);
+    for (t, dense, zebra) in &rows {
+        let cfg = t.accel_config();
+        let bound =
+            zebra.layers.iter().filter(|l| l.memory_bound).count();
+        table.row(&[
+            t.name.clone(),
+            format!("{:.1}", t.dram_gbps),
+            format!("{:.3}", dense.latency_ms(&cfg)),
+            format!("{:.3}", zebra.latency_ms(&cfg)),
+            format!("{:.2}x", speedup(dense, zebra)),
+            fmt_bytes(dense.activation_bytes() as f64),
+            fmt_bytes(zebra.activation_bytes() as f64),
+            format!("{:.1}", zebra.reduction_vs(dense)),
+            format!("{}/{}", bound, zebra.layers.len()),
+        ]);
+    }
+    table.print(&format!(
+        "Eq. 2-3 dense vs zero-block({block}) — {label} across {} targets",
+        rows.len()
+    ));
+    print!("{}", telemetry.snapshot().report(Some("sim.model")));
+    Ok(())
+}
+
+fn speedup(dense: &SimReport, zebra: &SimReport) -> f64 {
+    dense.total_cycles as f64 / zebra.total_cycles.max(1) as f64
+}
+
+fn num(v: f64) -> Value {
+    Value::Num(v)
+}
+
+fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Object(
+        pairs
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+/// The manifest, field for field (what `--json` consumers key off).
+fn target_json(t: &TargetManifest) -> Value {
+    obj(vec![
+        ("name", Value::Str(t.name.clone())),
+        ("description", Value::Str(t.description.clone())),
+        ("dram_gbps", num(t.dram_gbps)),
+        ("burst_bytes", num(t.burst_bytes as f64)),
+        ("local_buffer_kib", num(t.local_buffer_kib as f64)),
+        ("pe_rows", num(t.pe_rows as f64)),
+        ("pe_cols", num(t.pe_cols as f64)),
+        ("clock_mhz", num(t.clock_mhz)),
+        (
+            "int8_tops",
+            t.int8_tops.map(Value::Num).unwrap_or(Value::Null),
+        ),
+        ("pj_per_mac", num(t.pj_per_mac)),
+        ("pj_per_byte_dram", num(t.pj_per_byte_dram)),
+        ("sustained_fraction", num(t.sustained_fraction)),
+    ])
+}
+
+/// One codec's simulation outcome — the same fields as the printed
+/// summary table.
+fn report_json(r: &SimReport, cfg: &AccelConfig, dense: &SimReport) -> Value {
+    let bound = r.layers.iter().filter(|l| l.memory_bound).count();
+    obj(vec![
+        ("codec", Value::Str(r.codec.clone())),
+        ("act_bytes_per_img", num(r.activation_bytes() as f64)),
+        ("cycles", num(r.total_cycles as f64)),
+        ("latency_ms", num(r.latency_ms(cfg))),
+        ("energy_uj", num(r.total_energy_pj / 1e6)),
+        ("reduction_pct", num(r.reduction_vs(dense))),
+        ("memory_bound_layers", num(bound as f64)),
+        ("layers", num(r.layers.len() as f64)),
+    ])
 }
 
 /// Eq. 2–3 accounting of the captured spills, through the same
 /// `zero_block_accounting` path `zebra train`'s per-epoch evaluation
 /// uses — the quantity training optimizes, printed here so
 /// trained-vs-untrained runs are directly comparable.
-fn print_zero_block_summary(
+fn zero_block_summary(
     spec: &crate::backend::reference::RefSpec,
     spills: &[Tensor],
     images: usize,
-) {
+) -> String {
     let s = crate::zebra::bandwidth::zero_block_accounting(
         &spec.spills,
         spills,
     );
     // The report is already per image (kept fractions are
     // batch-invariant; shapes are per-map).
-    println!(
+    format!(
         "zero blocks: {:.1}% ({} of {} across {} layers, {} images) | \
          Eq.2-3: required {}/img, stored {}/img, index {}/img -> \
          reduction {:.1}%",
@@ -142,7 +366,14 @@ fn print_zero_block_summary(
         fmt_bytes(s.report.stored_bytes),
         fmt_bytes(s.report.overhead_bytes),
         s.report.reduced_pct()
-    );
+    )
+}
+
+fn summary_table() -> Table {
+    Table::new(&[
+        "codec", "act bytes/img", "cycles", "latency ms", "energy uJ",
+        "reduction %",
+    ])
 }
 
 fn push_summary(

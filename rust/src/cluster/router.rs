@@ -47,6 +47,7 @@ use super::metrics::{ClusterStats, MetricsSnapshot};
 use super::wire::{self, Frame, FrameType};
 use crate::compress::EncodedView;
 use crate::coordinator::Metrics;
+use crate::telemetry::Telemetry;
 
 /// How often the accept loop polls its shutdown flag.
 const ACCEPT_POLL: Duration = Duration::from_millis(10);
@@ -175,6 +176,10 @@ struct Inner {
     rejected: AtomicU64,
     spill_frames_in: AtomicU64,
     spill_bytes_in: AtomicU64,
+    /// Wall-time/byte stages: `router.dispatch` (submit -> handed to a
+    /// worker link) and `router.spill_ingest` (shipped `.zspill`
+    /// validation + accounting).
+    telemetry: Arc<Telemetry>,
     shutdown: AtomicBool,
 }
 
@@ -235,6 +240,7 @@ impl Router {
             rejected: AtomicU64::new(0),
             spill_frames_in: AtomicU64::new(0),
             spill_bytes_in: AtomicU64::new(0),
+            telemetry: Arc::new(Telemetry::new()),
             shutdown: AtomicBool::new(false),
         });
         for idx in 0..inner.links.len() {
@@ -280,6 +286,11 @@ impl Router {
     /// the wire and merged, plus the router's own counters.
     pub fn stats(&self) -> ClusterStats {
         gather_stats(&self.inner)
+    }
+
+    /// The router's own wall-time/byte telemetry (`router.*` stages).
+    pub fn telemetry(&self) -> Arc<Telemetry> {
+        self.inner.telemetry.clone()
     }
 
     /// Stop serving: closes worker connections and joins the router's
@@ -678,6 +689,8 @@ fn client_conn(inner: Arc<Inner>, stream: TcpStream) {
             }
         }
     });
+    let st_dispatch = inner.telemetry.stage("router.dispatch");
+    let st_spill = inner.telemetry.stage("router.spill_ingest");
     while !inner.shutdown.load(Ordering::SeqCst) {
         let frame = match Frame::read_from(&mut rd) {
             Ok(f) => f,
@@ -708,6 +721,8 @@ fn client_conn(inner: Arc<Inner>, stream: TcpStream) {
                 };
                 let client =
                     ClientReply { tx: out_tx.clone(), wire_id: frame.id };
+                let _t = st_dispatch.time();
+                st_dispatch.add_bytes(frame.payload.len() as u64);
                 dispatch(&inner, frame.payload, key, 0, client, None);
             }
             FrameType::Heartbeat => {
@@ -732,6 +747,8 @@ fn client_conn(inner: Arc<Inner>, stream: TcpStream) {
                 // payload length is exactly what the worker metered as
                 // shipped_spill_bytes; validate the frame so corrupt
                 // spills are counted as errors, not savings.
+                let _t = st_spill.time();
+                st_spill.add_bytes(frame.payload.len() as u64);
                 match EncodedView::parse(&frame.payload) {
                     Ok(_) => {
                         inner

@@ -29,6 +29,7 @@ use super::metrics::MetricsSnapshot;
 use super::wire::{self, Frame, FrameType, WireResponse};
 use crate::coordinator::server::{BatchExecutor, Response};
 use crate::coordinator::{Metrics, Server, ServerConfig};
+use crate::telemetry::{Stage, Telemetry};
 
 /// How often the accept loop polls its shutdown flag.
 const ACCEPT_POLL: Duration = Duration::from_millis(10);
@@ -102,7 +103,8 @@ impl WorkerNode {
         let conns = Arc::new(Mutex::new(Vec::new()));
         if let Some((peer, rx)) = upstream {
             let sd = shutdown.clone();
-            std::thread::spawn(move || upstream_pump(peer, rx, sd));
+            let st = server.telemetry.stage("wire.ship_upstream");
+            std::thread::spawn(move || upstream_pump(peer, rx, sd, st));
         }
         let accept = {
             let server = server.clone();
@@ -129,6 +131,12 @@ impl WorkerNode {
     /// This node's live serving metrics.
     pub fn metrics(&self) -> Arc<Metrics> {
         self.server.metrics.clone()
+    }
+
+    /// This node's wall-time/byte telemetry (the coordinator's stages
+    /// plus the wire-layer `wire.*` stages this module records).
+    pub fn telemetry(&self) -> Arc<Telemetry> {
+        self.server.telemetry.clone()
     }
 
     /// The wrapped coordinator server.
@@ -221,9 +229,13 @@ fn serve_conn(
     let pump = {
         let idmap = idmap.clone();
         let out_tx = out_tx.clone();
-        std::thread::spawn(move || response_pump(resp_rx, idmap, out_tx))
+        let st = server.telemetry.stage("wire.respond");
+        std::thread::spawn(move || response_pump(resp_rx, idmap, out_tx, st))
     };
 
+    // Wire-layer accounting: inbound frame dispatch time + payload
+    // bytes, per connection-reader thread (handles resolved once).
+    let st_handle = server.telemetry.stage("wire.handle");
     while !shutdown.load(Ordering::SeqCst) {
         let frame = match Frame::read_from(&mut rd) {
             Ok(f) => f,
@@ -234,6 +246,8 @@ fn serve_conn(
                 break;
             }
         };
+        st_handle.add_bytes(frame.payload.len() as u64);
+        let _t = st_handle.time();
         let reply = handle_frame(&server, image_hw, &idmap, &resp_tx, frame);
         if let Some(bytes) = reply {
             if out_tx.send(bytes).is_err() {
@@ -321,13 +335,16 @@ fn response_pump(
     rx: Receiver<Response>,
     idmap: Arc<Mutex<HashMap<u64, u64>>>,
     out_tx: Sender<Vec<u8>>,
+    st_respond: Arc<Stage>,
 ) {
     while let Ok(resp) = rx.recv() {
+        let _t = st_respond.time();
         let wire_id = idmap.lock().unwrap().remove(&resp.id);
         let Some(wire_id) = wire_id else { continue };
         let payload = WireResponse::from_response(&resp).encode();
         let bytes =
             Frame::new(FrameType::Response, wire_id, payload).encode();
+        st_respond.add_bytes(bytes.len() as u64);
         if out_tx.send(bytes).is_err() {
             break;
         }
@@ -343,11 +360,14 @@ fn upstream_pump(
     addr: String,
     rx: Receiver<Vec<u8>>,
     shutdown: Arc<AtomicBool>,
+    st_ship: Arc<Stage>,
 ) {
     let mut conn: Option<TcpStream> = None;
     let mut seq = 0u64;
     while let Ok(spill) = rx.recv() {
+        let _t = st_ship.time();
         let bytes = Frame::new(FrameType::SpillShip, seq, spill).encode();
+        st_ship.add_bytes(bytes.len() as u64);
         seq += 1;
         loop {
             if shutdown.load(Ordering::SeqCst) {

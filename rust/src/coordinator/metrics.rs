@@ -181,6 +181,34 @@ mod tests {
     }
 
     #[test]
+    fn percentile_edge_cases() {
+        // Empty slice and all-zero counts: no samples -> 0.
+        assert_eq!(percentile_from_buckets(&[], 0.5), 0);
+        assert_eq!(percentile_from_buckets(&[0; LATENCY_BUCKETS], 0.99), 0);
+        // A single populated bucket answers every percentile with that
+        // bucket's upper bound.
+        let mut one = [0u64; LATENCY_BUCKETS];
+        one[7] = 42;
+        for p in [0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(percentile_from_buckets(&one, p), 1 << 7);
+        }
+        // Everything in the overflow (last) bucket.
+        let mut last = [0u64; LATENCY_BUCKETS];
+        last[LATENCY_BUCKETS - 1] = 5;
+        assert_eq!(
+            percentile_from_buckets(&last, 0.5),
+            1u64 << (LATENCY_BUCKETS - 1)
+        );
+        // Histograms wider than 64 buckets clamp the shift instead of
+        // overflowing (version-skewed cluster peers).
+        let mut wide = vec![0u64; 80];
+        wide[79] = 1;
+        assert_eq!(percentile_from_buckets(&wide, 0.5), 1u64 << 63);
+        // p beyond the mass still lands in the last populated bucket.
+        assert_eq!(percentile_from_buckets(&[1, 0, 0], 1.0), 1);
+    }
+
+    #[test]
     fn summary_surfaces_p95() {
         let m = Metrics::new();
         m.record_latency_us(1000);

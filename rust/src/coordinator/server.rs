@@ -18,6 +18,7 @@ use super::batcher::Batcher;
 use super::metrics::Metrics;
 use crate::backend::{InferenceBackend, ModelOutput};
 use crate::compress::{self, Codec, CodecId, SpillBuf};
+use crate::telemetry::Telemetry;
 use crate::tensor::Tensor;
 use crate::zebra::bandwidth::ELEM_BITS;
 
@@ -252,6 +253,12 @@ impl Default for ServerConfig {
 pub struct Server {
     batcher: Arc<Batcher<Request>>,
     pub metrics: Arc<Metrics>,
+    /// Wall-time/byte accounting for the serving hot loop. Every batch
+    /// records a `serve.batch` umbrella scope plus `serve.assemble`,
+    /// `serve.ship`, `serve.execute` and `serve.respond` sub-stages, so
+    /// `snapshot().coverage("serve.batch", ...)` attributes (nearly)
+    /// all worker wall time.
+    pub telemetry: Arc<Telemetry>,
     workers: Vec<std::thread::JoinHandle<()>>,
     next_id: std::sync::atomic::AtomicU64,
     max_queue: usize,
@@ -284,6 +291,7 @@ impl Server {
             );
             Arc::from(codec)
         });
+        let telemetry = Arc::new(Telemetry::new());
         let mut workers = Vec::new();
         for _ in 0..cfg.workers.max(1) {
             let b = batcher.clone();
@@ -291,13 +299,15 @@ impl Server {
             let e = exec.clone();
             let s = shipper.clone();
             let sink = cfg.spill_sink.clone();
+            let t = telemetry.clone();
             workers.push(std::thread::spawn(move || {
-                worker_loop(b, e, m, s, sink)
+                worker_loop(b, e, m, s, sink, t)
             }));
         }
         Server {
             batcher,
             metrics,
+            telemetry,
             workers,
             next_id: std::sync::atomic::AtomicU64::new(0),
             max_queue: cfg.max_queue,
@@ -366,12 +376,25 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     shipper: Option<Arc<dyn Codec>>,
     spill_sink: Option<Sender<Vec<u8>>>,
+    telemetry: Arc<Telemetry>,
 ) {
     let hw = exec.image_hw();
+    // Stage handles resolved once — recording inside the loop is two
+    // relaxed atomics, no lock. `serve.batch` is the umbrella scope
+    // (batch in hand -> responses sent); the sub-stages must account
+    // for >= 95% of it (pinned by the loopback telemetry test).
+    let st_batch = telemetry.stage("serve.batch");
+    let st_assemble = telemetry.stage("serve.assemble");
+    let st_ship = telemetry.stage("serve.ship");
+    let st_execute = telemetry.stage("serve.execute");
+    let st_respond = telemetry.stage("serve.respond");
     // One SpillBuf per worker: spill-shipping reuses its arenas across
     // every batch this worker ever executes.
     let mut spill_buf = SpillBuf::new();
     while let Some(batch) = batcher.next_batch() {
+        // Time starts when a batch is in hand — queue wait is the
+        // batcher's, not this worker's.
+        let _whole = st_batch.time();
         let n = batch.items.len();
         let exec_size = batch.exec_size;
         metrics.batches.fetch_add(1, Ordering::Relaxed);
@@ -380,12 +403,14 @@ fn worker_loop(
             .padded_slots
             .fetch_add(batch.padding() as u64, Ordering::Relaxed);
         // Assemble the padded batch tensor.
+        let t_assemble = st_assemble.time();
         let mut x = Tensor::zeros(&[exec_size, 3, hw, hw]);
         let per = 3 * hw * hw;
         for (i, req) in batch.items.iter().enumerate() {
             let src = req.image.data();
             x.data_mut()[i * per..(i + 1) * per].copy_from_slice(src);
         }
+        drop(t_assemble);
         // Cross-node shipping: encode the batch into the worker's
         // reused SpillBuf and meter the exact `.zspill` frame size a
         // peer node receives. Without a sink the frame is never
@@ -395,8 +420,10 @@ fn worker_loop(
         // the request path.
         let frame_share = match &shipper {
             Some(codec) => {
+                let _t = st_ship.time();
                 codec.encode_into(&x, &mut spill_buf);
                 let len = spill_buf.view().frame_len() as u64;
+                st_ship.add_bytes(len);
                 metrics
                     .shipped_spill_bytes
                     .fetch_add(len, Ordering::Relaxed);
@@ -409,8 +436,15 @@ fn worker_loop(
             }
             None => 0,
         };
-        match exec.execute(&x) {
-            Ok(out) => respond(batch.items, &out, &metrics, frame_share),
+        let result = {
+            let _t = st_execute.time();
+            exec.execute(&x)
+        };
+        match result {
+            Ok(out) => {
+                let _t = st_respond.time();
+                respond(batch.items, &out, &metrics, frame_share);
+            }
             Err(e) => {
                 // Failed batch: drop the reply channels; callers see a
                 // RecvError. Metrics still count the attempt.
@@ -606,6 +640,41 @@ mod tests {
             srv.metrics.shipped_spill_bytes.load(Ordering::Relaxed),
             0
         );
+        srv.shutdown();
+    }
+
+    #[test]
+    fn telemetry_accounts_the_worker_wall_time() {
+        let exec = Arc::new(MockExec {
+            hw: 4,
+            sizes: vec![1, 4],
+            delay: Duration::from_millis(4),
+        });
+        let srv = Server::start(exec, ServerConfig::default());
+        for _ in 0..6 {
+            srv.classify(image(4, 0.9)).unwrap();
+        }
+        let snap = srv.telemetry.snapshot();
+        let cov = snap
+            .coverage(
+                "serve.batch",
+                &[
+                    "serve.assemble",
+                    "serve.ship",
+                    "serve.execute",
+                    "serve.respond",
+                ],
+            )
+            .expect("serve.batch must have recorded time");
+        assert!(
+            cov >= 0.95,
+            "sub-stages cover only {:.1}% of the hot loop",
+            100.0 * cov
+        );
+        assert!(snap.get("serve.execute").calls >= 1);
+        assert_eq!(snap.get("serve.batch").calls, snap.get("serve.execute").calls);
+        // No shipping configured: the stage exists but never moved bytes.
+        assert_eq!(snap.get("serve.ship").bytes, 0);
         srv.shutdown();
     }
 

@@ -1,0 +1,575 @@
+//! `.target` manifest parsing: strict, never-panicking, like `.zspill`
+//! and `.zten`.
+//!
+//! The format is a line-based TOML subset — `key = value` pairs, `#`
+//! comments, double-quoted strings — chosen so the committed profiles
+//! in `rust/targets/` stay hand-editable while the parser keeps the
+//! repo's wire-format discipline: every malformed input (unknown key,
+//! duplicate key, missing key, zero/negative/non-finite number,
+//! truncated line, oversized file, non-UTF-8 bytes) is a structured
+//! `Err`, never a panic.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::accel::AccelConfig;
+
+/// Largest `.target` file the loader will read (stat-before-read, the
+/// same pre-allocation bound discipline the `.zten` reader uses). A
+/// real manifest is a few hundred bytes.
+pub const MAX_TARGET_FILE_BYTES: u64 = 64 * 1024;
+
+/// Every key the format accepts, with its requiredness — the single
+/// source of truth for parse-time validation and error messages.
+const KEYS: &[(&str, bool)] = &[
+    ("name", true),
+    ("description", false),
+    ("dram_gbps", true),
+    ("burst_bytes", true),
+    ("local_buffer_kib", true),
+    ("pe_rows", true),
+    ("pe_cols", true),
+    ("clock_mhz", true),
+    ("int8_tops", false),
+    ("pj_per_mac", false),
+    ("pj_per_byte_dram", false),
+    ("sustained_fraction", false),
+];
+
+/// One hardware target: the envelope `accel::sim` simulates against.
+///
+/// Numeric semantics: `dram_gbps` is the channel's *peak* bandwidth
+/// (1 GB = 1e9 bytes, matching datasheets); `sustained_fraction`
+/// derates it for page misses/refresh/sharing; `clock_mhz` is the PE
+/// array clock the cycle counts are reported in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TargetManifest {
+    pub name: String,
+    pub description: String,
+    /// Peak DRAM bandwidth in GB/s.
+    pub dram_gbps: f64,
+    /// DRAM burst size in bytes; transfers round up to whole bursts.
+    pub burst_bytes: usize,
+    /// On-chip activation/weight buffer in KiB.
+    pub local_buffer_kib: usize,
+    /// PE array geometry (MACs/cycle = rows * cols at full
+    /// utilization).
+    pub pe_rows: usize,
+    pub pe_cols: usize,
+    /// Core clock in MHz.
+    pub clock_mhz: f64,
+    /// Advertised int8 throughput in TOPS, when the part quotes one
+    /// (informational — the simulator models f32 activations).
+    pub int8_tops: Option<f64>,
+    /// Energy proxies (pJ); default to the crate's Eyeriss-class
+    /// numbers when the manifest omits them.
+    pub pj_per_mac: f64,
+    pub pj_per_byte_dram: f64,
+    /// Sustained/peak DRAM bandwidth derate, in (0, 1].
+    pub sustained_fraction: f64,
+}
+
+impl Default for TargetManifest {
+    /// The crate's historical implicit accelerator:
+    /// [`AccelConfig::default`] expressed as a manifest (the committed
+    /// `rust/targets/default.target` mirrors this — a parity test pins
+    /// all three together).
+    fn default() -> Self {
+        let c = AccelConfig::default();
+        TargetManifest {
+            name: "default".to_string(),
+            description:
+                "Eyeriss-class edge accelerator (the pre-HAL implicit target)"
+                    .to_string(),
+            dram_gbps: c.dram_bytes_per_cycle * c.freq_ghz,
+            burst_bytes: c.burst_bytes,
+            local_buffer_kib: c.sram_bytes / 1024,
+            pe_rows: c.pe_rows,
+            pe_cols: c.pe_cols,
+            clock_mhz: c.freq_ghz * 1000.0,
+            int8_tops: None,
+            pj_per_mac: c.pj_per_mac,
+            pj_per_byte_dram: c.pj_per_byte_dram,
+            sustained_fraction: c.sustained_frac,
+        }
+    }
+}
+
+impl TargetManifest {
+    /// Parse a `.target` document. Strict: unknown or duplicate keys,
+    /// missing required keys, and out-of-range values all error.
+    pub fn parse(src: &str) -> Result<TargetManifest> {
+        // Optional keys fall back to the crate's Eyeriss-class energy /
+        // derate defaults; `description`/`int8_tops` default to absent.
+        let mut m = TargetManifest {
+            description: String::new(),
+            int8_tops: None,
+            ..TargetManifest::default()
+        };
+        let mut seen: Vec<&'static str> = Vec::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                anyhow!(
+                    "target line {}: expected `key = value`, got {raw:?}",
+                    lineno + 1
+                )
+            })?;
+            let key = key.trim();
+            let value = value.trim();
+            let known = KEYS
+                .iter()
+                .find(|(k, _)| *k == key)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "target line {}: unknown key {key:?} (valid keys: {})",
+                        lineno + 1,
+                        key_list()
+                    )
+                })?
+                .0;
+            if seen.contains(&known) {
+                bail!("target line {}: duplicate key {key:?}", lineno + 1);
+            }
+            seen.push(known);
+            let ctx = |what: &str| {
+                format!("target line {}: key {key:?} {what}", lineno + 1)
+            };
+            // Typed accessors with the per-line error context baked in.
+            let s = || {
+                parse_string(value)
+                    .with_context(|| ctx("wants a quoted string"))
+            };
+            let f = || {
+                parse_f64(value).with_context(|| ctx("wants a number"))
+            };
+            let u = || {
+                parse_usize(value).with_context(|| ctx("wants an integer"))
+            };
+            match known {
+                "name" => m.name = s()?,
+                "description" => m.description = s()?,
+                "dram_gbps" => m.dram_gbps = f()?,
+                "burst_bytes" => m.burst_bytes = u()?,
+                "local_buffer_kib" => m.local_buffer_kib = u()?,
+                "pe_rows" => m.pe_rows = u()?,
+                "pe_cols" => m.pe_cols = u()?,
+                "clock_mhz" => m.clock_mhz = f()?,
+                "int8_tops" => m.int8_tops = Some(f()?),
+                "pj_per_mac" => m.pj_per_mac = f()?,
+                "pj_per_byte_dram" => m.pj_per_byte_dram = f()?,
+                "sustained_fraction" => m.sustained_fraction = f()?,
+                _ => unreachable!("KEYS and the match arms are in sync"),
+            }
+        }
+        for (key, required) in KEYS {
+            if *required && !seen.contains(key) {
+                bail!("target manifest is missing required key {key:?}");
+            }
+        }
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Load and parse a `.target` file, with the `.zten` loader's
+    /// stat-before-read size bound.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<TargetManifest> {
+        let path = path.as_ref();
+        let meta = std::fs::metadata(path)
+            .with_context(|| format!("target manifest {path:?}"))?;
+        anyhow::ensure!(
+            meta.len() <= MAX_TARGET_FILE_BYTES,
+            "target manifest {path:?} is {} bytes (limit {})",
+            meta.len(),
+            MAX_TARGET_FILE_BYTES
+        );
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("target manifest {path:?}"))?;
+        let src = String::from_utf8(bytes)
+            .map_err(|_| anyhow!("target manifest {path:?} is not UTF-8"))?;
+        Self::parse(&src)
+            .with_context(|| format!("target manifest {path:?}"))
+    }
+
+    /// Range-check every field (called by [`TargetManifest::parse`];
+    /// public so hand-built manifests can be checked too).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            !self.name.is_empty() && self.name.len() <= 64,
+            "target name must be 1..=64 characters"
+        );
+        anyhow::ensure!(
+            self.name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_'),
+            "target name {:?} may only contain [A-Za-z0-9_-]",
+            self.name
+        );
+        check_pos_finite("dram_gbps", self.dram_gbps, 100_000.0)?;
+        anyhow::ensure!(
+            (1..=65536).contains(&self.burst_bytes),
+            "burst_bytes {} out of range 1..=65536",
+            self.burst_bytes
+        );
+        anyhow::ensure!(
+            (1..=16 * 1024 * 1024).contains(&self.local_buffer_kib),
+            "local_buffer_kib {} out of range 1..=16777216",
+            self.local_buffer_kib
+        );
+        for (what, v) in [("pe_rows", self.pe_rows), ("pe_cols", self.pe_cols)] {
+            anyhow::ensure!(
+                (1..=65536).contains(&v),
+                "{what} {v} out of range 1..=65536"
+            );
+        }
+        check_pos_finite("clock_mhz", self.clock_mhz, 1_000_000.0)?;
+        if let Some(t) = self.int8_tops {
+            check_pos_finite("int8_tops", t, 1_000_000.0)?;
+        }
+        anyhow::ensure!(
+            self.pj_per_mac.is_finite() && self.pj_per_mac >= 0.0,
+            "pj_per_mac {} must be finite and >= 0",
+            self.pj_per_mac
+        );
+        anyhow::ensure!(
+            self.pj_per_byte_dram.is_finite() && self.pj_per_byte_dram >= 0.0,
+            "pj_per_byte_dram {} must be finite and >= 0",
+            self.pj_per_byte_dram
+        );
+        anyhow::ensure!(
+            self.sustained_fraction.is_finite()
+                && self.sustained_fraction > 0.0
+                && self.sustained_fraction <= 1.0,
+            "sustained_fraction {} must be in (0, 1]",
+            self.sustained_fraction
+        );
+        Ok(())
+    }
+
+    /// Canonical serialization — `parse(to_text(m)) == m` (the
+    /// round-trip property the manifest tests pin for every committed
+    /// profile).
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("name = \"{}\"\n", self.name));
+        if !self.description.is_empty() {
+            out.push_str(&format!("description = \"{}\"\n", self.description));
+        }
+        out.push_str(&format!("dram_gbps = {}\n", self.dram_gbps));
+        out.push_str(&format!("burst_bytes = {}\n", self.burst_bytes));
+        out.push_str(&format!("local_buffer_kib = {}\n", self.local_buffer_kib));
+        out.push_str(&format!("pe_rows = {}\n", self.pe_rows));
+        out.push_str(&format!("pe_cols = {}\n", self.pe_cols));
+        out.push_str(&format!("clock_mhz = {}\n", self.clock_mhz));
+        if let Some(t) = self.int8_tops {
+            out.push_str(&format!("int8_tops = {t}\n"));
+        }
+        out.push_str(&format!("pj_per_mac = {}\n", self.pj_per_mac));
+        out.push_str(&format!("pj_per_byte_dram = {}\n", self.pj_per_byte_dram));
+        out.push_str(&format!(
+            "sustained_fraction = {}\n",
+            self.sustained_fraction
+        ));
+        out
+    }
+
+    /// Lower this target to the simulator's [`AccelConfig`]. DRAM
+    /// bytes/cycle is bandwidth divided by the core clock (the
+    /// simulator counts core cycles), so e.g. 12.8 GB/s at 1 GHz is
+    /// 12.8 B/cycle.
+    pub fn accel_config(&self) -> AccelConfig {
+        let freq_ghz = self.clock_mhz / 1000.0;
+        AccelConfig {
+            pe_rows: self.pe_rows,
+            pe_cols: self.pe_cols,
+            freq_ghz,
+            sram_bytes: self.local_buffer_kib * 1024,
+            dram_bytes_per_cycle: self.dram_gbps / freq_ghz,
+            burst_bytes: self.burst_bytes,
+            pj_per_mac: self.pj_per_mac,
+            pj_per_byte_dram: self.pj_per_byte_dram,
+            sustained_frac: self.sustained_fraction,
+        }
+    }
+
+    /// Peak f32 throughput in GFLOP/s (2 ops per MAC).
+    pub fn peak_gflops(&self) -> f64 {
+        (self.pe_rows * self.pe_cols) as f64 * 2.0 * self.clock_mhz / 1000.0
+    }
+
+    /// One-line summary for sweep headers and `--json` reports.
+    pub fn describe(&self) -> String {
+        format!(
+            "{}: {}x{} PEs @ {:.0} MHz ({:.1} GFLOP/s f32{}), DRAM {:.1} \
+             GB/s peak x{:.2} sustained, {} B bursts, {} KiB buffer",
+            self.name,
+            self.pe_rows,
+            self.pe_cols,
+            self.clock_mhz,
+            self.peak_gflops(),
+            match self.int8_tops {
+                Some(t) => format!(", {t:.1} TOPS int8"),
+                None => String::new(),
+            },
+            self.dram_gbps,
+            self.sustained_fraction,
+            self.burst_bytes,
+            self.local_buffer_kib,
+        )
+    }
+}
+
+fn key_list() -> String {
+    KEYS.iter()
+        .map(|(k, _)| *k)
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Strip a trailing `#` comment, respecting `#` inside quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_quotes = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_quotes = !in_quotes,
+            '#' if !in_quotes => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_string(v: &str) -> Result<String> {
+    let inner = v
+        .strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .ok_or_else(|| anyhow!("expected a double-quoted string, got {v:?}"))?;
+    anyhow::ensure!(
+        !inner.contains('"'),
+        "embedded quotes are not supported: {v:?}"
+    );
+    Ok(inner.to_string())
+}
+
+fn parse_f64(v: &str) -> Result<f64> {
+    let x: f64 = v
+        .parse()
+        .map_err(|_| anyhow!("expected a number, got {v:?}"))?;
+    anyhow::ensure!(x.is_finite(), "expected a finite number, got {v:?}");
+    Ok(x)
+}
+
+fn parse_usize(v: &str) -> Result<usize> {
+    v.parse()
+        .map_err(|_| anyhow!("expected a non-negative integer, got {v:?}"))
+}
+
+fn check_pos_finite(what: &str, v: f64, max: f64) -> Result<()> {
+    anyhow::ensure!(
+        v.is_finite() && v > 0.0 && v <= max,
+        "{what} {v} must be finite, positive and <= {max}"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn valid_src() -> String {
+        TargetManifest::default().to_text()
+    }
+
+    #[test]
+    fn default_round_trips_through_text() {
+        let m = TargetManifest::default();
+        let parsed = TargetManifest::parse(&m.to_text()).unwrap();
+        assert_eq!(parsed, m);
+    }
+
+    #[test]
+    fn default_manifest_lowers_to_default_accel_config() {
+        // The parity contract: the pre-HAL hard-coded accelerator and
+        // the "default" manifest are the same machine.
+        assert_eq!(
+            TargetManifest::default().accel_config(),
+            AccelConfig::default()
+        );
+    }
+
+    #[test]
+    fn comments_and_blank_lines_are_ignored() {
+        let src = format!(
+            "# a profile\n\n{}\n# trailing comment\n",
+            valid_src().replace(
+                "dram_gbps = 12.8",
+                "dram_gbps = 12.8   # LPDDR4-ish"
+            )
+        );
+        let m = TargetManifest::parse(&src).unwrap();
+        assert_eq!(m.dram_gbps, 12.8);
+    }
+
+    #[test]
+    fn hash_inside_quotes_is_not_a_comment() {
+        let src = valid_src().replace("target)\"", "target) #1\"");
+        assert_ne!(src, valid_src());
+        let m = TargetManifest::parse(&src).unwrap();
+        assert!(m.description.ends_with("#1"), "{}", m.description);
+    }
+
+    #[test]
+    fn unknown_key_errors_with_the_valid_list() {
+        let src = format!("{}warp_drive = 9\n", valid_src());
+        let e = TargetManifest::parse(&src).unwrap_err().to_string();
+        assert!(e.contains("warp_drive"), "{e}");
+        assert!(e.contains("dram_gbps"), "{e}");
+    }
+
+    #[test]
+    fn duplicate_key_errors() {
+        let src = format!("{}dram_gbps = 1.0\n", valid_src());
+        let e = format!(
+            "{:#}",
+            TargetManifest::parse(&src).unwrap_err()
+        );
+        assert!(e.contains("duplicate"), "{e}");
+    }
+
+    #[test]
+    fn missing_required_key_errors() {
+        let src = valid_src()
+            .lines()
+            .filter(|l| !l.starts_with("dram_gbps"))
+            .collect::<Vec<_>>()
+            .join("\n");
+        let e = TargetManifest::parse(&src).unwrap_err().to_string();
+        assert!(e.contains("dram_gbps"), "{e}");
+    }
+
+    #[test]
+    fn zero_or_negative_bandwidth_errors() {
+        for bad in ["0", "-12.8", "nan", "inf"] {
+            let src = valid_src()
+                .replace("dram_gbps = 12.8", &format!("dram_gbps = {bad}"));
+            assert!(
+                TargetManifest::parse(&src).is_err(),
+                "dram_gbps = {bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn malformed_lines_error_not_panic() {
+        for src in [
+            "dram_gbps",                       // no `=`
+            "name = \"unterminated",           // truncated quote
+            "name = bare",                     // unquoted string
+            "burst_bytes = 64.5",              // fractional integer
+            "burst_bytes = -64",               // negative integer
+            "pe_rows = 99999999999999999999",  // overflow
+            "= 3",                             // empty key
+        ] {
+            assert!(
+                TargetManifest::parse(src).is_err(),
+                "must reject {src:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_document_never_panics() {
+        let full = valid_src();
+        // Required keys come before `clock_mhz` in the canonical
+        // order, so any cut up to it must error (missing key or a
+        // broken line)...
+        let strict_until = full.find("clock_mhz").unwrap();
+        for cut in 0..full.len() {
+            if !full.is_char_boundary(cut) {
+                continue;
+            }
+            // ...and any longer prefix that happens to parse (a cut
+            // can land after all required keys, or even mid-number:
+            // "1000" -> "10") must still validate.
+            if let Ok(m) = TargetManifest::parse(&full[..cut]) {
+                assert!(cut > strict_until, "cut {cut} parsed");
+                m.validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_fields_error() {
+        for (find, replace) in [
+            ("burst_bytes = 64", "burst_bytes = 0"),
+            ("burst_bytes = 64", "burst_bytes = 131072"),
+            ("pe_rows = 16", "pe_rows = 0"),
+            ("clock_mhz = 1000", "clock_mhz = 0"),
+            ("sustained_fraction = 0.85", "sustained_fraction = 1.5"),
+            ("sustained_fraction = 0.85", "sustained_fraction = 0"),
+            (
+                "name = \"default\"",
+                "name = \"has spaces and such\"",
+            ),
+            ("name = \"default\"", "name = \"\""),
+        ] {
+            let src = valid_src().replace(find, replace);
+            assert_ne!(src, valid_src(), "replacement {replace:?} missed");
+            assert!(
+                TargetManifest::parse(&src).is_err(),
+                "{replace:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn optional_keys_default_sensibly() {
+        let src = "\
+name = \"bare\"
+dram_gbps = 10
+burst_bytes = 32
+local_buffer_kib = 128
+pe_rows = 8
+pe_cols = 8
+clock_mhz = 500
+";
+        let m = TargetManifest::parse(src).unwrap();
+        let d = TargetManifest::default();
+        assert_eq!(m.description, "");
+        assert_eq!(m.int8_tops, None);
+        assert_eq!(m.pj_per_mac, d.pj_per_mac);
+        assert_eq!(m.pj_per_byte_dram, d.pj_per_byte_dram);
+        assert_eq!(m.sustained_fraction, d.sustained_fraction);
+        // And it round-trips.
+        assert_eq!(TargetManifest::parse(&m.to_text()).unwrap(), m);
+    }
+
+    #[test]
+    fn accel_config_scales_bandwidth_by_clock() {
+        let m = TargetManifest {
+            clock_mhz: 500.0,
+            dram_gbps: 6.4,
+            ..TargetManifest::default()
+        };
+        let c = m.accel_config();
+        assert!((c.freq_ghz - 0.5).abs() < 1e-12);
+        assert!((c.dram_bytes_per_cycle - 12.8).abs() < 1e-9);
+        assert_eq!(c.sram_bytes, m.local_buffer_kib * 1024);
+    }
+
+    #[test]
+    fn describe_mentions_the_envelope() {
+        let d = TargetManifest::default().describe();
+        assert!(d.contains("16x16"), "{d}");
+        assert!(d.contains("12.8"), "{d}");
+        let m = TargetManifest {
+            int8_tops: Some(4.0),
+            ..TargetManifest::default()
+        };
+        assert!(m.describe().contains("TOPS int8"));
+    }
+}

@@ -1,0 +1,146 @@
+//! Hardware abstraction layer: target manifests for the accelerator
+//! simulator.
+//!
+//! The paper's bandwidth argument (Eq. 2–3) is target-dependent — what
+//! 70% zero blocks buy you differs wildly between a 25.6 GB/s edge NPU
+//! and a 900 GB/s HBM part. This module makes the hardware envelope an
+//! explicit, versioned input instead of constants buried in
+//! `accel::AccelConfig`:
+//!
+//! - [`TargetManifest`] — the envelope (DRAM GB/s, burst bytes, local
+//!   buffer KiB, PE geometry, clock MHz, optional int8 TOPS, energy
+//!   proxies), parsed from TOML-like `.target` files with the same
+//!   strict never-panicking validation as `.zspill`/`.zten`
+//!   (`hal::manifest`).
+//! - `rust/targets/` — committed profiles, compiled into the binary
+//!   ([`builtin_targets`]) so `zebra simulate --target edge-npu` works
+//!   from any working directory, and `zebra targets` sweeps one model
+//!   across every profile.
+//! - [`TargetManifest::accel_config`] — lowering to the simulator's
+//!   [`AccelConfig`](crate::accel::AccelConfig); the `default` profile
+//!   lowers to exactly `AccelConfig::default()` (parity-tested), so
+//!   pre-HAL simulation numbers are unchanged.
+//!
+//! Schema and authoring guide: `rust/docs/targets.md`.
+
+mod manifest;
+
+pub use manifest::{TargetManifest, MAX_TARGET_FILE_BYTES};
+
+use anyhow::{Context, Result};
+
+/// The committed `rust/targets/` profiles, embedded at compile time.
+/// Order is the sweep order of `zebra targets` (default first, then
+/// ascending bandwidth class).
+pub const BUILTIN_TARGET_SOURCES: &[(&str, &str)] = &[
+    ("default", include_str!("../../targets/default.target")),
+    ("fpga-small", include_str!("../../targets/fpga-small.target")),
+    ("edge-npu", include_str!("../../targets/edge-npu.target")),
+    ("mobile-soc", include_str!("../../targets/mobile-soc.target")),
+    (
+        "datacenter-hbm",
+        include_str!("../../targets/datacenter-hbm.target"),
+    ),
+];
+
+/// Parse every embedded profile. Errors only if a committed manifest
+/// is invalid — which the test suite prevents from ever shipping.
+pub fn builtin_targets() -> Result<Vec<TargetManifest>> {
+    BUILTIN_TARGET_SOURCES
+        .iter()
+        .map(|(name, src)| {
+            let m = TargetManifest::parse(src)
+                .with_context(|| format!("builtin target {name:?}"))?;
+            anyhow::ensure!(
+                m.name == *name,
+                "builtin target {name:?} declares mismatched name {:?}",
+                m.name
+            );
+            Ok(m)
+        })
+        .collect()
+}
+
+/// Names of the embedded profiles (for error messages and sweeps).
+pub fn builtin_names() -> Vec<&'static str> {
+    BUILTIN_TARGET_SOURCES.iter().map(|(n, _)| *n).collect()
+}
+
+/// Resolve `--target SPEC`: a path to a `.target` file (anything that
+/// looks like one or exists on disk), else a builtin profile name.
+pub fn resolve_target(spec: &str) -> Result<TargetManifest> {
+    let looks_like_path = spec.contains('/')
+        || spec.contains('\\')
+        || spec.ends_with(".target");
+    if looks_like_path || std::path::Path::new(spec).is_file() {
+        return TargetManifest::from_file(spec);
+    }
+    if let Some((_, src)) =
+        BUILTIN_TARGET_SOURCES.iter().find(|(n, _)| *n == spec)
+    {
+        return TargetManifest::parse(src)
+            .with_context(|| format!("builtin target {spec:?}"));
+    }
+    anyhow::bail!(
+        "unknown target {spec:?}: not a .target file, and not one of the \
+         builtin profiles ({})",
+        builtin_names().join(", ")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::AccelConfig;
+
+    #[test]
+    fn every_builtin_parses_and_validates() {
+        let all = builtin_targets().unwrap();
+        assert!(all.len() >= 5, "expected 5+ profiles, got {}", all.len());
+        for m in &all {
+            m.validate().unwrap();
+            // Round-trip through the canonical serialization.
+            assert_eq!(TargetManifest::parse(&m.to_text()).unwrap(), m.clone());
+        }
+    }
+
+    #[test]
+    fn default_builtin_matches_the_pre_hal_accelerator() {
+        let d = resolve_target("default").unwrap();
+        assert_eq!(d, TargetManifest::default());
+        assert_eq!(d.accel_config(), AccelConfig::default());
+    }
+
+    #[test]
+    fn resolve_by_name_and_unknown_name_errors() {
+        assert_eq!(resolve_target("edge-npu").unwrap().name, "edge-npu");
+        let e = resolve_target("nope").unwrap_err().to_string();
+        assert!(e.contains("edge-npu"), "{e}");
+        assert!(e.contains("datacenter-hbm"), "{e}");
+    }
+
+    #[test]
+    fn resolve_by_path_uses_the_file_loader() {
+        // A path-looking spec that does not exist errors through the
+        // file loader (not the builtin list).
+        let e = format!(
+            "{:#}",
+            resolve_target("no/such/file.target").unwrap_err()
+        );
+        assert!(e.contains("file.target"), "{e}");
+    }
+
+    #[test]
+    fn builtins_cover_distinct_bandwidth_classes() {
+        let all = builtin_targets().unwrap();
+        let lo = all
+            .iter()
+            .map(|m| m.dram_gbps)
+            .fold(f64::INFINITY, f64::min);
+        let hi = all.iter().map(|m| m.dram_gbps).fold(0.0, f64::max);
+        assert!(
+            hi / lo > 20.0,
+            "profiles should span edge..HBM: {lo} .. {hi} GB/s"
+        );
+    }
+}

@@ -27,6 +27,10 @@
 //! - [`trace`] — replaying Python-dumped activation traces.
 //! - [`accel`] — the layer-by-layer accelerator simulator (PE array,
 //!   SRAM, DRAM bursts) that turns zero blocks into bytes-on-the-wire.
+//! - [`hal`] — target manifests (`.target` files + committed
+//!   `rust/targets/` profiles) describing the hardware envelope the
+//!   simulator runs against: DRAM bandwidth, burst size, buffer, PE
+//!   geometry, clock. `zebra simulate --target` / `zebra targets`.
 //! - [`backend`] — pluggable inference backends behind the
 //!   `InferenceBackend` trait: the pure-Rust reference backend (always
 //!   available, zero external dependencies — what CI gates) and, under
@@ -47,6 +51,10 @@
 //!   a mini-batch loop that checkpoints `w%05d.zten` leaves the
 //!   reference backend serves unchanged — the train -> artifact ->
 //!   serve loop with no Python anywhere.
+//! - [`telemetry`] — labeled wall-time/byte stages with lock-cheap
+//!   recording and mergeable snapshots, threaded through the serve hot
+//!   loop, the cluster nodes, and the simulator so every stage's time
+//!   and bytes are attributable from one report.
 //! - [`bench`] — the in-repo benchmarking harness (criterion is not in
 //!   the offline vendor set) used by every table/figure regenerator.
 //! - [`cli`] — the `zebra` binary's subcommands.
@@ -59,8 +67,10 @@ pub mod cli;
 pub mod cluster;
 pub mod compress;
 pub mod coordinator;
+pub mod hal;
 pub mod models;
 pub mod runtime;
+pub mod telemetry;
 pub mod tensor;
 pub mod trace;
 pub mod train;

@@ -1,0 +1,330 @@
+//! Lightweight telemetry: labeled wall-time/byte accounting for every
+//! stage of the serving and simulation pipelines.
+//!
+//! The repo already meters *what* moves (Eq. 2–3 byte counters in
+//! [`coordinator::Metrics`](crate::coordinator::Metrics), `.zspill`
+//! frame sizes, the cluster's [`MetricsSnapshot`]) — this module meters
+//! *where the time goes*, with the same design constraints as the rest
+//! of the request path:
+//!
+//! - **Lock-cheap hot path.** A [`Stage`] is three `AtomicU64`s
+//!   (nanoseconds, calls, bytes). Hot loops resolve their stage handles
+//!   once ([`Telemetry::stage`] returns an `Arc<Stage>`) and then never
+//!   touch a lock again; recording is two relaxed `fetch_add`s.
+//! - **Monotonic clocks.** Timing uses `Instant` via a drop-guard
+//!   [`ScopedTimer`], so a stage can never record negative or
+//!   wall-clock-skewed durations.
+//! - **Snapshot + merge.** [`TelemetrySnapshot`] is a plain label ->
+//!   [`StageStats`] map; [`TelemetrySnapshot::merge`] sums matching
+//!   labels, which makes merging associative and commutative by
+//!   construction — the same aggregation contract the cluster layer's
+//!   `MetricsSnapshot` has for its counters.
+//!
+//! Label convention: `component.stage` (e.g. `serve.execute`,
+//! `wire.ship_upstream`, `sim.encode`). The serve hot loop records one
+//! umbrella stage (`serve.batch`) plus its sub-stages, so
+//! [`TelemetrySnapshot::coverage`] can verify the sub-stages account
+//! for (≥95% of) the end-to-end wall time — see
+//! `rust/docs/telemetry.md`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::zebra::bandwidth::fmt_bytes;
+
+/// One labeled stage: accumulated wall time, call count, and bytes.
+/// All methods are thread-safe; contention is a relaxed `fetch_add`.
+#[derive(Debug, Default)]
+pub struct Stage {
+    nanos: AtomicU64,
+    calls: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl Stage {
+    /// Start timing a scope; the elapsed time is recorded (and the
+    /// call counted) when the returned guard drops.
+    pub fn time(self: &Arc<Stage>) -> ScopedTimer {
+        ScopedTimer { stage: self.clone(), start: Instant::now() }
+    }
+
+    /// Record an already-measured duration (one call).
+    pub fn record(&self, d: Duration) {
+        self.nanos
+            .fetch_add(d.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+        self.calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Attribute `n` bytes to this stage (does not count a call).
+    pub fn add_bytes(&self, n: u64) {
+        self.bytes.fetch_add(n, Ordering::Relaxed);
+    }
+
+    fn stats(&self) -> StageStats {
+        StageStats {
+            nanos: self.nanos.load(Ordering::Relaxed),
+            calls: self.calls.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Drop-guard returned by [`Stage::time`]: records the scope's
+/// monotonic elapsed time into the stage when dropped.
+pub struct ScopedTimer {
+    stage: Arc<Stage>,
+    start: Instant,
+}
+
+impl Drop for ScopedTimer {
+    fn drop(&mut self) {
+        self.stage.record(self.start.elapsed());
+    }
+}
+
+/// A registry of labeled stages. Cheap to share (`Arc<Telemetry>`);
+/// the internal lock is touched only on [`Telemetry::stage`] lookups
+/// and [`Telemetry::snapshot`], never on the recording hot path.
+#[derive(Debug, Default)]
+pub struct Telemetry {
+    stages: Mutex<BTreeMap<String, Arc<Stage>>>,
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry::default()
+    }
+
+    /// Get-or-create the stage for `label`. Hot paths call this once
+    /// up front and keep the returned handle.
+    pub fn stage(&self, label: &str) -> Arc<Stage> {
+        let mut map = self.stages.lock().unwrap();
+        if let Some(s) = map.get(label) {
+            return s.clone();
+        }
+        let s = Arc::new(Stage::default());
+        map.insert(label.to_string(), s.clone());
+        s
+    }
+
+    /// Consistent point-in-time copy of every stage's counters.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let map = self.stages.lock().unwrap();
+        TelemetrySnapshot {
+            stages: map
+                .iter()
+                .map(|(k, v)| (k.clone(), v.stats()))
+                .collect(),
+        }
+    }
+}
+
+/// One stage's counters at snapshot time.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageStats {
+    /// Accumulated wall time in nanoseconds.
+    pub nanos: u64,
+    /// Times the stage ran.
+    pub calls: u64,
+    /// Bytes attributed to the stage.
+    pub bytes: u64,
+}
+
+impl StageStats {
+    pub fn millis(&self) -> f64 {
+        self.nanos as f64 / 1e6
+    }
+
+    fn add(&mut self, other: &StageStats) {
+        self.nanos += other.nanos;
+        self.calls += other.calls;
+        self.bytes += other.bytes;
+    }
+}
+
+/// A mergeable, printable copy of a [`Telemetry`]'s stages.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TelemetrySnapshot {
+    pub stages: BTreeMap<String, StageStats>,
+}
+
+impl TelemetrySnapshot {
+    /// Sum `other` into `self`, label-wise. Because each label's
+    /// counters are plain sums, merging is associative and commutative
+    /// (the property the cluster aggregation tests pin down).
+    pub fn merge(&mut self, other: &TelemetrySnapshot) {
+        for (label, stats) in &other.stages {
+            self.stages.entry(label.clone()).or_default().add(stats);
+        }
+    }
+
+    pub fn get(&self, label: &str) -> StageStats {
+        self.stages.get(label).copied().unwrap_or_default()
+    }
+
+    /// Fraction of `total`'s wall time the `parts` stages account for
+    /// (the ≥95% acceptance check). `None` when `total` is missing or
+    /// never ran.
+    pub fn coverage(&self, total: &str, parts: &[&str]) -> Option<f64> {
+        let t = self.get(total).nanos;
+        if t == 0 {
+            return None;
+        }
+        let sum: u64 = parts.iter().map(|p| self.get(p).nanos).sum();
+        Some(sum as f64 / t as f64)
+    }
+
+    /// Aligned text table of every stage. With `total` set (and
+    /// present), each stage also shows its share of that stage's wall
+    /// time. Stages that moved bytes additionally report throughput.
+    pub fn report(&self, total: Option<&str>) -> String {
+        if self.stages.is_empty() {
+            return "telemetry: (no stages recorded)\n".to_string();
+        }
+        let total_nanos = total.map(|t| self.get(t).nanos).unwrap_or(0);
+        let wide = self
+            .stages
+            .keys()
+            .map(|k| k.len())
+            .max()
+            .unwrap_or(0)
+            .max(5);
+        let mut out = String::from("telemetry (wall time per stage):\n");
+        for (label, s) in &self.stages {
+            let pct = if total_nanos > 0 {
+                format!("{:5.1}%", 100.0 * s.nanos as f64 / total_nanos as f64)
+            } else {
+                "     -".to_string()
+            };
+            let bytes = if s.bytes > 0 {
+                let thru = if s.nanos > 0 {
+                    format!(
+                        " ({:.1} MB/s)",
+                        s.bytes as f64 / (1 << 20) as f64
+                            / (s.nanos as f64 / 1e9)
+                    )
+                } else {
+                    String::new()
+                };
+                format!("  {}{}", fmt_bytes(s.bytes as f64), thru)
+            } else {
+                String::new()
+            };
+            out.push_str(&format!(
+                "  {label:<wide$}  {:>8} calls  {:>10.3} ms  {pct}{bytes}\n",
+                s.calls,
+                s.millis(),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(entries: &[(&str, u64, u64, u64)]) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            stages: entries
+                .iter()
+                .map(|&(l, nanos, calls, bytes)| {
+                    (l.to_string(), StageStats { nanos, calls, bytes })
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn timer_accumulates_time_and_calls() {
+        let t = Telemetry::new();
+        let st = t.stage("x");
+        for _ in 0..3 {
+            let _g = st.time();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let s = t.snapshot().get("x");
+        assert_eq!(s.calls, 3);
+        assert!(s.nanos >= 3 * 2_000_000, "got {} ns", s.nanos);
+    }
+
+    #[test]
+    fn stage_handles_alias_the_same_counters() {
+        let t = Telemetry::new();
+        let a = t.stage("s");
+        let b = t.stage("s");
+        a.add_bytes(10);
+        b.add_bytes(5);
+        a.record(Duration::from_micros(7));
+        assert_eq!(t.snapshot().get("s").bytes, 15);
+        assert_eq!(t.snapshot().get("s").calls, 1);
+        assert_eq!(t.snapshot().stages.len(), 1);
+    }
+
+    #[test]
+    fn merge_is_commutative() {
+        let a = snap(&[("enc", 100, 2, 64), ("exec", 500, 2, 0)]);
+        let b = snap(&[("exec", 300, 1, 0), ("ship", 40, 1, 128)]);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.get("exec").nanos, 800);
+        assert_eq!(ab.get("ship").bytes, 128);
+    }
+
+    #[test]
+    fn merge_is_associative() {
+        let a = snap(&[("x", 1, 1, 1), ("y", 10, 1, 0)]);
+        let b = snap(&[("y", 20, 2, 4), ("z", 5, 1, 9)]);
+        let c = snap(&[("x", 7, 3, 2), ("z", 1, 1, 1)]);
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left, right);
+    }
+
+    #[test]
+    fn merge_identity_is_the_empty_snapshot() {
+        let a = snap(&[("x", 3, 1, 2)]);
+        let mut m = a.clone();
+        m.merge(&TelemetrySnapshot::default());
+        assert_eq!(m, a);
+        let mut e = TelemetrySnapshot::default();
+        e.merge(&a);
+        assert_eq!(e, a);
+    }
+
+    #[test]
+    fn coverage_sums_parts_against_total() {
+        let s = snap(&[
+            ("total", 1000, 1, 0),
+            ("a", 500, 1, 0),
+            ("b", 480, 1, 0),
+        ]);
+        let c = s.coverage("total", &["a", "b"]).unwrap();
+        assert!((c - 0.98).abs() < 1e-12);
+        assert!(s.coverage("missing", &["a"]).is_none());
+        assert!(s.coverage("a", &["missing"]).unwrap() == 0.0);
+    }
+
+    #[test]
+    fn report_lists_every_stage() {
+        let s = snap(&[("serve.batch", 2_000_000, 4, 0), ("serve.ship", 1_000_000, 4, 4096)]);
+        let r = s.report(Some("serve.batch"));
+        assert!(r.contains("serve.batch"), "{r}");
+        assert!(r.contains("serve.ship"), "{r}");
+        assert!(r.contains("50.0%"), "{r}");
+        assert!(r.contains("4.00 KB"), "{r}");
+        assert!(TelemetrySnapshot::default()
+            .report(None)
+            .contains("no stages"));
+    }
+}

@@ -1,0 +1,133 @@
+//! HAL integration: the committed `rust/targets/` manifests on disk,
+//! the embedded builtin registry, file-loading edge cases, and the
+//! `zebra simulate --target` / `zebra targets` CLI paths end to end.
+
+use std::path::PathBuf;
+
+use zebra::hal::{
+    builtin_names, builtin_targets, resolve_target, TargetManifest,
+    MAX_TARGET_FILE_BYTES,
+};
+
+fn targets_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("targets")
+}
+
+/// A scratch file that cleans up after itself (tests must not litter
+/// the repo checkout or temp dir).
+struct ScratchFile(PathBuf);
+
+impl ScratchFile {
+    fn new(name: &str, bytes: &[u8]) -> ScratchFile {
+        let p = std::env::temp_dir()
+            .join(format!("zebra-hal-{}-{name}", std::process::id()));
+        std::fs::write(&p, bytes).unwrap();
+        ScratchFile(p)
+    }
+}
+
+impl Drop for ScratchFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
+#[test]
+fn every_committed_manifest_loads_and_matches_its_builtin() {
+    let builtins = builtin_targets().unwrap();
+    let mut seen = 0;
+    for entry in std::fs::read_dir(targets_dir()).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("target") {
+            continue;
+        }
+        seen += 1;
+        // Disk -> parse -> canonical text -> parse is the identity.
+        let m = TargetManifest::from_file(&path)
+            .unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+        assert_eq!(TargetManifest::parse(&m.to_text()).unwrap(), m);
+        // The embedded copy is byte-equivalent to the file on disk.
+        let builtin = builtins
+            .iter()
+            .find(|b| b.name == m.name)
+            .unwrap_or_else(|| panic!("{} is not embedded", m.name));
+        assert_eq!(builtin, &m, "disk and builtin disagree for {}", m.name);
+    }
+    assert_eq!(
+        seen,
+        builtins.len(),
+        "every builtin must come from a committed .target file"
+    );
+    assert!(seen >= 5, "expected 5+ committed profiles, found {seen}");
+}
+
+#[test]
+fn resolve_accepts_disk_paths_and_builtin_names() {
+    let by_name = resolve_target("edge-npu").unwrap();
+    let path = targets_dir().join("edge-npu.target");
+    let by_path = resolve_target(path.to_str().unwrap()).unwrap();
+    assert_eq!(by_name, by_path);
+    let e = resolve_target("holodeck").unwrap_err().to_string();
+    for name in builtin_names() {
+        assert!(e.contains(name), "error must list {name}: {e}");
+    }
+}
+
+#[test]
+fn oversize_manifest_is_rejected_before_reading() {
+    let big = ScratchFile::new(
+        "oversize.target",
+        &vec![b'#'; MAX_TARGET_FILE_BYTES as usize + 1],
+    );
+    let e = format!("{:#}", TargetManifest::from_file(&big.0).unwrap_err());
+    assert!(e.contains("large") || e.contains("bytes"), "{e}");
+}
+
+#[test]
+fn non_utf8_manifest_errors_cleanly() {
+    let junk = ScratchFile::new("junk.target", &[0xff, 0xfe, 0x00, 0x80]);
+    let e = format!("{:#}", TargetManifest::from_file(&junk.0).unwrap_err());
+    assert!(e.to_lowercase().contains("utf-8"), "{e}");
+}
+
+#[test]
+fn truncated_file_on_disk_errors_not_panics() {
+    let full = TargetManifest::default().to_text();
+    let cut = &full[..full.len() / 3];
+    let f = ScratchFile::new("truncated.target", cut.as_bytes());
+    assert!(TargetManifest::from_file(&f.0).is_err());
+}
+
+fn cli(args: &[&str]) -> anyhow::Result<()> {
+    let argv: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+    zebra::cli::run(&argv)
+}
+
+#[test]
+fn simulate_runs_against_a_named_target_and_a_target_file() {
+    cli(&[
+        "simulate", "--backend", "reference", "--model", "ref-tiny",
+        "--images", "2", "--target", "edge-npu",
+    ])
+    .unwrap();
+    let path = targets_dir().join("datacenter-hbm.target");
+    cli(&[
+        "simulate", "--backend", "reference", "--model", "ref-tiny",
+        "--images", "2", "--target", path.to_str().unwrap(), "--json",
+    ])
+    .unwrap();
+}
+
+#[test]
+fn targets_sweep_covers_every_builtin() {
+    cli(&[
+        "targets", "--backend", "reference", "--model", "ref-tiny",
+        "--images", "2",
+    ])
+    .unwrap();
+    cli(&[
+        "targets", "--backend", "reference", "--model", "ref-tiny",
+        "--images", "2", "--json",
+    ])
+    .unwrap();
+}

@@ -1,0 +1,121 @@
+//! Telemetry integration: a loopback cluster run (real TCP worker +
+//! client) whose `serve.*` sub-stages must account for >= 95% of the
+//! serving hot loop's wall time — the PR's acceptance criterion — plus
+//! cross-node snapshot merging.
+
+use std::sync::Arc;
+
+use zebra::backend::reference::RefSpec;
+use zebra::cluster::{ClusterClient, WorkerNode};
+use zebra::coordinator::server::BatchExecutor;
+use zebra::coordinator::{reference_executor, ServerConfig};
+use zebra::tensor::Tensor;
+use zebra::util::prng::Rng;
+
+const SUB_STAGES: &[&str] =
+    &["serve.assemble", "serve.ship", "serve.execute", "serve.respond"];
+
+fn noise_image(hw: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let n = 3 * hw * hw;
+    Tensor::from_vec(&[3, hw, hw], (0..n).map(|_| rng.normal()).collect())
+}
+
+#[test]
+fn loopback_cluster_telemetry_accounts_the_hot_loop() {
+    let exec = Arc::new(reference_executor(RefSpec::tiny()).unwrap());
+    let hw = exec.image_hw();
+    let node = WorkerNode::start(
+        exec,
+        "127.0.0.1:0",
+        ServerConfig::default(),
+        None,
+    )
+    .unwrap();
+    let client =
+        ClusterClient::connect(&node.local_addr().to_string()).unwrap();
+
+    let rxs: Vec<_> = (0..32)
+        .map(|i| client.submit(&noise_image(hw, 0xAB + i)).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv()
+            .expect("worker dropped a request")
+            .expect("request failed");
+    }
+
+    let snap = node.telemetry().snapshot();
+    // The acceptance check: the instrumented sub-stages attribute
+    // >= 95% of the umbrella serve.batch wall time.
+    let cov = snap
+        .coverage("serve.batch", SUB_STAGES)
+        .expect("serve.batch must have recorded batches");
+    assert!(
+        cov >= 0.95,
+        "sub-stages cover only {:.1}% of serve.batch:\n{}",
+        100.0 * cov,
+        snap.report(Some("serve.batch"))
+    );
+    // Every batch executed; the wire layer saw each submit once.
+    let batches = snap.get("serve.batch").calls;
+    assert!(batches >= 1);
+    assert_eq!(snap.get("serve.execute").calls, batches);
+    assert!(snap.get("wire.handle").calls >= 32);
+    assert!(snap.get("wire.handle").bytes > 0);
+    assert_eq!(snap.get("wire.respond").calls, 32);
+    assert!(snap.get("wire.respond").bytes > 0);
+
+    client.shutdown();
+    node.shutdown();
+}
+
+#[test]
+fn node_snapshots_merge_into_a_cluster_view() {
+    // Two independent loopback nodes; their snapshots merge label-wise
+    // into a cluster-wide view whose counters are the sums.
+    let mut nodes = Vec::new();
+    for _ in 0..2 {
+        let exec = Arc::new(reference_executor(RefSpec::tiny()).unwrap());
+        let hw = exec.image_hw();
+        let node = WorkerNode::start(
+            exec,
+            "127.0.0.1:0",
+            ServerConfig::default(),
+            None,
+        )
+        .unwrap();
+        nodes.push((node, hw));
+    }
+    let mut snaps = Vec::new();
+    for (i, (node, hw)) in nodes.iter().enumerate() {
+        let client =
+            ClusterClient::connect(&node.local_addr().to_string()).unwrap();
+        let hw = *hw;
+        for j in 0..4 {
+            client
+                .classify(&noise_image(hw, (i * 100 + j) as u64))
+                .unwrap();
+        }
+        client.shutdown();
+        snaps.push(node.telemetry().snapshot());
+    }
+    let mut merged = snaps[0].clone();
+    merged.merge(&snaps[1]);
+    assert_eq!(
+        merged.get("serve.batch").calls,
+        snaps[0].get("serve.batch").calls
+            + snaps[1].get("serve.batch").calls
+    );
+    assert_eq!(
+        merged.get("wire.respond").bytes,
+        snaps[0].get("wire.respond").bytes
+            + snaps[1].get("wire.respond").bytes
+    );
+    // The report renders every merged stage.
+    let r = merged.report(Some("serve.batch"));
+    assert!(r.contains("serve.execute"), "{r}");
+    assert!(r.contains("wire.respond"), "{r}");
+    for (node, _) in nodes {
+        node.shutdown();
+    }
+}
