@@ -1,7 +1,7 @@
 # Repo-level convenience targets.
 
-.PHONY: check ci bench-smoke train-smoke cluster-smoke perf-smoke \
-	simulate-smoke
+.PHONY: check ci bench-smoke train-smoke cluster-smoke loadgen-smoke \
+	perf-smoke simulate-smoke
 
 # Full gate: build + tests + fmt + clippy in both feature configs
 # (the pjrt config auto-skips when no XLA toolchain is present),
@@ -33,6 +33,15 @@ bench-smoke:
 # target rather than duplicating the recipe.
 cluster-smoke:
 	cd rust && ./cluster_smoke.sh
+
+# Admission-control smoke: one worker behind a router with a tiny
+# outstanding budget, flooded by mixed-priority loadgen connections.
+# Passes only with nonzero sheds, zero faults, and loadgen's built-in
+# ok+shed+failed == submitted conservation check (no silent drops).
+# rust/check.sh and ci.yml invoke this target rather than duplicating
+# the recipe.
+loadgen-smoke:
+	cd rust && ./loadgen_smoke.sh
 
 # Block-sparse kernel never-regress gate: run the perf_hotpath bench
 # in smoke mode with the guard armed — the masked conv must be faster

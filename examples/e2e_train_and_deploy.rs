@@ -8,7 +8,7 @@
 //!    objective `CE + lambda * sum ||block||_2` (straight-through
 //!    estimator through the block gate), one control at lambda = 0.
 //! 2. **Deploy**: the Zebra run's weights are written as `w%05d.zten`
-//!    leaves and served through the coordinator (dynamic batcher,
+//!    leaves and served through the coordinator (continuous batch manager,
 //!    per-request Eq. 2–3 accounting) on the reference backend — the
 //!    same artifact path `zebra serve --backend reference --weights`
 //!    uses.
@@ -28,7 +28,9 @@ use zebra::accel::{simulate_trace, AccelConfig, LayerDesc};
 use zebra::backend::reference::ReferenceBackend;
 use zebra::bench::Table;
 use zebra::compress::{DenseCodec, ZeroBlockCodec};
-use zebra::coordinator::{reference_executor, Server, ServerConfig};
+use zebra::coordinator::{
+    reference_executor, Server, ServerConfig, SubmitOutcome, SubmitRequest,
+};
 use zebra::tensor::Tensor;
 use zebra::train::{train_on, Dataset, TrainConfig};
 
@@ -84,6 +86,7 @@ fn main() -> anyhow::Result<()> {
             max_wait: Duration::from_millis(2),
             workers: 1,
             max_queue: 1024,
+            max_batch: 0,
             ship_spills: None,
             spill_sink: None,
         },
@@ -98,7 +101,11 @@ fn main() -> anyhow::Result<()> {
                 &[3, hw, hw],
                 holdout.images.data()[i * per..(i + 1) * per].to_vec(),
             );
-            server.submit(x).unwrap()
+            let (tx, rx) = std::sync::mpsc::channel();
+            match server.submit(SubmitRequest::new(x), tx) {
+                SubmitOutcome::Enqueued { .. } => rx,
+                other => panic!("expected admission, got {other:?}"),
+            }
         })
         .collect();
     let mut correct = 0usize;

@@ -51,6 +51,7 @@ fn main() -> anyhow::Result<()> {
             max_wait: Duration::from_millis(5),
             workers: 1,
             max_queue: 512,
+            max_batch: 0,
             ship_spills: None,
             spill_sink: None,
         },

@@ -13,7 +13,9 @@ use std::sync::Arc;
 use zebra::backend::reference::RefSpec;
 use zebra::bench::{bench, Table};
 use zebra::cluster::{ClusterClient, Router, RouterConfig, WorkerNode};
-use zebra::coordinator::{reference_executor, Server, ServerConfig};
+use zebra::coordinator::{
+    reference_executor, Server, ServerConfig, SubmitOutcome, SubmitRequest,
+};
 use zebra::tensor::Tensor;
 use zebra::util::prng::Rng;
 
@@ -34,7 +36,14 @@ fn main() -> anyhow::Result<()> {
     );
     let s = bench("in-process x16", 300, || {
         let rxs: Vec<_> = (0..window)
-            .map(|_| direct.submit(img.clone()).unwrap())
+            .map(|_| {
+                let (tx, rx) = std::sync::mpsc::channel();
+                let req = SubmitRequest::new(img.clone());
+                match direct.submit(req, tx) {
+                    SubmitOutcome::Enqueued { .. } => rx,
+                    other => panic!("expected admission, got {other:?}"),
+                }
+            })
             .collect();
         for rx in rxs {
             rx.recv().unwrap();

@@ -47,6 +47,13 @@ make -C .. train-smoke
 echo "== cluster smoke: 2x cluster-worker -> cluster-router -> loadgen"
 make -C .. cluster-smoke
 
+# Loadgen smoke: mixed-priority load against a deliberately tiny
+# admission budget — the gate passes only when overload sheds (never
+# silently drops) and nothing faults. Recipe in rust/loadgen_smoke.sh
+# via the repo Makefile.
+echo "== loadgen smoke: mixed-priority overload -> sheds, no faults"
+make -C .. loadgen-smoke
+
 # Perf smoke: the block-sparse kernel never-regress gate — the masked
 # conv must beat the dense kernel at 70% zero blocks (smoke-sized
 # shapes, BENCH_PR5.json emitted at the repo root). Recipe in the

@@ -1,0 +1,61 @@
+#!/usr/bin/env bash
+# rust/loadgen_smoke.sh — admission-control smoke gate: one
+# cluster-worker behind a router whose outstanding budget is forced
+# tiny, flooded by `zebra loadgen` from concurrent mixed-priority
+# connections. Passes only when overload is handled the designed way:
+# nonzero sheds (--expect-sheds), zero faults (--fail-on-error — a
+# shed is not a fault), and loadgen's built-in conservation check
+# (every request ends as exactly one of ok/shed/failed). Ephemeral
+# ports throughout. `make loadgen-smoke` runs this; rust/check.sh and
+# .github/workflows/ci.yml invoke that target.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+cargo build --release --no-default-features
+BIN=target/release/zebra
+
+tmp=$(mktemp -d)
+pids=()
+cleanup() {
+  for p in ${pids[@]+"${pids[@]}"}; do kill "$p" 2>/dev/null || true; done
+  rm -rf "$tmp"
+}
+trap cleanup EXIT
+
+# Harvest the "... listening on HOST:PORT" line a node prints.
+wait_addr() {
+  local log="$1" i addr
+  for i in $(seq 1 100); do
+    addr=$(sed -n 's/.*listening on \([0-9.]*:[0-9]*\).*/\1/p' "$log" | head -n1)
+    if [ -n "$addr" ]; then
+      echo "$addr"
+      return 0
+    fi
+    sleep 0.1
+  done
+  echo "timed out waiting for an address in $log" >&2
+  cat "$log" >&2
+  return 1
+}
+
+# The worker exercises the shared batching flags (--flush-us,
+# --max-batch); --run-s bounds every node's lifetime so a wedged run
+# cannot outlive CI even if the cleanup trap is skipped.
+"$BIN" cluster-worker --model ref-tiny --flush-us 2000 --max-batch 4 \
+  --port 0 --run-s 120 >"$tmp/w1.log" 2>&1 &
+pids+=($!)
+W1=$(wait_addr "$tmp/w1.log")
+
+# --max-outstanding 2 makes overload certain: Low's admission cap is
+# 1 slot, Normal/High get 2. --max-attempts 1 sheds deterministically
+# instead of retrying the only worker.
+"$BIN" cluster-router --workers "$W1" --max-outstanding 2 \
+  --max-attempts 1 --port 0 --run-s 120 >"$tmp/r.log" 2>&1 &
+pids+=($!)
+R=$(wait_addr "$tmp/r.log")
+
+ZEBRA_BENCH_SMOKE=1 "$BIN" loadgen --addr "$R" --requests 240 \
+  --conns 8 --priority mixed --keys 4 --hw 8 \
+  --expect-sheds --fail-on-error
+
+echo "loadgen smoke OK (router $R, worker $W1: sheds observed, no faults, no lost requests)"

@@ -1,6 +1,7 @@
 //! Pluggable inference backends.
 //!
-//! Everything downstream of model execution — the dynamic batcher, the
+//! Everything downstream of model execution — the continuous batch
+//! manager, the
 //! per-request Eq. 2–3 bandwidth accounting, the spill codecs, the
 //! accelerator simulator — only needs *logits plus the per-Zebra-layer
 //! block masks* for a padded batch. [`InferenceBackend`] captures

@@ -18,14 +18,15 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use super::opts::ServeOpts;
 use super::Args;
 use crate::cluster::{Router, RouterConfig, ShardMode, WorkerNode};
 use crate::coordinator::server::BatchExecutor;
-use crate::coordinator::ServerConfig;
 
 /// `zebra cluster-worker`: build the serving executor exactly like
 /// `zebra serve` and expose it as a cluster worker node.
 pub fn run_worker(args: &Args) -> Result<()> {
+    let opts = ServeOpts::from_args(args)?;
     let (exec, _classes, backend) =
         super::serve::build_executor(args, &crate::artifacts_dir())?;
     println!(
@@ -34,35 +35,28 @@ pub fn run_worker(args: &Args) -> Result<()> {
         exec.batch_sizes(),
         exec.exec_threads()
     );
-    expose_worker(args, exec)
+    expose_worker(&opts, args, exec)
 }
 
 /// Shared TCP front for `cluster-worker` and `serve --port`: wrap the
 /// executor in a coordinator server behind a listener, print the
 /// bound address, and hold until `--run-s` elapses (or forever).
 pub(crate) fn expose_worker(
+    opts: &ServeOpts,
     args: &Args,
     exec: Arc<dyn BatchExecutor>,
 ) -> Result<()> {
-    let listen = listen_addr(args)?;
-    let wait_ms = args.get_usize("wait-ms", 2)? as u64;
-    let queue = args.get_usize("queue", 1024)?;
-    let ship_spills = super::serve::ship_config(args, exec.image_hw())?;
     let ship_upstream = args.get("ship-upstream").map(String::from);
+    let image_hw = exec.image_hw();
     let node = WorkerNode::start(
         exec,
-        &listen,
-        ServerConfig {
-            max_wait: Duration::from_millis(wait_ms),
-            workers: 1,
-            max_queue: queue,
-            ship_spills,
-            spill_sink: None, // WorkerNode wires the sink to upstream
-        },
+        &opts.listen_addr(),
+        // WorkerNode wires the spill sink to the upstream itself.
+        opts.server_config(image_hw)?,
         ship_upstream,
     )?;
     println!("cluster-worker listening on {}", node.local_addr());
-    hold(args)?;
+    opts.hold();
     println!("cluster-worker metrics: {}", node.metrics().summary());
     print!(
         "{}",
@@ -74,6 +68,7 @@ pub(crate) fn expose_worker(
 
 /// `zebra cluster-router`: shard requests across `--workers`.
 pub fn run_router(args: &Args) -> Result<()> {
+    let opts = ServeOpts::from_args(args)?;
     let workers: Vec<String> = args
         .get("workers")
         .context(
@@ -96,10 +91,9 @@ pub fn run_router(args: &Args) -> Result<()> {
     cfg.heartbeat_every = Duration::from_millis(
         args.get_usize("heartbeat-ms", 250)? as u64,
     );
-    let listen = listen_addr(args)?;
     let n_workers = cfg.workers.len();
     let mode = cfg.mode;
-    let router = Router::start(cfg, &listen)?;
+    let router = Router::start(cfg, &opts.listen_addr())?;
     println!(
         "cluster-router listening on {} ({} workers, mode {}, {} alive)",
         router.local_addr(),
@@ -107,30 +101,9 @@ pub fn run_router(args: &Args) -> Result<()> {
         mode.name(),
         router.workers_alive()
     );
-    hold(args)?;
+    opts.hold();
     println!("cluster-router stats: {}", router.stats().summary());
     print!("{}", router.telemetry().snapshot().report(None));
     router.shutdown();
-    Ok(())
-}
-
-/// `--host`/`--port` -> a bind address. `--port 0` asks the OS for an
-/// ephemeral port; the node prints what it got.
-fn listen_addr(args: &Args) -> Result<String> {
-    let host = args.get_or("host", "127.0.0.1");
-    let port = args.get_usize("port", 0)?;
-    anyhow::ensure!(port <= u16::MAX as usize, "--port {port} out of range");
-    Ok(format!("{host}:{port}"))
-}
-
-/// Block for `--run-s` seconds (0 = until the process is killed).
-fn hold(args: &Args) -> Result<()> {
-    let run_s = args.get_usize("run-s", 0)?;
-    if run_s == 0 {
-        loop {
-            std::thread::sleep(Duration::from_secs(3600));
-        }
-    }
-    std::thread::sleep(Duration::from_secs(run_s as u64));
     Ok(())
 }

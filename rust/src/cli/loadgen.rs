@@ -1,37 +1,85 @@
 //! `zebra loadgen` — drive a cluster router (or a bare worker / a
-//! `serve --port` node) at a target request rate and report latency
-//! percentiles plus the cluster's achieved zero-block bandwidth
-//! savings.
+//! `serve --port` node) from `--conns` concurrent connections at a
+//! target request rate and report latency percentiles, per-class
+//! ok/shed/failed accounting, and the cluster's achieved zero-block
+//! bandwidth savings.
 //!
-//! Latency is measured client-side: the [`ClusterClient`]'s reader
-//! stamps each response the moment its frame arrives, and the samples
+//! Latency is measured client-side: each [`ClusterClient`]'s reader
+//! stamps responses the moment their frame arrives, and the samples
 //! land in the same fixed-bucket histogram
 //! ([`coordinator::Metrics`](crate::coordinator::Metrics)) the server
 //! and router use, so p50/p95/p99 mean the same thing at every tier.
+//!
+//! Admission-control sheds are first-class outcomes, not faults:
+//! every submitted request ends as exactly one of ok / shed / failed
+//! (the run errors out if that accounting ever leaves a gap), and
+//! `--fail-on-error` only rejects faults. `--expect-sheds` inverts
+//! the check for overload smoke tests: the run fails unless the
+//! cluster shed at least one request.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use super::Args;
 use crate::backend::synth_images;
-use crate::cluster::ClusterClient;
+use crate::cluster::{ClusterClient, ClusterError};
 use crate::coordinator::Metrics;
 use crate::telemetry::Telemetry;
 use crate::tensor::{read_zten, Tensor};
 
+/// Per-class outcome counts, indexed by `Priority::as_u8`.
+#[derive(Debug, Default, Clone)]
+struct Tally {
+    ok: [usize; 3],
+    shed: [usize; 3],
+    failed: usize,
+}
+
+impl Tally {
+    fn absorb(&mut self, other: &Tally) {
+        for i in 0..3 {
+            self.ok[i] += other.ok[i];
+            self.shed[i] += other.shed[i];
+        }
+        self.failed += other.failed;
+    }
+
+    fn ok_total(&self) -> usize {
+        self.ok.iter().sum()
+    }
+
+    fn shed_total(&self) -> usize {
+        self.shed.iter().sum()
+    }
+}
+
 pub fn run(args: &Args) -> Result<()> {
+    // Flag validation happens before any socket is touched.
+    let opts = super::opts::ServeOpts::from_args(args)?;
     let addr = args
         .get("addr")
-        .context("loadgen needs --addr HOST:PORT (a router or worker)")?;
+        .context("loadgen needs --addr HOST:PORT (a router or worker)")?
+        .to_string();
     let smoke = crate::bench::smoke();
     let n = args.get_usize("requests", if smoke { 32 } else { 256 })?;
     anyhow::ensure!(n > 0, "--requests must be positive");
     let qps = args.get_f32("qps", 0.0)?;
     anyhow::ensure!(qps >= 0.0, "--qps must be >= 0 (0 = closed loop)");
+    let conns = args.get_usize("conns", 1)?.max(1).min(n);
+    // --keys N spreads requests over N shard keys (consistent-hash
+    // affinity); 0 keeps the old default of one key per request.
+    let keys = args.get_usize("keys", 0)?;
+    let deadline = match args.get_usize("deadline-us", 0)? {
+        0 => None,
+        us => Some(Duration::from_micros(us as u64)),
+    };
     let hw = args.get_usize("hw", 8)?;
     let seed = args.get_usize("seed", 0xC1A5)? as u64;
     let strict = args.get("fail-on-error").is_some();
+    let expect_sheds = args.get("expect-sheds").is_some();
+    let mix = opts.priority;
 
     // Test set: a `.zten` export (--images F.zten) or deterministic
     // synthetic noise at the cluster's image size.
@@ -53,65 +101,114 @@ pub fn run(args: &Args) -> Result<()> {
     let pool = images.shape()[0];
     let per = 3 * hw * hw;
 
-    let client = ClusterClient::connect(addr)?;
     let hist = Metrics::new();
     println!(
         "loadgen: {n} requests of {hw}px images -> {addr} \
-         ({} target)",
+         ({} target, {conns} conns, {} priority)",
         if qps > 0.0 {
             format!("{qps:.0} req/s")
         } else {
             "closed-loop".to_string()
-        }
+        },
+        mix.name()
     );
 
     // Client-side telemetry: time spent building+submitting requests
     // vs waiting on responses (pacing sleeps land in neither stage).
     let telemetry = Telemetry::new();
-    let st_submit = telemetry.stage("loadgen.submit");
-    let st_wait = telemetry.stage("loadgen.wait");
+    let printed = AtomicUsize::new(0);
 
     let t0 = Instant::now();
-    let mut rxs = Vec::with_capacity(n);
-    for i in 0..n {
-        if qps > 0.0 {
-            let due = t0 + Duration::from_secs_f64(i as f64 / qps as f64);
-            let now = Instant::now();
-            if due > now {
-                std::thread::sleep(due - now);
-            }
-        }
-        let _t = st_submit.time();
-        let idx = i % pool;
-        let img = Tensor::from_vec(
-            &[3, hw, hw],
-            images.data()[idx * per..(idx + 1) * per].to_vec(),
-        );
-        st_submit.add_bytes((img.data().len() * 4) as u64);
-        rxs.push(client.submit(&img)?);
-    }
-    let mut ok = 0usize;
-    let mut errors = 0usize;
-    for rx in rxs {
-        let _t = st_wait.time();
-        match rx.recv() {
-            Ok(Ok(resp)) => {
-                ok += 1;
-                hist.record_latency_us(resp.wall.as_micros() as u64);
-            }
-            Ok(Err(msg)) => {
-                if errors < 3 {
-                    eprintln!("loadgen: request failed: {msg}");
+    let tally = std::thread::scope(|scope| -> Result<Tally> {
+        let mut handles = Vec::with_capacity(conns);
+        for c in 0..conns {
+            // Request indices are striped across connections so the
+            // priority cycle and key spread stay deterministic
+            // regardless of --conns.
+            let addr = &addr;
+            let images = &images;
+            let hist = &hist;
+            let telemetry = &telemetry;
+            let printed = &printed;
+            handles.push(scope.spawn(move || -> Result<Tally> {
+                let client = ClusterClient::connect(addr)?;
+                let st_submit = telemetry.stage("loadgen.submit");
+                let st_wait = telemetry.stage("loadgen.wait");
+                let mine: Vec<usize> =
+                    (c..n).step_by(conns).collect();
+                // Each connection paces its own share of --qps.
+                let thread_qps = qps / conns as f32;
+                let mut rxs = Vec::with_capacity(mine.len());
+                for (j, &g) in mine.iter().enumerate() {
+                    if thread_qps > 0.0 {
+                        let due = t0
+                            + Duration::from_secs_f64(
+                                j as f64 / thread_qps as f64,
+                            );
+                        let now = Instant::now();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                    }
+                    let _t = st_submit.time();
+                    let idx = g % pool;
+                    let img = Tensor::from_vec(
+                        &[3, hw, hw],
+                        images.data()[idx * per..(idx + 1) * per]
+                            .to_vec(),
+                    );
+                    st_submit.add_bytes((img.data().len() * 4) as u64);
+                    let prio = mix.for_request(g);
+                    let key =
+                        if keys > 0 { Some((g % keys) as u64) } else { None };
+                    rxs.push((
+                        prio,
+                        client.submit_request(&img, key, prio, deadline)?,
+                    ));
                 }
-                errors += 1;
-            }
-            Err(_) => errors += 1,
+                let mut tally = Tally::default();
+                for (prio, rx) in rxs {
+                    let _t = st_wait.time();
+                    let slot = prio.as_u8() as usize;
+                    match rx.recv() {
+                        Ok(Ok(resp)) => {
+                            tally.ok[slot] += 1;
+                            hist.record_latency_us(
+                                resp.wall.as_micros() as u64,
+                            );
+                        }
+                        Ok(Err(e)) if e.is_overloaded() => {
+                            tally.shed[slot] += 1;
+                        }
+                        Ok(Err(ClusterError::Failed(msg))) => {
+                            if printed.fetch_add(1, Ordering::Relaxed) < 3 {
+                                eprintln!("loadgen: request failed: {msg}");
+                            }
+                            tally.failed += 1;
+                        }
+                        Ok(Err(_)) | Err(_) => tally.failed += 1,
+                    }
+                }
+                client.shutdown();
+                Ok(tally)
+            }));
         }
-    }
+        let mut total = Tally::default();
+        for h in handles {
+            total.absorb(&h.join().expect("loadgen thread panicked")?);
+        }
+        Ok(total)
+    })?;
     let wall = t0.elapsed();
+    let (ok, shed) = (tally.ok_total(), tally.shed_total());
     println!(
-        "loadgen: {ok}/{n} ok ({errors} errors) in {:.2}s — {:.1} req/s \
-         achieved",
+        "loadgen: {ok}/{n} ok, {shed} shed \
+         (low/normal/high {}/{}/{}), {} failed in {:.2}s — \
+         {:.1} req/s achieved",
+        tally.shed[0],
+        tally.shed[1],
+        tally.shed[2],
+        tally.failed,
         wall.as_secs_f64(),
         ok as f64 / wall.as_secs_f64().max(1e-9)
     );
@@ -125,7 +222,11 @@ pub fn run(args: &Args) -> Result<()> {
     // Cluster-wide view: aggregated worker metrics + router counters.
     // A bare worker answers with a plain snapshot, which fails the
     // ClusterStats parse — report and move on.
-    match client.stats() {
+    match ClusterClient::connect(&addr).and_then(|c| {
+        let s = c.stats();
+        c.shutdown();
+        s
+    }) {
         Ok(stats) => {
             println!("cluster: {}", stats.summary());
             println!(
@@ -157,10 +258,25 @@ pub fn run(args: &Args) -> Result<()> {
         Err(e) => println!("(no cluster stats from {addr}: {e:#})"),
     }
     print!("{}", telemetry.snapshot().report(None));
-    client.shutdown();
+
+    // The no-silent-drops guarantee: every request ended as exactly
+    // one of ok / shed / failed. A gap here is a protocol bug.
     anyhow::ensure!(
-        !strict || errors == 0,
-        "loadgen --fail-on-error: {errors} of {n} requests failed"
+        ok + shed + tally.failed == n,
+        "loadgen accounting gap: {ok} ok + {shed} shed + {} failed \
+         != {n} submitted (a request was silently dropped)",
+        tally.failed
+    );
+    anyhow::ensure!(
+        !expect_sheds || shed > 0,
+        "loadgen --expect-sheds: the cluster shed nothing (overload \
+         was expected but admission control never engaged)"
+    );
+    anyhow::ensure!(
+        !strict || tally.failed == 0,
+        "loadgen --fail-on-error: {} of {n} requests failed \
+         ({shed} sheds are admission control, not failures)",
+        tally.failed
     );
     Ok(())
 }

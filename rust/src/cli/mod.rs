@@ -11,6 +11,7 @@
 mod analyze;
 mod cluster;
 mod loadgen;
+pub mod opts;
 pub mod serve;
 mod simulate;
 mod train;
@@ -98,15 +99,19 @@ commands:
                               engine (default: ZEBRA_THREADS or 1;
                               results are bitwise-identical)
             [--seed S]        synthetic test-set seed
-            [--requests N] [--wait-ms MS] [--queue N]
+            [--requests N] [--queue N] [--priority low|normal|high|mixed]
+            [--flush-us US]   batch flush window (legacy: --wait-ms MS)
+            [--max-batch N]   per-batch real-item cap (0 = backend max;
+                              shrinks further under observed load)
             [--ship-codec NAME [--ship-block B]]  frame batches as .zspill
             [--port P]        expose the server over TCP instead of
                               replaying (0 = ephemeral; prints the
                               bound address) [--host H] [--run-s N]
   cluster-worker              serve as a cluster worker node (same
-                              backend/model/ship/--threads flags as
-                              serve; thread counts surface in the
-                              cluster metrics snapshot)
+                              backend/model/ship/batching/--threads
+                              flags as serve; thread counts surface in
+                              the cluster metrics snapshot)
+            [--flush-us US] [--max-batch N] [--queue N]
             [--port P] [--host H] [--run-s N]
             [--ship-upstream HOST:PORT]  ship .zspill batch frames to
                                          the router
@@ -115,10 +120,20 @@ commands:
             [--max-outstanding N] [--max-attempts N] [--heartbeat-ms MS]
             [--port P] [--host H] [--run-s N]
   loadgen   --addr HOST:PORT  drive a router at a target rate; prints
-                              p50/p95/p99 latency + cluster zero-block
+                              p50/p95/p99 latency + per-class
+                              ok/shed/failed + cluster zero-block
                               bandwidth savings
             [--requests N] [--qps Q] [--hw H] [--seed S]
-            [--images F.zten] [--fail-on-error]
+            [--conns N]       concurrent client connections
+            [--priority low|normal|high|mixed]  request class (mixed
+                              cycles all three)
+            [--keys N]        spread requests over N shard keys
+                              (0 = one key per request)
+            [--deadline-us US]  per-request completion deadline
+            [--images F.zten]
+            [--expect-sheds]  error unless admission control shed >= 1
+                              request (overload smoke tests)
+            [--fail-on-error] error on faults (sheds are not faults)
   simulate  --trace DIR       accelerator simulation of a trace
             | --backend reference [--model KEY] [--images N]
                                   [--weights DIR] [--seed S]
@@ -341,6 +356,29 @@ mod tests {
             "nope",
         ]))
         .is_err());
+    }
+
+    #[test]
+    fn serving_flags_validate_in_one_place() {
+        // ServeOpts is the one shared flag surface: the same
+        // conflict/value checks fire for every serving entry point,
+        // before any executor is built or socket touched.
+        let e = run(&v(&["serve", "--flush-us", "5", "--wait-ms", "2"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("same knob"), "{e}");
+        let e = run(&v(&["loadgen", "--addr", "x", "--priority", "urgent"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("mixed"), "{e}");
+        let e = run(&v(&["serve", "--queue", "0"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--queue"), "{e}");
+        let e = run(&v(&["serve", "--flush-us", "0"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--flush-us"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,291 @@
+//! Shared serving-flag surface.
+//!
+//! Every serving entry point — `zebra serve`, `zebra cluster-worker`,
+//! `zebra cluster-router`, `zebra loadgen` — parses the same knobs
+//! through [`ServeOpts`], so a new flag (`--max-batch`, `--flush-us`,
+//! `--priority`, ...) lands in exactly one place and is covered by one
+//! test instead of a copy per subcommand. Backend selection
+//! (`--backend`/`--model`/`--weights`/`--threads`) stays in
+//! `serve::build_executor`, which is already the one shared builder
+//! for it.
+
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Result};
+
+use super::Args;
+use crate::compress;
+use crate::coordinator::{Priority, ServerConfig, ShipSpills};
+
+/// `--priority low|normal|high|mixed`: one fixed class for every
+/// request, or (loadgen) a deterministic low/normal/high cycle that
+/// exercises all three admission tiers in one run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PriorityMix {
+    Fixed(Priority),
+    Mixed,
+}
+
+impl PriorityMix {
+    pub fn parse(s: &str) -> Result<PriorityMix> {
+        if s == "mixed" {
+            return Ok(PriorityMix::Mixed);
+        }
+        // Priority::parse's error lists low|normal|high; point at the
+        // extra loadgen-only value too.
+        Priority::parse(s)
+            .map(PriorityMix::Fixed)
+            .map_err(|_| {
+                anyhow::anyhow!(
+                    "unknown priority {s:?} (low|normal|high|mixed)"
+                )
+            })
+    }
+
+    /// Class of the i-th request under this mix.
+    pub fn for_request(&self, i: usize) -> Priority {
+        match self {
+            PriorityMix::Fixed(p) => *p,
+            PriorityMix::Mixed => Priority::ALL[i % Priority::ALL.len()],
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PriorityMix::Fixed(p) => p.name(),
+            PriorityMix::Mixed => "mixed",
+        }
+    }
+}
+
+/// The parsed serving knobs (defaults match the flags' documented
+/// defaults; see `zebra help`).
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Batch flush window (`--flush-us`, or the legacy `--wait-ms`).
+    pub flush: Duration,
+    /// Admission queue capacity (`--queue`); the per-class caps are
+    /// cut from this.
+    pub queue: usize,
+    /// Per-batch real-item cap (`--max-batch`; 0 = backend's largest
+    /// exported batch size).
+    pub max_batch: usize,
+    /// `--ship-codec NAME`: frame executed batches as `.zspill`.
+    pub ship_codec: Option<String>,
+    /// `--ship-block B`: block geometry for the ship codec.
+    pub ship_block: usize,
+    /// `--host H` bind host.
+    pub host: String,
+    /// `--port P`; `Some(0)` = ephemeral. `None` means the flag was
+    /// absent — `zebra serve` then replays instead of listening.
+    pub port: Option<u16>,
+    /// `--run-s N`: exit after N seconds (0 = run until killed).
+    pub run_s: u64,
+    /// `--priority low|normal|high|mixed` (client-side class choice).
+    pub priority: PriorityMix,
+}
+
+impl ServeOpts {
+    pub fn from_args(args: &Args) -> Result<ServeOpts> {
+        let flush = match (args.get("flush-us"), args.get("wait-ms")) {
+            (Some(_), Some(_)) => bail!(
+                "--flush-us and --wait-ms are the same knob (batch \
+                 flush window); pass one"
+            ),
+            (Some(_), None) => {
+                let us = args.get_usize("flush-us", 2000)?;
+                ensure!(us > 0, "--flush-us must be positive");
+                Duration::from_micros(us as u64)
+            }
+            (None, _) => {
+                Duration::from_millis(args.get_usize("wait-ms", 2)? as u64)
+            }
+        };
+        let queue = args.get_usize("queue", 1024)?;
+        ensure!(queue > 0, "--queue must be positive");
+        let max_batch = args.get_usize("max-batch", 0)?;
+        let ship_codec = args.get("ship-codec").map(String::from);
+        let ship_block = args.get_usize("ship-block", 4)?;
+        ensure!(
+            ship_block <= u16::MAX as usize,
+            "--ship-block {ship_block} is out of range"
+        );
+        let host = args.get_or("host", "127.0.0.1");
+        let port = match args.get("port") {
+            None => None,
+            Some(_) => {
+                let p = args.get_usize("port", 0)?;
+                ensure!(
+                    p <= u16::MAX as usize,
+                    "--port {p} out of range"
+                );
+                Some(p as u16)
+            }
+        };
+        let run_s = args.get_usize("run-s", 0)? as u64;
+        let priority =
+            PriorityMix::parse(&args.get_or("priority", "normal"))?;
+        Ok(ServeOpts {
+            flush,
+            queue,
+            max_batch,
+            ship_codec,
+            ship_block,
+            host,
+            port,
+            run_s,
+            priority,
+        })
+    }
+
+    /// The coordinator config these flags describe. `image_hw` is the
+    /// executor's image size (the ship codec's block must divide it).
+    pub fn server_config(&self, image_hw: usize) -> Result<ServerConfig> {
+        Ok(ServerConfig {
+            max_wait: self.flush,
+            workers: 1,
+            max_queue: self.queue,
+            max_batch: self.max_batch,
+            ship_spills: self.ship_spills(image_hw)?,
+            spill_sink: None,
+        })
+    }
+
+    /// Resolve `--ship-codec`/`--ship-block` against the codec
+    /// registry and the model's image geometry (CLI error instead of
+    /// a `Server::start` assert).
+    pub fn ship_spills(&self, image_hw: usize) -> Result<Option<ShipSpills>> {
+        let Some(name) = &self.ship_codec else {
+            return Ok(None);
+        };
+        let spec = compress::spec_or_err(name)?;
+        if spec.needs_block {
+            ensure!(
+                self.ship_block > 0 && image_hw % self.ship_block == 0,
+                "--ship-block {} must be positive and divide the \
+                 {image_hw}px image",
+                self.ship_block
+            );
+        }
+        Ok(Some(ShipSpills {
+            codec: spec.id,
+            block: self.ship_block as u16,
+        }))
+    }
+
+    /// `--host`/`--port` as a bind address (`--port 0` or no port =
+    /// ask the OS; the node prints what it got).
+    pub fn listen_addr(&self) -> String {
+        format!("{}:{}", self.host, self.port.unwrap_or(0))
+    }
+
+    /// Block for `--run-s` seconds (0 = until the process is killed).
+    pub fn hold(&self) {
+        if self.run_s == 0 {
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        std::thread::sleep(Duration::from_secs(self.run_s));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        let mut v = vec!["serve".to_string()];
+        v.extend(s.iter().map(|x| x.to_string()));
+        Args::parse(&v).unwrap()
+    }
+
+    #[test]
+    fn defaults_match_the_documented_flags() {
+        let o = ServeOpts::from_args(&parse(&[])).unwrap();
+        assert_eq!(o.flush, Duration::from_millis(2));
+        assert_eq!(o.queue, 1024);
+        assert_eq!(o.max_batch, 0);
+        assert_eq!(o.ship_codec, None);
+        assert_eq!(o.ship_block, 4);
+        assert_eq!(o.port, None);
+        assert_eq!(o.run_s, 0);
+        assert_eq!(o.priority, PriorityMix::Fixed(Priority::Normal));
+        assert_eq!(o.listen_addr(), "127.0.0.1:0");
+        let cfg = o.server_config(8).unwrap();
+        assert_eq!(cfg.max_queue, 1024);
+        assert_eq!(cfg.max_batch, 0);
+        assert!(cfg.ship_spills.is_none());
+    }
+
+    #[test]
+    fn every_flag_lands_in_one_place() {
+        let o = ServeOpts::from_args(&parse(&[
+            "--flush-us", "750", "--queue", "64", "--max-batch", "4",
+            "--ship-codec", "zero-block", "--ship-block", "8",
+            "--host", "0.0.0.0", "--port", "9000", "--run-s", "3",
+            "--priority", "high",
+        ]))
+        .unwrap();
+        assert_eq!(o.flush, Duration::from_micros(750));
+        assert_eq!(o.queue, 64);
+        assert_eq!(o.max_batch, 4);
+        assert_eq!(o.ship_block, 8);
+        assert_eq!(o.port, Some(9000));
+        assert_eq!(o.run_s, 3);
+        assert_eq!(o.listen_addr(), "0.0.0.0:9000");
+        assert_eq!(o.priority, PriorityMix::Fixed(Priority::High));
+        let cfg = o.server_config(8).unwrap();
+        assert_eq!(cfg.max_wait, Duration::from_micros(750));
+        assert_eq!(cfg.max_batch, 4);
+        let ship = cfg.ship_spills.expect("ship codec resolved");
+        assert_eq!(ship.block, 8);
+    }
+
+    #[test]
+    fn legacy_wait_ms_still_works_but_not_both() {
+        let o = ServeOpts::from_args(&parse(&["--wait-ms", "5"])).unwrap();
+        assert_eq!(o.flush, Duration::from_millis(5));
+        let e = ServeOpts::from_args(&parse(&[
+            "--wait-ms", "5", "--flush-us", "100",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("same knob"), "{e}");
+    }
+
+    #[test]
+    fn invalid_values_error_loudly() {
+        assert!(ServeOpts::from_args(&parse(&["--flush-us", "0"])).is_err());
+        assert!(ServeOpts::from_args(&parse(&["--queue", "0"])).is_err());
+        assert!(ServeOpts::from_args(&parse(&["--port", "70000"])).is_err());
+        let e = ServeOpts::from_args(&parse(&["--priority", "urgent"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("mixed"), "{e}");
+        // Ship geometry that cannot tile the image errors at parse
+        // time, not inside Server::start.
+        let o = ServeOpts::from_args(&parse(&[
+            "--ship-codec", "zero-block", "--ship-block", "3",
+        ]))
+        .unwrap();
+        let e = o.ship_spills(8).unwrap_err().to_string();
+        assert!(e.contains("divide"), "{e}");
+        // Unknown ship codecs list the registry.
+        let o = ServeOpts::from_args(&parse(&["--ship-codec", "nope"]))
+            .unwrap();
+        assert!(o.ship_spills(8).is_err());
+    }
+
+    #[test]
+    fn mixed_priority_cycles_all_three_classes() {
+        let m = PriorityMix::parse("mixed").unwrap();
+        assert_eq!(m.name(), "mixed");
+        assert_eq!(m.for_request(0), Priority::Low);
+        assert_eq!(m.for_request(1), Priority::Normal);
+        assert_eq!(m.for_request(2), Priority::High);
+        assert_eq!(m.for_request(3), Priority::Low);
+        let f = PriorityMix::parse("low").unwrap();
+        assert_eq!(f.for_request(7), Priority::Low);
+    }
+}

@@ -8,17 +8,20 @@
 //! front (it prints the bound address), and `zebra cluster-worker` is
 //! this plus upstream spill shipping.
 
+use std::sync::mpsc::channel;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use super::opts::ServeOpts;
 use super::Args;
 use crate::backend::reference::RefSpec;
 use crate::backend::{synth_images, synth_labels, testset_matches, BackendKind};
-use crate::compress;
 use crate::coordinator::server::BatchExecutor;
-use crate::coordinator::{reference_executor, Server, ServerConfig, ShipSpills};
+use crate::coordinator::{
+    reference_executor, Server, SubmitOutcome, SubmitRequest,
+};
 use crate::tensor::{read_zten, read_zten_i32, Tensor};
 
 pub fn run(args: &Args) -> Result<()> {
@@ -101,38 +104,15 @@ pub(crate) fn build_executor(
     Ok((exec, classes, backend))
 }
 
-/// Resolve `--ship-codec`/`--ship-block` against the registry and the
-/// model's image geometry (shared by serve and the cluster worker).
-pub(crate) fn ship_config(
-    args: &Args,
-    image_hw: usize,
-) -> Result<Option<ShipSpills>> {
-    let Some(name) = args.get("ship-codec") else {
-        return Ok(None);
-    };
-    let spec = compress::spec_or_err(name)?;
-    let block = args.get_usize("ship-block", 4)?;
-    anyhow::ensure!(
-        block <= u16::MAX as usize,
-        "--ship-block {block} is out of range"
-    );
-    if spec.needs_block {
-        anyhow::ensure!(
-            block > 0 && image_hw % block == 0,
-            "--ship-block {block} must be positive and divide the \
-             {image_hw}px image"
-        );
-    }
-    Ok(Some(ShipSpills { codec: spec.id, block: block as u16 }))
-}
-
 /// `serve` with an explicit artifacts directory (tests inject a temp
 /// dir here instead of mutating `ZEBRA_ARTIFACTS`).
 pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
+    // The shared flag surface validates first: a bad --queue or a
+    // --flush-us/--wait-ms conflict must fail before any executor is
+    // built.
+    let opts = ServeOpts::from_args(args)?;
     let model = args.get_or("model", "rn18-c10-t0.1");
     let n_requests = args.get_usize("requests", 64)?;
-    let wait_ms = args.get_usize("wait-ms", 2)? as u64;
-    let queue = args.get_usize("queue", 1024)?;
     // Synthetic-test-set seed: reproducible by default, varied on
     // demand (`--seed`).
     let synth_seed = args.get_usize("seed", 0xB1A5)? as u64;
@@ -151,8 +131,8 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
     // --port: expose this server on TCP instead of replaying a test
     // set against it (`--port 0` binds an ephemeral port and prints
     // the bound address, so scripts never race on fixed ports).
-    if args.get("port").is_some() {
-        return super::cluster::expose_worker(args, exec);
+    if opts.port.is_some() {
+        return super::cluster::expose_worker(&opts, args, exec);
     }
 
     // Test set: prefer the exported one when it matches this model's
@@ -183,32 +163,45 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
     let hw = images.shape()[2];
     let per = 3 * hw * hw;
 
-    // Optional cross-node spill shipping (registry + block geometry
-    // validated with a CLI error instead of a Server::start assert).
-    let ship_spills = ship_config(args, exec.image_hw())?;
-
-    let server = Server::start(
-        exec,
-        ServerConfig {
-            max_wait: Duration::from_millis(wait_ms),
-            workers: 1,
-            max_queue: queue,
-            ship_spills,
-            spill_sink: None,
-        },
-    );
+    // Server config comes whole from the shared flag surface
+    // (flush window, queue, max-batch, ship codec geometry).
+    let image_hw = exec.image_hw();
+    let server = Server::start(exec, opts.server_config(image_hw)?);
 
     let n_avail = images.shape()[0];
     let t0 = Instant::now();
     let mut pending = Vec::new();
+    let mut shed = 0usize;
     for i in 0..n_requests {
         let idx = i % n_avail;
         let img = Tensor::from_vec(
             &[3, hw, hw],
             images.data()[idx * per..(idx + 1) * per].to_vec(),
         );
-        pending.push((idx, server.submit(img)?));
+        // One shard key (the default) so the whole replay shares one
+        // batch queue — same batching behavior the old static batcher
+        // had. `--priority` picks the admission class.
+        let req = SubmitRequest::new(img)
+            .with_priority(opts.priority.for_request(i));
+        let (tx, rx) = channel();
+        match server.submit(req, tx) {
+            SubmitOutcome::Enqueued { .. } => pending.push((idx, rx)),
+            SubmitOutcome::Shed { priority, queued } => {
+                if shed == 0 {
+                    println!(
+                        "(admission control shed a {} class request; \
+                         {queued} queued)",
+                        priority.name()
+                    );
+                }
+                shed += 1;
+            }
+            SubmitOutcome::Closed => {
+                anyhow::bail!("server closed while submitting")
+            }
+        }
     }
+    let answered = pending.len();
     let mut correct = 0usize;
     for (idx, rx) in pending {
         let resp = rx.recv().context("request dropped")?;
@@ -218,10 +211,11 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
     }
     let wall = t0.elapsed();
     println!(
-        "\nserved {n_requests} requests in {:.2}s ({:.1} req/s), top-1 {:.1}%{}",
+        "\nserved {answered}/{n_requests} requests ({shed} shed) in \
+         {:.2}s ({:.1} req/s), top-1 {:.1}%{}",
         wall.as_secs_f64(),
-        n_requests as f64 / wall.as_secs_f64(),
-        100.0 * correct as f64 / n_requests as f64,
+        answered as f64 / wall.as_secs_f64(),
+        100.0 * correct as f64 / answered.max(1) as f64,
         if synthetic { " (synthetic labels — accuracy is chance)" } else { "" }
     );
     println!("metrics: {}", server.metrics.summary());

@@ -21,6 +21,7 @@ use anyhow::{anyhow, Context, Result};
 
 use super::metrics::ClusterStats;
 use super::wire::{self, Frame, FrameType, WireResponse};
+use crate::coordinator::Priority;
 use crate::tensor::Tensor;
 
 /// How long [`ClusterClient::stats`] waits for the router's answer.
@@ -34,10 +35,42 @@ pub struct ClusterResponse {
     pub wall: Duration,
 }
 
+/// Why a submit did not produce a response. `Overloaded` is the
+/// admission-control outcome (the cluster explicitly shed the request
+/// — retry later, or raise its class); `Failed` is a fault (worker
+/// error, lost connection, unparseable payload).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClusterError {
+    Overloaded { priority: Priority, queued: u64, detail: String },
+    Failed(String),
+}
+
+impl ClusterError {
+    /// True when the request was shed by admission control (as opposed
+    /// to faulting).
+    pub fn is_overloaded(&self) -> bool {
+        matches!(self, ClusterError::Overloaded { .. })
+    }
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::Overloaded { priority, queued, detail } => write!(
+                f,
+                "overloaded: {} class shed ({queued} queued): {detail}",
+                priority.name()
+            ),
+            ClusterError::Failed(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
 /// What a submit's reply channel delivers: the response, or the
-/// terminal error message (worker/router `Error` frame, lost
-/// connection, unparseable payload).
-pub type Delivery = Result<ClusterResponse, String>;
+/// terminal [`ClusterError`].
+pub type Delivery = Result<ClusterResponse, ClusterError>;
 
 struct PendingEntry {
     tx: Sender<Delivery>,
@@ -82,11 +115,11 @@ impl ClusterClient {
         })
     }
 
-    /// Submit one `(3, H, W)` image; the shard key defaults to the
-    /// request id (spreads keys uniformly in hash mode).
+    /// Submit one `(3, H, W)` image at `Normal` priority with no
+    /// deadline; the shard key defaults to the request id (spreads
+    /// keys uniformly in hash mode).
     pub fn submit(&self, image: &Tensor) -> Result<Receiver<Delivery>> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.submit_inner(image, id, id)
+        self.submit_request(image, None, Priority::Normal, None)
     }
 
     /// Submit with an explicit shard key (consistent-hash affinity:
@@ -96,16 +129,21 @@ impl ClusterClient {
         image: &Tensor,
         key: u64,
     ) -> Result<Receiver<Delivery>> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.submit_inner(image, id, key)
+        self.submit_request(image, Some(key), Priority::Normal, None)
     }
 
-    fn submit_inner(
+    /// The full submission surface — the wire-side mirror of the
+    /// coordinator's `SubmitRequest`: shard key (defaults to the
+    /// request id), priority class, and optional completion deadline.
+    pub fn submit_request(
         &self,
         image: &Tensor,
-        id: u64,
-        key: u64,
+        key: Option<u64>,
+        priority: Priority,
+        deadline: Option<Duration>,
     ) -> Result<Receiver<Delivery>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let key = key.unwrap_or(id);
         let (tx, rx) = channel();
         self.pending
             .lock()
@@ -114,7 +152,7 @@ impl ClusterClient {
         let bytes = Frame::new(
             FrameType::Submit,
             id,
-            wire::encode_submit(key, image),
+            wire::encode_submit(key, priority, deadline, image),
         )
         .encode();
         if let Err(e) = self.write.lock().unwrap().write_all(&bytes) {
@@ -129,7 +167,7 @@ impl ClusterClient {
         let rx = self.submit(image)?;
         rx.recv()
             .context("cluster connection dropped the request")?
-            .map_err(|msg| anyhow!("cluster request failed: {msg}"))
+            .map_err(|e| anyhow!("cluster request failed: {e}"))
     }
 
     /// Fetch cluster-wide stats from the router.
@@ -188,7 +226,9 @@ fn reader_loop(
                     let wall = e.sent_at.elapsed();
                     let delivery = WireResponse::parse(&frame.payload)
                         .map(|response| ClusterResponse { response, wall })
-                        .map_err(|err| err.to_string());
+                        .map_err(|err| {
+                            ClusterError::Failed(err.to_string())
+                        });
                     let _ = e.tx.send(delivery);
                 }
             }
@@ -197,11 +237,29 @@ fn reader_loop(
                     .into_owned();
                 let entry = pending.lock().unwrap().remove(&frame.id);
                 if let Some(e) = entry {
-                    let _ = e.tx.send(Err(msg));
+                    let _ = e.tx.send(Err(ClusterError::Failed(msg)));
                 } else if let Some(tx) =
                     pending_stats.lock().unwrap().remove(&frame.id)
                 {
                     let _ = tx.send(Err(msg));
+                }
+            }
+            FrameType::Overloaded => {
+                let entry = pending.lock().unwrap().remove(&frame.id);
+                if let Some(e) = entry {
+                    let err = match wire::parse_overloaded(&frame.payload) {
+                        Ok((priority, queued, detail)) => {
+                            ClusterError::Overloaded {
+                                priority,
+                                queued,
+                                detail,
+                            }
+                        }
+                        Err(bad) => ClusterError::Failed(format!(
+                            "malformed overloaded frame: {bad}"
+                        )),
+                    };
+                    let _ = e.tx.send(Err(err));
                 }
             }
             FrameType::MetricsResp => {
@@ -219,7 +277,9 @@ fn reader_loop(
     }
     // Connection is gone: everything still pending fails loudly.
     for (_, e) in pending.lock().unwrap().drain() {
-        let _ = e.tx.send(Err("connection to the cluster lost".into()));
+        let _ = e.tx.send(Err(ClusterError::Failed(
+            "connection to the cluster lost".into(),
+        )));
     }
     for (_, tx) in pending_stats.lock().unwrap().drain() {
         let _ = tx.send(Err("connection to the cluster lost".into()));

@@ -22,8 +22,10 @@ use crate::coordinator::{percentile_from_buckets, Metrics};
 
 /// Counter order on the wire (stable; append-only by protocol rule —
 /// `exec_threads` was appended as counter 9 by the block-sparse
-/// execution-engine PR).
-const COUNTERS: usize = 10;
+/// execution-engine PR; the continuous-batching PR appended the
+/// admission-control set: `shed_low`/`shed_normal`/`shed_high` (10–12),
+/// `deadline_miss` (13), `queue_depth` (14), `failed` (15)).
+const COUNTERS: usize = 16;
 
 /// Minimum counters a snapshot must carry (the original set). Parsing
 /// accepts anything in `COUNTERS_V1..`, defaulting absent appended
@@ -50,6 +52,22 @@ pub struct MetricsSnapshot {
     /// Compute worker threads per execution on this node (a gauge;
     /// merged snapshots sum it, giving total cluster compute threads).
     pub exec_threads: u64,
+    /// Requests shed by admission control, per priority class
+    /// (shed-lowest-first; every shed was an explicit refusal to its
+    /// caller, never a silent drop).
+    pub shed_low: u64,
+    pub shed_normal: u64,
+    pub shed_high: u64,
+    /// Served requests whose explicit deadline had already passed at
+    /// flush time.
+    pub deadline_miss: u64,
+    /// Queue depth at snapshot time (a gauge; merged snapshots sum it,
+    /// giving total cluster queue occupancy).
+    pub queue_depth: u64,
+    /// Admitted requests whose execution failed. Per node,
+    /// `requests == responses + shed_total + failed` up to in-queue
+    /// work — the no-gaps accounting the flood test pins.
+    pub failed: u64,
     /// Latency histogram (bucket `i` covers up to `2^i` us).
     pub latency_buckets: Vec<u64>,
 }
@@ -68,8 +86,19 @@ impl MetricsSnapshot {
             index_bytes: m.index_bytes.load(Ordering::Relaxed),
             shipped_spill_bytes: m.shipped_spill_bytes.load(Ordering::Relaxed),
             exec_threads: m.exec_threads.load(Ordering::Relaxed),
+            shed_low: m.shed_low.load(Ordering::Relaxed),
+            shed_normal: m.shed_normal.load(Ordering::Relaxed),
+            shed_high: m.shed_high.load(Ordering::Relaxed),
+            deadline_miss: m.deadline_miss.load(Ordering::Relaxed),
+            queue_depth: m.queue_depth.load(Ordering::Relaxed),
+            failed: m.failed.load(Ordering::Relaxed),
             latency_buckets: m.latency_bucket_counts().to_vec(),
         }
+    }
+
+    /// Total sheds across all priority classes.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_low + self.shed_normal + self.shed_high
     }
 
     fn counters(&self) -> [u64; COUNTERS] {
@@ -84,6 +113,12 @@ impl MetricsSnapshot {
             self.index_bytes,
             self.shipped_spill_bytes,
             self.exec_threads,
+            self.shed_low,
+            self.shed_normal,
+            self.shed_high,
+            self.deadline_miss,
+            self.queue_depth,
+            self.failed,
         ]
     }
 
@@ -100,6 +135,12 @@ impl MetricsSnapshot {
         self.index_bytes += other.index_bytes;
         self.shipped_spill_bytes += other.shipped_spill_bytes;
         self.exec_threads += other.exec_threads;
+        self.shed_low += other.shed_low;
+        self.shed_normal += other.shed_normal;
+        self.shed_high += other.shed_high;
+        self.deadline_miss += other.deadline_miss;
+        self.queue_depth += other.queue_depth;
+        self.failed += other.failed;
         if self.latency_buckets.len() < other.latency_buckets.len() {
             self.latency_buckets.resize(other.latency_buckets.len(), 0);
         }
@@ -181,6 +222,12 @@ impl MetricsSnapshot {
             index_bytes: c(7),
             shipped_spill_bytes: c(8),
             exec_threads: c(9),
+            shed_low: c(10),
+            shed_normal: c(11),
+            shed_high: c(12),
+            deadline_miss: c(13),
+            queue_depth: c(14),
+            failed: c(15),
             latency_buckets: vals.buckets.clone(),
         })
     }
@@ -237,8 +284,18 @@ pub struct ClusterStats {
     pub routed: u64,
     /// Re-dispatches after a worker failure.
     pub retries: u64,
-    /// Submits rejected (admission limits / no live workers).
+    /// Total submits refused terminally (sheds + faults). The finer
+    /// split below satisfies `shed_low + shed_normal + shed_high +
+    /// failed == rejected`, and per router
+    /// `requests == responses + rejected` up to in-flight work.
     pub rejected: u64,
+    /// Router-side sheds per priority class (admission caps hit on
+    /// every candidate worker, or workers shed and retries exhausted).
+    pub shed_low: u64,
+    pub shed_normal: u64,
+    pub shed_high: u64,
+    /// Router-side terminal faults (every attempt errored).
+    pub failed: u64,
     /// `SpillShip` frames (and their `.zspill` payload bytes) received
     /// from workers. `spill_bytes_in` matching the aggregate's
     /// `shipped_spill_bytes` is the cluster-level Eq. 2 cross-check.
@@ -253,10 +310,16 @@ impl ClusterStats {
         percentile_from_buckets(&self.router_latency_buckets, p)
     }
 
+    /// Router-side sheds across all priority classes.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_low + self.shed_normal + self.shed_high
+    }
+
     /// One-line summary for CLIs.
     pub fn summary(&self) -> String {
         format!(
-            "workers {}/{} alive | routed={} retries={} rejected={} | \
+            "workers {}/{} alive | routed={} retries={} rejected={} \
+             shed={}/{}/{} failed={} | \
              cluster: responses={} exec_threads={} mean_batch={:.2} \
              p50={}us p95={}us p99={}us bw_reduction={:.1}% | spills: \
              shipped={}B received={}B ({} frames)",
@@ -265,6 +328,10 @@ impl ClusterStats {
             self.routed,
             self.retries,
             self.rejected,
+            self.shed_low,
+            self.shed_normal,
+            self.shed_high,
+            self.failed,
             self.aggregate.responses,
             self.aggregate.exec_threads,
             self.aggregate.mean_batch(),
@@ -280,6 +347,9 @@ impl ClusterStats {
 
     /// Wire encoding: the aggregate snapshot block, then a second
     /// counted block of router counters + router latency buckets.
+    /// Router counters follow the same append-only rule as the
+    /// snapshot's: the shed/failed split (7–10) was appended by the
+    /// continuous-batching PR.
     pub fn encode(&self) -> Vec<u8> {
         let mut out = self.aggregate.encode();
         let counters = [
@@ -290,6 +360,10 @@ impl ClusterStats {
             self.rejected,
             self.spill_frames_in,
             self.spill_bytes_in,
+            self.shed_low,
+            self.shed_normal,
+            self.shed_high,
+            self.failed,
         ];
         out.extend_from_slice(&(counters.len() as u16).to_le_bytes());
         out.extend_from_slice(
@@ -314,21 +388,25 @@ impl ClusterStats {
                 "cluster stats have trailing bytes",
             ));
         }
-        if router.counters.len() != 7 {
+        if router.counters.len() < 7 {
             return Err(FrameError::Malformed(
                 "cluster stats router counter count mismatch",
             ));
         }
-        let c = &router.counters;
+        let c = |i: usize| router.counters.get(i).copied().unwrap_or(0);
         Ok(ClusterStats {
             aggregate,
-            workers_total: c[0],
-            workers_alive: c[1],
-            routed: c[2],
-            retries: c[3],
-            rejected: c[4],
-            spill_frames_in: c[5],
-            spill_bytes_in: c[6],
+            workers_total: c(0),
+            workers_alive: c(1),
+            routed: c(2),
+            retries: c(3),
+            rejected: c(4),
+            spill_frames_in: c(5),
+            spill_bytes_in: c(6),
+            shed_low: c(7),
+            shed_normal: c(8),
+            shed_high: c(9),
+            failed: c(10),
             router_latency_buckets: router.buckets.clone(),
         })
     }
@@ -354,6 +432,12 @@ mod tests {
             index_bytes: 100 * scale,
             shipped_spill_bytes: 555 * scale,
             exec_threads: 2 * scale,
+            shed_low: 7 * scale,
+            shed_normal: 3 * scale,
+            shed_high: scale,
+            deadline_miss: 2 * scale,
+            queue_depth: 4 * scale,
+            failed: scale,
             latency_buckets: buckets,
         }
     }
@@ -388,6 +472,8 @@ mod tests {
         assert_eq!(s.requests, 1);
         assert_eq!(s.shipped_spill_bytes, 9);
         assert_eq!(s.exec_threads, 0, "appended counter defaults to 0");
+        assert_eq!(s.shed_total(), 0, "appended shed counters default to 0");
+        assert_eq!(s.failed, 0);
         // A future peer with an extra appended counter also parses.
         let mut future = Vec::new();
         future.extend_from_slice(&11u16.to_le_bytes());
@@ -456,6 +542,9 @@ mod tests {
         assert_eq!(a.requests, 300);
         assert_eq!(a.shipped_spill_bytes, 555 * 3);
         assert_eq!(a.exec_threads, 2 * 3, "thread gauges sum across nodes");
+        assert_eq!(a.shed_total(), 11 * 3, "shed counters sum class-wise");
+        assert_eq!(a.deadline_miss, 2 * 3);
+        assert_eq!(a.failed, 3);
         assert_eq!(a.latency_buckets[7], 30);
         assert_eq!(a.latency_buckets[17], 3);
         // Merged percentiles come from merged buckets: the p99 must
@@ -473,11 +562,16 @@ mod tests {
             workers_alive: 2,
             routed: 123,
             retries: 4,
-            rejected: 1,
+            rejected: 6,
             spill_frames_in: 9,
             spill_bytes_in: 555 * 2,
+            shed_low: 3,
+            shed_normal: 1,
+            shed_high: 1,
+            failed: 1,
             router_latency_buckets: vec![1; LATENCY_BUCKETS],
         };
+        assert_eq!(stats.shed_total() + stats.failed, stats.rejected);
         let back = ClusterStats::parse(&stats.encode()).unwrap();
         assert_eq!(back, stats);
         let bytes = stats.encode();
@@ -486,5 +580,35 @@ mod tests {
         }
         assert!(stats.summary().contains("2/3 alive"), "{}", stats.summary());
         assert!(stats.summary().contains("p95="), "{}", stats.summary());
+        assert!(
+            stats.summary().contains("shed=3/1/1"),
+            "{}",
+            stats.summary()
+        );
+    }
+
+    #[test]
+    fn legacy_seven_counter_router_blocks_still_parse() {
+        // A pre-admission-control router (7 counters in the second
+        // block): parses with the appended shed/failed split at 0.
+        let mut bytes = snap(1).encode();
+        bytes.extend_from_slice(&7u16.to_le_bytes());
+        bytes.extend_from_slice(&0u16.to_le_bytes());
+        for v in 1u64..=7 {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let stats = ClusterStats::parse(&bytes).unwrap();
+        assert_eq!(stats.workers_total, 1);
+        assert_eq!(stats.spill_bytes_in, 7);
+        assert_eq!(stats.shed_total(), 0);
+        assert_eq!(stats.failed, 0);
+        // Fewer than the original 7 is genuinely malformed.
+        let mut short = snap(1).encode();
+        short.extend_from_slice(&6u16.to_le_bytes());
+        short.extend_from_slice(&0u16.to_le_bytes());
+        for v in 1u64..=6 {
+            short.extend_from_slice(&v.to_le_bytes());
+        }
+        assert!(ClusterStats::parse(&short).is_err());
     }
 }

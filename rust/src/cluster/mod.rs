@@ -6,9 +6,11 @@
 //! This module is that deployment:
 //!
 //! - [`wire`] — the length-prefixed, versioned, FNV-checksummed frame
-//!   protocol (magic `ZCLU`), carrying Submit / Response / Heartbeat /
-//!   SpillShip / Error / Metrics frames with the same strict
-//!   never-panicking parse guarantees as `.zspill` itself.
+//!   protocol (magic `ZCLU`, version 2 with version-1 peers still
+//!   accepted), carrying Submit / Response / Heartbeat / SpillShip /
+//!   Error / Metrics / Overloaded frames with the same strict
+//!   never-panicking parse guarantees as `.zspill` itself. v2 submits
+//!   carry a priority class and an optional deadline.
 //! - [`worker`] — a [`WorkerNode`]: the coordinator server behind a
 //!   TCP listener, executing on any
 //!   [`BatchExecutor`](crate::coordinator::server::BatchExecutor)
@@ -16,8 +18,10 @@
 //!   optionally shipping its `.zspill` batch frames upstream.
 //! - [`router`] — a [`Router`]: shards client requests across workers
 //!   (round-robin or consistent-hash-by-key), enforces per-worker
-//!   admission limits, retries a failed worker's in-flight requests
-//!   on its peers, and tracks liveness via heartbeats.
+//!   priority-class admission caps (shed lowest class first, answered
+//!   with explicit `Overloaded` frames), retries a failed worker's
+//!   in-flight requests on its peers, and tracks liveness via
+//!   heartbeats.
 //! - [`client`] — a [`ClusterClient`]: one pipelined connection with
 //!   the same submit/response ergonomics as the in-process server.
 //! - [`metrics`] — wire-portable [`MetricsSnapshot`]s of each node's
@@ -43,8 +47,8 @@ pub mod router;
 pub mod wire;
 pub mod worker;
 
-pub use client::{ClusterClient, ClusterResponse, Delivery};
+pub use client::{ClusterClient, ClusterError, ClusterResponse, Delivery};
 pub use metrics::{ClusterStats, MetricsSnapshot};
 pub use router::{Router, RouterConfig, ShardMode};
-pub use wire::{Frame, FrameError, FrameType, WireResponse};
+pub use wire::{Frame, FrameError, FrameType, WireResponse, WireSubmit};
 pub use worker::WorkerNode;

@@ -12,9 +12,15 @@
 //!
 //! Reliability mechanics, all on std threads + channels like the
 //! coordinator itself:
-//! - **Admission limits**: at most `max_outstanding` in-flight
-//!   requests per worker; a `Submit` that fits nowhere is rejected
-//!   with an `Error` frame instead of queueing unboundedly.
+//! - **Admission control with priority classes**: at most
+//!   `max_outstanding` in-flight requests per worker, split by the
+//!   request's [`Priority`] class with the same 50%/85%/100% caps the
+//!   coordinator's batch manager uses ([`Priority::admission_cap`]) —
+//!   so under load the router sheds `Low` first, then `Normal`, and
+//!   `High` only when saturated. A `Submit` that fits nowhere is
+//!   refused with an explicit `Overloaded` frame (class + observed
+//!   depth + detail), never a silent drop and never an unbounded
+//!   queue.
 //! - **Failover**: every dispatched request is retained (payload +
 //!   reply route) until its response arrives. When a worker
 //!   connection drops — or a worker answers with an `Error` — the
@@ -46,7 +52,7 @@ use anyhow::{bail, Context, Result};
 use super::metrics::{ClusterStats, MetricsSnapshot};
 use super::wire::{self, Frame, FrameType};
 use crate::compress::EncodedView;
-use crate::coordinator::Metrics;
+use crate::coordinator::{Metrics, Priority};
 use crate::telemetry::Telemetry;
 
 /// How often the accept loop polls its shutdown flag.
@@ -122,10 +128,21 @@ impl RouterConfig {
 struct Pending {
     payload: Vec<u8>,
     key: u64,
+    priority: Priority,
     /// Dispatches so far (this one included).
     attempts: usize,
     sent_at: Instant,
     client: ClientReply,
+}
+
+/// Why the previous dispatch attempt came back, carried into the next
+/// attempt so a terminal refusal surfaces the real cause — and keeps
+/// its kind: a request whose last attempt was *shed* terminates as
+/// `Overloaded` (a policy outcome), one whose last attempt *failed*
+/// terminates as `Error` (a fault).
+enum FailCause {
+    Worker(String),
+    Shed { queued: u64, detail: String },
 }
 
 /// Where a response (or terminal error) for a request goes: the
@@ -137,9 +154,21 @@ struct ClientReply {
 }
 
 /// Router-side state for one worker.
+///
+/// Invariant: `outstanding == pending.len()` whenever the `pending`
+/// lock is not held, because every write to `outstanding` happens
+/// inside a `pending` critical section alongside the map change it
+/// mirrors. (An earlier revision updated the atomic outside the lock;
+/// a worker failure draining `pending` concurrently with a dispatch
+/// could then `fetch_sub` before the matching `fetch_add`, wrapping
+/// the counter to `usize::MAX` and wedging admission forever — the
+/// regression test `redial_returns_in_flight_counters_to_zero` in
+/// `tests/cluster.rs` pins the fix.)
 struct Link {
     addr: String,
     alive: AtomicBool,
+    /// Lock-free mirror of `pending.len()` for admission checks; see
+    /// the struct invariant.
     outstanding: AtomicUsize,
     /// Writer channel of the current connection (None while dead).
     out: Mutex<Option<Sender<Vec<u8>>>>,
@@ -158,6 +187,22 @@ impl Link {
         if let Some(s) = self.stream.lock().unwrap().take() {
             let _ = s.shutdown(std::net::Shutdown::Both);
         }
+    }
+
+    /// Requests dispatched to this worker and not yet concluded.
+    fn in_flight(&self) -> usize {
+        self.outstanding.load(Ordering::SeqCst)
+    }
+
+    /// Remove a pending entry, keeping the `outstanding` mirror in
+    /// sync inside the same critical section (see struct invariant).
+    fn take_pending(&self, id: u64) -> Option<Pending> {
+        let mut pending = self.pending.lock().unwrap();
+        let entry = pending.remove(&id);
+        if entry.is_some() {
+            self.outstanding.fetch_sub(1, Ordering::SeqCst);
+        }
+        entry
     }
 }
 
@@ -288,6 +333,13 @@ impl Router {
         gather_stats(&self.inner)
     }
 
+    /// Per-worker in-flight request counts, in worker order. Quiescent
+    /// routers report all zeros — the invariant the redial regression
+    /// test pins (a leak here would wedge admission permanently).
+    pub fn worker_in_flight(&self) -> Vec<usize> {
+        self.inner.links.iter().map(|l| l.in_flight()).collect()
+    }
+
     /// The router's own wall-time/byte telemetry (`router.*` stages).
     pub fn telemetry(&self) -> Arc<Telemetry> {
         self.inner.telemetry.clone()
@@ -360,49 +412,78 @@ fn candidate_order(inner: &Inner, key: u64) -> Vec<usize> {
 
 /// Dispatch (or re-dispatch) one request. `attempts` counts prior
 /// dispatches; exceeding the budget — or finding no admissible live
-/// worker — rejects the request back to its client, quoting the last
-/// worker-reported error (if any) so a deterministically-bad request
-/// surfaces its real diagnostic, not just the retry exhaustion.
+/// worker for the request's priority class — refuses the request back
+/// to its client, quoting the last worker-reported cause so a
+/// deterministically-bad request surfaces its real diagnostic, not
+/// just the retry exhaustion. Refusals keep the kind of their cause:
+/// shed requests terminate as `Overloaded`, faults as `Error`.
 fn dispatch(
     inner: &Arc<Inner>,
     mut payload: Vec<u8>,
     key: u64,
+    priority: Priority,
     attempts: usize,
     client: ClientReply,
-    last_error: Option<String>,
+    last_fail: Option<FailCause>,
 ) {
     if attempts >= inner.cfg.max_attempts {
-        let msg = match &last_error {
-            Some(e) => format!(
-                "request failed on every attempted worker; last worker \
-                 error: {e}"
+        match last_fail {
+            Some(FailCause::Shed { queued, detail }) => shed(
+                inner,
+                &client,
+                priority,
+                queued,
+                &format!(
+                    "request shed on every attempted worker; last worker \
+                     detail: {detail}"
+                ),
             ),
-            None => "request failed on every attempted worker".to_string(),
-        };
-        reject(inner, &client, &msg);
+            Some(FailCause::Worker(e)) => reject(
+                inner,
+                &client,
+                &format!(
+                    "request failed on every attempted worker; last worker \
+                     error: {e}"
+                ),
+            ),
+            None => reject(
+                inner,
+                &client,
+                "request failed on every attempted worker",
+            ),
+        }
         return;
     }
+    // Per-class admission: a candidate worker only admits the request
+    // while its in-flight count is under the class's share of
+    // `max_outstanding` (Low 50%, Normal 85%, High 100%) — the same
+    // split the coordinator's queue uses, so shedding is deterministic
+    // and lowest-class-first at both tiers.
+    let cap = priority.admission_cap(inner.cfg.max_outstanding);
     for idx in candidate_order(inner, key) {
         let link = &inner.links[idx];
-        if !link.alive.load(Ordering::SeqCst)
-            || link.outstanding.load(Ordering::SeqCst)
-                >= inner.cfg.max_outstanding
-        {
+        if !link.alive.load(Ordering::SeqCst) || link.in_flight() >= cap {
             continue;
         }
         let id = inner.next_id.fetch_add(1, Ordering::Relaxed);
         let frame = Frame::new(FrameType::Submit, id, payload.clone());
-        link.pending.lock().unwrap().insert(
-            id,
-            Pending {
-                payload,
-                key,
-                attempts: attempts + 1,
-                sent_at: Instant::now(),
-                client: client.clone(),
-            },
-        );
-        link.outstanding.fetch_add(1, Ordering::SeqCst);
+        {
+            // Insert and bump the mirror inside one critical section —
+            // see the `Link` invariant.
+            let mut pending = link.pending.lock().unwrap();
+            pending.insert(
+                id,
+                Pending {
+                    payload,
+                    key,
+                    priority,
+                    attempts: attempts + 1,
+                    sent_at: Instant::now(),
+                    client: client.clone(),
+                },
+            );
+            link.outstanding.fetch_add(1, Ordering::SeqCst);
+        }
         let sent = match &*link.out.lock().unwrap() {
             Some(tx) => tx.send(frame.encode()).is_ok(),
             None => false,
@@ -414,35 +495,61 @@ fn dispatch(
         // Writer already gone: reclaim the entry (unless a concurrent
         // fail_link drained it — then the request is already being
         // re-dispatched and is no longer ours) and probe the next peer.
-        match link.pending.lock().unwrap().remove(&id) {
-            Some(p) => {
-                link.outstanding.fetch_sub(1, Ordering::SeqCst);
-                payload = p.payload;
-            }
+        match link.take_pending(id) {
+            Some(p) => payload = p.payload,
             None => return,
         }
     }
-    let msg = match &last_error {
-        Some(e) => format!(
-            "no cluster workers available (dead or at admission limit); \
-             last worker error: {e}"
+    // Nothing admissible: this is backpressure, not a fault — shed
+    // explicitly with the class and the depth the client's class hit.
+    let queued: usize = inner.links.iter().map(|l| l.in_flight()).sum();
+    let msg = match &last_fail {
+        Some(FailCause::Worker(e)) => format!(
+            "no cluster workers available for {} class (dead or at \
+             admission cap); last worker error: {e}",
+            priority.name()
         ),
-        None => {
-            "no cluster workers available (dead or at admission limit)"
-                .to_string()
-        }
+        Some(FailCause::Shed { detail, .. }) => format!(
+            "no cluster workers available for {} class (dead or at \
+             admission cap); last worker detail: {detail}",
+            priority.name()
+        ),
+        None => format!(
+            "no cluster workers available for {} class (dead or at \
+             admission cap)",
+            priority.name()
+        ),
     };
-    reject(inner, &client, &msg);
+    shed(inner, &client, priority, queued as u64, &msg);
 }
 
+/// Terminal fault: count it and answer the client with an `Error`
+/// frame.
 fn reject(inner: &Arc<Inner>, client: &ClientReply, msg: &str) {
     inner.rejected.fetch_add(1, Ordering::Relaxed);
+    inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
     let bytes = Frame::new(
         FrameType::Error,
         client.wire_id,
         msg.as_bytes().to_vec(),
     )
     .encode();
+    let _ = client.tx.send(bytes);
+}
+
+/// Terminal shed: count the class and answer the client with an
+/// explicit `Overloaded` frame — load-shedding is never silent.
+fn shed(
+    inner: &Arc<Inner>,
+    client: &ClientReply,
+    priority: Priority,
+    queued: u64,
+    msg: &str,
+) {
+    inner.rejected.fetch_add(1, Ordering::Relaxed);
+    inner.metrics.count_shed(priority);
+    let bytes =
+        Frame::overloaded(client.wire_id, priority, queued, msg).encode();
     let _ = client.tx.send(bytes);
 }
 
@@ -463,6 +570,15 @@ fn connect_link(inner: &Arc<Inner>, idx: usize) -> bool {
     *link.out.lock().unwrap() = Some(tx);
     *link.stream.lock().unwrap() = stream.try_clone().ok();
     *link.last_seen.lock().unwrap() = Instant::now();
+    {
+        // Re-sync the in-flight mirror from ground truth before the
+        // link starts admitting again: a redial must never inherit
+        // drift from the failed connection (the `Link` invariant makes
+        // drift impossible, but healing here keeps a bug in any future
+        // accounting path from wedging admission permanently).
+        let pending = link.pending.lock().unwrap();
+        link.outstanding.store(pending.len(), Ordering::SeqCst);
+    }
     link.alive.store(true, Ordering::SeqCst);
     {
         let inner = inner.clone();
@@ -494,8 +610,15 @@ fn fail_link(inner: &Arc<Inner>, idx: usize) {
     link.sever();
     link.pending_metrics.lock().unwrap().clear();
     let orphans: Vec<Pending> = {
+        // Drain and zero the mirror in one critical section (`Link`
+        // invariant): a dispatch racing this drain either inserted
+        // before it (and is drained + re-dispatched here) or inserts
+        // after (and counts from zero on the dead link, to be
+        // reclaimed by its own send failure).
         let mut pending = link.pending.lock().unwrap();
-        pending.drain().map(|(_, p)| p).collect()
+        let orphans = pending.drain().map(|(_, p)| p).collect();
+        link.outstanding.store(0, Ordering::SeqCst);
+        orphans
     };
     if !orphans.is_empty() {
         eprintln!(
@@ -506,9 +629,10 @@ fn fail_link(inner: &Arc<Inner>, idx: usize) {
         );
     }
     for p in orphans {
-        link.outstanding.fetch_sub(1, Ordering::SeqCst);
         inner.retries.fetch_add(1, Ordering::Relaxed);
-        dispatch(inner, p.payload, p.key, p.attempts, p.client, None);
+        dispatch(
+            inner, p.payload, p.key, p.priority, p.attempts, p.client, None,
+        );
     }
 }
 
@@ -527,9 +651,7 @@ fn link_reader(inner: Arc<Inner>, idx: usize, mut stream: TcpStream) {
         *link.last_seen.lock().unwrap() = Instant::now();
         match frame.ty {
             FrameType::Response => {
-                let entry = link.pending.lock().unwrap().remove(&frame.id);
-                if let Some(p) = entry {
-                    link.outstanding.fetch_sub(1, Ordering::SeqCst);
+                if let Some(p) = link.take_pending(frame.id) {
                     inner.metrics.record_latency_us(
                         p.sent_at.elapsed().as_micros() as u64,
                     );
@@ -543,12 +665,10 @@ fn link_reader(inner: Arc<Inner>, idx: usize, mut stream: TcpStream) {
                 }
             }
             FrameType::Error => {
-                // The worker refused this request (bad image, queue
-                // full, shutting down): try a peer, up to the budget,
+                // The worker faulted on this request (bad image,
+                // shutting down): try a peer, up to the budget,
                 // carrying the worker's diagnostic along.
-                let entry = link.pending.lock().unwrap().remove(&frame.id);
-                if let Some(p) = entry {
-                    link.outstanding.fetch_sub(1, Ordering::SeqCst);
+                if let Some(p) = link.take_pending(frame.id) {
                     inner.retries.fetch_add(1, Ordering::Relaxed);
                     let why = String::from_utf8_lossy(&frame.payload)
                         .into_owned();
@@ -556,9 +676,33 @@ fn link_reader(inner: Arc<Inner>, idx: usize, mut stream: TcpStream) {
                         &inner,
                         p.payload,
                         p.key,
+                        p.priority,
                         p.attempts,
                         p.client,
-                        Some(why),
+                        Some(FailCause::Worker(why)),
+                    );
+                }
+            }
+            FrameType::Overloaded => {
+                // The worker's admission control shed this request —
+                // a peer may still have headroom, so retry up to the
+                // budget; the terminal refusal (if it comes) stays an
+                // `Overloaded`, not an `Error`.
+                if let Some(p) = link.take_pending(frame.id) {
+                    inner.retries.fetch_add(1, Ordering::Relaxed);
+                    let (queued, detail) =
+                        match wire::parse_overloaded(&frame.payload) {
+                            Ok((_, queued, detail)) => (queued, detail),
+                            Err(_) => (0, "worker shed".to_string()),
+                        };
+                    dispatch(
+                        &inner,
+                        p.payload,
+                        p.key,
+                        p.priority,
+                        p.attempts,
+                        p.client,
+                        Some(FailCause::Shed { queued, detail }),
                     );
                 }
             }
@@ -649,6 +793,10 @@ fn gather_stats(inner: &Arc<Inner>) -> ClusterStats {
         rejected: inner.rejected.load(Ordering::Relaxed),
         spill_frames_in: inner.spill_frames_in.load(Ordering::Relaxed),
         spill_bytes_in: inner.spill_bytes_in.load(Ordering::Relaxed),
+        shed_low: inner.metrics.shed_low.load(Ordering::Relaxed),
+        shed_normal: inner.metrics.shed_normal.load(Ordering::Relaxed),
+        shed_high: inner.metrics.shed_high.load(Ordering::Relaxed),
+        failed: inner.metrics.failed.load(Ordering::Relaxed),
         router_latency_buckets: inner
             .metrics
             .latency_bucket_counts()
@@ -705,8 +853,20 @@ fn client_conn(inner: Arc<Inner>, stream: TcpStream) {
         match frame.ty {
             FrameType::Submit => {
                 inner.metrics.requests.fetch_add(1, Ordering::Relaxed);
-                let key = match wire::submit_key(&frame.payload) {
-                    Ok(k) => k,
+                // Normalize at ingress: a v1 submit gains the Normal
+                // priority byte and a zero deadline here, so every hop
+                // past the router speaks the v2 payload shape. The
+                // key/priority reads stay cheap — no image decode on
+                // the routing path.
+                let parsed = wire::submit_key(&frame.payload).and_then(|k| {
+                    let p =
+                        wire::submit_priority(frame.version, &frame.payload)?;
+                    let payload =
+                        wire::normalize_submit(frame.version, &frame.payload)?;
+                    Ok((k, p, payload))
+                });
+                let (key, priority, payload) = match parsed {
+                    Ok(v) => v,
                     Err(e) => {
                         let _ = out_tx.send(
                             Frame::new(
@@ -722,8 +882,8 @@ fn client_conn(inner: Arc<Inner>, stream: TcpStream) {
                 let client =
                     ClientReply { tx: out_tx.clone(), wire_id: frame.id };
                 let _t = st_dispatch.time();
-                st_dispatch.add_bytes(frame.payload.len() as u64);
-                dispatch(&inner, frame.payload, key, 0, client, None);
+                st_dispatch.add_bytes(payload.len() as u64);
+                dispatch(&inner, payload, key, priority, 0, client, None);
             }
             FrameType::Heartbeat => {
                 if out_tx.send(frame.encode()).is_err() {

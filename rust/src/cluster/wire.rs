@@ -9,13 +9,20 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic  "ZCLU"
-//! 4       2     version (1)
+//! 4       2     version (2; version 1 still accepted — see below)
 //! 6       2     frame type (FrameType)
 //! 8       8     request id (client-chosen; echoed on responses)
 //! 16      4     FNV-1a checksum of the whole frame, this field zeroed
 //! 20      8     payload length
 //! 28      ...   payload
 //! ```
+//!
+//! Versioning: this build emits [`CLUSTER_VERSION`] (2) and accepts
+//! any version in [`MIN_CLUSTER_VERSION`]`..=`[`CLUSTER_VERSION`], so
+//! a v1 peer (PR 4–6 builds) keeps working through a rolling upgrade.
+//! The parsed version rides on [`Frame::version`]; payload codecs that
+//! changed shape across versions ([`parse_submit`]) take it as an
+//! argument and dispatch on it.
 //!
 //! Parsing guarantees mirror `.zspill`: strictly bounds-checked, the
 //! declared payload length is capped at [`MAX_PAYLOAD`] *before* any
@@ -27,12 +34,20 @@
 //! prefixes through both entry points.
 //!
 //! Payload conventions:
-//! - `Submit`: an 8-byte shard key followed by a dense `.zspill` frame
-//!   of the `(3, H, W)` image ([`encode_submit`] / [`parse_submit`]) —
-//!   image bytes cross the wire in the same self-describing format
-//!   spills do.
+//! - `Submit` (v2): an 8-byte shard key, a 1-byte [`Priority`] class,
+//!   an 8-byte deadline in microseconds (0 = none), then a dense
+//!   `.zspill` frame of the `(3, H, W)` image ([`encode_submit`] /
+//!   [`parse_submit`]) — image bytes cross the wire in the same
+//!   self-describing format spills do. A v1 `Submit` omits the
+//!   priority/deadline fields and parses as `Normal` with no deadline.
 //! - `Response`: a packed [`WireResponse`] ([`WireResponse::encode`]).
 //! - `Error`: UTF-8 message.
+//! - `Overloaded`: admission control's explicit refusal for the id —
+//!   the shed request's 1-byte priority class, the 8-byte queue depth
+//!   observed at shed time, then a UTF-8 detail message
+//!   ([`Frame::overloaded`] / [`parse_overloaded`]). Distinct from
+//!   `Error` so clients and the router can count sheds separately from
+//!   failures — a shed is a policy outcome, not a fault.
 //! - `Heartbeat`: empty; the receiver echoes the frame back verbatim.
 //! - `SpillShip`: a raw `.zspill` frame — a worker's executed batch,
 //!   shipped upstream. The payload length is exactly the
@@ -42,15 +57,23 @@
 //!   [`super::metrics::ClusterStats`] (router).
 
 use std::io::{Read, Write};
+use std::time::Duration;
 
 use crate::compress::{self, fnv1a, Codec, DenseCodec, FNV_SEED};
+use crate::coordinator::batch_manager::Priority;
 use crate::tensor::Tensor;
 
 /// Cluster frame magic.
 pub const CLUSTER_MAGIC: [u8; 4] = *b"ZCLU";
 
-/// Wire protocol version spoken by this build.
-pub const CLUSTER_VERSION: u16 = 1;
+/// Wire protocol version this build emits. v2 added the priority +
+/// deadline fields on `Submit` and the `Overloaded` frame type.
+pub const CLUSTER_VERSION: u16 = 2;
+
+/// Oldest wire version this build still accepts (rolling upgrades:
+/// a v1 peer's frames parse; its submits get `Normal` priority and no
+/// deadline).
+pub const MIN_CLUSTER_VERSION: u16 = 1;
 
 /// Fixed header length in bytes.
 pub const HDR_LEN: usize = 28;
@@ -82,6 +105,9 @@ pub enum FrameType {
     MetricsReq = 5,
     /// Metrics answer (snapshot or cluster-wide stats).
     MetricsResp = 6,
+    /// Admission control shed the id (priority + queue depth + detail
+    /// in the payload). A policy outcome, not a fault — never silent.
+    Overloaded = 7,
 }
 
 impl FrameType {
@@ -98,14 +124,18 @@ impl FrameType {
             4 => Some(FrameType::Error),
             5 => Some(FrameType::MetricsReq),
             6 => Some(FrameType::MetricsResp),
+            7 => Some(FrameType::Overloaded),
             _ => None,
         }
     }
 }
 
-/// One wire frame: type + request id + payload bytes.
+/// One wire frame: version + type + request id + payload bytes.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Frame {
+    /// Wire version the frame was built with (or parsed from) —
+    /// payload codecs that changed shape dispatch on this.
+    pub version: u16,
     pub ty: FrameType,
     pub id: u64,
     pub payload: Vec<u8>,
@@ -113,14 +143,14 @@ pub struct Frame {
 
 impl Frame {
     pub fn new(ty: FrameType, id: u64, payload: Vec<u8>) -> Frame {
-        Frame { ty, id, payload }
+        Frame { version: CLUSTER_VERSION, ty, id, payload }
     }
 
     /// Serialize: header (checksum backfilled) + payload.
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(HDR_LEN + self.payload.len());
         out.extend_from_slice(&CLUSTER_MAGIC);
-        out.extend_from_slice(&CLUSTER_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.version.to_le_bytes());
         out.extend_from_slice(&self.ty.as_u16().to_le_bytes());
         out.extend_from_slice(&self.id.to_le_bytes());
         out.extend_from_slice(&0u32.to_le_bytes()); // checksum backfill
@@ -140,7 +170,7 @@ impl Frame {
         }
         let mut hdr = [0u8; HDR_LEN];
         hdr.copy_from_slice(&bytes[..HDR_LEN]);
-        let (ty, id, payload_len) = validate_header(&hdr)?;
+        let (version, ty, id, payload_len) = validate_header(&hdr)?;
         let declared = HDR_LEN as u64 + payload_len as u64;
         if declared != have as u64 {
             return Err(FrameError::SectionMismatch {
@@ -149,7 +179,7 @@ impl Frame {
             });
         }
         check_checksum(&hdr, &bytes[HDR_LEN..])?;
-        Ok(Frame { ty, id, payload: bytes[HDR_LEN..].to_vec() })
+        Ok(Frame { version, ty, id, payload: bytes[HDR_LEN..].to_vec() })
     }
 
     /// Read one frame off a stream. Truncated streams, bad headers,
@@ -159,11 +189,27 @@ impl Frame {
     pub fn read_from<R: Read>(r: &mut R) -> Result<Frame, FrameError> {
         let mut hdr = [0u8; HDR_LEN];
         r.read_exact(&mut hdr).map_err(FrameError::Io)?;
-        let (ty, id, payload_len) = validate_header(&hdr)?;
+        let (version, ty, id, payload_len) = validate_header(&hdr)?;
         let mut payload = vec![0u8; payload_len];
         r.read_exact(&mut payload).map_err(FrameError::Io)?;
         check_checksum(&hdr, &payload)?;
-        Ok(Frame { ty, id, payload })
+        Ok(Frame { version, ty, id, payload })
+    }
+
+    /// Build an `Overloaded` frame: the shed request's priority class,
+    /// the queue depth observed at shed time, and a human-readable
+    /// detail for the client's error surface.
+    pub fn overloaded(
+        id: u64,
+        priority: Priority,
+        queued: u64,
+        detail: &str,
+    ) -> Frame {
+        let mut payload = Vec::with_capacity(9 + detail.len());
+        payload.push(priority.as_u8());
+        payload.extend_from_slice(&queued.to_le_bytes());
+        payload.extend_from_slice(detail.as_bytes());
+        Frame::new(FrameType::Overloaded, id, payload)
     }
 
     /// Write the encoded frame to a stream.
@@ -172,16 +218,16 @@ impl Frame {
     }
 }
 
-/// Validate the fixed header; returns (type, id, payload_len) with the
-/// payload length already capped at [`MAX_PAYLOAD`].
+/// Validate the fixed header; returns (version, type, id, payload_len)
+/// with the payload length already capped at [`MAX_PAYLOAD`].
 fn validate_header(
     hdr: &[u8; HDR_LEN],
-) -> Result<(FrameType, u64, usize), FrameError> {
+) -> Result<(u16, FrameType, u64, usize), FrameError> {
     if hdr[0..4] != CLUSTER_MAGIC {
         return Err(FrameError::BadMagic([hdr[0], hdr[1], hdr[2], hdr[3]]));
     }
     let version = u16::from_le_bytes([hdr[4], hdr[5]]);
-    if version != CLUSTER_VERSION {
+    if !(MIN_CLUSTER_VERSION..=CLUSTER_VERSION).contains(&version) {
         return Err(FrameError::BadVersion(version));
     }
     let ty_raw = u16::from_le_bytes([hdr[6], hdr[7]]);
@@ -193,7 +239,7 @@ fn validate_header(
     if payload_len > MAX_PAYLOAD as u64 {
         return Err(FrameError::Oversized { declared: payload_len });
     }
-    Ok((ty, id, payload_len as usize))
+    Ok((version, ty, id, payload_len as usize))
 }
 
 /// Frame checksum: FNV-1a over header (checksum field zeroed) +
@@ -265,7 +311,7 @@ impl std::fmt::Display for FrameError {
             FrameError::BadVersion(v) => write!(
                 f,
                 "cluster frame version {v} (this build speaks \
-                 {CLUSTER_VERSION})"
+                 {MIN_CLUSTER_VERSION}..={CLUSTER_VERSION})"
             ),
             FrameError::BadFrameType(t) => {
                 write!(f, "cluster frame unknown type {t}")
@@ -294,21 +340,48 @@ impl std::fmt::Display for FrameError {
 impl std::error::Error for FrameError {}
 
 // ---------------------------------------------------------------------
-// Submit payload: shard key + dense .zspill image
+// Submit payload: shard key [+ priority + deadline] + dense .zspill
 // ---------------------------------------------------------------------
 
-/// Encode a `Submit` payload: the 8-byte shard key, then the image as
-/// a dense `.zspill` frame.
-pub fn encode_submit(key: u64, image: &Tensor) -> Vec<u8> {
+/// Fixed bytes before the image spill in a v2 `Submit` payload:
+/// key (8) + priority (1) + deadline_us (8).
+const SUBMIT_V2_HDR: usize = 17;
+
+/// The decoded fields of a `Submit` payload, version differences
+/// already normalized away (a v1 submit is `Normal` with no deadline).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireSubmit {
+    pub key: u64,
+    pub priority: Priority,
+    /// Client-requested completion deadline, measured from arrival at
+    /// the serving node.
+    pub deadline: Option<Duration>,
+    pub image: Tensor,
+}
+
+/// Encode a v2 `Submit` payload: the 8-byte shard key, the priority
+/// class byte, the deadline in microseconds (0 = none), then the image
+/// as a dense `.zspill` frame.
+pub fn encode_submit(
+    key: u64,
+    priority: Priority,
+    deadline: Option<Duration>,
+    image: &Tensor,
+) -> Vec<u8> {
     let spill = DenseCodec.encode(image).to_bytes();
-    let mut out = Vec::with_capacity(8 + spill.len());
+    let mut out = Vec::with_capacity(SUBMIT_V2_HDR + spill.len());
     out.extend_from_slice(&key.to_le_bytes());
+    out.push(priority.as_u8());
+    let deadline_us =
+        deadline.map(|d| (d.as_micros() as u64).max(1)).unwrap_or(0);
+    out.extend_from_slice(&deadline_us.to_le_bytes());
     out.extend_from_slice(&spill);
     out
 }
 
 /// Read just the shard key off a `Submit` payload — the router's
-/// fast path: sharding must not pay for an image decode.
+/// fast path: sharding must not pay for an image decode. The key sits
+/// at offset 0 in both wire versions.
 pub fn submit_key(payload: &[u8]) -> Result<u64, FrameError> {
     if payload.len() < 8 {
         return Err(FrameError::Malformed("submit payload shorter than key"));
@@ -316,17 +389,101 @@ pub fn submit_key(payload: &[u8]) -> Result<u64, FrameError> {
     Ok(u64::from_le_bytes(payload[..8].try_into().expect("8 bytes")))
 }
 
-/// Decode a `Submit` payload into (shard key, image). The embedded
-/// `.zspill` goes through the strict `compress` parser, so a corrupt
-/// or adversarial image section errors instead of panicking.
-pub fn parse_submit(payload: &[u8]) -> Result<(u64, Tensor), FrameError> {
+/// Read the priority class off a `Submit` payload without decoding the
+/// image — the router's admission check. v1 submits are `Normal`.
+pub fn submit_priority(
+    version: u16,
+    payload: &[u8],
+) -> Result<Priority, FrameError> {
+    if version < 2 {
+        submit_key(payload)?; // shape check only
+        return Ok(Priority::Normal);
+    }
+    if payload.len() < SUBMIT_V2_HDR {
+        return Err(FrameError::Malformed("v2 submit payload too short"));
+    }
+    Priority::from_u8(payload[8])
+        .ok_or(FrameError::Malformed("submit priority byte out of range"))
+}
+
+/// Rewrite a v1 `Submit` payload into v2 shape (insert the `Normal`
+/// priority byte and a zero deadline after the key) so everything past
+/// the router speaks one format. v2 payloads pass through unchanged
+/// after a shape check.
+pub fn normalize_submit(
+    version: u16,
+    payload: &[u8],
+) -> Result<Vec<u8>, FrameError> {
+    if version >= 2 {
+        submit_priority(version, payload)?;
+        return Ok(payload.to_vec());
+    }
+    if payload.len() < 8 {
+        return Err(FrameError::Malformed("submit payload shorter than key"));
+    }
+    let mut out = Vec::with_capacity(payload.len() + 9);
+    out.extend_from_slice(&payload[..8]);
+    out.push(Priority::Normal.as_u8());
+    out.extend_from_slice(&0u64.to_le_bytes());
+    out.extend_from_slice(&payload[8..]);
+    Ok(out)
+}
+
+/// Decode a `Submit` payload for the frame's wire `version`. The
+/// embedded `.zspill` goes through the strict `compress` parser, so a
+/// corrupt or adversarial image section errors instead of panicking.
+pub fn parse_submit(
+    version: u16,
+    payload: &[u8],
+) -> Result<WireSubmit, FrameError> {
     if payload.len() < 8 {
         return Err(FrameError::Malformed("submit payload shorter than key"));
     }
     let key = u64::from_le_bytes(payload[..8].try_into().expect("8 bytes"));
-    let image = compress::decode_frame(&payload[8..])
-        .map_err(|_| FrameError::Malformed("submit image is not a valid .zspill"))?;
-    Ok((key, image))
+    let (priority, deadline, image_bytes) = if version >= 2 {
+        if payload.len() < SUBMIT_V2_HDR {
+            return Err(FrameError::Malformed("v2 submit payload too short"));
+        }
+        let priority = Priority::from_u8(payload[8]).ok_or(
+            FrameError::Malformed("submit priority byte out of range"),
+        )?;
+        let deadline_us = u64::from_le_bytes(
+            payload[9..SUBMIT_V2_HDR].try_into().expect("8 bytes"),
+        );
+        let deadline =
+            (deadline_us > 0).then(|| Duration::from_micros(deadline_us));
+        (priority, deadline, &payload[SUBMIT_V2_HDR..])
+    } else {
+        (Priority::Normal, None, &payload[8..])
+    };
+    let image = compress::decode_frame(image_bytes).map_err(|_| {
+        FrameError::Malformed("submit image is not a valid .zspill")
+    })?;
+    Ok(WireSubmit { key, priority, deadline, image })
+}
+
+// ---------------------------------------------------------------------
+// Overloaded payload: priority + queue depth + detail
+// ---------------------------------------------------------------------
+
+/// Decode an `Overloaded` payload into (shed priority, queue depth at
+/// shed time, detail message). Strict: short payloads, bad priority
+/// bytes, and non-UTF-8 detail all error.
+pub fn parse_overloaded(
+    payload: &[u8],
+) -> Result<(Priority, u64, String), FrameError> {
+    if payload.len() < 9 {
+        return Err(FrameError::Malformed("overloaded payload too short"));
+    }
+    let priority = Priority::from_u8(payload[0]).ok_or(
+        FrameError::Malformed("overloaded priority byte out of range"),
+    )?;
+    let queued =
+        u64::from_le_bytes(payload[1..9].try_into().expect("8 bytes"));
+    let detail = std::str::from_utf8(&payload[9..])
+        .map_err(|_| FrameError::Malformed("overloaded detail not UTF-8"))?
+        .to_string();
+    Ok((priority, queued, detail))
 }
 
 // ---------------------------------------------------------------------
@@ -440,7 +597,8 @@ mod tests {
             FrameType::Error,
             FrameType::MetricsReq,
             FrameType::MetricsResp,
-        ][rng.range(0, 6)];
+            FrameType::Overloaded,
+        ][rng.range(0, 7)];
         let n = rng.range(0, 96);
         let payload = (0..n).map(|_| rng.below(256) as u8).collect();
         Frame::new(ty, rng.next_u64(), payload)
@@ -579,26 +737,115 @@ mod tests {
         assert!(!err.is_clean_eof());
     }
 
+    fn sample_image(rng: &mut Rng) -> Tensor {
+        Tensor::from_vec(&[3, 4, 4], (0..48).map(|_| rng.normal()).collect())
+    }
+
     #[test]
     fn submit_payload_roundtrips_and_rejects_corruption() {
         let mut rng = Rng::new(17);
-        let img = Tensor::from_vec(
-            &[3, 4, 4],
-            (0..48).map(|_| rng.normal()).collect(),
+        let img = sample_image(&mut rng);
+        let deadline = Some(Duration::from_micros(2500));
+        let payload =
+            encode_submit(0xDEAD_BEEF, Priority::High, deadline, &img);
+        let s = parse_submit(CLUSTER_VERSION, &payload).unwrap();
+        assert_eq!(s.key, 0xDEAD_BEEF);
+        assert_eq!(s.priority, Priority::High);
+        assert_eq!(s.deadline, deadline);
+        assert_eq!(s.image, img);
+        // No deadline encodes as 0 and parses back as None.
+        let p2 = encode_submit(1, Priority::Low, None, &img);
+        let s2 = parse_submit(CLUSTER_VERSION, &p2).unwrap();
+        assert_eq!(s2.deadline, None);
+        assert_eq!(s2.priority, Priority::Low);
+        // Fast-path field reads agree with the full parse.
+        assert_eq!(submit_key(&payload).unwrap(), 0xDEAD_BEEF);
+        assert_eq!(
+            submit_priority(CLUSTER_VERSION, &payload).unwrap(),
+            Priority::High
         );
-        let payload = encode_submit(0xDEAD_BEEF, &img);
-        let (key, back) = parse_submit(&payload).unwrap();
-        assert_eq!(key, 0xDEAD_BEEF);
-        assert_eq!(back, img);
-        // Too short for the key.
-        assert!(parse_submit(&payload[..4]).is_err());
+        // Too short for the key / the v2 header.
+        assert!(parse_submit(CLUSTER_VERSION, &payload[..4]).is_err());
+        assert!(parse_submit(CLUSTER_VERSION, &payload[..12]).is_err());
+        // A priority byte out of range errors, never panics.
+        let mut bad = payload.clone();
+        bad[8] = 9;
+        assert!(parse_submit(CLUSTER_VERSION, &bad).is_err());
+        assert!(submit_priority(CLUSTER_VERSION, &bad).is_err());
         // Corrupt embedded spill.
         let mut bad = payload.clone();
         let last = bad.len() - 1;
         bad[last] ^= 0x40;
-        assert!(parse_submit(&bad).is_err());
+        assert!(parse_submit(CLUSTER_VERSION, &bad).is_err());
         // Truncated embedded spill.
-        assert!(parse_submit(&payload[..payload.len() - 3]).is_err());
+        assert!(
+            parse_submit(CLUSTER_VERSION, &payload[..payload.len() - 3])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn v1_submits_still_parse_and_normalize() {
+        let mut rng = Rng::new(23);
+        let img = sample_image(&mut rng);
+        // Hand-build the v1 payload shape: key + dense spill, no
+        // priority/deadline fields.
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(&77u64.to_le_bytes());
+        v1.extend_from_slice(&DenseCodec.encode(&img).to_bytes());
+        let s = parse_submit(1, &v1).unwrap();
+        assert_eq!(s.key, 77);
+        assert_eq!(s.priority, Priority::Normal);
+        assert_eq!(s.deadline, None);
+        assert_eq!(s.image, img);
+        assert_eq!(submit_priority(1, &v1).unwrap(), Priority::Normal);
+        // Normalizing a v1 payload yields byte-identical v2 encoding.
+        let normalized = normalize_submit(1, &v1).unwrap();
+        assert_eq!(
+            normalized,
+            encode_submit(77, Priority::Normal, None, &img)
+        );
+        assert_eq!(
+            parse_submit(CLUSTER_VERSION, &normalized).unwrap().image,
+            img
+        );
+        // A v2 payload normalizes to itself.
+        let v2 = encode_submit(5, Priority::High, None, &img);
+        assert_eq!(normalize_submit(CLUSTER_VERSION, &v2).unwrap(), v2);
+        // And a frame stamped version 1 round-trips through the codec.
+        let f = Frame { version: 1, ..Frame::new(FrameType::Submit, 9, v1) };
+        let parsed = Frame::parse(&f.encode()).unwrap();
+        assert_eq!(parsed.version, 1);
+        assert_eq!(parsed, f);
+    }
+
+    #[test]
+    fn overloaded_payload_roundtrips_strictly() {
+        let f = Frame::overloaded(42, Priority::Low, 96, "shed: over cap");
+        assert_eq!(f.ty, FrameType::Overloaded);
+        assert_eq!(f.id, 42);
+        let (p, queued, detail) = parse_overloaded(&f.payload).unwrap();
+        assert_eq!(p, Priority::Low);
+        assert_eq!(queued, 96);
+        assert_eq!(detail, "shed: over cap");
+        // An empty detail is legal.
+        let g = Frame::overloaded(1, Priority::High, 0, "");
+        assert_eq!(
+            parse_overloaded(&g.payload).unwrap(),
+            (Priority::High, 0, String::new())
+        );
+        // Short payloads and bad priority bytes error.
+        for cut in 0..9 {
+            assert!(parse_overloaded(&f.payload[..cut]).is_err());
+        }
+        let mut bad = f.payload.clone();
+        bad[0] = 200;
+        assert!(parse_overloaded(&bad).is_err());
+        // Non-UTF-8 detail errors.
+        let mut bad = f.payload.clone();
+        bad.push(0xFF);
+        bad.push(0xC0);
+        assert!(parse_overloaded(&bad).is_err());
     }
 
     #[test]

@@ -1,13 +1,17 @@
 //! A worker node: the single-process [`coordinator::Server`] wrapped
 //! behind a TCP listener speaking the [`super::wire`] protocol.
 //!
-//! One `WorkerNode` owns one coordinator server (dynamic batcher +
-//! executor threads over any [`BatchExecutor`]) and any number of
-//! inbound connections — a router, several routers, or bare clients.
-//! Each connection is two threads (reader + writer) plus one response
-//! pump that funnels every coordinator reply for that connection
-//! through [`Server::submit_routed`]'s multiplexed channel, so a
+//! One `WorkerNode` owns one coordinator server (continuous batch
+//! manager + executor threads over any [`BatchExecutor`]) and any
+//! number of inbound connections — a router, several routers, or bare
+//! clients. Each connection is two threads (reader + writer) plus one
+//! response pump that funnels every coordinator reply for that
+//! connection through [`Server::submit`]'s multiplexed channel, so a
 //! connection's requests are pipelined without a thread per request.
+//! A submit the coordinator sheds comes back as an explicit
+//! `Overloaded` wire frame carrying the class and queue depth — the
+//! router retries it on a peer or forwards it; it is never dropped
+//! silently.
 //!
 //! With spill shipping configured ([`ShipSpills`] + an upstream
 //! address), the coordinator's workers hand each executed batch's
@@ -28,7 +32,9 @@ use anyhow::{Context, Result};
 use super::metrics::MetricsSnapshot;
 use super::wire::{self, Frame, FrameType, WireResponse};
 use crate::coordinator::server::{BatchExecutor, Response};
-use crate::coordinator::{Metrics, Server, ServerConfig};
+use crate::coordinator::{
+    Metrics, Server, ServerConfig, SubmitOutcome, SubmitRequest,
+};
 use crate::telemetry::{Stage, Telemetry};
 
 /// How often the accept loop polls its shutdown flag.
@@ -209,8 +215,8 @@ fn accept_loop(
 
 /// One connection: reader (this thread) + writer thread + response
 /// pump thread. The pump owns the coordinator-id -> wire-id map shared
-/// with the reader; holding its lock across `submit_routed` closes the
-/// insert/response race for even the fastest executor.
+/// with the reader; holding its lock across `Server::submit` closes
+/// the insert/response race for even the fastest executor.
 fn serve_conn(
     server: Arc<Server>,
     image_hw: usize,
@@ -276,31 +282,57 @@ fn handle_frame(
 ) -> Option<Vec<u8>> {
     match frame.ty {
         FrameType::Submit => {
-            let (_key, image) = match wire::parse_submit(&frame.payload) {
-                Ok(x) => x,
-                Err(e) => return Some(error_frame(frame.id, &e.to_string())),
-            };
-            if image.shape() != [3, image_hw, image_hw] {
+            let sub =
+                match wire::parse_submit(frame.version, &frame.payload) {
+                    Ok(x) => x,
+                    Err(e) => {
+                        return Some(error_frame(frame.id, &e.to_string()))
+                    }
+                };
+            if sub.image.shape() != [3, image_hw, image_hw] {
                 return Some(error_frame(
                     frame.id,
                     &format!(
                         "image shape {:?} does not match this worker's \
                          (3, {image_hw}, {image_hw})",
-                        image.shape()
+                        sub.image.shape()
                     ),
                 ));
             }
-            // Holding the map lock across submit_routed guarantees the
-            // wire id is registered before the pump can see the reply.
+            let req = SubmitRequest::new(sub.image)
+                .with_key(sub.key)
+                .with_priority(sub.priority);
+            let req = match sub.deadline {
+                Some(d) => req.with_deadline(d),
+                None => req,
+            };
+            // Holding the map lock across submit guarantees the wire
+            // id is registered before the pump can see the reply.
             let mut map = idmap.lock().unwrap();
-            match server.submit_routed(image, resp_tx.clone()) {
-                Ok(coord_id) => {
-                    map.insert(coord_id, frame.id);
+            match server.submit(req, resp_tx.clone()) {
+                SubmitOutcome::Enqueued { id } => {
+                    map.insert(id, frame.id);
                     None
                 }
-                Err(e) => {
+                SubmitOutcome::Shed { priority, queued } => {
                     drop(map);
-                    Some(error_frame(frame.id, &format!("{e:#}")))
+                    Some(
+                        Frame::overloaded(
+                            frame.id,
+                            priority,
+                            queued as u64,
+                            &format!(
+                                "worker shed {} class request \
+                                 ({queued} queued)",
+                                priority.name()
+                            ),
+                        )
+                        .encode(),
+                    )
+                }
+                SubmitOutcome::Closed => {
+                    drop(map);
+                    Some(error_frame(frame.id, "worker is shutting down"))
                 }
             }
         }

@@ -1,0 +1,758 @@
+//! Continuous batch manager: per-key queues, priority classes with
+//! deterministic load-shedding, deadline-based flush, and dynamic
+//! batch sizing driven by observed executor latency.
+//!
+//! This replaces the static `Batcher` (a single global FIFO flushed on
+//! a fixed cadence). Heterogeneous traffic — per-layer codec choices,
+//! multiple models, multiple input shapes — makes batches *keyed*: only
+//! requests sharing a batch key (model, shape, codec) may share an
+//! executed batch, so one queue per key, never one global queue where a
+//! slow shape convoys everything behind it.
+//!
+//! Scheduling policy (the load-aware part):
+//!
+//! 1. **Admission by class.** Capacity is shared, but each [`Priority`]
+//!    class may only occupy a slice of it: `Low` sheds once the queue
+//!    is 50% full, `Normal` at 85%, `High` only when completely full
+//!    ([`Priority::admission_cap`]). Shedding is an explicit
+//!    [`Admission::Shed`] outcome — never a silent drop.
+//! 2. **Deadline-based flush.** Every item is due `flush_wait` after
+//!    arrival (sooner if it carries an explicit deadline). A key
+//!    flushes when its oldest item is due or when it has a full
+//!    target-sized batch, whichever happens first.
+//! 3. **Priority scheduling.** Among flush-ready keys, the one holding
+//!    the highest class goes first (ties broken by earliest due), and
+//!    within a key higher classes pop first. `High` traffic can
+//!    therefore starve `Low` — by design: `Low` is the sheddable,
+//!    best-effort class, and the deadline-miss counter makes any
+//!    starvation visible.
+//! 4. **Dynamic batch sizing.** The manager watches the executor's
+//!    telemetry stage (`serve.execute`): observed nanoseconds per
+//!    executed slot turn the flush window into a *batch size budget* —
+//!    under load, batches are cut so one batch's execution roughly fits
+//!    the flush window and a request on another key is never stuck
+//!    behind an arbitrarily large convoy. With a fast executor (or no
+//!    data yet) the target is the largest exported size, i.e. exactly
+//!    the old static behavior.
+//!
+//! Invariants (property-tested): nothing is dropped or duplicated,
+//! arrival order is preserved per (key, class), every batch holds items
+//! of one key only, and every emitted `exec_size` is an exported batch
+//! size.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::telemetry::Stage;
+
+/// Priority class of a submitted request. Under overload the lowest
+/// class sheds first; see [`Priority::admission_cap`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    Low = 0,
+    Normal = 1,
+    High = 2,
+}
+
+impl Priority {
+    /// All classes, lowest first.
+    pub const ALL: [Priority; 3] =
+        [Priority::Low, Priority::Normal, Priority::High];
+
+    /// CLI / wire name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    /// Parse a CLI name. Errors list the valid options.
+    pub fn parse(s: &str) -> Result<Priority> {
+        match s {
+            "low" => Ok(Priority::Low),
+            "normal" => Ok(Priority::Normal),
+            "high" => Ok(Priority::High),
+            other => bail!("unknown priority {other:?} (low|normal|high)"),
+        }
+    }
+
+    /// Wire byte (stable: Low=0, Normal=1, High=2).
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    /// Inverse of [`Priority::as_u8`]; `None` for bytes no class owns
+    /// (wire parsers turn that into a structured error, never a panic).
+    pub fn from_u8(b: u8) -> Option<Priority> {
+        match b {
+            0 => Some(Priority::Low),
+            1 => Some(Priority::Normal),
+            2 => Some(Priority::High),
+            _ => None,
+        }
+    }
+
+    /// How much of a shared capacity this class may occupy before it is
+    /// shed: 50% for `Low`, 85% for `Normal`, all of it for `High`.
+    /// Always at least 1 so a tiny capacity never locks a class out
+    /// entirely. The router applies the same split to its per-worker
+    /// in-flight caps, so shed-lowest-first holds cluster-wide.
+    pub fn admission_cap(self, capacity: usize) -> usize {
+        let pct = match self {
+            Priority::Low => 50,
+            Priority::Normal => 85,
+            Priority::High => 100,
+        };
+        (capacity * pct).div_ceil(100).max(1)
+    }
+}
+
+/// Outcome of one [`BatchManager::push`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Enqueued; the item will be batched and executed.
+    Accepted,
+    /// Refused by the class's admission cap (`queued` = depth at the
+    /// moment of refusal). The caller owes the client a structured
+    /// overload response — shedding is never silent.
+    Shed { queued: usize },
+    /// The manager is closed; nothing new is accepted.
+    Closed,
+}
+
+/// A flushed batch: one key's items plus the exported batch size the
+/// executor must run (>= items.len(); the tail is padding).
+#[derive(Debug)]
+pub struct Batch<T> {
+    /// The batch key every item shares.
+    pub key: u64,
+    pub items: Vec<T>,
+    /// Exported batch size to execute (>= items.len()).
+    pub exec_size: usize,
+    /// Items whose explicit deadline had already passed at flush time.
+    /// They are still served (a miss is counted, never dropped); the
+    /// caller feeds this into its deadline-miss counter.
+    pub deadline_misses: usize,
+}
+
+impl<T> Batch<T> {
+    pub fn padding(&self) -> usize {
+        self.exec_size - self.items.len()
+    }
+}
+
+struct Entry<T> {
+    item: T,
+    /// When this item wants to be flushed (arrival + flush window,
+    /// sooner under an explicit deadline).
+    due: Instant,
+    /// The explicit deadline, if any (for miss accounting).
+    hard: Option<Instant>,
+}
+
+/// One key's queue: a FIFO per priority class.
+struct KeyQueue<T> {
+    classes: [std::collections::VecDeque<Entry<T>>; 3],
+}
+
+impl<T> Default for KeyQueue<T> {
+    fn default() -> Self {
+        KeyQueue {
+            classes: [
+                std::collections::VecDeque::new(),
+                std::collections::VecDeque::new(),
+                std::collections::VecDeque::new(),
+            ],
+        }
+    }
+}
+
+impl<T> KeyQueue<T> {
+    fn count(&self) -> usize {
+        self.classes.iter().map(|c| c.len()).sum()
+    }
+
+    /// (highest class present, earliest due across class fronts,
+    /// total items) — `None` when empty.
+    fn summary(&self) -> Option<(usize, Instant, usize)> {
+        let mut best_class = None;
+        let mut due: Option<Instant> = None;
+        for (c, q) in self.classes.iter().enumerate() {
+            if let Some(front) = q.front() {
+                best_class = Some(c);
+                due = Some(match due {
+                    Some(d) if d <= front.due => d,
+                    _ => front.due,
+                });
+            }
+        }
+        Some((best_class?, due?, self.count()))
+    }
+}
+
+struct State<T> {
+    queues: HashMap<u64, KeyQueue<T>>,
+    /// Total queued items across every key and class.
+    total: usize,
+    closed: bool,
+}
+
+/// Thread-safe continuous batch manager over any payload type.
+pub struct BatchManager<T> {
+    inner: Mutex<State<T>>,
+    cv: Condvar,
+    /// Exported batch sizes, ascending (e.g. [1, 4, 8]).
+    sizes: Vec<usize>,
+    /// The flush window: no admitted item waits longer than this for
+    /// its batch to start assembling an execution.
+    flush_wait: Duration,
+    /// Global queue capacity the class admission caps are cut from.
+    max_queue: usize,
+    /// Hard cap on items per batch (<= the largest exported size).
+    max_batch: usize,
+    /// Executor telemetry (`serve.execute`) feeding dynamic sizing.
+    exec_stage: Option<Arc<Stage>>,
+    /// Executed slots handed out so far (denominator turning the
+    /// stage's accumulated nanoseconds into per-slot latency).
+    dispatched_slots: AtomicU64,
+}
+
+impl<T> BatchManager<T> {
+    /// `sizes` must be non-empty; they are sorted ascending internally.
+    pub fn new(
+        mut sizes: Vec<usize>,
+        flush_wait: Duration,
+        max_queue: usize,
+    ) -> Self {
+        assert!(!sizes.is_empty(), "need at least one exported batch size");
+        sizes.sort_unstable();
+        sizes.dedup();
+        let max_batch = *sizes.last().unwrap();
+        BatchManager {
+            inner: Mutex::new(State {
+                queues: HashMap::new(),
+                total: 0,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            sizes,
+            flush_wait,
+            max_queue: max_queue.max(1),
+            max_batch,
+            exec_stage: None,
+            dispatched_slots: AtomicU64::new(0),
+        }
+    }
+
+    /// Cap batches below the largest exported size (0 keeps the
+    /// default). The executed size still snaps *up* to an exported
+    /// size; the cap bounds how many real items ride in one batch.
+    pub fn with_max_batch(mut self, cap: usize) -> Self {
+        if cap > 0 {
+            self.max_batch = cap.min(*self.sizes.last().unwrap()).max(1);
+        }
+        self
+    }
+
+    /// Attach the executor's telemetry stage; observed per-slot latency
+    /// then drives the dynamic target size.
+    pub fn with_exec_stage(mut self, stage: Arc<Stage>) -> Self {
+        self.exec_stage = Some(stage);
+        self
+    }
+
+    /// Largest number of items one batch may carry.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Current queue depth across all keys (the backpressure gauge).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().total
+    }
+
+    /// Enqueue one item under `key` with the class's admission check.
+    /// An explicit `deadline` flushes sooner than the window if it is
+    /// tighter, and is counted as missed if it passes before flush.
+    pub fn push(
+        &self,
+        key: u64,
+        priority: Priority,
+        deadline: Option<Duration>,
+        item: T,
+    ) -> Admission {
+        let now = Instant::now();
+        let mut st = self.inner.lock().unwrap();
+        if st.closed {
+            return Admission::Closed;
+        }
+        if st.total >= priority.admission_cap(self.max_queue) {
+            return Admission::Shed { queued: st.total };
+        }
+        let window = match deadline {
+            Some(d) if d < self.flush_wait => d,
+            _ => self.flush_wait,
+        };
+        st.queues.entry(key).or_default().classes[priority as usize]
+            .push_back(Entry {
+                item,
+                due: now + window,
+                hard: deadline.map(|d| now + d),
+            });
+        st.total += 1;
+        drop(st);
+        self.cv.notify_one();
+        Admission::Accepted
+    }
+
+    /// Close the manager: pending items still drain (flushed
+    /// immediately, ignoring due times), new pushes get
+    /// [`Admission::Closed`], and `next_batch` returns `None` once
+    /// everything is out.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Smallest exported size >= n, or the largest if n exceeds all.
+    fn size_for(&self, n: usize) -> usize {
+        for &s in &self.sizes {
+            if s >= n {
+                return s;
+            }
+        }
+        *self.sizes.last().unwrap()
+    }
+
+    /// Largest exported size <= n, or the smallest if none fit.
+    fn floor_size(&self, n: usize) -> usize {
+        self.sizes
+            .iter()
+            .rev()
+            .find(|&&s| s <= n)
+            .copied()
+            .unwrap_or(self.sizes[0])
+    }
+
+    /// The current target batch size. Cold (no executor data yet) it is
+    /// the full `max_batch`; warm, it is how many slots the observed
+    /// per-slot execution latency fits into one flush window — so under
+    /// load a single batch's execution roughly matches the latency
+    /// budget instead of convoying every other key behind it.
+    fn target_size(&self) -> usize {
+        let full = self.max_batch;
+        let Some(stage) = &self.exec_stage else { return full };
+        let slots = self.dispatched_slots.load(Ordering::Relaxed);
+        let stats = stage.stats();
+        if stats.calls == 0 || slots == 0 {
+            return full;
+        }
+        let per_slot = stats.nanos / slots;
+        let budget = self.flush_wait.as_nanos().min(u64::MAX as u128) as u64;
+        if per_slot == 0 || budget == 0 {
+            // Sub-ns slots or a zero window: no budget to subdivide.
+            return full;
+        }
+        let raw = (budget / per_slot).clamp(1, full as u64) as usize;
+        self.floor_size(raw).min(full).max(1)
+    }
+
+    /// Blocking: assemble the next batch (None after close + drain).
+    pub fn next_batch(&self) -> Option<Batch<T>> {
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if st.total == 0 {
+                if st.closed {
+                    return None;
+                }
+                st = self.cv.wait(st).unwrap();
+                continue;
+            }
+            let target = self.target_size();
+            let now = Instant::now();
+            // A key is flush-ready when its oldest item is due, it can
+            // fill a target batch, or the manager is closing. Among
+            // ready keys the highest class wins, then the earliest due.
+            let mut ready: Option<(u64, usize, Instant)> = None;
+            let mut wake: Option<Instant> = None;
+            for (&key, q) in &st.queues {
+                let Some((class, due, count)) = q.summary() else {
+                    continue;
+                };
+                if st.closed || now >= due || count >= target {
+                    let better = match ready {
+                        None => true,
+                        Some((_, c, d)) => {
+                            class > c || (class == c && due < d)
+                        }
+                    };
+                    if better {
+                        ready = Some((key, class, due));
+                    }
+                } else {
+                    wake = Some(match wake {
+                        Some(w) if w <= due => w,
+                        _ => due,
+                    });
+                }
+            }
+            if let Some((key, _, _)) = ready {
+                return Some(self.flush(&mut st, key, target, now));
+            }
+            let wake = wake.expect("items queued but no key reported");
+            let (guard, _) = self
+                .cv
+                .wait_timeout(st, wake.saturating_duration_since(now))
+                .unwrap();
+            st = guard;
+        }
+    }
+
+    /// Pop up to the effective take from `key` (highest class first,
+    /// FIFO within a class) and account deadline misses.
+    fn flush(
+        &self,
+        st: &mut State<T>,
+        key: u64,
+        target: usize,
+        now: Instant,
+    ) -> Batch<T> {
+        let closed = st.closed;
+        let q = st.queues.get_mut(&key).expect("ready key exists");
+        let cap = if closed { self.max_batch } else { target };
+        let take = q.count().min(cap);
+        let mut items = Vec::with_capacity(take);
+        let mut deadline_misses = 0usize;
+        for class in (0..3).rev() {
+            while items.len() < take {
+                let Some(e) = q.classes[class].pop_front() else { break };
+                if e.hard.is_some_and(|h| now > h) {
+                    deadline_misses += 1;
+                }
+                items.push(e.item);
+            }
+        }
+        if q.count() == 0 {
+            st.queues.remove(&key);
+        }
+        st.total -= take;
+        let exec_size = self.size_for(take);
+        self.dispatched_slots
+            .fetch_add(exec_size as u64, Ordering::Relaxed);
+        Batch { key, items, exec_size, deadline_misses }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Telemetry;
+    use crate::util::prng::Rng;
+    use crate::util::prop::{forall, Config};
+
+    fn mgr(sizes: Vec<usize>, wait_ms: u64, queue: usize) -> BatchManager<u64> {
+        BatchManager::new(sizes, Duration::from_millis(wait_ms), queue)
+    }
+
+    fn push_n(m: &BatchManager<u64>, n: u64) {
+        for i in 0..n {
+            assert_eq!(
+                m.push(0, Priority::Normal, None, i),
+                Admission::Accepted
+            );
+        }
+    }
+
+    #[test]
+    fn priority_parses_and_round_trips() {
+        for p in Priority::ALL {
+            assert_eq!(Priority::parse(p.name()).unwrap(), p);
+            assert_eq!(Priority::from_u8(p.as_u8()), Some(p));
+        }
+        assert!(Priority::parse("urgent").is_err());
+        assert_eq!(Priority::from_u8(3), None);
+    }
+
+    #[test]
+    fn admission_caps_split_capacity_by_class() {
+        assert_eq!(Priority::Low.admission_cap(100), 50);
+        assert_eq!(Priority::Normal.admission_cap(100), 85);
+        assert_eq!(Priority::High.admission_cap(100), 100);
+        // Tiny capacities never lock a class out entirely.
+        for p in Priority::ALL {
+            assert!(p.admission_cap(1) >= 1);
+        }
+        assert_eq!(Priority::High.admission_cap(2), 2);
+        assert_eq!(Priority::Normal.admission_cap(2), 2);
+        assert_eq!(Priority::Low.admission_cap(2), 1);
+    }
+
+    #[test]
+    fn batches_respect_exported_sizes() {
+        let m = mgr(vec![4, 1, 8], 0, 1024);
+        push_n(&m, 6);
+        let b = m.next_batch().unwrap();
+        assert_eq!(b.items.len(), 6);
+        assert_eq!(b.exec_size, 8);
+        assert_eq!(b.padding(), 2);
+        assert_eq!(b.key, 0);
+    }
+
+    #[test]
+    fn full_queue_flushes_without_waiting() {
+        let m = mgr(vec![1, 4], 60_000, 1024);
+        push_n(&m, 9);
+        let t0 = Instant::now();
+        let b = m.next_batch().unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        assert_eq!(b.items, vec![0, 1, 2, 3]);
+        assert_eq!(b.exec_size, 4);
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let m = mgr(vec![2], 1, 1024);
+        m.push(0, Priority::Normal, None, 1);
+        m.close();
+        assert_eq!(m.push(0, Priority::Normal, None, 2), Admission::Closed);
+        let b = m.next_batch().unwrap();
+        assert_eq!(b.items, vec![1]);
+        assert!(m.next_batch().is_none());
+    }
+
+    #[test]
+    fn waits_for_laggards_up_to_the_flush_window() {
+        let m = std::sync::Arc::new(mgr(vec![1, 2], 200, 1024));
+        let m2 = m.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            m2.push(0, Priority::Normal, None, 2);
+        });
+        m.push(0, Priority::Normal, None, 1);
+        let b = m.next_batch().unwrap();
+        t.join().unwrap();
+        assert_eq!(b.items, vec![1, 2], "laggard should join the batch");
+    }
+
+    #[test]
+    fn keys_never_share_a_batch() {
+        let m = mgr(vec![1, 8], 0, 1024);
+        for i in 0..4 {
+            m.push(7, Priority::Normal, None, i);
+            m.push(9, Priority::Normal, None, 100 + i);
+        }
+        let mut seen = std::collections::HashMap::new();
+        while m.depth() > 0 {
+            let b = m.next_batch().unwrap();
+            let expect_band = if b.key == 9 { 1 } else { 0 };
+            for it in &b.items {
+                assert_eq!(it / 100, expect_band, "foreign key in batch");
+            }
+            *seen.entry(b.key).or_insert(0usize) += b.items.len();
+        }
+        assert_eq!(seen[&7], 4);
+        assert_eq!(seen[&9], 4);
+    }
+
+    #[test]
+    fn low_class_sheds_first_and_is_never_silent() {
+        let m = mgr(vec![1, 16], 60_000, 8);
+        // Low occupies at most 50% of 8 = 4 slots.
+        for i in 0..4 {
+            assert_eq!(m.push(0, Priority::Low, None, i), Admission::Accepted);
+        }
+        assert_eq!(
+            m.push(0, Priority::Low, None, 99),
+            Admission::Shed { queued: 4 }
+        );
+        // Normal still fits (cap ceil(8*0.85)=7), High to the brim.
+        for i in 0..3 {
+            assert_eq!(
+                m.push(0, Priority::Normal, None, 10 + i),
+                Admission::Accepted
+            );
+        }
+        assert_eq!(
+            m.push(0, Priority::Normal, None, 99),
+            Admission::Shed { queued: 7 }
+        );
+        assert_eq!(m.push(0, Priority::High, None, 20), Admission::Accepted);
+        assert_eq!(
+            m.push(0, Priority::High, None, 99),
+            Admission::Shed { queued: 8 }
+        );
+    }
+
+    #[test]
+    fn higher_classes_pop_first_within_a_key() {
+        let m = mgr(vec![8], 0, 1024);
+        m.push(0, Priority::Low, None, 1);
+        m.push(0, Priority::High, None, 2);
+        m.push(0, Priority::Normal, None, 3);
+        m.push(0, Priority::High, None, 4);
+        let b = m.next_batch().unwrap();
+        assert_eq!(b.items, vec![2, 4, 3, 1]);
+    }
+
+    #[test]
+    fn high_priority_key_flushes_before_older_low_key() {
+        let m = mgr(vec![1, 8], 0, 1024);
+        m.push(1, Priority::Low, None, 10);
+        m.push(2, Priority::High, None, 20);
+        let b = m.next_batch().unwrap();
+        assert_eq!((b.key, b.items.clone()), (2, vec![20]));
+        let b = m.next_batch().unwrap();
+        assert_eq!((b.key, b.items.clone()), (1, vec![10]));
+    }
+
+    #[test]
+    fn explicit_deadline_flushes_early_and_misses_are_counted() {
+        let m = mgr(vec![1, 8], 60_000, 1024);
+        // Tighter than the window: flushes in ~5ms, not 60s.
+        m.push(0, Priority::Normal, Some(Duration::from_millis(5)), 1);
+        let t0 = Instant::now();
+        let b = m.next_batch().unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert_eq!(b.items, vec![1]);
+        assert_eq!(b.deadline_misses, 0, "flushed at its deadline, not past");
+
+        // Already-expired deadline: served anyway, counted as missed.
+        m.push(0, Priority::Normal, Some(Duration::ZERO), 2);
+        std::thread::sleep(Duration::from_millis(2));
+        let b = m.next_batch().unwrap();
+        assert_eq!(b.items, vec![2]);
+        assert_eq!(b.deadline_misses, 1);
+    }
+
+    #[test]
+    fn observed_latency_shrinks_the_target_batch() {
+        let tel = Telemetry::new();
+        let stage = tel.stage("serve.execute");
+        let m = BatchManager::new(
+            vec![1, 4, 8],
+            Duration::from_millis(1),
+            1024,
+        )
+        .with_exec_stage(stage.clone());
+        // Cold: no executor data, full batch.
+        push_n(&m, 8);
+        let b = m.next_batch().unwrap();
+        assert_eq!(b.items.len(), 8);
+        // Report 10ms/slot: a 1ms window fits one slot -> batches of 1.
+        stage.record(Duration::from_millis(80));
+        push_n(&m, 8);
+        let b = m.next_batch().unwrap();
+        assert_eq!(b.items.len(), 1, "slow executor must cut the batch");
+        assert_eq!(b.exec_size, 1);
+    }
+
+    #[test]
+    fn prop_no_drop_dup_or_reorder_per_key_and_class() {
+        forall(Config::cases(30), |rng| {
+            let mut sizes = vec![1usize];
+            if rng.chance(0.7) {
+                sizes.push(rng.range(2, 6));
+            }
+            if rng.chance(0.5) {
+                sizes.push(rng.range(7, 12));
+            }
+            let m = BatchManager::new(
+                sizes.clone(),
+                Duration::ZERO,
+                usize::MAX >> 1,
+            );
+            let n = rng.range(1, 64) as u64;
+            let keys = rng.range(1, 4) as u64;
+            // Payload encodes (key, class, seq) for order checking.
+            let mut pushed: HashMap<(u64, usize), Vec<u64>> = HashMap::new();
+            for i in 0..n {
+                let key = i % keys;
+                let class = rng.range(0, 3);
+                let p = Priority::from_u8(class as u8).unwrap();
+                assert_eq!(m.push(key, p, None, i), Admission::Accepted);
+                pushed.entry((key, class)).or_default().push(i);
+            }
+            m.close();
+            let mut got: HashMap<(u64, usize), Vec<u64>> = HashMap::new();
+            while let Some(b) = m.next_batch() {
+                assert!(b.items.len() <= *sizes.iter().max().unwrap());
+                assert!(
+                    sizes.contains(&b.exec_size),
+                    "exec size {} not exported {:?}",
+                    b.exec_size,
+                    sizes
+                );
+                assert!(b.exec_size >= b.items.len());
+                for &v in &b.items {
+                    assert_eq!(v % keys, b.key, "foreign key in batch");
+                    // Reconstruct the class this item was pushed with.
+                    let class = pushed
+                        .iter()
+                        .find(|((k, _), vs)| *k == b.key && vs.contains(&v))
+                        .map(|((_, c), _)| *c)
+                        .unwrap();
+                    got.entry((b.key, class)).or_default().push(v);
+                }
+            }
+            // Per (key, class): exactly the pushed items, in order.
+            for (kc, vs) in &pushed {
+                assert_eq!(got.get(kc), Some(vs), "key/class {kc:?}");
+            }
+            let total: usize = got.values().map(|v| v.len()).sum();
+            assert_eq!(total as u64, n);
+        });
+    }
+
+    #[test]
+    fn prop_concurrent_producers_lose_nothing() {
+        forall(Config::cases(10), |rng| {
+            let m = std::sync::Arc::new(BatchManager::new(
+                vec![1, 4, 8],
+                Duration::from_micros(rng.range(0, 500) as u64),
+                usize::MAX >> 1,
+            ));
+            let producers = rng.range(1, 4) as u64;
+            let per = rng.range(1, 32) as u64;
+            let mut handles = Vec::new();
+            for p in 0..producers {
+                let m = m.clone();
+                handles.push(std::thread::spawn(move || {
+                    for i in 0..per {
+                        let pri = Priority::from_u8((i % 3) as u8).unwrap();
+                        assert_eq!(
+                            m.push(p, pri, None, p * 1000 + i),
+                            Admission::Accepted
+                        );
+                    }
+                }));
+            }
+            let consumer = {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(b) = m.next_batch() {
+                        got.extend(b.items);
+                    }
+                    got
+                })
+            };
+            for h in handles {
+                h.join().unwrap();
+            }
+            m.close();
+            let mut got = consumer.join().unwrap();
+            got.sort_unstable();
+            let mut want: Vec<u64> = (0..producers)
+                .flat_map(|p| (0..per).map(move |i| p * 1000 + i))
+                .collect();
+            want.sort_unstable();
+            assert_eq!(got, want);
+        });
+    }
+}

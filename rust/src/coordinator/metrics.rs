@@ -60,12 +60,47 @@ pub struct Metrics {
     /// once at server start; summed across workers in cluster
     /// aggregates to give total cluster compute parallelism).
     pub exec_threads: AtomicU64,
+    /// Requests refused by the admission caps, per priority class
+    /// (shed-lowest-first: `Low` sheds at 50% queue occupancy,
+    /// `Normal` at 85%, `High` only when full). Every shed is an
+    /// explicit outcome to its caller — these counters are the
+    /// accounting side of "never a silent drop".
+    pub shed_low: AtomicU64,
+    pub shed_normal: AtomicU64,
+    pub shed_high: AtomicU64,
+    /// Admitted requests that were flushed after their explicit
+    /// deadline had already passed (still served; the miss is counted).
+    pub deadline_miss: AtomicU64,
+    /// Queue depth gauge (set at submit/flush time, not a counter).
+    pub queue_depth: AtomicU64,
+    /// Admitted requests whose batch execution failed (reply channels
+    /// dropped). `responses + shed_* + failed` accounts for every
+    /// admitted-or-shed submit.
+    pub failed: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
 }
 
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Count one shed in the class's counter.
+    pub fn count_shed(&self, p: super::batch_manager::Priority) {
+        use super::batch_manager::Priority;
+        match p {
+            Priority::Low => &self.shed_low,
+            Priority::Normal => &self.shed_normal,
+            Priority::High => &self.shed_high,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total sheds across all classes.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_low.load(Ordering::Relaxed)
+            + self.shed_normal.load(Ordering::Relaxed)
+            + self.shed_high.load(Ordering::Relaxed)
     }
 
     pub fn record_latency_us(&self, us: u64) {
@@ -111,7 +146,8 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "requests={} responses={} batches={} mean_batch={:.2} \
-             padded={} threads={} p50={}us p95={}us p99={}us \
+             padded={} threads={} shed={}/{}/{} misses={} failed={} \
+             depth={} p50={}us p95={}us p99={}us \
              bw_reduction={:.1}% shipped={}B",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
@@ -119,6 +155,12 @@ impl Metrics {
             self.mean_batch(),
             self.padded_slots.load(Ordering::Relaxed),
             self.exec_threads.load(Ordering::Relaxed).max(1),
+            self.shed_low.load(Ordering::Relaxed),
+            self.shed_normal.load(Ordering::Relaxed),
+            self.shed_high.load(Ordering::Relaxed),
+            self.deadline_miss.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.queue_depth.load(Ordering::Relaxed),
             self.latency_percentile_us(0.5),
             self.latency_percentile_us(0.95),
             self.latency_percentile_us(0.99),
@@ -213,6 +255,20 @@ mod tests {
         let m = Metrics::new();
         m.record_latency_us(1000);
         assert!(m.summary().contains("p95="), "{}", m.summary());
+    }
+
+    #[test]
+    fn shed_counters_split_by_class() {
+        use crate::coordinator::batch_manager::Priority;
+        let m = Metrics::new();
+        m.count_shed(Priority::Low);
+        m.count_shed(Priority::Low);
+        m.count_shed(Priority::High);
+        assert_eq!(m.shed_low.load(Ordering::Relaxed), 2);
+        assert_eq!(m.shed_normal.load(Ordering::Relaxed), 0);
+        assert_eq!(m.shed_high.load(Ordering::Relaxed), 1);
+        assert_eq!(m.shed_total(), 3);
+        assert!(m.summary().contains("shed=2/0/1"), "{}", m.summary());
     }
 
     #[test]

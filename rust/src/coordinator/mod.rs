@@ -1,9 +1,15 @@
 //! Layer-3 coordinator: the serving pipeline that runs the Zebra
 //! models from Rust with Python entirely out of the request path.
 //!
-//! Request flow: [`Server::submit`] -> [`batcher::Batcher`] (dynamic
-//! batching to the backend's supported batch sizes) -> worker thread
-//! -> [`crate::backend::InferenceBackend::execute`] (bridged by
+//! Request flow: [`Server::submit`] (one unified entry point taking a
+//! [`SubmitRequest`] — batch key, [`Priority`] class, optional
+//! deadline — and returning a [`SubmitOutcome`], used identically by
+//! in-process callers, the TCP cluster worker, and the router) ->
+//! [`batch_manager::BatchManager`] (continuous batching: per-key
+//! queues, deterministic shed-lowest-class-first admission,
+//! deadline-based flush, dynamic batch sizing from observed executor
+//! latency) -> worker thread ->
+//! [`crate::backend::InferenceBackend::execute`] (bridged by
 //! [`server::BackendExecutor`]; the pure-Rust reference backend in
 //! every build, PJRT under `--features pjrt`) -> per-request
 //! [`server::Response`] with logits and Eq. 2–3 bandwidth accounting
@@ -20,15 +26,15 @@
 //! set — DESIGN.md §7); at CPU-PJRT speeds a worker thread per client
 //! plus one executor thread is far from the bottleneck.
 
-pub mod batcher;
+pub mod batch_manager;
 pub mod metrics;
 pub mod server;
 
-pub use batcher::{Batch, Batcher};
+pub use batch_manager::{Admission, Batch, BatchManager, Priority};
 pub use metrics::{percentile_from_buckets, Metrics, LATENCY_BUCKETS};
 #[cfg(feature = "pjrt")]
 pub use server::pjrt_executor;
 pub use server::{
     reference_executor, BackendExecutor, BatchExecutor, Request, Response,
-    Server, ServerConfig, ShipSpills,
+    Server, ServerConfig, ShipSpills, SubmitOutcome, SubmitRequest,
 };

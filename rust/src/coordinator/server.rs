@@ -1,5 +1,14 @@
-//! The serving pipeline: request intake -> dynamic batcher -> executor
-//! worker(s) -> per-request responses with bandwidth accounting.
+//! The serving pipeline: unified request intake -> continuous batch
+//! manager -> executor worker(s) -> per-request responses with
+//! bandwidth accounting.
+//!
+//! All intake — in-process callers, the TCP cluster worker, and the
+//! router behind it — goes through ONE entry point:
+//! [`Server::submit`] takes a [`SubmitRequest`] (batch key, priority
+//! class, optional deadline, image) plus a caller-owned reply channel
+//! and returns a [`SubmitOutcome`]. Overload is an explicit
+//! [`SubmitOutcome::Shed`], never an error string and never a silent
+//! drop, so every tier can relay a structured overload response.
 //!
 //! The executor is abstracted behind [`BatchExecutor`] so the pipeline
 //! is testable with a closure/mock; production wires it to any
@@ -14,7 +23,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
-use super::batcher::Batcher;
+use super::batch_manager::{Admission, BatchManager, Priority};
 use super::metrics::Metrics;
 use crate::backend::{InferenceBackend, ModelOutput};
 use crate::compress::{self, Codec, CodecId, SpillBuf};
@@ -22,7 +31,70 @@ use crate::telemetry::Telemetry;
 use crate::tensor::Tensor;
 use crate::zebra::bandwidth::ELEM_BITS;
 
-/// One classification request: a normalized (3, H, W) image.
+/// One submission: what to run and how urgently. `key` groups requests
+/// that may share an executed batch (model, shape, codec — requests
+/// with different keys never ride in one batch); `priority` picks the
+/// admission/scheduling class; `deadline`, when set, flushes the batch
+/// sooner than the server's window and counts a miss if it passes.
+#[derive(Debug, Clone)]
+pub struct SubmitRequest {
+    pub key: u64,
+    pub priority: Priority,
+    pub deadline: Option<Duration>,
+    pub image: Tensor,
+}
+
+impl SubmitRequest {
+    /// Defaults: key 0, `Normal` priority, no explicit deadline.
+    pub fn new(image: Tensor) -> SubmitRequest {
+        SubmitRequest {
+            key: 0,
+            priority: Priority::Normal,
+            deadline: None,
+            image,
+        }
+    }
+
+    pub fn with_key(mut self, key: u64) -> SubmitRequest {
+        self.key = key;
+        self
+    }
+
+    pub fn with_priority(mut self, p: Priority) -> SubmitRequest {
+        self.priority = p;
+        self
+    }
+
+    pub fn with_deadline(mut self, d: Duration) -> SubmitRequest {
+        self.deadline = Some(d);
+        self
+    }
+}
+
+/// What [`Server::submit`] did with a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    /// Admitted under `id`; the response arrives on the reply channel.
+    Enqueued { id: u64 },
+    /// Refused by the class's admission cap (`queued` = depth at
+    /// refusal). Nothing will arrive on the reply channel; the caller
+    /// owes its client a structured overload response.
+    Shed { priority: Priority, queued: usize },
+    /// The server is shutting down; nothing new is accepted.
+    Closed,
+}
+
+impl SubmitOutcome {
+    /// The assigned request id, when admitted.
+    pub fn id(&self) -> Option<u64> {
+        match self {
+            SubmitOutcome::Enqueued { id } => Some(*id),
+            _ => None,
+        }
+    }
+}
+
+/// One admitted request riding through the batch manager.
 pub struct Request {
     pub id: u64,
     pub image: Tensor,
@@ -75,11 +147,11 @@ pub trait BatchExecutor: Send + Sync {
 }
 
 /// Production executor: bridges any [`InferenceBackend`] onto the
-/// batcher's worker threads. Backends need not be `Send` (the `xla`
-/// crate's PJRT handles are `Rc` + raw pointers), so the backend is
-/// constructed on — and never leaves — ONE dedicated execution thread;
-/// this handle talks to it over channels and is therefore freely
-/// shareable with the batcher workers.
+/// batch manager's worker threads. Backends need not be `Send` (the
+/// `xla` crate's PJRT handles are `Rc` + raw pointers), so the backend
+/// is constructed on — and never leaves — ONE dedicated execution
+/// thread; this handle talks to it over channels and is therefore
+/// freely shareable with the batching workers.
 pub struct BackendExecutor {
     tx: std::sync::Mutex<Sender<ExecJob>>,
     name: String,
@@ -218,12 +290,18 @@ pub struct ShipSpills {
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
-    /// Batching window.
+    /// Flush window: no admitted request waits longer than this for
+    /// its batch to start executing (`--flush-us`).
     pub max_wait: Duration,
     /// Executor worker threads (1 is right for the CPU PJRT client).
     pub workers: usize,
-    /// Reject pushes beyond this queue depth (backpressure).
+    /// Queue capacity the per-class admission caps are cut from:
+    /// `Low` sheds at 50% of it, `Normal` at 85%, `High` when full.
     pub max_queue: usize,
+    /// Cap on real items per executed batch (`--max-batch`; 0 = the
+    /// backend's largest exported size). Dynamic sizing can cut
+    /// batches further when observed executor latency demands it.
+    pub max_batch: usize,
     /// When set, each executed batch tensor is also encoded and framed
     /// as a versioned `.zspill` — the bytes a multi-node deployment
     /// ships to a peer — metered per worker through one reused
@@ -243,6 +321,7 @@ impl Default for ServerConfig {
             max_wait: Duration::from_millis(2),
             workers: 1,
             max_queue: 1024,
+            max_batch: 0,
             ship_spills: None,
             spill_sink: None,
         }
@@ -251,7 +330,7 @@ impl Default for ServerConfig {
 
 /// The coordinator server.
 pub struct Server {
-    batcher: Arc<Batcher<Request>>,
+    manager: Arc<BatchManager<Request>>,
     pub metrics: Arc<Metrics>,
     /// Wall-time/byte accounting for the serving hot loop. Every batch
     /// records a `serve.batch` umbrella scope plus `serve.assemble`,
@@ -261,13 +340,18 @@ pub struct Server {
     pub telemetry: Arc<Telemetry>,
     workers: Vec<std::thread::JoinHandle<()>>,
     next_id: std::sync::atomic::AtomicU64,
-    max_queue: usize,
 }
 
 impl Server {
     pub fn start(exec: Arc<dyn BatchExecutor>, cfg: ServerConfig) -> Server {
-        let batcher =
-            Arc::new(Batcher::new(exec.batch_sizes(), cfg.max_wait));
+        let telemetry = Arc::new(Telemetry::new());
+        // The manager watches the executor stage: observed per-slot
+        // latency drives its dynamic batch-size target.
+        let manager = Arc::new(
+            BatchManager::new(exec.batch_sizes(), cfg.max_wait, cfg.max_queue)
+                .with_max_batch(cfg.max_batch)
+                .with_exec_stage(telemetry.stage("serve.execute")),
+        );
         let metrics = Arc::new(Metrics::new());
         // Gauge, not counter: how parallel this node's compute is —
         // surfaced through metrics snapshots so cluster tooling can
@@ -291,10 +375,9 @@ impl Server {
             );
             Arc::from(codec)
         });
-        let telemetry = Arc::new(Telemetry::new());
         let mut workers = Vec::new();
         for _ in 0..cfg.workers.max(1) {
-            let b = batcher.clone();
+            let b = manager.clone();
             let m = metrics.clone();
             let e = exec.clone();
             let s = shipper.clone();
@@ -305,65 +388,82 @@ impl Server {
             }));
         }
         Server {
-            batcher,
+            manager,
             metrics,
             telemetry,
             workers,
             next_id: std::sync::atomic::AtomicU64::new(0),
-            max_queue: cfg.max_queue,
         }
     }
 
-    /// Submit an image; the response arrives on the returned channel.
-    /// Errors immediately under backpressure (queue full) or shutdown.
-    pub fn submit(&self, image: Tensor) -> Result<Receiver<Response>> {
-        let (tx, rx) = channel();
-        self.submit_routed(image, tx)?;
-        Ok(rx)
-    }
-
-    /// Submit with a caller-owned reply channel, returning the
-    /// assigned request id. This is the multiplexed intake the cluster
-    /// worker uses: one TCP connection funnels every response through
-    /// a single `Sender` instead of one channel per request, and the
-    /// returned id lets the caller pair responses with wire frames.
-    pub fn submit_routed(
+    /// THE submission entry point — in-process callers, the TCP
+    /// worker, and the router all go through here. The response (if
+    /// admitted) arrives on `reply`; the outcome says immediately
+    /// whether the request was enqueued, shed by its class's admission
+    /// cap, or refused because the server is closing.
+    pub fn submit(
         &self,
-        image: Tensor,
+        req: SubmitRequest,
         reply: Sender<Response>,
-    ) -> Result<u64> {
-        if self.batcher.depth() >= self.max_queue {
-            return Err(anyhow!("queue full ({} pending)", self.max_queue));
-        }
+    ) -> SubmitOutcome {
+        let SubmitRequest { key, priority, deadline, image } = req;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        let ok = self.batcher.push(Request {
-            id,
-            image,
-            enqueued: Instant::now(),
-            reply,
-        });
-        anyhow::ensure!(ok, "server is shut down");
-        Ok(id)
+        let admission = self.manager.push(
+            key,
+            priority,
+            deadline,
+            Request { id, image, enqueued: Instant::now(), reply },
+        );
+        match admission {
+            Admission::Accepted => {
+                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                self.metrics
+                    .queue_depth
+                    .store(self.manager.depth() as u64, Ordering::Relaxed);
+                SubmitOutcome::Enqueued { id }
+            }
+            Admission::Shed { queued } => {
+                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                self.metrics.count_shed(priority);
+                SubmitOutcome::Shed { priority, queued }
+            }
+            Admission::Closed => SubmitOutcome::Closed,
+        }
     }
 
-    /// Blocking convenience: submit and wait.
+    /// Blocking convenience: submit with defaults and wait. Shed and
+    /// shutdown outcomes surface as errors.
     pub fn classify(&self, image: Tensor) -> Result<Response> {
-        let rx = self.submit(image)?;
-        rx.recv().context("server dropped the request")
+        let (tx, rx) = channel();
+        match self.submit(SubmitRequest::new(image), tx) {
+            SubmitOutcome::Enqueued { .. } => {
+                rx.recv().context("server dropped the request")
+            }
+            SubmitOutcome::Shed { priority, queued } => Err(anyhow!(
+                "request shed: {} class over its admission cap \
+                 ({queued} queued)",
+                priority.name()
+            )),
+            SubmitOutcome::Closed => Err(anyhow!("server is shut down")),
+        }
+    }
+
+    /// Current queue depth (the backpressure gauge).
+    pub fn queue_depth(&self) -> usize {
+        self.manager.depth()
     }
 
     /// Stop accepting work and let the workers drain, without waiting
     /// for them (shared-handle shutdown — what `cluster::WorkerNode`
     /// calls through its `Arc<Server>`). Pending requests still
-    /// complete; subsequent submits error.
+    /// complete; subsequent submits return [`SubmitOutcome::Closed`].
     pub fn close(&self) {
-        self.batcher.close();
+        self.manager.close();
     }
 
     /// Drain and stop all workers.
     pub fn shutdown(mut self) {
-        self.batcher.close();
+        self.manager.close();
         for w in self.workers.drain(..) {
             w.join().ok();
         }
@@ -371,7 +471,7 @@ impl Server {
 }
 
 fn worker_loop(
-    batcher: Arc<Batcher<Request>>,
+    manager: Arc<BatchManager<Request>>,
     exec: Arc<dyn BatchExecutor>,
     metrics: Arc<Metrics>,
     shipper: Option<Arc<dyn Codec>>,
@@ -391,9 +491,9 @@ fn worker_loop(
     // One SpillBuf per worker: spill-shipping reuses its arenas across
     // every batch this worker ever executes.
     let mut spill_buf = SpillBuf::new();
-    while let Some(batch) = batcher.next_batch() {
+    while let Some(batch) = manager.next_batch() {
         // Time starts when a batch is in hand — queue wait is the
-        // batcher's, not this worker's.
+        // manager's, not this worker's.
         let _whole = st_batch.time();
         let n = batch.items.len();
         let exec_size = batch.exec_size;
@@ -402,6 +502,12 @@ fn worker_loop(
         metrics
             .padded_slots
             .fetch_add(batch.padding() as u64, Ordering::Relaxed);
+        metrics
+            .deadline_miss
+            .fetch_add(batch.deadline_misses as u64, Ordering::Relaxed);
+        metrics
+            .queue_depth
+            .store(manager.depth() as u64, Ordering::Relaxed);
         // Assemble the padded batch tensor.
         let t_assemble = st_assemble.time();
         let mut x = Tensor::zeros(&[exec_size, 3, hw, hw]);
@@ -447,7 +553,9 @@ fn worker_loop(
             }
             Err(e) => {
                 // Failed batch: drop the reply channels; callers see a
-                // RecvError. Metrics still count the attempt.
+                // RecvError. The `failed` counter keeps the
+                // served+shed+failed accounting gap-free.
+                metrics.failed.fetch_add(n as u64, Ordering::Relaxed);
                 eprintln!("[server] batch of {n} failed: {e:#}");
             }
         }
@@ -554,6 +662,16 @@ mod tests {
         Tensor::from_vec(&[3, hw, hw], vec![fill; 3 * hw * hw])
     }
 
+    /// Submit with defaults, panicking unless admitted — the test-side
+    /// stand-in for the old `submit(image) -> Receiver` convenience.
+    fn submit_ok(srv: &Server, image: Tensor) -> Receiver<Response> {
+        let (tx, rx) = channel();
+        match srv.submit(SubmitRequest::new(image), tx) {
+            SubmitOutcome::Enqueued { .. } => rx,
+            other => panic!("expected admission, got {other:?}"),
+        }
+    }
+
     #[test]
     fn classify_routes_logits_back() {
         let exec = Arc::new(MockExec {
@@ -601,13 +719,12 @@ mod tests {
             exec,
             ServerConfig {
                 max_wait: Duration::ZERO,
-                workers: 1,
                 max_queue: 16,
                 ship_spills: Some(ShipSpills {
                     codec: CodecId::ZeroBlock,
                     block: 2,
                 }),
-                spill_sink: None,
+                ..ServerConfig::default()
             },
         );
         let r = srv.classify(image(4, 0.9)).unwrap();
@@ -689,15 +806,12 @@ mod tests {
             exec,
             ServerConfig {
                 max_wait: Duration::from_millis(10),
-                workers: 1,
-                max_queue: 1024,
-                ship_spills: None,
-                spill_sink: None,
+                ..ServerConfig::default()
             },
         ));
         let mut waiters = Vec::new();
         for _ in 0..32 {
-            waiters.push(srv.submit(image(4, 0.7)).unwrap());
+            waiters.push(submit_ok(&srv, image(4, 0.7)));
         }
         for rx in waiters {
             let resp = rx.recv().unwrap();
@@ -712,7 +826,7 @@ mod tests {
     }
 
     #[test]
-    fn backpressure_rejects_when_full() {
+    fn backpressure_sheds_when_full() {
         let exec = Arc::new(MockExec {
             hw: 4,
             sizes: vec![1],
@@ -722,29 +836,82 @@ mod tests {
             exec,
             ServerConfig {
                 max_wait: Duration::ZERO,
-                workers: 1,
                 max_queue: 2,
-                ship_spills: None,
-                spill_sink: None,
+                ..ServerConfig::default()
             },
         );
-        let _a = srv.submit(image(4, 0.5)).unwrap();
-        let _b = srv.submit(image(4, 0.5)).unwrap();
-        let _c = srv.submit(image(4, 0.5)).unwrap();
-        // Queue is at capacity (worker holds one, two waiting).
-        let mut rejected = false;
-        for _ in 0..4 {
-            if srv.submit(image(4, 0.5)).is_err() {
-                rejected = true;
-                break;
+        let mut receivers = Vec::new();
+        let mut shed = None;
+        for _ in 0..8 {
+            let (tx, rx) = channel();
+            match srv.submit(SubmitRequest::new(image(4, 0.5)), tx) {
+                SubmitOutcome::Enqueued { .. } => receivers.push(rx),
+                SubmitOutcome::Shed { priority, queued } => {
+                    shed = Some((priority, queued));
+                    break;
+                }
+                SubmitOutcome::Closed => panic!("server is not closed"),
             }
         }
-        assert!(rejected, "expected backpressure rejection");
+        let (priority, queued) =
+            shed.expect("expected a Shed outcome under backpressure");
+        assert_eq!(priority, Priority::Normal);
+        assert!(queued >= 2, "shed at depth {queued}");
+        assert!(
+            srv.metrics.shed_normal.load(Ordering::Relaxed) >= 1,
+            "shed must be counted, never silent"
+        );
         srv.shutdown();
     }
 
     #[test]
-    fn submit_routed_multiplexes_one_reply_channel() {
+    fn low_class_sheds_before_high_class() {
+        let exec = Arc::new(MockExec {
+            hw: 4,
+            sizes: vec![1],
+            delay: Duration::from_millis(50),
+        });
+        let srv = Server::start(
+            exec,
+            ServerConfig {
+                max_wait: Duration::ZERO,
+                max_queue: 8,
+                ..ServerConfig::default()
+            },
+        );
+        // Fill the Low slice of the queue, then one more Low: shed.
+        // High still gets in at the same depth.
+        let mut keep = Vec::new();
+        let mut low_shed = false;
+        for _ in 0..16 {
+            let (tx, rx) = channel();
+            let req =
+                SubmitRequest::new(image(4, 0.5)).with_priority(Priority::Low);
+            match srv.submit(req, tx) {
+                SubmitOutcome::Enqueued { .. } => keep.push(rx),
+                SubmitOutcome::Shed { priority, .. } => {
+                    assert_eq!(priority, Priority::Low);
+                    low_shed = true;
+                    break;
+                }
+                SubmitOutcome::Closed => panic!("not closed"),
+            }
+        }
+        assert!(low_shed, "Low must hit its cap");
+        let (tx, rx) = channel();
+        let req =
+            SubmitRequest::new(image(4, 0.5)).with_priority(Priority::High);
+        match srv.submit(req, tx) {
+            SubmitOutcome::Enqueued { .. } => keep.push(rx),
+            other => panic!("High must still be admitted, got {other:?}"),
+        }
+        assert!(srv.metrics.shed_low.load(Ordering::Relaxed) >= 1);
+        assert_eq!(srv.metrics.shed_high.load(Ordering::Relaxed), 0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn submit_multiplexes_one_reply_channel() {
         let exec = Arc::new(MockExec {
             hw: 4,
             sizes: vec![1],
@@ -754,7 +921,9 @@ mod tests {
         let (tx, rx) = channel();
         let mut want = std::collections::HashMap::new();
         for &fill in &[0.9f32, -0.9, 0.3] {
-            let id = srv.submit_routed(image(4, fill), tx.clone()).unwrap();
+            let outcome =
+                srv.submit(SubmitRequest::new(image(4, fill)), tx.clone());
+            let id = outcome.id().expect("default queue must admit");
             want.insert(id, fill);
         }
         for _ in 0..want.len() {
@@ -763,6 +932,54 @@ mod tests {
             assert!((r.logits[0] - fill).abs() < 1e-5);
         }
         assert!(want.is_empty(), "every id must be answered exactly once");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn served_shed_failed_account_for_every_submit() {
+        let exec = Arc::new(MockExec {
+            hw: 4,
+            sizes: vec![1],
+            delay: Duration::from_millis(20),
+        });
+        let srv = Server::start(
+            exec,
+            ServerConfig {
+                max_wait: Duration::ZERO,
+                max_queue: 4,
+                ..ServerConfig::default()
+            },
+        );
+        let mut receivers = Vec::new();
+        let mut submitted = 0u64;
+        for i in 0..24 {
+            let p = Priority::from_u8((i % 3) as u8).unwrap();
+            let (tx, rx) = channel();
+            let req = SubmitRequest::new(image(4, 0.5)).with_priority(p);
+            match srv.submit(req, tx) {
+                SubmitOutcome::Enqueued { .. } => receivers.push(rx),
+                SubmitOutcome::Shed { .. } => {}
+                SubmitOutcome::Closed => panic!("not closed"),
+            }
+            submitted += 1;
+        }
+        // Drain every admitted request, then check the books balance.
+        for rx in receivers {
+            rx.recv().unwrap();
+        }
+        let m = &srv.metrics;
+        let sheds = m.shed_low.load(Ordering::Relaxed)
+            + m.shed_normal.load(Ordering::Relaxed)
+            + m.shed_high.load(Ordering::Relaxed);
+        assert_eq!(m.requests.load(Ordering::Relaxed), submitted);
+        assert_eq!(
+            m.responses.load(Ordering::Relaxed)
+                + sheds
+                + m.failed.load(Ordering::Relaxed),
+            submitted,
+            "served+shed+failed must account for every submit"
+        );
+        assert!(sheds > 0, "this load must overflow a queue of 4");
         srv.shutdown();
     }
 
@@ -778,13 +995,13 @@ mod tests {
             exec,
             ServerConfig {
                 max_wait: Duration::ZERO,
-                workers: 1,
                 max_queue: 16,
                 ship_spills: Some(ShipSpills {
                     codec: CodecId::ZeroBlock,
                     block: 2,
                 }),
                 spill_sink: Some(sink_tx),
+                ..ServerConfig::default()
             },
         );
         let r = srv.classify(image(4, 0.9)).unwrap();
@@ -811,7 +1028,44 @@ mod tests {
         let r = srv.classify(image(4, 0.9)).unwrap();
         assert_eq!(r.predicted, 0);
         srv.close();
-        assert!(srv.submit(image(4, 0.9)).is_err());
+        let (tx, _rx) = channel();
+        assert_eq!(
+            srv.submit(SubmitRequest::new(image(4, 0.9)), tx),
+            SubmitOutcome::Closed
+        );
+    }
+
+    #[test]
+    fn distinct_keys_never_share_a_batch() {
+        let exec = Arc::new(MockExec {
+            hw: 4,
+            sizes: vec![1, 8],
+            delay: Duration::from_millis(2),
+        });
+        let srv = Arc::new(Server::start(
+            exec,
+            ServerConfig {
+                max_wait: Duration::from_millis(10),
+                ..ServerConfig::default()
+            },
+        ));
+        let mut waiters = Vec::new();
+        for i in 0..16 {
+            let (tx, rx) = channel();
+            let req =
+                SubmitRequest::new(image(4, 0.7)).with_key(i % 2);
+            assert!(matches!(
+                srv.submit(req, tx),
+                SubmitOutcome::Enqueued { .. }
+            ));
+            waiters.push(rx);
+        }
+        for rx in waiters {
+            rx.recv().unwrap();
+        }
+        // Two keys -> at least two batches even though 16 fits in 8+8.
+        assert!(srv.metrics.batches.load(Ordering::Relaxed) >= 2);
+        Arc::try_unwrap(srv).ok().map(|s| s.shutdown());
     }
 
     #[test]
@@ -826,10 +1080,8 @@ mod tests {
                 exec,
                 ServerConfig {
                     max_wait: Duration::from_micros(rng.range(0, 500) as u64),
-                    workers: 1,
                     max_queue: 4096,
-                    ship_spills: None,
-                    spill_sink: None,
+                    ..ServerConfig::default()
                 },
             ));
             let n = rng.range(1, 24);
@@ -837,7 +1089,7 @@ mod tests {
                 (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
             let rxs: Vec<_> = fills
                 .iter()
-                .map(|&f| srv.submit(image(2, f)).unwrap())
+                .map(|&f| submit_ok(&srv, image(2, f)))
                 .collect();
             for (f, rx) in fills.iter().zip(rxs) {
                 let r = rx.recv().unwrap();

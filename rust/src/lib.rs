@@ -37,8 +37,9 @@
 //!   `--features pjrt`, the PJRT runtime.
 //! - [`runtime`] — artifact manifest parsing (every build) + PJRT
 //!   loading/execution of the AOT HLO artifacts (`pjrt` feature).
-//! - [`coordinator`] — the serving pipeline: dynamic batcher, worker
-//!   pool, per-request bandwidth metering.
+//! - [`coordinator`] — the serving pipeline: continuous batch manager
+//!   (per-key queues, priority admission, deadline-based flush, dynamic
+//!   batch sizing), worker pool, per-request bandwidth metering.
 //! - [`cluster`] — multi-node serving over TCP: a versioned,
 //!   checksummed frame protocol (`.zspill` discipline on the wire),
 //!   worker nodes wrapping the coordinator, a sharding/failover

@@ -62,7 +62,10 @@ impl Stage {
         self.bytes.fetch_add(n, Ordering::Relaxed);
     }
 
-    fn stats(&self) -> StageStats {
+    /// Point-in-time copy of this stage's counters. The continuous
+    /// batch manager reads its executor stage through this without
+    /// touching the registry lock.
+    pub fn stats(&self) -> StageStats {
         StageStats {
             nanos: self.nanos.load(Ordering::Relaxed),
             calls: self.calls.load(Ordering::Relaxed),

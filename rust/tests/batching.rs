@@ -1,0 +1,204 @@
+//! Continuous-batching acceptance: flooding one key at the lowest
+//! priority must not starve other keys — their latency stays bounded,
+//! only the lowest class is shed, and the cluster's merged metrics
+//! account for every request (served / shed / failed) with no gaps.
+//!
+//! The worker's flush window (50ms) deliberately dominates the mock
+//! executor's 5ms batches, so the latency comparison measures queue
+//! isolation rather than scheduler noise: an unloaded probe waits one
+//! flush window; a probe under flood waits the same window plus at
+//! most one in-service batch.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use zebra::backend::ModelOutput;
+use zebra::cluster::{ClusterClient, Router, RouterConfig, ShardMode, WorkerNode};
+use zebra::coordinator::server::BatchExecutor;
+use zebra::coordinator::{Priority, ServerConfig};
+use zebra::tensor::Tensor;
+
+const WAIT: Duration = Duration::from_secs(30);
+const FLUSH: Duration = Duration::from_millis(50);
+const EXEC_DELAY: Duration = Duration::from_millis(5);
+const WAVES: usize = 20;
+const FLOODS_PER_WAVE: usize = 6;
+
+/// Mock executor: logits are [mean, -mean], one 2x2-blocked mask
+/// layer, a fixed per-batch execution delay, and a batch-of-8 export
+/// so the continuous batch manager actually coalesces.
+struct SlowExec {
+    hw: usize,
+}
+
+impl BatchExecutor for SlowExec {
+    fn execute(&self, x: &Tensor) -> Result<ModelOutput> {
+        std::thread::sleep(EXEC_DELAY);
+        let b = x.shape()[0];
+        let per = 3 * self.hw * self.hw;
+        let mut logits = Vec::with_capacity(b * 2);
+        let mut mask = Vec::new();
+        for i in 0..b {
+            let mean: f32 = x.data()[i * per..(i + 1) * per]
+                .iter()
+                .sum::<f32>()
+                / per as f32;
+            logits.extend_from_slice(&[mean, -mean]);
+            let kept = if mean > 0.5 { 1.0 } else { 0.0 };
+            mask.extend(std::iter::repeat(kept).take(4));
+        }
+        Ok(ModelOutput {
+            logits: Tensor::from_vec(&[b, 2], logits),
+            masks: vec![Tensor::from_vec(&[b, 1, 2, 2], mask)],
+            block_elems: vec![4],
+        })
+    }
+    fn batch_sizes(&self) -> Vec<usize> {
+        vec![8]
+    }
+    fn image_hw(&self) -> usize {
+        self.hw
+    }
+}
+
+fn fill_image(hw: usize, v: f32) -> Tensor {
+    Tensor::from_vec(&[3, hw, hw], vec![v; 3 * hw * hw])
+}
+
+/// Exact percentile over raw samples (the shared histogram's
+/// power-of-two buckets are too coarse for a 2x latency comparison).
+fn p99_us(samples: &mut Vec<u64>) -> u64 {
+    samples.sort_unstable();
+    let idx = ((samples.len() as f64 - 1.0) * 0.99).round() as usize;
+    samples[idx]
+}
+
+#[test]
+fn flooding_one_key_does_not_starve_the_others() {
+    let exec = Arc::new(SlowExec { hw: 4 });
+    let worker = WorkerNode::start(
+        exec,
+        "127.0.0.1:0",
+        ServerConfig {
+            max_wait: FLUSH,
+            workers: 1,
+            max_queue: 1024,
+            max_batch: 0,
+            ship_spills: None,
+            spill_sink: None,
+        },
+        None,
+    )
+    .unwrap();
+    let mut cfg = RouterConfig::new(vec![worker.local_addr().to_string()]);
+    cfg.mode = ShardMode::HashKey;
+    // Small budget so the flood overruns it: Low's admission cap is
+    // 50% (= 2 slots), Normal/High keep headroom.
+    cfg.max_outstanding = 4;
+    cfg.max_attempts = 1;
+    cfg.heartbeat_every = Duration::from_millis(100);
+    let router = Router::start(cfg, "127.0.0.1:0").unwrap();
+    let client =
+        ClusterClient::connect(&router.local_addr().to_string()).unwrap();
+    let img = fill_image(4, 0.7);
+
+    // Phase 1 — unloaded baseline: closed-loop High probes, each on
+    // its own key.
+    let mut unloaded = Vec::with_capacity(WAVES);
+    for i in 0..WAVES {
+        let t = Instant::now();
+        client
+            .submit_request(&img, Some(1000 + i as u64), Priority::High, None)
+            .unwrap()
+            .recv_timeout(WAIT)
+            .expect("unloaded probe got no response")
+            .expect("unloaded probe failed");
+        unloaded.push(t.elapsed().as_micros() as u64);
+    }
+
+    // Phase 2 — flood key 0 with Low traffic far beyond its admission
+    // cap while probing other keys at High, closed loop.
+    let mut flood_rxs = Vec::new();
+    let mut loaded = Vec::with_capacity(WAVES);
+    for i in 0..WAVES {
+        for _ in 0..FLOODS_PER_WAVE {
+            flood_rxs.push(
+                client
+                    .submit_request(&img, Some(0), Priority::Low, None)
+                    .unwrap(),
+            );
+        }
+        let t = Instant::now();
+        client
+            .submit_request(&img, Some(2000 + i as u64), Priority::High, None)
+            .unwrap()
+            .recv_timeout(WAIT)
+            .expect("probe under flood got no response")
+            .expect("probe under flood was shed or failed");
+        loaded.push(t.elapsed().as_micros() as u64);
+    }
+
+    // Every flood request resolves explicitly: served, or shed with a
+    // structured Overloaded naming the Low class. Never silently lost.
+    let mut flood_ok = 0usize;
+    let mut flood_shed = 0usize;
+    for rx in flood_rxs {
+        match rx.recv_timeout(WAIT).expect("flood request got no answer") {
+            Ok(_) => flood_ok += 1,
+            Err(e) => {
+                assert!(e.is_overloaded(), "flood fault (not a shed): {e}");
+                flood_shed += 1;
+            }
+        }
+    }
+    let floods = WAVES * FLOODS_PER_WAVE;
+    assert_eq!(flood_ok + flood_shed, floods, "no silent drops");
+    assert!(
+        flood_shed > 0,
+        "the flood must overrun Low's admission cap"
+    );
+
+    // Latency isolation: other keys' p99 stays within 2x of unloaded.
+    let (p_base, p_load) = (p99_us(&mut unloaded), p99_us(&mut loaded));
+    assert!(
+        p_load <= 2 * p_base,
+        "flooded p99 {p_load}us exceeds 2x unloaded p99 {p_base}us"
+    );
+
+    // Cluster accounting closes exactly once traffic drains: every
+    // request is a response, a per-class shed, or a fault.
+    let total = (2 * WAVES + floods) as u64;
+    let deadline = Instant::now() + WAIT;
+    let stats = loop {
+        let s = router.stats();
+        if s.requests == total
+            && s.requests == s.responses + s.rejected
+            && s.aggregate.responses == s.responses
+        {
+            break s;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "cluster accounting never converged: {s:?}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert_eq!(stats.failed, 0, "nothing may fault in this test");
+    assert_eq!(stats.shed_low as usize, flood_shed);
+    assert_eq!(stats.shed_normal, 0, "only the lowest class is shed");
+    assert_eq!(stats.shed_high, 0, "only the lowest class is shed");
+    assert_eq!(
+        stats.shed_total() + stats.failed,
+        stats.rejected,
+        "every rejection is accounted as a shed or a fault"
+    );
+    // The workers themselves shed nothing (the router's caps engage
+    // first), so the merged node metrics show clean conservation too.
+    assert_eq!(stats.aggregate.shed_total(), 0);
+    assert_eq!(stats.aggregate.failed, 0);
+
+    client.shutdown();
+    router.shutdown();
+    worker.shutdown();
+}

@@ -16,12 +16,13 @@ use zebra::backend::reference::RefSpec;
 use zebra::backend::ModelOutput;
 use zebra::cluster::wire::{encode_submit, Frame, FrameType};
 use zebra::cluster::{
-    ClusterClient, Router, RouterConfig, ShardMode, WorkerNode,
+    ClusterClient, ClusterError, Router, RouterConfig, ShardMode,
+    WorkerNode,
 };
 use zebra::compress::CodecId;
 use zebra::coordinator::server::BatchExecutor;
 use zebra::coordinator::{
-    reference_executor, Server, ServerConfig, ShipSpills,
+    reference_executor, Priority, Server, ServerConfig, ShipSpills,
 };
 use zebra::tensor::Tensor;
 use zebra::util::prng::Rng;
@@ -87,6 +88,7 @@ fn mock_worker(delay: Duration) -> WorkerNode {
         max_wait: Duration::ZERO,
         workers: 1,
         max_queue: 1024,
+        max_batch: 0,
         ship_spills: None,
         spill_sink: None,
     };
@@ -214,6 +216,7 @@ fn shipped_spill_bytes_match_worker_eq2_accounting() {
                 max_wait: Duration::from_millis(1),
                 workers: 1,
                 max_queue: 1024,
+                max_batch: 0,
                 ship_spills: Some(ShipSpills {
                     codec: CodecId::ZeroBlock,
                     block: 2,
@@ -351,10 +354,11 @@ fn hash_mode_pins_keys_and_spreads_distinct_ones() {
     }
 }
 
-/// Per-worker admission limits reject overload instead of queueing
-/// without bound.
+/// Per-worker admission limits shed overload with structured
+/// `Overloaded` frames instead of queueing without bound — and the
+/// sheds land in the per-class counters, never as silent drops.
 #[test]
-fn admission_limit_rejects_overload() {
+fn admission_limit_sheds_overload_with_structured_frames() {
     let worker = mock_worker(Duration::from_millis(200));
     let mut cfg = RouterConfig::new(vec![worker.local_addr().to_string()]);
     cfg.max_outstanding = 1;
@@ -367,25 +371,114 @@ fn admission_limit_rejects_overload() {
     let rxs: Vec<_> =
         (0..5).map(|_| client.submit(&img).unwrap()).collect();
     let mut ok = 0;
-    let mut rejected = 0;
+    let mut shed = 0;
     for rx in rxs {
         match rx.recv_timeout(WAIT).unwrap() {
             Ok(_) => ok += 1,
-            Err(msg) => {
-                assert!(
-                    msg.contains("workers available"),
-                    "unexpected rejection: {msg}"
-                );
-                rejected += 1;
+            Err(e) => {
+                // The refusal is the typed admission outcome, not a
+                // generic fault, and it names the class and cause.
+                assert!(e.is_overloaded(), "expected a shed, got: {e}");
+                match e {
+                    ClusterError::Overloaded {
+                        priority, detail, ..
+                    } => {
+                        assert_eq!(priority, Priority::Normal);
+                        assert!(
+                            detail.contains("workers available"),
+                            "unexpected shed detail: {detail}"
+                        );
+                    }
+                    other => panic!("not a shed: {other}"),
+                }
+                shed += 1;
             }
         }
     }
     assert_eq!(ok, 1, "exactly the admitted request completes");
-    assert_eq!(rejected, 4, "the rest are rejected by admission control");
-    assert_eq!(router.stats().rejected, 4);
+    assert_eq!(shed, 4, "the rest are shed by admission control");
+    let stats = router.stats();
+    assert_eq!(stats.rejected, 4);
+    assert_eq!(stats.shed_normal, 4, "sheds are accounted per class");
+    assert_eq!(stats.shed_low + stats.shed_high, 0);
+    assert_eq!(stats.failed, 0, "a shed is not a fault");
+    assert_eq!(
+        stats.shed_total() + stats.failed,
+        stats.rejected,
+        "every rejection is a shed or a fault — no silent drops"
+    );
     client.shutdown();
     router.shutdown();
     worker.shutdown();
+}
+
+/// Regression: the router's per-worker in-flight counters must return
+/// to zero once traffic drains — including across a worker death
+/// under load. The old accounting incremented `outstanding` outside
+/// the pending-map lock, so a concurrent `fail_link` drain could
+/// subtract first and underflow the counter to `usize::MAX`, wedging
+/// that worker's admission cap forever (every later request shed).
+#[test]
+fn redial_returns_in_flight_counters_to_zero() {
+    let workers: Vec<WorkerNode> = (0..2)
+        .map(|_| mock_worker(Duration::from_millis(20)))
+        .collect();
+    let router = router_for(&workers, ShardMode::RoundRobin);
+    let client =
+        ClusterClient::connect(&router.local_addr().to_string()).unwrap();
+    let img = fill_image(4, 0.3);
+
+    // Load both workers, then kill one while its queue is non-empty
+    // (the router keeps redialing the dead address in the background).
+    let rxs: Vec<_> =
+        (0..30).map(|_| client.submit(&img).unwrap()).collect();
+    std::thread::sleep(Duration::from_millis(60));
+    workers[0].kill();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        rx.recv_timeout(WAIT)
+            .unwrap_or_else(|_| panic!("request {i} got no response"))
+            .unwrap_or_else(|e| panic!("request {i} failed: {e}"));
+    }
+
+    // Quiescent: every per-worker counter drains to exactly zero.
+    // An underflow shows up here as a usize::MAX that never drains.
+    let deadline = Instant::now() + WAIT;
+    loop {
+        let in_flight = router.worker_in_flight();
+        if in_flight.iter().all(|&c| c == 0) {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "in-flight counters never returned to zero: {in_flight:?}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // And the surviving worker's admission cap is not wedged: fresh
+    // traffic is admitted and served, and drains back to zero again.
+    let rxs: Vec<_> =
+        (0..10).map(|_| client.submit(&img).unwrap()).collect();
+    for rx in rxs {
+        rx.recv_timeout(WAIT)
+            .expect("post-failure request got no response")
+            .expect("post-failure request failed");
+    }
+    let deadline = Instant::now() + WAIT;
+    while !router.worker_in_flight().iter().all(|&c| c == 0) {
+        assert!(
+            Instant::now() < deadline,
+            "counters did not drain after the second wave: {:?}",
+            router.worker_in_flight()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(router.stats().rejected, 0, "nothing was shed or lost");
+    client.shutdown();
+    router.shutdown();
+    for w in workers {
+        w.shutdown();
+    }
 }
 
 /// Malformed wire input — garbage bytes, junk payloads, wrong image
@@ -416,7 +509,11 @@ fn malformed_wire_input_never_panics_the_nodes() {
 
         // Wrong image geometry for this worker: Error, not a panic.
         let img5 = noise_image(5, 1);
-        Frame::new(FrameType::Submit, 43, encode_submit(0, &img5))
+        Frame::new(
+            FrameType::Submit,
+            43,
+            encode_submit(0, Priority::Normal, None, &img5),
+        )
             .write_to(&mut s)
             .unwrap();
         let f = Frame::read_from(&mut s).unwrap();

@@ -12,7 +12,9 @@ use std::time::Duration;
 use zebra::accel::{simulate_analytic, AccelConfig, LayerDesc};
 use zebra::backend::reference::{RefSpec, ReferenceBackend};
 use zebra::backend::InferenceBackend;
-use zebra::coordinator::{BackendExecutor, Server, ServerConfig};
+use zebra::coordinator::{
+    BackendExecutor, Server, ServerConfig, SubmitOutcome, SubmitRequest,
+};
 use zebra::tensor::Tensor;
 use zebra::util::prng::Rng;
 
@@ -37,6 +39,7 @@ fn coordinator_serves_end_to_end_on_the_reference_backend() {
             max_wait: Duration::from_millis(1),
             workers: 2,
             max_queue: 256,
+            max_batch: 0,
             ship_spills: None,
             spill_sink: None,
         },
@@ -69,12 +72,20 @@ fn batching_engages_over_the_reference_backend() {
             max_wait: Duration::from_millis(20),
             workers: 1,
             max_queue: 1024,
+            max_batch: 0,
             ship_spills: None,
             spill_sink: None,
         },
     ));
     let rxs: Vec<_> = (0..16)
-        .map(|i| srv.submit(noise_image(8, i as u64)).unwrap())
+        .map(|i| {
+            let (tx, rx) = std::sync::mpsc::channel();
+            let req = SubmitRequest::new(noise_image(8, i as u64));
+            match srv.submit(req, tx) {
+                SubmitOutcome::Enqueued { .. } => rx,
+                other => panic!("expected admission, got {other:?}"),
+            }
+        })
         .collect();
     for rx in rxs {
         rx.recv().unwrap();
