@@ -1,7 +1,7 @@
 # Repo-level convenience targets.
 
 .PHONY: check ci bench-smoke train-smoke cluster-smoke loadgen-smoke \
-	perf-smoke simulate-smoke
+	perf-smoke simulate-smoke obs-smoke
 
 # Full gate: build + tests + fmt + clippy in both feature configs
 # (the pjrt config auto-skips when no XLA toolchain is present),
@@ -42,6 +42,15 @@ cluster-smoke:
 # the recipe.
 loadgen-smoke:
 	cd rust && ./loadgen_smoke.sh
+
+# Observability smoke: loopback cluster with tracing sampled 1-in-4
+# at the loadgen edge, a forced-shed admission budget, and flight
+# recorders on both nodes. Gates the flight dump (valid JSON-lines,
+# rendered by `zebra obs replay`), the unified `zebra obs` scrape
+# (Prometheus + --json), and the BENCH_PR8.json emission. rust/check.sh
+# and ci.yml invoke this target rather than duplicating the recipe.
+obs-smoke:
+	cd rust && ./obs_smoke.sh
 
 # Block-sparse kernel never-regress gate: run the perf_hotpath bench
 # in smoke mode with the guard armed — the masked conv must be faster

@@ -54,6 +54,12 @@ make -C .. cluster-smoke
 echo "== loadgen smoke: mixed-priority overload -> sheds, no faults"
 make -C .. loadgen-smoke
 
+# Obs smoke: traced loopback cluster under forced shed — the flight
+# dump must parse and replay, and `zebra obs` must scrape the unified
+# report live. Recipe in rust/obs_smoke.sh via the repo Makefile.
+echo "== obs smoke: traced cluster -> flight dump -> obs replay/scrape"
+make -C .. obs-smoke
+
 # Perf smoke: the block-sparse kernel never-regress gate — the masked
 # conv must beat the dense kernel at 70% zero blocks (smoke-sized
 # shapes, BENCH_PR5.json emitted at the repo root). Recipe in the

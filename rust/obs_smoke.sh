@@ -1,0 +1,95 @@
+#!/usr/bin/env bash
+# rust/obs_smoke.sh — observability smoke gate: a loopback cluster
+# (worker + router, ephemeral ports) with distributed tracing sampled
+# 1-in-4 at the loadgen edge, a deliberately tiny admission budget so
+# overload sheds are certain, and flight recorders on both nodes.
+# Passes only when the whole observability plane holds together:
+#
+#   - loadgen's traced run completes with sheds and zero faults;
+#   - the router's terminal shed events dumped a flight ring to
+#     --flight-dir, and `zebra obs replay` parses it strictly
+#     (JSON-lines) and renders shed events + trace waterfalls;
+#   - `zebra obs --addr ROUTER` serves the unified report as both
+#     Prometheus text and JSON;
+#   - `--bench-json` (via ZEBRA_BENCH_OUT) emitted BENCH_PR8.json.
+#
+# `make obs-smoke` runs this; rust/check.sh and
+# .github/workflows/ci.yml invoke that target.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+cargo build --release --no-default-features
+BIN=target/release/zebra
+
+tmp=$(mktemp -d)
+pids=()
+cleanup() {
+  for p in ${pids[@]+"${pids[@]}"}; do kill "$p" 2>/dev/null || true; done
+  rm -rf "$tmp"
+}
+trap cleanup EXIT
+
+# Harvest the "... listening on HOST:PORT" line a node prints.
+wait_addr() {
+  local log="$1" i addr
+  for i in $(seq 1 100); do
+    addr=$(sed -n 's/.*listening on \([0-9.]*:[0-9]*\).*/\1/p' "$log" | head -n1)
+    if [ -n "$addr" ]; then
+      echo "$addr"
+      return 0
+    fi
+    sleep 0.1
+  done
+  echo "timed out waiting for an address in $log" >&2
+  cat "$log" >&2
+  return 1
+}
+
+# --run-s bounds every node's lifetime so a wedged smoke run cannot
+# outlive CI even if the cleanup trap is skipped.
+"$BIN" cluster-worker --model ref-tiny --flush-us 2000 --max-batch 4 \
+  --flight-dir "$tmp/fl" --port 0 --run-s 120 >"$tmp/w1.log" 2>&1 &
+pids+=($!)
+W1=$(wait_addr "$tmp/w1.log")
+
+# --max-outstanding 2 --max-attempts 1 makes sheds certain (same
+# recipe as loadgen_smoke.sh), and every shed is a terminal event that
+# dumps the router's flight ring to --flight-dir.
+"$BIN" cluster-router --workers "$W1" --max-outstanding 2 \
+  --max-attempts 1 --flight-dir "$tmp/fl" --port 0 --run-s 120 \
+  >"$tmp/r.log" 2>&1 &
+pids+=($!)
+R=$(wait_addr "$tmp/r.log")
+
+# The loadgen edge assigns trace ids, samples 1-in-4, polls the live
+# report every 25 ms, and writes the machine-readable run summary.
+ZEBRA_BENCH_SMOKE=1 ZEBRA_BENCH_OUT="$tmp/BENCH_PR8.json" \
+  "$BIN" loadgen --addr "$R" --requests 240 --conns 8 \
+  --priority mixed --keys 4 --hw 8 --trace-sample 4 --scrape-ms 25 \
+  --expect-sheds --fail-on-error
+
+# BENCH_PR8.json: emitted where ZEBRA_BENCH_OUT pointed, with the
+# run summary + the scraped time series + the cluster report.
+test -s "$tmp/BENCH_PR8.json"
+grep -q '"bench"' "$tmp/BENCH_PR8.json"
+grep -q '"trace"' "$tmp/BENCH_PR8.json"
+grep -q '"scrape"' "$tmp/BENCH_PR8.json"
+
+# Flight dump: the sheds above are terminal events, so the router must
+# have dumped its ring. `zebra obs replay` parses the JSON-lines
+# strictly (any malformed line is a hard error) and renders it.
+FLIGHT="$tmp/fl/flight-router.jsonl"
+test -s "$FLIGHT"
+"$BIN" obs replay "$FLIGHT" >"$tmp/replay.txt"
+grep -q 'shed_' "$tmp/replay.txt"
+grep -q 'terminal events' "$tmp/replay.txt"
+
+# Unified export plane, both renderings, against the live router.
+"$BIN" obs --addr "$R" >"$tmp/obs.prom"
+grep -q '^zebra_responses_total' "$tmp/obs.prom"
+grep -q '^zebra_stage_nanos_total{stage="router.dispatch"}' "$tmp/obs.prom"
+"$BIN" obs --addr "$R" --json >"$tmp/obs.json"
+grep -q '"counters"' "$tmp/obs.json"
+grep -q '"telemetry"' "$tmp/obs.json"
+
+echo "obs smoke OK (router $R, worker $W1: traces sampled, sheds in the flight dump, obs scrape live)"

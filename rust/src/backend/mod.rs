@@ -41,6 +41,10 @@ pub struct ModelOutput {
     /// Elements per block (`B*B`) for each mask — what converts mask
     /// counts into Eq. 2 bytes.
     pub block_elems: Vec<usize>,
+    /// Wall nanoseconds each Zebra layer spent (conv + prune/encode),
+    /// parallel to `masks`. Backends that do not time per layer leave
+    /// it empty; trace assembly then emits zero-length layer spans.
+    pub layer_nanos: Vec<u64>,
 }
 
 /// A model-execution engine: load/own model variants for a key, execute

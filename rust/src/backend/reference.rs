@@ -404,9 +404,11 @@ impl ReferenceBackend {
         }
         let mut masks = Vec::with_capacity(self.spec.spills.len());
         let mut block_elems = Vec::with_capacity(self.spec.spills.len());
+        let mut layer_nanos = Vec::with_capacity(self.spec.spills.len());
         let mut act = x.clone();
         let mut prev_mask: Option<BlockMask> = None;
         for (i, sp) in self.spec.spills.iter().enumerate() {
+            let layer_t = std::time::Instant::now();
             let mut out = self.conv_layer(i, &act, prev_mask.as_ref());
             let thr = Thresholds::Scalar(self.spec.t_obj);
             let mask = match &mut capture {
@@ -423,11 +425,12 @@ impl ReferenceBackend {
             }
             masks.push(mask_to_tensor(&mask));
             block_elems.push(sp.block * sp.block);
+            layer_nanos.push(layer_t.elapsed().as_nanos() as u64);
             prev_mask = Some(mask);
             act = out;
         }
         let logits = self.head(&act);
-        Ok(ModelOutput { logits, masks, block_elems })
+        Ok(ModelOutput { logits, masks, block_elems, layer_nanos })
     }
 
     /// Global average pool + linear classifier.

@@ -48,11 +48,13 @@ pub(crate) fn expose_worker(
 ) -> Result<()> {
     let ship_upstream = args.get("ship-upstream").map(String::from);
     let image_hw = exec.image_hw();
+    let mut cfg = opts.server_config(image_hw)?;
+    cfg.flight = opts.flight_recorder("worker");
     let node = WorkerNode::start(
         exec,
         &opts.listen_addr(),
         // WorkerNode wires the spill sink to the upstream itself.
-        opts.server_config(image_hw)?,
+        cfg,
         ship_upstream,
     )?;
     println!("cluster-worker listening on {}", node.local_addr());
@@ -91,6 +93,7 @@ pub fn run_router(args: &Args) -> Result<()> {
     cfg.heartbeat_every = Duration::from_millis(
         args.get_usize("heartbeat-ms", 250)? as u64,
     );
+    cfg.flight = opts.flight_recorder("router");
     let n_workers = cfg.workers.len();
     let mode = cfg.mode;
     let router = Router::start(cfg, &opts.listen_addr())?;
@@ -104,6 +107,13 @@ pub fn run_router(args: &Args) -> Result<()> {
     opts.hold();
     println!("cluster-router stats: {}", router.stats().summary());
     print!("{}", router.telemetry().snapshot().report(None));
+    // Exit-time dump so `--flight-dir` always leaves a post-mortem
+    // file, even when nothing terminal happened during the run.
+    if let Some(f) = router.flight() {
+        if let Some(Err(e)) = f.dump() {
+            eprintln!("flight dump failed: {e}");
+        }
+    }
     router.shutdown();
     Ok(())
 }

@@ -10,6 +10,16 @@
 //! ([`coordinator::Metrics`](crate::coordinator::Metrics)) the server
 //! and router use, so p50/p95/p99 mean the same thing at every tier.
 //!
+//! Loadgen is also the trace edge: with `--trace-sample N` it assigns
+//! the deterministic trace id for every request, the cluster assembles
+//! spans hop by hop, and the edge closes each returned record with a
+//! `client.rtt` span — the span envelope over the client-observed wall
+//! is reported as trace coverage. `--scrape-ms M` polls the unified
+//! observability report ([`ObsReport`]) on a side connection while the
+//! run is in flight, and `--bench-json` (or a non-empty
+//! `ZEBRA_BENCH_OUT`) writes the whole run as machine-readable
+//! `BENCH_PR8.json` (see `rust/docs/observability.md`).
+//!
 //! Admission-control sheds are first-class outcomes, not faults:
 //! every submitted request ends as exactly one of ok / shed / failed
 //! (the run errors out if that accounting ever leaves a gap), and
@@ -17,7 +27,9 @@
 //! the check for overload smoke tests: the run fails unless the
 //! cluster shed at least one request.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -26,8 +38,12 @@ use super::Args;
 use crate::backend::synth_images;
 use crate::cluster::{ClusterClient, ClusterError};
 use crate::coordinator::Metrics;
+use crate::obs::{
+    now_ns, render_waterfall, sampled, trace_id_for, ObsReport, TraceRecord,
+};
 use crate::telemetry::Telemetry;
 use crate::tensor::{read_zten, Tensor};
+use crate::util::json::{self, Value};
 
 /// Per-class outcome counts, indexed by `Priority::as_u8`.
 #[derive(Debug, Default, Clone)]
@@ -55,6 +71,25 @@ impl Tally {
     }
 }
 
+/// Everything one loadgen connection thread learned: outcome counts
+/// plus the trace side (coverage sum over sampled responses and the
+/// first full record, kept for the waterfall print).
+#[derive(Default)]
+struct ThreadOut {
+    tally: Tally,
+    traced: usize,
+    coverage_sum: f64,
+    first_trace: Option<TraceRecord>,
+}
+
+/// One `--scrape-ms` poll of the cluster's live report.
+struct Scrape {
+    t_ms: u64,
+    responses: u64,
+    shed: u64,
+    routed: u64,
+}
+
 pub fn run(args: &Args) -> Result<()> {
     // Flag validation happens before any socket is touched.
     let opts = super::opts::ServeOpts::from_args(args)?;
@@ -79,6 +114,11 @@ pub fn run(args: &Args) -> Result<()> {
     let seed = args.get_usize("seed", 0xC1A5)? as u64;
     let strict = args.get("fail-on-error").is_some();
     let expect_sheds = args.get("expect-sheds").is_some();
+    let scrape_ms = args.get_usize("scrape-ms", 0)?;
+    let bench_env = std::env::var_os("ZEBRA_BENCH_OUT")
+        .is_some_and(|p| !p.is_empty());
+    let bench_json = args.get("bench-json").is_some() || bench_env;
+    let trace_every = opts.trace_sample;
     let mix = opts.priority;
 
     // Test set: a `.zten` export (--images F.zten) or deterministic
@@ -104,13 +144,18 @@ pub fn run(args: &Args) -> Result<()> {
     let hist = Metrics::new();
     println!(
         "loadgen: {n} requests of {hw}px images -> {addr} \
-         ({} target, {conns} conns, {} priority)",
+         ({} target, {conns} conns, {} priority{})",
         if qps > 0.0 {
             format!("{qps:.0} req/s")
         } else {
             "closed-loop".to_string()
         },
-        mix.name()
+        mix.name(),
+        if trace_every > 0 {
+            format!(", tracing 1-in-{trace_every}")
+        } else {
+            String::new()
+        }
     );
 
     // Client-side telemetry: time spent building+submitting requests
@@ -118,19 +163,56 @@ pub fn run(args: &Args) -> Result<()> {
     let telemetry = Telemetry::new();
     let printed = AtomicUsize::new(0);
 
+    // --scrape-ms: a side connection polls the unified report while
+    // the run is live, so the time series captures the cluster *under*
+    // load, not just the exit-time aggregate.
+    let done = Arc::new(AtomicBool::new(false));
+    let scraper = if scrape_ms > 0 {
+        let addr = addr.clone();
+        let done = Arc::clone(&done);
+        let t0 = Instant::now();
+        Some(std::thread::spawn(move || -> Vec<Scrape> {
+            let mut out = Vec::new();
+            let client = match ClusterClient::connect(&addr) {
+                Ok(c) => c,
+                Err(_) => return out,
+            };
+            while !done.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(scrape_ms as u64));
+                if let Ok(r) = client.obs_report() {
+                    out.push(Scrape {
+                        t_ms: t0.elapsed().as_millis() as u64,
+                        responses: r.stats.aggregate.responses,
+                        shed: r.stats.aggregate.shed_low
+                            + r.stats.aggregate.shed_normal
+                            + r.stats.aggregate.shed_high
+                            + r.stats.shed_low
+                            + r.stats.shed_normal
+                            + r.stats.shed_high,
+                        routed: r.stats.routed,
+                    });
+                }
+            }
+            client.shutdown();
+            out
+        }))
+    } else {
+        None
+    };
+
     let t0 = Instant::now();
-    let tally = std::thread::scope(|scope| -> Result<Tally> {
+    let run = std::thread::scope(|scope| -> Result<ThreadOut> {
         let mut handles = Vec::with_capacity(conns);
         for c in 0..conns {
             // Request indices are striped across connections so the
-            // priority cycle and key spread stay deterministic
-            // regardless of --conns.
+            // priority cycle, key spread, and trace-id assignment stay
+            // deterministic regardless of --conns.
             let addr = &addr;
             let images = &images;
             let hist = &hist;
             let telemetry = &telemetry;
             let printed = &printed;
-            handles.push(scope.spawn(move || -> Result<Tally> {
+            handles.push(scope.spawn(move || -> Result<ThreadOut> {
                 let client = ClusterClient::connect(addr)?;
                 let st_submit = telemetry.stage("loadgen.submit");
                 let st_wait = telemetry.stage("loadgen.wait");
@@ -157,49 +239,97 @@ pub fn run(args: &Args) -> Result<()> {
                         images.data()[idx * per..(idx + 1) * per]
                             .to_vec(),
                     );
-                    st_submit.add_bytes((img.data().len() * 4) as u64);
+                    let img_bytes = (img.data().len() * 4) as u64;
+                    st_submit.add_bytes(img_bytes);
                     let prio = mix.for_request(g);
                     let key =
                         if keys > 0 { Some((g % keys) as u64) } else { None };
+                    // The edge owns trace identity: id from (seed, g),
+                    // sampling decided here and honored by every hop.
+                    let (tid, samp) = if trace_every > 0 {
+                        let tid = trace_id_for(seed, g as u64);
+                        (tid, sampled(tid, trace_every))
+                    } else {
+                        (0, false)
+                    };
+                    let sub_ns = now_ns();
                     rxs.push((
                         prio,
-                        client.submit_request(&img, key, prio, deadline)?,
+                        samp,
+                        sub_ns,
+                        img_bytes,
+                        client.submit_traced(
+                            &img, key, prio, deadline, tid, samp,
+                        )?,
                     ));
                 }
-                let mut tally = Tally::default();
-                for (prio, rx) in rxs {
+                let mut out = ThreadOut::default();
+                for (prio, samp, sub_ns, img_bytes, rx) in rxs {
                     let _t = st_wait.time();
                     let slot = prio.as_u8() as usize;
                     match rx.recv() {
                         Ok(Ok(resp)) => {
-                            tally.ok[slot] += 1;
+                            out.tally.ok[slot] += 1;
                             hist.record_latency_us(
                                 resp.wall.as_micros() as u64,
                             );
+                            if samp {
+                                if let Some(mut rec) = resp.trace {
+                                    let wall_ns = resp
+                                        .wall
+                                        .as_nanos()
+                                        .min(u64::MAX as u128)
+                                        as u64;
+                                    out.coverage_sum +=
+                                        envelope_coverage(&rec, wall_ns);
+                                    out.traced += 1;
+                                    rec.push(
+                                        "client.rtt",
+                                        sub_ns,
+                                        sub_ns.saturating_add(wall_ns),
+                                        img_bytes,
+                                        0,
+                                    );
+                                    if out.first_trace.is_none() {
+                                        out.first_trace = Some(rec);
+                                    }
+                                }
+                            }
                         }
                         Ok(Err(e)) if e.is_overloaded() => {
-                            tally.shed[slot] += 1;
+                            out.tally.shed[slot] += 1;
                         }
                         Ok(Err(ClusterError::Failed(msg))) => {
                             if printed.fetch_add(1, Ordering::Relaxed) < 3 {
                                 eprintln!("loadgen: request failed: {msg}");
                             }
-                            tally.failed += 1;
+                            out.tally.failed += 1;
                         }
-                        Ok(Err(_)) | Err(_) => tally.failed += 1,
+                        Ok(Err(_)) | Err(_) => out.tally.failed += 1,
                     }
                 }
                 client.shutdown();
-                Ok(tally)
+                Ok(out)
             }));
         }
-        let mut total = Tally::default();
+        let mut total = ThreadOut::default();
         for h in handles {
-            total.absorb(&h.join().expect("loadgen thread panicked")?);
+            let got = h.join().expect("loadgen thread panicked")?;
+            total.tally.absorb(&got.tally);
+            total.traced += got.traced;
+            total.coverage_sum += got.coverage_sum;
+            if total.first_trace.is_none() {
+                total.first_trace = got.first_trace;
+            }
         }
         Ok(total)
     })?;
     let wall = t0.elapsed();
+    done.store(true, Ordering::Relaxed);
+    let scrapes = scraper
+        .map(|h| h.join().unwrap_or_default())
+        .unwrap_or_default();
+    let tally = &run.tally;
     let (ok, shed) = (tally.ok_total(), tally.shed_total());
     println!(
         "loadgen: {ok}/{n} ok, {shed} shed \
@@ -218,16 +348,36 @@ pub fn run(args: &Args) -> Result<()> {
         hist.latency_percentile_us(0.95),
         hist.latency_percentile_us(0.99)
     );
+    if run.traced > 0 {
+        println!(
+            "traces: {} sampled responses, span envelope covers {:.1}% \
+             of client-observed wall on average",
+            run.traced,
+            100.0 * run.coverage_sum / run.traced as f64
+        );
+    }
+    if !scrapes.is_empty() {
+        let last = scrapes.last().expect("non-empty");
+        println!(
+            "scrape: {} samples at {scrape_ms}ms (last: {} responses, \
+             {} shed, {} routed)",
+            scrapes.len(),
+            last.responses,
+            last.shed,
+            last.routed
+        );
+    }
 
-    // Cluster-wide view: aggregated worker metrics + router counters.
-    // A bare worker answers with a plain snapshot, which fails the
-    // ClusterStats parse — report and move on.
-    match ClusterClient::connect(&addr).and_then(|c| {
-        let s = c.stats();
+    // Cluster-wide view: the unified report (aggregated worker
+    // counters + router counters + merged telemetry stages). A bare
+    // worker answers with the router section zeroed.
+    let report = match ClusterClient::connect(&addr).and_then(|c| {
+        let r = c.obs_report();
         c.shutdown();
-        s
+        r
     }) {
-        Ok(stats) => {
+        Ok(report) => {
+            let stats = &report.stats;
             println!("cluster: {}", stats.summary());
             println!(
                 "worker compute threads: {} across {} alive workers \
@@ -254,10 +404,31 @@ pub fn run(args: &Args) -> Result<()> {
                     }
                 );
             }
+            if !report.telemetry.stages.is_empty() {
+                println!("cluster telemetry (merged across nodes):");
+                print!("{}", report.telemetry.report(None));
+            }
+            Some(report)
         }
-        Err(e) => println!("(no cluster stats from {addr}: {e:#})"),
-    }
+        Err(e) => {
+            println!("(no cluster stats from {addr}: {e:#})");
+            None
+        }
+    };
     print!("{}", telemetry.snapshot().report(None));
+    // One sampled request's full waterfall, rendered the same way
+    // `zebra obs replay` renders flight dumps.
+    if let Some(rec) = &run.first_trace {
+        print!("\n{}", render_waterfall(rec));
+    }
+
+    if bench_json {
+        let path = write_bench_json(
+            n, conns, qps, scrape_ms, wall, &hist, &run, &scrapes,
+            report.as_ref(),
+        )?;
+        println!("bench report written to {}", path.display());
+    }
 
     // The no-silent-drops guarantee: every request ended as exactly
     // one of ok / shed / failed. A gap here is a protocol bug.
@@ -279,4 +450,121 @@ pub fn run(args: &Args) -> Result<()> {
         tally.failed
     );
     Ok(())
+}
+
+/// Fraction of `wall_ns` covered by the record's span envelope (min
+/// start to max end across the hops' spans). Clock skew between nodes
+/// can stretch the envelope past the wall, so clamp to 1.0; an empty
+/// record covers nothing.
+fn envelope_coverage(rec: &TraceRecord, wall_ns: u64) -> f64 {
+    let lo = rec.spans.iter().map(|s| s.start_ns).min();
+    let hi = rec.spans.iter().map(|s| s.end_ns).max();
+    match (lo, hi) {
+        (Some(lo), Some(hi)) => {
+            let span = hi.saturating_sub(lo);
+            (span as f64 / wall_ns.max(1) as f64).min(1.0)
+        }
+        _ => 0.0,
+    }
+}
+
+/// Emit the machine-readable run report. `ZEBRA_BENCH_OUT` overrides
+/// the path (CI artifacts, side-by-side A/B runs); the default is
+/// `BENCH_PR8.json` in the working directory — generated output, never
+/// committed. Schema documented in `rust/docs/observability.md`.
+#[allow(clippy::too_many_arguments)]
+fn write_bench_json(
+    n: usize,
+    conns: usize,
+    qps: f32,
+    scrape_ms: usize,
+    wall: Duration,
+    hist: &Metrics,
+    run: &ThreadOut,
+    scrapes: &[Scrape],
+    report: Option<&ObsReport>,
+) -> Result<std::path::PathBuf> {
+    let num = Value::Num;
+    let obj = |pairs: Vec<(&str, Value)>| {
+        Value::Object(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect::<BTreeMap<_, _>>(),
+        )
+    };
+    let tally = &run.tally;
+    let class3 = |v: &[usize; 3]| {
+        obj(vec![
+            ("low", num(v[0] as f64)),
+            ("normal", num(v[1] as f64)),
+            ("high", num(v[2] as f64)),
+        ])
+    };
+    let series = scrapes
+        .iter()
+        .map(|s| {
+            obj(vec![
+                ("t_ms", num(s.t_ms as f64)),
+                ("responses", num(s.responses as f64)),
+                ("shed", num(s.shed as f64)),
+                ("routed", num(s.routed as f64)),
+            ])
+        })
+        .collect();
+    let root = obj(vec![
+        ("bench", Value::Str("loadgen/pr8".into())),
+        ("requests", num(n as f64)),
+        ("conns", num(conns as f64)),
+        ("target_qps", num(qps as f64)),
+        ("wall_s", num(wall.as_secs_f64())),
+        (
+            "throughput_rps",
+            num(tally.ok_total() as f64 / wall.as_secs_f64().max(1e-9)),
+        ),
+        (
+            "latency",
+            obj(vec![
+                ("p50_us", num(hist.latency_percentile_us(0.5) as f64)),
+                ("p95_us", num(hist.latency_percentile_us(0.95) as f64)),
+                ("p99_us", num(hist.latency_percentile_us(0.99) as f64)),
+            ]),
+        ),
+        ("ok", class3(&tally.ok)),
+        ("shed", class3(&tally.shed)),
+        ("failed", num(tally.failed as f64)),
+        (
+            "trace",
+            obj(vec![
+                ("sampled", num(run.traced as f64)),
+                (
+                    "mean_span_coverage",
+                    num(if run.traced > 0 {
+                        run.coverage_sum / run.traced as f64
+                    } else {
+                        0.0
+                    }),
+                ),
+            ]),
+        ),
+        (
+            "scrape",
+            obj(vec![
+                ("interval_ms", num(scrape_ms as f64)),
+                ("samples", num(scrapes.len() as f64)),
+                ("series", Value::Array(series)),
+            ]),
+        ),
+        (
+            "cluster",
+            report.map_or(Value::Null, |r| r.to_json()),
+        ),
+    ]);
+    let path = match std::env::var_os("ZEBRA_BENCH_OUT") {
+        Some(p) if !p.is_empty() => std::path::PathBuf::from(p),
+        _ => std::path::PathBuf::from("BENCH_PR8.json"),
+    };
+    std::fs::write(&path, json::to_string(&root) + "\n")
+        .with_context(|| format!("writing bench report {path:?}"))?;
+    Ok(path)
 }

@@ -11,6 +11,7 @@
 mod analyze;
 mod cluster;
 mod loadgen;
+mod obs;
 pub mod opts;
 pub mod serve;
 mod simulate;
@@ -104,6 +105,10 @@ commands:
             [--max-batch N]   per-batch real-item cap (0 = backend max;
                               shrinks further under observed load)
             [--ship-codec NAME [--ship-block B]]  frame batches as .zspill
+            [--trace-sample N]  trace 1-in-N requests (deterministic
+                                from the trace id; 1 = every request)
+            [--flight-dir DIR]  dump the flight-recorder ring as
+                                JSON-lines on terminal events + exit
             [--port P]        expose the server over TCP instead of
                               replaying (0 = ephemeral; prints the
                               bound address) [--host H] [--run-s N]
@@ -115,9 +120,11 @@ commands:
             [--port P] [--host H] [--run-s N]
             [--ship-upstream HOST:PORT]  ship .zspill batch frames to
                                          the router
+            [--flight-dir DIR]
   cluster-router --workers HOST:P1,HOST:P2[,...]
             [--mode rr|hash]  round-robin or consistent-hash-by-key
             [--max-outstanding N] [--max-attempts N] [--heartbeat-ms MS]
+            [--flight-dir DIR]
             [--port P] [--host H] [--run-s N]
   loadgen   --addr HOST:PORT  drive a router at a target rate; prints
                               p50/p95/p99 latency + per-class
@@ -134,6 +141,21 @@ commands:
             [--expect-sheds]  error unless admission control shed >= 1
                               request (overload smoke tests)
             [--fail-on-error] error on faults (sheds are not faults)
+            [--trace-sample N]  assign trace ids at the edge, sample
+                                1-in-N, report span coverage of the
+                                client-observed wall
+            [--scrape-ms MS]  poll the live obs report on a side
+                              connection while the run is in flight
+            [--bench-json]    write BENCH_PR8.json (machine-readable
+                              run report; ZEBRA_BENCH_OUT overrides
+                              the path and also enables this)
+  obs       --addr HOST:PORT  scrape one unified observability report
+                              (cluster counters + latency + Eq. 2-3
+                              bandwidth + merged telemetry stages) as
+                              Prometheus text [--json for JSON]
+  obs replay FILE.jsonl       render a flight-recorder dump: one
+                              waterfall per sampled trace + terminal
+                              events (shed / deadline-miss / ...)
   simulate  --trace DIR       accelerator simulation of a trace
             | --backend reference [--model KEY] [--images N]
                                   [--weights DIR] [--seed S]
@@ -155,6 +177,11 @@ commands:
 
 /// CLI entry point (called by `main`).
 pub fn run(argv: &[String]) -> Result<()> {
+    // `obs` owns its argv: `obs replay FILE` is the CLI's one
+    // positional form, which the standard parser rejects.
+    if argv.first().map(String::as_str) == Some("obs") {
+        return obs::run(argv);
+    }
     let args = Args::parse(argv)?;
     match args.command.as_str() {
         "" | "help" | "--help" => {
@@ -379,6 +406,44 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("--flush-us"), "{e}");
+    }
+
+    #[test]
+    fn obs_validates_its_forms() {
+        // Live scrape needs an address (and suggests the replay form).
+        let e = run(&v(&["obs"])).unwrap_err().to_string();
+        assert!(e.contains("--addr") && e.contains("replay"), "{e}");
+        // Replay wants exactly one file operand.
+        let e = run(&v(&["obs", "replay"])).unwrap_err().to_string();
+        assert!(e.contains("usage"), "{e}");
+        let e = run(&v(&["obs", "replay", "a", "b"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("usage"), "{e}");
+        // A missing dump file errors with its path.
+        let e = run(&v(&["obs", "replay", "/no/such/flight.jsonl"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("flight.jsonl"), "{e}");
+        // A valid dump replays: one trace waterfall + one event line.
+        let dir = std::env::temp_dir()
+            .join(format!("zebra-obs-cli-{}", std::process::id()));
+        let f = crate::obs::FlightRecorder::new(
+            "cli",
+            8,
+            Some(dir.clone()),
+        );
+        let mut rec = crate::obs::TraceRecord::new(77);
+        rec.push("serve.execute", 100, 900, 0, 2);
+        f.record_trace(rec);
+        f.record_event(
+            77,
+            crate::obs::TerminalKind::ShedLow,
+            "over cap",
+        );
+        let path = f.dump().unwrap().unwrap();
+        run(&v(&["obs", "replay", path.to_str().unwrap()])).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

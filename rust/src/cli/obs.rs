@@ -1,0 +1,84 @@
+//! `zebra obs` — the unified observability surface:
+//!
+//! ```text
+//! zebra obs --addr HOST:PORT           # Prometheus text exposition
+//! zebra obs --addr HOST:PORT --json    # same registry as JSON
+//! zebra obs replay FILE.jsonl          # render a flight dump
+//! ```
+//!
+//! The live forms scrape one [`ObsReport`] (cluster counters, latency
+//! percentiles, Eq. 2-3 bandwidth accounting, and the merged telemetry
+//! stages) from a router or worker over the `MetricsReq` wire. The
+//! replay form parses a flight-recorder dump (JSON-lines written on
+//! shed / deadline-miss / conn-error / worker-death, or at node exit)
+//! and renders every sampled request as a waterfall plus the terminal
+//! events in ring order. Formats are documented in
+//! `rust/docs/observability.md`.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::Args;
+use crate::cluster::ClusterClient;
+use crate::obs::flight::parse_jsonl;
+use crate::obs::{render_waterfall, FlightEntry};
+use crate::util::json;
+
+/// Entry point. Takes raw argv (not parsed [`Args`]) because `replay`
+/// is the CLI's one positional form — everything else goes through the
+/// standard `--flag` parser.
+pub fn run(argv: &[String]) -> Result<()> {
+    if argv.get(1).map(String::as_str) == Some("replay") {
+        anyhow::ensure!(
+            argv.len() == 3,
+            "usage: zebra obs replay FILE.jsonl"
+        );
+        return replay(Path::new(&argv[2]));
+    }
+    let args = Args::parse(argv)?;
+    let addr = args.get("addr").context(
+        "zebra obs needs --addr HOST:PORT (or: zebra obs replay FILE)",
+    )?;
+    let client = ClusterClient::connect(addr)?;
+    let report = client.obs_report()?;
+    client.shutdown();
+    if args.get("json").is_some() {
+        println!("{}", json::to_string(&report.to_json()));
+    } else {
+        print!("{}", report.prometheus());
+    }
+    Ok(())
+}
+
+/// Render a flight dump: one waterfall per sampled trace, one line per
+/// terminal event, in the order the ring recorded them.
+fn replay(path: &Path) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("zebra obs replay {path:?}"))?;
+    let entries = parse_jsonl(&text)
+        .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let (mut traces, mut events) = (0usize, 0usize);
+    for entry in &entries {
+        match entry {
+            FlightEntry::Trace(rec) => {
+                traces += 1;
+                print!("{}", render_waterfall(rec));
+            }
+            FlightEntry::Event { trace_id, kind, detail, .. } => {
+                events += 1;
+                println!(
+                    "event {:<13} trace {:#018x}  {}",
+                    kind.name(),
+                    trace_id,
+                    detail
+                );
+            }
+        }
+    }
+    println!(
+        "{}: {traces} traces, {events} terminal events",
+        path.display()
+    );
+    Ok(())
+}

@@ -9,6 +9,8 @@
 //! `serve::build_executor`, which is already the one shared builder
 //! for it.
 
+use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, ensure, Result};
@@ -16,6 +18,8 @@ use anyhow::{bail, ensure, Result};
 use super::Args;
 use crate::compress;
 use crate::coordinator::{Priority, ServerConfig, ShipSpills};
+use crate::obs::flight::FLIGHT_CAPACITY;
+use crate::obs::FlightRecorder;
 
 /// `--priority low|normal|high|mixed`: one fixed class for every
 /// request, or (loadgen) a deterministic low/normal/high cycle that
@@ -83,6 +87,13 @@ pub struct ServeOpts {
     pub run_s: u64,
     /// `--priority low|normal|high|mixed` (client-side class choice).
     pub priority: PriorityMix,
+    /// `--trace-sample N`: trace 1-in-N requests (0 = tracing off,
+    /// 1 = every request). Sampling is deterministic from the trace id
+    /// ([`crate::obs::sampled`]), so every node agrees.
+    pub trace_sample: usize,
+    /// `--flight-dir DIR`: terminal events (sheds, deadline misses,
+    /// worker deaths) dump the node's flight ring here as JSON-lines.
+    pub flight_dir: Option<PathBuf>,
 }
 
 impl ServeOpts {
@@ -125,6 +136,8 @@ impl ServeOpts {
         let run_s = args.get_usize("run-s", 0)? as u64;
         let priority =
             PriorityMix::parse(&args.get_or("priority", "normal"))?;
+        let trace_sample = args.get_usize("trace-sample", 0)?;
+        let flight_dir = args.get("flight-dir").map(PathBuf::from);
         Ok(ServeOpts {
             flush,
             queue,
@@ -135,7 +148,24 @@ impl ServeOpts {
             port,
             run_s,
             priority,
+            trace_sample,
+            flight_dir,
         })
+    }
+
+    /// The node's flight recorder: present whenever tracing or a dump
+    /// directory is on (an in-memory ring is still useful for tests
+    /// and the exit-time view; it only writes when `--flight-dir` is
+    /// set). `node` names the dump file (`flight-<node>.jsonl`).
+    pub fn flight_recorder(&self, node: &str) -> Option<Arc<FlightRecorder>> {
+        if self.flight_dir.is_none() && self.trace_sample == 0 {
+            return None;
+        }
+        Some(Arc::new(FlightRecorder::new(
+            node,
+            FLIGHT_CAPACITY,
+            self.flight_dir.clone(),
+        )))
     }
 
     /// The coordinator config these flags describe. `image_hw` is the
@@ -148,6 +178,7 @@ impl ServeOpts {
             max_batch: self.max_batch,
             ship_spills: self.ship_spills(image_hw)?,
             spill_sink: None,
+            flight: None,
         })
     }
 
@@ -211,6 +242,9 @@ mod tests {
         assert_eq!(o.port, None);
         assert_eq!(o.run_s, 0);
         assert_eq!(o.priority, PriorityMix::Fixed(Priority::Normal));
+        assert_eq!(o.trace_sample, 0);
+        assert_eq!(o.flight_dir, None);
+        assert!(o.flight_recorder("node").is_none());
         assert_eq!(o.listen_addr(), "127.0.0.1:0");
         let cfg = o.server_config(8).unwrap();
         assert_eq!(cfg.max_queue, 1024);
@@ -224,7 +258,8 @@ mod tests {
             "--flush-us", "750", "--queue", "64", "--max-batch", "4",
             "--ship-codec", "zero-block", "--ship-block", "8",
             "--host", "0.0.0.0", "--port", "9000", "--run-s", "3",
-            "--priority", "high",
+            "--priority", "high", "--trace-sample", "4",
+            "--flight-dir", "/tmp/zebra-flight",
         ]))
         .unwrap();
         assert_eq!(o.flush, Duration::from_micros(750));
@@ -235,6 +270,13 @@ mod tests {
         assert_eq!(o.run_s, 3);
         assert_eq!(o.listen_addr(), "0.0.0.0:9000");
         assert_eq!(o.priority, PriorityMix::Fixed(Priority::High));
+        assert_eq!(o.trace_sample, 4);
+        assert_eq!(
+            o.flight_dir.as_deref(),
+            Some(std::path::Path::new("/tmp/zebra-flight"))
+        );
+        // A recorder exists (tracing on) but only writes when dumped.
+        assert!(o.flight_recorder("node").is_some());
         let cfg = o.server_config(8).unwrap();
         assert_eq!(cfg.max_wait, Duration::from_micros(750));
         assert_eq!(cfg.max_batch, 4);

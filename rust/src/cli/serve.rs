@@ -22,6 +22,7 @@ use crate::coordinator::server::BatchExecutor;
 use crate::coordinator::{
     reference_executor, Server, SubmitOutcome, SubmitRequest,
 };
+use crate::obs::{render_waterfall, sampled, trace_id_for};
 use crate::tensor::{read_zten, read_zten_i32, Tensor};
 
 pub fn run(args: &Args) -> Result<()> {
@@ -164,9 +165,13 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
     let per = 3 * hw * hw;
 
     // Server config comes whole from the shared flag surface
-    // (flush window, queue, max-batch, ship codec geometry).
+    // (flush window, queue, max-batch, ship codec geometry), plus the
+    // flight recorder when tracing/--flight-dir is on.
     let image_hw = exec.image_hw();
-    let server = Server::start(exec, opts.server_config(image_hw)?);
+    let flight = opts.flight_recorder("serve");
+    let mut cfg = opts.server_config(image_hw)?;
+    cfg.flight = flight.clone();
+    let server = Server::start(exec, cfg);
 
     let n_avail = images.shape()[0];
     let t0 = Instant::now();
@@ -181,8 +186,12 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
         // One shard key (the default) so the whole replay shares one
         // batch queue — same batching behavior the old static batcher
         // had. `--priority` picks the admission class.
-        let req = SubmitRequest::new(img)
+        let mut req = SubmitRequest::new(img)
             .with_priority(opts.priority.for_request(i));
+        if opts.trace_sample > 0 {
+            let tid = trace_id_for(synth_seed, i as u64);
+            req = req.with_trace(tid, sampled(tid, opts.trace_sample));
+        }
         let (tx, rx) = channel();
         match server.submit(req, tx) {
             SubmitOutcome::Enqueued { .. } => pending.push((idx, rx)),
@@ -203,10 +212,14 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
     }
     let answered = pending.len();
     let mut correct = 0usize;
+    let mut first_trace = None;
     for (idx, rx) in pending {
         let resp = rx.recv().context("request dropped")?;
         if resp.predicted as i32 == labels[idx] {
             correct += 1;
+        }
+        if first_trace.is_none() {
+            first_trace = resp.trace;
         }
     }
     let wall = t0.elapsed();
@@ -220,6 +233,16 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
     );
     println!("metrics: {}", server.metrics.summary());
     print!("{}", server.telemetry.snapshot().report(Some("serve.batch")));
+    // One sampled request's waterfall, as a taste of what `zebra obs
+    // replay` renders from a full flight dump.
+    if let Some(rec) = &first_trace {
+        print!("\n{}", render_waterfall(rec));
+    }
+    if let Some(f) = &flight {
+        if let Some(Err(e)) = f.dump() {
+            eprintln!("flight dump failed: {e}");
+        }
+    }
     server.shutdown();
     Ok(())
 }

@@ -22,6 +22,7 @@ use anyhow::{anyhow, Context, Result};
 use super::metrics::ClusterStats;
 use super::wire::{self, Frame, FrameType, WireResponse};
 use crate::coordinator::Priority;
+use crate::obs::{ObsReport, TraceRecord};
 use crate::tensor::Tensor;
 
 /// How long [`ClusterClient::stats`] waits for the router's answer.
@@ -33,6 +34,12 @@ const STATS_WAIT: Duration = Duration::from_secs(5);
 pub struct ClusterResponse {
     pub response: WireResponse,
     pub wall: Duration,
+    /// The request's trace record, present when the submit carried a
+    /// sampled trace id and the serving path was v3 end to end. Spans
+    /// from every hop (router dispatch, worker ingest, queue wait,
+    /// batch assembly, execution, per-layer prune/encode) — the edge
+    /// appends its own `client.rtt` on top.
+    pub trace: Option<TraceRecord>,
 }
 
 /// Why a submit did not produce a response. `Overloaded` is the
@@ -79,7 +86,7 @@ struct PendingEntry {
 
 type Waiters = Arc<Mutex<HashMap<u64, PendingEntry>>>;
 type StatsWaiters =
-    Arc<Mutex<HashMap<u64, Sender<Result<ClusterStats, String>>>>>;
+    Arc<Mutex<HashMap<u64, Sender<Result<ObsReport, String>>>>>;
 
 /// A connected cluster client.
 pub struct ClusterClient {
@@ -142,6 +149,22 @@ impl ClusterClient {
         priority: Priority,
         deadline: Option<Duration>,
     ) -> Result<Receiver<Delivery>> {
+        self.submit_traced(image, key, priority, deadline, 0, false)
+    }
+
+    /// [`ClusterClient::submit_request`] plus the edge-assigned trace
+    /// identity: the `trace_id` rides the v3 submit to every hop, and
+    /// `sampled` asks the serving path to assemble and return the
+    /// request's [`TraceRecord`] with the response.
+    pub fn submit_traced(
+        &self,
+        image: &Tensor,
+        key: Option<u64>,
+        priority: Priority,
+        deadline: Option<Duration>,
+        trace_id: u64,
+        sampled: bool,
+    ) -> Result<Receiver<Delivery>> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let key = key.unwrap_or(id);
         let (tx, rx) = channel();
@@ -152,7 +175,9 @@ impl ClusterClient {
         let bytes = Frame::new(
             FrameType::Submit,
             id,
-            wire::encode_submit(key, priority, deadline, image),
+            wire::encode_submit_traced(
+                key, priority, deadline, trace_id, sampled, image,
+            ),
         )
         .encode();
         if let Err(e) = self.write.lock().unwrap().write_all(&bytes) {
@@ -172,6 +197,13 @@ impl ClusterClient {
 
     /// Fetch cluster-wide stats from the router.
     pub fn stats(&self) -> Result<ClusterStats> {
+        Ok(self.obs_report()?.stats)
+    }
+
+    /// Fetch the unified observability report (stats + merged
+    /// telemetry stages) — what `zebra obs` and loadgen's `--scrape-ms`
+    /// poll. Against a v1/v2 node the telemetry section is empty.
+    pub fn obs_report(&self) -> Result<ObsReport> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
         self.pending_stats.lock().unwrap().insert(id, tx);
@@ -224,11 +256,16 @@ fn reader_loop(
                 let entry = pending.lock().unwrap().remove(&frame.id);
                 if let Some(e) = entry {
                     let wall = e.sent_at.elapsed();
-                    let delivery = WireResponse::parse(&frame.payload)
-                        .map(|response| ClusterResponse { response, wall })
-                        .map_err(|err| {
-                            ClusterError::Failed(err.to_string())
-                        });
+                    let delivery =
+                        wire::parse_response(frame.version, &frame.payload)
+                            .map(|(response, trace)| ClusterResponse {
+                                response,
+                                wall,
+                                trace,
+                            })
+                            .map_err(|err| {
+                                ClusterError::Failed(err.to_string())
+                            });
                     let _ = e.tx.send(delivery);
                 }
             }
@@ -267,7 +304,7 @@ fn reader_loop(
                     pending_stats.lock().unwrap().remove(&frame.id);
                 if let Some(tx) = waiter {
                     let _ = tx.send(
-                        ClusterStats::parse(&frame.payload)
+                        ObsReport::parse_wire(frame.version, &frame.payload)
                             .map_err(|e| e.to_string()),
                     );
                 }

@@ -191,13 +191,24 @@ impl MetricsSnapshot {
 
     /// Strict parse of [`MetricsSnapshot::encode`] output.
     pub fn parse(payload: &[u8]) -> Result<MetricsSnapshot, FrameError> {
-        let (vals, rest) = parse_u64_block(payload)?;
+        let (snap, rest) = Self::parse_prefix(payload)?;
         if !rest.is_empty() {
             return Err(FrameError::Malformed(
                 "metrics snapshot has trailing bytes",
             ));
         }
-        Self::from_block(&vals)
+        Ok(snap)
+    }
+
+    /// Parse one snapshot off the front of `payload`, returning the
+    /// remaining bytes — wire v3 `MetricsResp` payloads append a
+    /// telemetry block after the snapshot
+    /// (`obs::export::parse_telemetry_prefix` consumes the rest).
+    pub fn parse_prefix(
+        payload: &[u8],
+    ) -> Result<(MetricsSnapshot, &[u8]), FrameError> {
+        let (vals, rest) = parse_u64_block(payload)?;
+        Ok((Self::from_block(&vals)?, rest))
     }
 
     /// Rebuild from a decoded `[counters..][buckets..]` block.
@@ -380,21 +391,30 @@ impl ClusterStats {
 
     /// Strict parse of [`ClusterStats::encode`] output.
     pub fn parse(payload: &[u8]) -> Result<ClusterStats, FrameError> {
-        let (agg, rest) = parse_u64_block(payload)?;
-        let aggregate = MetricsSnapshot::from_block(&agg)?;
-        let (router, tail) = parse_u64_block(rest)?;
+        let (stats, tail) = Self::parse_prefix(payload)?;
         if !tail.is_empty() {
             return Err(FrameError::Malformed(
                 "cluster stats have trailing bytes",
             ));
         }
+        Ok(stats)
+    }
+
+    /// Parse cluster stats off the front of `payload`, returning the
+    /// remaining bytes (the wire v3 telemetry block, if any).
+    pub fn parse_prefix(
+        payload: &[u8],
+    ) -> Result<(ClusterStats, &[u8]), FrameError> {
+        let (agg, rest) = parse_u64_block(payload)?;
+        let aggregate = MetricsSnapshot::from_block(&agg)?;
+        let (router, tail) = parse_u64_block(rest)?;
         if router.counters.len() < 7 {
             return Err(FrameError::Malformed(
                 "cluster stats router counter count mismatch",
             ));
         }
         let c = |i: usize| router.counters.get(i).copied().unwrap_or(0);
-        Ok(ClusterStats {
+        let stats = ClusterStats {
             aggregate,
             workers_total: c(0),
             workers_alive: c(1),
@@ -408,7 +428,8 @@ impl ClusterStats {
             shed_high: c(9),
             failed: c(10),
             router_latency_buckets: router.buckets.clone(),
-        })
+        };
+        Ok((stats, tail))
     }
 }
 

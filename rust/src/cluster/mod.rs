@@ -6,11 +6,15 @@
 //! This module is that deployment:
 //!
 //! - [`wire`] — the length-prefixed, versioned, FNV-checksummed frame
-//!   protocol (magic `ZCLU`, version 2 with version-1 peers still
-//!   accepted), carrying Submit / Response / Heartbeat / SpillShip /
-//!   Error / Metrics / Overloaded frames with the same strict
-//!   never-panicking parse guarantees as `.zspill` itself. v2 submits
-//!   carry a priority class and an optional deadline.
+//!   protocol (magic `ZCLU`, version 3 with version-1/2 peers still
+//!   accepted and answered in their own version), carrying Submit /
+//!   Response / Heartbeat / SpillShip / Error / Metrics / Overloaded
+//!   frames with the same strict never-panicking parse guarantees as
+//!   `.zspill` itself. v2 submits carry a priority class and an
+//!   optional deadline; v3 adds an edge-assigned trace id + sampling
+//!   flag on submits, an optional `TraceRecord` tail on responses,
+//!   and a telemetry block on `MetricsResp`
+//!   (see `rust/docs/observability.md`).
 //! - [`worker`] — a [`WorkerNode`]: the coordinator server behind a
 //!   TCP listener, executing on any
 //!   [`BatchExecutor`](crate::coordinator::server::BatchExecutor)

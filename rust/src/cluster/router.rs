@@ -35,9 +35,19 @@
 //!
 //! The router also ingests `SpillShip` frames from workers (metering
 //! received `.zspill` bytes — the cluster-level side of the Eq. 2
-//! accounting) and answers `MetricsReq` with cluster-wide
-//! [`ClusterStats`]: every worker's snapshot fetched live, histograms
-//! merged bucket-wise.
+//! accounting) and answers `MetricsReq` with the unified
+//! [`ObsReport`]: every worker's metrics snapshot *and* telemetry
+//! stages fetched live, histograms merged bucket-wise, stages merged
+//! label-wise (v1/v2 askers get the bare [`ClusterStats`] they can
+//! parse).
+//!
+//! Observability: a sampled request's trace id rides the normalized
+//! v3 submit payload; when its response returns, the router appends a
+//! `router.dispatch` span (dispatch -> response, attempt count in the
+//! aux field) before re-encoding the record at the client's own
+//! protocol version. Terminal events — sheds, terminal faults, worker
+//! deaths, failover re-dispatches — go to the configured
+//! [`FlightRecorder`], which dumps its ring on each of them.
 
 use std::collections::HashMap;
 use std::io::Write;
@@ -53,6 +63,7 @@ use super::metrics::{ClusterStats, MetricsSnapshot};
 use super::wire::{self, Frame, FrameType};
 use crate::compress::EncodedView;
 use crate::coordinator::{Metrics, Priority};
+use crate::obs::{now_ns, FlightRecorder, ObsReport, TerminalKind, TraceRecord};
 use crate::telemetry::Telemetry;
 
 /// How often the accept loop polls its shutdown flag.
@@ -105,6 +116,10 @@ pub struct RouterConfig {
     pub heartbeat_every: Duration,
     /// Total dispatch attempts per request before it is rejected.
     pub max_attempts: usize,
+    /// Flight recorder for terminal events (sheds, worker deaths,
+    /// failover re-dispatches) and completed sampled traces. `None`
+    /// disables recording entirely.
+    pub flight: Option<Arc<FlightRecorder>>,
 }
 
 impl RouterConfig {
@@ -119,6 +134,7 @@ impl RouterConfig {
             max_outstanding: 256,
             heartbeat_every: Duration::from_millis(250),
             max_attempts: attempts,
+            flight: None,
         }
     }
 }
@@ -132,6 +148,14 @@ struct Pending {
     /// Dispatches so far (this one included).
     attempts: usize,
     sent_at: Instant,
+    /// Trace identity read from the (normalized, v3) submit payload.
+    trace_id: u64,
+    /// Whether the request carries a sampled trace; gates the
+    /// `router.dispatch` span and the epoch timestamp below.
+    sampled: bool,
+    /// Epoch nanos at dispatch (0 unless sampled) — the start of the
+    /// `router.dispatch` span appended when the response returns.
+    sent_ns: u64,
     client: ClientReply,
 }
 
@@ -151,6 +175,11 @@ enum FailCause {
 struct ClientReply {
     tx: Sender<Vec<u8>>,
     wire_id: u64,
+    /// The protocol version the client spoke on its `Submit`. Every
+    /// frame sent back on this route is stamped with it, so v1/v2
+    /// clients keep round-tripping against the v3 router (their frame
+    /// readers reject frames stamped above their own version).
+    version: u16,
 }
 
 /// Router-side state for one worker.
@@ -176,7 +205,7 @@ struct Link {
     /// unblocks the link reader instead of leaking it.
     stream: Mutex<Option<TcpStream>>,
     pending: Mutex<HashMap<u64, Pending>>,
-    pending_metrics: Mutex<HashMap<u64, Sender<MetricsSnapshot>>>,
+    pending_metrics: Mutex<HashMap<u64, Sender<ObsReport>>>,
     last_seen: Mutex<Instant>,
 }
 
@@ -333,6 +362,18 @@ impl Router {
         gather_stats(&self.inner)
     }
 
+    /// The unified observability report: [`Router::stats`] plus the
+    /// merged wall-time/byte telemetry of every live worker and the
+    /// router itself — the same payload a v3 `MetricsReq` gets.
+    pub fn obs_report(&self) -> ObsReport {
+        gather_report(&self.inner)
+    }
+
+    /// The router's flight recorder, when one was configured.
+    pub fn flight(&self) -> Option<Arc<FlightRecorder>> {
+        self.inner.cfg.flight.clone()
+    }
+
     /// Per-worker in-flight request counts, in worker order. Quiescent
     /// routers report all zeros — the invariant the redial regression
     /// test pins (a leak here would wedge admission permanently).
@@ -426,11 +467,18 @@ fn dispatch(
     client: ClientReply,
     last_fail: Option<FailCause>,
 ) {
+    // The payload is normalized to v3 at ingress, so the trace
+    // identity is always readable here — cheap header peeks, no image
+    // decode on the routing path.
+    let (trace_id, sampled) =
+        wire::submit_trace(wire::CLUSTER_VERSION, &payload)
+            .unwrap_or((0, false));
     if attempts >= inner.cfg.max_attempts {
         match last_fail {
             Some(FailCause::Shed { queued, detail }) => shed(
                 inner,
                 &client,
+                trace_id,
                 priority,
                 queued,
                 &format!(
@@ -441,6 +489,7 @@ fn dispatch(
             Some(FailCause::Worker(e)) => reject(
                 inner,
                 &client,
+                trace_id,
                 &format!(
                     "request failed on every attempted worker; last worker \
                      error: {e}"
@@ -449,6 +498,7 @@ fn dispatch(
             None => reject(
                 inner,
                 &client,
+                trace_id,
                 "request failed on every attempted worker",
             ),
         }
@@ -479,6 +529,9 @@ fn dispatch(
                     priority,
                     attempts: attempts + 1,
                     sent_at: Instant::now(),
+                    trace_id,
+                    sampled,
+                    sent_ns: if sampled { now_ns() } else { 0 },
                     client: client.clone(),
                 },
             );
@@ -520,37 +573,47 @@ fn dispatch(
             priority.name()
         ),
     };
-    shed(inner, &client, priority, queued as u64, &msg);
+    shed(inner, &client, trace_id, priority, queued as u64, &msg);
 }
 
-/// Terminal fault: count it and answer the client with an `Error`
-/// frame.
-fn reject(inner: &Arc<Inner>, client: &ClientReply, msg: &str) {
+/// Terminal fault: count it, record a flight event, and answer the
+/// client with an `Error` frame.
+fn reject(inner: &Arc<Inner>, client: &ClientReply, trace_id: u64, msg: &str) {
     inner.rejected.fetch_add(1, Ordering::Relaxed);
     inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
-    let bytes = Frame::new(
+    if let Some(f) = &inner.cfg.flight {
+        f.record_event(trace_id, TerminalKind::ConnError, msg);
+    }
+    let f = Frame::new(
         FrameType::Error,
         client.wire_id,
         msg.as_bytes().to_vec(),
-    )
-    .encode();
-    let _ = client.tx.send(bytes);
+    );
+    let _ = client
+        .tx
+        .send(Frame { version: client.version, ..f }.encode());
 }
 
-/// Terminal shed: count the class and answer the client with an
-/// explicit `Overloaded` frame — load-shedding is never silent.
+/// Terminal shed: count the class, record a flight event naming the
+/// trace id, and answer the client with an explicit `Overloaded`
+/// frame — load-shedding is never silent.
 fn shed(
     inner: &Arc<Inner>,
     client: &ClientReply,
+    trace_id: u64,
     priority: Priority,
     queued: u64,
     msg: &str,
 ) {
     inner.rejected.fetch_add(1, Ordering::Relaxed);
     inner.metrics.count_shed(priority);
-    let bytes =
-        Frame::overloaded(client.wire_id, priority, queued, msg).encode();
-    let _ = client.tx.send(bytes);
+    if let Some(f) = &inner.cfg.flight {
+        f.record_event(trace_id, TerminalKind::shed(priority), msg);
+    }
+    let f = Frame::overloaded(client.wire_id, priority, queued, msg);
+    let _ = client
+        .tx
+        .send(Frame { version: client.version, ..f }.encode());
 }
 
 /// Open (or reopen) the TCP connection to worker `idx`. Returns false
@@ -628,8 +691,22 @@ fn fail_link(inner: &Arc<Inner>, idx: usize) {
             orphans.len()
         );
     }
+    if let Some(f) = &inner.cfg.flight {
+        f.record_event(
+            0,
+            TerminalKind::WorkerDeath,
+            &format!("{} ({} in flight orphaned)", link.addr, orphans.len()),
+        );
+    }
     for p in orphans {
         inner.retries.fetch_add(1, Ordering::Relaxed);
+        if let Some(f) = &inner.cfg.flight {
+            f.record_event(
+                p.trace_id,
+                TerminalKind::Redispatch,
+                &format!("worker {} died; retrying on peers", link.addr),
+            );
+        }
         dispatch(
             inner, p.payload, p.key, p.priority, p.attempts, p.client, None,
         );
@@ -655,12 +732,49 @@ fn link_reader(inner: Arc<Inner>, idx: usize, mut stream: TcpStream) {
                     inner.metrics.record_latency_us(
                         p.sent_at.elapsed().as_micros() as u64,
                     );
-                    let bytes = Frame::new(
+                    // Sampled requests get a `router.dispatch` span
+                    // appended to the worker's trace before the record
+                    // is re-encoded for the client's own protocol
+                    // version (v1/v2 clients get the bare response —
+                    // `encode_response` drops the trace for them).
+                    // Unsampled responses are relayed untouched.
+                    let payload = if p.sampled {
+                        match wire::parse_response(
+                            frame.version,
+                            &frame.payload,
+                        ) {
+                            Ok((resp, trace)) => {
+                                let mut rec = trace.unwrap_or_else(|| {
+                                    TraceRecord::new(p.trace_id)
+                                });
+                                rec.push(
+                                    "router.dispatch",
+                                    p.sent_ns,
+                                    now_ns(),
+                                    frame.payload.len() as u64,
+                                    p.attempts as u64,
+                                );
+                                if let Some(f) = &inner.cfg.flight {
+                                    f.record_trace(rec.clone());
+                                }
+                                wire::encode_response(
+                                    p.client.version,
+                                    &resp,
+                                    Some(&rec),
+                                )
+                            }
+                            Err(_) => frame.payload,
+                        }
+                    } else {
+                        frame.payload
+                    };
+                    let f = Frame::new(
                         FrameType::Response,
                         p.client.wire_id,
-                        frame.payload,
-                    )
-                    .encode();
+                        payload,
+                    );
+                    let bytes =
+                        Frame { version: p.client.version, ..f }.encode();
                     let _ = p.client.tx.send(bytes);
                 }
             }
@@ -711,9 +825,14 @@ fn link_reader(inner: Arc<Inner>, idx: usize, mut stream: TcpStream) {
                 let waiter =
                     link.pending_metrics.lock().unwrap().remove(&frame.id);
                 if let Some(tx) = waiter {
-                    if let Ok(snap) = MetricsSnapshot::parse(&frame.payload)
+                    // Workers answer at the version the router dialed
+                    // with (v3), so the payload carries their telemetry
+                    // tail too; `parse_wire` also accepts a bare v1/v2
+                    // snapshot from an older worker.
+                    if let Ok(report) =
+                        ObsReport::parse_wire(frame.version, &frame.payload)
                     {
-                        let _ = tx.send(snap);
+                        let _ = tx.send(report);
                     }
                 }
             }
@@ -754,8 +873,16 @@ fn heartbeat_loop(inner: Arc<Inner>) {
 }
 
 /// Fetch every live worker's metrics snapshot, merge, and attach the
-/// router's own counters.
+/// router's own counters (compat wrapper over [`gather_report`]).
 fn gather_stats(inner: &Arc<Inner>) -> ClusterStats {
+    gather_report(inner).stats
+}
+
+/// The unified observability report: every live worker's metrics
+/// snapshot *and* telemetry stages fetched over the wire, merged
+/// bucket-wise / stage-wise, plus the router's own counters and
+/// `router.*` telemetry.
+fn gather_report(inner: &Arc<Inner>) -> ObsReport {
     let mut waiters = Vec::new();
     for link in &inner.links {
         if !link.alive.load(Ordering::SeqCst) {
@@ -777,14 +904,16 @@ fn gather_stats(inner: &Arc<Inner>) -> ClusterStats {
         }
     }
     let mut aggregate = MetricsSnapshot::default();
+    let mut telemetry = inner.telemetry.snapshot();
     let mut alive = 0u64;
     for rx in waiters {
-        if let Ok(snap) = rx.recv_timeout(METRICS_WAIT) {
-            aggregate.merge(&snap);
+        if let Ok(report) = rx.recv_timeout(METRICS_WAIT) {
+            aggregate.merge(&report.stats.aggregate);
+            telemetry.merge(&report.telemetry);
             alive += 1;
         }
     }
-    ClusterStats {
+    let stats = ClusterStats {
         aggregate,
         workers_total: inner.links.len() as u64,
         workers_alive: alive,
@@ -801,7 +930,8 @@ fn gather_stats(inner: &Arc<Inner>) -> ClusterStats {
             .metrics
             .latency_bucket_counts()
             .to_vec(),
-    }
+    };
+    ObsReport { stats, telemetry }
 }
 
 fn accept_loop(listener: TcpListener, inner: Arc<Inner>) {
@@ -854,10 +984,11 @@ fn client_conn(inner: Arc<Inner>, stream: TcpStream) {
             FrameType::Submit => {
                 inner.metrics.requests.fetch_add(1, Ordering::Relaxed);
                 // Normalize at ingress: a v1 submit gains the Normal
-                // priority byte and a zero deadline here, so every hop
-                // past the router speaks the v2 payload shape. The
-                // key/priority reads stay cheap — no image decode on
-                // the routing path.
+                // priority byte and a zero deadline, a v2 submit gains
+                // a zero (unsampled) trace id, so every hop past the
+                // router speaks the v3 payload shape. The key/priority
+                // reads stay cheap — no image decode on the routing
+                // path.
                 let parsed = wire::submit_key(&frame.payload).and_then(|k| {
                     let p =
                         wire::submit_priority(frame.version, &frame.payload)?;
@@ -868,19 +999,22 @@ fn client_conn(inner: Arc<Inner>, stream: TcpStream) {
                 let (key, priority, payload) = match parsed {
                     Ok(v) => v,
                     Err(e) => {
+                        let f = Frame::new(
+                            FrameType::Error,
+                            frame.id,
+                            e.to_string().into_bytes(),
+                        );
                         let _ = out_tx.send(
-                            Frame::new(
-                                FrameType::Error,
-                                frame.id,
-                                e.to_string().into_bytes(),
-                            )
-                            .encode(),
+                            Frame { version: frame.version, ..f }.encode(),
                         );
                         continue;
                     }
                 };
-                let client =
-                    ClientReply { tx: out_tx.clone(), wire_id: frame.id };
+                let client = ClientReply {
+                    tx: out_tx.clone(),
+                    wire_id: frame.id,
+                    version: frame.version,
+                };
                 let _t = st_dispatch.time();
                 st_dispatch.add_bytes(payload.len() as u64);
                 dispatch(&inner, payload, key, priority, 0, client, None);
@@ -891,13 +1025,17 @@ fn client_conn(inner: Arc<Inner>, stream: TcpStream) {
                 }
             }
             FrameType::MetricsReq => {
-                let stats = gather_stats(&inner);
-                let bytes = Frame::new(
+                // v3 askers get the unified report (stats + merged
+                // telemetry tail); v1/v2 askers get the bare
+                // `ClusterStats` they know how to parse.
+                let report = gather_report(&inner);
+                let f = Frame::new(
                     FrameType::MetricsResp,
                     frame.id,
-                    stats.encode(),
-                )
-                .encode();
+                    report.encode_wire(frame.version, true),
+                );
+                let bytes =
+                    Frame { version: frame.version, ..f }.encode();
                 if out_tx.send(bytes).is_err() {
                     break;
                 }
@@ -930,10 +1068,13 @@ fn client_conn(inner: Arc<Inner>, stream: TcpStream) {
             other => {
                 let msg =
                     format!("router cannot serve frame type {other:?}");
-                let _ = out_tx.send(
-                    Frame::new(FrameType::Error, frame.id, msg.into_bytes())
-                        .encode(),
+                let f = Frame::new(
+                    FrameType::Error,
+                    frame.id,
+                    msg.into_bytes(),
                 );
+                let _ = out_tx
+                    .send(Frame { version: frame.version, ..f }.encode());
             }
         }
     }

@@ -9,7 +9,7 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic  "ZCLU"
-//! 4       2     version (2; version 1 still accepted — see below)
+//! 4       2     version (3; versions 1–2 still accepted — see below)
 //! 6       2     frame type (FrameType)
 //! 8       8     request id (client-chosen; echoed on responses)
 //! 16      4     FNV-1a checksum of the whole frame, this field zeroed
@@ -17,12 +17,15 @@
 //! 28      ...   payload
 //! ```
 //!
-//! Versioning: this build emits [`CLUSTER_VERSION`] (2) and accepts
+//! Versioning: this build emits [`CLUSTER_VERSION`] (3) and accepts
 //! any version in [`MIN_CLUSTER_VERSION`]`..=`[`CLUSTER_VERSION`], so
-//! a v1 peer (PR 4–6 builds) keeps working through a rolling upgrade.
-//! The parsed version rides on [`Frame::version`]; payload codecs that
-//! changed shape across versions ([`parse_submit`]) take it as an
-//! argument and dispatch on it.
+//! v1 (PR 4–6 builds) and v2 (PR 7) peers keep working through a
+//! rolling upgrade. The parsed version rides on [`Frame::version`];
+//! payload codecs that changed shape across versions
+//! ([`parse_submit`], [`parse_response`]) take it as an argument and
+//! dispatch on it. Frames *answering* a peer are stamped with the
+//! requester's version, so replies never outrun what the peer can
+//! parse (a v1/v2 build rejects frames above its own version).
 //!
 //! Parsing guarantees mirror `.zspill`: strictly bounds-checked, the
 //! declared payload length is capped at [`MAX_PAYLOAD`] *before* any
@@ -34,13 +37,21 @@
 //! prefixes through both entry points.
 //!
 //! Payload conventions:
-//! - `Submit` (v2): an 8-byte shard key, a 1-byte [`Priority`] class,
-//!   an 8-byte deadline in microseconds (0 = none), then a dense
-//!   `.zspill` frame of the `(3, H, W)` image ([`encode_submit`] /
-//!   [`parse_submit`]) — image bytes cross the wire in the same
-//!   self-describing format spills do. A v1 `Submit` omits the
-//!   priority/deadline fields and parses as `Normal` with no deadline.
-//! - `Response`: a packed [`WireResponse`] ([`WireResponse::encode`]).
+//! - `Submit` (v3): an 8-byte shard key, a 1-byte [`Priority`] class,
+//!   an 8-byte deadline in microseconds (0 = none), an 8-byte trace id
+//!   (0 = untraced), a flags byte (bit 0 = sampled: return the
+//!   [`TraceRecord`](crate::obs::TraceRecord) with the response), then
+//!   a dense `.zspill` frame of the `(3, H, W)` image
+//!   ([`encode_submit_traced`] / [`parse_submit`]) — image bytes cross
+//!   the wire in the same self-describing format spills do. A v2
+//!   `Submit` omits the trace id/flags (parses untraced); a v1
+//!   `Submit` additionally omits priority/deadline (parses as `Normal`
+//!   with no deadline).
+//! - `Response`: a packed [`WireResponse`] ([`WireResponse::encode`]);
+//!   on v3, a sampled request's response carries its encoded
+//!   `TraceRecord` after the logits ([`encode_response`] /
+//!   [`parse_response`]). v1/v2 requesters always get the bare body —
+//!   their strict parsers reject trailing bytes.
 //! - `Error`: UTF-8 message.
 //! - `Overloaded`: admission control's explicit refusal for the id —
 //!   the shed request's 1-byte priority class, the 8-byte queue depth
@@ -67,12 +78,16 @@ use crate::tensor::Tensor;
 pub const CLUSTER_MAGIC: [u8; 4] = *b"ZCLU";
 
 /// Wire protocol version this build emits. v2 added the priority +
-/// deadline fields on `Submit` and the `Overloaded` frame type.
-pub const CLUSTER_VERSION: u16 = 2;
+/// deadline fields on `Submit` and the `Overloaded` frame type; v3
+/// added the trace id + flags on `Submit`, the optional appended
+/// `TraceRecord` on `Response`, and the appended telemetry block on
+/// `MetricsResp`.
+pub const CLUSTER_VERSION: u16 = 3;
 
 /// Oldest wire version this build still accepts (rolling upgrades:
-/// a v1 peer's frames parse; its submits get `Normal` priority and no
-/// deadline).
+/// v1/v2 peers' frames parse; their submits get defaults for the
+/// fields their version lacks, and replies to them are stamped with
+/// — and shaped for — their version).
 pub const MIN_CLUSTER_VERSION: u16 = 1;
 
 /// Fixed header length in bytes.
@@ -340,15 +355,26 @@ impl std::fmt::Display for FrameError {
 impl std::error::Error for FrameError {}
 
 // ---------------------------------------------------------------------
-// Submit payload: shard key [+ priority + deadline] + dense .zspill
+// Submit payload: key [+ priority + deadline [+ trace]] + dense .zspill
 // ---------------------------------------------------------------------
 
 /// Fixed bytes before the image spill in a v2 `Submit` payload:
 /// key (8) + priority (1) + deadline_us (8).
 const SUBMIT_V2_HDR: usize = 17;
 
+/// Fixed bytes before the image spill in a v3 `Submit` payload:
+/// the v2 fields + trace_id (8) + flags (1).
+const SUBMIT_V3_HDR: usize = SUBMIT_V2_HDR + 9;
+
+/// Flags bit 0: the request is sampled — every hop appends spans and
+/// the response carries the assembled `TraceRecord`. Other bits are
+/// reserved (ignored on parse, emitted as 0) so future flags stay
+/// compatible in both directions.
+const SUBMIT_FLAG_SAMPLED: u8 = 1;
+
 /// The decoded fields of a `Submit` payload, version differences
-/// already normalized away (a v1 submit is `Normal` with no deadline).
+/// already normalized away (a v1 submit is `Normal` with no deadline;
+/// v1/v2 submits are untraced).
 #[derive(Debug, Clone, PartialEq)]
 pub struct WireSubmit {
     pub key: u64,
@@ -356,25 +382,46 @@ pub struct WireSubmit {
     /// Client-requested completion deadline, measured from arrival at
     /// the serving node.
     pub deadline: Option<Duration>,
+    /// Edge-assigned trace id (0 = untraced). Nonzero ids ride into
+    /// flight-recorder events even when the request isn't sampled.
+    pub trace_id: u64,
+    /// Sampled: assemble and return a `TraceRecord` with the response.
+    pub trace: bool,
     pub image: Tensor,
 }
 
-/// Encode a v2 `Submit` payload: the 8-byte shard key, the priority
-/// class byte, the deadline in microseconds (0 = none), then the image
-/// as a dense `.zspill` frame.
+/// Encode an untraced `Submit` payload (trace id 0, not sampled) —
+/// the pre-v3 call shape, kept for everything that doesn't trace.
 pub fn encode_submit(
     key: u64,
     priority: Priority,
     deadline: Option<Duration>,
     image: &Tensor,
 ) -> Vec<u8> {
+    encode_submit_traced(key, priority, deadline, 0, false, image)
+}
+
+/// Encode a v3 `Submit` payload: the 8-byte shard key, the priority
+/// class byte, the deadline in microseconds (0 = none), the 8-byte
+/// trace id, the flags byte, then the image as a dense `.zspill`
+/// frame.
+pub fn encode_submit_traced(
+    key: u64,
+    priority: Priority,
+    deadline: Option<Duration>,
+    trace_id: u64,
+    sampled: bool,
+    image: &Tensor,
+) -> Vec<u8> {
     let spill = DenseCodec.encode(image).to_bytes();
-    let mut out = Vec::with_capacity(SUBMIT_V2_HDR + spill.len());
+    let mut out = Vec::with_capacity(SUBMIT_V3_HDR + spill.len());
     out.extend_from_slice(&key.to_le_bytes());
     out.push(priority.as_u8());
     let deadline_us =
         deadline.map(|d| (d.as_micros() as u64).max(1)).unwrap_or(0);
     out.extend_from_slice(&deadline_us.to_le_bytes());
+    out.extend_from_slice(&trace_id.to_le_bytes());
+    out.push(if sampled { SUBMIT_FLAG_SAMPLED } else { 0 });
     out.extend_from_slice(&spill);
     out
 }
@@ -399,33 +446,73 @@ pub fn submit_priority(
         submit_key(payload)?; // shape check only
         return Ok(Priority::Normal);
     }
-    if payload.len() < SUBMIT_V2_HDR {
-        return Err(FrameError::Malformed("v2 submit payload too short"));
+    let hdr = if version >= 3 { SUBMIT_V3_HDR } else { SUBMIT_V2_HDR };
+    if payload.len() < hdr {
+        return Err(FrameError::Malformed("submit payload too short"));
     }
     Priority::from_u8(payload[8])
         .ok_or(FrameError::Malformed("submit priority byte out of range"))
 }
 
-/// Rewrite a v1 `Submit` payload into v2 shape (insert the `Normal`
-/// priority byte and a zero deadline after the key) so everything past
-/// the router speaks one format. v2 payloads pass through unchanged
+/// Read the trace id + sampled flag off a `Submit` payload without
+/// decoding the image — the router's trace fast path. v1/v2 submits
+/// are untraced (`(0, false)`).
+pub fn submit_trace(
+    version: u16,
+    payload: &[u8],
+) -> Result<(u64, bool), FrameError> {
+    if version < 3 {
+        submit_priority(version, payload)?; // shape check only
+        return Ok((0, false));
+    }
+    if payload.len() < SUBMIT_V3_HDR {
+        return Err(FrameError::Malformed("v3 submit payload too short"));
+    }
+    let trace_id = u64::from_le_bytes(
+        payload[SUBMIT_V2_HDR..SUBMIT_V2_HDR + 8]
+            .try_into()
+            .expect("8 bytes"),
+    );
+    let sampled =
+        payload[SUBMIT_V3_HDR - 1] & SUBMIT_FLAG_SAMPLED != 0;
+    Ok((trace_id, sampled))
+}
+
+/// Rewrite a v1/v2 `Submit` payload into v3 shape (insert the fields
+/// the older version lacks, with their defaults) so everything past
+/// the router speaks one format. v3 payloads pass through unchanged
 /// after a shape check.
 pub fn normalize_submit(
     version: u16,
     payload: &[u8],
 ) -> Result<Vec<u8>, FrameError> {
-    if version >= 2 {
+    if version >= 3 {
         submit_priority(version, payload)?;
         return Ok(payload.to_vec());
     }
-    if payload.len() < 8 {
-        return Err(FrameError::Malformed("submit payload shorter than key"));
-    }
-    let mut out = Vec::with_capacity(payload.len() + 9);
-    out.extend_from_slice(&payload[..8]);
-    out.push(Priority::Normal.as_u8());
+    // Bring a v1 payload up to v2 shape first, then append-insert the
+    // v3 trace fields (id 0, no flags) before the image.
+    let v2 = if version >= 2 {
+        submit_priority(version, payload)?;
+        payload.to_vec()
+    } else {
+        if payload.len() < 8 {
+            return Err(FrameError::Malformed(
+                "submit payload shorter than key",
+            ));
+        }
+        let mut out = Vec::with_capacity(payload.len() + 9);
+        out.extend_from_slice(&payload[..8]);
+        out.push(Priority::Normal.as_u8());
+        out.extend_from_slice(&0u64.to_le_bytes());
+        out.extend_from_slice(&payload[8..]);
+        out
+    };
+    let mut out = Vec::with_capacity(v2.len() + 9);
+    out.extend_from_slice(&v2[..SUBMIT_V2_HDR]);
     out.extend_from_slice(&0u64.to_le_bytes());
-    out.extend_from_slice(&payload[8..]);
+    out.push(0);
+    out.extend_from_slice(&v2[SUBMIT_V2_HDR..]);
     Ok(out)
 }
 
@@ -440,7 +527,8 @@ pub fn parse_submit(
         return Err(FrameError::Malformed("submit payload shorter than key"));
     }
     let key = u64::from_le_bytes(payload[..8].try_into().expect("8 bytes"));
-    let (priority, deadline, image_bytes) = if version >= 2 {
+    let (priority, deadline, trace_id, trace, image_bytes) = if version >= 2
+    {
         if payload.len() < SUBMIT_V2_HDR {
             return Err(FrameError::Malformed("v2 submit payload too short"));
         }
@@ -452,14 +540,31 @@ pub fn parse_submit(
         );
         let deadline =
             (deadline_us > 0).then(|| Duration::from_micros(deadline_us));
-        (priority, deadline, &payload[SUBMIT_V2_HDR..])
+        let (trace_id, trace, image_bytes) = if version >= 3 {
+            if payload.len() < SUBMIT_V3_HDR {
+                return Err(FrameError::Malformed(
+                    "v3 submit payload too short",
+                ));
+            }
+            let trace_id = u64::from_le_bytes(
+                payload[SUBMIT_V2_HDR..SUBMIT_V2_HDR + 8]
+                    .try_into()
+                    .expect("8 bytes"),
+            );
+            let sampled =
+                payload[SUBMIT_V3_HDR - 1] & SUBMIT_FLAG_SAMPLED != 0;
+            (trace_id, sampled, &payload[SUBMIT_V3_HDR..])
+        } else {
+            (0, false, &payload[SUBMIT_V2_HDR..])
+        };
+        (priority, deadline, trace_id, trace, image_bytes)
     } else {
-        (Priority::Normal, None, &payload[8..])
+        (Priority::Normal, None, 0, false, &payload[8..])
     };
     let image = compress::decode_frame(image_bytes).map_err(|_| {
         FrameError::Malformed("submit image is not a valid .zspill")
     })?;
-    Ok(WireSubmit { key, priority, deadline, image })
+    Ok(WireSubmit { key, priority, deadline, trace_id, trace, image })
 }
 
 // ---------------------------------------------------------------------
@@ -548,6 +653,21 @@ impl WireResponse {
     /// Strict parse: the declared logit count must match the remaining
     /// bytes exactly.
     pub fn parse(payload: &[u8]) -> Result<WireResponse, FrameError> {
+        let (resp, rest) = Self::parse_prefix(payload)?;
+        if !rest.is_empty() {
+            return Err(FrameError::Malformed(
+                "response payload has trailing bytes",
+            ));
+        }
+        Ok(resp)
+    }
+
+    /// Parse one response body off the front of `payload`, returning
+    /// the remaining bytes — on wire v3, a sampled request's
+    /// `TraceRecord` follows the logits ([`parse_response`]).
+    pub fn parse_prefix(
+        payload: &[u8],
+    ) -> Result<(WireResponse, &[u8]), FrameError> {
         const FIXED: usize = 4 + 5 * 8 + 4;
         if payload.len() < FIXED {
             return Err(FrameError::Malformed("response payload too short"));
@@ -561,16 +681,19 @@ impl WireResponse {
             u32::from_le_bytes(payload[44..48].try_into().expect("4"))
                 as usize;
         let rest = &payload[FIXED..];
-        if n_logits.checked_mul(4) != Some(rest.len()) {
+        let logit_bytes = n_logits.checked_mul(4).ok_or(
+            FrameError::Malformed("response logit count overflows"),
+        )?;
+        if rest.len() < logit_bytes {
             return Err(FrameError::Malformed(
                 "response logit count disagrees with payload length",
             ));
         }
-        let logits = rest
+        let logits = rest[..logit_bytes]
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
-        Ok(WireResponse {
+        let resp = WireResponse {
             predicted,
             dense_bytes: u64_at(4),
             stored_bytes: u64_at(12),
@@ -578,8 +701,49 @@ impl WireResponse {
             spill_frame_bytes: u64_at(28),
             latency_us: u64_at(36),
             logits,
-        })
+        };
+        Ok((resp, &rest[logit_bytes..]))
     }
+}
+
+/// Encode a `Response` payload for a requester speaking `version`:
+/// the packed [`WireResponse`] and — wire v3, sampled requests only —
+/// the request's [`TraceRecord`](crate::obs::TraceRecord) appended
+/// after the logits. Requesters below v3 always get the bare body
+/// (their strict parse rejects trailing bytes).
+pub fn encode_response(
+    version: u16,
+    resp: &WireResponse,
+    trace: Option<&crate::obs::TraceRecord>,
+) -> Vec<u8> {
+    let mut out = resp.encode();
+    if version >= 3 {
+        if let Some(rec) = trace {
+            out.extend_from_slice(&rec.encode());
+        }
+    }
+    out
+}
+
+/// Decode a `Response` payload for the frame's wire `version`,
+/// returning the optional appended trace record. Below v3, trailing
+/// bytes are an error (the pre-trace strict contract); on v3+, the
+/// trailing bytes must be exactly one well-formed `TraceRecord`.
+pub fn parse_response(
+    version: u16,
+    payload: &[u8],
+) -> Result<(WireResponse, Option<crate::obs::TraceRecord>), FrameError> {
+    let (resp, rest) = WireResponse::parse_prefix(payload)?;
+    if rest.is_empty() {
+        return Ok((resp, None));
+    }
+    if version < 3 {
+        return Err(FrameError::Malformed(
+            "response payload has trailing bytes",
+        ));
+    }
+    let rec = crate::obs::TraceRecord::parse(rest)?;
+    Ok((resp, Some(rec)))
 }
 
 #[cfg(test)]
@@ -817,6 +981,155 @@ mod tests {
         let parsed = Frame::parse(&f.encode()).unwrap();
         assert_eq!(parsed.version, 1);
         assert_eq!(parsed, f);
+    }
+
+    #[test]
+    fn v2_submits_still_parse_and_normalize() {
+        let mut rng = Rng::new(29);
+        let img = sample_image(&mut rng);
+        // Hand-build the v2 payload shape: key + priority + deadline +
+        // dense spill, no trace fields.
+        let mut v2 = Vec::new();
+        v2.extend_from_slice(&88u64.to_le_bytes());
+        v2.push(Priority::High.as_u8());
+        v2.extend_from_slice(&1500u64.to_le_bytes());
+        v2.extend_from_slice(&DenseCodec.encode(&img).to_bytes());
+        let s = parse_submit(2, &v2).unwrap();
+        assert_eq!(s.key, 88);
+        assert_eq!(s.priority, Priority::High);
+        assert_eq!(s.deadline, Some(Duration::from_micros(1500)));
+        assert_eq!(s.trace_id, 0, "v2 submits are untraced");
+        assert!(!s.trace);
+        assert_eq!(s.image, img);
+        assert_eq!(submit_priority(2, &v2).unwrap(), Priority::High);
+        assert_eq!(submit_trace(2, &v2).unwrap(), (0, false));
+        // Normalizing a v2 payload yields byte-identical v3 encoding.
+        let normalized = normalize_submit(2, &v2).unwrap();
+        assert_eq!(
+            normalized,
+            encode_submit_traced(
+                88,
+                Priority::High,
+                Some(Duration::from_micros(1500)),
+                0,
+                false,
+                &img,
+            )
+        );
+        let s3 = parse_submit(CLUSTER_VERSION, &normalized).unwrap();
+        assert_eq!(s3.image, img);
+        assert_eq!(s3.deadline, s.deadline);
+        // A frame stamped version 2 round-trips through the codec.
+        let f = Frame { version: 2, ..Frame::new(FrameType::Submit, 4, v2) };
+        let parsed = Frame::parse(&f.encode()).unwrap();
+        assert_eq!(parsed.version, 2);
+        assert_eq!(parsed, f);
+    }
+
+    #[test]
+    fn traced_submits_roundtrip_and_fuzz_clean() {
+        let mut rng = Rng::new(31);
+        let img = sample_image(&mut rng);
+        let payload = encode_submit_traced(
+            9,
+            Priority::Normal,
+            None,
+            0xFACE_FEED_0123_4567,
+            true,
+            &img,
+        );
+        let s = parse_submit(CLUSTER_VERSION, &payload).unwrap();
+        assert_eq!(s.trace_id, 0xFACE_FEED_0123_4567);
+        assert!(s.trace);
+        assert_eq!(s.image, img);
+        assert_eq!(
+            submit_trace(CLUSTER_VERSION, &payload).unwrap(),
+            (0xFACE_FEED_0123_4567, true)
+        );
+        // A nonzero id with the sampled bit clear propagates untraced.
+        let quiet = encode_submit_traced(
+            9,
+            Priority::Normal,
+            None,
+            42,
+            false,
+            &img,
+        );
+        let s = parse_submit(CLUSTER_VERSION, &quiet).unwrap();
+        assert_eq!((s.trace_id, s.trace), (42, false));
+        // Reserved flag bits are ignored, not errors (both-direction
+        // compatibility for future flags).
+        let mut future = payload.clone();
+        future[SUBMIT_V3_HDR - 1] |= 0x80;
+        let s = parse_submit(CLUSTER_VERSION, &future).unwrap();
+        assert!(s.trace);
+        // A v3 payload normalizes to itself.
+        assert_eq!(
+            normalize_submit(CLUSTER_VERSION, &payload).unwrap(),
+            payload
+        );
+        // Every truncation through the v3 header errors, never panics.
+        for cut in 0..SUBMIT_V3_HDR {
+            assert!(
+                parse_submit(CLUSTER_VERSION, &payload[..cut]).is_err(),
+                "cut {cut}"
+            );
+            assert!(
+                submit_trace(CLUSTER_VERSION, &payload[..cut]).is_err()
+            );
+        }
+        // Random bit flips anywhere in the payload error or change the
+        // decoded fields — they never panic (the frame checksum is the
+        // corruption gate; this pins the payload codec's safety).
+        forall(Config::cases(60), |rng| {
+            let mut bad = payload.clone();
+            let pos = rng.range(0, bad.len() - 1);
+            bad[pos] ^= 1 << rng.range(0, 7);
+            let _ = parse_submit(CLUSTER_VERSION, &bad);
+        });
+    }
+
+    #[test]
+    fn responses_carry_a_trace_record_on_v3_only() {
+        use crate::obs::TraceRecord;
+        let r = WireResponse {
+            predicted: 7,
+            dense_bytes: 2000,
+            stored_bytes: 900,
+            index_bytes: 64,
+            spill_frame_bytes: 964,
+            latency_us: 420,
+            logits: vec![1.0, -2.0],
+        };
+        let mut rec = TraceRecord::new(0xAB);
+        rec.push("queue.wait", 100, 250, 0, 0);
+        rec.push("serve.execute", 250, 400, 964, 4);
+        // v3 + trace: the record rides behind the logits.
+        let payload = encode_response(3, &r, Some(&rec));
+        let (back, trace) = parse_response(3, &payload).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(trace.unwrap(), rec);
+        // v3 without a trace and v2 (trace requested but suppressed)
+        // are the bare body — byte-identical to the legacy encoding.
+        assert_eq!(encode_response(3, &r, None), r.encode());
+        assert_eq!(encode_response(2, &r, Some(&rec)), r.encode());
+        let (back, trace) = parse_response(2, &r.encode()).unwrap();
+        assert_eq!(back, r);
+        assert!(trace.is_none());
+        // A v2 reader handed a trace-carrying payload errors cleanly
+        // (this cannot happen on the wire — responders shape replies
+        // per requester version — but the parser must not mis-read).
+        assert!(parse_response(2, &payload).is_err());
+        assert!(WireResponse::parse(&payload).is_err());
+        // Truncating anywhere inside the appended record errors.
+        for cut in r.encode().len() + 1..payload.len() {
+            assert!(parse_response(3, &payload[..cut]).is_err(), "{cut}");
+        }
+        // Garbage behind the body errors on v3 too (the tail must be
+        // exactly one record).
+        let mut noisy = r.encode();
+        noisy.extend_from_slice(&[9, 9, 9]);
+        assert!(parse_response(3, &noisy).is_err());
     }
 
     #[test]

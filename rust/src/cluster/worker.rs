@@ -35,6 +35,7 @@ use crate::coordinator::server::{BatchExecutor, Response};
 use crate::coordinator::{
     Metrics, Server, ServerConfig, SubmitOutcome, SubmitRequest,
 };
+use crate::obs::{now_ns, ObsReport};
 use crate::telemetry::{Stage, Telemetry};
 
 /// How often the accept loop polls its shutdown flag.
@@ -153,10 +154,17 @@ impl WorkerNode {
     /// Abrupt stop, usable from a shared reference: stop accepting,
     /// close the coordinator intake, and sever every open connection
     /// mid-stream. Peers observe an EOF/reset — this is what the
-    /// failover tests use to "kill" a worker.
+    /// failover tests use to "kill" a worker. A configured flight
+    /// recorder dumps its ring on the way down (the post-mortem a dead
+    /// worker leaves behind).
     pub fn kill(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
         self.server.close();
+        if let Some(f) = &self.server.flight {
+            if let Some(Err(e)) = f.dump() {
+                eprintln!("[cluster-worker] flight dump failed: {e}");
+            }
+        }
         for (_, c) in self.conns.lock().unwrap().drain(..) {
             let _ = c.shutdown(std::net::Shutdown::Both);
         }
@@ -213,6 +221,18 @@ fn accept_loop(
     }
 }
 
+/// What the response pump needs to answer one in-flight wire request:
+/// the wire id to echo, the requester's wire version (replies are
+/// stamped with — and shaped for — it), and, for sampled requests, the
+/// `worker.ingest` span endpoints captured at frame-handling time.
+struct PendingResp {
+    wire_id: u64,
+    version: u16,
+    /// `(start_ns, end_ns, payload_bytes)` of the ingest span; `None`
+    /// for unsampled requests.
+    ingest: Option<(u64, u64, u64)>,
+}
+
 /// One connection: reader (this thread) + writer thread + response
 /// pump thread. The pump owns the coordinator-id -> wire-id map shared
 /// with the reader; holding its lock across `Server::submit` closes
@@ -229,7 +249,7 @@ fn serve_conn(
     };
     let (out_tx, out_rx) = channel::<Vec<u8>>();
     let writer = std::thread::spawn(move || writer_loop(stream, out_rx));
-    let idmap: Arc<Mutex<HashMap<u64, u64>>> =
+    let idmap: Arc<Mutex<HashMap<u64, PendingResp>>> =
         Arc::new(Mutex::new(HashMap::new()));
     let (resp_tx, resp_rx) = channel::<Response>();
     let pump = {
@@ -276,21 +296,30 @@ fn serve_conn(
 fn handle_frame(
     server: &Server,
     image_hw: usize,
-    idmap: &Mutex<HashMap<u64, u64>>,
+    idmap: &Mutex<HashMap<u64, PendingResp>>,
     resp_tx: &Sender<Response>,
     frame: Frame,
 ) -> Option<Vec<u8>> {
+    // Every reply is stamped with the requester's wire version, so a
+    // v1/v2 peer never sees a frame above what it can parse.
+    let version = frame.version;
     match frame.ty {
         FrameType::Submit => {
+            let ingest_start_ns = now_ns();
             let sub =
                 match wire::parse_submit(frame.version, &frame.payload) {
                     Ok(x) => x,
                     Err(e) => {
-                        return Some(error_frame(frame.id, &e.to_string()))
+                        return Some(error_frame(
+                            version,
+                            frame.id,
+                            &e.to_string(),
+                        ))
                     }
                 };
             if sub.image.shape() != [3, image_hw, image_hw] {
                 return Some(error_frame(
+                    version,
                     frame.id,
                     &format!(
                         "image shape {:?} does not match this worker's \
@@ -299,9 +328,13 @@ fn handle_frame(
                     ),
                 ));
             }
+            let ingest = sub.trace.then(|| {
+                (ingest_start_ns, now_ns(), frame.payload.len() as u64)
+            });
             let req = SubmitRequest::new(sub.image)
                 .with_key(sub.key)
-                .with_priority(sub.priority);
+                .with_priority(sub.priority)
+                .with_trace(sub.trace_id, sub.trace);
             let req = match sub.deadline {
                 Some(d) => req.with_deadline(d),
                 None => req,
@@ -311,48 +344,59 @@ fn handle_frame(
             let mut map = idmap.lock().unwrap();
             match server.submit(req, resp_tx.clone()) {
                 SubmitOutcome::Enqueued { id } => {
-                    map.insert(id, frame.id);
+                    map.insert(
+                        id,
+                        PendingResp { wire_id: frame.id, version, ingest },
+                    );
                     None
                 }
                 SubmitOutcome::Shed { priority, queued } => {
                     drop(map);
-                    Some(
-                        Frame::overloaded(
-                            frame.id,
-                            priority,
-                            queued as u64,
-                            &format!(
-                                "worker shed {} class request \
-                                 ({queued} queued)",
-                                priority.name()
-                            ),
-                        )
-                        .encode(),
-                    )
+                    let f = Frame::overloaded(
+                        frame.id,
+                        priority,
+                        queued as u64,
+                        &format!(
+                            "worker shed {} class request \
+                             ({queued} queued)",
+                            priority.name()
+                        ),
+                    );
+                    Some(Frame { version, ..f }.encode())
                 }
                 SubmitOutcome::Closed => {
                     drop(map);
-                    Some(error_frame(frame.id, "worker is shutting down"))
+                    Some(error_frame(
+                        version,
+                        frame.id,
+                        "worker is shutting down",
+                    ))
                 }
             }
         }
         FrameType::Heartbeat => Some(frame.encode()),
         FrameType::MetricsReq => {
-            let snap = MetricsSnapshot::from_metrics(&server.metrics);
-            Some(
-                Frame::new(FrameType::MetricsResp, frame.id, snap.encode())
-                    .encode(),
-            )
+            // v3 requesters get the telemetry block appended; older
+            // ones get the bare snapshot their strict parse expects.
+            let report = ObsReport::single_node(
+                MetricsSnapshot::from_metrics(&server.metrics),
+                server.telemetry.snapshot(),
+            );
+            let payload = report.encode_wire(version, false);
+            let f = Frame::new(FrameType::MetricsResp, frame.id, payload);
+            Some(Frame { version, ..f }.encode())
         }
         other => Some(error_frame(
+            version,
             frame.id,
             &format!("worker cannot serve frame type {other:?}"),
         )),
     }
 }
 
-fn error_frame(id: u64, msg: &str) -> Vec<u8> {
-    Frame::new(FrameType::Error, id, msg.as_bytes().to_vec()).encode()
+fn error_frame(version: u16, id: u64, msg: &str) -> Vec<u8> {
+    let f = Frame::new(FrameType::Error, id, msg.as_bytes().to_vec());
+    Frame { version, ..f }.encode()
 }
 
 fn writer_loop(mut stream: TcpStream, rx: Receiver<Vec<u8>>) {
@@ -365,17 +409,29 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<Vec<u8>>) {
 
 fn response_pump(
     rx: Receiver<Response>,
-    idmap: Arc<Mutex<HashMap<u64, u64>>>,
+    idmap: Arc<Mutex<HashMap<u64, PendingResp>>>,
     out_tx: Sender<Vec<u8>>,
     st_respond: Arc<Stage>,
 ) {
-    while let Ok(resp) = rx.recv() {
+    while let Ok(mut resp) = rx.recv() {
         let _t = st_respond.time();
-        let wire_id = idmap.lock().unwrap().remove(&resp.id);
-        let Some(wire_id) = wire_id else { continue };
-        let payload = WireResponse::from_response(&resp).encode();
-        let bytes =
-            Frame::new(FrameType::Response, wire_id, payload).encode();
+        let pending = idmap.lock().unwrap().remove(&resp.id);
+        let Some(pending) = pending else { continue };
+        // Sampled requests: append this node's ingest span (frame
+        // receipt -> coordinator submit) to the coordinator-assembled
+        // record before it goes back on the wire.
+        if let (Some(rec), Some((start, end, bytes))) =
+            (resp.trace.as_mut(), pending.ingest)
+        {
+            rec.push("worker.ingest", start, end, bytes, 0);
+        }
+        let payload = wire::encode_response(
+            pending.version,
+            &WireResponse::from_response(&resp),
+            resp.trace.as_ref(),
+        );
+        let f = Frame::new(FrameType::Response, pending.wire_id, payload);
+        let bytes = Frame { version: pending.version, ..f }.encode();
         st_respond.add_bytes(bytes.len() as u64);
         if out_tx.send(bytes).is_err() {
             break;

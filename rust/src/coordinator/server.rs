@@ -27,6 +27,7 @@ use super::batch_manager::{Admission, BatchManager, Priority};
 use super::metrics::Metrics;
 use crate::backend::{InferenceBackend, ModelOutput};
 use crate::compress::{self, Codec, CodecId, SpillBuf};
+use crate::obs::{now_ns, FlightRecorder, TerminalKind, TraceRecord};
 use crate::telemetry::Telemetry;
 use crate::tensor::Tensor;
 use crate::zebra::bandwidth::ELEM_BITS;
@@ -41,16 +42,26 @@ pub struct SubmitRequest {
     pub key: u64,
     pub priority: Priority,
     pub deadline: Option<Duration>,
+    /// Edge-assigned trace id (0 = untraced). Rides into
+    /// flight-recorder events even when the request isn't sampled.
+    pub trace_id: u64,
+    /// Sampled: the server assembles a [`TraceRecord`] (queue wait,
+    /// batch assembly, execution, per-layer prune/encode) and returns
+    /// it on [`Response::trace`].
+    pub trace: bool,
     pub image: Tensor,
 }
 
 impl SubmitRequest {
-    /// Defaults: key 0, `Normal` priority, no explicit deadline.
+    /// Defaults: key 0, `Normal` priority, no explicit deadline,
+    /// untraced.
     pub fn new(image: Tensor) -> SubmitRequest {
         SubmitRequest {
             key: 0,
             priority: Priority::Normal,
             deadline: None,
+            trace_id: 0,
+            trace: false,
             image,
         }
     }
@@ -67,6 +78,14 @@ impl SubmitRequest {
 
     pub fn with_deadline(mut self, d: Duration) -> SubmitRequest {
         self.deadline = Some(d);
+        self
+    }
+
+    /// Attach an edge-assigned trace id; `sampled` turns on span
+    /// assembly for this request.
+    pub fn with_trace(mut self, id: u64, sampled: bool) -> SubmitRequest {
+        self.trace_id = id;
+        self.trace = sampled;
         self
     }
 }
@@ -99,6 +118,10 @@ pub struct Request {
     pub id: u64,
     pub image: Tensor,
     pub enqueued: Instant,
+    /// Edge-assigned trace id (0 = untraced).
+    pub trace_id: u64,
+    /// Sampled: assemble and return a [`TraceRecord`].
+    pub traced: bool,
     pub reply: Sender<Response>,
 }
 
@@ -117,6 +140,11 @@ pub struct Response {
     /// cross-node spill shipping (0 unless the server ships spills).
     pub spill_frame_bytes: u64,
     pub latency: Duration,
+    /// Sampled requests only: the server-side spans (queue wait, batch
+    /// assembly, execution with batch-mates count, per-layer
+    /// prune/encode with zero-block permille). Callers up the stack
+    /// (cluster worker, router, client) append their own spans.
+    pub trace: Option<TraceRecord>,
 }
 
 impl Response {
@@ -313,6 +341,11 @@ pub struct ServerConfig {
     /// as `SpillShip` wire frames); without a sink the frames are
     /// metered but not materialized, preserving the PR 1 behavior.
     pub spill_sink: Option<Sender<Vec<u8>>>,
+    /// Flight recorder (`--flight-dir`): sheds and deadline misses
+    /// record terminal events (and dump the ring when a directory is
+    /// configured); completed sampled traces are ring-buffered for
+    /// post-mortems. `None` = no recording.
+    pub flight: Option<Arc<FlightRecorder>>,
 }
 
 impl Default for ServerConfig {
@@ -324,6 +357,7 @@ impl Default for ServerConfig {
             max_batch: 0,
             ship_spills: None,
             spill_sink: None,
+            flight: None,
         }
     }
 }
@@ -338,6 +372,8 @@ pub struct Server {
     /// `snapshot().coverage("serve.batch", ...)` attributes (nearly)
     /// all worker wall time.
     pub telemetry: Arc<Telemetry>,
+    /// The flight recorder, when configured (shared with the workers).
+    pub flight: Option<Arc<FlightRecorder>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     next_id: std::sync::atomic::AtomicU64,
 }
@@ -383,14 +419,16 @@ impl Server {
             let s = shipper.clone();
             let sink = cfg.spill_sink.clone();
             let t = telemetry.clone();
+            let f = cfg.flight.clone();
             workers.push(std::thread::spawn(move || {
-                worker_loop(b, e, m, s, sink, t)
+                worker_loop(b, e, m, s, sink, t, f)
             }));
         }
         Server {
             manager,
             metrics,
             telemetry,
+            flight: cfg.flight,
             workers,
             next_id: std::sync::atomic::AtomicU64::new(0),
         }
@@ -406,13 +444,21 @@ impl Server {
         req: SubmitRequest,
         reply: Sender<Response>,
     ) -> SubmitOutcome {
-        let SubmitRequest { key, priority, deadline, image } = req;
+        let SubmitRequest { key, priority, deadline, trace_id, trace, image } =
+            req;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let admission = self.manager.push(
             key,
             priority,
             deadline,
-            Request { id, image, enqueued: Instant::now(), reply },
+            Request {
+                id,
+                image,
+                enqueued: Instant::now(),
+                trace_id,
+                traced: trace,
+                reply,
+            },
         );
         match admission {
             Admission::Accepted => {
@@ -425,6 +471,17 @@ impl Server {
             Admission::Shed { queued } => {
                 self.metrics.requests.fetch_add(1, Ordering::Relaxed);
                 self.metrics.count_shed(priority);
+                if let Some(f) = &self.flight {
+                    f.record_event(
+                        trace_id,
+                        TerminalKind::shed(priority),
+                        &format!(
+                            "{} class over its admission cap \
+                             ({queued} queued)",
+                            priority.name()
+                        ),
+                    );
+                }
                 SubmitOutcome::Shed { priority, queued }
             }
             Admission::Closed => SubmitOutcome::Closed,
@@ -477,6 +534,7 @@ fn worker_loop(
     shipper: Option<Arc<dyn Codec>>,
     spill_sink: Option<Sender<Vec<u8>>>,
     telemetry: Arc<Telemetry>,
+    flight: Option<Arc<FlightRecorder>>,
 ) {
     let hw = exec.image_hw();
     // Stage handles resolved once — recording inside the loop is two
@@ -508,6 +566,25 @@ fn worker_loop(
         metrics
             .queue_depth
             .store(manager.depth() as u64, Ordering::Relaxed);
+        if batch.deadline_misses > 0 {
+            if let Some(f) = &flight {
+                f.record_event(
+                    0,
+                    TerminalKind::DeadlineMiss,
+                    &format!(
+                        "{} of {n} batch items past their deadline at \
+                         flush",
+                        batch.deadline_misses
+                    ),
+                );
+            }
+        }
+        // Trace timestamps are taken only when this batch carries a
+        // sampled request — untraced batches never touch the wall
+        // clock beyond the telemetry Instants they already pay for.
+        let any_traced = batch.items.iter().any(|r| r.traced);
+        let batch_start = Instant::now();
+        let batch_start_ns = if any_traced { now_ns() } else { 0 };
         // Assemble the padded batch tensor.
         let t_assemble = st_assemble.time();
         let mut x = Tensor::zeros(&[exec_size, 3, hw, hw]);
@@ -517,6 +594,7 @@ fn worker_loop(
             x.data_mut()[i * per..(i + 1) * per].copy_from_slice(src);
         }
         drop(t_assemble);
+        let assemble_end_ns = if any_traced { now_ns() } else { 0 };
         // Cross-node shipping: encode the batch into the worker's
         // reused SpillBuf and meter the exact `.zspill` frame size a
         // peer node receives. Without a sink the frame is never
@@ -542,14 +620,31 @@ fn worker_loop(
             }
             None => 0,
         };
+        let exec_start_ns = if any_traced { now_ns() } else { 0 };
         let result = {
             let _t = st_execute.time();
             exec.execute(&x)
         };
+        let exec_end_ns = if any_traced { now_ns() } else { 0 };
         match result {
             Ok(out) => {
                 let _t = st_respond.time();
-                respond(batch.items, &out, &metrics, frame_share);
+                let trace_ctx = any_traced.then_some(BatchTrace {
+                    batch_start,
+                    batch_start_ns,
+                    assemble_end_ns,
+                    exec_start_ns,
+                    exec_end_ns,
+                    mates: n,
+                });
+                respond(
+                    batch.items,
+                    &out,
+                    &metrics,
+                    frame_share,
+                    trace_ctx,
+                    flight.as_deref(),
+                );
             }
             Err(e) => {
                 // Failed batch: drop the reply channels; callers see a
@@ -562,20 +657,45 @@ fn worker_loop(
     }
 }
 
+/// Batch-level timestamps for trace assembly, captured by the worker
+/// loop only when the batch carries a sampled request.
+struct BatchTrace {
+    batch_start: Instant,
+    batch_start_ns: u64,
+    assemble_end_ns: u64,
+    exec_start_ns: u64,
+    exec_end_ns: u64,
+    /// Real items sharing the executed batch (the span's aux).
+    mates: usize,
+}
+
 fn respond(
     items: Vec<Request>,
     out: &ModelOutput,
     metrics: &Metrics,
     spill_frame_bytes: u64,
+    trace_ctx: Option<BatchTrace>,
+    flight: Option<&FlightRecorder>,
 ) {
     let classes = out.logits.shape()[1];
     for (i, req) in items.into_iter().enumerate() {
         let logits =
             out.logits.data()[i * classes..(i + 1) * classes].to_vec();
         let predicted = argmax(&logits);
+        let mut rec = (req.traced && trace_ctx.is_some())
+            .then(|| TraceRecord::new(req.trace_id));
         // Per-image bandwidth accounting from this request's mask rows
         // (Eq. 2: kept blocks * B^2 * 4 bytes; Eq. 3: 1 bit per block).
+        // The same sweep yields the per-layer zero-block permille the
+        // layer spans carry.
         let (mut dense, mut stored, mut index) = (0u64, 0u64, 0u64);
+        // Per-layer execution time is split from the backend's
+        // measured layer_nanos; layers the backend didn't time get
+        // zero-length spans anchored at the execution start.
+        let mut layer_off_ns = trace_ctx
+            .as_ref()
+            .map(|c| c.exec_start_ns)
+            .unwrap_or(0);
         for (mi, m) in out.masks.iter().enumerate() {
             let s = m.shape(); // (batch, C, H/b, W/b)
             let blocks: usize = s[1] * s[2] * s[3];
@@ -584,15 +704,66 @@ fn respond(
             let elems_per_block =
                 out.block_elems.get(mi).copied().unwrap_or(16);
             let bytes_per_block = elems_per_block * ELEM_BITS / 8;
+            let layer_stored = (kept * bytes_per_block) as u64;
             dense += (blocks * bytes_per_block) as u64;
-            stored += (kept * bytes_per_block) as u64;
+            stored += layer_stored;
             index += blocks.div_ceil(8) as u64;
+            if let Some(rec) = rec.as_mut() {
+                let zero_permille = if blocks > 0 {
+                    ((blocks - kept) * 1000 / blocks) as u64
+                } else {
+                    0
+                };
+                let dur = out.layer_nanos.get(mi).copied().unwrap_or(0);
+                rec.push(
+                    &format!("layer.{mi}.prune_encode"),
+                    layer_off_ns,
+                    layer_off_ns + dur,
+                    layer_stored,
+                    zero_permille,
+                );
+                layer_off_ns += dur;
+            }
         }
         metrics.dense_bytes.fetch_add(dense, Ordering::Relaxed);
         metrics.stored_bytes.fetch_add(stored, Ordering::Relaxed);
         metrics.index_bytes.fetch_add(index, Ordering::Relaxed);
         let latency = req.enqueued.elapsed();
         metrics.record_latency_us(latency.as_micros() as u64);
+        let trace = match (rec, &trace_ctx) {
+            (Some(mut rec), Some(ctx)) => {
+                let wait_ns = ctx
+                    .batch_start
+                    .saturating_duration_since(req.enqueued)
+                    .as_nanos() as u64;
+                rec.push(
+                    "queue.wait",
+                    ctx.batch_start_ns.saturating_sub(wait_ns),
+                    ctx.batch_start_ns,
+                    0,
+                    0,
+                );
+                rec.push(
+                    "serve.assemble",
+                    ctx.batch_start_ns,
+                    ctx.assemble_end_ns,
+                    req.image.data().len() as u64 * 4,
+                    0,
+                );
+                rec.push(
+                    "serve.execute",
+                    ctx.exec_start_ns,
+                    ctx.exec_end_ns,
+                    stored + index,
+                    ctx.mates as u64,
+                );
+                if let Some(f) = flight {
+                    f.record_trace(rec.clone());
+                }
+                Some(rec)
+            }
+            _ => None,
+        };
         let _ = req.reply.send(Response {
             id: req.id,
             logits,
@@ -602,6 +773,7 @@ fn respond(
             index_bytes: index,
             spill_frame_bytes,
             latency,
+            trace,
         });
     }
 }
@@ -648,6 +820,7 @@ mod tests {
                 logits: Tensor::from_vec(&[b, 2], logits),
                 masks: vec![Tensor::from_vec(&[b, 1, 2, 2], mask)],
                 block_elems: vec![4],
+                layer_nanos: vec![100],
             })
         }
         fn batch_sizes(&self) -> Vec<usize> {
@@ -1066,6 +1239,105 @@ mod tests {
         // Two keys -> at least two batches even though 16 fits in 8+8.
         assert!(srv.metrics.batches.load(Ordering::Relaxed) >= 2);
         Arc::try_unwrap(srv).ok().map(|s| s.shutdown());
+    }
+
+    #[test]
+    fn sampled_requests_return_a_full_trace() {
+        let exec = Arc::new(MockExec {
+            hw: 4,
+            sizes: vec![1],
+            delay: Duration::from_micros(200),
+        });
+        let flight = Arc::new(crate::obs::FlightRecorder::new(
+            "unit", 8, None,
+        ));
+        let srv = Server::start(
+            exec,
+            ServerConfig {
+                flight: Some(flight.clone()),
+                ..ServerConfig::default()
+            },
+        );
+        let (tx, rx) = channel();
+        let req = SubmitRequest::new(image(4, 0.9))
+            .with_trace(0xABCD_EF01_2345_6789, true);
+        assert!(matches!(
+            srv.submit(req, tx),
+            SubmitOutcome::Enqueued { .. }
+        ));
+        let r = rx.recv().unwrap();
+        let rec = r.trace.expect("sampled request must carry a trace");
+        assert_eq!(rec.trace_id, 0xABCD_EF01_2345_6789);
+        for label in ["queue.wait", "serve.assemble", "serve.execute"] {
+            assert!(rec.span(label).is_some(), "missing span {label}");
+        }
+        let layers = rec.spans_with_prefix("layer.");
+        assert_eq!(layers.len(), 1, "one mask layer -> one layer span");
+        assert_eq!(layers[0].label, "layer.0.prune_encode");
+        assert_eq!(layers[0].aux, 0, "bright image keeps every block");
+        assert!(layers[0].bytes > 0, "kept blocks store bytes");
+        let exec_span = rec.span("serve.execute").unwrap();
+        assert_eq!(exec_span.aux, 1, "one batch-mate");
+        assert!(exec_span.duration_ns() > 0, "mock sleeps 200us");
+        // The completed trace landed in the flight ring too.
+        assert!(flight
+            .entries()
+            .iter()
+            .any(|e| matches!(e,
+                crate::obs::FlightEntry::Trace(t)
+                    if t.trace_id == rec.trace_id)));
+        // An unsampled request in the same server stays untraced.
+        let r2 = srv.classify(image(4, 0.9)).unwrap();
+        assert!(r2.trace.is_none());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shed_records_a_flight_event_naming_the_trace_id() {
+        let exec = Arc::new(MockExec {
+            hw: 4,
+            sizes: vec![1],
+            delay: Duration::from_millis(50),
+        });
+        let flight = Arc::new(crate::obs::FlightRecorder::new(
+            "unit", 8, None,
+        ));
+        let srv = Server::start(
+            exec,
+            ServerConfig {
+                max_wait: Duration::ZERO,
+                max_queue: 8,
+                flight: Some(flight.clone()),
+                ..ServerConfig::default()
+            },
+        );
+        // Drive Low past its 50% admission cap with traced submits.
+        let mut keep = Vec::new();
+        let mut shed_id = None;
+        for i in 0..16u64 {
+            let (tx, rx) = channel();
+            let req = SubmitRequest::new(image(4, 0.5))
+                .with_priority(Priority::Low)
+                .with_trace(1000 + i, false);
+            match srv.submit(req, tx) {
+                SubmitOutcome::Enqueued { .. } => keep.push(rx),
+                SubmitOutcome::Shed { .. } => {
+                    shed_id = Some(1000 + i);
+                    break;
+                }
+                SubmitOutcome::Closed => panic!("not closed"),
+            }
+        }
+        let shed_id = shed_id.expect("Low must hit its cap");
+        let hit = flight.entries().into_iter().any(|e| match e {
+            crate::obs::FlightEntry::Event { trace_id, kind, .. } => {
+                trace_id == shed_id
+                    && kind == crate::obs::TerminalKind::ShedLow
+            }
+            _ => false,
+        });
+        assert!(hit, "shed must record a shed_low event with the id");
+        srv.shutdown();
     }
 
     #[test]

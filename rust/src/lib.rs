@@ -52,6 +52,11 @@
 //!   a mini-batch loop that checkpoints `w%05d.zten` leaves the
 //!   reference backend serves unchanged — the train -> artifact ->
 //!   serve loop with no Python anywhere.
+//! - [`obs`] — request-level observability: 64-bit trace ids riding
+//!   wire v3 with per-hop spans, a flight-recorder ring dumped as
+//!   JSON-lines on terminal events, and the unified metrics-export
+//!   plane (`zebra obs`: Prometheus text + JSON) merging serving
+//!   counters, cluster stats, and telemetry stages.
 //! - [`telemetry`] — labeled wall-time/byte stages with lock-cheap
 //!   recording and mergeable snapshots, threaded through the serve hot
 //!   loop, the cluster nodes, and the simulator so every stage's time
@@ -70,6 +75,7 @@ pub mod compress;
 pub mod coordinator;
 pub mod hal;
 pub mod models;
+pub mod obs;
 pub mod runtime;
 pub mod telemetry;
 pub mod tensor;

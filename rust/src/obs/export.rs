@@ -1,0 +1,560 @@
+//! The unified metrics-export plane: one registry merging the serving
+//! counters ([`crate::coordinator::Metrics`] frozen as a
+//! [`MetricsSnapshot`]), the router's cluster-wide [`ClusterStats`],
+//! and the stage-level [`TelemetrySnapshot`] — exposed as Prometheus
+//! text exposition and as JSON.
+//!
+//! This is also the home of the telemetry wire codec: wire v3's
+//! `MetricsResp` appends an [`encode_telemetry`] block after the
+//! stats, so `zebra obs` / loadgen can scrape stage timings from live
+//! nodes instead of waiting for the exit-time report.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::metrics::{ClusterStats, MetricsSnapshot};
+use crate::cluster::wire::FrameError;
+use crate::telemetry::{StageStats, TelemetrySnapshot};
+use crate::util::json::Value;
+
+/// Cap on stages in one telemetry wire block (far above any real
+/// registry; bounds allocation from a hostile count).
+const MAX_STAGES: usize = 4096;
+
+/// Cap on a stage label's wire length.
+const MAX_STAGE_LABEL: usize = 256;
+
+/// Wire encoding of a telemetry snapshot: `[n_stages: u16]` then per
+/// stage `[label_len: u16][label][nanos: u64][calls: u64][bytes:
+/// u64]`, little-endian, labels in BTreeMap (sorted) order so the
+/// encoding is canonical.
+pub fn encode_telemetry(snap: &TelemetrySnapshot) -> Vec<u8> {
+    let n = snap.stages.len().min(MAX_STAGES);
+    let mut out = Vec::with_capacity(2 + n * 40);
+    out.extend_from_slice(&(n as u16).to_le_bytes());
+    for (label, s) in snap.stages.iter().take(n) {
+        let bytes = label.as_bytes();
+        let len = bytes.len().min(MAX_STAGE_LABEL);
+        let mut cut = len;
+        while !label.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        out.extend_from_slice(&(cut as u16).to_le_bytes());
+        out.extend_from_slice(&bytes[..cut]);
+        out.extend_from_slice(&s.nanos.to_le_bytes());
+        out.extend_from_slice(&s.calls.to_le_bytes());
+        out.extend_from_slice(&s.bytes.to_le_bytes());
+    }
+    out
+}
+
+/// Parse one telemetry block off the front of `payload`; returns the
+/// snapshot and the remaining bytes. Strictly bounds-checked.
+pub fn parse_telemetry_prefix(
+    payload: &[u8],
+) -> Result<(TelemetrySnapshot, &[u8]), FrameError> {
+    if payload.len() < 2 {
+        return Err(FrameError::Malformed("telemetry block too short"));
+    }
+    let n = u16::from_le_bytes([payload[0], payload[1]]) as usize;
+    if n > MAX_STAGES {
+        return Err(FrameError::Malformed(
+            "telemetry block declares an absurd stage count",
+        ));
+    }
+    let mut stages = BTreeMap::new();
+    let mut off = 2usize;
+    for _ in 0..n {
+        if payload.len() < off + 2 {
+            return Err(FrameError::Malformed(
+                "telemetry stage shorter than its label length",
+            ));
+        }
+        let label_len =
+            u16::from_le_bytes([payload[off], payload[off + 1]]) as usize;
+        if label_len > MAX_STAGE_LABEL {
+            return Err(FrameError::Malformed(
+                "telemetry stage label over the length cap",
+            ));
+        }
+        off += 2;
+        if payload.len() < off + label_len + 24 {
+            return Err(FrameError::Malformed(
+                "telemetry stage shorter than its declared fields",
+            ));
+        }
+        let label = std::str::from_utf8(&payload[off..off + label_len])
+            .map_err(|_| {
+                FrameError::Malformed("telemetry stage label not UTF-8")
+            })?
+            .to_string();
+        off += label_len;
+        let u64_at = |o: usize| {
+            u64::from_le_bytes(payload[o..o + 8].try_into().expect("8"))
+        };
+        stages.insert(
+            label,
+            StageStats {
+                nanos: u64_at(off),
+                calls: u64_at(off + 8),
+                bytes: u64_at(off + 16),
+            },
+        );
+        off += 24;
+    }
+    Ok((TelemetrySnapshot { stages }, &payload[off..]))
+}
+
+/// Strict parse of [`encode_telemetry`] output (trailing bytes error).
+pub fn parse_telemetry(
+    payload: &[u8],
+) -> Result<TelemetrySnapshot, FrameError> {
+    let (snap, rest) = parse_telemetry_prefix(payload)?;
+    if !rest.is_empty() {
+        return Err(FrameError::Malformed(
+            "telemetry block has trailing bytes",
+        ));
+    }
+    Ok(snap)
+}
+
+/// Everything one scrape knows: the counter/histogram plane and the
+/// stage-timing plane, merged from however many nodes answered.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ObsReport {
+    /// Aggregate + router counters. A single node (bare worker,
+    /// in-process server) reports with the router counters zeroed and
+    /// `workers_total == 0`.
+    pub stats: ClusterStats,
+    pub telemetry: TelemetrySnapshot,
+}
+
+impl ObsReport {
+    /// Wrap one node's snapshot (no router in the picture).
+    pub fn single_node(
+        snapshot: MetricsSnapshot,
+        telemetry: TelemetrySnapshot,
+    ) -> ObsReport {
+        ObsReport {
+            stats: ClusterStats { aggregate: snapshot, ..Default::default() },
+            telemetry,
+        }
+    }
+
+    /// Decode a `MetricsResp` payload from any node kind and wire
+    /// version: a router's [`ClusterStats`] or a worker's
+    /// [`MetricsSnapshot`], with the v3 telemetry block appended when
+    /// the responder saw a v3 request. Strict about trailing bytes in
+    /// every combination.
+    pub fn parse_wire(
+        version: u16,
+        payload: &[u8],
+    ) -> Result<ObsReport, FrameError> {
+        let telemetry_tail =
+            |rest: &[u8]| -> Result<TelemetrySnapshot, FrameError> {
+                if rest.is_empty() {
+                    Ok(TelemetrySnapshot::default())
+                } else if version >= 3 {
+                    parse_telemetry(rest)
+                } else {
+                    Err(FrameError::Malformed(
+                        "metrics payload has trailing bytes",
+                    ))
+                }
+            };
+        if let Ok((stats, rest)) = ClusterStats::parse_prefix(payload) {
+            if let Ok(telemetry) = telemetry_tail(rest) {
+                return Ok(ObsReport { stats, telemetry });
+            }
+        }
+        let (snap, rest) = MetricsSnapshot::parse_prefix(payload)?;
+        let telemetry = telemetry_tail(rest)?;
+        Ok(ObsReport::single_node(snap, telemetry))
+    }
+
+    /// Encode as a `MetricsResp` payload for a requester speaking
+    /// `version` (the telemetry block only rides on v3+ — older
+    /// clients parse the stats strictly and would reject it).
+    pub fn encode_wire(&self, version: u16, router: bool) -> Vec<u8> {
+        let mut out = if router {
+            self.stats.encode()
+        } else {
+            self.stats.aggregate.encode()
+        };
+        if version >= 3 {
+            out.extend_from_slice(&encode_telemetry(&self.telemetry));
+        }
+        out
+    }
+
+    /// Prometheus text exposition
+    /// (<https://prometheus.io/docs/instrumenting/exposition_formats/>):
+    /// one stable name per counter, classes/quantiles/stages as
+    /// labels. Names are documented in `rust/docs/observability.md`.
+    pub fn prometheus(&self) -> String {
+        let a = &self.stats.aggregate;
+        let mut out = String::new();
+        let mut counter = |name: &str, help: &str, v: u64| {
+            out.push_str(&format!(
+                "# HELP zebra_{name} {help}\n# TYPE zebra_{name} counter\n\
+                 zebra_{name} {v}\n"
+            ));
+        };
+        counter("requests_total", "Requests submitted", a.requests);
+        counter("responses_total", "Requests answered", a.responses);
+        counter("batches_total", "Batches executed", a.batches);
+        counter(
+            "batched_items_total",
+            "Real items across executed batches",
+            a.batched_items,
+        );
+        counter("padded_slots_total", "Padding slots executed", a.padded_slots);
+        counter("dense_bytes_total", "Eq. 2 dense activation bytes", a.dense_bytes);
+        counter("stored_bytes_total", "Eq. 2 stored activation bytes", a.stored_bytes);
+        counter("index_bytes_total", "Eq. 3 block-index bytes", a.index_bytes);
+        counter(
+            "shipped_spill_bytes_total",
+            "Shipped .zspill frame bytes",
+            a.shipped_spill_bytes,
+        );
+        counter("deadline_miss_total", "Requests served past deadline", a.deadline_miss);
+        counter("failed_total", "Admitted requests that failed", a.failed);
+        out.push_str(&format!(
+            "# HELP zebra_shed_total Requests shed by admission control\n\
+             # TYPE zebra_shed_total counter\n\
+             zebra_shed_total{{class=\"low\"}} {}\n\
+             zebra_shed_total{{class=\"normal\"}} {}\n\
+             zebra_shed_total{{class=\"high\"}} {}\n",
+            a.shed_low, a.shed_normal, a.shed_high
+        ));
+        out.push_str(&format!(
+            "# HELP zebra_queue_depth Admission queue occupancy\n\
+             # TYPE zebra_queue_depth gauge\nzebra_queue_depth {}\n",
+            a.queue_depth
+        ));
+        out.push_str(&format!(
+            "# HELP zebra_exec_threads Compute threads across nodes\n\
+             # TYPE zebra_exec_threads gauge\nzebra_exec_threads {}\n",
+            a.exec_threads
+        ));
+        out.push_str(&format!(
+            "# HELP zebra_bw_reduction_pct Eq. 2-3 bandwidth reduction\n\
+             # TYPE zebra_bw_reduction_pct gauge\n\
+             zebra_bw_reduction_pct {:.3}\n",
+            a.reduction_pct()
+        ));
+        out.push_str(
+            "# HELP zebra_latency_us Serving latency percentile \
+             (bucket upper bound)\n# TYPE zebra_latency_us gauge\n",
+        );
+        for (q, p) in [("0.5", 0.5), ("0.95", 0.95), ("0.99", 0.99)] {
+            out.push_str(&format!(
+                "zebra_latency_us{{quantile=\"{q}\"}} {}\n",
+                a.latency_percentile_us(p)
+            ));
+        }
+        let s = &self.stats;
+        if s.workers_total > 0 {
+            let mut g = |name: &str, help: &str, v: u64| {
+                out.push_str(&format!(
+                    "# HELP zebra_router_{name} {help}\n\
+                     # TYPE zebra_router_{name} counter\n\
+                     zebra_router_{name} {v}\n"
+                ));
+            };
+            g("workers_total", "Configured workers", s.workers_total);
+            g("workers_alive", "Workers answering heartbeats", s.workers_alive);
+            g("routed_total", "Submits dispatched", s.routed);
+            g("retries_total", "Failover re-dispatches", s.retries);
+            g("rejected_total", "Terminal refusals", s.rejected);
+            g("failed_total", "Router-side faults", s.failed);
+            out.push_str(
+                "# HELP zebra_router_latency_us Router dispatch latency \
+                 percentile\n# TYPE zebra_router_latency_us gauge\n",
+            );
+            for (q, p) in [("0.5", 0.5), ("0.95", 0.95), ("0.99", 0.99)] {
+                out.push_str(&format!(
+                    "zebra_router_latency_us{{quantile=\"{q}\"}} {}\n",
+                    s.router_percentile_us(p)
+                ));
+            }
+        }
+        if !self.telemetry.stages.is_empty() {
+            out.push_str(
+                "# HELP zebra_stage_nanos_total Wall time per stage\n\
+                 # TYPE zebra_stage_nanos_total counter\n",
+            );
+            for (label, st) in &self.telemetry.stages {
+                out.push_str(&format!(
+                    "zebra_stage_nanos_total{{stage=\"{label}\"}} {}\n",
+                    st.nanos
+                ));
+            }
+            out.push_str(
+                "# HELP zebra_stage_calls_total Invocations per stage\n\
+                 # TYPE zebra_stage_calls_total counter\n",
+            );
+            for (label, st) in &self.telemetry.stages {
+                out.push_str(&format!(
+                    "zebra_stage_calls_total{{stage=\"{label}\"}} {}\n",
+                    st.calls
+                ));
+            }
+            out.push_str(
+                "# HELP zebra_stage_bytes_total Bytes per stage\n\
+                 # TYPE zebra_stage_bytes_total counter\n",
+            );
+            for (label, st) in &self.telemetry.stages {
+                out.push_str(&format!(
+                    "zebra_stage_bytes_total{{stage=\"{label}\"}} {}\n",
+                    st.bytes
+                ));
+            }
+        }
+        out
+    }
+
+    /// The same registry as a JSON document (`zebra obs --json`,
+    /// loadgen's scrape samples, `BENCH_PR8.json`'s cluster section).
+    pub fn to_json(&self) -> Value {
+        let a = &self.stats.aggregate;
+        let mut counters = BTreeMap::new();
+        for (k, v) in [
+            ("requests", a.requests),
+            ("responses", a.responses),
+            ("batches", a.batches),
+            ("batched_items", a.batched_items),
+            ("padded_slots", a.padded_slots),
+            ("dense_bytes", a.dense_bytes),
+            ("stored_bytes", a.stored_bytes),
+            ("index_bytes", a.index_bytes),
+            ("shipped_spill_bytes", a.shipped_spill_bytes),
+            ("exec_threads", a.exec_threads),
+            ("shed_low", a.shed_low),
+            ("shed_normal", a.shed_normal),
+            ("shed_high", a.shed_high),
+            ("deadline_miss", a.deadline_miss),
+            ("queue_depth", a.queue_depth),
+            ("failed", a.failed),
+        ] {
+            counters.insert(k.to_string(), Value::Num(v as f64));
+        }
+        let mut latency = BTreeMap::new();
+        for (k, p) in [("p50", 0.5), ("p95", 0.95), ("p99", 0.99)] {
+            latency.insert(
+                format!("{k}_us"),
+                Value::Num(a.latency_percentile_us(p) as f64),
+            );
+        }
+        let s = &self.stats;
+        let mut router = BTreeMap::new();
+        for (k, v) in [
+            ("workers_total", s.workers_total),
+            ("workers_alive", s.workers_alive),
+            ("routed", s.routed),
+            ("retries", s.retries),
+            ("rejected", s.rejected),
+            ("shed_low", s.shed_low),
+            ("shed_normal", s.shed_normal),
+            ("shed_high", s.shed_high),
+            ("failed", s.failed),
+            ("spill_frames_in", s.spill_frames_in),
+            ("spill_bytes_in", s.spill_bytes_in),
+        ] {
+            router.insert(k.to_string(), Value::Num(v as f64));
+        }
+        let mut stages = BTreeMap::new();
+        for (label, st) in &self.telemetry.stages {
+            let mut m = BTreeMap::new();
+            m.insert("nanos".to_string(), Value::Num(st.nanos as f64));
+            m.insert("calls".to_string(), Value::Num(st.calls as f64));
+            m.insert("bytes".to_string(), Value::Num(st.bytes as f64));
+            stages.insert(label.clone(), Value::Object(m));
+        }
+        let mut o = BTreeMap::new();
+        o.insert("counters".to_string(), Value::Object(counters));
+        o.insert("latency".to_string(), Value::Object(latency));
+        o.insert("router".to_string(), Value::Object(router));
+        o.insert(
+            "bw_reduction_pct".to_string(),
+            Value::Num((a.reduction_pct() * 1000.0).round() / 1000.0),
+        );
+        o.insert("telemetry".to_string(), Value::Object(stages));
+        Value::Object(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_telemetry() -> TelemetrySnapshot {
+        let mut t = TelemetrySnapshot::default();
+        t.stages.insert(
+            "serve.execute".into(),
+            StageStats { nanos: 5_000_000, calls: 12, bytes: 0 },
+        );
+        t.stages.insert(
+            "wire.handle".into(),
+            StageStats { nanos: 800_000, calls: 40, bytes: 4096 },
+        );
+        t
+    }
+
+    fn sample_snapshot() -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: 100,
+            responses: 97,
+            dense_bytes: 1000,
+            stored_bytes: 400,
+            index_bytes: 100,
+            shed_low: 3,
+            latency_buckets: vec![0, 0, 0, 0, 0, 0, 0, 97],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn telemetry_block_roundtrips_and_rejects_corruption() {
+        let t = sample_telemetry();
+        let bytes = encode_telemetry(&t);
+        assert_eq!(parse_telemetry(&bytes).unwrap(), t);
+        // Empty snapshot roundtrips.
+        let e = TelemetrySnapshot::default();
+        assert_eq!(parse_telemetry(&encode_telemetry(&e)).unwrap(), e);
+        // Every truncation errors.
+        for cut in 0..bytes.len() {
+            assert!(parse_telemetry(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        // Trailing garbage errors strictly, parses via prefix.
+        let mut noisy = bytes.clone();
+        noisy.extend_from_slice(b"xx");
+        assert!(parse_telemetry(&noisy).is_err());
+        let (back, rest) = parse_telemetry_prefix(&noisy).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(rest, b"xx");
+        // Absurd stage count errors before allocating.
+        let mut bad = bytes.clone();
+        bad[0..2].copy_from_slice(&u16::MAX.to_le_bytes());
+        assert!(parse_telemetry(&bad).is_err());
+    }
+
+    #[test]
+    fn wire_payload_dispatches_on_node_kind_and_version() {
+        let tel = sample_telemetry();
+        // Worker shape, v3: snapshot + telemetry.
+        let single =
+            ObsReport::single_node(sample_snapshot(), tel.clone());
+        let bytes = single.encode_wire(3, false);
+        let back = ObsReport::parse_wire(3, &bytes).unwrap();
+        assert_eq!(back.stats.aggregate, single.stats.aggregate);
+        assert_eq!(back.telemetry, tel);
+        assert_eq!(back.stats.workers_total, 0);
+        // Worker shape, v2: no telemetry block; old parse stays exact.
+        let v2 = single.encode_wire(2, false);
+        assert_eq!(
+            MetricsSnapshot::parse(&v2).unwrap(),
+            single.stats.aggregate
+        );
+        assert!(ObsReport::parse_wire(2, &v2).unwrap().telemetry.stages.is_empty());
+        // Router shape, v3.
+        let router = ObsReport {
+            stats: ClusterStats {
+                aggregate: sample_snapshot(),
+                workers_total: 2,
+                workers_alive: 2,
+                routed: 50,
+                ..Default::default()
+            },
+            telemetry: tel.clone(),
+        };
+        let bytes = router.encode_wire(3, true);
+        let back = ObsReport::parse_wire(3, &bytes).unwrap();
+        assert_eq!(back.stats, router.stats);
+        assert_eq!(back.telemetry, tel);
+        // Router shape, v2 is byte-identical to the legacy encoding.
+        assert_eq!(router.encode_wire(2, true), router.stats.encode());
+        // Trailing garbage after the telemetry block errors.
+        let mut noisy = router.encode_wire(3, true);
+        noisy.push(7);
+        assert!(ObsReport::parse_wire(3, &noisy).is_err());
+        // A v2 reader handed trailing bytes errors (never mis-parses).
+        let mut v2noisy = router.stats.encode();
+        v2noisy.push(7);
+        assert!(ObsReport::parse_wire(2, &v2noisy).is_err());
+    }
+
+    #[test]
+    fn prometheus_exposition_carries_every_plane() {
+        let report = ObsReport {
+            stats: ClusterStats {
+                aggregate: sample_snapshot(),
+                workers_total: 3,
+                workers_alive: 2,
+                routed: 44,
+                ..Default::default()
+            },
+            telemetry: sample_telemetry(),
+        };
+        let text = report.prometheus();
+        assert!(text.contains("zebra_requests_total 100"), "{text}");
+        assert!(
+            text.contains("zebra_shed_total{class=\"low\"} 3"),
+            "{text}"
+        );
+        assert!(
+            text.contains("zebra_latency_us{quantile=\"0.99\"}"),
+            "{text}"
+        );
+        assert!(text.contains("zebra_router_workers_alive 2"), "{text}");
+        assert!(
+            text.contains(
+                "zebra_stage_nanos_total{stage=\"serve.execute\"} 5000000"
+            ),
+            "{text}"
+        );
+        // Every non-comment line is `name[{labels}] value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(value.parse::<f64>().is_ok(), "bad value in {line:?}");
+            assert!(parts.next().unwrap().starts_with("zebra_"), "{line}");
+        }
+        // Single-node reports omit the router section.
+        let single = ObsReport::single_node(
+            sample_snapshot(),
+            TelemetrySnapshot::default(),
+        );
+        assert!(!single.prometheus().contains("zebra_router_"), "single");
+    }
+
+    #[test]
+    fn json_counters_match_the_snapshot() {
+        let report = ObsReport::single_node(
+            sample_snapshot(),
+            sample_telemetry(),
+        );
+        let v = report.to_json();
+        let text = crate::util::json::to_string(&v);
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(
+            back.get("counters").get("requests").as_usize(),
+            Some(100)
+        );
+        assert_eq!(
+            back.get("counters").get("shed_low").as_usize(),
+            Some(3)
+        );
+        assert_eq!(
+            back.get("telemetry")
+                .get("serve.execute")
+                .get("calls")
+                .as_usize(),
+            Some(12)
+        );
+        assert!(back.get("latency").get("p99_us").as_f64().is_some());
+        assert!(
+            (back.get("bw_reduction_pct").as_f64().unwrap() - 50.0).abs()
+                < 1e-9
+        );
+    }
+}

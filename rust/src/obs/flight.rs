@@ -1,0 +1,350 @@
+//! Flight recorder: a fixed-capacity ring of recent trace records and
+//! terminal events, dumped as JSON-lines on anything terminal.
+//!
+//! The ring is lock-cheap by construction: recording is one short
+//! `Mutex<VecDeque>` critical section (push + bounded pop), no
+//! allocation beyond the entry itself, and nothing on the hot path
+//! ever formats JSON — serialization happens only at dump time, which
+//! only terminal events (shed, deadline miss, conn error, worker
+//! death) trigger. Dumps are latest-wins per node
+//! (`<dir>/flight-<node>.jsonl`), so a shed storm rewrites one bounded
+//! file instead of filling a disk.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use crate::coordinator::Priority;
+use crate::util::json::{self, Value};
+
+use super::trace::TraceRecord;
+
+/// Default ring capacity (entries, traces + events combined).
+pub const FLIGHT_CAPACITY: usize = 256;
+
+/// Why a request (or a peer) terminally left the normal path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TerminalKind {
+    /// Admission control shed, split by class — `shed_low` is the
+    /// event the forced-shed smoke test greps for.
+    ShedLow,
+    ShedNormal,
+    ShedHigh,
+    /// Served after its explicit deadline had already passed.
+    DeadlineMiss,
+    /// A peer connection failed mid-request.
+    ConnError,
+    /// The router re-dispatched an in-flight request to another worker.
+    Redispatch,
+    /// A worker went silent / was killed.
+    WorkerDeath,
+}
+
+impl TerminalKind {
+    /// The shed event for a priority class.
+    pub fn shed(p: Priority) -> TerminalKind {
+        match p {
+            Priority::Low => TerminalKind::ShedLow,
+            Priority::Normal => TerminalKind::ShedNormal,
+            Priority::High => TerminalKind::ShedHigh,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TerminalKind::ShedLow => "shed_low",
+            TerminalKind::ShedNormal => "shed_normal",
+            TerminalKind::ShedHigh => "shed_high",
+            TerminalKind::DeadlineMiss => "deadline_miss",
+            TerminalKind::ConnError => "conn_error",
+            TerminalKind::Redispatch => "redispatch",
+            TerminalKind::WorkerDeath => "worker_death",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TerminalKind> {
+        Some(match s {
+            "shed_low" => TerminalKind::ShedLow,
+            "shed_normal" => TerminalKind::ShedNormal,
+            "shed_high" => TerminalKind::ShedHigh,
+            "deadline_miss" => TerminalKind::DeadlineMiss,
+            "conn_error" => TerminalKind::ConnError,
+            "redispatch" => TerminalKind::Redispatch,
+            "worker_death" => TerminalKind::WorkerDeath,
+            _ => return None,
+        })
+    }
+}
+
+/// One ring entry: a completed sampled trace, or a terminal event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FlightEntry {
+    Trace(TraceRecord),
+    Event {
+        /// [`super::now_ns`] at record time.
+        at_ns: u64,
+        /// 0 when the event is not attributable to one request
+        /// (e.g. a worker death).
+        trace_id: u64,
+        kind: TerminalKind,
+        detail: String,
+    },
+}
+
+impl FlightEntry {
+    fn to_json(&self) -> Value {
+        match self {
+            FlightEntry::Trace(rec) => rec.to_json(),
+            FlightEntry::Event { at_ns, trace_id, kind, detail } => {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("type".into(), Value::Str("event".into()));
+                o.insert("at_ns".into(), Value::Str(at_ns.to_string()));
+                o.insert(
+                    "trace_id".into(),
+                    Value::Str(format!("{trace_id:#018x}")),
+                );
+                o.insert("kind".into(), Value::Str(kind.name().into()));
+                o.insert("detail".into(), Value::Str(detail.clone()));
+                Value::Object(o)
+            }
+        }
+    }
+
+    fn from_json(v: &Value) -> Option<FlightEntry> {
+        match v.get("type").as_str()? {
+            "trace" => TraceRecord::from_json(v).map(FlightEntry::Trace),
+            "event" => Some(FlightEntry::Event {
+                at_ns: v.get("at_ns").as_str()?.parse().ok()?,
+                trace_id: u64::from_str_radix(
+                    v.get("trace_id").as_str()?.strip_prefix("0x")?,
+                    16,
+                )
+                .ok()?,
+                kind: TerminalKind::parse(v.get("kind").as_str()?)?,
+                detail: v.get("detail").as_str()?.to_string(),
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// The ring itself. Shared as `Arc<FlightRecorder>` between the
+/// serving hot loop (records) and the node front (dumps).
+#[derive(Debug)]
+pub struct FlightRecorder {
+    /// Node label in the dump filename (`worker-0`, `router`, ...).
+    node: String,
+    cap: usize,
+    dir: Option<PathBuf>,
+    ring: Mutex<VecDeque<FlightEntry>>,
+}
+
+impl FlightRecorder {
+    /// `dir = None` keeps the ring in memory only (events still
+    /// recorded; nothing written).
+    pub fn new(
+        node: &str,
+        cap: usize,
+        dir: Option<PathBuf>,
+    ) -> FlightRecorder {
+        FlightRecorder {
+            node: node.to_string(),
+            cap: cap.max(1),
+            dir,
+            ring: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    fn push(&self, e: FlightEntry) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() == self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(e);
+    }
+
+    /// Record one completed sampled trace (no dump — traces are the
+    /// normal path).
+    pub fn record_trace(&self, rec: TraceRecord) {
+        self.push(FlightEntry::Trace(rec));
+    }
+
+    /// Record a terminal event and, when a `--flight-dir` is
+    /// configured, dump the ring for post-mortem. Dump failures are
+    /// reported on stderr, never propagated into the serving path.
+    pub fn record_event(
+        &self,
+        trace_id: u64,
+        kind: TerminalKind,
+        detail: &str,
+    ) {
+        self.push(FlightEntry::Event {
+            at_ns: super::now_ns(),
+            trace_id,
+            kind,
+            detail: detail.to_string(),
+        });
+        if let Some(Err(e)) = self.dump() {
+            eprintln!("flight[{}]: dump failed: {e}", self.node);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Entries oldest-first (a copy; the ring keeps running).
+    pub fn entries(&self) -> Vec<FlightEntry> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// The ring as JSON-lines text (one `util::json` object per line).
+    pub fn jsonl(&self) -> String {
+        let mut out = String::new();
+        for e in self.ring.lock().unwrap().iter() {
+            out.push_str(&json::to_string(&e.to_json()));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the ring to `<dir>/flight-<node>.jsonl` (latest wins).
+    /// `None` when no directory is configured.
+    pub fn dump(&self) -> Option<std::io::Result<PathBuf>> {
+        let dir = self.dir.as_ref()?;
+        let path = dir.join(format!("flight-{}.jsonl", self.node));
+        let res = std::fs::create_dir_all(dir)
+            .and_then(|()| std::fs::write(&path, self.jsonl()))
+            .map(|()| path);
+        Some(res)
+    }
+}
+
+/// Parse a JSON-lines flight dump back into entries — the `zebra obs
+/// replay` path. Errors name the offending line; blank lines are
+/// skipped.
+pub fn parse_jsonl(text: &str) -> Result<Vec<FlightEntry>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = json::parse(line)
+            .map_err(|e| format!("flight line {}: {e}", i + 1))?;
+        let entry = FlightEntry::from_json(&v).ok_or_else(|| {
+            format!("flight line {}: not a trace or event object", i + 1)
+        })?;
+        out.push(entry);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64) -> TraceRecord {
+        let mut r = TraceRecord::new(id);
+        r.push("serve.execute", 100, 900, 0, 2);
+        r
+    }
+
+    #[test]
+    fn ring_caps_at_capacity_oldest_first_out() {
+        let f = FlightRecorder::new("t", 3, None);
+        for i in 1..=5u64 {
+            f.record_trace(rec(i));
+        }
+        let e = f.entries();
+        assert_eq!(e.len(), 3);
+        match &e[0] {
+            FlightEntry::Trace(r) => assert_eq!(r.trace_id, 3),
+            other => panic!("expected trace, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn jsonl_roundtrips_traces_and_events() {
+        let f = FlightRecorder::new("t", 16, None);
+        f.record_trace(rec(u64::MAX - 7));
+        f.record_event(42, TerminalKind::ShedLow, "over cap");
+        f.record_event(0, TerminalKind::WorkerDeath, "hb silence");
+        let text = f.jsonl();
+        // Every line parses as standalone JSON.
+        for line in text.lines() {
+            json::parse(line).unwrap();
+        }
+        let back = parse_jsonl(&text).unwrap();
+        assert_eq!(back, f.entries());
+        match &back[1] {
+            FlightEntry::Event { trace_id, kind, detail, .. } => {
+                assert_eq!(*trace_id, 42);
+                assert_eq!(*kind, TerminalKind::ShedLow);
+                assert_eq!(detail, "over cap");
+            }
+            other => panic!("expected event, got {other:?}"),
+        }
+        // Garbage lines error with the line number.
+        let err = parse_jsonl("{\"type\":\"trace\"").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        let err = parse_jsonl("{\"type\":\"nope\"}").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn terminal_kinds_roundtrip_names() {
+        for k in [
+            TerminalKind::ShedLow,
+            TerminalKind::ShedNormal,
+            TerminalKind::ShedHigh,
+            TerminalKind::DeadlineMiss,
+            TerminalKind::ConnError,
+            TerminalKind::Redispatch,
+            TerminalKind::WorkerDeath,
+        ] {
+            assert_eq!(TerminalKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(TerminalKind::parse("nope"), None);
+        assert_eq!(
+            TerminalKind::shed(Priority::Low),
+            TerminalKind::ShedLow
+        );
+        assert_eq!(
+            TerminalKind::shed(Priority::High),
+            TerminalKind::ShedHigh
+        );
+    }
+
+    #[test]
+    fn dump_writes_latest_wins_file() {
+        let dir = std::env::temp_dir()
+            .join(format!("zebra-flight-test-{}", std::process::id()));
+        let f = FlightRecorder::new(
+            "unit",
+            8,
+            Some(dir.clone()),
+        );
+        f.record_event(9, TerminalKind::DeadlineMiss, "late");
+        let path = f.dump().unwrap().unwrap();
+        let first = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(parse_jsonl(&first).unwrap().len(), 1);
+        // A second terminal event rewrites the same file.
+        f.record_event(10, TerminalKind::ConnError, "reset");
+        let second = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(parse_jsonl(&second).unwrap().len(), 2);
+        assert_ne!(first, second);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn no_dir_means_no_dump() {
+        let f = FlightRecorder::new("mem", 4, None);
+        f.record_event(1, TerminalKind::ShedHigh, "x");
+        assert!(f.dump().is_none());
+        assert_eq!(f.len(), 1);
+    }
+}

@@ -1,0 +1,37 @@
+//! Observability: request-level tracing, a flight recorder, and the
+//! unified metrics-export plane (`rust/docs/observability.md`).
+//!
+//! PR 6's telemetry answers "where does the *process* spend its
+//! time?"; this module answers "where did *this request's*
+//! microseconds and bytes go, and why was it shed?" — the request-level
+//! truth the codec-autotune and zero-prediction roadmap items need.
+//!
+//! Three parts, one discipline (strict never-panicking parsing, no
+//! wall-clock randomness, `util::json` for interchange):
+//!
+//! - [`trace`] — a 64-bit trace id assigned at the edge (client /
+//!   loadgen) rides wire v3 through router dispatch, worker ingest,
+//!   batch assembly and kernel execution; every hop appends [`Span`]s
+//!   into the request's [`TraceRecord`], returned with the response
+//!   when the id is sampled ([`sampled`] is deterministic from the id
+//!   — same id, same answer, on every node).
+//! - [`flight`] — a fixed-capacity ring of recent records plus
+//!   terminal events (shed class, deadline miss, conn error, failover
+//!   re-dispatch, worker death). Terminal events dump the ring as
+//!   JSON-lines to `--flight-dir` for post-mortems; `zebra obs replay`
+//!   renders the per-request waterfall.
+//! - [`export`] — one registry merging `coordinator::Metrics`, the
+//!   cluster [`MetricsSnapshot`](crate::cluster::MetricsSnapshot), and
+//!   [`TelemetrySnapshot`](crate::telemetry::TelemetrySnapshot),
+//!   exposed as Prometheus text exposition and JSON (`zebra obs`,
+//!   `MetricsResp` v3, loadgen's `--scrape-ms` time series).
+
+pub mod export;
+pub mod flight;
+pub mod trace;
+
+pub use export::{encode_telemetry, parse_telemetry, ObsReport};
+pub use flight::{FlightEntry, FlightRecorder, TerminalKind};
+pub use trace::{
+    now_ns, render_waterfall, sampled, trace_id_for, Span, TraceRecord,
+};

@@ -1,0 +1,500 @@
+//! Per-request distributed tracing: spans, the wire codec, and the
+//! deterministic sampler.
+//!
+//! A [`TraceRecord`] is built cooperatively: the client assigns the
+//! trace id and decides sampling, the worker appends its ingest /
+//! queue-wait / execute / per-layer spans, the router appends its
+//! dispatch span on the way back, and the client appends the
+//! round-trip span on receipt. Span timestamps are nanoseconds since
+//! the UNIX epoch ([`now_ns`]) so records assembled across processes
+//! on one machine line up in a single waterfall; durations only ever
+//! use same-process pairs, so clock skew between nodes can stretch the
+//! rendering but never corrupts a span's length.
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::cluster::wire::FrameError;
+use crate::telemetry::{StageStats, TelemetrySnapshot};
+use crate::util::json::Value;
+use crate::util::prng::Rng;
+
+/// Hard cap on spans per record — a hop that loops forever appending
+/// spans cannot balloon a response frame (parse rejects more).
+pub const MAX_SPANS: usize = 1024;
+
+/// Hard cap on a span label's byte length on the wire.
+pub const MAX_LABEL: usize = 256;
+
+/// Nanoseconds since the UNIX epoch, saturating into u64 (good until
+/// the year 2554). The one wall-clock read the trace plane uses —
+/// everything else is monotonic `Instant` pairs.
+pub fn now_ns() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_nanos().min(u64::MAX as u128) as u64)
+        .unwrap_or(0)
+}
+
+/// Deterministic 1-in-`n` sampling from the trace id: `n = 0` samples
+/// nothing, `n = 1` everything. Every node answers identically for the
+/// same id (the id seeds the repo's xoshiro PRNG; no wall-clock
+/// randomness anywhere), so a record is either assembled at every hop
+/// or at none.
+pub fn sampled(trace_id: u64, n: usize) -> bool {
+    match n {
+        0 => false,
+        1 => true,
+        n => Rng::new(trace_id).below(n as u64) == 0,
+    }
+}
+
+/// Deterministic trace id for the `i`-th request of a run seeded with
+/// `seed`. Never 0 (0 means "untraced" on the wire).
+pub fn trace_id_for(seed: u64, i: u64) -> u64 {
+    let id = Rng::new(seed ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .next_u64();
+    if id == 0 {
+        1
+    } else {
+        id
+    }
+}
+
+/// One labeled interval inside a request's lifetime.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    /// `component.stage` label, same convention as telemetry
+    /// (`router.dispatch`, `queue.wait`, `layer.2.prune_encode`, ...).
+    pub label: String,
+    /// Start / end in [`now_ns`] time.
+    pub start_ns: u64,
+    pub end_ns: u64,
+    /// Bytes the span moved (0 when not meaningful).
+    pub bytes: u64,
+    /// Label-dependent auxiliary value: batch-mates for
+    /// `serve.execute`, zero-block permille for `layer.*.prune_encode`
+    /// spans, 0 otherwise.
+    pub aux: u64,
+}
+
+impl Span {
+    /// Span duration in nanoseconds (0 when the clock stepped).
+    pub fn duration_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+}
+
+/// Everywhere a sampled request went: the trace id plus every span the
+/// hops appended, in append order.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct TraceRecord {
+    pub trace_id: u64,
+    pub spans: Vec<Span>,
+}
+
+impl TraceRecord {
+    pub fn new(trace_id: u64) -> TraceRecord {
+        TraceRecord { trace_id, spans: Vec::new() }
+    }
+
+    /// Append a span (silently capped at [`MAX_SPANS`]; labels are
+    /// truncated to [`MAX_LABEL`] bytes so the record always encodes).
+    pub fn push(
+        &mut self,
+        label: &str,
+        start_ns: u64,
+        end_ns: u64,
+        bytes: u64,
+        aux: u64,
+    ) {
+        if self.spans.len() >= MAX_SPANS {
+            return;
+        }
+        let mut label = label.to_string();
+        if label.len() > MAX_LABEL {
+            let mut cut = MAX_LABEL;
+            while !label.is_char_boundary(cut) {
+                cut -= 1;
+            }
+            label.truncate(cut);
+        }
+        self.spans.push(Span { label, start_ns, end_ns, bytes, aux });
+    }
+
+    /// First span with this exact label.
+    pub fn span(&self, label: &str) -> Option<&Span> {
+        self.spans.iter().find(|s| s.label == label)
+    }
+
+    /// Spans whose label starts with `prefix` (e.g. `layer.`).
+    pub fn spans_with_prefix(&self, prefix: &str) -> Vec<&Span> {
+        self.spans.iter().filter(|s| s.label.starts_with(prefix)).collect()
+    }
+
+    /// The record viewed as a telemetry snapshot (one stage per span
+    /// label; repeated labels sum) — this is what lets trace tests
+    /// reuse [`TelemetrySnapshot::coverage`]'s ≥95% contract verbatim.
+    pub fn as_telemetry(&self) -> TelemetrySnapshot {
+        let mut snap = TelemetrySnapshot::default();
+        for s in &self.spans {
+            let e = snap.stages.entry(s.label.clone()).or_insert(
+                StageStats { nanos: 0, calls: 0, bytes: 0 },
+            );
+            e.nanos += s.duration_ns();
+            e.calls += 1;
+            e.bytes += s.bytes;
+        }
+        snap
+    }
+
+    /// Wire encoding: `[trace_id: u64][n_spans: u16]` then per span
+    /// `[label_len: u16][label][start: u64][end: u64][bytes: u64]
+    /// [aux: u64]`, all little-endian.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(10 + self.spans.len() * 40);
+        out.extend_from_slice(&self.trace_id.to_le_bytes());
+        out.extend_from_slice(
+            &(self.spans.len().min(MAX_SPANS) as u16).to_le_bytes(),
+        );
+        for s in self.spans.iter().take(MAX_SPANS) {
+            let label = s.label.as_bytes();
+            out.extend_from_slice(&(label.len() as u16).to_le_bytes());
+            out.extend_from_slice(label);
+            out.extend_from_slice(&s.start_ns.to_le_bytes());
+            out.extend_from_slice(&s.end_ns.to_le_bytes());
+            out.extend_from_slice(&s.bytes.to_le_bytes());
+            out.extend_from_slice(&s.aux.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse one record off the front of `payload`; returns the record
+    /// and the remaining bytes. Declared counts and label lengths are
+    /// validated against the available bytes before any slicing — the
+    /// same never-panicking discipline as the rest of the wire.
+    pub fn parse_prefix(
+        payload: &[u8],
+    ) -> Result<(TraceRecord, &[u8]), FrameError> {
+        if payload.len() < 10 {
+            return Err(FrameError::Malformed("trace record too short"));
+        }
+        let trace_id =
+            u64::from_le_bytes(payload[..8].try_into().expect("8 bytes"));
+        let n = u16::from_le_bytes([payload[8], payload[9]]) as usize;
+        if n > MAX_SPANS {
+            return Err(FrameError::Malformed(
+                "trace record declares an absurd span count",
+            ));
+        }
+        let mut rec = TraceRecord::new(trace_id);
+        let mut off = 10usize;
+        for _ in 0..n {
+            if payload.len() < off + 2 {
+                return Err(FrameError::Malformed(
+                    "trace span shorter than its label length",
+                ));
+            }
+            let label_len =
+                u16::from_le_bytes([payload[off], payload[off + 1]]) as usize;
+            if label_len > MAX_LABEL {
+                return Err(FrameError::Malformed(
+                    "trace span label over the length cap",
+                ));
+            }
+            off += 2;
+            let need = label_len + 32;
+            if payload.len() < off + need {
+                return Err(FrameError::Malformed(
+                    "trace span shorter than its declared fields",
+                ));
+            }
+            let label = std::str::from_utf8(&payload[off..off + label_len])
+                .map_err(|_| {
+                    FrameError::Malformed("trace span label not UTF-8")
+                })?
+                .to_string();
+            off += label_len;
+            let u64_at = |o: usize| {
+                u64::from_le_bytes(
+                    payload[o..o + 8].try_into().expect("8 bytes"),
+                )
+            };
+            rec.spans.push(Span {
+                label,
+                start_ns: u64_at(off),
+                end_ns: u64_at(off + 8),
+                bytes: u64_at(off + 16),
+                aux: u64_at(off + 24),
+            });
+            off += 32;
+        }
+        Ok((rec, &payload[off..]))
+    }
+
+    /// Strict parse: trailing bytes are an error.
+    pub fn parse(payload: &[u8]) -> Result<TraceRecord, FrameError> {
+        let (rec, rest) = Self::parse_prefix(payload)?;
+        if !rest.is_empty() {
+            return Err(FrameError::Malformed(
+                "trace record has trailing bytes",
+            ));
+        }
+        Ok(rec)
+    }
+
+    /// JSON shape for flight-recorder dumps. Large u64s (the trace id,
+    /// the absolute epoch anchor) are strings — JSON numbers are f64
+    /// and would silently round them; span offsets/bytes stay numeric.
+    pub fn to_json(&self) -> Value {
+        let t0 = self.spans.iter().map(|s| s.start_ns).min().unwrap_or(0);
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("type".to_string(), Value::Str("trace".to_string()));
+        o.insert(
+            "trace_id".to_string(),
+            Value::Str(format!("{:#018x}", self.trace_id)),
+        );
+        o.insert("t0_ns".to_string(), Value::Str(t0.to_string()));
+        let spans = self
+            .spans
+            .iter()
+            .map(|s| {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert(
+                    "label".to_string(),
+                    Value::Str(s.label.clone()),
+                );
+                m.insert(
+                    "start_ns".to_string(),
+                    Value::Num(s.start_ns.saturating_sub(t0) as f64),
+                );
+                m.insert(
+                    "end_ns".to_string(),
+                    Value::Num(s.end_ns.saturating_sub(t0) as f64),
+                );
+                m.insert("bytes".to_string(), Value::Num(s.bytes as f64));
+                m.insert("aux".to_string(), Value::Num(s.aux as f64));
+                Value::Object(m)
+            })
+            .collect();
+        o.insert("spans".to_string(), Value::Array(spans));
+        Value::Object(o)
+    }
+
+    /// Rebuild from [`TraceRecord::to_json`] output (replay path).
+    pub fn from_json(v: &Value) -> Option<TraceRecord> {
+        if v.get("type").as_str() != Some("trace") {
+            return None;
+        }
+        let id_str = v.get("trace_id").as_str()?;
+        let trace_id =
+            u64::from_str_radix(id_str.strip_prefix("0x")?, 16).ok()?;
+        let t0: u64 = v.get("t0_ns").as_str()?.parse().ok()?;
+        let mut rec = TraceRecord::new(trace_id);
+        for s in v.get("spans").as_array()? {
+            rec.spans.push(Span {
+                label: s.get("label").as_str()?.to_string(),
+                start_ns: t0
+                    .saturating_add(s.get("start_ns").as_f64()? as u64),
+                end_ns: t0.saturating_add(s.get("end_ns").as_f64()? as u64),
+                bytes: s.get("bytes").as_f64()? as u64,
+                aux: s.get("aux").as_f64()? as u64,
+            });
+        }
+        Some(rec)
+    }
+}
+
+/// Render one record as a per-request waterfall — what `zebra obs
+/// replay` prints:
+///
+/// ```text
+/// trace 0x00000000deadbeef (4 spans, 1.234 ms)
+///   router.dispatch   |========================| 1200.0us
+///   queue.wait          |==|                      130.0us
+/// ```
+pub fn render_waterfall(rec: &TraceRecord) -> String {
+    const WIDTH: usize = 32;
+    let t0 = rec.spans.iter().map(|s| s.start_ns).min().unwrap_or(0);
+    let t1 = rec.spans.iter().map(|s| s.end_ns).max().unwrap_or(t0);
+    let total = t1.saturating_sub(t0).max(1);
+    let wide = rec
+        .spans
+        .iter()
+        .map(|s| s.label.len())
+        .max()
+        .unwrap_or(5)
+        .max(5);
+    let mut out = format!(
+        "trace {:#018x} ({} spans, {:.3} ms)\n",
+        rec.trace_id,
+        rec.spans.len(),
+        total as f64 / 1e6
+    );
+    for s in &rec.spans {
+        let lo = (s.start_ns.saturating_sub(t0) as u128 * WIDTH as u128
+            / total as u128) as usize;
+        let hi = (s.end_ns.saturating_sub(t0) as u128 * WIDTH as u128
+            / total as u128) as usize;
+        let hi = hi.clamp(lo + 1, WIDTH);
+        let bar: String = (0..WIDTH)
+            .map(|i| if i >= lo && i < hi { '=' } else { ' ' })
+            .collect();
+        let aux = if s.aux > 0 {
+            format!(" aux={}", s.aux)
+        } else {
+            String::new()
+        };
+        let bytes = if s.bytes > 0 {
+            format!(" {}B", s.bytes)
+        } else {
+            String::new()
+        };
+        out.push_str(&format!(
+            "  {:<wide$}  |{bar}| {:>10.1}us{bytes}{aux}\n",
+            s.label,
+            s.duration_ns() as f64 / 1e3,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_record() -> TraceRecord {
+        let mut r = TraceRecord::new(0xDEAD_BEEF_0BAD_F00D);
+        r.push("client.rtt", 1_000, 9_000, 2048, 0);
+        r.push("router.dispatch", 1_500, 8_500, 0, 0);
+        r.push("queue.wait", 2_000, 3_000, 0, 0);
+        r.push("serve.execute", 3_000, 8_000, 0, 4);
+        r.push("layer.0.prune_encode", 3_100, 4_000, 64, 500);
+        r
+    }
+
+    #[test]
+    fn record_roundtrips_on_the_wire() {
+        let r = sample_record();
+        assert_eq!(TraceRecord::parse(&r.encode()).unwrap(), r);
+        // An empty record is legal.
+        let e = TraceRecord::new(7);
+        assert_eq!(TraceRecord::parse(&e.encode()).unwrap(), e);
+        // parse_prefix hands back the remainder.
+        let mut bytes = r.encode();
+        bytes.extend_from_slice(b"rest");
+        let (back, rest) = TraceRecord::parse_prefix(&bytes).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(rest, b"rest");
+        // ... which the strict parse rejects.
+        assert!(TraceRecord::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncations_and_corruption_error_never_panic() {
+        let bytes = sample_record().encode();
+        for cut in 0..bytes.len() {
+            assert!(
+                TraceRecord::parse(&bytes[..cut]).is_err(),
+                "prefix of {cut} bytes must not parse"
+            );
+        }
+        // Absurd span count.
+        let mut bad = bytes.clone();
+        bad[8..10].copy_from_slice(&u16::MAX.to_le_bytes());
+        assert!(TraceRecord::parse(&bad).is_err());
+        // Label length lying past the buffer.
+        let mut bad = bytes.clone();
+        bad[10..12].copy_from_slice(&500u16.to_le_bytes());
+        assert!(TraceRecord::parse(&bad).is_err());
+        // Non-UTF-8 label bytes.
+        let mut bad = bytes.clone();
+        bad[12] = 0xFF;
+        bad[13] = 0xC0;
+        assert!(TraceRecord::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn sampler_is_deterministic_and_roughly_one_in_n() {
+        assert!(!sampled(123, 0), "0 disables sampling");
+        for id in 0..64u64 {
+            assert!(sampled(id, 1), "1 samples everything");
+            // Same id, same answer — every node agrees.
+            assert_eq!(sampled(id, 4), sampled(id, 4));
+        }
+        let hits = (0..4000u64)
+            .filter(|&i| sampled(trace_id_for(9, i), 4))
+            .count();
+        // 1-in-4 over 4000 distinct ids: loose 2-sided bound.
+        assert!((700..=1300).contains(&hits), "{hits} of 4000 sampled");
+    }
+
+    #[test]
+    fn trace_ids_are_nonzero_and_seed_dependent() {
+        let a: Vec<u64> = (0..32).map(|i| trace_id_for(1, i)).collect();
+        let b: Vec<u64> = (0..32).map(|i| trace_id_for(2, i)).collect();
+        assert!(a.iter().all(|&id| id != 0));
+        assert_ne!(a, b);
+        // Deterministic per (seed, i).
+        assert_eq!(a, (0..32).map(|i| trace_id_for(1, i)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn telemetry_view_supports_the_coverage_contract() {
+        let r = sample_record();
+        let mut snap = r.as_telemetry();
+        assert_eq!(snap.get("client.rtt").nanos, 8_000);
+        assert_eq!(snap.get("queue.wait").calls, 1);
+        // Pose the acceptance question exactly as telemetry does.
+        snap.stages.insert(
+            "wall".to_string(),
+            StageStats { nanos: 8_200, calls: 1, bytes: 0 },
+        );
+        let c = snap.coverage("wall", &["client.rtt"]).unwrap();
+        assert!(c >= 0.95, "coverage {c}");
+    }
+
+    #[test]
+    fn waterfall_renders_every_span() {
+        let r = sample_record();
+        let w = render_waterfall(&r);
+        for s in &r.spans {
+            assert!(w.contains(&s.label), "{w}");
+        }
+        assert!(w.starts_with("trace 0x"), "{w}");
+        assert!(w.contains("aux=4"), "{w}");
+        // Degenerate: an empty record still renders a header line.
+        assert!(render_waterfall(&TraceRecord::new(1)).starts_with("trace"));
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_full_u64_ids() {
+        // An id above 2^53 would be silently rounded by a JSON number;
+        // the string encoding must carry it exactly.
+        let mut r = TraceRecord::new(u64::MAX - 1);
+        r.push("client.rtt", now_ns(), now_ns() + 5_000, 10, 2);
+        let v = r.to_json();
+        let text = crate::util::json::to_string(&v);
+        let back =
+            TraceRecord::from_json(&crate::util::json::parse(&text).unwrap())
+                .unwrap();
+        assert_eq!(back.trace_id, r.trace_id);
+        assert_eq!(back.spans.len(), 1);
+        assert_eq!(back.spans[0].duration_ns(), r.spans[0].duration_ns());
+        assert_eq!(back.spans[0].bytes, 10);
+        assert_eq!(back.spans[0].aux, 2);
+    }
+
+    #[test]
+    fn span_caps_hold() {
+        let mut r = TraceRecord::new(1);
+        for i in 0..MAX_SPANS + 10 {
+            r.push(&format!("s{i}"), 0, 1, 0, 0);
+        }
+        assert_eq!(r.spans.len(), MAX_SPANS);
+        let mut r = TraceRecord::new(2);
+        r.push(&"x".repeat(MAX_LABEL + 50), 0, 1, 0, 0);
+        assert_eq!(r.spans[0].label.len(), MAX_LABEL);
+        // Both still encode/parse cleanly.
+        assert!(TraceRecord::parse(&r.encode()).is_ok());
+    }
+}

@@ -187,7 +187,7 @@ impl ModelHandle {
             .iter()
             .map(|m| m.block * m.block)
             .collect();
-        Ok(ModelOutput { logits, masks, block_elems })
+        Ok(ModelOutput { logits, masks, block_elems, layer_nanos: Vec::new() })
     }
 }
 

@@ -319,6 +319,52 @@ mod tests {
     }
 
     #[test]
+    fn coverage_with_a_zero_nanos_umbrella_is_none_not_a_div_by_zero() {
+        // The umbrella stage exists (calls recorded) but accumulated
+        // zero wall time — e.g. a run where every batch was shed
+        // before execution. Coverage must decline to answer, not
+        // divide by zero into inf/NaN.
+        let s = snap(&[("total", 0, 5, 0), ("a", 500, 1, 0)]);
+        assert!(s.coverage("total", &["a"]).is_none());
+        // Same answer whether the umbrella is zeroed or absent.
+        assert_eq!(
+            s.coverage("total", &["a"]),
+            s.coverage("never-recorded", &["a"])
+        );
+        // And a zero-nanos *part* is a plain 0 contribution.
+        let s = snap(&[("total", 100, 1, 0), ("z", 0, 3, 0)]);
+        assert_eq!(s.coverage("total", &["z"]), Some(0.0));
+    }
+
+    #[test]
+    fn report_alignment_survives_labels_longer_than_the_column() {
+        // One label far past the default column width: every row must
+        // still carry its full label and the fixed per-row fields —
+        // the long label widens the column instead of shearing it.
+        let long = "cluster.router.spill_ingest.extremely_long_stage_name";
+        let s = snap(&[
+            ("io", 1_000_000, 2, 0),
+            (long, 2_000_000, 4, 1 << 20),
+        ]);
+        let r = s.report(Some("io"));
+        assert!(r.contains(long), "{r}");
+        for line in r.lines().skip(1) {
+            assert!(line.contains("calls"), "sheared row: {line:?}");
+            assert!(line.contains("ms"), "sheared row: {line:?}");
+        }
+        // Rows align: "calls" starts at one column on every row.
+        let cols: Vec<usize> = r
+            .lines()
+            .skip(1)
+            .map(|l| l.find(" calls").expect("calls column"))
+            .collect();
+        assert!(
+            cols.windows(2).all(|w| w[0] == w[1]),
+            "misaligned columns {cols:?} in:\n{r}"
+        );
+    }
+
+    #[test]
     fn report_lists_every_stage() {
         let s = snap(&[("serve.batch", 2_000_000, 4, 0), ("serve.ship", 1_000_000, 4, 4096)]);
         let r = s.report(Some("serve.batch"));

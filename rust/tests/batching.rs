@@ -52,6 +52,7 @@ impl BatchExecutor for SlowExec {
             logits: Tensor::from_vec(&[b, 2], logits),
             masks: vec![Tensor::from_vec(&[b, 1, 2, 2], mask)],
             block_elems: vec![4],
+            layer_nanos: vec![100],
         })
     }
     fn batch_sizes(&self) -> Vec<usize> {
@@ -87,6 +88,7 @@ fn flooding_one_key_does_not_starve_the_others() {
             max_batch: 0,
             ship_spills: None,
             spill_sink: None,
+            flight: None,
         },
         None,
     )

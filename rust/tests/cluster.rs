@@ -66,6 +66,7 @@ impl BatchExecutor for MockExec {
             logits: Tensor::from_vec(&[b, 2], logits),
             masks: vec![Tensor::from_vec(&[b, 1, 2, 2], mask)],
             block_elems: vec![4],
+            layer_nanos: vec![100],
         })
     }
     fn batch_sizes(&self) -> Vec<usize> {
@@ -91,6 +92,7 @@ fn mock_worker(delay: Duration) -> WorkerNode {
         max_batch: 0,
         ship_spills: None,
         spill_sink: None,
+        flight: None,
     };
     WorkerNode::start(exec, "127.0.0.1:0", cfg, None).unwrap()
 }
@@ -222,6 +224,7 @@ fn shipped_spill_bytes_match_worker_eq2_accounting() {
                     block: 2,
                 }),
                 spill_sink: None,
+                flight: None,
             };
             WorkerNode::start(
                 exec,

@@ -1,0 +1,483 @@
+//! Observability integration over real TCP: distributed traces
+//! assembled hop by hop through a loopback cluster, trace identity
+//! surviving failover re-dispatch, the two-plane (stats + telemetry)
+//! metrics merge across workers, the flight recorder capturing
+//! terminal events, and v1/v2 clients round-tripping against a v3
+//! server.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use zebra::backend::reference::RefSpec;
+use zebra::backend::ModelOutput;
+use zebra::cluster::metrics::MetricsSnapshot;
+use zebra::cluster::wire::{
+    self, encode_submit_traced, Frame, FrameType, CLUSTER_VERSION,
+};
+use zebra::cluster::{
+    ClusterClient, Router, RouterConfig, ShardMode, WorkerNode,
+};
+use zebra::coordinator::server::BatchExecutor;
+use zebra::coordinator::{reference_executor, Priority, ServerConfig};
+use zebra::obs::{
+    trace_id_for, FlightEntry, FlightRecorder, TerminalKind,
+};
+use zebra::telemetry::StageStats;
+use zebra::tensor::Tensor;
+use zebra::util::prng::Rng;
+
+const WAIT: Duration = Duration::from_secs(30);
+
+fn noise_image(hw: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let n = 3 * hw * hw;
+    Tensor::from_vec(&[3, hw, hw], (0..n).map(|_| rng.normal()).collect())
+}
+
+fn fill_image(hw: usize, v: f32) -> Tensor {
+    Tensor::from_vec(&[3, hw, hw], vec![v; 3 * hw * hw])
+}
+
+/// Mock executor (same shape as the cluster tests'): logits are
+/// [mean, -mean], one 2x2-blocked mask layer, a fixed compute delay so
+/// client-observed wall time is dominated by traced server-side work.
+struct MockExec {
+    hw: usize,
+    delay: Duration,
+}
+
+impl BatchExecutor for MockExec {
+    fn execute(&self, x: &Tensor) -> Result<ModelOutput> {
+        std::thread::sleep(self.delay);
+        let b = x.shape()[0];
+        let per = 3 * self.hw * self.hw;
+        let mut logits = Vec::with_capacity(b * 2);
+        let mut mask = Vec::new();
+        for i in 0..b {
+            let mean: f32 = x.data()[i * per..(i + 1) * per]
+                .iter()
+                .sum::<f32>()
+                / per as f32;
+            logits.extend_from_slice(&[mean, -mean]);
+            let kept = if mean > 0.5 { 1.0 } else { 0.0 };
+            mask.extend(std::iter::repeat(kept).take(4));
+        }
+        Ok(ModelOutput {
+            logits: Tensor::from_vec(&[b, 2], logits),
+            masks: vec![Tensor::from_vec(&[b, 1, 2, 2], mask)],
+            block_elems: vec![4],
+            layer_nanos: vec![self.delay.as_nanos() as u64 / b as u64],
+        })
+    }
+    fn batch_sizes(&self) -> Vec<usize> {
+        vec![1]
+    }
+    fn image_hw(&self) -> usize {
+        self.hw
+    }
+}
+
+fn mock_worker(delay: Duration) -> WorkerNode {
+    let exec = Arc::new(MockExec { hw: 4, delay });
+    let cfg = ServerConfig {
+        max_wait: Duration::ZERO,
+        workers: 1,
+        max_queue: 1024,
+        max_batch: 0,
+        ship_spills: None,
+        spill_sink: None,
+        flight: None,
+    };
+    WorkerNode::start(exec, "127.0.0.1:0", cfg, None).unwrap()
+}
+
+fn router_for(workers: &[WorkerNode], mode: ShardMode) -> Router {
+    let addrs =
+        workers.iter().map(|w| w.local_addr().to_string()).collect();
+    let mut cfg = RouterConfig::new(addrs);
+    cfg.mode = mode;
+    cfg.heartbeat_every = Duration::from_millis(100);
+    Router::start(cfg, "127.0.0.1:0").unwrap()
+}
+
+/// Acceptance: a sampled request through router + worker comes back
+/// with a TraceRecord whose spans include every mandated hop and whose
+/// envelope covers >= 95% of the client-observed latency — posed via
+/// the telemetry `coverage` contract on the record's telemetry view.
+#[test]
+fn sampled_traces_cover_client_observed_wall() {
+    let worker = mock_worker(Duration::from_millis(25));
+    let router = router_for(
+        std::slice::from_ref(&worker),
+        ShardMode::RoundRobin,
+    );
+    let client =
+        ClusterClient::connect(&router.local_addr().to_string()).unwrap();
+    let img = fill_image(4, 0.7);
+
+    for i in 0..4u64 {
+        let tid = trace_id_for(0xB0B, i);
+        let rx = client
+            .submit_traced(&img, None, Priority::Normal, None, tid, true)
+            .unwrap();
+        let resp = rx.recv_timeout(WAIT).unwrap().unwrap();
+        let rec = resp.trace.expect("sampled request must carry a trace");
+        assert_eq!(rec.trace_id, tid, "trace id must survive every hop");
+
+        // Every mandated hop appended its span.
+        for label in [
+            "router.dispatch",
+            "worker.ingest",
+            "queue.wait",
+            "serve.assemble",
+            "serve.execute",
+            "layer.0.prune_encode",
+        ] {
+            assert!(
+                rec.span(label).is_some(),
+                "span {label} missing from {:?}",
+                rec.spans.iter().map(|s| &s.label).collect::<Vec<_>>()
+            );
+        }
+
+        // >= 95% of the client wall, via the coverage contract: the
+        // record viewed as telemetry, client wall as the umbrella.
+        let wall_ns = resp.wall.as_nanos() as u64;
+        let mut snap = rec.as_telemetry();
+        snap.stages.insert(
+            "wall".to_string(),
+            StageStats { nanos: wall_ns, calls: 1, bytes: 0 },
+        );
+        let cov = snap.coverage("wall", &["router.dispatch"]).unwrap();
+        assert!(
+            cov >= 0.95,
+            "router.dispatch covers {cov:.3} of a {}us wall",
+            wall_ns / 1_000
+        );
+        // And the execute span nests inside the dispatch window
+        // (1 ms slack: epoch timestamps, not one monotonic clock).
+        let d = rec.span("router.dispatch").unwrap();
+        let e = rec.span("serve.execute").unwrap();
+        assert!(
+            e.start_ns + 1_000_000 >= d.start_ns
+                && e.end_ns <= d.end_ns + 1_000_000,
+            "serve.execute [{},{}] outside router.dispatch [{},{}]",
+            e.start_ns,
+            e.end_ns,
+            d.start_ns,
+            d.end_ns
+        );
+    }
+
+    // An unsampled (but id-carrying) request returns no record.
+    let rx = client
+        .submit_traced(&img, None, Priority::Normal, None, 99, false)
+        .unwrap();
+    assert!(rx.recv_timeout(WAIT).unwrap().unwrap().trace.is_none());
+
+    client.shutdown();
+    router.shutdown();
+    worker.shutdown();
+}
+
+/// Satellite: the router's MetricsResp merges worker telemetry — the
+/// unified report over two real-TCP workers sums their stage counters
+/// and reports both planes through one scrape.
+#[test]
+fn telemetry_merges_across_two_real_tcp_workers() {
+    let workers: Vec<WorkerNode> =
+        (0..2).map(|_| mock_worker(Duration::ZERO)).collect();
+    let router = router_for(&workers, ShardMode::RoundRobin);
+    let client =
+        ClusterClient::connect(&router.local_addr().to_string()).unwrap();
+    let img = fill_image(4, 0.2);
+
+    let rxs: Vec<_> =
+        (0..12).map(|_| client.submit(&img).unwrap()).collect();
+    for rx in rxs {
+        rx.recv_timeout(WAIT).unwrap().unwrap();
+    }
+
+    let report = client.obs_report().unwrap();
+    assert_eq!(report.stats.workers_alive, 2);
+    assert_eq!(report.stats.aggregate.responses, 12);
+
+    // Both workers served, and the merged stage equals their sum
+    // (responses are all in, so the per-worker counters are settled).
+    let per_worker: Vec<StageStats> = workers
+        .iter()
+        .map(|w| w.telemetry().snapshot().get("serve.batch"))
+        .collect();
+    for (i, s) in per_worker.iter().enumerate() {
+        assert!(s.calls > 0, "worker {i} recorded no batches");
+    }
+    let merged = report.telemetry.get("serve.batch");
+    assert_eq!(
+        merged.calls,
+        per_worker.iter().map(|s| s.calls).sum::<u64>(),
+        "merged stage calls must sum the workers'"
+    );
+    assert_eq!(
+        merged.nanos,
+        per_worker.iter().map(|s| s.nanos).sum::<u64>(),
+    );
+    // The router's own stages ride in the same registry.
+    assert!(report.telemetry.get("router.dispatch").calls >= 12);
+
+    client.shutdown();
+    router.shutdown();
+    for w in workers {
+        w.shutdown();
+    }
+}
+
+/// Satellite: trace identity survives failover — killing a worker
+/// mid-load re-dispatches its in-flight requests, the responses still
+/// carry the edge-assigned trace ids, and the router's flight recorder
+/// logs the re-dispatch as a terminal event.
+#[test]
+fn trace_ids_survive_router_redispatch_after_worker_kill() {
+    let workers: Vec<WorkerNode> = (0..2)
+        .map(|_| mock_worker(Duration::from_millis(20)))
+        .collect();
+    let flight = Arc::new(FlightRecorder::new("router", 128, None));
+    let mut cfg = RouterConfig::new(
+        workers.iter().map(|w| w.local_addr().to_string()).collect(),
+    );
+    cfg.heartbeat_every = Duration::from_millis(100);
+    cfg.flight = Some(Arc::clone(&flight));
+    let router = Router::start(cfg, "127.0.0.1:0").unwrap();
+    let client =
+        ClusterClient::connect(&router.local_addr().to_string()).unwrap();
+    let img = fill_image(4, 0.3);
+
+    let rxs: Vec<_> = (0..30u64)
+        .map(|i| {
+            let tid = trace_id_for(0xF001, i);
+            (
+                tid,
+                client
+                    .submit_traced(
+                        &img,
+                        None,
+                        Priority::Normal,
+                        None,
+                        tid,
+                        true,
+                    )
+                    .unwrap(),
+            )
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(60));
+    workers[0].kill();
+
+    let mut max_attempts = 0u64;
+    for (i, (tid, rx)) in rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(WAIT)
+            .unwrap_or_else(|_| panic!("request {i} got no response"))
+            .unwrap_or_else(|e| panic!("request {i} failed: {e}"));
+        let rec = resp.trace.expect("every request was sampled");
+        assert_eq!(rec.trace_id, tid, "request {i} lost its trace id");
+        let d = rec.span("router.dispatch").expect("dispatch span");
+        max_attempts = max_attempts.max(d.aux);
+    }
+    assert!(router.stats().retries > 0, "the kill must force retries");
+    assert!(
+        max_attempts >= 2,
+        "a re-dispatched trace must show attempt >= 2 in its \
+         router.dispatch aux (max seen: {max_attempts})"
+    );
+
+    // The flight ring named the re-dispatched traces and the death.
+    let entries = flight.entries();
+    let redispatches: Vec<u64> = entries
+        .iter()
+        .filter_map(|e| match e {
+            FlightEntry::Event {
+                trace_id,
+                kind: TerminalKind::Redispatch,
+                ..
+            } => Some(*trace_id),
+            _ => None,
+        })
+        .collect();
+    assert!(!redispatches.is_empty(), "no Redispatch events recorded");
+    assert!(
+        redispatches.iter().all(|&id| id != 0),
+        "re-dispatch events must name their trace ids"
+    );
+    assert!(
+        entries.iter().any(|e| matches!(
+            e,
+            FlightEntry::Event { kind: TerminalKind::WorkerDeath, .. }
+        )),
+        "the worker death itself must be recorded"
+    );
+
+    client.shutdown();
+    router.shutdown();
+    for w in workers {
+        w.shutdown();
+    }
+}
+
+/// Satellite: a forced Low-priority shed lands in the flight ring as a
+/// `shed_low` terminal event naming the request's trace id.
+#[test]
+fn forced_shed_records_the_trace_id_in_the_flight_ring() {
+    let worker = mock_worker(Duration::from_millis(200));
+    let flight = Arc::new(FlightRecorder::new("router", 32, None));
+    let mut cfg = RouterConfig::new(vec![worker.local_addr().to_string()]);
+    cfg.max_outstanding = 1;
+    cfg.max_attempts = 1;
+    cfg.heartbeat_every = Duration::from_millis(100);
+    cfg.flight = Some(Arc::clone(&flight));
+    let router = Router::start(cfg, "127.0.0.1:0").unwrap();
+    let client =
+        ClusterClient::connect(&router.local_addr().to_string()).unwrap();
+    let img = fill_image(4, 0.9);
+
+    // First request occupies the single admission slot; the Low one
+    // behind it is shed.
+    let keep = client
+        .submit_traced(&img, None, Priority::Normal, None, 1, false)
+        .unwrap();
+    let tid = trace_id_for(0x5EED, 0);
+    let shed = client
+        .submit_traced(&img, None, Priority::Low, None, tid, true)
+        .unwrap();
+    let e = shed.recv_timeout(WAIT).unwrap().unwrap_err();
+    assert!(e.is_overloaded(), "expected a shed, got: {e}");
+    keep.recv_timeout(WAIT).unwrap().unwrap();
+
+    let named: Vec<u64> = flight
+        .entries()
+        .iter()
+        .filter_map(|e| match e {
+            FlightEntry::Event {
+                trace_id,
+                kind: TerminalKind::ShedLow,
+                ..
+            } => Some(*trace_id),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(
+        named,
+        vec![tid],
+        "the shed_low event must name the shed request's trace id"
+    );
+
+    client.shutdown();
+    router.shutdown();
+    worker.shutdown();
+}
+
+/// Satellite: v1 and v2 clients round-trip against a v3 worker — the
+/// server answers in the requester's version, never appends trace or
+/// telemetry tails they can't parse, and survives truncated v3 trace
+/// fields without panicking.
+#[test]
+fn old_wire_versions_round_trip_against_a_v3_server() {
+    let exec = Arc::new(reference_executor(RefSpec::tiny()).unwrap());
+    let worker = WorkerNode::start(
+        exec,
+        "127.0.0.1:0",
+        ServerConfig::default(),
+        None,
+    )
+    .unwrap();
+    let addr = worker.local_addr().to_string();
+    let img = noise_image(8, 3);
+
+    // A v3 payload is [key(8)][prio(1)][deadline(8)][tid(8)][flags(1)]
+    // [spill]; older shapes are strict prefixes of the fields.
+    let v3 = encode_submit_traced(5, Priority::Normal, None, 0, false, &img);
+    let spill = &v3[26..];
+    let v1: Vec<u8> = [&v3[..8], spill].concat();
+    let v2: Vec<u8> = [&v3[..17], spill].concat();
+
+    for (version, payload) in [(1u16, v1), (2u16, v2)] {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.set_read_timeout(Some(WAIT)).unwrap();
+        let f = Frame {
+            version,
+            ..Frame::new(FrameType::Submit, 40 + version as u64, payload)
+        };
+        f.write_to(&mut s).unwrap();
+        let reply = Frame::read_from(&mut s).unwrap();
+        assert_eq!(reply.ty, FrameType::Response, "v{version}");
+        assert_eq!(reply.id, 40 + version as u64);
+        assert_eq!(
+            reply.version, version,
+            "replies must speak the requester's version"
+        );
+        let (resp, trace) =
+            wire::parse_response(reply.version, &reply.payload).unwrap();
+        assert_eq!(resp.logits.len(), 10, "tiny spec has 10 classes");
+        assert!(trace.is_none(), "no trace tail for v{version}");
+
+        // Same connection, a MetricsReq: the payload must parse as a
+        // bare pre-v3 snapshot (strict — no telemetry tail).
+        let f = Frame {
+            version,
+            ..Frame::new(FrameType::MetricsReq, 90, Vec::new())
+        };
+        f.write_to(&mut s).unwrap();
+        let reply = Frame::read_from(&mut s).unwrap();
+        assert_eq!(reply.ty, FrameType::MetricsResp);
+        assert_eq!(reply.version, version);
+        let snap = MetricsSnapshot::parse(&reply.payload).unwrap();
+        assert!(snap.responses >= 1);
+    }
+
+    // A v3 submit truncated inside the new trace fields gets a typed
+    // Error frame (same id), and the connection keeps serving.
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.set_read_timeout(Some(WAIT)).unwrap();
+        let truncated = v3[..25].to_vec();
+        Frame::new(FrameType::Submit, 77, truncated)
+            .write_to(&mut s)
+            .unwrap();
+        let reply = Frame::read_from(&mut s).unwrap();
+        assert_eq!(reply.ty, FrameType::Error);
+        assert_eq!(reply.id, 77);
+
+        Frame::new(FrameType::Submit, 78, v3.clone())
+            .write_to(&mut s)
+            .unwrap();
+        let reply = Frame::read_from(&mut s).unwrap();
+        assert_eq!(reply.ty, FrameType::Response);
+        assert_eq!(reply.id, 78);
+        assert_eq!(reply.version, CLUSTER_VERSION);
+    }
+
+    // Bit-flipped v3 frames (flips landing in the new header/trace
+    // bytes included) are rejected by checksum — the worker tears the
+    // connection down instead of serving corrupt data.
+    {
+        let good = Frame::new(FrameType::Submit, 80, v3.clone()).encode();
+        let mut rng = Rng::new(0xF11B);
+        for _ in 0..8 {
+            let mut bad = good.clone();
+            let bit = rng.below(bad.len() as u64 * 8) as usize;
+            bad[bit / 8] ^= 1 << (bit % 8);
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            s.write_all(&bad).unwrap();
+            // Either an error frame or a closed connection — never a
+            // valid Response for a corrupt frame.
+            if let Ok(f) = Frame::read_from(&mut s) {
+                assert_ne!(f.ty, FrameType::Response);
+            }
+        }
+    }
+
+    worker.shutdown();
+}

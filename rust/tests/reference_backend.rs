@@ -42,6 +42,7 @@ fn coordinator_serves_end_to_end_on_the_reference_backend() {
             max_batch: 0,
             ship_spills: None,
             spill_sink: None,
+            flight: None,
         },
     );
     let img = noise_image(8, 11);
@@ -75,6 +76,7 @@ fn batching_engages_over_the_reference_backend() {
             max_batch: 0,
             ship_spills: None,
             spill_sink: None,
+            flight: None,
         },
     ));
     let rxs: Vec<_> = (0..16)
