@@ -10,8 +10,12 @@
 #     --flight-dir, and `zebra obs replay` parses it strictly
 #     (JSON-lines) and renders shed events + trace waterfalls;
 #   - `zebra obs --addr ROUTER` serves the unified report as both
-#     Prometheus text and JSON;
-#   - `--bench-json` (via ZEBRA_BENCH_OUT) emitted BENCH_PR8.json.
+#     Prometheus text and JSON, with the bandwidth-ledger families in
+#     the Prometheus scrape;
+#   - `zebra top --json` once-mode succeeds against the loopback
+#     cluster;
+#   - `--bench-json` (via ZEBRA_BENCH_OUT) emitted BENCH_PR9.json
+#     with the ledger and SLO sections.
 #
 # `make obs-smoke` runs this; rust/check.sh and
 # .github/workflows/ci.yml invoke that target.
@@ -63,17 +67,20 @@ R=$(wait_addr "$tmp/r.log")
 
 # The loadgen edge assigns trace ids, samples 1-in-4, polls the live
 # report every 25 ms, and writes the machine-readable run summary.
-ZEBRA_BENCH_SMOKE=1 ZEBRA_BENCH_OUT="$tmp/BENCH_PR8.json" \
+ZEBRA_BENCH_SMOKE=1 ZEBRA_BENCH_OUT="$tmp/BENCH_PR9.json" \
   "$BIN" loadgen --addr "$R" --requests 240 --conns 8 \
   --priority mixed --keys 4 --hw 8 --trace-sample 4 --scrape-ms 25 \
   --expect-sheds --fail-on-error
 
-# BENCH_PR8.json: emitted where ZEBRA_BENCH_OUT pointed, with the
-# run summary + the scraped time series + the cluster report.
-test -s "$tmp/BENCH_PR8.json"
-grep -q '"bench"' "$tmp/BENCH_PR8.json"
-grep -q '"trace"' "$tmp/BENCH_PR8.json"
-grep -q '"scrape"' "$tmp/BENCH_PR8.json"
+# BENCH_PR9.json: emitted where ZEBRA_BENCH_OUT pointed, with the
+# run summary + the scraped time series + the cluster report + the
+# per-layer bandwidth ledger and SLO breach counts.
+test -s "$tmp/BENCH_PR9.json"
+grep -q '"bench"' "$tmp/BENCH_PR9.json"
+grep -q '"trace"' "$tmp/BENCH_PR9.json"
+grep -q '"scrape"' "$tmp/BENCH_PR9.json"
+grep -q '"ledger"' "$tmp/BENCH_PR9.json"
+grep -q '"slo"' "$tmp/BENCH_PR9.json"
 
 # Flight dump: the sheds above are terminal events, so the router must
 # have dumped its ring. `zebra obs replay` parses the JSON-lines
@@ -88,8 +95,19 @@ grep -q 'terminal events' "$tmp/replay.txt"
 "$BIN" obs --addr "$R" >"$tmp/obs.prom"
 grep -q '^zebra_responses_total' "$tmp/obs.prom"
 grep -q '^zebra_stage_nanos_total{stage="router.dispatch"}' "$tmp/obs.prom"
+# The bandwidth ledger rides the same scrape as its own families
+# (the worker's per-layer cells, merged through the router).
+grep -q '^zebra_ledger_dense_bytes_total' "$tmp/obs.prom"
+grep -q '^zebra_ledger_savings_pct' "$tmp/obs.prom"
 "$BIN" obs --addr "$R" --json >"$tmp/obs.json"
 grep -q '"counters"' "$tmp/obs.json"
 grep -q '"telemetry"' "$tmp/obs.json"
+grep -q '"ledger"' "$tmp/obs.json"
 
-echo "obs smoke OK (router $R, worker $W1: traces sampled, sheds in the flight dump, obs scrape live)"
+# zebra top once-mode: one scrape, the full JSON report, no redraw
+# loop — the same path the live dashboard polls.
+"$BIN" top --addr "$R" --json >"$tmp/top.json"
+grep -q '"ledger"' "$tmp/top.json"
+grep -q '"slo"' "$tmp/top.json"
+
+echo "obs smoke OK (router $R, worker $W1: traces sampled, sheds in the flight dump, ledger + top on the obs scrape)"

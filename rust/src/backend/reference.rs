@@ -22,12 +22,14 @@
 //! architectures.
 
 use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
 use super::kernels;
 use super::{InferenceBackend, ModelOutput};
 use crate::compress::SpillBuf;
+use crate::obs::ledger::{Ledger, LedgerCell};
 use crate::tensor::{read_zten, Tensor};
 use crate::util::prng::Rng;
 use crate::zebra::blocks::BlockMask;
@@ -249,6 +251,17 @@ pub fn check_complete_leaves(
     Ok(())
 }
 
+/// Per-layer bandwidth-ledger attachment (see
+/// [`ReferenceBackend::attach_ledger`]): one pre-resolved
+/// [`LedgerCell`] per spill layer (codec `zero-block`, matching the
+/// fused encode) plus a pool of reusable [`SpillBuf`] vectors, since
+/// `execute` takes `&self` and may run on several coordinator workers
+/// at once.
+struct LedgerSink {
+    cells: Vec<Arc<LedgerCell>>,
+    pool: Mutex<Vec<Vec<SpillBuf>>>,
+}
+
 /// The reference backend: deterministic weights + native execution on
 /// the block-sparse engine (`backend::kernels`).
 pub struct ReferenceBackend {
@@ -256,6 +269,9 @@ pub struct ReferenceBackend {
     params: RefParams,
     /// Resolved conv worker-thread count (spec override / env / 1).
     threads: usize,
+    /// When attached, `execute` routes through the fused encode path
+    /// and records every layer's dense/encoded bytes and zero blocks.
+    ledger: Option<LedgerSink>,
 }
 
 impl ReferenceBackend {
@@ -311,7 +327,26 @@ impl ReferenceBackend {
             );
         }
         let threads = kernels::resolve_threads(spec.threads);
-        Ok(ReferenceBackend { spec, params, threads })
+        Ok(ReferenceBackend { spec, params, threads, ledger: None })
+    }
+
+    /// Attach a bandwidth ledger: every subsequent `execute` routes
+    /// through the fused conv → ReLU → prune → encode path and
+    /// records one observation per layer into the ledger's
+    /// `(layer, "zero-block")` cells — dense bytes the spill would
+    /// move raw, the encoded payload+index bytes it actually moves,
+    /// and the zero-block count. Costs the encode sweep the serving
+    /// path already pays when spill shipping is on; attach where
+    /// bandwidth truth matters (serving), not in the trainer's loop.
+    pub fn attach_ledger(&mut self, ledger: &Ledger) {
+        let cells = self
+            .spec
+            .spills
+            .iter()
+            .map(|s| ledger.cell(&s.name, "zero-block"))
+            .collect();
+        self.ledger =
+            Some(LedgerSink { cells, pool: Mutex::new(Vec::new()) });
     }
 
     pub fn spec(&self) -> &RefSpec {
@@ -464,7 +499,35 @@ impl InferenceBackend for ReferenceBackend {
     }
 
     fn execute(&self, x: &Tensor) -> Result<ModelOutput> {
-        self.forward(x, Capture::Discard)
+        let Some(sink) = &self.ledger else {
+            return self.forward(x, Capture::Discard);
+        };
+        // Ledger-attached serving: run the fused encode path with a
+        // pooled buffer set, record each layer's observation, return
+        // the buffers for the next batch.
+        let mut bufs =
+            sink.pool.lock().unwrap().pop().unwrap_or_default();
+        let out = self.run_capture_encoded(x, &mut bufs);
+        if let Ok(out) = &out {
+            for (i, (mask, buf)) in
+                out.masks.iter().zip(&bufs).enumerate()
+            {
+                let blocks = mask.data().len() as u64;
+                let zeros = mask
+                    .data()
+                    .iter()
+                    .filter(|&&v| v == 0.0)
+                    .count() as u64;
+                sink.cells[i].record(
+                    buf.view().volume() as u64 * 4,
+                    buf.total_bytes() as u64,
+                    blocks,
+                    zeros,
+                );
+            }
+        }
+        sink.pool.lock().unwrap().push(bufs);
+        out
     }
 
     fn exec_threads(&self) -> usize {
@@ -830,6 +893,45 @@ mod tests {
             codec.decode_into(buf.view(), &mut dec);
             assert_eq!(&dec, sp, "layer {i}: fused frame must decode back");
         }
+    }
+
+    #[test]
+    fn attached_ledger_matches_the_analytic_figure_and_the_output() {
+        let plain = ReferenceBackend::new(RefSpec::tiny()).unwrap();
+        let ledger = Ledger::new();
+        let mut b = ReferenceBackend::new(RefSpec::tiny()).unwrap();
+        b.attach_ledger(&ledger);
+        for seed in [1, 2, 3] {
+            let x = image(8, seed);
+            // The ledger route (fused encode) is still bitwise the
+            // plain serving path.
+            let (a, p) =
+                (b.execute(&x).unwrap(), plain.execute(&x).unwrap());
+            assert_eq!(a.logits, p.logits);
+            assert_eq!(a.masks, p.masks);
+        }
+        let snap = ledger.snapshot();
+        assert_eq!(snap.cells.len(), 2, "{:?}", snap.cells.keys());
+        for ((layer, codec), s) in &snap.cells {
+            assert_eq!(codec, "zero-block");
+            assert_eq!(s.sweeps, 3, "layer {layer}");
+            // The fused zero-block encode IS the Eq. 2–3 model:
+            // payload = kept blocks x block bytes, index = 1 bit per
+            // block — achieved and analytic agree exactly.
+            assert_eq!(
+                s.encoded_bytes,
+                s.analytic_bytes(),
+                "layer {layer}"
+            );
+        }
+        assert!(
+            snap.total().zero_blocks > 0,
+            "the tiny model prunes under T=0.1"
+        );
+        // Dense totals are the raw spill volumes: 3 images of
+        // 8x8x8 f32 (l0) and 16x4x4 f32 (l1).
+        assert_eq!(snap.cells[&("l0".into(), "zero-block".into())].dense_bytes, 3 * 2048);
+        assert_eq!(snap.cells[&("l1".into(), "zero-block".into())].dense_bytes, 3 * 1024);
     }
 
     #[test]

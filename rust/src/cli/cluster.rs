@@ -22,12 +22,13 @@ use super::opts::ServeOpts;
 use super::Args;
 use crate::cluster::{Router, RouterConfig, ShardMode, WorkerNode};
 use crate::coordinator::server::BatchExecutor;
+use crate::obs::{Ledger, SloEngine};
 
 /// `zebra cluster-worker`: build the serving executor exactly like
 /// `zebra serve` and expose it as a cluster worker node.
 pub fn run_worker(args: &Args) -> Result<()> {
     let opts = ServeOpts::from_args(args)?;
-    let (exec, _classes, backend) =
+    let (exec, _classes, backend, ledger) =
         super::serve::build_executor(args, &crate::artifacts_dir())?;
     println!(
         "cluster-worker backend {} | batches {:?} | threads {}",
@@ -35,21 +36,27 @@ pub fn run_worker(args: &Args) -> Result<()> {
         exec.batch_sizes(),
         exec.exec_threads()
     );
-    expose_worker(&opts, args, exec)
+    expose_worker(&opts, args, exec, ledger)
 }
 
 /// Shared TCP front for `cluster-worker` and `serve --port`: wrap the
 /// executor in a coordinator server behind a listener, print the
-/// bound address, and hold until `--run-s` elapses (or forever).
+/// bound address, and hold until `--run-s` elapses (or forever). The
+/// hold loop doubles as the node's SLO sampler.
 pub(crate) fn expose_worker(
     opts: &ServeOpts,
     args: &Args,
     exec: Arc<dyn BatchExecutor>,
+    ledger: Arc<Ledger>,
 ) -> Result<()> {
     let ship_upstream = args.get("ship-upstream").map(String::from);
     let image_hw = exec.image_hw();
     let mut cfg = opts.server_config(image_hw)?;
-    cfg.flight = opts.flight_recorder("worker");
+    let flight = opts.flight_recorder("worker");
+    cfg.flight = flight.clone();
+    cfg.ledger = Some(ledger);
+    let slo = SloEngine::new(opts.slo.clone(), flight);
+    cfg.slo = Some(slo.clone());
     let node = WorkerNode::start(
         exec,
         &opts.listen_addr(),
@@ -58,7 +65,10 @@ pub(crate) fn expose_worker(
         ship_upstream,
     )?;
     println!("cluster-worker listening on {}", node.local_addr());
-    opts.hold();
+    opts.hold_sampling(|now_ms| {
+        let input = node.server().slo_input();
+        slo.observe(now_ms, &input);
+    });
     println!("cluster-worker metrics: {}", node.metrics().summary());
     print!(
         "{}",
@@ -93,7 +103,11 @@ pub fn run_router(args: &Args) -> Result<()> {
     cfg.heartbeat_every = Duration::from_millis(
         args.get_usize("heartbeat-ms", 250)? as u64,
     );
-    cfg.flight = opts.flight_recorder("router");
+    let flight = opts.flight_recorder("router");
+    cfg.flight = flight.clone();
+    cfg.ledger = Some(Ledger::new());
+    let slo = SloEngine::new(opts.slo.clone(), flight);
+    cfg.slo = Some(slo.clone());
     let n_workers = cfg.workers.len();
     let mode = cfg.mode;
     let router = Router::start(cfg, &opts.listen_addr())?;
@@ -104,7 +118,10 @@ pub fn run_router(args: &Args) -> Result<()> {
         mode.name(),
         router.workers_alive()
     );
-    opts.hold();
+    opts.hold_sampling(|now_ms| {
+        let input = router.slo_input();
+        slo.observe(now_ms, &input);
+    });
     println!("cluster-router stats: {}", router.stats().summary());
     print!("{}", router.telemetry().snapshot().report(None));
     // Exit-time dump so `--flight-dir` always leaves a post-mortem

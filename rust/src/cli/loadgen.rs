@@ -16,9 +16,11 @@
 //! `client.rtt` span — the span envelope over the client-observed wall
 //! is reported as trace coverage. `--scrape-ms M` polls the unified
 //! observability report ([`ObsReport`]) on a side connection while the
-//! run is in flight, and `--bench-json` (or a non-empty
-//! `ZEBRA_BENCH_OUT`) writes the whole run as machine-readable
-//! `BENCH_PR8.json` (see `rust/docs/observability.md`).
+//! run is in flight (the poller joins on every exit path, including
+//! errors), and `--bench-json` (or a non-empty `ZEBRA_BENCH_OUT`)
+//! writes the whole run as machine-readable `BENCH_PR9.json` — run
+//! stats plus the per-layer bandwidth ledger and SLO breach counts
+//! (see `rust/docs/observability.md`).
 //!
 //! Admission-control sheds are first-class outcomes, not faults:
 //! every submitted request ends as exactly one of ok / shed / failed
@@ -39,7 +41,8 @@ use crate::backend::synth_images;
 use crate::cluster::{ClusterClient, ClusterError};
 use crate::coordinator::Metrics;
 use crate::obs::{
-    now_ns, render_waterfall, sampled, trace_id_for, ObsReport, TraceRecord,
+    now_ns, parse_slo, render_waterfall, sampled, trace_id_for,
+    LedgerSnapshot, ObsReport, TraceRecord,
 };
 use crate::telemetry::Telemetry;
 use crate::tensor::{read_zten, Tensor};
@@ -178,7 +181,17 @@ pub fn run(args: &Args) -> Result<()> {
                 Err(_) => return out,
             };
             while !done.load(Ordering::Relaxed) {
-                std::thread::sleep(Duration::from_millis(scrape_ms as u64));
+                // Sleep in short slices so the join at exit never
+                // waits out a long --scrape-ms interval.
+                let mut left = scrape_ms as u64;
+                while left > 0 && !done.load(Ordering::Relaxed) {
+                    let step = left.min(25);
+                    std::thread::sleep(Duration::from_millis(step));
+                    left -= step;
+                }
+                if done.load(Ordering::Relaxed) {
+                    break;
+                }
                 if let Ok(r) = client.obs_report() {
                     out.push(Scrape {
                         t_ms: t0.elapsed().as_millis() as u64,
@@ -323,12 +336,16 @@ pub fn run(args: &Args) -> Result<()> {
             }
         }
         Ok(total)
-    })?;
+    });
     let wall = t0.elapsed();
+    // Reap the scraper before checking the run result: the old `?`
+    // here skipped the stop flag and leaked a detached poller holding
+    // its side connection open.
     done.store(true, Ordering::Relaxed);
     let scrapes = scraper
         .map(|h| h.join().unwrap_or_default())
         .unwrap_or_default();
+    let run = run?;
     let tally = &run.tally;
     let (ok, shed) = (tally.ok_total(), tally.shed_total());
     println!(
@@ -470,7 +487,7 @@ fn envelope_coverage(rec: &TraceRecord, wall_ns: u64) -> f64 {
 
 /// Emit the machine-readable run report. `ZEBRA_BENCH_OUT` overrides
 /// the path (CI artifacts, side-by-side A/B runs); the default is
-/// `BENCH_PR8.json` in the working directory — generated output, never
+/// `BENCH_PR9.json` in the working directory — generated output, never
 /// committed. Schema documented in `rust/docs/observability.md`.
 #[allow(clippy::too_many_arguments)]
 fn write_bench_json(
@@ -512,8 +529,54 @@ fn write_bench_json(
             ])
         })
         .collect();
+    // Bandwidth ledger and SLO planes from the exit-time scrape, lifted
+    // to top level so CI can assert on savings and breach counts
+    // without digging through the full cluster report.
+    let ledger = report.map_or(Value::Null, |r| {
+        let snap = LedgerSnapshot::from_telemetry(&r.telemetry);
+        Value::Object(
+            snap.cells
+                .iter()
+                .map(|((layer, codec), c)| {
+                    (
+                        format!("{layer}/{codec}"),
+                        obj(vec![
+                            ("dense_bytes", num(c.dense_bytes as f64)),
+                            ("encoded_bytes", num(c.encoded_bytes as f64)),
+                            ("zero_permille", num(c.zero_permille() as f64)),
+                            ("savings_pct", num(c.achieved_savings_pct())),
+                            (
+                                "analytic_savings_pct",
+                                num(c.analytic_savings_pct()),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    });
+    let slo = report.map_or(Value::Null, |r| {
+        Value::Object(
+            parse_slo(&r.telemetry)
+                .iter()
+                .map(|(name, v)| {
+                    (
+                        name.clone(),
+                        obj(vec![
+                            ("breaches", num(v.breaches as f64)),
+                            ("active", Value::Bool(v.active)),
+                            (
+                                "threshold_milli",
+                                num(v.threshold_milli as f64),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    });
     let root = obj(vec![
-        ("bench", Value::Str("loadgen/pr8".into())),
+        ("bench", Value::Str("loadgen/pr9".into())),
         ("requests", num(n as f64)),
         ("conns", num(conns as f64)),
         ("target_qps", num(qps as f64)),
@@ -555,6 +618,8 @@ fn write_bench_json(
                 ("series", Value::Array(series)),
             ]),
         ),
+        ("ledger", ledger),
+        ("slo", slo),
         (
             "cluster",
             report.map_or(Value::Null, |r| r.to_json()),
@@ -562,7 +627,7 @@ fn write_bench_json(
     ]);
     let path = match std::env::var_os("ZEBRA_BENCH_OUT") {
         Some(p) if !p.is_empty() => std::path::PathBuf::from(p),
-        _ => std::path::PathBuf::from("BENCH_PR8.json"),
+        _ => std::path::PathBuf::from("BENCH_PR9.json"),
     };
     std::fs::write(&path, json::to_string(&root) + "\n")
         .with_context(|| format!("writing bench report {path:?}"))?;

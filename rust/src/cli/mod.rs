@@ -15,6 +15,7 @@ mod obs;
 pub mod opts;
 pub mod serve;
 mod simulate;
+mod top;
 mod train;
 
 use std::collections::HashMap;
@@ -109,6 +110,11 @@ commands:
                                 from the trace id; 1 = every request)
             [--flight-dir DIR]  dump the flight-recorder ring as
                                 JSON-lines on terminal events + exit
+            [--slo NAME=T,..]  SLO objectives for the burn-rate engine
+                              (shed-rate / deadline-miss fractions,
+                              p99-latency us, savings-floor fraction);
+                              breaches hit the flight recorder and
+                              export as zebra_slo_breach
             [--port P]        expose the server over TCP instead of
                               replaying (0 = ephemeral; prints the
                               bound address) [--host H] [--run-s N]
@@ -120,11 +126,11 @@ commands:
             [--port P] [--host H] [--run-s N]
             [--ship-upstream HOST:PORT]  ship .zspill batch frames to
                                          the router
-            [--flight-dir DIR]
+            [--flight-dir DIR] [--slo NAME=T,...]
   cluster-router --workers HOST:P1,HOST:P2[,...]
             [--mode rr|hash]  round-robin or consistent-hash-by-key
             [--max-outstanding N] [--max-attempts N] [--heartbeat-ms MS]
-            [--flight-dir DIR]
+            [--flight-dir DIR] [--slo NAME=T,...]
             [--port P] [--host H] [--run-s N]
   loadgen   --addr HOST:PORT  drive a router at a target rate; prints
                               p50/p95/p99 latency + per-class
@@ -146,9 +152,10 @@ commands:
                                 client-observed wall
             [--scrape-ms MS]  poll the live obs report on a side
                               connection while the run is in flight
-            [--bench-json]    write BENCH_PR8.json (machine-readable
-                              run report; ZEBRA_BENCH_OUT overrides
-                              the path and also enables this)
+            [--bench-json]    write BENCH_PR9.json (machine-readable
+                              run report + per-layer bandwidth ledger
+                              + SLO breach counts; ZEBRA_BENCH_OUT
+                              overrides the path and also enables this)
   obs       --addr HOST:PORT  scrape one unified observability report
                               (cluster counters + latency + Eq. 2-3
                               bandwidth + merged telemetry stages) as
@@ -156,6 +163,14 @@ commands:
   obs replay FILE.jsonl       render a flight-recorder dump: one
                               waterfall per sampled trace + terminal
                               events (shed / deadline-miss / ...)
+  top       --addr HOST:PORT  refresh-in-place live dashboard over the
+                              obs scrape: cluster summary, SLO breach
+                              banners, per-worker queue/shed table,
+                              bandwidth ledger with zero-block trend
+                              sparklines
+            [--interval-ms MS]  redraw period (default 500)
+            [--frames N]      exit after N redraws (0 = run forever)
+            [--json]          one scrape as JSON, then exit
   simulate  --trace DIR       accelerator simulation of a trace
             | --backend reference [--model KEY] [--images N]
                                   [--weights DIR] [--seed S]
@@ -197,6 +212,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "cluster-worker" => cluster::run_worker(&args),
         "cluster-router" => cluster::run_router(&args),
         "loadgen" => loadgen::run(&args),
+        "top" => top::run(&args),
         "simulate" => simulate::run(&args),
         "targets" => simulate::targets(&args),
         "analyze" => analyze::run(&args),
@@ -444,6 +460,18 @@ mod tests {
         let path = f.dump().unwrap().unwrap();
         run(&v(&["obs", "replay", path.to_str().unwrap()])).unwrap();
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn top_validates_its_flags() {
+        let e = run(&v(&["top"])).unwrap_err().to_string();
+        assert!(e.contains("--addr"), "{e}");
+        // Interval validation fires before any socket is touched (and
+        // before the redraw loop could spin).
+        let e = run(&v(&["top", "--addr", "x", "--interval-ms", "0"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--interval-ms"), "{e}");
     }
 
     #[test]

@@ -19,7 +19,7 @@ use super::Args;
 use crate::compress;
 use crate::coordinator::{Priority, ServerConfig, ShipSpills};
 use crate::obs::flight::FLIGHT_CAPACITY;
-use crate::obs::FlightRecorder;
+use crate::obs::{FlightRecorder, SloConfig};
 
 /// `--priority low|normal|high|mixed`: one fixed class for every
 /// request, or (loadgen) a deterministic low/normal/high cycle that
@@ -94,6 +94,11 @@ pub struct ServeOpts {
     /// `--flight-dir DIR`: terminal events (sheds, deadline misses,
     /// worker deaths) dump the node's flight ring here as JSON-lines.
     pub flight_dir: Option<PathBuf>,
+    /// `--slo name=threshold,...`: overrides on the default objective
+    /// set (shed-rate, deadline-miss, p99-latency-us, savings-floor).
+    /// The engine always runs; the defaults are lenient enough to stay
+    /// silent on a healthy node.
+    pub slo: SloConfig,
 }
 
 impl ServeOpts {
@@ -138,6 +143,7 @@ impl ServeOpts {
             PriorityMix::parse(&args.get_or("priority", "normal"))?;
         let trace_sample = args.get_usize("trace-sample", 0)?;
         let flight_dir = args.get("flight-dir").map(PathBuf::from);
+        let slo = SloConfig::parse_overrides(&args.get_or("slo", ""))?;
         Ok(ServeOpts {
             flush,
             queue,
@@ -150,6 +156,7 @@ impl ServeOpts {
             priority,
             trace_sample,
             flight_dir,
+            slo,
         })
     }
 
@@ -179,6 +186,12 @@ impl ServeOpts {
             ship_spills: self.ship_spills(image_hw)?,
             spill_sink: None,
             flight: None,
+            // The observability planes are attached by the entry
+            // points: the ledger must be the one the executor was
+            // built with, and the SLO engine wants the node's flight
+            // recorder.
+            ledger: None,
+            slo: None,
         })
     }
 
@@ -219,6 +232,22 @@ impl ServeOpts {
         }
         std::thread::sleep(Duration::from_secs(self.run_s));
     }
+
+    /// [`ServeOpts::hold`] that doubles as the node's SLO sampling
+    /// loop: `tick` runs about once a second with milliseconds since
+    /// the hold began (a monotonic origin — the SLO engine never sees
+    /// the wall clock).
+    pub fn hold_sampling(&self, mut tick: impl FnMut(u64)) {
+        let t0 = std::time::Instant::now();
+        loop {
+            std::thread::sleep(Duration::from_millis(1000));
+            let elapsed = t0.elapsed();
+            tick(elapsed.as_millis() as u64);
+            if self.run_s > 0 && elapsed >= Duration::from_secs(self.run_s) {
+                return;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -244,6 +273,7 @@ mod tests {
         assert_eq!(o.priority, PriorityMix::Fixed(Priority::Normal));
         assert_eq!(o.trace_sample, 0);
         assert_eq!(o.flight_dir, None);
+        assert_eq!(o.slo, SloConfig::default());
         assert!(o.flight_recorder("node").is_none());
         assert_eq!(o.listen_addr(), "127.0.0.1:0");
         let cfg = o.server_config(8).unwrap();
@@ -317,6 +347,24 @@ mod tests {
         let o = ServeOpts::from_args(&parse(&["--ship-codec", "nope"]))
             .unwrap();
         assert!(o.ship_spills(8).is_err());
+    }
+
+    #[test]
+    fn slo_overrides_parse_through_the_shared_surface() {
+        let o = ServeOpts::from_args(&parse(&["--slo", "shed-rate=0.1"]))
+            .unwrap();
+        let obj = o
+            .slo
+            .objectives
+            .iter()
+            .find(|x| x.name == "shed-rate")
+            .unwrap();
+        assert!((obj.threshold - 0.1).abs() < 1e-12);
+        // Unknown objective names fail the whole flag parse, loudly.
+        let e = ServeOpts::from_args(&parse(&["--slo", "nope=1"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("shed-rate"), "{e}");
     }
 
     #[test]

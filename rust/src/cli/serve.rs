@@ -20,9 +20,9 @@ use crate::backend::reference::RefSpec;
 use crate::backend::{synth_images, synth_labels, testset_matches, BackendKind};
 use crate::coordinator::server::BatchExecutor;
 use crate::coordinator::{
-    reference_executor, Server, SubmitOutcome, SubmitRequest,
+    reference_executor_with_ledger, Server, SubmitOutcome, SubmitRequest,
 };
-use crate::obs::{render_waterfall, sampled, trace_id_for};
+use crate::obs::{render_waterfall, sampled, trace_id_for, Ledger, SloEngine};
 use crate::tensor::{read_zten, read_zten_i32, Tensor};
 
 pub fn run(args: &Args) -> Result<()> {
@@ -32,12 +32,17 @@ pub fn run(args: &Args) -> Result<()> {
 /// Build the `--backend`/`--model`/`--weights` executor the way every
 /// serving entry point (serve, cluster-worker) does. Returns the
 /// executor, the class count when known statically (reference backend
-/// only — it gates the synthetic-test-set fallback), and the resolved
-/// backend kind.
+/// only — it gates the synthetic-test-set fallback), the resolved
+/// backend kind, and the node's bandwidth [`Ledger`] — attached to the
+/// reference backend's per-layer sweep (the PJRT runtime doesn't
+/// capture masks yet, so its ledger only ever carries the spill cell)
+/// and meant to land in `ServerConfig::ledger` so the same registry
+/// also records shipped batches.
 pub(crate) fn build_executor(
     args: &Args,
     artifacts: &std::path::Path,
-) -> Result<(Arc<dyn BatchExecutor>, Option<usize>, BackendKind)> {
+) -> Result<(Arc<dyn BatchExecutor>, Option<usize>, BackendKind, Arc<Ledger>)>
+{
     let backend = BackendKind::parse(
         &args.get_or("backend", BackendKind::default_name()),
     )?;
@@ -52,6 +57,7 @@ pub(crate) fn build_executor(
     if threads > 0 && backend != BackendKind::Reference {
         anyhow::bail!("--threads only applies to --backend reference");
     }
+    let ledger = Ledger::new();
     let (exec, classes): (Arc<dyn BatchExecutor>, Option<usize>) = match backend
     {
         BackendKind::Reference => {
@@ -80,7 +86,13 @@ pub(crate) fn build_executor(
                 }
             }
             let classes = spec.classes;
-            (Arc::new(reference_executor(spec)?), Some(classes))
+            (
+                Arc::new(reference_executor_with_ledger(
+                    spec,
+                    ledger.clone(),
+                )?),
+                Some(classes),
+            )
         }
         BackendKind::Pjrt => {
             #[cfg(feature = "pjrt")]
@@ -102,7 +114,7 @@ pub(crate) fn build_executor(
             }
         }
     };
-    Ok((exec, classes, backend))
+    Ok((exec, classes, backend, ledger))
 }
 
 /// `serve` with an explicit artifacts directory (tests inject a temp
@@ -119,7 +131,7 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
     let synth_seed = args.get_usize("seed", 0xB1A5)? as u64;
 
     let t0 = Instant::now();
-    let (exec, classes, backend) = build_executor(args, &artifacts)?;
+    let (exec, classes, backend, ledger) = build_executor(args, &artifacts)?;
     println!(
         "backend {} | model {} | batches {:?} | threads {} | ready in {:.1}s",
         backend.name(),
@@ -133,7 +145,7 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
     // set against it (`--port 0` binds an ephemeral port and prints
     // the bound address, so scripts never race on fixed ports).
     if opts.port.is_some() {
-        return super::cluster::expose_worker(&opts, args, exec);
+        return super::cluster::expose_worker(&opts, args, exec, ledger);
     }
 
     // Test set: prefer the exported one when it matches this model's
@@ -171,6 +183,8 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
     let flight = opts.flight_recorder("serve");
     let mut cfg = opts.server_config(image_hw)?;
     cfg.flight = flight.clone();
+    cfg.ledger = Some(ledger.clone());
+    cfg.slo = Some(SloEngine::new(opts.slo.clone(), flight.clone()));
     let server = Server::start(exec, cfg);
 
     let n_avail = images.shape()[0];
@@ -232,6 +246,23 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
         if synthetic { " (synthetic labels — accuracy is chance)" } else { "" }
     );
     println!("metrics: {}", server.metrics.summary());
+    // Per-layer bandwidth ledger from the replay (the same cells a
+    // live node exports as `zebra_ledger_*`).
+    let snap = ledger.snapshot();
+    if !snap.cells.is_empty() {
+        println!("ledger (dense -> encoded bytes per layer/codec):");
+        for ((layer, codec), c) in &snap.cells {
+            println!(
+                "  {layer}/{codec}: {} -> {} ({:.1}% saved, {} of {} \
+                 blocks zero)",
+                c.dense_bytes,
+                c.encoded_bytes,
+                c.achieved_savings_pct(),
+                c.zero_blocks,
+                c.blocks
+            );
+        }
+    }
     print!("{}", server.telemetry.snapshot().report(Some("serve.batch")));
     // One sampled request's waterfall, as a taste of what `zebra obs
     // replay` renders from a full flight dump.

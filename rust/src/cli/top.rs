@@ -1,0 +1,402 @@
+//! `zebra top` — refresh-in-place live cluster dashboard:
+//!
+//! ```text
+//! zebra top --addr ROUTER_ADDR [--interval-ms 500]
+//! zebra top --addr ROUTER_ADDR --json      # one scrape, JSON, exit
+//! ```
+//!
+//! Each tick scrapes one [`ObsReport`] over the same `MetricsReq` wire
+//! `zebra obs` uses, then redraws in place (ANSI clear + home):
+//! cluster summary, active SLO breach banners, the per-worker table
+//! reassembled from the router's `cluster.w<idx>.*` stages, and the
+//! bandwidth ledger with a sparkline of each layer's recent zero-block
+//! permille. `--frames N` exits after N redraws (smoke tests);
+//! `--json` is a single-scrape once-mode for scripts.
+//!
+//! Rendering is a pure function of the report plus the kept history —
+//! the unit tests drive it with synthetic reports, no sockets.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt::Write as _;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::Args;
+use crate::cluster::ClusterClient;
+use crate::obs::{parse_slo, parse_workers, LedgerSnapshot, ObsReport};
+use crate::util::json;
+
+/// Sparkline alphabet, lowest to highest.
+const SPARK: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+
+/// Ticks of per-cell history kept for the sparkline column.
+const HISTORY: usize = 24;
+
+pub fn run(args: &Args) -> Result<()> {
+    let addr = args
+        .get("addr")
+        .context("zebra top needs --addr HOST:PORT")?;
+    let interval = args.get_usize("interval-ms", 500)? as u64;
+    anyhow::ensure!(interval > 0, "--interval-ms must be > 0");
+    let frames = args.get_usize("frames", 0)?;
+    if args.get("json").is_some() {
+        // Once-mode: one scrape, machine-readable, no redraw loop.
+        let report = scrape(addr)?;
+        println!("{}", json::to_string(&report.to_json()));
+        return Ok(());
+    }
+    let mut dash = Dashboard::default();
+    let mut tick = 0usize;
+    loop {
+        tick += 1;
+        let body = match scrape(addr) {
+            Ok(report) => dash.frame(addr, tick, interval, &report),
+            // A refused/dropped scrape is a frame, not an exit: nodes
+            // restart, and top should ride it out.
+            Err(e) => {
+                format!("zebra top — {addr} — tick {tick}\n\n  scrape failed: {e:#}\n")
+            }
+        };
+        // Clear + home, then the whole frame in one write.
+        print!("\x1b[2J\x1b[H{body}");
+        use std::io::Write as _;
+        std::io::stdout().flush().ok();
+        if frames > 0 && tick >= frames {
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_millis(interval));
+    }
+}
+
+/// One scrape over a fresh connection (reconnect-per-tick keeps top
+/// resilient to node restarts at these refresh rates).
+fn scrape(addr: &str) -> Result<ObsReport> {
+    let client = ClusterClient::connect(addr)?;
+    let report = client.obs_report();
+    client.shutdown();
+    report
+}
+
+/// The dashboard's only state: per-ledger-cell zero-permille history
+/// for the sparkline column.
+#[derive(Default)]
+struct Dashboard {
+    history: BTreeMap<(String, String), VecDeque<u64>>,
+}
+
+impl Dashboard {
+    /// Fold one report into the history and render the full frame.
+    fn frame(
+        &mut self,
+        addr: &str,
+        tick: usize,
+        interval: u64,
+        report: &ObsReport,
+    ) -> String {
+        let ledger = LedgerSnapshot::from_telemetry(&report.telemetry);
+        for (key, cell) in &ledger.cells {
+            let h = self.history.entry(key.clone()).or_default();
+            if h.len() == HISTORY {
+                h.pop_front();
+            }
+            h.push_back(cell.zero_permille());
+        }
+        render(addr, tick, interval, report, &ledger, &self.history)
+    }
+}
+
+/// Pure frame renderer (unit-testable without sockets or ANSI).
+fn render(
+    addr: &str,
+    tick: usize,
+    interval: u64,
+    report: &ObsReport,
+    ledger: &LedgerSnapshot,
+    history: &BTreeMap<(String, String), VecDeque<u64>>,
+) -> String {
+    let s = &report.stats;
+    let a = &s.aggregate;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "zebra top — {addr} — tick {tick} (every {interval} ms)"
+    );
+    out.push('\n');
+    if s.workers_total > 0 {
+        let _ = writeln!(
+            out,
+            "cluster: {}/{} workers alive | routed {} | retries {} | \
+             rejected {} | spill in {} over {} frames",
+            s.workers_alive,
+            s.workers_total,
+            s.routed,
+            s.retries,
+            s.rejected,
+            fmt_bytes(s.spill_bytes_in),
+            s.spill_frames_in,
+        );
+    } else {
+        let _ = writeln!(out, "single node (no router counters)");
+    }
+    let _ = writeln!(
+        out,
+        "serving: requests {} | responses {} | shed {}/{}/{} | \
+         misses {} | failed {} | queue {}",
+        a.requests,
+        a.responses,
+        a.shed_low,
+        a.shed_normal,
+        a.shed_high,
+        a.deadline_miss,
+        a.failed,
+        a.queue_depth,
+    );
+    let _ = writeln!(
+        out,
+        "latency: p50 {} | p95 {} | p99 {}",
+        fmt_us(a.latency_percentile_us(0.5)),
+        fmt_us(a.latency_percentile_us(0.95)),
+        fmt_us(a.latency_percentile_us(0.99)),
+    );
+
+    // SLO banners: active breaches shout, quiet objectives get one
+    // summary line so the panel proves the engine is wired in.
+    let slo = parse_slo(&report.telemetry);
+    if !slo.is_empty() {
+        out.push('\n');
+        let mut quiet = 0usize;
+        for (name, view) in &slo {
+            if view.active {
+                let _ = writeln!(
+                    out,
+                    "!! SLO BREACH {name} (threshold {:.3}, {} \
+                     breach{} so far)",
+                    view.threshold_milli as f64 / 1000.0,
+                    view.breaches,
+                    if view.breaches == 1 { "" } else { "es" },
+                );
+            } else {
+                quiet += 1;
+            }
+        }
+        let _ = writeln!(
+            out,
+            "slo: {quiet}/{} objectives healthy",
+            slo.len()
+        );
+    }
+
+    let workers = parse_workers(&report.telemetry);
+    if !workers.is_empty() {
+        out.push('\n');
+        let _ = writeln!(
+            out,
+            "{:>3}  {:>5}  {:>9}  {:>5}  {:>10}  {:>8}",
+            "wkr", "alive", "in-flight", "queue", "responses", "shed"
+        );
+        for (idx, w) in &workers {
+            let _ = writeln!(
+                out,
+                "{idx:>3}  {:>5}  {:>9}  {:>5}  {:>10}  {:>8}",
+                if w.alive { "yes" } else { "NO" },
+                w.in_flight,
+                w.queue_depth,
+                w.responses,
+                w.shed,
+            );
+        }
+    }
+
+    if !ledger.cells.is_empty() {
+        out.push('\n');
+        let _ = writeln!(
+            out,
+            "{:<24} {:>9} {:>9} {:>6} {:>7} {:>8}  trend",
+            "ledger cell", "dense", "encoded", "zero‰", "saved", "analytic"
+        );
+        for ((layer, codec), c) in &ledger.cells {
+            let trend = history
+                .get(&(layer.clone(), codec.clone()))
+                .map(|h| sparkline(h))
+                .unwrap_or_default();
+            let _ = writeln!(
+                out,
+                "{:<24} {:>9} {:>9} {:>6} {:>6.1}% {:>7.1}%  {trend}",
+                format!("{layer}/{codec}"),
+                fmt_bytes(c.dense_bytes),
+                fmt_bytes(c.encoded_bytes),
+                c.zero_permille(),
+                c.achieved_savings_pct(),
+                c.analytic_savings_pct(),
+            );
+        }
+        let total = ledger.total();
+        let _ = writeln!(
+            out,
+            "ledger total: {} -> {} ({:.1}% of dense traffic never \
+             hit the channel)",
+            fmt_bytes(total.dense_bytes),
+            fmt_bytes(total.encoded_bytes),
+            total.achieved_savings_pct(),
+        );
+    }
+    out
+}
+
+/// Render a permille series (0..=1000) on the fixed 0..=1000 scale so
+/// two frames of the same value always draw the same bar.
+fn sparkline(h: &VecDeque<u64>) -> String {
+    h.iter()
+        .map(|&v| SPARK[(v.min(1000) as usize * (SPARK.len() - 1)) / 1000])
+        .collect()
+}
+
+/// `1234` -> `1.2KB`-style humanized byte counts (fixed-point, no
+/// locale, stable under test).
+fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 4] = ["B", "KB", "MB", "GB"];
+    let mut v = b as f64;
+    let mut u = 0usize;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b}B")
+    } else {
+        format!("{v:.1}{}", UNITS[u])
+    }
+}
+
+/// Microseconds humanized to us/ms/s.
+fn fmt_us(us: u64) -> String {
+    if us < 1_000 {
+        format!("{us}us")
+    } else if us < 1_000_000 {
+        format!("{:.1}ms", us as f64 / 1e3)
+    } else {
+        format!("{:.2}s", us as f64 / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterStats, MetricsSnapshot};
+    use crate::obs::Ledger;
+    use crate::telemetry::{StageStats, TelemetrySnapshot};
+
+    fn report() -> ObsReport {
+        let mut telemetry = TelemetrySnapshot::default();
+        let ledger = Ledger::new();
+        ledger.cell("l0", "zero-block").record(1000, 400, 64, 32);
+        ledger.snapshot().to_stages(&mut telemetry);
+        telemetry.stages.insert(
+            "slo.shed-rate.breach".into(),
+            StageStats { nanos: 50, calls: 2, bytes: 0 },
+        );
+        telemetry.stages.insert(
+            "slo.shed-rate.active".into(),
+            StageStats { nanos: 0, calls: 1, bytes: 0 },
+        );
+        telemetry.stages.insert(
+            "cluster.w0.link".into(),
+            StageStats { nanos: 3, calls: 1, bytes: 0 },
+        );
+        telemetry.stages.insert(
+            "cluster.w0.node".into(),
+            StageStats { nanos: 2, calls: 97, bytes: 4 },
+        );
+        ObsReport {
+            stats: ClusterStats {
+                aggregate: MetricsSnapshot {
+                    requests: 100,
+                    responses: 97,
+                    ..Default::default()
+                },
+                workers_total: 1,
+                workers_alive: 1,
+                routed: 100,
+                ..Default::default()
+            },
+            telemetry,
+        }
+    }
+
+    #[test]
+    fn frame_renders_every_panel() {
+        let mut dash = Dashboard::default();
+        let frame = dash.frame("127.0.0.1:9", 1, 500, &report());
+        assert!(frame.contains("1/1 workers alive"), "{frame}");
+        assert!(frame.contains("SLO BREACH shed-rate"), "{frame}");
+        assert!(frame.contains("l0/zero-block"), "{frame}");
+        // 32 of 64 blocks zero -> permille 500 -> mid sparkline.
+        assert!(frame.contains("500"), "{frame}");
+        assert!(frame.contains('▄'), "{frame}");
+        // The per-worker table reassembles from cluster.w0.* stages.
+        assert!(frame.contains("yes"), "{frame}");
+        assert!(frame.contains("97"), "{frame}");
+        // No panel leaks raw stage labels.
+        assert!(!frame.contains("cluster.w0"), "{frame}");
+        assert!(!frame.contains("slo.shed-rate"), "{frame}");
+    }
+
+    #[test]
+    fn sparkline_history_is_bounded_and_scaled() {
+        let mut dash = Dashboard::default();
+        for i in 0..(HISTORY + 10) {
+            let mut t = TelemetrySnapshot::default();
+            let ledger = Ledger::new();
+            // Zero fraction ramps 0 -> 1000 permille over the run.
+            let zeros = (i as u64).min(64);
+            ledger.cell("l0", "zero-block").record(1000, 400, 64, zeros);
+            ledger.snapshot().to_stages(&mut t);
+            let r = ObsReport {
+                stats: ClusterStats::default(),
+                telemetry: t,
+            };
+            dash.frame("x", i + 1, 500, &r);
+        }
+        let h = dash
+            .history
+            .get(&("l0".to_string(), "zero-block".to_string()))
+            .unwrap();
+        assert_eq!(h.len(), HISTORY);
+        let line = sparkline(h);
+        assert_eq!(line.chars().count(), HISTORY);
+        // Monotone ramp: first char is lower than the last.
+        let first = line.chars().next().unwrap();
+        let last = line.chars().last().unwrap();
+        assert!(
+            SPARK.iter().position(|&c| c == first)
+                < SPARK.iter().position(|&c| c == last),
+            "{line}"
+        );
+    }
+
+    #[test]
+    fn formatting_helpers_are_stable() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2048), "2.0KB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024), "5.0MB");
+        assert_eq!(fmt_us(900), "900us");
+        assert_eq!(fmt_us(1500), "1.5ms");
+        assert_eq!(fmt_us(2_000_000), "2.00s");
+        assert_eq!(sparkline(&VecDeque::from([0, 1000])), "▁█");
+    }
+
+    #[test]
+    fn empty_report_renders_the_single_node_banner() {
+        let frame = render(
+            "a:1",
+            1,
+            500,
+            &ObsReport::default(),
+            &LedgerSnapshot::default(),
+            &BTreeMap::new(),
+        );
+        assert!(frame.contains("single node"), "{frame}");
+        assert!(!frame.contains("ledger cell"), "{frame}");
+    }
+}

@@ -99,8 +99,26 @@ pub struct ClusterClient {
 
 impl ClusterClient {
     pub fn connect(addr: &str) -> Result<ClusterClient> {
-        let stream = TcpStream::connect(addr)
-            .with_context(|| format!("cluster client cannot reach {addr}"))?;
+        // Map the two expected unreachable-node outcomes to messages
+        // that say what to check, instead of surfacing the raw OS
+        // error string (`zebra obs` / `zebra top` show this verbatim
+        // to the operator).
+        let stream = TcpStream::connect(addr).map_err(|e| {
+            use std::io::ErrorKind;
+            match e.kind() {
+                ErrorKind::ConnectionRefused => anyhow!(
+                    "nothing is listening at {addr} (connection refused) — \
+                     is the router/worker running, and is the address the \
+                     one it printed at startup?"
+                ),
+                ErrorKind::TimedOut => anyhow!(
+                    "connecting to {addr} timed out — host unreachable or \
+                     blocked by a firewall"
+                ),
+                _ => anyhow!(e)
+                    .context(format!("cluster client cannot reach {addr}")),
+            }
+        })?;
         let _ = stream.set_nodelay(true);
         let rd = stream.try_clone().context("clone client stream")?;
         let pending: Waiters = Arc::new(Mutex::new(HashMap::new()));

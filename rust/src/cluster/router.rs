@@ -63,8 +63,10 @@ use super::metrics::{ClusterStats, MetricsSnapshot};
 use super::wire::{self, Frame, FrameType};
 use crate::compress::EncodedView;
 use crate::coordinator::{Metrics, Priority};
+use crate::obs::ledger::Ledger;
+use crate::obs::slo::SloEngine;
 use crate::obs::{now_ns, FlightRecorder, ObsReport, TerminalKind, TraceRecord};
-use crate::telemetry::Telemetry;
+use crate::telemetry::{StageStats, Telemetry};
 
 /// How often the accept loop polls its shutdown flag.
 const ACCEPT_POLL: Duration = Duration::from_millis(10);
@@ -120,6 +122,16 @@ pub struct RouterConfig {
     /// failover re-dispatches) and completed sampled traces. `None`
     /// disables recording entirely.
     pub flight: Option<Arc<FlightRecorder>>,
+    /// Bandwidth ledger: ingested `SpillShip` frames record into its
+    /// `("spill_in", <codec>)` cells, and its snapshot is folded into
+    /// gathered reports next to the workers' own ledger stages.
+    pub ledger: Option<Arc<Ledger>>,
+    /// Cluster-level SLO engine, fed from the router's own counters by
+    /// the CLI sampler. Its `slo.*` stages overwrite same-named
+    /// objectives reported by workers in the gathered report — the
+    /// router's burn over aggregated traffic is the cluster-level
+    /// verdict an operator acts on.
+    pub slo: Option<Arc<SloEngine>>,
 }
 
 impl RouterConfig {
@@ -135,6 +147,8 @@ impl RouterConfig {
             heartbeat_every: Duration::from_millis(250),
             max_attempts: attempts,
             flight: None,
+            ledger: None,
+            slo: None,
         }
     }
 }
@@ -372,6 +386,35 @@ impl Router {
     /// The router's flight recorder, when one was configured.
     pub fn flight(&self) -> Option<Arc<FlightRecorder>> {
         self.inner.cfg.flight.clone()
+    }
+
+    /// The router's SLO engine, when one was configured.
+    pub fn slo(&self) -> Option<Arc<SloEngine>> {
+        self.inner.cfg.slo.clone()
+    }
+
+    /// Assemble the SLO sampler's input from the router's own counters
+    /// — no network round-trips, so the sampler loop stays cheap. The
+    /// router never misses deadlines itself; `responses` is the routed
+    /// count (dispatch successes) and latency is dispatch -> response.
+    pub fn slo_input(&self) -> crate::obs::slo::SloInput {
+        let m = &self.inner.metrics;
+        let (dense, encoded) = match &self.inner.cfg.ledger {
+            Some(l) => {
+                let t = l.snapshot().total();
+                (t.dense_bytes, t.encoded_bytes)
+            }
+            None => (0, 0),
+        };
+        crate::obs::slo::SloInput {
+            requests: m.requests.load(Ordering::Relaxed),
+            responses: self.inner.routed.load(Ordering::Relaxed),
+            shed: m.shed_total(),
+            deadline_miss: m.deadline_miss.load(Ordering::Relaxed),
+            p99_latency_us: m.latency_percentile_us(0.99),
+            dense_bytes: dense,
+            encoded_bytes: encoded,
+        }
     }
 
     /// Per-worker in-flight request counts, in worker order. Quiescent
@@ -884,7 +927,7 @@ fn gather_stats(inner: &Arc<Inner>) -> ClusterStats {
 /// `router.*` telemetry.
 fn gather_report(inner: &Arc<Inner>) -> ObsReport {
     let mut waiters = Vec::new();
-    for link in &inner.links {
+    for (idx, link) in inner.links.iter().enumerate() {
         if !link.alive.load(Ordering::SeqCst) {
             continue;
         }
@@ -898,7 +941,7 @@ fn gather_report(inner: &Arc<Inner>) -> ObsReport {
             None => false,
         };
         if sent {
-            waiters.push(rx);
+            waiters.push((idx, rx));
         } else {
             link.pending_metrics.lock().unwrap().remove(&id);
         }
@@ -906,12 +949,46 @@ fn gather_report(inner: &Arc<Inner>) -> ObsReport {
     let mut aggregate = MetricsSnapshot::default();
     let mut telemetry = inner.telemetry.snapshot();
     let mut alive = 0u64;
-    for rx in waiters {
+    for (idx, rx) in waiters {
         if let Ok(report) = rx.recv_timeout(METRICS_WAIT) {
+            // Per-worker gauges ride as one synthetic `cluster.w<i>.node`
+            // stage before the worker's counters dissolve into the
+            // merged aggregate — what `zebra top`'s per-worker table
+            // reads back out (no wire change).
+            let s = &report.stats.aggregate;
+            telemetry.stages.insert(
+                format!("cluster.w{idx}.node"),
+                StageStats {
+                    nanos: s.queue_depth,
+                    calls: s.responses,
+                    bytes: s.shed_low + s.shed_normal + s.shed_high,
+                },
+            );
             aggregate.merge(&report.stats.aggregate);
             telemetry.merge(&report.telemetry);
             alive += 1;
         }
+    }
+    // Router-side link gauges for every configured worker, dead ones
+    // included (that absence is exactly what the dashboard must show).
+    for (idx, link) in inner.links.iter().enumerate() {
+        telemetry.stages.insert(
+            format!("cluster.w{idx}.link"),
+            StageStats {
+                nanos: link.in_flight() as u64,
+                calls: link.alive.load(Ordering::SeqCst) as u64,
+                bytes: 0,
+            },
+        );
+    }
+    // The router's own observability planes: spill-ingest ledger cells
+    // (labels disjoint from the workers' per-layer/spill_out cells)
+    // and the cluster-level SLO verdict.
+    if let Some(ledger) = &inner.cfg.ledger {
+        ledger.snapshot().to_stages(&mut telemetry);
+    }
+    if let Some(slo) = &inner.cfg.slo {
+        slo.to_stages(&mut telemetry);
     }
     let stats = ClusterStats {
         aggregate,
@@ -1048,7 +1125,7 @@ fn client_conn(inner: Arc<Inner>, stream: TcpStream) {
                 let _t = st_spill.time();
                 st_spill.add_bytes(frame.payload.len() as u64);
                 match EncodedView::parse(&frame.payload) {
-                    Ok(_) => {
+                    Ok(view) => {
                         inner
                             .spill_frames_in
                             .fetch_add(1, Ordering::Relaxed);
@@ -1056,6 +1133,20 @@ fn client_conn(inner: Arc<Inner>, stream: TcpStream) {
                             frame.payload.len() as u64,
                             Ordering::Relaxed,
                         );
+                        if let Some(ledger) = &inner.cfg.ledger {
+                            // Ingest-side ledger cell: dense is the
+                            // decoded f32 volume, encoded the
+                            // payload+index actually received (the
+                            // bytes the encoding saved this hop).
+                            ledger
+                                .cell("spill_in", view.codec.name())
+                                .record(
+                                    view.volume() as u64 * 4,
+                                    view.total_bytes() as u64,
+                                    0,
+                                    0,
+                                );
+                        }
                     }
                     Err(e) => {
                         eprintln!(

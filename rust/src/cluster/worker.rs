@@ -376,11 +376,13 @@ fn handle_frame(
         }
         FrameType::Heartbeat => Some(frame.encode()),
         FrameType::MetricsReq => {
-            // v3 requesters get the telemetry block appended; older
-            // ones get the bare snapshot their strict parse expects.
+            // v3 requesters get the telemetry block appended — with
+            // the node's ledger and SLO planes folded in as synthetic
+            // `ledger.*` / `slo.*` stages; older requesters get the
+            // bare snapshot their strict parse expects.
             let report = ObsReport::single_node(
                 MetricsSnapshot::from_metrics(&server.metrics),
-                server.telemetry.snapshot(),
+                server.obs_telemetry(),
             );
             let payload = report.encode_wire(version, false);
             let f = Frame::new(FrameType::MetricsResp, frame.id, payload);

@@ -35,6 +35,7 @@ pub use metrics::{percentile_from_buckets, Metrics, LATENCY_BUCKETS};
 #[cfg(feature = "pjrt")]
 pub use server::pjrt_executor;
 pub use server::{
-    reference_executor, BackendExecutor, BatchExecutor, Request, Response,
-    Server, ServerConfig, ShipSpills, SubmitOutcome, SubmitRequest,
+    reference_executor, reference_executor_with_ledger, BackendExecutor,
+    BatchExecutor, Request, Response, Server, ServerConfig, ShipSpills,
+    SubmitOutcome, SubmitRequest,
 };

@@ -27,8 +27,10 @@ use super::batch_manager::{Admission, BatchManager, Priority};
 use super::metrics::Metrics;
 use crate::backend::{InferenceBackend, ModelOutput};
 use crate::compress::{self, Codec, CodecId, SpillBuf};
+use crate::obs::ledger::{Ledger, LedgerCell};
+use crate::obs::slo::{SloEngine, SloInput};
 use crate::obs::{now_ns, FlightRecorder, TerminalKind, TraceRecord};
-use crate::telemetry::Telemetry;
+use crate::telemetry::{Telemetry, TelemetrySnapshot};
 use crate::tensor::Tensor;
 use crate::zebra::bandwidth::ELEM_BITS;
 
@@ -291,6 +293,21 @@ pub fn reference_executor(
     })
 }
 
+/// [`reference_executor`] with the node's bandwidth [`Ledger`]
+/// attached: every executed batch routes through the capture-encoded
+/// path and records dense/encoded bytes and zero blocks into the
+/// ledger's per-layer cells.
+pub fn reference_executor_with_ledger(
+    spec: crate::backend::reference::RefSpec,
+    ledger: Arc<Ledger>,
+) -> Result<BackendExecutor> {
+    BackendExecutor::spawn(move || {
+        let mut b = crate::backend::reference::ReferenceBackend::new(spec)?;
+        b.attach_ledger(&ledger);
+        Ok(b)
+    })
+}
+
 /// [`BackendExecutor`] over the PJRT runtime: eagerly compiles every
 /// exported batch variant of `key` from `artifacts` on the execution
 /// thread (PJRT state is `!Send`).
@@ -346,6 +363,17 @@ pub struct ServerConfig {
     /// configured); completed sampled traces are ring-buffered for
     /// post-mortems. `None` = no recording.
     pub flight: Option<Arc<FlightRecorder>>,
+    /// Bandwidth ledger. When present *and* spill shipping is on, the
+    /// worker loop records each shipped batch into the ledger's
+    /// `("spill_out", <codec>)` cell; attach the same ledger to the
+    /// backend (see `reference_executor_with_ledger`) for the
+    /// per-layer cells. Its snapshot rides the node's telemetry
+    /// ([`Server::obs_telemetry`]).
+    pub ledger: Option<Arc<Ledger>>,
+    /// SLO engine: the node's sampler feeds it
+    /// ([`Server::slo_input`]) and its status rides the telemetry
+    /// snapshot next to the ledger. `None` = no objectives evaluated.
+    pub slo: Option<Arc<SloEngine>>,
 }
 
 impl Default for ServerConfig {
@@ -358,6 +386,8 @@ impl Default for ServerConfig {
             ship_spills: None,
             spill_sink: None,
             flight: None,
+            ledger: None,
+            slo: None,
         }
     }
 }
@@ -374,6 +404,10 @@ pub struct Server {
     pub telemetry: Arc<Telemetry>,
     /// The flight recorder, when configured (shared with the workers).
     pub flight: Option<Arc<FlightRecorder>>,
+    /// The node's bandwidth ledger, when configured.
+    pub ledger: Option<Arc<Ledger>>,
+    /// The node's SLO engine, when configured.
+    pub slo: Option<Arc<SloEngine>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     next_id: std::sync::atomic::AtomicU64,
 }
@@ -411,6 +445,15 @@ impl Server {
             );
             Arc::from(codec)
         });
+        // Shipped-batch bandwidth cell: one per node, shared by every
+        // worker (LedgerCell::record is a handful of relaxed atomics).
+        let ship_cell: Option<Arc<LedgerCell>> = match (&cfg.ledger, &cfg.ship_spills)
+        {
+            (Some(ledger), Some(s)) => {
+                Some(ledger.cell("spill_out", s.codec.name()))
+            }
+            _ => None,
+        };
         let mut workers = Vec::new();
         for _ in 0..cfg.workers.max(1) {
             let b = manager.clone();
@@ -420,8 +463,9 @@ impl Server {
             let sink = cfg.spill_sink.clone();
             let t = telemetry.clone();
             let f = cfg.flight.clone();
+            let lc = ship_cell.clone();
             workers.push(std::thread::spawn(move || {
-                worker_loop(b, e, m, s, sink, t, f)
+                worker_loop(b, e, m, s, sink, t, f, lc)
             }));
         }
         Server {
@@ -429,8 +473,52 @@ impl Server {
             metrics,
             telemetry,
             flight: cfg.flight,
+            ledger: cfg.ledger,
+            slo: cfg.slo,
             workers,
             next_id: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// The node's telemetry snapshot with the observability planes
+    /// folded in: the ledger snapshot and the SLO status ride as
+    /// synthetic `ledger.*` / `slo.*` stages, so they travel inside
+    /// the existing v3 `MetricsResp` telemetry block with no wire
+    /// format change. Peers strip the prefixes back out with
+    /// [`LedgerSnapshot::from_telemetry`] /
+    /// [`crate::obs::slo::parse_slo`].
+    pub fn obs_telemetry(&self) -> TelemetrySnapshot {
+        let mut snap = self.telemetry.snapshot();
+        if let Some(ledger) = &self.ledger {
+            ledger.snapshot().to_stages(&mut snap);
+        }
+        if let Some(slo) = &self.slo {
+            slo.to_stages(&mut snap);
+        }
+        snap
+    }
+
+    /// Assemble the [`SloInput`] counters the node's SLO sampler feeds
+    /// to [`SloEngine::observe`] — everything from this server's own
+    /// metrics and ledger; no wall clock (the caller supplies
+    /// `now_ms` from its own monotonic origin).
+    pub fn slo_input(&self) -> SloInput {
+        let m = &self.metrics;
+        let (dense, encoded) = match &self.ledger {
+            Some(l) => {
+                let t = l.snapshot().total();
+                (t.dense_bytes, t.encoded_bytes)
+            }
+            None => (0, 0),
+        };
+        SloInput {
+            requests: m.requests.load(Ordering::Relaxed),
+            responses: m.responses.load(Ordering::Relaxed),
+            shed: m.shed_total(),
+            deadline_miss: m.deadline_miss.load(Ordering::Relaxed),
+            p99_latency_us: m.latency_percentile_us(0.99),
+            dense_bytes: dense,
+            encoded_bytes: encoded,
         }
     }
 
@@ -527,6 +615,7 @@ impl Server {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     manager: Arc<BatchManager<Request>>,
     exec: Arc<dyn BatchExecutor>,
@@ -535,6 +624,7 @@ fn worker_loop(
     spill_sink: Option<Sender<Vec<u8>>>,
     telemetry: Arc<Telemetry>,
     flight: Option<Arc<FlightRecorder>>,
+    ship_cell: Option<Arc<LedgerCell>>,
 ) {
     let hw = exec.image_hw();
     // Stage handles resolved once — recording inside the loop is two
@@ -607,6 +697,18 @@ fn worker_loop(
                 let _t = st_ship.time();
                 codec.encode_into(&x, &mut spill_buf);
                 let len = spill_buf.view().frame_len() as u64;
+                if let Some(cell) = &ship_cell {
+                    // Payload + index only (no wire header): the
+                    // bandwidth the encoding actually saves, matching
+                    // the per-layer cells. Blocks/zeros stay 0 — the
+                    // shape of the shipped frame is codec-specific.
+                    cell.record(
+                        (x.data().len() * 4) as u64,
+                        spill_buf.total_bytes() as u64,
+                        0,
+                        0,
+                    );
+                }
                 st_ship.add_bytes(len);
                 metrics
                     .shipped_spill_bytes

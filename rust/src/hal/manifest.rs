@@ -296,6 +296,16 @@ impl TargetManifest {
         }
     }
 
+    /// Sustained DRAM bandwidth in GB/s — the peak channel rate
+    /// derated by `sustained_fraction`. This is the denominator the
+    /// bandwidth ledger (`obs::ledger`) uses to turn byte totals into
+    /// channel time: aggregated counters cannot be burst-rounded
+    /// per-transfer anymore, but the sustained envelope still
+    /// converts them into a target-honest figure.
+    pub fn sustained_gbps(&self) -> f64 {
+        self.dram_gbps * self.sustained_fraction
+    }
+
     /// Peak f32 throughput in GFLOP/s (2 ops per MAC).
     pub fn peak_gflops(&self) -> f64 {
         (self.pe_rows * self.pe_cols) as f64 * 2.0 * self.clock_mhz / 1000.0
@@ -559,6 +569,16 @@ clock_mhz = 500
         assert!((c.freq_ghz - 0.5).abs() < 1e-12);
         assert!((c.dram_bytes_per_cycle - 12.8).abs() < 1e-9);
         assert_eq!(c.sram_bytes, m.local_buffer_kib * 1024);
+    }
+
+    #[test]
+    fn sustained_bandwidth_derates_the_peak() {
+        let m = TargetManifest {
+            dram_gbps: 10.0,
+            sustained_fraction: 0.8,
+            ..TargetManifest::default()
+        };
+        assert!((m.sustained_gbps() - 8.0).abs() < 1e-12);
     }
 
     #[test]

@@ -11,10 +11,70 @@
 
 use std::collections::BTreeMap;
 
+use super::ledger::{CellStats, LedgerSnapshot, LEDGER_STAGE_PREFIX};
+use super::slo::{parse_slo, SLO_STAGE_PREFIX};
 use crate::cluster::metrics::{ClusterStats, MetricsSnapshot};
 use crate::cluster::wire::FrameError;
 use crate::telemetry::{StageStats, TelemetrySnapshot};
 use crate::util::json::Value;
+
+/// Stage-label prefix the router uses for per-worker gauges
+/// (`cluster.w<idx>.link` / `cluster.w<idx>.node`).
+pub const WORKER_STAGE_PREFIX: &str = "cluster.w";
+
+/// One worker's row in a gathered report, reassembled from the
+/// router-injected `cluster.w<idx>.*` stages (`zebra top`'s per-worker
+/// table).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerView {
+    /// Answering heartbeats at gather time.
+    pub alive: bool,
+    /// Router-side in-flight requests on this link.
+    pub in_flight: u64,
+    /// The worker's admission-queue depth at its last snapshot.
+    pub queue_depth: u64,
+    pub responses: u64,
+    /// Requests this worker shed, all classes.
+    pub shed: u64,
+}
+
+/// Reassemble per-worker rows from a gathered report's telemetry.
+/// Malformed labels are skipped — stage blocks come off the wire.
+pub fn parse_workers(
+    telemetry: &TelemetrySnapshot,
+) -> BTreeMap<u64, WorkerView> {
+    let mut out: BTreeMap<u64, WorkerView> = BTreeMap::new();
+    for (label, stats) in &telemetry.stages {
+        let Some(rest) = label.strip_prefix(WORKER_STAGE_PREFIX) else {
+            continue;
+        };
+        let parts: Vec<&str> = rest.split('.').collect();
+        let [idx, kind] = parts[..] else { continue };
+        let Ok(idx) = idx.parse::<u64>() else { continue };
+        if kind != "link" && kind != "node" {
+            continue;
+        }
+        let view = out.entry(idx).or_default();
+        if kind == "link" {
+            view.in_flight = stats.nanos;
+            view.alive = stats.calls > 0;
+        } else {
+            view.queue_depth = stats.nanos;
+            view.responses = stats.calls;
+            view.shed = stats.bytes;
+        }
+    }
+    out
+}
+
+/// True for synthetic stages that belong to a dedicated export plane
+/// (ledger, SLO, per-worker) — rendered as their own metric families,
+/// never as generic `zebra_stage_*` samples.
+fn is_plane_stage(label: &str) -> bool {
+    label.starts_with(LEDGER_STAGE_PREFIX)
+        || label.starts_with(SLO_STAGE_PREFIX)
+        || label.starts_with(WORKER_STAGE_PREFIX)
+}
 
 /// Cap on stages in one telemetry wire block (far above any real
 /// registry; bounds allocation from a hostile count).
@@ -278,12 +338,18 @@ impl ObsReport {
                 ));
             }
         }
-        if !self.telemetry.stages.is_empty() {
+        let generic: Vec<(&String, &StageStats)> = self
+            .telemetry
+            .stages
+            .iter()
+            .filter(|(label, _)| !is_plane_stage(label))
+            .collect();
+        if !generic.is_empty() {
             out.push_str(
                 "# HELP zebra_stage_nanos_total Wall time per stage\n\
                  # TYPE zebra_stage_nanos_total counter\n",
             );
-            for (label, st) in &self.telemetry.stages {
+            for (label, st) in &generic {
                 out.push_str(&format!(
                     "zebra_stage_nanos_total{{stage=\"{label}\"}} {}\n",
                     st.nanos
@@ -293,7 +359,7 @@ impl ObsReport {
                 "# HELP zebra_stage_calls_total Invocations per stage\n\
                  # TYPE zebra_stage_calls_total counter\n",
             );
-            for (label, st) in &self.telemetry.stages {
+            for (label, st) in &generic {
                 out.push_str(&format!(
                     "zebra_stage_calls_total{{stage=\"{label}\"}} {}\n",
                     st.calls
@@ -303,12 +369,135 @@ impl ObsReport {
                 "# HELP zebra_stage_bytes_total Bytes per stage\n\
                  # TYPE zebra_stage_bytes_total counter\n",
             );
-            for (label, st) in &self.telemetry.stages {
+            for (label, st) in &generic {
                 out.push_str(&format!(
                     "zebra_stage_bytes_total{{stage=\"{label}\"}} {}\n",
                     st.bytes
                 ));
             }
+        }
+        // Bandwidth-ledger plane: one family per counter, (layer,
+        // codec) as labels, reassembled from the `ledger.*` stages.
+        let ledger = LedgerSnapshot::from_telemetry(&self.telemetry);
+        if !ledger.cells.is_empty() {
+            let mut section =
+                |name: &str, help: &str, ty: &str, f: &dyn Fn(&CellStats) -> String| {
+                    out.push_str(&format!(
+                        "# HELP zebra_ledger_{name} {help}\n\
+                         # TYPE zebra_ledger_{name} {ty}\n"
+                    ));
+                    for ((layer, codec), c) in &ledger.cells {
+                        out.push_str(&format!(
+                            "zebra_ledger_{name}{{layer=\"{layer}\",\
+                             codec=\"{codec}\"}} {}\n",
+                            f(c)
+                        ));
+                    }
+                };
+            section(
+                "dense_bytes_total",
+                "Dense activation bytes swept",
+                "counter",
+                &|c| c.dense_bytes.to_string(),
+            );
+            section(
+                "encoded_bytes_total",
+                "Encoded payload+index bytes",
+                "counter",
+                &|c| c.encoded_bytes.to_string(),
+            );
+            section(
+                "blocks_total",
+                "Activation blocks swept",
+                "counter",
+                &|c| c.blocks.to_string(),
+            );
+            section(
+                "zero_blocks_total",
+                "All-zero blocks swept",
+                "counter",
+                &|c| c.zero_blocks.to_string(),
+            );
+            section("sweeps_total", "Recorded sweeps", "counter", &|c| {
+                c.sweeps.to_string()
+            });
+            section(
+                "zero_permille",
+                "All-zero blocks per 1000 swept",
+                "gauge",
+                &|c| c.zero_permille().to_string(),
+            );
+            section(
+                "savings_pct",
+                "Achieved bandwidth savings (dense vs encoded)",
+                "gauge",
+                &|c| format!("{:.3}", c.achieved_savings_pct()),
+            );
+        }
+        // SLO plane: breach transitions + breaching-now, per objective.
+        let slo = parse_slo(&self.telemetry);
+        if !slo.is_empty() {
+            out.push_str(
+                "# HELP zebra_slo_breach_total SLO breach transitions\n\
+                 # TYPE zebra_slo_breach_total counter\n",
+            );
+            for (name, v) in &slo {
+                out.push_str(&format!(
+                    "zebra_slo_breach_total{{objective=\"{name}\"}} {}\n",
+                    v.breaches
+                ));
+            }
+            out.push_str(
+                "# HELP zebra_slo_active Objective breaching right now\n\
+                 # TYPE zebra_slo_active gauge\n",
+            );
+            for (name, v) in &slo {
+                out.push_str(&format!(
+                    "zebra_slo_active{{objective=\"{name}\"}} {}\n",
+                    v.active as u64
+                ));
+            }
+        }
+        // Per-worker plane from a gathered (router) report.
+        let workers = parse_workers(&self.telemetry);
+        if !workers.is_empty() {
+            let mut section =
+                |name: &str, help: &str, ty: &str, f: &dyn Fn(&WorkerView) -> u64| {
+                    out.push_str(&format!(
+                        "# HELP zebra_worker_{name} {help}\n\
+                         # TYPE zebra_worker_{name} {ty}\n"
+                    ));
+                    for (idx, w) in &workers {
+                        out.push_str(&format!(
+                            "zebra_worker_{name}{{worker=\"{idx}\"}} {}\n",
+                            f(w)
+                        ));
+                    }
+                };
+            section("alive", "Worker answering heartbeats", "gauge", &|w| {
+                w.alive as u64
+            });
+            section(
+                "in_flight",
+                "Router-side in-flight requests",
+                "gauge",
+                &|w| w.in_flight,
+            );
+            section(
+                "queue_depth",
+                "Worker admission-queue depth",
+                "gauge",
+                &|w| w.queue_depth,
+            );
+            section("responses_total", "Requests answered", "counter", &|w| {
+                w.responses
+            });
+            section(
+                "shed_total",
+                "Requests shed by the worker",
+                "counter",
+                &|w| w.shed,
+            );
         }
         out
     }
@@ -364,11 +553,65 @@ impl ObsReport {
         }
         let mut stages = BTreeMap::new();
         for (label, st) in &self.telemetry.stages {
+            if is_plane_stage(label) {
+                continue;
+            }
             let mut m = BTreeMap::new();
             m.insert("nanos".to_string(), Value::Num(st.nanos as f64));
             m.insert("calls".to_string(), Value::Num(st.calls as f64));
             m.insert("bytes".to_string(), Value::Num(st.bytes as f64));
             stages.insert(label.clone(), Value::Object(m));
+        }
+        let round3 = |v: f64| (v * 1000.0).round() / 1000.0;
+        let mut ledger_o = BTreeMap::new();
+        for ((layer, codec), c) in
+            &LedgerSnapshot::from_telemetry(&self.telemetry).cells
+        {
+            let mut m = BTreeMap::new();
+            for (k, v) in [
+                ("sweeps", c.sweeps),
+                ("dense_bytes", c.dense_bytes),
+                ("encoded_bytes", c.encoded_bytes),
+                ("blocks", c.blocks),
+                ("zero_blocks", c.zero_blocks),
+                ("zero_permille", c.zero_permille()),
+            ] {
+                m.insert(k.to_string(), Value::Num(v as f64));
+            }
+            m.insert(
+                "savings_pct".to_string(),
+                Value::Num(round3(c.achieved_savings_pct())),
+            );
+            m.insert(
+                "analytic_savings_pct".to_string(),
+                Value::Num(round3(c.analytic_savings_pct())),
+            );
+            ledger_o.insert(format!("{layer}/{codec}"), Value::Object(m));
+        }
+        let mut slo_o = BTreeMap::new();
+        for (name, v) in parse_slo(&self.telemetry) {
+            let mut m = BTreeMap::new();
+            m.insert("breaches".to_string(), Value::Num(v.breaches as f64));
+            m.insert("active".to_string(), Value::Bool(v.active));
+            m.insert(
+                "threshold_milli".to_string(),
+                Value::Num(v.threshold_milli as f64),
+            );
+            slo_o.insert(name, Value::Object(m));
+        }
+        let mut workers_o = BTreeMap::new();
+        for (idx, w) in parse_workers(&self.telemetry) {
+            let mut m = BTreeMap::new();
+            m.insert("alive".to_string(), Value::Bool(w.alive));
+            for (k, v) in [
+                ("in_flight", w.in_flight),
+                ("queue_depth", w.queue_depth),
+                ("responses", w.responses),
+                ("shed", w.shed),
+            ] {
+                m.insert(k.to_string(), Value::Num(v as f64));
+            }
+            workers_o.insert(idx.to_string(), Value::Object(m));
         }
         let mut o = BTreeMap::new();
         o.insert("counters".to_string(), Value::Object(counters));
@@ -379,6 +622,9 @@ impl ObsReport {
             Value::Num((a.reduction_pct() * 1000.0).round() / 1000.0),
         );
         o.insert("telemetry".to_string(), Value::Object(stages));
+        o.insert("ledger".to_string(), Value::Object(ledger_o));
+        o.insert("slo".to_string(), Value::Object(slo_o));
+        o.insert("workers".to_string(), Value::Object(workers_o));
         Value::Object(o)
     }
 }
@@ -525,6 +771,100 @@ mod tests {
             TelemetrySnapshot::default(),
         );
         assert!(!single.prometheus().contains("zebra_router_"), "single");
+    }
+
+    /// A telemetry snapshot carrying every synthetic plane: ledger
+    /// cells, SLO status, and router-injected per-worker gauges.
+    fn plane_telemetry() -> TelemetrySnapshot {
+        let ledger = crate::obs::ledger::Ledger::new();
+        ledger.cell("l0", "zero-block").record(1000, 400, 64, 32);
+        let mut t = sample_telemetry();
+        ledger.snapshot().to_stages(&mut t);
+        t.stages.insert(
+            "slo.shed-rate.breach".into(),
+            StageStats { nanos: 500, calls: 2, bytes: 0 },
+        );
+        t.stages.insert(
+            "slo.shed-rate.active".into(),
+            StageStats { nanos: 0, calls: 1, bytes: 0 },
+        );
+        t.stages.insert(
+            "cluster.w0.link".into(),
+            StageStats { nanos: 7, calls: 1, bytes: 0 },
+        );
+        t.stages.insert(
+            "cluster.w0.node".into(),
+            StageStats { nanos: 3, calls: 90, bytes: 5 },
+        );
+        t
+    }
+
+    #[test]
+    fn plane_stages_render_as_their_own_families() {
+        let report = ObsReport::single_node(sample_snapshot(), plane_telemetry());
+        let text = report.prometheus();
+        assert!(
+            text.contains(
+                "zebra_ledger_dense_bytes_total{layer=\"l0\",\
+                 codec=\"zero-block\"} 1000"
+            ),
+            "{text}"
+        );
+        assert!(
+            text.contains(
+                "zebra_ledger_zero_permille{layer=\"l0\",\
+                 codec=\"zero-block\"} 500"
+            ),
+            "{text}"
+        );
+        assert!(
+            text.contains("zebra_slo_breach_total{objective=\"shed-rate\"} 2"),
+            "{text}"
+        );
+        assert!(
+            text.contains("zebra_slo_active{objective=\"shed-rate\"} 1"),
+            "{text}"
+        );
+        assert!(text.contains("zebra_worker_alive{worker=\"0\"} 1"), "{text}");
+        assert!(
+            text.contains("zebra_worker_responses_total{worker=\"0\"} 90"),
+            "{text}"
+        );
+        // Plane stages never leak into the generic stage families;
+        // real stages stay there.
+        assert!(!text.contains("stage=\"ledger."), "{text}");
+        assert!(!text.contains("stage=\"slo."), "{text}");
+        assert!(!text.contains("stage=\"cluster.w"), "{text}");
+        assert!(text.contains("stage=\"serve.execute\""), "{text}");
+        // Exposition discipline holds for the new families too.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(value.parse::<f64>().is_ok(), "bad value in {line:?}");
+            assert!(parts.next().unwrap().starts_with("zebra_"), "{line}");
+        }
+        // JSON carries the same planes, stripped of their prefixes.
+        let v = report.to_json();
+        let back =
+            crate::util::json::parse(&crate::util::json::to_string(&v))
+                .unwrap();
+        let cell = back.get("ledger").get("l0/zero-block");
+        assert_eq!(cell.get("encoded_bytes").as_usize(), Some(400));
+        assert_eq!(cell.get("zero_permille").as_usize(), Some(500));
+        assert!(cell.get("savings_pct").as_f64().unwrap() > 59.0);
+        let slo = back.get("slo").get("shed-rate");
+        assert_eq!(slo.get("breaches").as_usize(), Some(2));
+        assert_eq!(slo.get("active").as_bool(), Some(true));
+        let w = back.get("workers").get("0");
+        assert_eq!(w.get("in_flight").as_usize(), Some(7));
+        assert_eq!(w.get("shed").as_usize(), Some(5));
+        assert!(back.get("telemetry").get("slo.shed-rate.breach").is_null());
+        assert!(back
+            .get("telemetry")
+            .get("serve.execute")
+            .get("calls")
+            .as_usize()
+            .is_some());
     }
 
     #[test]

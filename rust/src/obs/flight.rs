@@ -38,6 +38,9 @@ pub enum TerminalKind {
     Redispatch,
     /// A worker went silent / was killed.
     WorkerDeath,
+    /// An SLO objective's burn rate crossed 1.0 on both windows
+    /// (the detail names the objective; see `obs::slo`).
+    SloBreach,
 }
 
 impl TerminalKind {
@@ -59,6 +62,7 @@ impl TerminalKind {
             TerminalKind::ConnError => "conn_error",
             TerminalKind::Redispatch => "redispatch",
             TerminalKind::WorkerDeath => "worker_death",
+            TerminalKind::SloBreach => "slo_breach",
         }
     }
 
@@ -71,6 +75,7 @@ impl TerminalKind {
             "conn_error" => TerminalKind::ConnError,
             "redispatch" => TerminalKind::Redispatch,
             "worker_death" => TerminalKind::WorkerDeath,
+            "slo_breach" => TerminalKind::SloBreach,
             _ => return None,
         })
     }
@@ -268,6 +273,35 @@ mod tests {
     }
 
     #[test]
+    fn ring_wraps_at_exactly_default_capacity() {
+        // The boundary case: the ring filled to FLIGHT_CAPACITY
+        // exactly, then one more entry. Length must hold at the cap
+        // and the window must slide by one (oldest out, newest in).
+        let f = FlightRecorder::new("t", FLIGHT_CAPACITY, None);
+        for i in 1..=FLIGHT_CAPACITY as u64 {
+            f.record_trace(rec(i));
+        }
+        assert_eq!(f.len(), FLIGHT_CAPACITY);
+        match f.entries().first() {
+            Some(FlightEntry::Trace(r)) => assert_eq!(r.trace_id, 1),
+            other => panic!("expected trace, got {other:?}"),
+        }
+        f.record_trace(rec(FLIGHT_CAPACITY as u64 + 1));
+        assert_eq!(f.len(), FLIGHT_CAPACITY);
+        let e = f.entries();
+        match &e[0] {
+            FlightEntry::Trace(r) => assert_eq!(r.trace_id, 2),
+            other => panic!("expected trace, got {other:?}"),
+        }
+        match e.last().unwrap() {
+            FlightEntry::Trace(r) => {
+                assert_eq!(r.trace_id, FLIGHT_CAPACITY as u64 + 1)
+            }
+            other => panic!("expected trace, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn jsonl_roundtrips_traces_and_events() {
         let f = FlightRecorder::new("t", 16, None);
         f.record_trace(rec(u64::MAX - 7));
@@ -305,6 +339,7 @@ mod tests {
             TerminalKind::ConnError,
             TerminalKind::Redispatch,
             TerminalKind::WorkerDeath,
+            TerminalKind::SloBreach,
         ] {
             assert_eq!(TerminalKind::parse(k.name()), Some(k));
         }

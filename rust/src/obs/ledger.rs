@@ -1,0 +1,443 @@
+//! The bandwidth ledger — per-layer, per-codec accounting of *bytes
+//! not moved*.
+//!
+//! Zebra's entire value proposition is DRAM traffic avoided, yet the
+//! time-oriented planes (metrics, telemetry, traces) cannot answer
+//! "which layer saved how much, under which codec, on the traffic we
+//! actually served?". The ledger does: every fused
+//! `relu_prune_encode` sweep in the reference backend, every `.zspill`
+//! frame shipped by a worker, and every frame ingested by the router
+//! records one `(dense, encoded, blocks, zero_blocks)` observation
+//! into an atomic [`LedgerCell`] keyed `(layer, codec)`.
+//!
+//! From those four counters everything else is derived on read:
+//! zero-block permille, achieved savings, and the Eq. 2–3 *analytic*
+//! savings the same mix of blocks predicts — so achieved-vs-analytic
+//! drift (payload overhead, codec mismatch, index cost) is one
+//! subtraction. The HAL target envelope enters as a denominator:
+//! [`CellStats::channel_us`] converts byte totals into DRAM channel
+//! time under a [`TargetManifest`]'s sustained bandwidth.
+//!
+//! Snapshots are mergeable label-wise and ride the existing v3
+//! telemetry block as synthetic `ledger.<layer>.<codec>.{dense,enc}`
+//! stages ([`LedgerSnapshot::to_stages`] /
+//! [`LedgerSnapshot::from_telemetry`]) — no wire bump, and the
+//! router's label-wise telemetry merge aggregates ledgers across
+//! workers for free.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::hal::TargetManifest;
+use crate::telemetry::{StageStats, TelemetrySnapshot};
+
+/// Stage-label prefix ledger cells use inside a telemetry snapshot.
+pub const LEDGER_STAGE_PREFIX: &str = "ledger.";
+
+/// One `(layer, codec)` accumulator. All four counters are relaxed
+/// atomics — recording is four `fetch_add`s on the hot sweep path,
+/// no locks, no allocation.
+#[derive(Debug, Default)]
+pub struct LedgerCell {
+    sweeps: AtomicU64,
+    dense_bytes: AtomicU64,
+    encoded_bytes: AtomicU64,
+    blocks: AtomicU64,
+    zero_blocks: AtomicU64,
+}
+
+impl LedgerCell {
+    /// Record one sweep: `dense` bytes the tensor would move raw,
+    /// `encoded` bytes it actually moves (payload + index), out of
+    /// `blocks` total blocks of which `zero_blocks` were all-zero.
+    pub fn record(
+        &self,
+        dense: u64,
+        encoded: u64,
+        blocks: u64,
+        zero_blocks: u64,
+    ) {
+        self.sweeps.fetch_add(1, Ordering::Relaxed);
+        self.dense_bytes.fetch_add(dense, Ordering::Relaxed);
+        self.encoded_bytes.fetch_add(encoded, Ordering::Relaxed);
+        self.blocks.fetch_add(blocks, Ordering::Relaxed);
+        self.zero_blocks.fetch_add(zero_blocks, Ordering::Relaxed);
+    }
+
+    /// A consistent-enough point read (each counter individually
+    /// atomic; the cell only ever grows).
+    pub fn stats(&self) -> CellStats {
+        CellStats {
+            sweeps: self.sweeps.load(Ordering::Relaxed),
+            dense_bytes: self.dense_bytes.load(Ordering::Relaxed),
+            encoded_bytes: self.encoded_bytes.load(Ordering::Relaxed),
+            blocks: self.blocks.load(Ordering::Relaxed),
+            zero_blocks: self.zero_blocks.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Snapshot of one cell; every derived figure is computed here, on
+/// read, so the hot path stores nothing but the four raw counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CellStats {
+    pub sweeps: u64,
+    pub dense_bytes: u64,
+    pub encoded_bytes: u64,
+    pub blocks: u64,
+    pub zero_blocks: u64,
+}
+
+impl CellStats {
+    /// Fold another snapshot in (counter addition — associative and
+    /// commutative, so cross-worker merge order never matters).
+    pub fn merge(&mut self, other: &CellStats) {
+        self.sweeps += other.sweeps;
+        self.dense_bytes += other.dense_bytes;
+        self.encoded_bytes += other.encoded_bytes;
+        self.blocks += other.blocks;
+        self.zero_blocks += other.zero_blocks;
+    }
+
+    /// All-zero blocks per 1000 (matches the `layer.N.prune_encode`
+    /// trace span's `aux` convention).
+    pub fn zero_permille(&self) -> u64 {
+        if self.blocks == 0 {
+            return 0;
+        }
+        self.zero_blocks * 1000 / self.blocks
+    }
+
+    /// Achieved savings: the fraction of dense traffic that never hit
+    /// the channel, from the bytes actually recorded.
+    pub fn achieved_savings_pct(&self) -> f64 {
+        if self.dense_bytes == 0 {
+            return 0.0;
+        }
+        100.0
+            * (self.dense_bytes.saturating_sub(self.encoded_bytes)) as f64
+            / self.dense_bytes as f64
+    }
+
+    /// Eq. 2–3 analytic encoded bytes for this mix of blocks: kept
+    /// blocks at the cell's mean bytes-per-block, plus a 1-bit-per-
+    /// block index rounded up to whole bytes.
+    pub fn analytic_bytes(&self) -> u64 {
+        if self.blocks == 0 {
+            return 0;
+        }
+        let kept = self.blocks - self.zero_blocks.min(self.blocks);
+        let payload =
+            (self.dense_bytes as f64 * kept as f64 / self.blocks as f64)
+                .round() as u64;
+        payload + self.blocks.div_ceil(8)
+    }
+
+    /// What Eq. 2–3 predicts the savings should be for the observed
+    /// zero fraction. `achieved - analytic` is the drift the autotune
+    /// roadmap item will steer on.
+    pub fn analytic_savings_pct(&self) -> f64 {
+        if self.dense_bytes == 0 {
+            return 0.0;
+        }
+        100.0
+            * (self.dense_bytes.saturating_sub(self.analytic_bytes())) as f64
+            / self.dense_bytes as f64
+    }
+
+    /// DRAM channel time `(dense_us, encoded_us)` this cell's traffic
+    /// costs under a HAL target's sustained bandwidth — the envelope-
+    /// denominated view of the same savings.
+    pub fn channel_us(&self, target: &TargetManifest) -> (f64, f64) {
+        let gbps = target.sustained_gbps();
+        if gbps <= 0.0 {
+            return (0.0, 0.0);
+        }
+        // bytes / (gbps * 1e9 B/s) * 1e6 us/s
+        let us = |b: u64| b as f64 / gbps / 1e3;
+        (us(self.dense_bytes), us(self.encoded_bytes))
+    }
+}
+
+/// The live registry: `(layer, codec) -> Arc<LedgerCell>`. Cells are
+/// created on first touch and handed out as `Arc`s so hot paths hold
+/// a direct pointer and never re-lock the map.
+#[derive(Debug, Default)]
+pub struct Ledger {
+    cells: Mutex<BTreeMap<(String, String), Arc<LedgerCell>>>,
+}
+
+impl Ledger {
+    pub fn new() -> Arc<Ledger> {
+        Arc::new(Ledger::default())
+    }
+
+    /// Get-or-create the cell for `(layer, codec)`. Dots are the
+    /// stage-label field separator, so they are rewritten to `-`
+    /// (same defensive move as telemetry's label discipline).
+    pub fn cell(&self, layer: &str, codec: &str) -> Arc<LedgerCell> {
+        let key = (sanitize(layer), sanitize(codec));
+        let mut map = self.cells.lock().unwrap();
+        Arc::clone(map.entry(key).or_default())
+    }
+
+    pub fn snapshot(&self) -> LedgerSnapshot {
+        let map = self.cells.lock().unwrap();
+        LedgerSnapshot {
+            cells: map
+                .iter()
+                .map(|(k, c)| (k.clone(), c.stats()))
+                .collect(),
+        }
+    }
+}
+
+fn sanitize(s: &str) -> String {
+    s.replace('.', "-")
+}
+
+/// A point-in-time, mergeable view of a [`Ledger`] (or of several,
+/// merged label-wise across workers).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LedgerSnapshot {
+    /// `(layer, codec) -> stats`, sorted for stable rendering.
+    pub cells: BTreeMap<(String, String), CellStats>,
+}
+
+impl LedgerSnapshot {
+    /// Label-wise counter merge (associative + commutative).
+    pub fn merge(&mut self, other: &LedgerSnapshot) {
+        for (key, stats) in &other.cells {
+            self.cells.entry(key.clone()).or_default().merge(stats);
+        }
+    }
+
+    /// Pack every cell into a telemetry snapshot as two synthetic
+    /// stages, so ledgers ride the v3 MetricsResp telemetry block
+    /// unchanged:
+    ///
+    /// ```text
+    /// ledger.<layer>.<codec>.dense  {nanos: blocks,      calls: sweeps, bytes: dense_bytes}
+    /// ledger.<layer>.<codec>.enc    {nanos: zero_blocks, calls: sweeps, bytes: encoded_bytes}
+    /// ```
+    ///
+    /// The field abuse (nanos carrying a block count) stays inside
+    /// this module: [`from_telemetry`](Self::from_telemetry) is the
+    /// only reader, and the export plane renders ledger stages
+    /// through it, never as raw `zebra_stage_*`.
+    pub fn to_stages(&self, telemetry: &mut TelemetrySnapshot) {
+        for ((layer, codec), s) in &self.cells {
+            telemetry.stages.insert(
+                format!("{LEDGER_STAGE_PREFIX}{layer}.{codec}.dense"),
+                StageStats {
+                    nanos: s.blocks,
+                    calls: s.sweeps,
+                    bytes: s.dense_bytes,
+                },
+            );
+            telemetry.stages.insert(
+                format!("{LEDGER_STAGE_PREFIX}{layer}.{codec}.enc"),
+                StageStats {
+                    nanos: s.zero_blocks,
+                    calls: s.sweeps,
+                    bytes: s.encoded_bytes,
+                },
+            );
+        }
+    }
+
+    /// Reassemble a snapshot from the `ledger.*` stages of a
+    /// (possibly cross-worker-merged) telemetry snapshot. Sweeps are
+    /// taken from the `.dense` stage only, so telemetry-merge →
+    /// parse gives the same answer as parse → ledger-merge.
+    /// Malformed labels are skipped — stage blocks come off the wire.
+    pub fn from_telemetry(telemetry: &TelemetrySnapshot) -> LedgerSnapshot {
+        let mut out = LedgerSnapshot::default();
+        for (label, stats) in &telemetry.stages {
+            let Some(rest) = label.strip_prefix(LEDGER_STAGE_PREFIX) else {
+                continue;
+            };
+            let parts: Vec<&str> = rest.split('.').collect();
+            let [layer, codec, kind] = parts[..] else {
+                continue;
+            };
+            if kind != "dense" && kind != "enc" {
+                continue;
+            }
+            let cell = out
+                .cells
+                .entry((layer.to_string(), codec.to_string()))
+                .or_default();
+            if kind == "dense" {
+                cell.sweeps += stats.calls;
+                cell.blocks += stats.nanos;
+                cell.dense_bytes += stats.bytes;
+            } else {
+                cell.zero_blocks += stats.nanos;
+                cell.encoded_bytes += stats.bytes;
+            }
+        }
+        out
+    }
+
+    /// Whole-ledger totals (every cell merged into one).
+    pub fn total(&self) -> CellStats {
+        let mut t = CellStats::default();
+        for s in self.cells.values() {
+            t.merge(s);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(cells: &[(&str, &str, [u64; 5])]) -> LedgerSnapshot {
+        let mut s = LedgerSnapshot::default();
+        for (layer, codec, [sw, d, e, b, z]) in cells {
+            s.cells.insert(
+                (layer.to_string(), codec.to_string()),
+                CellStats {
+                    sweeps: *sw,
+                    dense_bytes: *d,
+                    encoded_bytes: *e,
+                    blocks: *b,
+                    zero_blocks: *z,
+                },
+            );
+        }
+        s
+    }
+
+    #[test]
+    fn cell_records_and_derives() {
+        let ledger = Ledger::new();
+        let cell = ledger.cell("l0", "zero-block");
+        // 128 blocks of 16 B each; half zero. Encoded = 64 kept
+        // blocks * 16 B + 128/8 index bytes.
+        cell.record(2048, 1040, 128, 64);
+        let s = cell.stats();
+        assert_eq!(s.sweeps, 1);
+        assert_eq!(s.zero_permille(), 500);
+        // Achieved == analytic when the payload carries no overhead.
+        assert_eq!(s.analytic_bytes(), 1040);
+        assert!(
+            (s.achieved_savings_pct() - s.analytic_savings_pct()).abs()
+                < 1e-9
+        );
+        assert!((s.achieved_savings_pct() - 49.21875).abs() < 1e-6);
+        // Same key → same cell; dots sanitize to dashes.
+        cell.record(2048, 1040, 128, 64);
+        assert_eq!(ledger.cell("l0", "zero-block").stats().sweeps, 2);
+        let weird = ledger.cell("layer.0", "zero.block");
+        weird.record(1, 1, 1, 0);
+        assert!(ledger
+            .snapshot()
+            .cells
+            .contains_key(&("layer-0".into(), "zero-block".into())));
+    }
+
+    #[test]
+    fn empty_cells_never_divide_by_zero() {
+        let s = CellStats::default();
+        assert_eq!(s.zero_permille(), 0);
+        assert_eq!(s.achieved_savings_pct(), 0.0);
+        assert_eq!(s.analytic_bytes(), 0);
+        assert_eq!(s.analytic_savings_pct(), 0.0);
+        let t = TargetManifest::default();
+        assert_eq!(s.channel_us(&t), (0.0, 0.0));
+    }
+
+    #[test]
+    fn channel_time_uses_the_sustained_envelope() {
+        let t = TargetManifest {
+            dram_gbps: 10.0,
+            sustained_fraction: 0.5,
+            ..TargetManifest::default()
+        };
+        let s = CellStats {
+            dense_bytes: 5_000_000_000, // 1 s at 5 GB/s sustained
+            encoded_bytes: 2_500_000_000,
+            ..CellStats::default()
+        };
+        let (d, e) = s.channel_us(&t);
+        assert!((d - 1e6).abs() < 1.0, "{d}");
+        assert!((e - 5e5).abs() < 1.0, "{e}");
+    }
+
+    #[test]
+    fn snapshot_merge_is_associative_across_three_workers() {
+        // Three workers with overlapping and disjoint cells — the
+        // shape a router aggregation actually sees.
+        let a = snap(&[
+            ("l0", "zero-block", [3, 300, 120, 30, 18]),
+            ("l1", "zero-block", [3, 600, 200, 15, 9]),
+        ]);
+        let b = snap(&[
+            ("l0", "zero-block", [5, 500, 210, 50, 29]),
+            ("spill_out", "zero-block", [2, 900, 400, 45, 20]),
+        ]);
+        let c = snap(&[
+            ("l1", "zero-block", [7, 1400, 480, 35, 22]),
+            ("spill_in", "rle-zero", [1, 111, 44, 0, 0]),
+        ]);
+        // (a+b)+c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a+(b+c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left, right);
+        // and commutes: c+(b+a)
+        let mut rev = c.clone();
+        rev.merge(&b);
+        rev.merge(&a);
+        assert_eq!(left, rev);
+        // Totals fold every cell.
+        assert_eq!(left.total().dense_bytes, 300 + 600 + 500 + 900 + 1400 + 111);
+    }
+
+    #[test]
+    fn stage_packing_roundtrips_and_merges_commute() {
+        let a = snap(&[
+            ("l0", "zero-block", [3, 300, 120, 30, 18]),
+            ("l1", "zero-block", [3, 600, 200, 15, 9]),
+        ]);
+        let b = snap(&[("l0", "zero-block", [5, 500, 210, 50, 29])]);
+        // Roundtrip through a telemetry snapshot.
+        let mut tele = TelemetrySnapshot::default();
+        a.to_stages(&mut tele);
+        assert_eq!(LedgerSnapshot::from_telemetry(&tele), a);
+        // Telemetry-merge then parse == parse then ledger-merge.
+        let mut tele_b = TelemetrySnapshot::default();
+        b.to_stages(&mut tele_b);
+        tele.merge(&tele_b);
+        let via_telemetry = LedgerSnapshot::from_telemetry(&tele);
+        let mut via_ledger = a.clone();
+        via_ledger.merge(&b);
+        assert_eq!(via_telemetry, via_ledger);
+    }
+
+    #[test]
+    fn malformed_ledger_stages_are_skipped() {
+        let mut tele = TelemetrySnapshot::default();
+        for label in [
+            "ledger.too.many.parts.dense",
+            "ledger.short",
+            "ledger.l0.codec.unknown",
+            "serve.execute",
+        ] {
+            tele.stages
+                .insert(label.into(), StageStats { nanos: 1, calls: 1, bytes: 1 });
+        }
+        assert!(LedgerSnapshot::from_telemetry(&tele)
+            .cells
+            .is_empty());
+    }
+}

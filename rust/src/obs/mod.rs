@@ -25,13 +25,32 @@
 //!   [`TelemetrySnapshot`](crate::telemetry::TelemetrySnapshot),
 //!   exposed as Prometheus text exposition and JSON (`zebra obs`,
 //!   `MetricsResp` v3, loadgen's `--scrape-ms` time series).
+//!
+//! PR 9 adds the *bandwidth* planes on the same discipline:
+//!
+//! - [`ledger`] — per-layer, per-codec atomic accounting of dense vs
+//!   encoded bytes and zero blocks, recorded at the fused
+//!   `relu_prune_encode` sweep and at spill ship/ingest; snapshots
+//!   merge label-wise and ride the v3 telemetry block as synthetic
+//!   `ledger.*` stages (no wire bump).
+//! - [`slo`] — declarative objectives (shed rate, deadline-miss
+//!   rate, p99 latency, bandwidth-savings floor) burned over
+//!   fast/slow windows; breach transitions record
+//!   [`TerminalKind::SloBreach`] flight events and export as
+//!   `zebra_slo_breach`.
 
 pub mod export;
 pub mod flight;
+pub mod ledger;
+pub mod slo;
 pub mod trace;
 
-pub use export::{encode_telemetry, parse_telemetry, ObsReport};
+pub use export::{
+    encode_telemetry, parse_telemetry, parse_workers, ObsReport, WorkerView,
+};
 pub use flight::{FlightEntry, FlightRecorder, TerminalKind};
+pub use ledger::{CellStats, Ledger, LedgerCell, LedgerSnapshot};
+pub use slo::{parse_slo, SloConfig, SloEngine, SloInput, SloView};
 pub use trace::{
     now_ns, render_waterfall, sampled, trace_id_for, Span, TraceRecord,
 };

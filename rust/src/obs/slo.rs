@@ -1,0 +1,520 @@
+//! SLO burn-rate engine — declarative objectives over the serving
+//! metrics and the bandwidth ledger.
+//!
+//! Four objectives ship by default (all always-on; `--slo
+//! name=threshold,...` re-thresholds them):
+//!
+//! | name            | breach condition (over both windows)           |
+//! |-----------------|------------------------------------------------|
+//! | `shed-rate`     | shed / submitted requests ≥ threshold          |
+//! | `deadline-miss` | deadline misses / responses ≥ threshold        |
+//! | `p99-latency`   | p99 latency ≥ threshold µs                     |
+//! | `savings-floor` | ledger bandwidth savings % ≤ threshold (0 = off)|
+//!
+//! Evaluation is the classic two-window burn rate: each
+//! [`SloEngine::observe`] call appends a timestamped sample of
+//! cumulative counters to a bounded ring, and every objective
+//! computes its rate over a **fast** window (is it burning *now*?)
+//! and a **slow** window (has it been burning long enough to
+//! matter?). Only when both burns reach 1.0 does the objective
+//! breach; a breach *transition* (inactive → active) bumps the
+//! cumulative breach counter and records a
+//! [`TerminalKind::SloBreach`] flight event naming the objective —
+//! steady-state breach does not re-fire, so a storm costs one event,
+//! not one per tick.
+//!
+//! The engine is wall-clock free: `now_ms` is an input, so tests
+//! drive it deterministically. Samplers (one thread per serving
+//! node) feed it from a monotonic clock. Status rides the telemetry
+//! block as `slo.<name>.breach` / `slo.<name>.active` stages — same
+//! no-wire-bump trick as the ledger.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::obs::flight::{FlightRecorder, TerminalKind};
+use crate::telemetry::{StageStats, TelemetrySnapshot};
+
+/// Stage-label prefix SLO status uses inside a telemetry snapshot.
+pub const SLO_STAGE_PREFIX: &str = "slo.";
+
+/// What an objective measures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloKind {
+    /// Shed fraction of submitted requests (threshold: fraction).
+    ShedRate,
+    /// Deadline-missed fraction of responses (threshold: fraction).
+    DeadlineMiss,
+    /// p99 latency ceiling (threshold: microseconds).
+    P99Latency,
+    /// Ledger savings floor (threshold: percent; 0 disables).
+    SavingsFloor,
+}
+
+/// One declarative objective.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Objective {
+    /// Kebab-case, dot-free (dots are the stage-label separator).
+    pub name: &'static str,
+    pub kind: SloKind,
+    pub threshold: f64,
+}
+
+/// The engine's configuration: objectives + the two burn windows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloConfig {
+    pub objectives: Vec<Objective>,
+    /// "Is it burning now?" window.
+    pub fast_window_ms: u64,
+    /// "Has it been burning long enough to matter?" window.
+    pub slow_window_ms: u64,
+}
+
+impl Default for SloConfig {
+    fn default() -> SloConfig {
+        SloConfig {
+            objectives: vec![
+                Objective {
+                    name: "shed-rate",
+                    kind: SloKind::ShedRate,
+                    threshold: 0.5,
+                },
+                Objective {
+                    name: "deadline-miss",
+                    kind: SloKind::DeadlineMiss,
+                    threshold: 0.5,
+                },
+                Objective {
+                    name: "p99-latency",
+                    kind: SloKind::P99Latency,
+                    threshold: 1_000_000.0,
+                },
+                Objective {
+                    name: "savings-floor",
+                    kind: SloKind::SavingsFloor,
+                    threshold: 0.0,
+                },
+            ],
+            fast_window_ms: 60_000,
+            slow_window_ms: 600_000,
+        }
+    }
+}
+
+impl SloConfig {
+    /// Parse `--slo name=threshold[,name=threshold...]` as overrides
+    /// on the default objective set. Unknown names error listing the
+    /// valid ones; thresholds must be finite and non-negative.
+    pub fn parse_overrides(spec: &str) -> Result<SloConfig> {
+        let mut cfg = SloConfig::default();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty())
+        {
+            let Some((name, value)) = part.split_once('=') else {
+                bail!("--slo wants name=threshold, got {part:?}");
+            };
+            let Ok(threshold) = value.trim().parse::<f64>() else {
+                bail!("--slo {name}: bad threshold {value:?}");
+            };
+            if !threshold.is_finite() || threshold < 0.0 {
+                bail!("--slo {name}: threshold must be >= 0");
+            }
+            let Some(obj) = cfg
+                .objectives
+                .iter_mut()
+                .find(|o| o.name == name.trim())
+            else {
+                bail!(
+                    "--slo: unknown objective {name:?} \
+                     (shed-rate|deadline-miss|p99-latency|savings-floor)"
+                );
+            };
+            obj.threshold = threshold;
+        }
+        Ok(cfg)
+    }
+}
+
+/// One sample of cumulative counters, fed by a node's sampler.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SloInput {
+    pub requests: u64,
+    pub shed: u64,
+    pub responses: u64,
+    pub deadline_miss: u64,
+    /// Current p99 latency in microseconds (a level, not a counter).
+    pub p99_latency_us: u64,
+    /// Ledger totals (cumulative), for the savings floor.
+    pub dense_bytes: u64,
+    pub encoded_bytes: u64,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct ObjState {
+    breaches: u64,
+    active: bool,
+}
+
+#[derive(Debug, Default)]
+struct State {
+    samples: VecDeque<(u64, SloInput)>,
+    status: BTreeMap<&'static str, ObjState>,
+}
+
+/// Sample-ring hard cap (a 100 ms sampler fills the slow window with
+/// 6000; anything past pruning is a runaway guard, not a budget).
+const MAX_SAMPLES: usize = 8192;
+
+/// The burn-rate evaluator. Thread-safe; one per serving node.
+#[derive(Debug)]
+pub struct SloEngine {
+    cfg: SloConfig,
+    flight: Option<Arc<FlightRecorder>>,
+    state: Mutex<State>,
+}
+
+impl SloEngine {
+    pub fn new(
+        cfg: SloConfig,
+        flight: Option<Arc<FlightRecorder>>,
+    ) -> Arc<SloEngine> {
+        Arc::new(SloEngine {
+            cfg,
+            flight,
+            state: Mutex::new(State::default()),
+        })
+    }
+
+    pub fn config(&self) -> &SloConfig {
+        &self.cfg
+    }
+
+    /// Feed one sample and evaluate every objective. Returns the
+    /// names of objectives that newly breached on this observation
+    /// (transitions only); each also records an `slo_breach` flight
+    /// event when the node has a recorder.
+    pub fn observe(&self, now_ms: u64, input: &SloInput) -> Vec<&'static str> {
+        let mut st = self.state.lock().unwrap();
+        st.samples.push_back((now_ms, *input));
+        // Prune: keep one sample at-or-before the slow boundary so
+        // the window lookup always has an anchor.
+        let cutoff = now_ms.saturating_sub(self.cfg.slow_window_ms);
+        while st.samples.len() > 1
+            && (st.samples[1].0 <= cutoff || st.samples.len() > MAX_SAMPLES)
+        {
+            st.samples.pop_front();
+        }
+        let fast = window_base(&st.samples, now_ms, self.cfg.fast_window_ms);
+        let slow = window_base(&st.samples, now_ms, self.cfg.slow_window_ms);
+        let mut fired = Vec::new();
+        for obj in &self.cfg.objectives {
+            let burning = burn(obj, &fast, input) >= 1.0
+                && burn(obj, &slow, input) >= 1.0;
+            let entry = st.status.entry(obj.name).or_default();
+            if burning && !entry.active {
+                entry.active = true;
+                entry.breaches += 1;
+                fired.push(obj.name);
+                if let Some(f) = &self.flight {
+                    f.record_event(
+                        0,
+                        TerminalKind::SloBreach,
+                        &format!(
+                            "objective {} breached (threshold {})",
+                            obj.name, obj.threshold
+                        ),
+                    );
+                }
+            } else if !burning {
+                entry.active = false;
+            }
+        }
+        fired
+    }
+
+    /// Pack status into a telemetry snapshot:
+    ///
+    /// ```text
+    /// slo.<name>.breach {calls: cumulative breaches, nanos: threshold*1000}
+    /// slo.<name>.active {calls: 1 if active else 0}
+    /// ```
+    pub fn to_stages(&self, telemetry: &mut TelemetrySnapshot) {
+        let st = self.state.lock().unwrap();
+        for obj in &self.cfg.objectives {
+            let s = st.status.get(obj.name).copied().unwrap_or_default();
+            telemetry.stages.insert(
+                format!("{SLO_STAGE_PREFIX}{}.breach", obj.name),
+                StageStats {
+                    nanos: (obj.threshold * 1000.0).round() as u64,
+                    calls: s.breaches,
+                    bytes: 0,
+                },
+            );
+            telemetry.stages.insert(
+                format!("{SLO_STAGE_PREFIX}{}.active", obj.name),
+                StageStats {
+                    nanos: 0,
+                    calls: s.active as u64,
+                    bytes: 0,
+                },
+            );
+        }
+    }
+}
+
+/// The baseline sample a window measures deltas against: the newest
+/// sample at or before `now - window`, else the oldest we have.
+fn window_base(
+    samples: &VecDeque<(u64, SloInput)>,
+    now_ms: u64,
+    window_ms: u64,
+) -> SloInput {
+    let boundary = now_ms.saturating_sub(window_ms);
+    let mut base = samples.front().map(|(_, s)| *s).unwrap_or_default();
+    for (at, s) in samples {
+        if *at <= boundary {
+            base = *s;
+        } else {
+            break;
+        }
+    }
+    base
+}
+
+/// Burn rate of one objective over one window: observed rate divided
+/// by threshold. ≥ 1.0 = the error budget is burning at or beyond
+/// the allowed rate.
+fn burn(obj: &Objective, base: &SloInput, now: &SloInput) -> f64 {
+    match obj.kind {
+        SloKind::ShedRate => {
+            let shed = now.shed.saturating_sub(base.shed) as f64;
+            let req = now.requests.saturating_sub(base.requests).max(1) as f64;
+            ratio(shed / req, obj.threshold)
+        }
+        SloKind::DeadlineMiss => {
+            let miss =
+                now.deadline_miss.saturating_sub(base.deadline_miss) as f64;
+            let resp =
+                now.responses.saturating_sub(base.responses).max(1) as f64;
+            ratio(miss / resp, obj.threshold)
+        }
+        SloKind::P99Latency => {
+            ratio(now.p99_latency_us as f64, obj.threshold)
+        }
+        SloKind::SavingsFloor => {
+            if obj.threshold <= 0.0 {
+                return 0.0;
+            }
+            let dense = now.dense_bytes.saturating_sub(base.dense_bytes);
+            if dense == 0 {
+                // No ledger traffic in the window: nothing to judge.
+                return 0.0;
+            }
+            let enc = now.encoded_bytes.saturating_sub(base.encoded_bytes);
+            let savings =
+                100.0 * dense.saturating_sub(enc) as f64 / dense as f64;
+            // A *floor*: burn ≥ 1 exactly when savings ≤ threshold.
+            obj.threshold / savings.max(1e-9)
+        }
+    }
+}
+
+fn ratio(observed: f64, threshold: f64) -> f64 {
+    if threshold <= 0.0 {
+        // Zero-threshold rate objectives: any observation breaches.
+        return if observed > 0.0 { f64::INFINITY } else { 0.0 };
+    }
+    observed / threshold
+}
+
+/// One objective's parsed wire status (see [`parse_slo`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SloView {
+    /// Cumulative breach transitions (summed across merged nodes).
+    pub breaches: u64,
+    /// Breaching right now on ≥ 1 merged node.
+    pub active: bool,
+    /// Configured threshold × 1000 (from the reporting node).
+    pub threshold_milli: u64,
+}
+
+/// Reassemble per-objective status from the `slo.*` stages of a
+/// (possibly cross-node-merged) telemetry snapshot. Malformed labels
+/// are skipped — stage blocks come off the wire.
+pub fn parse_slo(telemetry: &TelemetrySnapshot) -> BTreeMap<String, SloView> {
+    let mut out: BTreeMap<String, SloView> = BTreeMap::new();
+    for (label, stats) in &telemetry.stages {
+        let Some(rest) = label.strip_prefix(SLO_STAGE_PREFIX) else {
+            continue;
+        };
+        let parts: Vec<&str> = rest.split('.').collect();
+        let [name, kind] = parts[..] else { continue };
+        if kind != "breach" && kind != "active" {
+            continue;
+        }
+        let view = out.entry(name.to_string()).or_default();
+        if kind == "breach" {
+            view.breaches += stats.calls;
+            view.threshold_milli = view.threshold_milli.max(stats.nanos);
+        } else {
+            view.active |= stats.calls > 0;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loaded(requests: u64, shed: u64) -> SloInput {
+        SloInput { requests, shed, ..SloInput::default() }
+    }
+
+    #[test]
+    fn override_list_parses_and_rejects_garbage() {
+        let cfg = SloConfig::parse_overrides(
+            "shed-rate=0.1, p99-latency=250000",
+        )
+        .unwrap();
+        let get = |n: &str| {
+            cfg.objectives.iter().find(|o| o.name == n).unwrap().threshold
+        };
+        assert_eq!(get("shed-rate"), 0.1);
+        assert_eq!(get("p99-latency"), 250_000.0);
+        // Untouched objectives keep their defaults.
+        assert_eq!(get("deadline-miss"), 0.5);
+        let e = SloConfig::parse_overrides("warp-speed=1")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("savings-floor"), "{e}");
+        assert!(SloConfig::parse_overrides("shed-rate").is_err());
+        assert!(SloConfig::parse_overrides("shed-rate=-1").is_err());
+        assert!(SloConfig::parse_overrides("shed-rate=much").is_err());
+    }
+
+    #[test]
+    fn breach_fires_once_per_transition_and_names_the_objective() {
+        let flight =
+            Arc::new(FlightRecorder::new("slo-test", 16, None));
+        let engine =
+            SloEngine::new(SloConfig::default(), Some(Arc::clone(&flight)));
+        // Baseline, then a 60 % shed rate one fast-window later: both
+        // windows resolve to the same baseline sample, so both burn
+        // at 0.6/0.5 = 1.2.
+        assert!(engine.observe(0, &loaded(0, 0)).is_empty());
+        let fired = engine.observe(60_000, &loaded(100, 60));
+        assert_eq!(fired, vec!["shed-rate"]);
+        // Steady-state breach does not re-fire.
+        assert!(engine.observe(61_000, &loaded(101, 61)).is_empty());
+        // The flight ring got exactly one slo_breach naming it.
+        let events: Vec<String> = flight
+            .entries()
+            .into_iter()
+            .filter_map(|e| match e {
+                crate::obs::FlightEntry::Event { kind, detail, .. } => {
+                    assert_eq!(kind, TerminalKind::SloBreach);
+                    Some(detail)
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(events.len(), 1);
+        assert!(events[0].contains("shed-rate"), "{}", events[0]);
+        // Recovery (no sheds in the fast window) clears active, and
+        // a later breach fires a second transition.
+        assert!(engine.observe(121_000, &loaded(300, 61)).is_empty());
+        // (261 sheds of 400 keeps the slow window burning too: the
+        // slow base is still the t=0 sample.)
+        let again = engine.observe(181_000, &loaded(400, 261));
+        assert_eq!(again, vec!["shed-rate"]);
+        let mut tele = TelemetrySnapshot::default();
+        engine.to_stages(&mut tele);
+        let view = parse_slo(&tele);
+        assert_eq!(view["shed-rate"].breaches, 2);
+        assert!(view["shed-rate"].active);
+        assert_eq!(view["shed-rate"].threshold_milli, 500);
+        assert!(!view["deadline-miss"].active);
+    }
+
+    #[test]
+    fn p99_objective_tracks_the_level_not_a_delta() {
+        let engine = SloEngine::new(SloConfig::default(), None);
+        let slow = SloInput {
+            requests: 10,
+            responses: 10,
+            p99_latency_us: 2_000_000,
+            ..SloInput::default()
+        };
+        let fired = engine.observe(0, &slow);
+        assert_eq!(fired, vec!["p99-latency"]);
+        let fast = SloInput { p99_latency_us: 10, ..slow };
+        assert!(engine.observe(1_000, &fast).is_empty());
+    }
+
+    #[test]
+    fn savings_floor_breaches_only_below_the_floor_with_traffic() {
+        let cfg =
+            SloConfig::parse_overrides("savings-floor=40").unwrap();
+        let engine = SloEngine::new(cfg, None);
+        // No ledger traffic: silent.
+        assert!(engine.observe(0, &SloInput::default()).is_empty());
+        // 50 % savings over the window: above the 40 % floor.
+        let good = SloInput {
+            dense_bytes: 1000,
+            encoded_bytes: 500,
+            ..SloInput::default()
+        };
+        assert!(engine.observe(60_000, &good).is_empty());
+        // Collapses to 10 % savings: breach.
+        let bad = SloInput {
+            dense_bytes: 3000,
+            encoded_bytes: 2300,
+            ..SloInput::default()
+        };
+        let fired = engine.observe(120_000, &bad);
+        assert_eq!(fired, vec!["savings-floor"]);
+    }
+
+    #[test]
+    fn default_savings_floor_is_disabled() {
+        let engine = SloEngine::new(SloConfig::default(), None);
+        let zero_savings = SloInput {
+            dense_bytes: 1000,
+            encoded_bytes: 1000,
+            ..SloInput::default()
+        };
+        assert!(engine.observe(0, &zero_savings).is_empty());
+    }
+
+    #[test]
+    fn parse_skips_malformed_slo_stages() {
+        let mut tele = TelemetrySnapshot::default();
+        for label in ["slo.x", "slo.a.b.c", "slo.a.unknown", "serve.execute"]
+        {
+            tele.stages.insert(
+                label.into(),
+                StageStats { nanos: 1, calls: 1, bytes: 1 },
+            );
+        }
+        assert!(parse_slo(&tele).is_empty());
+    }
+
+    #[test]
+    fn cross_node_merge_sums_breaches_and_ors_active() {
+        let engine_a = SloEngine::new(SloConfig::default(), None);
+        let engine_b = SloEngine::new(SloConfig::default(), None);
+        engine_a.observe(0, &loaded(0, 0));
+        engine_a.observe(60_000, &loaded(100, 90));
+        engine_b.observe(0, &loaded(0, 0));
+        let mut tele = TelemetrySnapshot::default();
+        engine_a.to_stages(&mut tele);
+        let mut tele_b = TelemetrySnapshot::default();
+        engine_b.to_stages(&mut tele_b);
+        tele.merge(&tele_b);
+        let view = parse_slo(&tele);
+        assert_eq!(view["shed-rate"].breaches, 1);
+        assert!(view["shed-rate"].active);
+    }
+}

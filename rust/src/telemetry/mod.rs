@@ -26,6 +26,14 @@
 //! [`TelemetrySnapshot::coverage`] can verify the sub-stages account
 //! for (≥95% of) the end-to-end wall time — see
 //! `rust/docs/telemetry.md`.
+//!
+//! Some observability planes *ride* this map rather than timing with
+//! it: the bandwidth ledger, SLO engine, and per-worker rollups pack
+//! their counters into reserved stage prefixes (`ledger.`, `slo.`,
+//! `cluster.w`) so snapshots cross the existing v3 wire and merge
+//! label-wise without a protocol bump. Those prefixes are structured
+//! counters, not timings — `crate::obs` owns their encode/decode and
+//! keeps them out of human-readable stage tables.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};

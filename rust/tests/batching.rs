@@ -89,6 +89,8 @@ fn flooding_one_key_does_not_starve_the_others() {
             ship_spills: None,
             spill_sink: None,
             flight: None,
+            ledger: None,
+            slo: None,
         },
         None,
     )

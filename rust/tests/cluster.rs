@@ -93,6 +93,8 @@ fn mock_worker(delay: Duration) -> WorkerNode {
         ship_spills: None,
         spill_sink: None,
         flight: None,
+        ledger: None,
+        slo: None,
     };
     WorkerNode::start(exec, "127.0.0.1:0", cfg, None).unwrap()
 }
@@ -225,6 +227,8 @@ fn shipped_spill_bytes_match_worker_eq2_accounting() {
                 }),
                 spill_sink: None,
                 flight: None,
+                ledger: None,
+                slo: None,
             };
             WorkerNode::start(
                 exec,

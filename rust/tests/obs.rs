@@ -21,9 +21,13 @@ use zebra::cluster::{
     ClusterClient, Router, RouterConfig, ShardMode, WorkerNode,
 };
 use zebra::coordinator::server::BatchExecutor;
-use zebra::coordinator::{reference_executor, Priority, ServerConfig};
+use zebra::coordinator::{
+    reference_executor, reference_executor_with_ledger, Priority,
+    ServerConfig,
+};
 use zebra::obs::{
-    trace_id_for, FlightEntry, FlightRecorder, TerminalKind,
+    parse_slo, trace_id_for, FlightEntry, FlightRecorder, Ledger,
+    LedgerSnapshot, SloConfig, SloEngine, TerminalKind,
 };
 use zebra::telemetry::StageStats;
 use zebra::tensor::Tensor;
@@ -90,6 +94,8 @@ fn mock_worker(delay: Duration) -> WorkerNode {
         ship_spills: None,
         spill_sink: None,
         flight: None,
+        ledger: None,
+        slo: None,
     };
     WorkerNode::start(exec, "127.0.0.1:0", cfg, None).unwrap()
 }
@@ -375,6 +381,258 @@ fn forced_shed_records_the_trace_id_in_the_flight_ring() {
 
     client.shutdown();
     router.shutdown();
+    worker.shutdown();
+}
+
+/// Acceptance (PR 9 tentpole): over a loopback cluster serving the
+/// real reference backend, the bandwidth ledger's *achieved* savings
+/// (bytes actually recorded at the fused relu->prune->encode sweep)
+/// match the Eq. 2-3 *analytic* figure for the same observed zero mix
+/// within 1% — per layer, read back through one obs scrape.
+#[test]
+fn loopback_ledger_achieved_savings_match_the_analytic_figure() {
+    let ledger = Ledger::new();
+    let exec = Arc::new(
+        reference_executor_with_ledger(RefSpec::tiny(), Arc::clone(&ledger))
+            .unwrap(),
+    );
+    let cfg = ServerConfig {
+        ledger: Some(Arc::clone(&ledger)),
+        ..ServerConfig::default()
+    };
+    let worker = WorkerNode::start(exec, "127.0.0.1:0", cfg, None).unwrap();
+    let client =
+        ClusterClient::connect(&worker.local_addr().to_string()).unwrap();
+
+    // Synthetic workload with a known zero mix: fixed-seed noise
+    // drives the tiny spec's ReLU masks deterministically.
+    let rxs: Vec<_> = (0..16u64)
+        .map(|i| client.submit(&noise_image(8, 100 + i)).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(WAIT).unwrap().unwrap();
+    }
+
+    let report = client.obs_report().unwrap();
+    let snap = LedgerSnapshot::from_telemetry(&report.telemetry);
+    let layers: Vec<&str> = snap
+        .cells
+        .keys()
+        .map(|(layer, _)| layer.as_str())
+        .collect();
+    assert_eq!(
+        layers,
+        vec!["l0", "l1"],
+        "tiny spec has two spill layers"
+    );
+    for ((layer, codec), c) in &snap.cells {
+        assert_eq!(codec, "zero-block");
+        // One fused sweep per *executed batch*, so batching may fold
+        // the 16 requests into fewer sweeps — but never zero.
+        assert!(c.sweeps > 0, "{layer} recorded no sweeps");
+        assert!(c.blocks > 0, "{layer} swept no blocks");
+        let achieved = c.achieved_savings_pct();
+        let analytic = c.analytic_savings_pct();
+        assert!(
+            (achieved - analytic).abs() < 1.0,
+            "{layer}: achieved {achieved:.2}% vs Eq. 2-3 analytic \
+             {analytic:.2}% drifts >= 1%"
+        );
+    }
+    // The scrape's wire round-trip kept the exact counters: the same
+    // cells come straight off the in-process ledger.
+    assert_eq!(snap, ledger.snapshot());
+    // And the export layer renders them as first-class families.
+    let prom = report.prometheus();
+    assert!(
+        prom.contains(
+            "zebra_ledger_dense_bytes_total{layer=\"l0\",codec=\"zero-block\"}"
+        ),
+        "{prom}"
+    );
+
+    client.shutdown();
+    worker.shutdown();
+}
+
+/// Acceptance (PR 9 tentpole): a forced-overload run trips the
+/// shed-rate SLO — the burn-rate engine fires a breach transition, the
+/// flight ring records an `slo_breach` terminal event naming the
+/// objective, and the breach is visible in the next obs scrape.
+#[test]
+fn forced_overload_trips_the_shed_rate_slo() {
+    let worker = mock_worker(Duration::from_millis(200));
+    let flight = Arc::new(FlightRecorder::new("router", 64, None));
+    let slo =
+        SloEngine::new(SloConfig::default(), Some(Arc::clone(&flight)));
+    let mut cfg = RouterConfig::new(vec![worker.local_addr().to_string()]);
+    cfg.max_outstanding = 1;
+    cfg.max_attempts = 1;
+    cfg.heartbeat_every = Duration::from_millis(100);
+    cfg.flight = Some(Arc::clone(&flight));
+    cfg.slo = Some(Arc::clone(&slo));
+    let router = Router::start(cfg, "127.0.0.1:0").unwrap();
+    let client =
+        ClusterClient::connect(&router.local_addr().to_string()).unwrap();
+    let img = fill_image(4, 0.9);
+
+    // Baseline sample before any load (logical time, no wall clock).
+    assert!(slo.observe(0, &router.slo_input()).is_empty());
+
+    // One request occupies the single admission slot; the burst
+    // behind it sheds — way past the 50% default threshold.
+    let keep = client.submit(&img).unwrap();
+    let mut sheds = 0;
+    for _ in 0..8 {
+        let rx = client
+            .submit_traced(&img, None, Priority::Low, None, 0, false)
+            .unwrap();
+        if rx.recv_timeout(WAIT).unwrap().is_err() {
+            sheds += 1;
+        }
+    }
+    keep.recv_timeout(WAIT).unwrap().unwrap();
+    assert!(sheds >= 4, "overload never engaged ({sheds} sheds)");
+
+    // One fast-window later both burn windows see the shed storm.
+    let fired = slo.observe(60_000, &router.slo_input());
+    assert_eq!(fired, vec!["shed-rate"], "the shed-rate SLO must trip");
+
+    // The flight ring names the objective.
+    let breach_details: Vec<String> = flight
+        .entries()
+        .into_iter()
+        .filter_map(|e| match e {
+            FlightEntry::Event {
+                kind: TerminalKind::SloBreach,
+                detail,
+                ..
+            } => Some(detail),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(breach_details.len(), 1, "{breach_details:?}");
+    assert!(
+        breach_details[0].contains("shed-rate"),
+        "{}",
+        breach_details[0]
+    );
+
+    // The next scrape carries the breach in both export forms.
+    let report = client.obs_report().unwrap();
+    let view = parse_slo(&report.telemetry);
+    assert_eq!(view["shed-rate"].breaches, 1);
+    assert!(view["shed-rate"].active);
+    assert!(
+        report
+            .prometheus()
+            .contains("zebra_slo_breach_total{objective=\"shed-rate\"} 1"),
+        "{}",
+        report.prometheus()
+    );
+
+    client.shutdown();
+    router.shutdown();
+    worker.shutdown();
+}
+
+/// Satellite: the flight ring holds exactly its capacity (256) — the
+/// 256th entry does not evict anything, the 257th evicts exactly the
+/// oldest, and ring order stays oldest-first across the wrap.
+#[test]
+fn flight_ring_wraps_at_exactly_capacity() {
+    let flight = FlightRecorder::new("ring", 256, None);
+    let trace_of = |e: &FlightEntry| match e {
+        FlightEntry::Event { trace_id, .. } => *trace_id,
+        FlightEntry::Trace(rec) => rec.trace_id,
+    };
+    for i in 1..=256u64 {
+        flight.record_event(i, TerminalKind::ShedLow, "fill");
+    }
+    let entries = flight.entries();
+    assert_eq!(entries.len(), 256, "at capacity nothing is evicted");
+    assert_eq!(trace_of(&entries[0]), 1, "oldest entry still present");
+    assert_eq!(trace_of(&entries[255]), 256);
+
+    flight.record_event(257, TerminalKind::ShedLow, "wrap");
+    let entries = flight.entries();
+    assert_eq!(entries.len(), 256, "one past capacity evicts exactly one");
+    assert_eq!(trace_of(&entries[0]), 2, "only the oldest was evicted");
+    assert_eq!(trace_of(&entries[255]), 257);
+    assert!(
+        entries.windows(2).all(|w| trace_of(&w[0]) + 1 == trace_of(&w[1])),
+        "ring order must stay oldest-first across the wrap"
+    );
+}
+
+/// Satellite: ledger snapshot merge is associative (and commutative)
+/// across three workers' snapshots — `(a+b)+c == a+(b+c) == (c+b)+a`,
+/// including cells only some workers have.
+#[test]
+fn ledger_snapshot_merge_is_associative_across_three_workers() {
+    let snap = |layers: &[(&str, u64)]| {
+        let ledger = Ledger::new();
+        for &(layer, zeros) in layers {
+            ledger.cell(layer, "zero-block").record(1024, 512, 64, zeros);
+        }
+        ledger.snapshot()
+    };
+    // Worker snapshots with overlapping and disjoint cells.
+    let a = snap(&[("l0", 10), ("l1", 20)]);
+    let b = snap(&[("l0", 30)]);
+    let c = snap(&[("l1", 5), ("spill_out", 0)]);
+
+    let mut left = a.clone(); // (a + b) + c
+    left.merge(&b);
+    left.merge(&c);
+    let mut right = b.clone(); // a + (b + c)
+    right.merge(&c);
+    let mut a_first = a.clone();
+    a_first.merge(&right);
+    let mut reversed = c.clone(); // (c + b) + a
+    reversed.merge(&b);
+    reversed.merge(&a);
+
+    assert_eq!(left, a_first, "merge must be associative");
+    assert_eq!(left, reversed, "merge must be commutative");
+    let t = left.total();
+    assert_eq!(t.sweeps, 5);
+    assert_eq!(t.dense_bytes, 5 * 1024);
+    assert_eq!(t.zero_blocks, 65);
+    // Per-cell: l0 folded two workers, spill_out came from one.
+    assert_eq!(
+        left.cells[&("l0".to_string(), "zero-block".to_string())].sweeps,
+        2
+    );
+    assert_eq!(
+        left.cells[&("spill_out".to_string(), "zero-block".to_string())]
+            .zero_blocks,
+        0
+    );
+}
+
+/// Satellite: `zebra top --json` once-mode scrapes a live node and
+/// prints the full JSON report without entering the redraw loop.
+#[test]
+fn zebra_top_json_once_mode_scrapes_a_live_worker() {
+    let worker = mock_worker(Duration::ZERO);
+    let client =
+        ClusterClient::connect(&worker.local_addr().to_string()).unwrap();
+    let rx = client.submit(&fill_image(4, 0.2)).unwrap();
+    rx.recv_timeout(WAIT).unwrap().unwrap();
+    client.shutdown();
+
+    let argv: Vec<String> =
+        ["top", "--addr", &worker.local_addr().to_string(), "--json"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+    zebra::cli::run(&argv).unwrap();
+
+    // And without an address it fails before touching any socket.
+    let e = zebra::cli::run(&["top".to_string()]).unwrap_err();
+    assert!(e.to_string().contains("--addr"));
+
     worker.shutdown();
 }
 

@@ -43,6 +43,8 @@ fn coordinator_serves_end_to_end_on_the_reference_backend() {
             ship_spills: None,
             spill_sink: None,
             flight: None,
+            ledger: None,
+            slo: None,
         },
     );
     let img = noise_image(8, 11);
@@ -77,6 +79,8 @@ fn batching_engages_over_the_reference_backend() {
             ship_spills: None,
             spill_sink: None,
             flight: None,
+            ledger: None,
+            slo: None,
         },
     ));
     let rxs: Vec<_> = (0..16)
