@@ -1,7 +1,7 @@
 # Repo-level convenience targets.
 
 .PHONY: check ci bench-smoke train-smoke cluster-smoke loadgen-smoke \
-	perf-smoke simulate-smoke obs-smoke
+	perf-smoke simulate-smoke obs-smoke chaos-smoke
 
 # Full gate: build + tests + fmt + clippy in both feature configs
 # (the pjrt config auto-skips when no XLA toolchain is present),
@@ -51,6 +51,16 @@ loadgen-smoke:
 # and ci.yml invoke this target rather than duplicating the recipe.
 obs-smoke:
 	cd rust && ./obs_smoke.sh
+
+# Chaos + self-healing smoke: a seeded fault plan (wire drops +
+# corruption at the router, one worker crashing mid-load) against the
+# breaker/redial/request-timeout machinery. Passes only when loadgen's
+# conservation check holds under chaos, the breaker's full
+# Open -> Half-Open -> Closed cycle lands in the flight dump, and the
+# breaker/brownout families export on the live scrape. rust/check.sh
+# and ci.yml invoke this target rather than duplicating the recipe.
+chaos-smoke:
+	cd rust && ./chaos_smoke.sh
 
 # Block-sparse kernel never-regress gate: run the perf_hotpath bench
 # in smoke mode with the guard armed — the masked conv must be faster

@@ -1,0 +1,119 @@
+#!/usr/bin/env bash
+# rust/chaos_smoke.sh — chaos + self-healing smoke gate: a seeded
+# 2-worker loopback cluster where the router's outbound wire drops and
+# corrupts frames (`--chaos`, deterministic by seed), one worker
+# crashes abruptly mid-load (`worker.crash_after`), and the breaker /
+# redial / request-timeout machinery has to heal around all of it
+# (`rust/docs/robustness.md`). Passes only when:
+#
+#   - loadgen's run completes: its built-in conservation check
+#     (ok + shed + failed == submitted) holds under chaos — nothing
+#     hangs, nothing silently drops;
+#   - the per-worker circuit breaker walked a full
+#     Open -> Half-Open -> Closed cycle (corruption tears a link down,
+#     the probe timer half-opens it, the redial heals it) and all
+#     three transitions landed in the router's flight dump;
+#   - the breaker and brownout planes export over the live scrape
+#     (`zebra_breaker_state`, `zebra_brownout_level`).
+#
+# `make chaos-smoke` runs this; rust/check.sh and
+# .github/workflows/ci.yml invoke that target.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+cargo build --release --no-default-features
+BIN=target/release/zebra
+
+tmp=$(mktemp -d)
+pids=()
+cleanup() {
+  for p in ${pids[@]+"${pids[@]}"}; do kill "$p" 2>/dev/null || true; done
+  rm -rf "$tmp"
+}
+trap cleanup EXIT
+
+# Harvest the "... listening on HOST:PORT" line a node prints.
+wait_addr() {
+  local log="$1" i addr
+  for i in $(seq 1 100); do
+    addr=$(sed -n 's/.*listening on \([0-9.]*:[0-9]*\).*/\1/p' "$log" | head -n1)
+    if [ -n "$addr" ]; then
+      echo "$addr"
+      return 0
+    fi
+    sleep 0.1
+  done
+  echo "timed out waiting for an address in $log" >&2
+  cat "$log" >&2
+  return 1
+}
+
+# Worker 1 dies abruptly after its 40th accepted request (listener
+# closed, every connection severed — no goodbye frames); worker 2
+# stays healthy and must carry the rest of the load.
+"$BIN" cluster-worker --model ref-tiny --flush-us 2000 --max-batch 4 \
+  --chaos 'seed=7,worker.crash_after=40' \
+  --port 0 --run-s 120 >"$tmp/w1.log" 2>&1 &
+pids+=($!)
+W1=$(wait_addr "$tmp/w1.log")
+
+"$BIN" cluster-worker --model ref-tiny --flush-us 2000 --max-batch 4 \
+  --port 0 --run-s 120 >"$tmp/w2.log" 2>&1 &
+pids+=($!)
+W2=$(wait_addr "$tmp/w2.log")
+
+# The router injects seeded wire faults on its worker links: dropped
+# frames are re-dispatched by the 500 ms request timeout, corrupted
+# frames fail the peer's checksum and tear the link down. With
+# --breaker-threshold 1 every teardown opens that worker's breaker,
+# the 200 ms probe half-opens it, and the successful redial closes it
+# — the full cycle, with each transition a terminal flight event.
+"$BIN" cluster-router --workers "$W1,$W2" \
+  --chaos 'seed=7,wire.drop=0.05,wire.corrupt=2@0.05' \
+  --breaker-threshold 1 --breaker-probe-ms 200 \
+  --request-timeout-ms 500 --heartbeat-ms 100 --max-attempts 8 \
+  --brownout 'max=2,raise=3,lower=3' \
+  --flight-dir "$tmp/fl" --port 0 --run-s 120 >"$tmp/r.log" 2>&1 &
+pids+=($!)
+R=$(wait_addr "$tmp/r.log")
+
+# Both chaotic nodes must announce their (identical, replayable) plan.
+grep -q 'chaos: seed=7' "$tmp/w1.log"
+grep -q 'chaos: seed=7' "$tmp/r.log"
+
+# No --fail-on-error: under chaos a few requests may exhaust their
+# attempts and fail — the gate is loadgen's built-in conservation
+# check (ok + shed + failed == submitted; it errors on violation)
+# plus the healing evidence below.
+"$BIN" loadgen --addr "$R" --requests 240 --conns 8 \
+  --priority mixed --hw 8 >"$tmp/lg.log"
+grep -q 'ok' "$tmp/lg.log"
+
+# The breaker cycle: all three transitions must land in the router's
+# flight dump. The last teardown may still be healing when loadgen
+# returns, so poll briefly.
+FLIGHT="$tmp/fl/flight-router.jsonl"
+cycle_done() {
+  test -s "$FLIGHT" \
+    && grep -q 'breaker_open' "$FLIGHT" \
+    && grep -q 'breaker_half_open' "$FLIGHT" \
+    && grep -q 'breaker_closed' "$FLIGHT"
+}
+for i in $(seq 1 100); do
+  if cycle_done; then break; fi
+  sleep 0.1
+done
+cycle_done || {
+  echo "breaker cycle missing from the flight dump:" >&2
+  cat "$FLIGHT" 2>/dev/null >&2 || true
+  exit 1
+}
+
+# The same machinery exports live: breaker state/transition families
+# and the brownout level gauge ride the unified scrape.
+"$BIN" obs --addr "$R" >"$tmp/obs.prom"
+grep -q '^zebra_breaker_state' "$tmp/obs.prom"
+grep -q '^zebra_breaker_transitions_total' "$tmp/obs.prom"
+grep -q '^zebra_brownout_level' "$tmp/obs.prom"
+
+echo "chaos smoke OK (router $R healed around seeded drops/corruption + a worker crash; breaker cycle in $FLIGHT)"

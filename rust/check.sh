@@ -60,6 +60,13 @@ make -C .. loadgen-smoke
 echo "== obs smoke: traced cluster -> flight dump -> obs replay/scrape"
 make -C .. obs-smoke
 
+# Chaos smoke: seeded wire faults + a worker crash against the
+# self-healing loop — conservation under chaos, the breaker's full
+# cycle in the flight dump, breaker/brownout families on the scrape.
+# Recipe in rust/chaos_smoke.sh via the repo Makefile.
+echo "== chaos smoke: seeded faults -> breaker cycle -> conservation"
+make -C .. chaos-smoke
+
 # Perf smoke: the block-sparse kernel never-regress gate — the masked
 # conv must beat the dense kernel at 70% zero blocks (smoke-sized
 # shapes, BENCH_PR5.json emitted at the repo root). Recipe in the

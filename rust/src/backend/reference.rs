@@ -213,6 +213,12 @@ impl RefParams {
     /// Write the `w%05d.zten` leaf layout that [`RefParams::build`]
     /// (and therefore `zebra serve --weights DIR`) loads back: conv
     /// layers in order, then the classifier matrix.
+    ///
+    /// Each leaf goes through [`crate::tensor::write_zten`]'s
+    /// tmp+rename path, so a training process killed mid-checkpoint
+    /// (or a chaos `worker.crash_after`) can tear at most the *set* —
+    /// individual leaves are whole old or whole new, and
+    /// [`check_complete_leaves`] catches a torn set at load time.
     pub fn write_leaves(&self, dir: &std::path::Path) -> Result<()> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating weights dir {dir:?}"))?;

@@ -51,7 +51,12 @@ pub(crate) fn expose_worker(
 ) -> Result<()> {
     let ship_upstream = args.get("ship-upstream").map(String::from);
     let image_hw = exec.image_hw();
+    // server_config threads --chaos / --io-timeout-ms through for us;
+    // announce the plan so a replayed run can be checked by eye.
     let mut cfg = opts.server_config(image_hw)?;
+    if let Some(fi) = &opts.faults {
+        println!("cluster-worker chaos: {}", fi.plan().summary());
+    }
     let flight = opts.flight_recorder("worker");
     cfg.flight = flight.clone();
     cfg.ledger = Some(ledger);
@@ -68,6 +73,10 @@ pub(crate) fn expose_worker(
     opts.hold_sampling(|now_ms| {
         let input = node.server().slo_input();
         slo.observe(now_ms, &input);
+        // Brownout: the SLO engine's level drives the admission caps
+        // (`rust/docs/robustness.md`); applying it here keeps the
+        // policy on the sampler's cadence.
+        node.server().set_brownout(slo.brownout_level());
     });
     println!("cluster-worker metrics: {}", node.metrics().summary());
     print!(
@@ -103,6 +112,21 @@ pub fn run_router(args: &Args) -> Result<()> {
     cfg.heartbeat_every = Duration::from_millis(
         args.get_usize("heartbeat-ms", 250)? as u64,
     );
+    // Self-healing knobs (router-only; see `rust/docs/robustness.md`).
+    cfg.breaker.threshold = args
+        .get_usize("breaker-threshold", cfg.breaker.threshold as usize)?
+        as u32;
+    cfg.breaker.probe_ms =
+        args.get_usize("breaker-probe-ms", cfg.breaker.probe_ms as usize)?
+            as u64;
+    let rt_ms = args.get_usize("request-timeout-ms", 10_000)?;
+    cfg.request_timeout =
+        (rt_ms > 0).then(|| Duration::from_millis(rt_ms as u64));
+    cfg.io_timeout = opts.io_timeout;
+    cfg.faults = opts.faults.clone();
+    if let Some(fi) = &opts.faults {
+        println!("cluster-router chaos: {}", fi.plan().summary());
+    }
     let flight = opts.flight_recorder("router");
     cfg.flight = flight.clone();
     cfg.ledger = Some(Ledger::new());
@@ -121,6 +145,9 @@ pub fn run_router(args: &Args) -> Result<()> {
     opts.hold_sampling(|now_ms| {
         let input = router.slo_input();
         slo.observe(now_ms, &input);
+        // Brownout level -> admission caps + trace thinning on the
+        // dispatch path (`rust/docs/robustness.md`).
+        router.set_brownout(slo.brownout_level());
     });
     println!("cluster-router stats: {}", router.stats().summary());
     print!("{}", router.telemetry().snapshot().report(None));

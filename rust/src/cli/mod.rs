@@ -115,6 +115,19 @@ commands:
                               p99-latency us, savings-floor fraction);
                               breaches hit the flight recorder and
                               export as zebra_slo_breach
+            [--brownout max=L,raise=N,lower=M]  let sustained SLO burn
+                              shed load: each level shrinks low/normal
+                              admission caps and thins trace sampling
+            [--chaos SPEC]    deterministic fault injection, replayable
+                              by seed (ZEBRA_CHAOS also works; the flag
+                              wins): seed=N, wire.drop=P,
+                              wire.delay=US@P, wire.corrupt=K@P,
+                              wire.truncate=P, worker.stall=US@P,
+                              worker.slow=M@P, worker.crash_after=N,
+                              spill.corrupt=P
+                              (see rust/docs/robustness.md)
+            [--io-timeout-ms MS]  read/connect bound on every cluster
+                              socket (default 30000; 0 = unbounded)
             [--port P]        expose the server over TCP instead of
                               replaying (0 = ephemeral; prints the
                               bound address) [--host H] [--run-s N]
@@ -127,10 +140,23 @@ commands:
             [--ship-upstream HOST:PORT]  ship .zspill batch frames to
                                          the router
             [--flight-dir DIR] [--slo NAME=T,...]
+            [--brownout max=L,raise=N,lower=M] [--chaos SPEC]
+            [--io-timeout-ms MS]
   cluster-router --workers HOST:P1,HOST:P2[,...]
             [--mode rr|hash]  round-robin or consistent-hash-by-key
             [--max-outstanding N] [--max-attempts N] [--heartbeat-ms MS]
             [--flight-dir DIR] [--slo NAME=T,...]
+            [--brownout max=L,raise=N,lower=M] [--chaos SPEC]
+            [--io-timeout-ms MS]
+            [--breaker-threshold N]  consecutive worker failures before
+                              the per-worker circuit breaker opens
+                              (default 3)
+            [--breaker-probe-ms MS]  open-state probe interval before a
+                              half-open redial (default 1000; backoff
+                              doubles it per reopen)
+            [--request-timeout-ms MS]  re-dispatch in-flight requests
+                              stuck on a worker longer than this
+                              (default 10000; 0 = never)
             [--port P] [--host H] [--run-s N]
   loadgen   --addr HOST:PORT  drive a router at a target rate; prints
                               p50/p95/p99 latency + per-class
@@ -422,6 +448,28 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("--flush-us"), "{e}");
+    }
+
+    #[test]
+    fn chaos_and_brownout_flags_validate_before_serving() {
+        // The shared flag surface rejects malformed chaos specs for
+        // every serving entry point, before any executor or socket.
+        let e = run(&v(&["serve", "--chaos", "wire.drop=nope"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("wire.drop"), "{e}");
+        let e = run(&v(&["cluster-worker", "--chaos", "frob=1"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("frob"), "{e}");
+        let e = run(&v(&["cluster-router", "--brownout", "max=0"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--brownout"), "{e}");
+        let e = run(&v(&["serve", "--io-timeout-ms", "soon"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("io-timeout-ms"), "{e}");
     }
 
     #[test]

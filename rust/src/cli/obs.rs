@@ -53,6 +53,12 @@ pub fn run(argv: &[String]) -> Result<()> {
 
 /// Render a flight dump: one waterfall per sampled trace, one line per
 /// terminal event, in the order the ring recorded them.
+///
+/// The error contract is part of the CLI surface: a malformed dump
+/// returns `Err` (so the binary exits 1, never 0) and the message
+/// names the file and the offending line (`FILE: flight line N: ...`)
+/// — scripts can grep it, and a truncated dump from a crashed node is
+/// diagnosed instead of half-rendered.
 fn replay(path: &Path) -> Result<()> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("zebra obs replay {path:?}"))?;
@@ -81,4 +87,32 @@ fn replay(path: &Path) -> Result<()> {
         path.display()
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The replay error contract: malformed dumps return `Err` (exit
+    /// code 1 via main) and name the file + line, never a partial
+    /// render with exit 0.
+    #[test]
+    fn replay_names_the_file_and_line_on_malformed_input() {
+        let dir = std::env::temp_dir()
+            .join(format!("zebra-obs-replay-err-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.jsonl");
+        std::fs::write(
+            &bad,
+            "{\"type\":\"event\",\"at_ns\":\"1\",\
+             \"trace_id\":\"0x0000000000000001\",\
+             \"kind\":\"shed_low\",\"detail\":\"x\"}\n\
+             not json at all\n",
+        )
+        .unwrap();
+        let e = replay(&bad).unwrap_err().to_string();
+        assert!(e.contains("bad.jsonl"), "{e}");
+        assert!(e.contains("flight line 2"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }

@@ -18,8 +18,9 @@ use anyhow::{bail, ensure, Result};
 use super::Args;
 use crate::compress;
 use crate::coordinator::{Priority, ServerConfig, ShipSpills};
+use crate::faults::{FaultInjector, FaultPlan};
 use crate::obs::flight::FLIGHT_CAPACITY;
-use crate::obs::{FlightRecorder, SloConfig};
+use crate::obs::{BrownoutConfig, FlightRecorder, SloConfig};
 
 /// `--priority low|normal|high|mixed`: one fixed class for every
 /// request, or (loadgen) a deterministic low/normal/high cycle that
@@ -97,8 +98,16 @@ pub struct ServeOpts {
     /// `--slo name=threshold,...`: overrides on the default objective
     /// set (shed-rate, deadline-miss, p99-latency-us, savings-floor).
     /// The engine always runs; the defaults are lenient enough to stay
-    /// silent on a healthy node.
+    /// silent on a healthy node. `--brownout max=L,raise=N,lower=M`
+    /// lands in `slo.brownout` (sustained burn then sheds load).
     pub slo: SloConfig,
+    /// `--chaos SPEC` (or `ZEBRA_CHAOS`; the flag wins): deterministic
+    /// fault injector shared by every site on this node. `None` when
+    /// no chaos is requested or the plan has no active faults.
+    pub faults: Option<Arc<FaultInjector>>,
+    /// `--io-timeout-ms N`: read/connect bound on every cluster
+    /// socket (0 = no bound, the pre-PR-10 behaviour).
+    pub io_timeout: Option<Duration>,
 }
 
 impl ServeOpts {
@@ -143,7 +152,18 @@ impl ServeOpts {
             PriorityMix::parse(&args.get_or("priority", "normal"))?;
         let trace_sample = args.get_usize("trace-sample", 0)?;
         let flight_dir = args.get("flight-dir").map(PathBuf::from);
-        let slo = SloConfig::parse_overrides(&args.get_or("slo", ""))?;
+        let mut slo = SloConfig::parse_overrides(&args.get_or("slo", ""))?;
+        if let Some(spec) = args.get("brownout") {
+            slo.brownout = Some(BrownoutConfig::parse(spec)?);
+        }
+        let plan = match args.get("chaos") {
+            Some(spec) => Some(FaultPlan::parse(spec)?),
+            None => FaultPlan::from_env()?,
+        };
+        let faults = plan.filter(FaultPlan::is_active).map(FaultInjector::new);
+        let io_ms = args.get_usize("io-timeout-ms", 30_000)?;
+        let io_timeout =
+            (io_ms > 0).then(|| Duration::from_millis(io_ms as u64));
         Ok(ServeOpts {
             flush,
             queue,
@@ -157,6 +177,8 @@ impl ServeOpts {
             trace_sample,
             flight_dir,
             slo,
+            faults,
+            io_timeout,
         })
     }
 
@@ -192,6 +214,8 @@ impl ServeOpts {
             // recorder.
             ledger: None,
             slo: None,
+            faults: self.faults.clone(),
+            io_timeout: self.io_timeout,
         })
     }
 
@@ -274,12 +298,16 @@ mod tests {
         assert_eq!(o.trace_sample, 0);
         assert_eq!(o.flight_dir, None);
         assert_eq!(o.slo, SloConfig::default());
+        assert!(o.faults.is_none());
+        assert_eq!(o.io_timeout, Some(Duration::from_secs(30)));
         assert!(o.flight_recorder("node").is_none());
         assert_eq!(o.listen_addr(), "127.0.0.1:0");
         let cfg = o.server_config(8).unwrap();
         assert_eq!(cfg.max_queue, 1024);
         assert_eq!(cfg.max_batch, 0);
         assert!(cfg.ship_spills.is_none());
+        assert!(cfg.faults.is_none());
+        assert_eq!(cfg.io_timeout, Some(Duration::from_secs(30)));
     }
 
     #[test]
@@ -290,6 +318,9 @@ mod tests {
             "--host", "0.0.0.0", "--port", "9000", "--run-s", "3",
             "--priority", "high", "--trace-sample", "4",
             "--flight-dir", "/tmp/zebra-flight",
+            "--chaos", "seed=7,wire.drop=0.25",
+            "--io-timeout-ms", "5000",
+            "--brownout", "max=2,raise=2,lower=4",
         ]))
         .unwrap();
         assert_eq!(o.flush, Duration::from_micros(750));
@@ -305,6 +336,12 @@ mod tests {
             o.flight_dir.as_deref(),
             Some(std::path::Path::new("/tmp/zebra-flight"))
         );
+        let fi = o.faults.as_ref().expect("chaos plan parsed");
+        assert_eq!(fi.plan().seed, 7);
+        assert!(fi.active());
+        assert_eq!(o.io_timeout, Some(Duration::from_millis(5000)));
+        let bo = o.slo.brownout.as_ref().expect("brownout policy parsed");
+        assert_eq!((bo.max_level, bo.raise_after, bo.lower_after), (2, 2, 4));
         // A recorder exists (tracing on) but only writes when dumped.
         assert!(o.flight_recorder("node").is_some());
         let cfg = o.server_config(8).unwrap();

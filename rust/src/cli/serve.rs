@@ -185,6 +185,11 @@ pub fn run_with(args: &Args, artifacts: std::path::PathBuf) -> Result<()> {
     cfg.flight = flight.clone();
     cfg.ledger = Some(ledger.clone());
     cfg.slo = Some(SloEngine::new(opts.slo.clone(), flight.clone()));
+    // server_config threads --chaos through (worker stall/slow and
+    // spill corruption fire in a plain replay too); say so up front.
+    if let Some(fi) = &opts.faults {
+        println!("serve chaos: {}", fi.plan().summary());
+    }
     let server = Server::start(exec, cfg);
 
     let n_avail = images.shape()[0];

@@ -28,6 +28,11 @@ use crate::tensor::Tensor;
 /// How long [`ClusterClient::stats`] waits for the router's answer.
 const STATS_WAIT: Duration = Duration::from_secs(5);
 
+/// Default connect + read timeout ([`ClusterClient::connect`]);
+/// override (or disable with `None`) via
+/// [`ClusterClient::connect_with`] / `--io-timeout-ms`.
+const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
+
 /// One answered request: the worker's response plus the client-side
 /// wall latency (submit -> response frame arrival).
 #[derive(Debug, Clone)]
@@ -98,12 +103,24 @@ pub struct ClusterClient {
 }
 
 impl ClusterClient {
+    /// Connect with the default 30 s connect/read timeout.
     pub fn connect(addr: &str) -> Result<ClusterClient> {
+        Self::connect_with(addr, Some(DEFAULT_IO_TIMEOUT))
+    }
+
+    /// Connect with an explicit socket timeout (`None` = unbounded,
+    /// the pre-PR-10 behaviour; `--io-timeout-ms 0` maps here). The
+    /// timeout bounds both the dial and every read the reader thread
+    /// makes — a black-holed router cannot wedge the client forever.
+    pub fn connect_with(
+        addr: &str,
+        io_timeout: Option<Duration>,
+    ) -> Result<ClusterClient> {
         // Map the two expected unreachable-node outcomes to messages
         // that say what to check, instead of surfacing the raw OS
         // error string (`zebra obs` / `zebra top` show this verbatim
         // to the operator).
-        let stream = TcpStream::connect(addr).map_err(|e| {
+        let stream = dial(addr, io_timeout).map_err(|e| {
             use std::io::ErrorKind;
             match e.kind() {
                 ErrorKind::ConnectionRefused => anyhow!(
@@ -121,6 +138,7 @@ impl ClusterClient {
         })?;
         let _ = stream.set_nodelay(true);
         let rd = stream.try_clone().context("clone client stream")?;
+        let _ = rd.set_read_timeout(io_timeout);
         let pending: Waiters = Arc::new(Mutex::new(HashMap::new()));
         let pending_stats: StatsWaiters =
             Arc::new(Mutex::new(HashMap::new()));
@@ -259,6 +277,24 @@ impl Drop for ClusterClient {
     }
 }
 
+/// `TcpStream::connect` with an optional bound, so an unreachable
+/// address fails in `io_timeout` instead of the OS default (minutes).
+fn dial(addr: &str, timeout: Option<Duration>) -> std::io::Result<TcpStream> {
+    match timeout {
+        Some(t) => {
+            use std::net::ToSocketAddrs;
+            let sa = addr.to_socket_addrs()?.next().ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::NotFound,
+                    "address resolves to nothing",
+                )
+            })?;
+            TcpStream::connect_timeout(&sa, t)
+        }
+        None => TcpStream::connect(addr),
+    }
+}
+
 fn reader_loop(
     mut stream: TcpStream,
     pending: Waiters,
@@ -267,6 +303,10 @@ fn reader_loop(
     loop {
         let frame = match Frame::read_from(&mut stream) {
             Ok(f) => f,
+            // A timeout between frames is just an idle connection
+            // (the client may legitimately sit quiet for minutes);
+            // every other error tears the connection down.
+            Err(e) if e.is_timeout() => continue,
             Err(_) => break,
         };
         match frame.ty {

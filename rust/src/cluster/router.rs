@@ -41,6 +41,20 @@
 //! label-wise (v1/v2 askers get the bare [`ClusterStats`] they can
 //! parse).
 //!
+//! Self-healing (PR 10, `rust/docs/robustness.md`): every worker link
+//! carries a circuit breaker (Closed -> Open after `threshold`
+//! consecutive failures -> Half-Open probe after the backoff window)
+//! and redials are paced by deterministic-jitter exponential backoff —
+//! a crashed worker costs ever-fewer connect attempts instead of a
+//! heartbeat-rate hammer, and every transition is a flight event and a
+//! `zebra_breaker_*` metric. Worker and client sockets get connect +
+//! read timeouts (`--io-timeout-ms`), a request unanswered past
+//! `request_timeout` on a *live* link is reclaimed and re-dispatched
+//! (conservation under dropped frames), and the SLO sampler's brownout
+//! level thins trace sampling before any request is shed. The
+//! [`FaultInjector`] taps outbound worker frames at the
+//! `wire.router.w<idx>` sites when chaos is configured.
+//!
 //! Observability: a sampled request's trace id rides the normalized
 //! v3 submit payload; when its response returns, the router appends a
 //! `router.dispatch` span (dispatch -> response, attempt count in the
@@ -52,7 +66,9 @@
 use std::collections::HashMap;
 use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{
+    AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -63,6 +79,9 @@ use super::metrics::{ClusterStats, MetricsSnapshot};
 use super::wire::{self, Frame, FrameType};
 use crate::compress::EncodedView;
 use crate::coordinator::{Metrics, Priority};
+use crate::faults::{
+    Backoff, Breaker, BreakerConfig, FaultInjector, Transition,
+};
 use crate::obs::ledger::Ledger;
 use crate::obs::slo::SloEngine;
 use crate::obs::{now_ns, FlightRecorder, ObsReport, TerminalKind, TraceRecord};
@@ -132,6 +151,23 @@ pub struct RouterConfig {
     /// router's burn over aggregated traffic is the cluster-level
     /// verdict an operator acts on.
     pub slo: Option<Arc<SloEngine>>,
+    /// Deterministic fault injector (`--chaos` / `ZEBRA_CHAOS`). The
+    /// router perturbs its *outbound* worker frames at the
+    /// `wire.router.w<idx>` sites; `None` injects nothing.
+    pub faults: Option<Arc<FaultInjector>>,
+    /// Per-worker circuit breaker tuning (threshold, probe window,
+    /// backoff cap). Breakers always run — with no faults configured
+    /// they simply never trip in a healthy cluster.
+    pub breaker: BreakerConfig,
+    /// Connect + read timeout for worker sockets. `None` (from
+    /// `--io-timeout-ms 0`) blocks forever, the pre-PR-10 behaviour.
+    pub io_timeout: Option<Duration>,
+    /// How long a dispatched request may sit unanswered before the
+    /// router reclaims and re-dispatches it. This is what turns a
+    /// *dropped* `Submit` frame (chaos, flaky LAN) into a retry
+    /// instead of a forever-stuck client: conservation. `None`
+    /// disables the sweep.
+    pub request_timeout: Option<Duration>,
 }
 
 impl RouterConfig {
@@ -149,6 +185,10 @@ impl RouterConfig {
             flight: None,
             ledger: None,
             slo: None,
+            faults: None,
+            breaker: BreakerConfig::default(),
+            io_timeout: Some(Duration::from_secs(30)),
+            request_timeout: Some(Duration::from_secs(10)),
         }
     }
 }
@@ -221,6 +261,16 @@ struct Link {
     pending: Mutex<HashMap<u64, Pending>>,
     pending_metrics: Mutex<HashMap<u64, Sender<ObsReport>>>,
     last_seen: Mutex<Instant>,
+    /// Circuit breaker over this worker's connection health. Trips
+    /// after `BreakerConfig::threshold` consecutive failures; while
+    /// Open the heartbeat loop does not redial at all, and a
+    /// Half-Open probe failure doubles the wait (`docs/robustness.md`).
+    breaker: Mutex<Breaker>,
+    /// Deterministic-jitter exponential backoff pacing the redials the
+    /// breaker admits.
+    backoff: Mutex<Backoff>,
+    /// Earliest `Inner::now_ms` instant the next redial may happen.
+    next_dial_ms: AtomicU64,
 }
 
 impl Link {
@@ -268,7 +318,20 @@ struct Inner {
     /// worker link) and `router.spill_ingest` (shipped `.zspill`
     /// validation + accounting).
     telemetry: Arc<Telemetry>,
+    /// Monotonic epoch for the breaker/backoff clocks — explicit
+    /// milliseconds, never wall time, so fault replays are stable.
+    t0: Instant,
+    /// Current brownout level (0 = none). Each level halves the share
+    /// of sampled traces the router actually records — shedding
+    /// observability overhead before shedding requests.
+    brownout: AtomicU32,
     shutdown: AtomicBool,
+}
+
+impl Inner {
+    fn now_ms(&self) -> u64 {
+        self.t0.elapsed().as_millis() as u64
+    }
 }
 
 /// A running router node.
@@ -302,10 +365,18 @@ impl Router {
         listener
             .set_nonblocking(true)
             .context("router listener nonblocking")?;
+        // Redial pacing: base = one heartbeat interval, capped by the
+        // breaker's backoff ceiling. The jitter seed folds in the chaos
+        // seed (when set) and the worker index, so a replayed chaos run
+        // reproduces the exact redial schedule too.
+        let chaos_seed =
+            cfg.faults.as_ref().map(|f| f.plan().seed).unwrap_or(0);
+        let backoff_base = (cfg.heartbeat_every.as_millis() as u64).max(1);
         let links = cfg
             .workers
             .iter()
-            .map(|addr| Link {
+            .enumerate()
+            .map(|(idx, addr)| Link {
                 addr: addr.clone(),
                 alive: AtomicBool::new(false),
                 outstanding: AtomicUsize::new(0),
@@ -314,6 +385,13 @@ impl Router {
                 pending: Mutex::new(HashMap::new()),
                 pending_metrics: Mutex::new(HashMap::new()),
                 last_seen: Mutex::new(Instant::now()),
+                breaker: Mutex::new(Breaker::new(cfg.breaker)),
+                backoff: Mutex::new(Backoff::new(
+                    backoff_base,
+                    cfg.breaker.max_backoff_ms.max(backoff_base),
+                    0x5eb2_a000 ^ chaos_seed ^ idx as u64,
+                )),
+                next_dial_ms: AtomicU64::new(0),
             })
             .collect();
         let inner = Arc::new(Inner {
@@ -329,6 +407,8 @@ impl Router {
             spill_frames_in: AtomicU64::new(0),
             spill_bytes_in: AtomicU64::new(0),
             telemetry: Arc::new(Telemetry::new()),
+            t0: Instant::now(),
+            brownout: AtomicU32::new(0),
             shutdown: AtomicBool::new(false),
         });
         for idx in 0..inner.links.len() {
@@ -429,6 +509,28 @@ impl Router {
         self.inner.telemetry.clone()
     }
 
+    /// Apply a brownout level (0 = none) from the SLO sampler: each
+    /// level halves the share of sampled traces the router records and
+    /// re-encodes, so sustained burn sheds observability overhead
+    /// before it sheds requests.
+    pub fn set_brownout(&self, level: u32) {
+        self.inner.brownout.store(level, Ordering::Relaxed);
+    }
+
+    /// Per-worker breaker view `(state code, transition count)`, in
+    /// worker order — the same numbers `gather_report` packs into the
+    /// `breaker.w<idx>` stages.
+    pub fn breaker_states(&self) -> Vec<(u64, u64)> {
+        self.inner
+            .links
+            .iter()
+            .map(|l| {
+                let b = l.breaker.lock().unwrap();
+                (b.state().code(), b.transitions())
+            })
+            .collect()
+    }
+
     /// Stop serving: closes worker connections and joins the router's
     /// own loops.
     pub fn shutdown(mut self) {
@@ -516,6 +618,12 @@ fn dispatch(
     let (trace_id, sampled) =
         wire::submit_trace(wire::CLUSTER_VERSION, &payload)
             .unwrap_or((0, false));
+    // Brownout trace thinning: level L keeps 1 of 2^L sampled traces
+    // (deterministic from the id, so a given request's verdict is
+    // stable across re-dispatches).
+    let level = inner.brownout.load(Ordering::Relaxed).min(63);
+    let sampled =
+        sampled && (level == 0 || trace_id & ((1u64 << level) - 1) == 0);
     if attempts >= inner.cfg.max_attempts {
         match last_fail {
             Some(FailCause::Shed { queued, detail }) => shed(
@@ -659,19 +767,88 @@ fn shed(
         .send(Frame { version: client.version, ..f }.encode());
 }
 
+/// Map a breaker transition onto its flight-recorder terminal kind
+/// and record it; transitions are also counted by the breaker itself
+/// and exported as the `breaker.w<idx>` stage / `zebra_breaker_*`
+/// Prometheus families.
+fn breaker_event(inner: &Inner, idx: usize, t: Transition) {
+    let Some(f) = &inner.cfg.flight else { return };
+    let (kind, what) = match t {
+        Transition::Opened => (TerminalKind::BreakerOpen, "opened"),
+        Transition::Reopened => {
+            (TerminalKind::BreakerOpen, "reopened (probe failed)")
+        }
+        Transition::HalfOpened => {
+            (TerminalKind::BreakerHalfOpen, "half-open (probing)")
+        }
+        Transition::Closed => (TerminalKind::BreakerClosed, "closed"),
+    };
+    f.record_event(
+        0,
+        kind,
+        &format!(
+            "worker {idx} ({}) breaker {what}",
+            inner.links[idx].addr
+        ),
+    );
+}
+
+/// Record a failed dial attempt on worker `idx`: feed the breaker and
+/// push the next attempt out by the (deterministically jittered)
+/// exponential backoff.
+fn note_dial_failure(inner: &Arc<Inner>, idx: usize) {
+    let link = &inner.links[idx];
+    let now = inner.now_ms();
+    if let Some(t) = link.breaker.lock().unwrap().on_failure(now) {
+        breaker_event(inner, idx, t);
+    }
+    let delay = link.backoff.lock().unwrap().next_delay_ms();
+    link.next_dial_ms
+        .store(now.saturating_add(delay), Ordering::SeqCst);
+}
+
+/// `TcpStream::connect` with an optional bound (`--io-timeout-ms`): a
+/// black-holed worker address must not wedge the heartbeat loop.
+fn dial(addr: &str, timeout: Option<Duration>) -> std::io::Result<TcpStream> {
+    match timeout {
+        Some(t) => {
+            use std::net::ToSocketAddrs;
+            let sa = addr.to_socket_addrs()?.next().ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::NotFound,
+                    "address resolves to nothing",
+                )
+            })?;
+            TcpStream::connect_timeout(&sa, t)
+        }
+        None => TcpStream::connect(addr),
+    }
+}
+
 /// Open (or reopen) the TCP connection to worker `idx`. Returns false
-/// if the worker is unreachable; the heartbeat loop retries later.
+/// if the worker is unreachable; the heartbeat loop retries later,
+/// paced by the link's backoff and gated by its breaker.
 fn connect_link(inner: &Arc<Inner>, idx: usize) -> bool {
     let link = &inner.links[idx];
-    let stream = match TcpStream::connect(&link.addr) {
+    let stream = match dial(&link.addr, inner.cfg.io_timeout) {
         Ok(s) => s,
-        Err(_) => return false,
+        Err(_) => {
+            note_dial_failure(inner, idx);
+            return false;
+        }
     };
     let _ = stream.set_nodelay(true);
     let rd = match stream.try_clone() {
         Ok(s) => s,
-        Err(_) => return false,
+        Err(_) => {
+            note_dial_failure(inner, idx);
+            return false;
+        }
     };
+    // A read timeout (surfaced as `FrameError::is_timeout`) lets the
+    // link reader distinguish "idle worker" from "worker gone silent
+    // mid-request" instead of blocking forever.
+    let _ = rd.set_read_timeout(inner.cfg.io_timeout);
     let (tx, rx) = channel::<Vec<u8>>();
     *link.out.lock().unwrap() = Some(tx);
     *link.stream.lock().unwrap() = stream.try_clone().ok();
@@ -686,11 +863,29 @@ fn connect_link(inner: &Arc<Inner>, idx: usize) -> bool {
         link.outstanding.store(pending.len(), Ordering::SeqCst);
     }
     link.alive.store(true, Ordering::SeqCst);
+    // Dial succeeded: a Half-Open probe (or a plain Open that served
+    // its time) closes the breaker, and the backoff clock resets.
+    if let Some(t) = link.breaker.lock().unwrap().on_success() {
+        breaker_event(inner, idx, t);
+    }
+    link.backoff.lock().unwrap().reset();
+    link.next_dial_ms.store(0, Ordering::SeqCst);
     {
         let inner = inner.clone();
+        // Chaos taps the outbound frames here — drop/delay/corrupt/
+        // truncate at the `wire.router.w<idx>` site, after encoding
+        // and right before the socket, exactly where a flaky LAN bites.
+        let faults = inner.cfg.faults.clone();
+        let site = format!("wire.router.w{idx}");
         std::thread::spawn(move || {
             let mut stream = stream;
             while let Ok(bytes) = rx.recv() {
+                let mut bytes = bytes;
+                if let Some(fi) = &faults {
+                    if !fi.on_wire_frame(&site, &mut bytes) {
+                        continue; // injected drop
+                    }
+                }
                 if stream.write_all(&bytes).is_err() {
                     fail_link(&inner, idx);
                     break;
@@ -714,6 +909,14 @@ fn fail_link(inner: &Arc<Inner>, idx: usize) {
         return;
     }
     link.sever();
+    // A traffic failure is a breaker strike too (threshold consecutive
+    // strikes trip it to Open and redials pause for the backoff).
+    {
+        let now = inner.now_ms();
+        if let Some(t) = link.breaker.lock().unwrap().on_failure(now) {
+            breaker_event(inner, idx, t);
+        }
+    }
     link.pending_metrics.lock().unwrap().clear();
     let orphans: Vec<Pending> = {
         // Drain and zero the mirror in one critical section (`Link`
@@ -763,6 +966,21 @@ fn link_reader(inner: Arc<Inner>, idx: usize, mut stream: TcpStream) {
     loop {
         let frame = match Frame::read_from(&mut stream) {
             Ok(f) => f,
+            // A read timeout on an *idle* link is just a quiet worker
+            // (keep waiting — heartbeats police staleness); with
+            // requests in flight it means the worker went silent
+            // mid-work, which is a failure. Every other stream error
+            // fails the link immediately.
+            Err(e) if e.is_timeout() => {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if link.in_flight() == 0 {
+                    continue;
+                }
+                fail_link(&inner, idx);
+                return;
+            }
             Err(_) => {
                 fail_link(&inner, idx);
                 return;
@@ -892,7 +1110,21 @@ fn heartbeat_loop(inner: Arc<Inner>) {
         for idx in 0..inner.links.len() {
             let link = &inner.links[idx];
             if !link.alive.load(Ordering::SeqCst) {
-                connect_link(&inner, idx);
+                // Dead link: the breaker and backoff pace the redial.
+                // An Open breaker first has to serve out its window
+                // (poll -> Half-Open), and even an admitting breaker
+                // waits for the backoff deadline — so a crashed worker
+                // costs ever-fewer connect attempts, not a 250 ms
+                // hammer.
+                let now = inner.now_ms();
+                if let Some(t) = link.breaker.lock().unwrap().poll(now) {
+                    breaker_event(&inner, idx, t);
+                }
+                let admits = link.breaker.lock().unwrap().admits();
+                if admits && now >= link.next_dial_ms.load(Ordering::SeqCst)
+                {
+                    connect_link(&inner, idx);
+                }
                 continue;
             }
             let stale = link.last_seen.lock().unwrap().elapsed()
@@ -900,6 +1132,9 @@ fn heartbeat_loop(inner: Arc<Inner>) {
             if stale {
                 fail_link(&inner, idx);
                 continue;
+            }
+            if let Some(timeout) = inner.cfg.request_timeout {
+                sweep_stale(&inner, idx, timeout);
             }
             seq += 1;
             let hb = Frame::new(FrameType::Heartbeat, seq, Vec::new());
@@ -912,6 +1147,55 @@ fn heartbeat_loop(inner: Arc<Inner>) {
             }
         }
         std::thread::sleep(inner.cfg.heartbeat_every);
+    }
+}
+
+/// Reclaim requests that have sat unanswered on a *live* link past the
+/// request timeout and re-dispatch them. This is the conservation
+/// backstop for silently *dropped* frames (chaos `wire.drop`, flaky
+/// LAN): the worker never saw the request, so nothing else will ever
+/// answer it. A late answer after reclaim finds no pending entry and
+/// is discarded — inference is deterministic and side-effect-free, so
+/// the duplicate execution is harmless.
+fn sweep_stale(inner: &Arc<Inner>, idx: usize, timeout: Duration) {
+    let link = &inner.links[idx];
+    let stale: Vec<Pending> = {
+        let mut pending = link.pending.lock().unwrap();
+        let ids: Vec<u64> = pending
+            .iter()
+            .filter(|(_, p)| p.sent_at.elapsed() > timeout)
+            .map(|(&id, _)| id)
+            .collect();
+        let stale: Vec<Pending> =
+            ids.iter().filter_map(|id| pending.remove(id)).collect();
+        // Mirror update inside the critical section (`Link` invariant).
+        link.outstanding.fetch_sub(stale.len(), Ordering::SeqCst);
+        stale
+    };
+    for p in stale {
+        inner.retries.fetch_add(1, Ordering::Relaxed);
+        if let Some(f) = &inner.cfg.flight {
+            f.record_event(
+                p.trace_id,
+                TerminalKind::Redispatch,
+                &format!(
+                    "request unanswered by {} for {:?}; retrying",
+                    link.addr, timeout
+                ),
+            );
+        }
+        dispatch(
+            inner,
+            p.payload,
+            p.key,
+            p.priority,
+            p.attempts,
+            p.client,
+            Some(FailCause::Worker(format!(
+                "request timed out after {timeout:?} on {}",
+                link.addr
+            ))),
+        );
     }
 }
 
@@ -971,12 +1255,24 @@ fn gather_report(inner: &Arc<Inner>) -> ObsReport {
     }
     // Router-side link gauges for every configured worker, dead ones
     // included (that absence is exactly what the dashboard must show).
+    // The breaker rides the same reserved-stage lane: state code in
+    // `nanos`, lifetime transitions in `calls` — what `parse_breakers`
+    // reads back out as `zebra_breaker_state` / `_transitions_total`.
     for (idx, link) in inner.links.iter().enumerate() {
         telemetry.stages.insert(
             format!("cluster.w{idx}.link"),
             StageStats {
                 nanos: link.in_flight() as u64,
                 calls: link.alive.load(Ordering::SeqCst) as u64,
+                bytes: 0,
+            },
+        );
+        let b = link.breaker.lock().unwrap();
+        telemetry.stages.insert(
+            format!("breaker.w{idx}"),
+            StageStats {
+                nanos: b.state().code(),
+                calls: b.transitions(),
                 bytes: 0,
             },
         );
@@ -1035,6 +1331,11 @@ fn client_conn(inner: Arc<Inner>, stream: TcpStream) {
         Ok(s) => s,
         Err(_) => return,
     };
+    // Same hygiene as the worker links: a silent client must not pin
+    // this thread forever. Timeouts between frames just loop (clients
+    // are legitimately idle between requests); the loop re-checks the
+    // shutdown flag each pass.
+    let _ = rd.set_read_timeout(inner.cfg.io_timeout);
     let (out_tx, out_rx) = channel::<Vec<u8>>();
     let writer = std::thread::spawn(move || {
         let mut stream = stream;
@@ -1049,6 +1350,7 @@ fn client_conn(inner: Arc<Inner>, stream: TcpStream) {
     while !inner.shutdown.load(Ordering::SeqCst) {
         let frame = match Frame::read_from(&mut rd) {
             Ok(f) => f,
+            Err(e) if e.is_timeout() => continue,
             Err(e) => {
                 if !e.is_clean_eof() && !inner.shutdown.load(Ordering::SeqCst)
                 {
@@ -1149,6 +1451,22 @@ fn client_conn(inner: Arc<Inner>, stream: TcpStream) {
                         }
                     }
                     Err(e) => {
+                        // Structured outcome, not a silent eprintln: a
+                        // corrupt spill at ingest is a terminal event
+                        // worth a flight dump (the worker still holds
+                        // the dense tensor and re-ships or recomputes
+                        // — `docs/robustness.md`).
+                        if let Some(f) = &inner.cfg.flight {
+                            f.record_event(
+                                0,
+                                TerminalKind::SpillCorrupt,
+                                &format!(
+                                    "router dropped corrupt shipped \
+                                     spill ({} bytes): {e}",
+                                    frame.payload.len()
+                                ),
+                            );
+                        }
                         eprintln!(
                             "[cluster-router] dropping corrupt shipped \
                              spill: {e}"
@@ -1210,5 +1528,14 @@ mod tests {
             Router::start(RouterConfig::new(Vec::new()), "127.0.0.1:0")
                 .is_err()
         );
+    }
+
+    #[test]
+    fn config_defaults_are_self_healing() {
+        let cfg = RouterConfig::new(vec!["a:1".into(), "b:2".into()]);
+        assert!(cfg.faults.is_none());
+        assert_eq!(cfg.breaker, BreakerConfig::default());
+        assert_eq!(cfg.io_timeout, Some(Duration::from_secs(30)));
+        assert_eq!(cfg.request_timeout, Some(Duration::from_secs(10)));
     }
 }

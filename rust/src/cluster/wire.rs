@@ -310,6 +310,17 @@ impl FrameError {
         matches!(self, FrameError::Io(e)
             if e.kind() == std::io::ErrorKind::UnexpectedEof)
     }
+
+    /// True when the error is a socket read-timeout expiry (the
+    /// `--io-timeout-ms` hygiene timers), not data corruption — an
+    /// idle-but-healthy peer, distinguishable from a wedged one only
+    /// by whether work is outstanding. Both `WouldBlock` and
+    /// `TimedOut` appear depending on platform.
+    pub fn is_timeout(&self) -> bool {
+        matches!(self, FrameError::Io(e)
+            if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut)
+    }
 }
 
 impl std::fmt::Display for FrameError {
@@ -899,6 +910,20 @@ mod tests {
         assert!(err.is_clean_eof(), "{err}");
         let err = Frame::parse(&[1, 2, 3]).unwrap_err();
         assert!(!err.is_clean_eof());
+    }
+
+    #[test]
+    fn timeouts_are_distinguishable_from_corruption() {
+        for kind in
+            [std::io::ErrorKind::WouldBlock, std::io::ErrorKind::TimedOut]
+        {
+            let err = FrameError::Io(std::io::Error::new(kind, "slow"));
+            assert!(err.is_timeout(), "{err}");
+            assert!(!err.is_clean_eof());
+        }
+        assert!(!Frame::parse(&[1, 2, 3]).unwrap_err().is_timeout());
+        let mut cursor = std::io::Cursor::new(Vec::<u8>::new());
+        assert!(!Frame::read_from(&mut cursor).unwrap_err().is_timeout());
     }
 
     fn sample_image(rng: &mut Rng) -> Tensor {

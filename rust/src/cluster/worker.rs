@@ -18,6 +18,14 @@
 //! `.zspill` frame to an upstream pump that ships it as a `SpillShip`
 //! wire frame — the distributed analogue of the paper's DRAM-bandwidth
 //! accounting, metered identically on both ends.
+//!
+//! Robustness (PR 10, `rust/docs/robustness.md`): inbound connections
+//! get the server's read timeout (`--io-timeout-ms`; timeouts between
+//! frames just loop — clients are legitimately idle), outbound frames
+//! pass the chaos injector's `wire.worker` site when one is
+//! configured, and the `worker.crash_after=N` fault kills this node
+//! abruptly after its N-th `Submit` — the router-side failover and
+//! breaker machinery's test dummy.
 
 use std::collections::HashMap;
 use std::io::Write;
@@ -48,6 +56,10 @@ const UPSTREAM_RETRY: Duration = Duration::from_millis(200);
 /// `kill` can sever them; each entry is pruned when its connection's
 /// reader exits, so long-lived nodes don't accumulate dead fds.
 type ConnTable = Arc<Mutex<Vec<(u64, TcpStream)>>>;
+
+/// The abrupt-death closure the chaos `worker.crash_after` fault
+/// fires (shared by every connection thread).
+type CrashFn = Arc<dyn Fn() + Send + Sync>;
 
 /// A running worker node.
 pub struct WorkerNode {
@@ -107,7 +119,34 @@ impl WorkerNode {
             .set_nonblocking(true)
             .context("worker listener nonblocking")?;
         let shutdown = Arc::new(AtomicBool::new(false));
-        let conns = Arc::new(Mutex::new(Vec::new()));
+        let conns: ConnTable = Arc::new(Mutex::new(Vec::new()));
+        // The chaos `worker.crash_after` fault dies like a real crash:
+        // intake closed, flight ring dumped (the post-mortem), every
+        // connection severed mid-stream — peers observe a reset, not a
+        // goodbye.
+        let crash: CrashFn = {
+            let server = server.clone();
+            let sd = shutdown.clone();
+            let conns = conns.clone();
+            Arc::new(move || {
+                eprintln!(
+                    "[cluster-worker] chaos crash_after fired; dying \
+                     abruptly"
+                );
+                sd.store(true, Ordering::SeqCst);
+                server.close();
+                if let Some(f) = &server.flight {
+                    if let Some(Err(e)) = f.dump() {
+                        eprintln!(
+                            "[cluster-worker] flight dump failed: {e}"
+                        );
+                    }
+                }
+                for (_, c) in conns.lock().unwrap().drain(..) {
+                    let _ = c.shutdown(std::net::Shutdown::Both);
+                }
+            })
+        };
         if let Some((peer, rx)) = upstream {
             let sd = shutdown.clone();
             let st = server.telemetry.stage("wire.ship_upstream");
@@ -118,7 +157,7 @@ impl WorkerNode {
             let sd = shutdown.clone();
             let conns = conns.clone();
             std::thread::spawn(move || {
-                accept_loop(listener, server, image_hw, sd, conns)
+                accept_loop(listener, server, image_hw, sd, conns, crash)
             })
         };
         Ok(WorkerNode {
@@ -192,6 +231,7 @@ fn accept_loop(
     image_hw: usize,
     shutdown: Arc<AtomicBool>,
     conns: ConnTable,
+    crash: CrashFn,
 ) {
     let mut next_conn = 0u64;
     while !shutdown.load(Ordering::SeqCst) {
@@ -206,8 +246,9 @@ fn accept_loop(
                 let server = server.clone();
                 let sd = shutdown.clone();
                 let conns = conns.clone();
+                let crash = crash.clone();
                 std::thread::spawn(move || {
-                    serve_conn(server, image_hw, stream, sd);
+                    serve_conn(server, image_hw, stream, sd, crash);
                     // The connection is over: drop our severing handle
                     // so long-lived nodes don't accumulate dead fds.
                     conns.lock().unwrap().retain(|(id, _)| *id != conn_id);
@@ -242,13 +283,20 @@ fn serve_conn(
     image_hw: usize,
     stream: TcpStream,
     shutdown: Arc<AtomicBool>,
+    crash: CrashFn,
 ) {
     let mut rd = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
     };
+    // Socket hygiene: a silent peer must not pin this reader forever.
+    // Timeouts between frames just loop (peers are legitimately idle
+    // between requests) — the loop re-checks the shutdown flag.
+    let _ = rd.set_read_timeout(server.io_timeout);
     let (out_tx, out_rx) = channel::<Vec<u8>>();
-    let writer = std::thread::spawn(move || writer_loop(stream, out_rx));
+    let faults = server.faults.clone();
+    let writer =
+        std::thread::spawn(move || writer_loop(stream, out_rx, faults));
     let idmap: Arc<Mutex<HashMap<u64, PendingResp>>> =
         Arc::new(Mutex::new(HashMap::new()));
     let (resp_tx, resp_rx) = channel::<Response>();
@@ -265,6 +313,7 @@ fn serve_conn(
     while !shutdown.load(Ordering::SeqCst) {
         let frame = match Frame::read_from(&mut rd) {
             Ok(f) => f,
+            Err(e) if e.is_timeout() => continue,
             Err(e) => {
                 if !e.is_clean_eof() && !shutdown.load(Ordering::SeqCst) {
                     eprintln!("[cluster-worker] closing connection: {e}");
@@ -274,10 +323,22 @@ fn serve_conn(
         };
         st_handle.add_bytes(frame.payload.len() as u64);
         let _t = st_handle.time();
+        let is_submit = frame.ty == FrameType::Submit;
         let reply = handle_frame(&server, image_hw, &idmap, &resp_tx, frame);
         if let Some(bytes) = reply {
             if out_tx.send(bytes).is_err() {
                 break;
+            }
+        }
+        // Chaos `worker.crash_after=N`: die abruptly once the N-th
+        // submit has been handled — the request may or may not have
+        // been answered, exactly like a real mid-stream crash.
+        if is_submit {
+            if let Some(fi) = &server.faults {
+                if fi.crash_now() {
+                    crash();
+                    break;
+                }
             }
         }
     }
@@ -401,8 +462,21 @@ fn error_frame(version: u16, id: u64, msg: &str) -> Vec<u8> {
     Frame { version, ..f }.encode()
 }
 
-fn writer_loop(mut stream: TcpStream, rx: Receiver<Vec<u8>>) {
+fn writer_loop(
+    mut stream: TcpStream,
+    rx: Receiver<Vec<u8>>,
+    faults: Option<Arc<crate::faults::FaultInjector>>,
+) {
     while let Ok(bytes) = rx.recv() {
+        // Chaos taps outbound frames at the `wire.worker` site —
+        // responses, heartbeat echoes, and metrics alike, the same
+        // way a flaky NIC would not discriminate.
+        let mut bytes = bytes;
+        if let Some(fi) = &faults {
+            if !fi.on_wire_frame("wire.worker", &mut bytes) {
+                continue; // injected drop
+            }
+        }
         if stream.write_all(&bytes).is_err() {
             break;
         }

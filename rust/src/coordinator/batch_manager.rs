@@ -41,7 +41,7 @@
 //! size.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -221,6 +221,11 @@ pub struct BatchManager<T> {
     /// Executed slots handed out so far (denominator turning the
     /// stage's accumulated nanoseconds into per-slot latency).
     dispatched_slots: AtomicU64,
+    /// Brownout pressure (0 = none), set by the SLO sampler when its
+    /// burn policy fires: each level shaves another slice off the
+    /// Low/Normal admission caps (see [`BatchManager::browned_cap`]),
+    /// shedding best-effort load progressively instead of falling over.
+    pressure: AtomicU32,
 }
 
 impl<T> BatchManager<T> {
@@ -247,7 +252,37 @@ impl<T> BatchManager<T> {
             max_batch,
             exec_stage: None,
             dispatched_slots: AtomicU64::new(0),
+            pressure: AtomicU32::new(0),
         }
+    }
+
+    /// Set the brownout pressure level (0 restores full caps).
+    pub fn set_pressure(&self, level: u32) {
+        self.pressure.store(level, Ordering::Relaxed);
+    }
+
+    /// The brownout pressure level currently applied to admission.
+    pub fn pressure(&self) -> u32 {
+        self.pressure.load(Ordering::Relaxed)
+    }
+
+    /// The class's admission cap after brownout pressure: every level
+    /// takes another 25% off the `Low` cap and 15% off the `Normal`
+    /// cap (never below 1 — brownout degrades, it does not lock a
+    /// class out); `High` is never browned out.
+    fn browned_cap(&self, priority: Priority) -> usize {
+        let cap = priority.admission_cap(self.max_queue);
+        let level = self.pressure.load(Ordering::Relaxed) as usize;
+        if level == 0 {
+            return cap;
+        }
+        let shave = match priority {
+            Priority::Low => 25,
+            Priority::Normal => 15,
+            Priority::High => 0,
+        };
+        let keep = 100usize.saturating_sub(shave * level);
+        (cap * keep / 100).max(1)
     }
 
     /// Cap batches below the largest exported size (0 keeps the
@@ -292,7 +327,7 @@ impl<T> BatchManager<T> {
         if st.closed {
             return Admission::Closed;
         }
-        if st.total >= priority.admission_cap(self.max_queue) {
+        if st.total >= self.browned_cap(priority) {
             return Admission::Shed { queued: st.total };
         }
         let window = match deadline {
@@ -587,6 +622,51 @@ mod tests {
             m.push(0, Priority::High, None, 99),
             Admission::Shed { queued: 8 }
         );
+    }
+
+    #[test]
+    fn brownout_pressure_shrinks_low_and_normal_caps_only() {
+        let m = mgr(vec![1, 16], 60_000, 8);
+        // Level 1: Low keeps 75% of 4 = 3, Normal 85% of 7 = 5, High
+        // keeps all 8.
+        m.set_pressure(1);
+        assert_eq!(m.pressure(), 1);
+        for i in 0..3 {
+            assert_eq!(m.push(0, Priority::Low, None, i), Admission::Accepted);
+        }
+        assert_eq!(
+            m.push(0, Priority::Low, None, 99),
+            Admission::Shed { queued: 3 }
+        );
+        for i in 0..2 {
+            assert_eq!(
+                m.push(0, Priority::Normal, None, 10 + i),
+                Admission::Accepted
+            );
+        }
+        assert_eq!(
+            m.push(0, Priority::Normal, None, 99),
+            Admission::Shed { queued: 5 }
+        );
+        // High is never browned out: it fills to the full capacity.
+        for i in 0..3 {
+            assert_eq!(
+                m.push(0, Priority::High, None, 20 + i),
+                Admission::Accepted
+            );
+        }
+        assert_eq!(
+            m.push(0, Priority::High, None, 99),
+            Admission::Shed { queued: 8 }
+        );
+        // Recovery restores the un-browned caps; extreme levels clamp
+        // at 1 instead of locking a class out.
+        m.set_pressure(0);
+        assert_eq!(Priority::Low.admission_cap(8), 4);
+        m.set_pressure(100);
+        assert_eq!(m.browned_cap(Priority::Low), 1);
+        assert_eq!(m.browned_cap(Priority::Normal), 1);
+        assert_eq!(m.browned_cap(Priority::High), 8);
     }
 
     #[test]

@@ -27,6 +27,7 @@ use super::batch_manager::{Admission, BatchManager, Priority};
 use super::metrics::Metrics;
 use crate::backend::{InferenceBackend, ModelOutput};
 use crate::compress::{self, Codec, CodecId, SpillBuf};
+use crate::faults::FaultInjector;
 use crate::obs::ledger::{Ledger, LedgerCell};
 use crate::obs::slo::{SloEngine, SloInput};
 use crate::obs::{now_ns, FlightRecorder, TerminalKind, TraceRecord};
@@ -374,6 +375,18 @@ pub struct ServerConfig {
     /// ([`Server::slo_input`]) and its status rides the telemetry
     /// snapshot next to the ledger. `None` = no objectives evaluated.
     pub slo: Option<Arc<SloEngine>>,
+    /// Deterministic fault injector (`--chaos` / `ZEBRA_CHAOS`,
+    /// `rust/docs/robustness.md`). The worker loop honors the
+    /// `worker.stall` / `worker.slow` sites around execution and the
+    /// `spill.ship` site on shipped `.zspill` frames (with a decode
+    /// self-check + dense re-encode fallback); the cluster wire layer
+    /// reads the same injector for its own sites. `None` = no faults.
+    pub faults: Option<Arc<FaultInjector>>,
+    /// Read timeout applied by the TCP wire layer to this node's
+    /// inbound connections (`--io-timeout-ms`; `None` = unbounded).
+    /// Lives here so `WorkerNode::attach` can read it off a started
+    /// server without another plumbing path.
+    pub io_timeout: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -388,6 +401,8 @@ impl Default for ServerConfig {
             flight: None,
             ledger: None,
             slo: None,
+            faults: None,
+            io_timeout: Some(Duration::from_secs(30)),
         }
     }
 }
@@ -408,6 +423,11 @@ pub struct Server {
     pub ledger: Option<Arc<Ledger>>,
     /// The node's SLO engine, when configured.
     pub slo: Option<Arc<SloEngine>>,
+    /// The node's fault injector, when chaos is configured (shared
+    /// with the wire layer for its `wire.worker` / crash sites).
+    pub faults: Option<Arc<FaultInjector>>,
+    /// Read timeout the wire layer applies to inbound connections.
+    pub io_timeout: Option<Duration>,
     workers: Vec<std::thread::JoinHandle<()>>,
     next_id: std::sync::atomic::AtomicU64,
 }
@@ -464,8 +484,9 @@ impl Server {
             let t = telemetry.clone();
             let f = cfg.flight.clone();
             let lc = ship_cell.clone();
+            let fi = cfg.faults.clone();
             workers.push(std::thread::spawn(move || {
-                worker_loop(b, e, m, s, sink, t, f, lc)
+                worker_loop(b, e, m, s, sink, t, f, lc, fi)
             }));
         }
         Server {
@@ -475,9 +496,24 @@ impl Server {
             flight: cfg.flight,
             ledger: cfg.ledger,
             slo: cfg.slo,
+            faults: cfg.faults,
+            io_timeout: cfg.io_timeout,
             workers,
             next_id: std::sync::atomic::AtomicU64::new(0),
         }
+    }
+
+    /// Apply a brownout level (0 = none) from the SLO sampler: the
+    /// batch manager progressively shrinks the Low/Normal admission
+    /// caps (High is never browned out), shedding best-effort load
+    /// first while the burn lasts.
+    pub fn set_brownout(&self, level: u32) {
+        self.manager.set_pressure(level);
+    }
+
+    /// The brownout level currently applied to admission.
+    pub fn brownout_level(&self) -> u32 {
+        self.manager.pressure()
     }
 
     /// The node's telemetry snapshot with the observability planes
@@ -625,6 +661,7 @@ fn worker_loop(
     telemetry: Arc<Telemetry>,
     flight: Option<Arc<FlightRecorder>>,
     ship_cell: Option<Arc<LedgerCell>>,
+    faults: Option<Arc<FaultInjector>>,
 ) {
     let hw = exec.image_hw();
     // Stage handles resolved once — recording inside the loop is two
@@ -716,17 +753,61 @@ fn worker_loop(
                 if let Some(sink) = &spill_sink {
                     // A gone sink (upstream pump shut down) is not a
                     // serving error; the metering above still counts.
-                    let _ = sink.send(spill_buf.view().to_bytes());
+                    let mut bytes = spill_buf.view().to_bytes();
+                    // Chaos `spill.corrupt`: a bit flip *after* the
+                    // checksum was computed — the shape of silent disk
+                    // or DMA corruption. The worker still holds the
+                    // dense batch tensor, so a failed decode self-check
+                    // downgrades to a structured SpillCorrupt outcome
+                    // and re-encodes the same data dense — responses
+                    // are never on this path, so logits are unaffected
+                    // (`docs/robustness.md`).
+                    let corrupted = faults
+                        .as_ref()
+                        .map(|fi| fi.corrupt_spill(&mut bytes))
+                        .unwrap_or(false);
+                    if corrupted && compress::decode_frame(&bytes).is_err() {
+                        if let Some(f) = &flight {
+                            f.record_event(
+                                0,
+                                TerminalKind::SpillCorrupt,
+                                &format!(
+                                    "spill frame failed decode self-check \
+                                     ({} bytes); re-shipping dense",
+                                    bytes.len()
+                                ),
+                            );
+                        }
+                        bytes = compress::from_id(CodecId::Dense, 1)
+                            .expect("dense codec always constructs")
+                            .encode(&x)
+                            .to_bytes();
+                    }
+                    let _ = sink.send(bytes);
                 }
                 len / exec_size.max(1) as u64
             }
             None => 0,
         };
+        // Chaos `worker.stall`: a fixed pause before execution (GC
+        // pause / page-fault storm shape).
+        if let Some(d) = faults.as_ref().and_then(|fi| fi.stall()) {
+            std::thread::sleep(d);
+        }
         let exec_start_ns = if any_traced { now_ns() } else { 0 };
+        let exec_t0 = Instant::now();
         let result = {
             let _t = st_execute.time();
             exec.execute(&x)
         };
+        // Chaos `worker.slow`: stretch the measured execution by the
+        // drawn multiplier (thermal throttling / noisy-neighbor shape)
+        // — inside the telemetry window would distort the batch
+        // manager's latency-driven sizing, so the stretch lands after
+        // the stage scope closes.
+        if let Some(mult) = faults.as_ref().and_then(|fi| fi.slow_mult()) {
+            std::thread::sleep(exec_t0.elapsed() * mult.saturating_sub(1));
+        }
         let exec_end_ns = if any_traced { now_ns() } else { 0 };
         match result {
             Ok(out) => {

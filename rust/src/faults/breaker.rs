@@ -1,0 +1,444 @@
+//! Per-worker circuit breaker and deterministic exponential backoff —
+//! the self-healing half of the chaos engine (`rust/docs/robustness.md`).
+//!
+//! The breaker is a three-state machine over *consecutive* failures:
+//!
+//! ```text
+//!            >= threshold failures
+//!   Closed ──────────────────────────> Open
+//!     ^                                  │ probe interval elapses
+//!     │ probe succeeds                   v
+//!     └─────────────────────────── Half-Open
+//!                                        │ probe fails
+//!                                        └──> Open (backoff doubled,
+//!                                             capped at max_backoff)
+//! ```
+//!
+//! Time is an explicit `now_ms` argument on every method — the breaker
+//! holds no clock, so property tests (and replay) drive it
+//! deterministically. The router feeds it a monotonic
+//! milliseconds-since-start counter.
+
+use crate::util::prng::Rng;
+
+/// Breaker tuning. `threshold` consecutive failures open the breaker;
+/// `probe_ms` is the first Open interval; each Half-Open failure
+/// doubles the interval up to `max_backoff_ms`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BreakerConfig {
+    /// Consecutive failures that trip Closed -> Open.
+    pub threshold: u32,
+    /// First Open interval before a Half-Open probe is allowed (ms).
+    pub probe_ms: u64,
+    /// Cap on the doubled Open interval (ms).
+    pub max_backoff_ms: u64,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            threshold: 3,
+            probe_ms: 1_000,
+            max_backoff_ms: 30_000,
+        }
+    }
+}
+
+/// The three breaker states. Wire/scrape code is stable:
+/// Closed=0, Open=1, HalfOpen=2 (`zebra_breaker_state`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+impl BreakerState {
+    /// Stable numeric code for the `zebra_breaker_state` gauge.
+    pub fn code(self) -> u64 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::Open => 1,
+            BreakerState::HalfOpen => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+/// A state transition the caller should surface (flight event,
+/// transition counter). `Reopened` is Half-Open -> Open with the
+/// backoff doubled; `Opened` is the initial Closed -> Open trip.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transition {
+    Opened,
+    HalfOpened,
+    Closed,
+    Reopened,
+}
+
+/// Circuit breaker over one worker link. All methods are cheap and
+/// non-blocking; the caller serializes access (the router keeps one
+/// behind the link's mutex).
+#[derive(Debug, Clone)]
+pub struct Breaker {
+    cfg: BreakerConfig,
+    state: BreakerState,
+    /// Consecutive failures while Closed.
+    failures: u32,
+    /// When the current Open interval started (caller's ms clock).
+    opened_at_ms: u64,
+    /// Current Open interval; doubles on each Half-Open failure.
+    backoff_ms: u64,
+    transitions: u64,
+}
+
+impl Breaker {
+    pub fn new(cfg: BreakerConfig) -> Breaker {
+        let cfg = BreakerConfig {
+            threshold: cfg.threshold.max(1),
+            probe_ms: cfg.probe_ms.max(1),
+            max_backoff_ms: cfg.max_backoff_ms.max(cfg.probe_ms.max(1)),
+        };
+        Breaker {
+            backoff_ms: cfg.probe_ms,
+            cfg,
+            state: BreakerState::Closed,
+            failures: 0,
+            opened_at_ms: 0,
+            transitions: 0,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// Total state transitions (the `zebra_breaker_transitions_total`
+    /// counter).
+    pub fn transitions(&self) -> u64 {
+        self.transitions
+    }
+
+    /// Current Open interval (exposed for tests and reports).
+    pub fn backoff_ms(&self) -> u64 {
+        self.backoff_ms
+    }
+
+    /// May the caller attempt work (a dial, a dispatch) right now?
+    /// Closed and Half-Open admit; Open refuses until [`Breaker::poll`]
+    /// expires the interval.
+    pub fn admits(&self) -> bool {
+        self.state != BreakerState::Open
+    }
+
+    /// Record a success. Half-Open -> Closed (the probe worked; backoff
+    /// resets); Closed just clears the consecutive-failure count.
+    pub fn on_success(&mut self) -> Option<Transition> {
+        self.failures = 0;
+        match self.state {
+            BreakerState::HalfOpen => {
+                self.state = BreakerState::Closed;
+                self.backoff_ms = self.cfg.probe_ms;
+                self.transitions += 1;
+                Some(Transition::Closed)
+            }
+            // Open admits no work, so a success here means the caller
+            // raced a poll; treat it as the Half-Open success.
+            BreakerState::Open => {
+                self.state = BreakerState::Closed;
+                self.backoff_ms = self.cfg.probe_ms;
+                self.transitions += 1;
+                Some(Transition::Closed)
+            }
+            BreakerState::Closed => None,
+        }
+    }
+
+    /// Record a failure at `now_ms`. Closed counts toward the
+    /// threshold; Half-Open re-opens with the interval doubled
+    /// (capped); Open is already refusing and absorbs it.
+    pub fn on_failure(&mut self, now_ms: u64) -> Option<Transition> {
+        match self.state {
+            BreakerState::Closed => {
+                self.failures += 1;
+                if self.failures >= self.cfg.threshold {
+                    self.trip(now_ms, self.cfg.probe_ms);
+                    Some(Transition::Opened)
+                } else {
+                    None
+                }
+            }
+            BreakerState::HalfOpen => {
+                let doubled = self
+                    .backoff_ms
+                    .saturating_mul(2)
+                    .min(self.cfg.max_backoff_ms);
+                self.trip(now_ms, doubled);
+                Some(Transition::Reopened)
+            }
+            BreakerState::Open => None,
+        }
+    }
+
+    /// Advance time: an Open breaker whose interval has elapsed moves
+    /// to Half-Open (one probe is now admitted).
+    pub fn poll(&mut self, now_ms: u64) -> Option<Transition> {
+        if self.state == BreakerState::Open
+            && now_ms.saturating_sub(self.opened_at_ms) >= self.backoff_ms
+        {
+            self.state = BreakerState::HalfOpen;
+            self.transitions += 1;
+            return Some(Transition::HalfOpened);
+        }
+        None
+    }
+
+    fn trip(&mut self, now_ms: u64, interval_ms: u64) {
+        self.state = BreakerState::Open;
+        self.opened_at_ms = now_ms;
+        self.backoff_ms = interval_ms;
+        self.failures = 0;
+        self.transitions += 1;
+    }
+}
+
+/// Deterministic exponential backoff with jitter for redial pacing:
+/// attempt `k` waits in `[base * 2^k / 2, base * 2^k]` ms (capped at
+/// `max_ms`), with the jitter drawn from the seed — the same seed
+/// replays the same delay schedule, per `rust/docs/robustness.md`.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    base_ms: u64,
+    max_ms: u64,
+    seed: u64,
+    attempt: u32,
+}
+
+impl Backoff {
+    pub fn new(base_ms: u64, max_ms: u64, seed: u64) -> Backoff {
+        let base_ms = base_ms.max(1);
+        Backoff { base_ms, max_ms: max_ms.max(base_ms), seed, attempt: 0 }
+    }
+
+    /// Consecutive failed attempts so far (the retry-budget gauge).
+    pub fn attempt(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Delay before the next attempt, advancing the attempt counter.
+    pub fn next_delay_ms(&mut self) -> u64 {
+        let shift = self.attempt.min(32);
+        let exp = self
+            .base_ms
+            .saturating_mul(1u64 << shift)
+            .min(self.max_ms)
+            .max(1);
+        let mut rng = Rng::new(
+            self.seed ^ (self.attempt as u64).wrapping_mul(0x9E3779B97F4A7C15),
+        );
+        let jitter = rng.below(exp / 2 + 1);
+        self.attempt = self.attempt.saturating_add(1);
+        exp - jitter
+    }
+
+    /// A successful attempt resets the schedule to the base delay.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Config};
+
+    fn cfg(threshold: u32, probe_ms: u64, max_ms: u64) -> BreakerConfig {
+        BreakerConfig { threshold, probe_ms, max_backoff_ms: max_ms }
+    }
+
+    #[test]
+    fn trips_after_threshold_and_cycles_through_half_open() {
+        let mut b = Breaker::new(cfg(3, 100, 1000));
+        assert_eq!(b.on_failure(0), None);
+        assert_eq!(b.on_failure(1), None);
+        assert_eq!(b.on_failure(2), Some(Transition::Opened));
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.admits());
+        // Not yet expired.
+        assert_eq!(b.poll(50), None);
+        assert_eq!(b.poll(102), Some(Transition::HalfOpened));
+        assert!(b.admits());
+        assert_eq!(b.on_success(), Some(Transition::Closed));
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.transitions(), 3);
+    }
+
+    #[test]
+    fn half_open_failure_doubles_the_backoff_up_to_the_cap() {
+        let mut b = Breaker::new(cfg(1, 100, 350));
+        assert_eq!(b.on_failure(0), Some(Transition::Opened));
+        assert_eq!(b.backoff_ms(), 100);
+        b.poll(100).unwrap();
+        assert_eq!(b.on_failure(100), Some(Transition::Reopened));
+        assert_eq!(b.backoff_ms(), 200);
+        b.poll(300).unwrap();
+        assert_eq!(b.on_failure(300), Some(Transition::Reopened));
+        assert_eq!(b.backoff_ms(), 350, "doubling is capped");
+        // A later success resets the interval to the probe base.
+        b.poll(650).unwrap();
+        b.on_success().unwrap();
+        assert_eq!(b.backoff_ms(), 100);
+    }
+
+    #[test]
+    fn closed_success_clears_the_consecutive_count() {
+        let mut b = Breaker::new(cfg(2, 100, 1000));
+        assert_eq!(b.on_failure(0), None);
+        assert_eq!(b.on_success(), None);
+        // The streak restarted, so one more failure does not trip it.
+        assert_eq!(b.on_failure(1), None);
+        assert_eq!(b.on_failure(2), Some(Transition::Opened));
+    }
+
+    /// Property: only legal transitions ever occur, and each reported
+    /// transition lands in the state it names.
+    #[test]
+    fn prop_only_legal_transitions() {
+        forall(Config::cases(200), |rng| {
+            let mut b = Breaker::new(cfg(
+                rng.range(1, 5) as u32,
+                rng.range(1, 50) as u64,
+                rng.range(50, 400) as u64,
+            ));
+            let mut now = 0u64;
+            let mut prev = b.state();
+            for _ in 0..rng.range(10, 120) {
+                now += rng.range(0, 60) as u64;
+                let t = match rng.range(0, 2) {
+                    0 => b.on_failure(now),
+                    1 => b.on_success(),
+                    _ => b.poll(now),
+                };
+                let cur = b.state();
+                if let Some(t) = t {
+                    let legal = matches!(
+                        (prev, t, cur),
+                        (
+                            BreakerState::Closed,
+                            Transition::Opened,
+                            BreakerState::Open
+                        ) | (
+                            BreakerState::Open,
+                            Transition::HalfOpened,
+                            BreakerState::HalfOpen
+                        ) | (
+                            BreakerState::Open,
+                            Transition::Closed,
+                            BreakerState::Closed
+                        ) | (
+                            BreakerState::HalfOpen,
+                            Transition::Closed,
+                            BreakerState::Closed
+                        ) | (
+                            BreakerState::HalfOpen,
+                            Transition::Reopened,
+                            BreakerState::Open
+                        )
+                    );
+                    assert!(legal, "illegal {prev:?} -{t:?}-> {cur:?}");
+                } else {
+                    assert_eq!(prev, cur, "state moved without a transition");
+                }
+                prev = cur;
+            }
+        });
+    }
+
+    /// Property: an Open breaker always yields a Half-Open probe once
+    /// its interval elapses — it can never stick Open forever.
+    #[test]
+    fn prop_open_always_expires_to_half_open() {
+        forall(Config::cases(200), |rng| {
+            let mut b = Breaker::new(cfg(
+                rng.range(1, 4) as u32,
+                rng.range(1, 100) as u64,
+                rng.range(100, 1000) as u64,
+            ));
+            let mut now = rng.range(0, 1000) as u64;
+            // Drive to Open; `now` stops advancing at the trip, so the
+            // breaker's opened_at is exactly `now`.
+            while b.state() != BreakerState::Open {
+                b.on_failure(now);
+                if b.state() != BreakerState::Open {
+                    now += rng.range(0, 3) as u64;
+                }
+            }
+            let interval = b.backoff_ms();
+            // Any poll strictly before expiry keeps it Open ...
+            if interval > 1 {
+                let early = now + rng.range(0, (interval - 1) as usize) as u64;
+                assert_eq!(b.poll(early), None, "expired early");
+            }
+            // ... and the poll at/after expiry always half-opens.
+            assert_eq!(
+                b.poll(now + interval),
+                Some(Transition::HalfOpened),
+                "Open must expire after its interval"
+            );
+        });
+    }
+
+    /// Property: every Half-Open failure re-opens with the interval
+    /// exactly doubled, capped at `max_backoff_ms`.
+    #[test]
+    fn prop_half_open_failure_doubles_backoff() {
+        forall(Config::cases(200), |rng| {
+            let probe = rng.range(1, 50) as u64;
+            let max = rng.range(50, 2000) as u64;
+            let mut b = Breaker::new(cfg(1, probe, max));
+            let mut now = 0u64;
+            b.on_failure(now);
+            for _ in 0..rng.range(1, 12) {
+                let before = b.backoff_ms();
+                now += before;
+                assert_eq!(b.poll(now), Some(Transition::HalfOpened));
+                assert_eq!(
+                    b.on_failure(now),
+                    Some(Transition::Reopened)
+                );
+                assert_eq!(
+                    b.backoff_ms(),
+                    before.saturating_mul(2).min(max),
+                    "doubling must be exact and capped"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn backoff_is_deterministic_and_bounded() {
+        let mut a = Backoff::new(50, 1000, 7);
+        let mut b = Backoff::new(50, 1000, 7);
+        let da: Vec<u64> = (0..10).map(|_| a.next_delay_ms()).collect();
+        let db: Vec<u64> = (0..10).map(|_| b.next_delay_ms()).collect();
+        assert_eq!(da, db, "same seed, same schedule");
+        for (k, &d) in da.iter().enumerate() {
+            let exp = (50u64 << k.min(32)).min(1000);
+            assert!(d >= exp / 2 && d <= exp, "attempt {k}: {d} vs {exp}");
+        }
+        // Different seeds decorrelate the jitter.
+        let mut c = Backoff::new(50, 1000, 8);
+        let dc: Vec<u64> = (0..10).map(|_| c.next_delay_ms()).collect();
+        assert_ne!(da, dc);
+        // Reset restarts the schedule.
+        a.reset();
+        assert_eq!(a.next_delay_ms(), da[0]);
+    }
+}

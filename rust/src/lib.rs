@@ -52,6 +52,12 @@
 //!   a mini-batch loop that checkpoints `w%05d.zten` leaves the
 //!   reference backend serves unchanged — the train -> artifact ->
 //!   serve loop with no Python anywhere.
+//! - [`faults`] — the deterministic chaos engine: a seeded
+//!   [`FaultPlan`](faults::FaultPlan) (`--chaos` / `ZEBRA_CHAOS`)
+//!   injecting wire drops/corruption/delays, worker stalls/crashes,
+//!   and post-checksum spill corruption, plus the self-healing
+//!   primitives it validates — per-worker circuit breakers and
+//!   deterministic exponential backoff (`rust/docs/robustness.md`).
 //! - [`obs`] — request-level observability: 64-bit trace ids riding
 //!   wire v3 with per-hop spans, a flight-recorder ring dumped as
 //!   JSON-lines on terminal events, and the unified metrics-export
@@ -73,6 +79,7 @@ pub mod cli;
 pub mod cluster;
 pub mod compress;
 pub mod coordinator;
+pub mod faults;
 pub mod hal;
 pub mod models;
 pub mod obs;

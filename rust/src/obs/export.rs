@@ -12,7 +12,7 @@
 use std::collections::BTreeMap;
 
 use super::ledger::{CellStats, LedgerSnapshot, LEDGER_STAGE_PREFIX};
-use super::slo::{parse_slo, SLO_STAGE_PREFIX};
+use super::slo::{parse_brownout, parse_slo, SLO_STAGE_PREFIX};
 use crate::cluster::metrics::{ClusterStats, MetricsSnapshot};
 use crate::cluster::wire::FrameError;
 use crate::telemetry::{StageStats, TelemetrySnapshot};
@@ -21,6 +21,11 @@ use crate::util::json::Value;
 /// Stage-label prefix the router uses for per-worker gauges
 /// (`cluster.w<idx>.link` / `cluster.w<idx>.node`).
 pub const WORKER_STAGE_PREFIX: &str = "cluster.w";
+
+/// Stage-label prefix the router uses for per-worker circuit-breaker
+/// status (`breaker.w<idx>` — `nanos` = state code, `calls` =
+/// cumulative transitions).
+pub const BREAKER_STAGE_PREFIX: &str = "breaker.w";
 
 /// One worker's row in a gathered report, reassembled from the
 /// router-injected `cluster.w<idx>.*` stages (`zebra top`'s per-worker
@@ -67,6 +72,47 @@ pub fn parse_workers(
     out
 }
 
+/// One worker link's circuit-breaker status off the wire.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BreakerView {
+    /// State code: 0 = closed, 1 = open, 2 = half-open.
+    pub state: u64,
+    /// Cumulative state transitions since the router started.
+    pub transitions: u64,
+}
+
+impl BreakerView {
+    /// Human name for the state code (mirrors
+    /// [`crate::faults::BreakerState::name`]).
+    pub fn state_name(&self) -> &'static str {
+        match self.state {
+            0 => "closed",
+            1 => "open",
+            2 => "half-open",
+            _ => "unknown",
+        }
+    }
+}
+
+/// Reassemble per-worker breaker rows from the `breaker.w<idx>`
+/// stages of a gathered report. Malformed labels are skipped.
+pub fn parse_breakers(
+    telemetry: &TelemetrySnapshot,
+) -> BTreeMap<u64, BreakerView> {
+    let mut out: BTreeMap<u64, BreakerView> = BTreeMap::new();
+    for (label, stats) in &telemetry.stages {
+        let Some(rest) = label.strip_prefix(BREAKER_STAGE_PREFIX) else {
+            continue;
+        };
+        let Ok(idx) = rest.parse::<u64>() else { continue };
+        out.insert(
+            idx,
+            BreakerView { state: stats.nanos, transitions: stats.calls },
+        );
+    }
+    out
+}
+
 /// True for synthetic stages that belong to a dedicated export plane
 /// (ledger, SLO, per-worker) — rendered as their own metric families,
 /// never as generic `zebra_stage_*` samples.
@@ -74,6 +120,7 @@ fn is_plane_stage(label: &str) -> bool {
     label.starts_with(LEDGER_STAGE_PREFIX)
         || label.starts_with(SLO_STAGE_PREFIX)
         || label.starts_with(WORKER_STAGE_PREFIX)
+        || label.starts_with(BREAKER_STAGE_PREFIX)
 }
 
 /// Cap on stages in one telemetry wire block (far above any real
@@ -458,6 +505,43 @@ impl ObsReport {
                 ));
             }
         }
+        // Brownout plane: the level the SLO engine is shedding at.
+        if let Some((level, raises)) = parse_brownout(&self.telemetry) {
+            out.push_str(&format!(
+                "# HELP zebra_brownout_level Current SLO brownout level\n\
+                 # TYPE zebra_brownout_level gauge\n\
+                 zebra_brownout_level {level}\n\
+                 # HELP zebra_brownout_raises_total Brownout level raises\n\
+                 # TYPE zebra_brownout_raises_total counter\n\
+                 zebra_brownout_raises_total {raises}\n"
+            ));
+        }
+        // Circuit-breaker plane: per-worker link state at the router.
+        let breakers = parse_breakers(&self.telemetry);
+        if !breakers.is_empty() {
+            out.push_str(
+                "# HELP zebra_breaker_state Link breaker state \
+                 (0=closed 1=open 2=half-open)\n\
+                 # TYPE zebra_breaker_state gauge\n",
+            );
+            for (idx, b) in &breakers {
+                out.push_str(&format!(
+                    "zebra_breaker_state{{worker=\"{idx}\"}} {}\n",
+                    b.state
+                ));
+            }
+            out.push_str(
+                "# HELP zebra_breaker_transitions_total Breaker state \
+                 transitions\n\
+                 # TYPE zebra_breaker_transitions_total counter\n",
+            );
+            for (idx, b) in &breakers {
+                out.push_str(&format!(
+                    "zebra_breaker_transitions_total{{worker=\"{idx}\"}} {}\n",
+                    b.transitions
+                ));
+            }
+        }
         // Per-worker plane from a gathered (router) report.
         let workers = parse_workers(&self.telemetry);
         if !workers.is_empty() {
@@ -613,6 +697,19 @@ impl ObsReport {
             }
             workers_o.insert(idx.to_string(), Value::Object(m));
         }
+        let mut breakers_o = BTreeMap::new();
+        for (idx, b) in parse_breakers(&self.telemetry) {
+            let mut m = BTreeMap::new();
+            m.insert(
+                "state".to_string(),
+                Value::Str(b.state_name().to_string()),
+            );
+            m.insert(
+                "transitions".to_string(),
+                Value::Num(b.transitions as f64),
+            );
+            breakers_o.insert(idx.to_string(), Value::Object(m));
+        }
         let mut o = BTreeMap::new();
         o.insert("counters".to_string(), Value::Object(counters));
         o.insert("latency".to_string(), Value::Object(latency));
@@ -625,6 +722,13 @@ impl ObsReport {
         o.insert("ledger".to_string(), Value::Object(ledger_o));
         o.insert("slo".to_string(), Value::Object(slo_o));
         o.insert("workers".to_string(), Value::Object(workers_o));
+        o.insert("breakers".to_string(), Value::Object(breakers_o));
+        if let Some((level, raises)) = parse_brownout(&self.telemetry) {
+            let mut m = BTreeMap::new();
+            m.insert("level".to_string(), Value::Num(level as f64));
+            m.insert("raises".to_string(), Value::Num(raises as f64));
+            o.insert("brownout".to_string(), Value::Object(m));
+        }
         Value::Object(o)
     }
 }
@@ -796,6 +900,14 @@ mod tests {
             "cluster.w0.node".into(),
             StageStats { nanos: 3, calls: 90, bytes: 5 },
         );
+        t.stages.insert(
+            "breaker.w0".into(),
+            StageStats { nanos: 2, calls: 4, bytes: 0 },
+        );
+        t.stages.insert(
+            super::super::slo::BROWNOUT_STAGE.into(),
+            StageStats { nanos: 1, calls: 3, bytes: 0 },
+        );
         t
     }
 
@@ -830,11 +942,22 @@ mod tests {
             text.contains("zebra_worker_responses_total{worker=\"0\"} 90"),
             "{text}"
         );
+        assert!(
+            text.contains("zebra_breaker_state{worker=\"0\"} 2"),
+            "{text}"
+        );
+        assert!(
+            text.contains("zebra_breaker_transitions_total{worker=\"0\"} 4"),
+            "{text}"
+        );
+        assert!(text.contains("zebra_brownout_level 1"), "{text}");
+        assert!(text.contains("zebra_brownout_raises_total 3"), "{text}");
         // Plane stages never leak into the generic stage families;
         // real stages stay there.
         assert!(!text.contains("stage=\"ledger."), "{text}");
         assert!(!text.contains("stage=\"slo."), "{text}");
         assert!(!text.contains("stage=\"cluster.w"), "{text}");
+        assert!(!text.contains("stage=\"breaker."), "{text}");
         assert!(text.contains("stage=\"serve.execute\""), "{text}");
         // Exposition discipline holds for the new families too.
         for line in text.lines().filter(|l| !l.starts_with('#')) {
@@ -858,6 +981,11 @@ mod tests {
         let w = back.get("workers").get("0");
         assert_eq!(w.get("in_flight").as_usize(), Some(7));
         assert_eq!(w.get("shed").as_usize(), Some(5));
+        let b = back.get("breakers").get("0");
+        assert_eq!(b.get("state").as_str(), Some("half-open"));
+        assert_eq!(b.get("transitions").as_usize(), Some(4));
+        assert_eq!(back.get("brownout").get("level").as_usize(), Some(1));
+        assert_eq!(back.get("brownout").get("raises").as_usize(), Some(3));
         assert!(back.get("telemetry").get("slo.shed-rate.breach").is_null());
         assert!(back
             .get("telemetry")
@@ -865,6 +993,29 @@ mod tests {
             .get("calls")
             .as_usize()
             .is_some());
+    }
+
+    #[test]
+    fn breaker_parse_skips_malformed_labels() {
+        let mut t = TelemetrySnapshot::default();
+        for label in ["breaker.wx", "breaker.w", "breaker.w1.extra"] {
+            t.stages.insert(
+                label.into(),
+                StageStats { nanos: 1, calls: 1, bytes: 1 },
+            );
+        }
+        t.stages.insert(
+            "breaker.w3".into(),
+            StageStats { nanos: 1, calls: 9, bytes: 0 },
+        );
+        let b = parse_breakers(&t);
+        assert_eq!(b.len(), 1);
+        assert_eq!(
+            b[&3],
+            BreakerView { state: 1, transitions: 9 }
+        );
+        assert_eq!(b[&3].state_name(), "open");
+        assert_eq!(BreakerView::default().state_name(), "closed");
     }
 
     #[test]

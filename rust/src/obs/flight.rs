@@ -41,6 +41,21 @@ pub enum TerminalKind {
     /// An SLO objective's burn rate crossed 1.0 on both windows
     /// (the detail names the objective; see `obs::slo`).
     SloBreach,
+    /// A worker link's circuit breaker tripped Closed -> Open
+    /// (consecutive-failure threshold; see `faults::breaker`).
+    BreakerOpen,
+    /// The breaker's Open interval elapsed; one probe dial admitted.
+    BreakerHalfOpen,
+    /// A Half-Open probe succeeded; the link is healthy again.
+    BreakerClosed,
+    /// An encoded spill failed its post-checksum decode; the dense
+    /// fallback (or drop-and-count on ingest) handled it.
+    SpillCorrupt,
+    /// SLO-driven brownout raised to the level in the detail.
+    BrownoutEnter,
+    /// Burn recovered; brownout stepped back to the level in the
+    /// detail (0 = fully exited).
+    BrownoutExit,
 }
 
 impl TerminalKind {
@@ -63,6 +78,12 @@ impl TerminalKind {
             TerminalKind::Redispatch => "redispatch",
             TerminalKind::WorkerDeath => "worker_death",
             TerminalKind::SloBreach => "slo_breach",
+            TerminalKind::BreakerOpen => "breaker_open",
+            TerminalKind::BreakerHalfOpen => "breaker_half_open",
+            TerminalKind::BreakerClosed => "breaker_closed",
+            TerminalKind::SpillCorrupt => "spill_corrupt",
+            TerminalKind::BrownoutEnter => "brownout_enter",
+            TerminalKind::BrownoutExit => "brownout_exit",
         }
     }
 
@@ -76,6 +97,12 @@ impl TerminalKind {
             "redispatch" => TerminalKind::Redispatch,
             "worker_death" => TerminalKind::WorkerDeath,
             "slo_breach" => TerminalKind::SloBreach,
+            "breaker_open" => TerminalKind::BreakerOpen,
+            "breaker_half_open" => TerminalKind::BreakerHalfOpen,
+            "breaker_closed" => TerminalKind::BreakerClosed,
+            "spill_corrupt" => TerminalKind::SpillCorrupt,
+            "brownout_enter" => TerminalKind::BrownoutEnter,
+            "brownout_exit" => TerminalKind::BrownoutExit,
             _ => return None,
         })
     }
@@ -218,12 +245,16 @@ impl FlightRecorder {
     }
 
     /// Write the ring to `<dir>/flight-<node>.jsonl` (latest wins).
-    /// `None` when no directory is configured.
+    /// `None` when no directory is configured. The write is atomic —
+    /// `<name>.jsonl.tmp` then rename — so a node killed mid-dump
+    /// never leaves a torn file for `zebra obs replay` to reject.
     pub fn dump(&self) -> Option<std::io::Result<PathBuf>> {
         let dir = self.dir.as_ref()?;
         let path = dir.join(format!("flight-{}.jsonl", self.node));
+        let tmp = dir.join(format!("flight-{}.jsonl.tmp", self.node));
         let res = std::fs::create_dir_all(dir)
-            .and_then(|()| std::fs::write(&path, self.jsonl()))
+            .and_then(|()| std::fs::write(&tmp, self.jsonl()))
+            .and_then(|()| std::fs::rename(&tmp, &path))
             .map(|()| path);
         Some(res)
     }
@@ -340,6 +371,12 @@ mod tests {
             TerminalKind::Redispatch,
             TerminalKind::WorkerDeath,
             TerminalKind::SloBreach,
+            TerminalKind::BreakerOpen,
+            TerminalKind::BreakerHalfOpen,
+            TerminalKind::BreakerClosed,
+            TerminalKind::SpillCorrupt,
+            TerminalKind::BrownoutEnter,
+            TerminalKind::BrownoutExit,
         ] {
             assert_eq!(TerminalKind::parse(k.name()), Some(k));
         }
@@ -372,6 +409,16 @@ mod tests {
         let second = std::fs::read_to_string(&path).unwrap();
         assert_eq!(parse_jsonl(&second).unwrap().len(), 2);
         assert_ne!(first, second);
+        // Atomic write: no .tmp sibling survives a successful dump,
+        // and a stale garbage .tmp (a simulated torn write) never
+        // reaches readers — the next dump just replaces it.
+        let tmp = dir.join("flight-unit.jsonl.tmp");
+        assert!(!tmp.exists(), "tmp file must be renamed away");
+        std::fs::write(&tmp, "{torn").unwrap();
+        let path = f.dump().unwrap().unwrap();
+        let third = std::fs::read_to_string(&path).unwrap();
+        parse_jsonl(&third).expect("dump after torn tmp must be clean");
+        assert!(!tmp.exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

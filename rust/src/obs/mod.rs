@@ -38,6 +38,13 @@
 //!   fast/slow windows; breach transitions record
 //!   [`TerminalKind::SloBreach`] flight events and export as
 //!   `zebra_slo_breach`.
+//!
+//! PR 10 closes the loop (`rust/docs/robustness.md`): a
+//! [`BrownoutConfig`] lets sustained burn *act* — progressively
+//! shrinking Low/Normal admission caps and thinning trace sampling
+//! until the burn clears — and the flight recorder gains circuit
+//! breaker / spill-corruption / brownout terminal kinds fed by the
+//! [`faults`](crate::faults) chaos engine's self-healing plane.
 
 pub mod export;
 pub mod flight;
@@ -46,11 +53,15 @@ pub mod slo;
 pub mod trace;
 
 pub use export::{
-    encode_telemetry, parse_telemetry, parse_workers, ObsReport, WorkerView,
+    encode_telemetry, parse_breakers, parse_telemetry, parse_workers,
+    BreakerView, ObsReport, WorkerView,
 };
 pub use flight::{FlightEntry, FlightRecorder, TerminalKind};
 pub use ledger::{CellStats, Ledger, LedgerCell, LedgerSnapshot};
-pub use slo::{parse_slo, SloConfig, SloEngine, SloInput, SloView};
+pub use slo::{
+    parse_brownout, parse_slo, BrownoutConfig, SloConfig, SloEngine,
+    SloInput, SloView,
+};
 pub use trace::{
     now_ns, render_waterfall, sampled, trace_id_for, Span, TraceRecord,
 };

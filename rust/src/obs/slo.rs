@@ -28,6 +28,16 @@
 //! node) feed it from a monotonic clock. Status rides the telemetry
 //! block as `slo.<name>.breach` / `slo.<name>.active` stages — same
 //! no-wire-bump trick as the ledger.
+//!
+//! With a [`BrownoutConfig`] (`--brownout`), a breach can *act*:
+//! after `raise_after` consecutive burning observations the engine
+//! raises a brownout level (up to `max_level`), and after
+//! `lower_after` consecutive clear observations it lowers one level.
+//! The level is advisory — callers apply it (the batch manager
+//! shrinks Low/Normal admission caps, the trace sampler thins) — and
+//! every transition records a [`TerminalKind::BrownoutEnter`] /
+//! [`TerminalKind::BrownoutExit`] flight event and rides telemetry
+//! as the [`BROWNOUT_STAGE`] stage.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Mutex};
@@ -39,6 +49,11 @@ use crate::telemetry::{StageStats, TelemetrySnapshot};
 
 /// Stage-label prefix SLO status uses inside a telemetry snapshot.
 pub const SLO_STAGE_PREFIX: &str = "slo.";
+
+/// Stage label the brownout level rides under (`nanos` = current
+/// level, `calls` = cumulative level raises). The `.level` suffix is
+/// deliberately not `breach`/`active`, so [`parse_slo`] skips it.
+pub const BROWNOUT_STAGE: &str = "slo.brownout.level";
 
 /// What an objective measures.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -62,6 +77,57 @@ pub struct Objective {
     pub threshold: f64,
 }
 
+/// The brownout policy: how sustained burn translates into load
+/// shedding. All counts are in observation ticks (one per
+/// [`SloEngine::observe`] call), so the policy inherits the
+/// sampler's cadence and stays wall-clock free.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BrownoutConfig {
+    /// Deepest brownout level (each level sheds harder).
+    pub max_level: u32,
+    /// Consecutive burning observations before raising one level.
+    pub raise_after: u32,
+    /// Consecutive clear observations before lowering one level.
+    pub lower_after: u32,
+}
+
+impl Default for BrownoutConfig {
+    fn default() -> BrownoutConfig {
+        BrownoutConfig { max_level: 3, raise_after: 3, lower_after: 5 }
+    }
+}
+
+impl BrownoutConfig {
+    /// Parse `--brownout max=L,raise=N,lower=M` (each key optional,
+    /// overriding the defaults). Strict: unknown keys and zero
+    /// counts error — a brownout that can never raise or lower is a
+    /// misconfiguration, not a policy.
+    pub fn parse(spec: &str) -> Result<BrownoutConfig> {
+        let mut cfg = BrownoutConfig::default();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty())
+        {
+            let Some((key, value)) = part.split_once('=') else {
+                bail!("--brownout wants key=value, got {part:?}");
+            };
+            let Ok(n) = value.trim().parse::<u32>() else {
+                bail!("--brownout {key}: bad count {value:?}");
+            };
+            if n == 0 {
+                bail!("--brownout {key}: count must be >= 1");
+            }
+            match key.trim() {
+                "max" => cfg.max_level = n,
+                "raise" => cfg.raise_after = n,
+                "lower" => cfg.lower_after = n,
+                other => bail!(
+                    "--brownout: unknown key {other:?} (max|raise|lower)"
+                ),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
 /// The engine's configuration: objectives + the two burn windows.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SloConfig {
@@ -70,6 +136,8 @@ pub struct SloConfig {
     pub fast_window_ms: u64,
     /// "Has it been burning long enough to matter?" window.
     pub slow_window_ms: u64,
+    /// Brownout policy; `None` means breaches only report.
+    pub brownout: Option<BrownoutConfig>,
 }
 
 impl Default for SloConfig {
@@ -99,6 +167,7 @@ impl Default for SloConfig {
             ],
             fast_window_ms: 60_000,
             slow_window_ms: 600_000,
+            brownout: None,
         }
     }
 }
@@ -160,6 +229,10 @@ struct ObjState {
 struct State {
     samples: VecDeque<(u64, SloInput)>,
     status: BTreeMap<&'static str, ObjState>,
+    brownout_level: u32,
+    breach_streak: u32,
+    clear_streak: u32,
+    brownout_raises: u64,
 }
 
 /// Sample-ring hard cap (a 100 ms sampler fills the slow window with
@@ -230,7 +303,63 @@ impl SloEngine {
                 entry.active = false;
             }
         }
+        self.step_brownout(&mut st);
         fired
+    }
+
+    /// Advance the brownout level state machine after one
+    /// observation. Any active objective counts as burning; streaks
+    /// reset on every level change so sustained burn keeps deepening
+    /// one `raise_after` interval at a time.
+    fn step_brownout(&self, st: &mut State) {
+        let Some(bo) = &self.cfg.brownout else { return };
+        let burning = st.status.values().any(|s| s.active);
+        if burning {
+            st.clear_streak = 0;
+            st.breach_streak += 1;
+            if st.breach_streak >= bo.raise_after
+                && st.brownout_level < bo.max_level
+            {
+                st.breach_streak = 0;
+                st.brownout_level += 1;
+                st.brownout_raises += 1;
+                if let Some(f) = &self.flight {
+                    f.record_event(
+                        0,
+                        TerminalKind::BrownoutEnter,
+                        &format!(
+                            "brownout level {}/{} (slo burning)",
+                            st.brownout_level, bo.max_level
+                        ),
+                    );
+                }
+            }
+        } else {
+            st.breach_streak = 0;
+            if st.brownout_level > 0 {
+                st.clear_streak += 1;
+                if st.clear_streak >= bo.lower_after {
+                    st.clear_streak = 0;
+                    st.brownout_level -= 1;
+                    if let Some(f) = &self.flight {
+                        f.record_event(
+                            0,
+                            TerminalKind::BrownoutExit,
+                            &format!(
+                                "brownout level {}/{} (burn recovered)",
+                                st.brownout_level, bo.max_level
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Current brownout level: 0 = normal service, each level above
+    /// sheds harder (admission caps shrink, trace sampling thins).
+    pub fn brownout_level(&self) -> u32 {
+        self.state.lock().unwrap().brownout_level
     }
 
     /// Pack status into a telemetry snapshot:
@@ -256,6 +385,16 @@ impl SloEngine {
                 StageStats {
                     nanos: 0,
                     calls: s.active as u64,
+                    bytes: 0,
+                },
+            );
+        }
+        if self.cfg.brownout.is_some() {
+            telemetry.stages.insert(
+                BROWNOUT_STAGE.to_string(),
+                StageStats {
+                    nanos: st.brownout_level as u64,
+                    calls: st.brownout_raises,
                     bytes: 0,
                 },
             );
@@ -362,6 +501,16 @@ pub fn parse_slo(telemetry: &TelemetrySnapshot) -> BTreeMap<String, SloView> {
         }
     }
     out
+}
+
+/// Brownout status parsed back off the wire: `(level, raises)`.
+/// On cross-node-merged snapshots both numbers are sums — a
+/// total-pressure view. `None` when no node runs a brownout policy.
+pub fn parse_brownout(telemetry: &TelemetrySnapshot) -> Option<(u64, u64)> {
+    telemetry
+        .stages
+        .get(BROWNOUT_STAGE)
+        .map(|s| (s.nanos, s.calls))
 }
 
 #[cfg(test)]
@@ -499,6 +648,114 @@ mod tests {
             );
         }
         assert!(parse_slo(&tele).is_empty());
+    }
+
+    #[test]
+    fn brownout_spec_parses_and_rejects_garbage() {
+        assert_eq!(
+            BrownoutConfig::parse("").unwrap(),
+            BrownoutConfig::default()
+        );
+        let cfg = BrownoutConfig::parse("max=2, raise=1,lower=4").unwrap();
+        assert_eq!(
+            cfg,
+            BrownoutConfig { max_level: 2, raise_after: 1, lower_after: 4 }
+        );
+        for bad in ["max", "max=0", "max=much", "dim=1"] {
+            let e = BrownoutConfig::parse(bad).unwrap_err().to_string();
+            assert!(e.contains("--brownout"), "{bad}: {e}");
+        }
+        assert!(BrownoutConfig::parse("dim=1")
+            .unwrap_err()
+            .to_string()
+            .contains("max|raise|lower"));
+    }
+
+    #[test]
+    fn brownout_raises_under_sustained_burn_and_lowers_on_recovery() {
+        let flight = Arc::new(FlightRecorder::new("bo-test", 32, None));
+        let cfg = SloConfig {
+            brownout: Some(BrownoutConfig {
+                max_level: 2,
+                raise_after: 2,
+                lower_after: 2,
+            }),
+            ..SloConfig::default()
+        };
+        let engine = SloEngine::new(cfg, Some(Arc::clone(&flight)));
+        assert_eq!(engine.brownout_level(), 0);
+        // Baseline, then sustained 60 % shed rate: the shed-rate
+        // objective stays active every tick.
+        engine.observe(0, &loaded(0, 0));
+        engine.observe(60_000, &loaded(100, 60)); // streak 1
+        assert_eq!(engine.brownout_level(), 0);
+        engine.observe(61_000, &loaded(101, 61)); // streak 2 -> level 1
+        assert_eq!(engine.brownout_level(), 1);
+        engine.observe(62_000, &loaded(102, 62)); // streak 1
+        engine.observe(63_000, &loaded(103, 63)); // streak 2 -> level 2
+        assert_eq!(engine.brownout_level(), 2);
+        // Already at max: further burn never overshoots.
+        engine.observe(64_000, &loaded(104, 64));
+        engine.observe(65_000, &loaded(105, 65));
+        assert_eq!(engine.brownout_level(), 2);
+        // Recovery: no sheds inside the fast window clears the
+        // objective; two clear ticks lower one level each pair.
+        engine.observe(131_000, &loaded(300, 65)); // clear 1
+        assert_eq!(engine.brownout_level(), 2);
+        engine.observe(132_000, &loaded(301, 65)); // clear 2 -> level 1
+        assert_eq!(engine.brownout_level(), 1);
+        engine.observe(133_000, &loaded(302, 65)); // clear 1
+        engine.observe(134_000, &loaded(303, 65)); // clear 2 -> level 0
+        assert_eq!(engine.brownout_level(), 0);
+        // Flight ring saw exactly 2 enters and 2 exits, in order.
+        let kinds: Vec<TerminalKind> = flight
+            .entries()
+            .into_iter()
+            .filter_map(|e| match e {
+                crate::obs::FlightEntry::Event { kind, .. } => Some(kind),
+                _ => None,
+            })
+            .filter(|k| {
+                matches!(
+                    k,
+                    TerminalKind::BrownoutEnter | TerminalKind::BrownoutExit
+                )
+            })
+            .collect();
+        assert_eq!(
+            kinds,
+            vec![
+                TerminalKind::BrownoutEnter,
+                TerminalKind::BrownoutEnter,
+                TerminalKind::BrownoutExit,
+                TerminalKind::BrownoutExit,
+            ]
+        );
+    }
+
+    #[test]
+    fn brownout_stage_packs_level_and_raises() {
+        let cfg = SloConfig {
+            brownout: Some(BrownoutConfig {
+                max_level: 3,
+                raise_after: 1,
+                lower_after: 8,
+            }),
+            ..SloConfig::default()
+        };
+        let engine = SloEngine::new(cfg, None);
+        engine.observe(0, &loaded(0, 0));
+        engine.observe(60_000, &loaded(100, 60)); // -> level 1
+        let mut tele = TelemetrySnapshot::default();
+        engine.to_stages(&mut tele);
+        assert_eq!(parse_brownout(&tele), Some((1, 1)));
+        // The .level suffix never leaks into the objective view.
+        assert!(!parse_slo(&tele).contains_key("brownout"));
+        // Engines without a policy pack nothing.
+        let plain = SloEngine::new(SloConfig::default(), None);
+        let mut tele2 = TelemetrySnapshot::default();
+        plain.to_stages(&mut tele2);
+        assert_eq!(parse_brownout(&tele2), None);
     }
 
     #[test]

@@ -155,23 +155,53 @@ pub fn read_zten_i32(path: impl AsRef<Path>) -> Result<(Vec<usize>, Vec<i32>)> {
     Ok((dims, vals))
 }
 
-/// Write an f32 tensor as `.zten`.
+/// Tmp sibling for crash-safe writes: same directory (so the final
+/// rename never crosses a filesystem), pid-suffixed (so concurrent
+/// processes never clobber each other's half-written bytes).
+fn tmp_sibling(path: &Path) -> std::path::PathBuf {
+    let mut name = path
+        .file_name()
+        .map(std::ffi::OsStr::to_os_string)
+        .unwrap_or_default();
+    name.push(format!(".tmp.{}", std::process::id()));
+    path.with_file_name(name)
+}
+
+/// Write an f32 tensor as `.zten`, crash-safely: the bytes land in a
+/// pid-suffixed `.tmp` sibling and are renamed over `path` only after
+/// a successful flush+sync. A process dying mid-write (a kill, a full
+/// disk, chaos `worker.crash_after`) leaves the previous file intact —
+/// readers see the old checkpoint or the new one, never a torn one.
 pub fn write_zten(path: impl AsRef<Path>, t: &Tensor) -> Result<()> {
     let path = path.as_ref();
-    let mut w = BufWriter::new(
-        File::create(path).with_context(|| format!("creating {path:?}"))?,
-    );
-    w.write_all(MAGIC)?;
-    w.write_all(&1u32.to_le_bytes())?;
-    w.write_all(&(DType::F32 as u32).to_le_bytes())?;
-    w.write_all(&(t.shape().len() as u32).to_le_bytes())?;
-    for &d in t.shape() {
-        w.write_all(&(d as u32).to_le_bytes())?;
+    let tmp = tmp_sibling(path);
+    let write = (|| -> Result<()> {
+        let mut w = BufWriter::new(
+            File::create(&tmp)
+                .with_context(|| format!("creating {tmp:?}"))?,
+        );
+        w.write_all(MAGIC)?;
+        w.write_all(&1u32.to_le_bytes())?;
+        w.write_all(&(DType::F32 as u32).to_le_bytes())?;
+        w.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            w.write_all(&(d as u32).to_le_bytes())?;
+        }
+        for &v in t.data() {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        w.flush()?;
+        w.get_ref()
+            .sync_all()
+            .with_context(|| format!("syncing {tmp:?}"))?;
+        Ok(())
+    })();
+    if let Err(e) = write {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
     }
-    for &v in t.data() {
-        w.write_all(&v.to_le_bytes())?;
-    }
-    Ok(())
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {tmp:?} over {path:?}"))
 }
 
 #[cfg(test)]
@@ -205,6 +235,46 @@ mod tests {
         write_zten(&p, &t).unwrap();
         let back = read_zten(&p).unwrap();
         assert_eq!(back, t);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn write_replaces_atomically_and_leaves_no_tmp_siblings() {
+        let p = tmp("atomic");
+        let old = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let new = Tensor::from_vec(&[3], vec![7.0, 8.0, 9.0]);
+        write_zten(&p, &old).unwrap();
+        // Replacing an existing checkpoint goes tmp+rename: the final
+        // file is whole-new (different shape, so a torn mix would fail
+        // the reader's bounds check) and no `.tmp.` sibling survives.
+        write_zten(&p, &new).unwrap();
+        assert_eq!(read_zten(&p).unwrap(), new);
+        let stem = p.file_name().unwrap().to_str().unwrap().to_string();
+        for entry in std::fs::read_dir(p.parent().unwrap()).unwrap() {
+            let name = entry.unwrap().file_name();
+            let name = name.to_string_lossy();
+            assert!(
+                !(name.starts_with(&stem) && name.contains(".tmp.")),
+                "leftover tmp file {name}"
+            );
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn torn_write_simulation_keeps_the_old_checkpoint_readable() {
+        // The crash-safety contract from the reader's side: if a
+        // process dies before the rename, `path` still holds the old
+        // bytes and the orphan tmp never shadows it.
+        let p = tmp("torn");
+        let old = Tensor::from_vec(&[2], vec![4.0, 5.0]);
+        write_zten(&p, &old).unwrap();
+        // Simulate the dead writer's leftovers: a half-written tmp
+        // sibling (as if the crash hit mid-payload).
+        let orphan = super::tmp_sibling(&p);
+        std::fs::write(&orphan, b"ZTEN\x01\x00\x00").unwrap();
+        assert_eq!(read_zten(&p).unwrap(), old);
+        std::fs::remove_file(orphan).ok();
         std::fs::remove_file(p).ok();
     }
 

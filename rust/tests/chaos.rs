@@ -1,0 +1,356 @@
+//! Chaos acceptance: the deterministic fault engine + self-healing
+//! loop end to end (`rust/docs/robustness.md`) —
+//!
+//! * conservation under wire drops/corruption and a worker crash over
+//!   loopback TCP: every submitted request resolves as ok, shed, or
+//!   failed (never hangs, never vanishes),
+//! * corrupt-spill downgrade: a post-checksum bit flip in a shipped
+//!   `.zspill` frame is caught by the decode self-check, re-shipped
+//!   dense, and the request's logits stay bitwise-correct,
+//! * replay-by-seed: the same `--chaos` spec over the same workload
+//!   journals the identical fault schedule,
+//! * the circuit breaker's Open -> Half-Open -> Closed cycle lands in
+//!   the flight dump AND the Prometheus exposition.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use zebra::backend::reference::RefSpec;
+use zebra::backend::ModelOutput;
+use zebra::cluster::{ClusterClient, Router, RouterConfig, WorkerNode};
+use zebra::compress::{self, CodecId};
+use zebra::coordinator::server::BatchExecutor;
+use zebra::coordinator::{
+    reference_executor, Server, ServerConfig, ShipSpills,
+};
+use zebra::faults::{BreakerConfig, FaultInjector, FaultPlan};
+use zebra::obs::{FlightEntry, FlightRecorder, TerminalKind};
+use zebra::tensor::Tensor;
+use zebra::util::prng::Rng;
+
+const WAIT: Duration = Duration::from_secs(30);
+
+fn noise_image(hw: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let n = 3 * hw * hw;
+    Tensor::from_vec(&[3, hw, hw], (0..n).map(|_| rng.normal()).collect())
+}
+
+fn fill_image(hw: usize, v: f32) -> Tensor {
+    Tensor::from_vec(&[3, hw, hw], vec![v; 3 * hw * hw])
+}
+
+/// Mock executor (same shape as the coordinator's own tests): logits
+/// are [mean, -mean], one 2x2-blocked mask layer.
+struct MockExec {
+    hw: usize,
+    delay: Duration,
+}
+
+impl BatchExecutor for MockExec {
+    fn execute(&self, x: &Tensor) -> Result<ModelOutput> {
+        std::thread::sleep(self.delay);
+        let b = x.shape()[0];
+        let per = 3 * self.hw * self.hw;
+        let mut logits = Vec::with_capacity(b * 2);
+        let mut mask = Vec::new();
+        for i in 0..b {
+            let mean: f32 = x.data()[i * per..(i + 1) * per]
+                .iter()
+                .sum::<f32>()
+                / per as f32;
+            logits.extend_from_slice(&[mean, -mean]);
+            let kept = if mean > 0.5 { 1.0 } else { 0.0 };
+            mask.extend(std::iter::repeat(kept).take(4));
+        }
+        Ok(ModelOutput {
+            logits: Tensor::from_vec(&[b, 2], logits),
+            masks: vec![Tensor::from_vec(&[b, 1, 2, 2], mask)],
+            block_elems: vec![4],
+            layer_nanos: vec![100],
+        })
+    }
+    fn batch_sizes(&self) -> Vec<usize> {
+        vec![1]
+    }
+    fn image_hw(&self) -> usize {
+        self.hw
+    }
+}
+
+fn mock_worker_with(faults: Option<Arc<FaultInjector>>) -> WorkerNode {
+    let exec = Arc::new(MockExec { hw: 4, delay: Duration::from_millis(5) });
+    let cfg = ServerConfig {
+        max_wait: Duration::ZERO,
+        faults,
+        io_timeout: None,
+        ..ServerConfig::default()
+    };
+    WorkerNode::start(exec, "127.0.0.1:0", cfg, None).unwrap()
+}
+
+/// Acceptance: a seeded chaos run over loopback TCP — wire drops +
+/// corruption at the router, one worker crashing mid-load — conserves
+/// requests: every submit resolves as ok, shed, or failed. Nothing
+/// hangs, nothing is silently dropped, and the healthy worker keeps
+/// the cluster serving.
+#[test]
+fn chaos_run_conserves_every_request() {
+    let crashing = FaultInjector::new(
+        FaultPlan::parse("seed=11,worker.crash_after=10").unwrap(),
+    );
+    let workers = vec![
+        mock_worker_with(Some(crashing)),
+        mock_worker_with(None),
+    ];
+    let mut cfg = RouterConfig::new(
+        workers.iter().map(|w| w.local_addr().to_string()).collect(),
+    );
+    cfg.heartbeat_every = Duration::from_millis(50);
+    cfg.max_attempts = 8;
+    cfg.request_timeout = Some(Duration::from_millis(300));
+    cfg.io_timeout = Some(Duration::from_secs(2));
+    cfg.faults = Some(FaultInjector::new(
+        FaultPlan::parse("seed=11,wire.drop=0.15,wire.corrupt=2@0.1")
+            .unwrap(),
+    ));
+    let router = Router::start(cfg, "127.0.0.1:0").unwrap();
+    let client =
+        ClusterClient::connect(&router.local_addr().to_string()).unwrap();
+
+    let img = fill_image(4, 0.7);
+    let n = 60usize;
+    let rxs: Vec<_> = (0..n).map(|_| client.submit(&img).unwrap()).collect();
+    let (mut ok, mut shed, mut failed) = (0usize, 0usize, 0usize);
+    for (i, rx) in rxs.into_iter().enumerate() {
+        match rx
+            .recv_timeout(WAIT)
+            .unwrap_or_else(|_| panic!("request {i} hung under chaos"))
+        {
+            Ok(resp) => {
+                // Whatever survived the chaos is still correct.
+                assert!((resp.response.logits[0] - 0.7).abs() < 1e-5);
+                ok += 1;
+            }
+            Err(e) if e.is_overloaded() => shed += 1,
+            Err(_) => failed += 1,
+        }
+    }
+    assert_eq!(ok + shed + failed, n, "conservation: ok+shed+failed == n");
+    assert!(ok > 0, "the healthy worker must keep serving");
+    client.shutdown();
+    router.shutdown();
+    for w in workers {
+        w.shutdown();
+    }
+}
+
+/// Acceptance: `spill.corrupt=1` flips a bit in every shipped frame
+/// post-checksum; the worker's decode self-check catches it, records a
+/// `spill_corrupt` flight event, and re-ships the batch dense — while
+/// the request's logits stay bitwise-identical to a clean run.
+#[test]
+fn corrupt_spill_downgrades_to_dense_with_bitwise_correct_logits() {
+    let ship = Some(ShipSpills { codec: CodecId::ZeroBlock, block: 2 });
+    let clean = Server::start(
+        Arc::new(reference_executor(RefSpec::tiny()).unwrap()),
+        ServerConfig {
+            max_wait: Duration::ZERO,
+            ship_spills: ship,
+            ..ServerConfig::default()
+        },
+    );
+    let (sink_tx, sink_rx) = channel();
+    let flight = Arc::new(FlightRecorder::new("chaos", 64, None));
+    let chaotic = Server::start(
+        Arc::new(reference_executor(RefSpec::tiny()).unwrap()),
+        ServerConfig {
+            max_wait: Duration::ZERO,
+            ship_spills: ship,
+            spill_sink: Some(sink_tx),
+            flight: Some(flight.clone()),
+            faults: Some(FaultInjector::new(
+                FaultPlan::parse("seed=3,spill.corrupt=1").unwrap(),
+            )),
+            ..ServerConfig::default()
+        },
+    );
+    for i in 0..4u64 {
+        let img = noise_image(8, 900 + i);
+        let want = clean.classify(img.clone()).unwrap().logits;
+        let got = chaotic.classify(img).unwrap().logits;
+        assert_eq!(got, want, "corruption must never touch the logits");
+        let frame = sink_rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("the corrupted batch must still ship");
+        let view = compress::EncodedView::parse(&frame)
+            .expect("the re-shipped frame must be a valid .zspill");
+        assert_eq!(
+            view.codec,
+            CodecId::Dense,
+            "a corrupt zero-block frame downgrades to dense"
+        );
+    }
+    let corrupt_events = flight
+        .entries()
+        .iter()
+        .filter(|e| {
+            matches!(
+                e,
+                FlightEntry::Event { kind: TerminalKind::SpillCorrupt, .. }
+            )
+        })
+        .count();
+    assert!(
+        corrupt_events >= 4,
+        "every corrupted frame records a spill_corrupt event \
+         (got {corrupt_events})"
+    );
+    clean.shutdown();
+    chaotic.shutdown();
+}
+
+/// Acceptance: replay-by-seed. The same chaos spec over the same
+/// sequential workload journals the identical fault schedule; a
+/// different seed draws a different one.
+#[test]
+fn same_seed_journals_the_identical_fault_schedule() {
+    let spec = "seed=42,worker.stall=50@0.5,worker.slow=2@0.3,\
+                spill.corrupt=0.5";
+    let run = |spec: &str| -> Vec<String> {
+        let fi = FaultInjector::new(FaultPlan::parse(spec).unwrap());
+        let (sink_tx, sink_rx) = channel();
+        let srv = Server::start(
+            Arc::new(MockExec { hw: 4, delay: Duration::ZERO }),
+            ServerConfig {
+                max_wait: Duration::ZERO,
+                ship_spills: Some(ShipSpills {
+                    codec: CodecId::ZeroBlock,
+                    block: 2,
+                }),
+                spill_sink: Some(sink_tx),
+                faults: Some(fi.clone()),
+                ..ServerConfig::default()
+            },
+        );
+        // Sequential classifies: one worker thread, so every site's
+        // arrival order is identical across runs.
+        for i in 0..24 {
+            srv.classify(fill_image(4, 0.1 * (i % 7) as f32)).unwrap();
+            let _ = sink_rx.recv_timeout(Duration::from_secs(5));
+        }
+        srv.shutdown();
+        fi.journal()
+    };
+    let a = run(spec);
+    let b = run(spec);
+    assert!(!a.is_empty(), "this spec must journal some decisions");
+    assert_eq!(a, b, "same seed + same workload => same schedule");
+    let c = run("seed=43,worker.stall=50@0.5,worker.slow=2@0.3,\
+                 spill.corrupt=0.5");
+    assert_ne!(a, c, "a different seed must draw a different schedule");
+}
+
+/// Acceptance: the per-worker circuit breaker walks its full
+/// Open -> Half-Open -> Closed cycle when a worker dies and later
+/// comes back — and the transitions are visible in BOTH the flight
+/// ring and the Prometheus exposition.
+#[test]
+fn breaker_cycle_reaches_flight_ring_and_prometheus() {
+    let worker = mock_worker_with(None);
+    let addr = worker.local_addr().to_string();
+    let flight = Arc::new(FlightRecorder::new("router", 64, None));
+    let mut cfg = RouterConfig::new(vec![addr.clone()]);
+    cfg.heartbeat_every = Duration::from_millis(50);
+    cfg.breaker = BreakerConfig {
+        threshold: 1,
+        probe_ms: 100,
+        max_backoff_ms: 400,
+    };
+    cfg.flight = Some(flight.clone());
+    let router = Router::start(cfg, "127.0.0.1:0").unwrap();
+    let client =
+        ClusterClient::connect(&router.local_addr().to_string()).unwrap();
+    client.classify(&fill_image(4, 0.6)).unwrap();
+
+    let has_kind = |flight: &FlightRecorder, want: TerminalKind| {
+        flight.entries().iter().any(|e| {
+            matches!(e, FlightEntry::Event { kind, .. } if *kind == want)
+        })
+    };
+    let wait_for = |what: &str, f: &dyn Fn() -> bool| {
+        let deadline = Instant::now() + WAIT;
+        while !f() {
+            assert!(Instant::now() < deadline, "never saw {what}");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    };
+
+    // Kill the only worker: the first failure trips the breaker
+    // (threshold 1) and the probe timer starts half-open redials that
+    // keep failing (and re-opening) while the address stays dead.
+    worker.kill();
+    wait_for("breaker_open in the flight ring", &|| {
+        has_kind(&flight, TerminalKind::BreakerOpen)
+    });
+    wait_for("breaker_half_open (a probe redial)", &|| {
+        has_kind(&flight, TerminalKind::BreakerHalfOpen)
+    });
+
+    // Revive a worker on the same address: the next half-open probe's
+    // redial succeeds and closes the breaker. The rebind can race the
+    // OS releasing the port, so retry until the deadline.
+    let deadline = Instant::now() + WAIT;
+    let revived = loop {
+        let exec =
+            Arc::new(MockExec { hw: 4, delay: Duration::from_millis(5) });
+        match WorkerNode::start(
+            exec,
+            &addr,
+            ServerConfig {
+                max_wait: Duration::ZERO,
+                io_timeout: None,
+                ..ServerConfig::default()
+            },
+            None,
+        ) {
+            Ok(w) => break w,
+            Err(e) => {
+                assert!(
+                    Instant::now() < deadline,
+                    "could not rebind {addr}: {e}"
+                );
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    };
+    wait_for("breaker_closed after the worker returned", &|| {
+        has_kind(&flight, TerminalKind::BreakerClosed)
+    });
+    wait_for("the router to mark the worker alive", &|| {
+        router.workers_alive() == 1
+    });
+
+    // The healed link serves again.
+    let resp = client.classify(&fill_image(4, 0.8)).unwrap();
+    assert!((resp.response.logits[0] - 0.8).abs() < 1e-5);
+
+    // And the same transitions export over the metrics plane: the
+    // breaker state gauge plus a transition counter that saw the
+    // Open/Half-Open/Closed walk.
+    let (state, transitions) = router.breaker_states()[0];
+    assert_eq!(state, 0, "the breaker ends Closed (code 0)");
+    assert!(
+        transitions >= 3,
+        "Open -> Half-Open -> Closed is at least 3 transitions, \
+         got {transitions}"
+    );
+    let prom = client.obs_report().unwrap().prometheus();
+    assert!(prom.contains("zebra_breaker_state"), "{prom}");
+    assert!(prom.contains("zebra_breaker_transitions_total"), "{prom}");
+    client.shutdown();
+    router.shutdown();
+    revived.shutdown();
+}

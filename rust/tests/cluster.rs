@@ -95,6 +95,8 @@ fn mock_worker(delay: Duration) -> WorkerNode {
         flight: None,
         ledger: None,
         slo: None,
+        faults: None,
+        io_timeout: None,
     };
     WorkerNode::start(exec, "127.0.0.1:0", cfg, None).unwrap()
 }
@@ -229,6 +231,8 @@ fn shipped_spill_bytes_match_worker_eq2_accounting() {
                 flight: None,
                 ledger: None,
                 slo: None,
+                faults: None,
+                io_timeout: None,
             };
             WorkerNode::start(
                 exec,
